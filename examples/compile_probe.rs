@@ -1,0 +1,17 @@
+//! Dev utility: measure XLA compile time of one artifact.
+//!
+//! `cargo run --release --example compile_probe -- <exe-name> [preset]`
+//! Used for the §Perf calibration in EXPERIMENTS.md.
+
+use std::sync::Arc;
+use std::time::Instant;
+use adapterbert::runtime::Runtime;
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap();
+    let preset = std::env::args().nth(2).unwrap_or("default".into());
+    let rt = Arc::new(Runtime::open(std::path::Path::new("artifacts"), &preset)?);
+    let t0 = Instant::now();
+    rt.load(&name)?;
+    println!("compile {name}: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

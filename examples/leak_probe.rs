@@ -1,0 +1,27 @@
+//! Dev utility: step-time and RSS profile of the pre-training loop.
+//!
+//! `cargo run --release --example leak_probe -- [preset] [steps]`
+//! This is the probe that exposed the vendored xla crate's input-buffer
+//! leak (EXPERIMENTS.md §Perf #1) and calibrated the preset sizes.
+
+use std::sync::Arc;
+use adapterbert::{data::grammar::World, runtime::Runtime, train};
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    let line = s.lines().find(|l| l.starts_with("VmRSS")).unwrap();
+    line.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0
+}
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::args().nth(1).unwrap_or("test".into());
+    let steps: usize = std::env::args().nth(2).unwrap_or("200".into()).parse()?;
+    let rt = Arc::new(Runtime::open(std::path::Path::new("artifacts"), &preset)?);
+    let world = World::new(rt.manifest.dims.vocab, 0);
+    println!("rss before: {:.0} MB", rss_mb());
+    let cfg = train::PretrainConfig { steps, lr: 1e-3, warmup_frac: 0.1, seed: 0, log_every: 0 };
+    let t0 = std::time::Instant::now();
+    let res = train::pretrain(&rt, &world, &cfg)?;
+    println!("{} steps in {:.1}s ({:.0} ms/step), loss {:.3} -> {:.3}, rss after: {:.0} MB",
+        steps, t0.elapsed().as_secs_f64(), t0.elapsed().as_secs_f64()*1000.0/steps as f64,
+        res.initial_loss, res.final_loss, rss_mb());
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Full lifecycle on one machine: pre-train the base from scratch with the
+//! MLM objective (loss curve logged), then compare the paper's three
+//! tuning strategies on one task — full fine-tuning, adapters, and
+//! LayerNorm-only — reporting score vs trained-parameter count.
+//!
+//! This is the "train the system end-to-end and log the loss curve"
+//! driver recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example pretrain_and_adapt [--steps 600]`
+
+use std::path::Path;
+use std::sync::Arc;
+
+use adapterbert::data::grammar::World;
+use adapterbert::data::tasks::{self, TaskKind};
+use adapterbert::eval::evaluate;
+use adapterbert::runtime::Runtime;
+use adapterbert::train::{self, PretrainConfig, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(600);
+
+    let rt = Arc::new(Runtime::open(Path::new("artifacts"), "default")?);
+    let dims = rt.manifest.dims.clone();
+    let world = World::new(dims.vocab, 0);
+
+    // --- phase 1: MLM pre-training from random init -----------------------
+    println!("=== phase 1: MLM pre-training ({steps} steps) ===");
+    let res = train::pretrain(
+        &rt,
+        &world,
+        &PretrainConfig { steps, log_every: 50, ..Default::default() },
+    )?;
+    println!(
+        "loss curve: {} samples, {:.3} → {:.3}",
+        res.loss_curve.len(),
+        res.initial_loss,
+        res.final_loss
+    );
+    assert!(
+        res.final_loss < res.initial_loss - 0.3,
+        "pre-training must reduce MLM loss"
+    );
+    let base = res.base;
+
+    // --- phase 2: three tuning strategies on one task ---------------------
+    let spec = tasks::find_spec("qnli_s").unwrap();
+    let data = tasks::generate(&world, &spec, dims.seq);
+    let n_classes = match spec.kind {
+        TaskKind::Cls { n_classes, .. } => n_classes,
+        _ => unreachable!(),
+    };
+    println!("\n=== phase 2: tuning strategies on {} ===", spec.name);
+    let full_k = dims.n_layers;
+    let strategies = [
+        ("full fine-tune", format!("cls_train_topk_k{full_k}"), 1e-4),
+        ("adapters m=16", "cls_train_adapter_m16".to_string(), 1e-3),
+        ("adapters m=4", "cls_train_adapter_m4".to_string(), 1e-3),
+        ("layernorm only", "cls_train_lnonly".to_string(), 1e-3),
+    ];
+    let mut rows = Vec::new();
+    for (label, exe, lr) in &strategies {
+        let cfg = TrainConfig::new(exe, *lr, 6, 0);
+        let out = train::train_task(&rt, &cfg, &data, &base)?;
+        let test =
+            evaluate(&rt, &out.model, &base, &data.test, n_classes, spec.metric)?;
+        let params = out.model.trained_param_count_no_head();
+        println!(
+            "{label:16} test {test:.3}  trained params {params:7} \
+             ({:.2}% of base)",
+            100.0 * params as f64 / rt.manifest.base_param_count() as f64
+        );
+        rows.push((label.to_string(), test, params));
+    }
+
+    // paper-shape assertions: adapters ≈ FT at a fraction of the params;
+    // LN-only trails both
+    let ft = rows[0].1;
+    let ad = rows[1].1;
+    let ln = rows[3].1;
+    println!(
+        "\nshape check: FT {ft:.3} vs adapters {ad:.3} (Δ {:.3}); LN-only {ln:.3}",
+        ft - ad
+    );
+    assert!(rows[1].2 < rows[0].2 / 10, "adapters must train ≪ FT params");
+    assert!(
+        ad > ln,
+        "adapters should beat LayerNorm-only (paper Fig. 4)"
+    );
+    Ok(())
+}

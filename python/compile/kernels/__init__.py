@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the adapter-BERT hot spots.
+
+- :mod:`.adapter`   — fused bottleneck adapter fwd/bwd (custom VJP).
+- :mod:`.layernorm` — fused LayerNorm (inference graphs).
+- :mod:`.attention` — VMEM-tiled online-softmax attention (inference graphs).
+- :mod:`.ref`       — pure-jnp oracles (ground truth for pytest/hypothesis).
+"""
+
+from . import adapter, attention, layernorm, ref  # noqa: F401

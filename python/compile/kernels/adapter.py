@@ -1,0 +1,208 @@
+"""L1: the fused Houlsby bottleneck-adapter kernel (forward + backward).
+
+The adapter is the hot spot the paper *adds* to the Transformer: two skinny
+GEMMs (d->m, m->d with m << d), a GELU, and the internal skip-connection,
+executed twice per layer. A naive implementation materializes the
+bottleneck activation ``h`` in HBM three times (once per op); the fused
+kernel streams a row-block of ``x`` into VMEM once, keeps ``W_down/W_up``
+pinned in VMEM (they always fit: m <= 512), and never round-trips ``h``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * grid = row blocks (token-parallel), analogue of CUDA threadblocks;
+  * BlockSpec pins the weight operands whole (index_map -> block 0) so the
+    pipeline only streams activations;
+  * row block defaults to 128 to align with the 128x128 MXU.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO so the AOT artifacts
+run anywhere. Correctness is pinned to :mod:`.ref` by pytest/hypothesis.
+
+The public entry point :func:`adapter` carries a custom VJP whose backward
+pass is itself a Pallas kernel (recompute-in-VMEM + gradient accumulation
+across row blocks), so the *training* artifacts also run the fused path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+_C = 0.7978845608028654  # sqrt(2/pi)
+_A = 0.044715
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(_C * (x + _A * x * x * x)))
+
+
+def _gelu_grad(x):
+    t = jnp.tanh(_C * (x + _A * x * x * x))
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * _C * (1.0 + 3.0 * _A * x * x)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One row-block: o = x + GELU(x @ W1 + b1) @ W2 + b2."""
+    x = x_ref[...]
+    h = _gelu(
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...][None, :]
+    )
+    o_ref[...] = (
+        x
+        + jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+        + b2_ref[...][None, :]
+    )
+
+
+def _pad_rows(x, block_rows):
+    rows = x.shape[0]
+    pad = (-rows) % block_rows
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+    return x, rows
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def adapter_fwd_pallas(x, w1, b1, w2, b2, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Fused adapter forward. x: [rows, d] -> [rows, d]."""
+    xp, rows = _pad_rows(x, block_rows)
+    d = x.shape[1]
+    m = w1.shape[1]
+    n_blocks = xp.shape[0] // block_rows
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, m), lambda i: (0, 0)),  # pinned whole in VMEM
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp, w1, b1, w2, b2)
+    return out[:rows]
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+
+def _bwd_kernel(
+    x_ref, w1_ref, w2_ref, b1_ref, g_ref,
+    dx_ref, dw1_ref, db1_ref, dw2_ref, db2_ref,
+):
+    """One row-block of the adapter VJP, recomputing ``h`` in VMEM.
+
+    Weight/bias gradients are accumulated across grid steps into output
+    blocks that map to the same (0, 0) block every iteration — the Pallas
+    revisiting-accumulator pattern (grid is sequential on TPU/interpret).
+    """
+    i = pl.program_id(0)
+    x = x_ref[...]
+    g = g_ref[...]
+    w1 = w1_ref[...]
+    w2 = w2_ref[...]
+    pre = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1_ref[...][None, :]
+    h = _gelu(pre)
+    dh = jnp.dot(g, w2.T, preferred_element_type=jnp.float32)
+    dpre = dh * _gelu_grad(pre)
+    dx_ref[...] = g + jnp.dot(dpre, w1.T, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        dw1_ref[...] = jnp.zeros_like(dw1_ref)
+        db1_ref[...] = jnp.zeros_like(db1_ref)
+        dw2_ref[...] = jnp.zeros_like(dw2_ref)
+        db2_ref[...] = jnp.zeros_like(db2_ref)
+
+    dw1_ref[...] += jnp.dot(x.T, dpre, preferred_element_type=jnp.float32)
+    db1_ref[...] += jnp.sum(dpre, axis=0)
+    dw2_ref[...] += jnp.dot(h.T, g, preferred_element_type=jnp.float32)
+    db2_ref[...] += jnp.sum(g, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def adapter_bwd_pallas(x, w1, b1, w2, g, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Fused adapter backward: returns (dx, dw1, db1, dw2, db2)."""
+    xp, rows = _pad_rows(x, block_rows)
+    gp, _ = _pad_rows(g, block_rows)
+    d = x.shape[1]
+    m = w1.shape[1]
+    n_blocks = xp.shape[0] // block_rows
+    outs = pl.pallas_call(
+        _bwd_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, m), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xp.shape, x.dtype),
+            jax.ShapeDtypeStruct((d, m), x.dtype),
+            jax.ShapeDtypeStruct((m,), x.dtype),
+            jax.ShapeDtypeStruct((m, d), x.dtype),
+            jax.ShapeDtypeStruct((d,), x.dtype),
+        ],
+        interpret=True,
+    )(xp, w1, w2, b1, gp)
+    dx, dw1, db1, dw2, db2 = outs
+    return dx[:rows], dw1, db1, dw2, db2
+
+
+# ---------------------------------------------------------------------------
+# public op with custom VJP
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def adapter(x, w1, b1, w2, b2):
+    """Fused bottleneck adapter ``y = x + GELU(x @ W1 + b1) @ W2 + b2``.
+
+    Differentiable: the VJP runs :func:`adapter_bwd_pallas`. Shapes:
+    x [rows, d], w1 [d, m], b1 [m], w2 [m, d], b2 [d].
+    """
+    return adapter_fwd_pallas(x, w1, b1, w2, b2)
+
+
+def _adapter_fwd_rule(x, w1, b1, w2, b2):
+    return adapter_fwd_pallas(x, w1, b1, w2, b2), (x, w1, b1, w2)
+
+
+def _adapter_bwd_rule(res, g):
+    x, w1, b1, w2 = res
+    dx, dw1, db1, dw2, db2 = adapter_bwd_pallas(x, w1, b1, w2, g)
+    return dx, dw1, db1, dw2, db2
+
+
+adapter.defvjp(_adapter_fwd_rule, _adapter_bwd_rule)
+
+
+def adapter_nd(x, w1, b1, w2, b2):
+    """Adapter over arbitrary leading dims: x [..., d]."""
+    d = x.shape[-1]
+    flat = x.reshape((-1, d))
+    return adapter(flat, w1, b1, w2, b2).reshape(x.shape)

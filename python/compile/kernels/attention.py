@@ -1,0 +1,84 @@
+"""L1: VMEM-tiled scaled-dot-product attention Pallas kernel.
+
+Flash-attention-style schedule rethought for TPU (DESIGN.md
+§Hardware-Adaptation): instead of a CUDA threadblock per (head, q-tile)
+with K/V streamed through shared memory, the grid is (batch*heads,) with
+the K/V sequence walked in VMEM-resident blocks using the running-max /
+running-denominator recurrence, so the s x s score matrix never
+materializes in HBM.
+
+Used by the inference (``*_fwd``) graphs. Training graphs use
+:func:`compile.kernels.ref.attention_ref` so XLA autodiff applies.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 64
+_NEG = -1e9
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, block_k: int):
+    """One (batch*head): online-softmax attention over K/V blocks."""
+    q = q_ref[0]          # [s, dh]
+    k = k_ref[0]          # [s, dh]
+    v = v_ref[0]          # [s, dh]
+    mask = mask_ref[0]    # [s]
+    s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    n_blocks = s // block_k
+
+    def body(j, carry):
+        acc, m_run, l_run = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, j * block_k, block_k, axis=0)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * block_k, block_k, axis=0)
+        mj = jax.lax.dynamic_slice_in_dim(mask, j * block_k, block_k, axis=0)
+        scores = jnp.dot(q, kj.T, preferred_element_type=jnp.float32) * scale
+        scores = jnp.where(mj[None, :] > 0, scores, _NEG)
+        m_new = jnp.maximum(m_run, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(scores - m_new[:, None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, vj, preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((s, dh), jnp.float32)
+    m0 = jnp.full((s,), _NEG, jnp.float32)
+    l0 = jnp.zeros((s,), jnp.float32)
+    acc, _, l_run = jax.lax.fori_loop(0, n_blocks, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l_run[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def attention_pallas(q, k, v, mask, block_k: int = DEFAULT_BLOCK_K):
+    """Batched multi-head attention.
+
+    Args:
+      q, k, v: [bh, s, dh]  (batch*heads already folded)
+      mask:    [bh, s]      1.0 = valid key position.
+    Returns [bh, s, dh].
+    """
+    bh, s, dh = q.shape
+    block_k = min(block_k, s)
+    assert s % block_k == 0, "seq len must divide the K block"
+    kern = functools.partial(_attn_kernel, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, mask)

@@ -1,0 +1,52 @@
+"""L1: fused LayerNorm Pallas kernel (row-parallel, one VMEM pass).
+
+Used in the inference (``*_fwd``) graphs; the training graphs use the jnp
+reference (:func:`compile.kernels.ref.layernorm_ref`) so XLA autodiff
+differentiates it (LayerNorm parameters are trained per task — paper §2.1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+EPS = 1e-6
+
+
+def _ln_kernel(x_ref, gamma_ref, beta_ref, o_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + EPS)
+    o_ref[...] = (x - mu) * inv * gamma_ref[...][None, :] + beta_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def layernorm_pallas(x, gamma, beta, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """LayerNorm over the last dim. x: [rows, d]."""
+    rows, d = x.shape
+    pad = (-rows) % block_rows
+    xp = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)], axis=0) if pad else x
+    out = pl.pallas_call(
+        _ln_kernel,
+        grid=(xp.shape[0] // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp, gamma, beta)
+    return out[:rows]
+
+
+def layernorm_nd(x, gamma, beta):
+    """LayerNorm over arbitrary leading dims: x [..., d]."""
+    d = x.shape[-1]
+    return layernorm_pallas(x.reshape((-1, d)), gamma, beta).reshape(x.shape)

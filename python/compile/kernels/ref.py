@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+assert that each ``pallas_call`` (interpret=True) matches the corresponding
+function here to tight tolerances, and that the custom VJP of the fused
+adapter kernel matches ``jax.grad`` of :func:`adapter_ref`.
+
+Everything is written in plain ``jax.numpy`` so that JAX's own autodiff can
+differentiate it — that is what makes these usable as gradient oracles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "gelu",
+    "adapter_ref",
+    "layernorm_ref",
+    "attention_ref",
+    "softmax_xent_ref",
+]
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (the BERT variant).
+
+    Matches the kernel exactly (both use the tanh form), so comparisons are
+    not polluted by erf-vs-tanh differences.
+    """
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def adapter_ref(x, w_down, b_down, w_up, b_up):
+    """Houlsby bottleneck adapter: ``y = x + GELU(x @ W1 + b1) @ W2 + b2``.
+
+    Args:
+      x:      [rows, d]  sub-layer output (after the projection back to d).
+      w_down: [d, m]     down-projection.
+      b_down: [m]
+      w_up:   [m, d]     up-projection.
+      b_up:   [d]
+
+    The internal skip-connection is the paper's near-identity mechanism:
+    with w/b ~ 0 the module is the identity.
+    """
+    h = gelu(x @ w_down + b_down)
+    return x + h @ w_up + b_up
+
+
+def layernorm_ref(x, gamma, beta, eps: float = 1e-6):
+    """Row-wise LayerNorm over the last dim with learned scale/shift."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def attention_ref(q, k, v, mask):
+    """Single-head scaled dot-product attention.
+
+    Args:
+      q, k, v: [s, dh]
+      mask:    [s]  1.0 for valid key positions, 0.0 for padding.
+
+    Returns [s, dh].
+    """
+    dh = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    neg = jnp.asarray(-1e9, q.dtype)
+    scores = jnp.where(mask[None, :] > 0, scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ v
+
+
+def softmax_xent_ref(logits, labels, valid_mask):
+    """Mean masked softmax cross-entropy.
+
+    Args:
+      logits:     [b, c]
+      labels:     [b] int32
+      valid_mask: [c] 1.0 where the class id is in-use for this task
+                  (heads are padded to a fixed ``max_classes``).
+    """
+    neg = jnp.asarray(-1e9, logits.dtype)
+    masked = jnp.where(valid_mask[None, :] > 0, logits, neg)
+    logp = jax.nn.log_softmax(masked, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)

@@ -1,0 +1,408 @@
+"""L2: MiniBERT — a from-scratch BERT-style encoder with Houlsby adapters.
+
+This is the paper's Figure 2 exactly, at reproduction scale:
+
+  * every Transformer layer has two sub-layers (multi-head attention and
+    FFN), each followed by a projection back to ``d``;
+  * a bottleneck adapter is inserted *after each projection, before the
+    residual add*, and its output feeds the sub-layer LayerNorm;
+  * during adapter tuning only the adapters, the LayerNorm parameters and
+    the task head are trained — the frozen base is shared across tasks.
+
+The module is pure-functional over parameter pytrees so the whole training
+step (forward, backward, Adam update) lowers to a single HLO executable
+(see :mod:`compile.aot`). Parameter *values* are runtime inputs: one
+artifact serves every task, seed and checkpoint.
+
+Trained-parameter partitions (what differs between artifacts):
+  * ``adapter`` — adapters + all LayerNorm params + head   (the paper's method)
+  * ``topk_K``  — head + the top K layers (K = n_layers also unlocks
+                  embeddings → full fine-tuning)            (baseline)
+  * ``lnonly``  — LayerNorm params + head                   (Fig. 4 baseline)
+
+Inference graphs route the hot spots through the Pallas kernels
+(:mod:`compile.kernels`); training graphs use the fused adapter kernel via
+its custom VJP and the jnp references elsewhere so XLA autodiff applies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adapter as adapter_k
+from .kernels import attention as attention_k
+from .kernels import layernorm as layernorm_k
+from .kernels import ref
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyper-parameters (baked into each artifact)."""
+
+    vocab: int = 512
+    d: int = 64
+    n_layers: int = 6
+    n_heads: int = 4
+    ffn: int = 256
+    seq: int = 32
+    max_classes: int = 20
+    type_vocab: int = 2
+    mlm_positions: int = 5
+    adapter_size: int = 16  # m; 0 = no adapters in the graph
+    ln_eps: float = 1e-6
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.n_heads == 0
+        return self.d // self.n_heads
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    # the reproduction's "pre-trained BERT" stand-in (see DESIGN.md §2)
+    "default": ModelConfig(),
+    # tiny preset for fast CI artifacts
+    "test": ModelConfig(
+        vocab=256, d=32, n_layers=2, n_heads=2, ffn=64, seq=16,
+        max_classes=6, mlm_positions=4, adapter_size=8,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# initialization (used to shape example args + python tests; Rust re-implements
+# the task-side initializers so it can sweep the init scale — Fig. 6 right)
+# ---------------------------------------------------------------------------
+
+
+def init_base_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Initialize the *base* (pre-trainable, later frozen) parameters."""
+
+    def dense(key, n_in, n_out):
+        return jax.random.truncated_normal(
+            key, -2.0, 2.0, (n_in, n_out), jnp.float32
+        ) * 0.02
+
+    keys = iter(jax.random.split(key, 6 + 10 * cfg.n_layers))
+    p: Params = {
+        "tok_embed": dense(next(keys), cfg.vocab, cfg.d),
+        "pos_embed": dense(next(keys), cfg.seq, cfg.d),
+        "type_embed": dense(next(keys), cfg.type_vocab, cfg.d),
+        "embed_ln_g": jnp.ones((cfg.d,), jnp.float32),
+        "embed_ln_b": jnp.zeros((cfg.d,), jnp.float32),
+        "mlm_bias": jnp.zeros((cfg.vocab,), jnp.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {
+            "wq": dense(next(keys), cfg.d, cfg.d),
+            "bq": jnp.zeros((cfg.d,), jnp.float32),
+            "wk": dense(next(keys), cfg.d, cfg.d),
+            "bk": jnp.zeros((cfg.d,), jnp.float32),
+            "wv": dense(next(keys), cfg.d, cfg.d),
+            "bv": jnp.zeros((cfg.d,), jnp.float32),
+            "wo": dense(next(keys), cfg.d, cfg.d),
+            "bo": jnp.zeros((cfg.d,), jnp.float32),
+            "w1": dense(next(keys), cfg.d, cfg.ffn),
+            "b1": jnp.zeros((cfg.ffn,), jnp.float32),
+            "w2": dense(next(keys), cfg.ffn, cfg.d),
+            "b2": jnp.zeros((cfg.d,), jnp.float32),
+            "ln1_g": jnp.ones((cfg.d,), jnp.float32),
+            "ln1_b": jnp.zeros((cfg.d,), jnp.float32),
+            "ln2_g": jnp.ones((cfg.d,), jnp.float32),
+            "ln2_b": jnp.zeros((cfg.d,), jnp.float32),
+        }
+        p["layers"].append(layer)
+    return p
+
+
+def init_adapter_params(cfg: ModelConfig, key: jax.Array, std: float = 1e-2) -> Params:
+    """Near-identity adapter bank (paper §2: trunc-normal, σ=1e-2)."""
+    m = cfg.adapter_size
+    keys = iter(jax.random.split(key, 4 * cfg.n_layers))
+
+    def tn(key, shape):
+        return jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+
+    bank: List[Params] = []
+    for _ in range(cfg.n_layers):
+        bank.append({
+            "attn": {
+                "w_down": tn(next(keys), (cfg.d, m)),
+                "b_down": jnp.zeros((m,), jnp.float32),
+                "w_up": tn(next(keys), (m, cfg.d)),
+                "b_up": jnp.zeros((cfg.d,), jnp.float32),
+            },
+            "ffn": {
+                "w_down": tn(next(keys), (cfg.d, m)),
+                "b_down": jnp.zeros((m,), jnp.float32),
+                "w_up": tn(next(keys), (m, cfg.d)),
+                "b_up": jnp.zeros((cfg.d,), jnp.float32),
+            },
+        })
+    return {"layers": bank}
+
+
+def init_head_params(cfg: ModelConfig, key: jax.Array, kind: str) -> Params:
+    """Task head. kind ∈ {cls, reg, span}."""
+    n_out = {"cls": cfg.max_classes, "reg": 1, "span": 2}[kind]
+    w = jax.random.truncated_normal(
+        key, -2.0, 2.0, (cfg.d, n_out), jnp.float32
+    ) * 0.02
+    return {"w": w, "b": jnp.zeros((n_out,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def _multi_head_attention(cfg, layer, x, attn_mask, use_pallas):
+    """x: [B,S,d], attn_mask: [B,S] → [B,S,d] (pre-adapter, post-projection)."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+
+    def split(t):  # [B,S,d] -> [B*h, S, dh]
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    q = split(x @ layer["wq"] + layer["bq"])
+    k = split(x @ layer["wk"] + layer["bk"])
+    v = split(x @ layer["wv"] + layer["bv"])
+    mask = jnp.repeat(attn_mask, h, axis=0)  # [B*h, S]
+    if use_pallas:
+        ctx = attention_k.attention_pallas(q, k, v, mask)
+    else:
+        ctx = jax.vmap(ref.attention_ref)(q, k, v, mask)
+    ctx = ctx.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ layer["wo"] + layer["bo"]
+
+
+def _apply_adapter(cfg, ad, x, gate):
+    """Adapter delta gated by the Fig. 6 ablation mask (gate ∈ {0,1}).
+
+    Always the fused Pallas kernel: its custom VJP (a second Pallas kernel)
+    makes it differentiable, so training and inference share the hot path.
+    """
+    y = adapter_k.adapter_nd(x, ad["w_down"], ad["b_down"], ad["w_up"], ad["b_up"])
+    return x + gate * (y - x)
+
+
+def _layernorm(cfg, x, g, b, use_pallas):
+    if use_pallas:
+        return layernorm_k.layernorm_nd(x, g, b)
+    return ref.layernorm_ref(x, g, b, cfg.ln_eps)
+
+
+def encode(
+    cfg: ModelConfig,
+    base: Params,
+    tokens: jnp.ndarray,       # i32 [B,S]
+    segments: jnp.ndarray,     # i32 [B,S]
+    attn_mask: jnp.ndarray,    # f32 [B,S]
+    adapters: Optional[Params] = None,
+    adapter_gates: Optional[jnp.ndarray] = None,  # f32 [L,2]
+    inference_kernels: bool = False,
+) -> jnp.ndarray:
+    """Run the encoder; returns final hidden states [B,S,d].
+
+    ``adapters=None`` builds the plain (fine-tuning) graph — no adapter ops
+    at all. ``inference_kernels=True`` routes LayerNorm/attention through the
+    Pallas kernels (fwd-only graphs); training graphs keep the jnp reference
+    there so XLA autodiff applies. The adapter itself is *always* the fused
+    Pallas kernel (differentiable via its custom VJP). ``adapter_gates`` multiplies each adapter's delta (1 = active,
+    0 = exact identity) and is a *runtime input* so the Fig. 6 span-ablation
+    re-evaluates trained banks without retraining or re-lowering.
+    """
+    x = (
+        base["tok_embed"][tokens]
+        + base["pos_embed"][None, : tokens.shape[1]]
+        + base["type_embed"][segments]
+    )
+    x = _layernorm(cfg, x, base["embed_ln_g"], base["embed_ln_b"], inference_kernels)
+    if adapter_gates is None:
+        adapter_gates = jnp.ones((cfg.n_layers, 2), jnp.float32)
+    for li, layer in enumerate(base["layers"]):
+        # --- attention sub-layer ---
+        sub = _multi_head_attention(cfg, layer, x, attn_mask, inference_kernels)
+        if adapters is not None:
+            sub = _apply_adapter(
+                cfg, adapters["layers"][li]["attn"], sub, adapter_gates[li, 0]
+            )
+        x = _layernorm(cfg, x + sub, layer["ln1_g"], layer["ln1_b"], inference_kernels)
+        # --- FFN sub-layer ---
+        sub = ref.gelu(x @ layer["w1"] + layer["b1"]) @ layer["w2"] + layer["b2"]
+        if adapters is not None:
+            sub = _apply_adapter(
+                cfg, adapters["layers"][li]["ffn"], sub, adapter_gates[li, 1]
+            )
+        x = _layernorm(cfg, x + sub, layer["ln2_g"], layer["ln2_b"], inference_kernels)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# heads and losses
+# ---------------------------------------------------------------------------
+
+
+def cls_logits(cfg, head, hidden):
+    """Classification from the [CLS] (position-0) embedding. → [B,C]."""
+    return hidden[:, 0, :] @ head["w"] + head["b"]
+
+
+def reg_prediction(cfg, head, hidden):
+    """Scalar regression from [CLS]. → [B]."""
+    return (hidden[:, 0, :] @ head["w"] + head["b"])[:, 0]
+
+
+def span_logits(cfg, head, hidden, attn_mask):
+    """Start/end position logits. → ([B,S], [B,S]) masked to valid tokens."""
+    both = hidden @ head["w"] + head["b"]  # [B,S,2]
+    neg = jnp.asarray(-1e9, both.dtype)
+    valid = attn_mask > 0
+    start = jnp.where(valid, both[..., 0], neg)
+    end = jnp.where(valid, both[..., 1], neg)
+    return start, end
+
+
+def cls_loss(cfg, logits, labels, class_valid):
+    return ref.softmax_xent_ref(logits, labels, class_valid)
+
+
+def cls_accuracy(cfg, logits, labels, class_valid):
+    neg = jnp.asarray(-1e9, logits.dtype)
+    masked = jnp.where(class_valid[None, :] > 0, logits, neg)
+    return jnp.mean((jnp.argmax(masked, axis=-1) == labels).astype(jnp.float32))
+
+
+def reg_loss(cfg, preds, targets):
+    return jnp.mean((preds - targets) ** 2)
+
+
+def span_loss(cfg, start_logits, end_logits, spans):
+    """spans: i32 [B,2] (start,end). Mean CE over both boundaries."""
+    ls = jax.nn.log_softmax(start_logits, axis=-1)
+    le = jax.nn.log_softmax(end_logits, axis=-1)
+    nll_s = -jnp.take_along_axis(ls, spans[:, 0:1], axis=-1)[:, 0]
+    nll_e = -jnp.take_along_axis(le, spans[:, 1:2], axis=-1)[:, 0]
+    return jnp.mean(0.5 * (nll_s + nll_e))
+
+
+def mlm_loss(cfg, base, hidden, positions, targets, weights):
+    """Masked-LM loss at ``positions`` (tied output embedding + bias)."""
+    gathered = jnp.take_along_axis(
+        hidden, positions[:, :, None].astype(jnp.int32), axis=1
+    )  # [B,P,d]
+    logits = gathered @ base["tok_embed"].T + base["mlm_bias"]  # [B,P,V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, :, None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(weights), 1.0)
+    return jnp.sum(nll * weights) / denom
+
+
+# ---------------------------------------------------------------------------
+# trained-parameter partitions
+# ---------------------------------------------------------------------------
+
+
+def split_base_for_topk(cfg: ModelConfig, base: Params, k: int) -> Tuple[Params, Params]:
+    """Partition the base for top-k fine-tuning.
+
+    Returns (trained_subtree, frozen_subtree); ``merge_topk`` re-joins.
+    k = n_layers also unlocks the embedding tables (≡ full fine-tuning).
+    """
+    assert 1 <= k <= cfg.n_layers
+    lo = cfg.n_layers - k
+    trained: Params = {"layers": base["layers"][lo:]}
+    frozen: Params = {"layers": base["layers"][:lo]}
+    emb_keys = [
+        "tok_embed", "pos_embed", "type_embed",
+        "embed_ln_g", "embed_ln_b", "mlm_bias",
+    ]
+    for key in emb_keys:
+        (trained if k == cfg.n_layers else frozen)[key] = base[key]
+    return trained, frozen
+
+
+def merge_topk(cfg: ModelConfig, trained: Params, frozen: Params) -> Params:
+    base = {}
+    for src in (trained, frozen):
+        for key, val in src.items():
+            if key != "layers":
+                base[key] = val
+    base["layers"] = list(frozen["layers"]) + list(trained["layers"])
+    return base
+
+
+def split_base_for_ln(cfg: ModelConfig, base: Params) -> Tuple[Params, Params]:
+    """Partition for LayerNorm-only tuning (Fig. 4 green baseline)."""
+    ln_keys = {"ln1_g", "ln1_b", "ln2_g", "ln2_b"}
+    trained: Params = {
+        "embed_ln_g": base["embed_ln_g"],
+        "embed_ln_b": base["embed_ln_b"],
+        "layers": [{k: l[k] for k in sorted(ln_keys)} for l in base["layers"]],
+    }
+    frozen: Params = {
+        k: v for k, v in base.items()
+        if k not in ("embed_ln_g", "embed_ln_b", "layers")
+    }
+    frozen["layers"] = [
+        {k: v for k, v in l.items() if k not in ln_keys} for l in base["layers"]
+    ]
+    return trained, frozen
+
+
+def merge_ln(cfg: ModelConfig, trained: Params, frozen: Params) -> Params:
+    base = dict(frozen)
+    base["embed_ln_g"] = trained["embed_ln_g"]
+    base["embed_ln_b"] = trained["embed_ln_b"]
+    base["layers"] = [
+        {**fl, **tl} for fl, tl in zip(frozen["layers"], trained["layers"])
+    ]
+    return base
+
+
+def split_base_for_adapter(cfg: ModelConfig, base: Params) -> Tuple[Params, Params]:
+    """Adapter tuning trains the LayerNorms too (paper §2.1)."""
+    return split_base_for_ln(cfg, base)
+
+
+merge_adapter_base = merge_ln
+
+
+# ---------------------------------------------------------------------------
+# Adam (inside the graph; lr is a runtime input, schedule lives in Rust)
+# ---------------------------------------------------------------------------
+
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def adam_init(trained: Params) -> Tuple[Params, Params]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, trained)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, trained)
+
+
+def adam_update(trained, grads, m, v, step, lr):
+    """One Adam step. ``step`` is the 1-based i32 step for bias correction."""
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    m = jax.tree_util.tree_map(lambda mm, g: ADAM_B1 * mm + (1 - ADAM_B1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda vv, g: ADAM_B2 * vv + (1 - ADAM_B2) * g * g, v, grads)
+    new = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + ADAM_EPS),
+        trained, m, v,
+    )
+    return new, m, v

@@ -1,0 +1,350 @@
+"""L2: artifact entry points — whole training/inference steps as pure fns.
+
+Each function here lowers to exactly one HLO executable (see
+:mod:`compile.aot`). Conventions shared with the Rust runtime:
+
+  * every argument / result is a pytree of arrays; the manifest records the
+    flattened leaf order (``jax.tree_util`` default ordering) so Rust can
+    pack parameter banks positionally;
+  * parameter *values* are runtime inputs — nothing task- or seed-specific
+    is baked into the graph;
+  * the learning rate is a runtime scalar: the warmup/decay schedule of the
+    paper (§3.1) is computed host-side in Rust;
+  * ``step`` is the 1-based Adam step (bias correction);
+  * classification heads are padded to ``cfg.max_classes`` and masked with
+    ``class_valid`` so one artifact serves tasks with any class count.
+
+Training steps use the *reference* (autodiff-friendly) encoder path except
+the adapter, which always runs the fused Pallas kernel through its custom
+VJP. Inference (``*_fwd``) steps run the full Pallas path.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+# ---------------------------------------------------------------------------
+# pre-training (MLM)
+# ---------------------------------------------------------------------------
+
+
+def make_pretrain_step(cfg: M.ModelConfig):
+    """MLM step over the full base: the repo's own "pre-trained BERT"."""
+
+    def pretrain_step(base, opt_m, opt_v, step, tokens, segments, attn_mask,
+                      positions, targets, weights, lr):
+        def loss_fn(b):
+            hidden = M.encode(cfg, b, tokens, segments, attn_mask)
+            return M.mlm_loss(cfg, b, hidden, positions, targets, weights)
+
+        loss, grads = jax.value_and_grad(loss_fn)(base)
+        new, opt_m2, opt_v2 = M.adam_update(base, grads, opt_m, opt_v, step, lr)
+        return new, opt_m2, opt_v2, loss
+
+    return pretrain_step
+
+
+# ---------------------------------------------------------------------------
+# task heads: shared plumbing
+# ---------------------------------------------------------------------------
+
+
+def _task_forward(cfg, kind, base, adapters, gates, head, tokens, segments,
+                  attn_mask, inference_kernels):
+    hidden = M.encode(
+        cfg, base, tokens, segments, attn_mask,
+        adapters=adapters, adapter_gates=gates,
+        inference_kernels=inference_kernels,
+    )
+    if kind == "cls":
+        return M.cls_logits(cfg, head, hidden)
+    if kind == "reg":
+        return M.reg_prediction(cfg, head, hidden)
+    if kind == "span":
+        return M.span_logits(cfg, head, hidden, attn_mask)
+    raise ValueError(kind)
+
+
+def _task_loss_and_metric(cfg, kind, out, batch):
+    if kind == "cls":
+        loss = M.cls_loss(cfg, out, batch["labels"], batch["class_valid"])
+        metric = M.cls_accuracy(cfg, out, batch["labels"], batch["class_valid"])
+    elif kind == "reg":
+        loss = M.reg_loss(cfg, out, batch["targets"])
+        metric = -loss  # host computes Spearman from fwd preds; this is a proxy
+    else:  # span
+        start, end = out
+        loss = M.span_loss(cfg, start, end, batch["spans"])
+        hit_s = jnp.argmax(start, -1) == batch["spans"][:, 0]
+        hit_e = jnp.argmax(end, -1) == batch["spans"][:, 1]
+        metric = jnp.mean((hit_s & hit_e).astype(jnp.float32))
+    return loss, metric
+
+
+def _batch_tree(cfg, kind, b):
+    """Example batch pytree for lowering. ``b`` = batch size."""
+    t = {
+        "tokens": jnp.zeros((b, cfg.seq), jnp.int32),
+        "segments": jnp.zeros((b, cfg.seq), jnp.int32),
+        "attn_mask": jnp.ones((b, cfg.seq), jnp.float32),
+    }
+    if kind == "cls":
+        t["labels"] = jnp.zeros((b,), jnp.int32)
+        t["class_valid"] = jnp.ones((cfg.max_classes,), jnp.float32)
+    elif kind == "reg":
+        t["targets"] = jnp.zeros((b,), jnp.float32)
+    else:
+        t["spans"] = jnp.zeros((b, 2), jnp.int32)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# task training steps (one per trained-parameter partition)
+# ---------------------------------------------------------------------------
+
+
+def make_train_adapter_step(cfg: M.ModelConfig, kind: str):
+    """Adapter tuning: train adapters + LayerNorms + head (paper §2.1).
+
+    trained = {"adapters", "base_ln", "head"}; frozen = base minus its LNs.
+    """
+
+    def step_fn(frozen, trained, opt_m, opt_v, step, batch, lr):
+        def loss_fn(tr):
+            base = M.merge_adapter_base(cfg, tr["base_ln"], frozen)
+            gates = jnp.ones((cfg.n_layers, 2), jnp.float32)
+            out = _task_forward(
+                cfg, kind, base, tr["adapters"], gates, tr["head"],
+                batch["tokens"], batch["segments"], batch["attn_mask"],
+                inference_kernels=False,  # adapters still run the Pallas VJP
+            )
+            return _task_loss_and_metric(cfg, kind, out, batch)
+
+        (loss, metric), grads = jax.value_and_grad(loss_fn, has_aux=True)(trained)
+        new, m2, v2 = M.adam_update(trained, grads, opt_m, opt_v, step, lr)
+        return new, m2, v2, loss, metric
+
+    return step_fn
+
+
+def make_train_topk_step(cfg: M.ModelConfig, kind: str, k: int):
+    """(Variable) fine-tuning: train the top-k layers + head.
+
+    trained = {"base_top", "head"}; frozen = {"base_rest"}. k = n_layers is
+    full fine-tuning (embeddings included). No adapters in the graph.
+    """
+
+    def step_fn(frozen, trained, opt_m, opt_v, step, batch, lr):
+        def loss_fn(tr):
+            base = M.merge_topk(cfg, tr["base_top"], frozen)
+            out = _task_forward(
+                cfg, kind, base, None, None, tr["head"],
+                batch["tokens"], batch["segments"], batch["attn_mask"],
+                inference_kernels=False,
+            )
+            return _task_loss_and_metric(cfg, kind, out, batch)
+
+        (loss, metric), grads = jax.value_and_grad(loss_fn, has_aux=True)(trained)
+        new, m2, v2 = M.adam_update(trained, grads, opt_m, opt_v, step, lr)
+        return new, m2, v2, loss, metric
+
+    return step_fn
+
+
+def make_train_lnonly_step(cfg: M.ModelConfig, kind: str):
+    """LayerNorm-only tuning (Fig. 4 green baseline)."""
+
+    def step_fn(frozen, trained, opt_m, opt_v, step, batch, lr):
+        def loss_fn(tr):
+            base = M.merge_ln(cfg, tr["base_ln"], frozen)
+            out = _task_forward(
+                cfg, kind, base, None, None, tr["head"],
+                batch["tokens"], batch["segments"], batch["attn_mask"],
+                inference_kernels=False,
+            )
+            return _task_loss_and_metric(cfg, kind, out, batch)
+
+        (loss, metric), grads = jax.value_and_grad(loss_fn, has_aux=True)(trained)
+        new, m2, v2 = M.adam_update(trained, grads, opt_m, opt_v, step, lr)
+        return new, m2, v2, loss, metric
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# inference steps (serving / evaluation; full Pallas path)
+# ---------------------------------------------------------------------------
+
+
+def make_fwd_adapter(cfg: M.ModelConfig, kind: str):
+    """Forward with adapters. ``base`` is the *merged* base (Rust patches the
+    task's trained LayerNorms in); ``gates`` is the Fig. 6 ablation mask."""
+
+    def fwd(base, adapters, head, gates, tokens, segments, attn_mask):
+        return _task_forward(
+            cfg, kind, base, adapters, gates, head,
+            tokens, segments, attn_mask, inference_kernels=True,
+        )
+
+    return fwd
+
+
+def make_fwd_base(cfg: M.ModelConfig, kind: str):
+    """Forward without adapters (serves all fine-tuning variants; Rust
+    merges trained layers back into the base before upload)."""
+
+    def fwd(base, head, tokens, segments, attn_mask):
+        return _task_forward(
+            cfg, kind, base, None, None, head,
+            tokens, segments, attn_mask, inference_kernels=True,
+        )
+
+    return fwd
+
+
+def make_embed_fwd(cfg: M.ModelConfig):
+    """Mean-pooled token embeddings — feature extractor for the Rust
+    no-BERT baseline (Table 2 first column)."""
+
+    def fwd(tok_embed, tokens, attn_mask):
+        emb = tok_embed[tokens]  # [B,S,d]
+        w = attn_mask[:, :, None]
+        return jnp.sum(emb * w, axis=1) / jnp.maximum(jnp.sum(w, axis=1), 1.0)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# example-argument builders (shapes only; values irrelevant to lowering)
+# ---------------------------------------------------------------------------
+
+
+def example_args_pretrain(cfg: M.ModelConfig, batch: int):
+    key = jax.random.PRNGKey(0)
+    base = init_shapes(M.init_base_params(cfg, key))
+    m, v = M.adam_init(base)
+    return (
+        base, m, v, jnp.int32(1),
+        jnp.zeros((batch, cfg.seq), jnp.int32),
+        jnp.zeros((batch, cfg.seq), jnp.int32),
+        jnp.ones((batch, cfg.seq), jnp.float32),
+        jnp.zeros((batch, cfg.mlm_positions), jnp.int32),
+        jnp.zeros((batch, cfg.mlm_positions), jnp.int32),
+        jnp.ones((batch, cfg.mlm_positions), jnp.float32),
+        jnp.float32(1e-4),
+    )
+
+
+def init_shapes(tree):
+    """Zero-valued copy (lowering only cares about shapes/dtypes)."""
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def trained_tree_adapter(cfg: M.ModelConfig, kind: str):
+    key = jax.random.PRNGKey(0)
+    base = M.init_base_params(cfg, key)
+    base_ln, _ = M.split_base_for_adapter(cfg, base)
+    return {
+        "adapters": init_shapes(M.init_adapter_params(cfg, key)),
+        "base_ln": init_shapes(base_ln),
+        "head": init_shapes(M.init_head_params(cfg, key, kind)),
+    }
+
+
+def frozen_tree_adapter(cfg: M.ModelConfig):
+    key = jax.random.PRNGKey(0)
+    base = M.init_base_params(cfg, key)
+    _, frozen = M.split_base_for_adapter(cfg, base)
+    return init_shapes(frozen)
+
+
+def trained_tree_topk(cfg: M.ModelConfig, kind: str, k: int):
+    key = jax.random.PRNGKey(0)
+    base = M.init_base_params(cfg, key)
+    top, _ = M.split_base_for_topk(cfg, base, k)
+    return {
+        "base_top": init_shapes(top),
+        "head": init_shapes(M.init_head_params(cfg, key, kind)),
+    }
+
+
+def frozen_tree_topk(cfg: M.ModelConfig, k: int):
+    key = jax.random.PRNGKey(0)
+    base = M.init_base_params(cfg, key)
+    _, rest = M.split_base_for_topk(cfg, base, k)
+    return init_shapes(rest)
+
+
+def trained_tree_lnonly(cfg: M.ModelConfig, kind: str):
+    key = jax.random.PRNGKey(0)
+    base = M.init_base_params(cfg, key)
+    ln, _ = M.split_base_for_ln(cfg, base)
+    return {
+        "base_ln": init_shapes(ln),
+        "head": init_shapes(M.init_head_params(cfg, key, kind)),
+    }
+
+
+def frozen_tree_lnonly(cfg: M.ModelConfig):
+    key = jax.random.PRNGKey(0)
+    base = M.init_base_params(cfg, key)
+    _, frozen = M.split_base_for_ln(cfg, base)
+    return init_shapes(frozen)
+
+
+def example_args_train(cfg: M.ModelConfig, kind: str, variant: str, batch: int,
+                       k: int = 0):
+    if variant == "adapter":
+        frozen = frozen_tree_adapter(cfg)
+        trained = trained_tree_adapter(cfg, kind)
+    elif variant == "topk":
+        frozen = frozen_tree_topk(cfg, k)
+        trained = trained_tree_topk(cfg, kind, k)
+    elif variant == "lnonly":
+        frozen = frozen_tree_lnonly(cfg)
+        trained = trained_tree_lnonly(cfg, kind)
+    else:
+        raise ValueError(variant)
+    m, v = M.adam_init(trained)
+    return (
+        frozen, trained, m, v, jnp.int32(1),
+        _batch_tree(cfg, kind, batch), jnp.float32(1e-4),
+    )
+
+
+def example_args_fwd_adapter(cfg: M.ModelConfig, kind: str, batch: int):
+    key = jax.random.PRNGKey(0)
+    return (
+        init_shapes(M.init_base_params(cfg, key)),
+        init_shapes(M.init_adapter_params(cfg, key)),
+        init_shapes(M.init_head_params(cfg, key, kind)),
+        jnp.ones((cfg.n_layers, 2), jnp.float32),
+        jnp.zeros((batch, cfg.seq), jnp.int32),
+        jnp.zeros((batch, cfg.seq), jnp.int32),
+        jnp.ones((batch, cfg.seq), jnp.float32),
+    )
+
+
+def example_args_fwd_base(cfg: M.ModelConfig, kind: str, batch: int):
+    key = jax.random.PRNGKey(0)
+    return (
+        init_shapes(M.init_base_params(cfg, key)),
+        init_shapes(M.init_head_params(cfg, key, kind)),
+        jnp.zeros((batch, cfg.seq), jnp.int32),
+        jnp.zeros((batch, cfg.seq), jnp.int32),
+        jnp.ones((batch, cfg.seq), jnp.float32),
+    )
+
+
+def example_args_embed_fwd(cfg: M.ModelConfig, batch: int):
+    return (
+        jnp.zeros((cfg.vocab, cfg.d), jnp.float32),
+        jnp.zeros((batch, cfg.seq), jnp.int32),
+        jnp.ones((batch, cfg.seq), jnp.float32),
+    )

@@ -1,0 +1,105 @@
+"""AOT pipeline invariants: manifest ↔ lowered HLO consistency.
+
+The Rust runtime trusts the manifest blindly (positional packing), so these
+tests are the contract check: the recorded leaf order, shapes and dtypes
+must match both the example pytrees and the HLO entry computation.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as tu
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "test")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="test-preset artifacts not built (run `make artifacts-test`)",
+)
+
+
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_registry():
+    man = manifest()
+    names = {e["name"] for e in man["executables"]}
+    expected = {a.name for a in aot.build_registry("test")}
+    assert names == expected
+
+
+def test_manifest_files_exist_and_parse_as_hlo():
+    man = manifest()
+    for e in man["executables"]:
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), e["file"]
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{e['file']} is not HLO text"
+
+
+def test_manifest_input_order_matches_flattened_args():
+    """Leaf order in the manifest == jax flattening order of example args."""
+    man = {e["name"]: e for e in manifest()["executables"]}
+    for art in aot.build_registry("test"):
+        entry = man[art.name]
+        flat = tu.tree_flatten(art.args)[0]
+        assert len(flat) == len(entry["inputs"]), art.name
+        for leaf, rec in zip(flat, entry["inputs"]):
+            assert list(leaf.shape) == rec["shape"], (art.name, rec["name"])
+            want_dt = {"float32": "f32", "int32": "i32"}[str(leaf.dtype)]
+            assert want_dt == rec["dtype"], (art.name, rec["name"])
+
+
+def test_manifest_output_order_matches_eval_shape():
+    man = {e["name"]: e for e in manifest()["executables"]}
+    for art in aot.build_registry("test"):
+        out = jax.eval_shape(art.fn, *art.args)
+        flat = tu.tree_flatten(out)[0]
+        entry = man[art.name]
+        assert len(flat) == len(entry["outputs"]), art.name
+        for leaf, rec in zip(flat, entry["outputs"]):
+            assert list(leaf.shape) == rec["shape"], (art.name, rec["name"])
+
+
+def test_hlo_entry_parameter_count_matches_manifest():
+    """The HLO ENTRY computation must take exactly the manifest's inputs."""
+    man = manifest()
+    for e in man["executables"]:
+        text = open(os.path.join(ART, e["file"])).read()
+        # ENTRY is the last computation; its body lists one
+        # `%Arg_k = ... parameter(k)` instruction per input.
+        body = text[text.index("\nENTRY "):]
+        n_params = sum(
+            1 for l in body.splitlines() if " parameter(" in l
+        )
+        assert n_params == len(e["inputs"]), e["name"]
+
+
+def test_groups_partition_inputs():
+    """Every input belongs to exactly one group; group order is contiguous."""
+    for e in manifest()["executables"]:
+        seen = []
+        for rec in e["inputs"]:
+            if not seen or seen[-1] != rec["group"]:
+                seen.append(rec["group"])
+        assert len(seen) == len(set(seen)), f"{e['name']}: interleaved groups"
+
+
+def test_adam_constants_recorded():
+    man = manifest()
+    assert man["adam"] == {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS}
+
+
+def test_config_roundtrip():
+    man = manifest()
+    cfg = M.PRESETS["test"]
+    for k, v in man["config"].items():
+        assert getattr(cfg, k) == v

@@ -1,0 +1,229 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes, scales and (where tolerances allow) dtypes; this
+is the CORE correctness signal for the compute hot path (the AOT artifacts
+embed exactly these kernels).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adapter as adapter_k
+from compile.kernels import attention as attention_k
+from compile.kernels import layernorm as layernorm_k
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rngs(seed):
+    return np.random.RandomState(seed)
+
+
+# ---------------------------------------------------------------------------
+# adapter forward
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 300),
+    d=st.sampled_from([8, 32, 128]),
+    m=st.sampled_from([1, 2, 8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1e-2, 1.0]),
+)
+def test_adapter_fwd_matches_ref(rows, d, m, seed, scale):
+    r = rngs(seed)
+    x = jnp.asarray(r.randn(rows, d), jnp.float32)
+    w1 = jnp.asarray(r.randn(d, m) * scale, jnp.float32)
+    b1 = jnp.asarray(r.randn(m) * scale, jnp.float32)
+    w2 = jnp.asarray(r.randn(m, d) * scale, jnp.float32)
+    b2 = jnp.asarray(r.randn(d) * scale, jnp.float32)
+    got = adapter_k.adapter(x, w1, b1, w2, b2)
+    want = ref.adapter_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_rows", [8, 32, 128, 256])
+def test_adapter_fwd_block_size_invariant(block_rows):
+    """The BlockSpec tiling must not change the numbers."""
+    r = rngs(0)
+    x = jnp.asarray(r.randn(100, 32), jnp.float32)
+    w1 = jnp.asarray(r.randn(32, 8) * 0.1, jnp.float32)
+    b1 = jnp.zeros((8,), jnp.float32)
+    w2 = jnp.asarray(r.randn(8, 32) * 0.1, jnp.float32)
+    b2 = jnp.zeros((32,), jnp.float32)
+    got = adapter_k.adapter_fwd_pallas(x, w1, b1, w2, b2, block_rows=block_rows)
+    want = ref.adapter_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_adapter_near_identity_at_init():
+    """Paper §2: near-zero init => adapter ≈ identity (the stability trick)."""
+    r = rngs(1)
+    x = jnp.asarray(r.randn(64, 128), jnp.float32)
+    w1 = jnp.asarray(r.randn(128, 8) * 1e-2, jnp.float32)
+    b1 = jnp.zeros((8,), jnp.float32)
+    w2 = jnp.asarray(r.randn(8, 128) * 1e-2, jnp.float32)
+    b2 = jnp.zeros((128,), jnp.float32)
+    y = adapter_k.adapter(x, w1, b1, w2, b2)
+    assert float(jnp.max(jnp.abs(y - x))) < 1e-2
+
+
+def test_adapter_exact_identity_at_zero():
+    x = jnp.asarray(rngs(2).randn(16, 32), jnp.float32)
+    z = jnp.zeros
+    y = adapter_k.adapter(x, z((32, 4)), z((4,)), z((4, 32)), z((32,)))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# adapter backward (custom VJP vs autodiff of the oracle)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 200),
+    d=st.sampled_from([8, 32]),
+    m=st.sampled_from([2, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adapter_vjp_matches_ref_grad(rows, d, m, seed):
+    r = rngs(seed)
+    x = jnp.asarray(r.randn(rows, d), jnp.float32)
+    w1 = jnp.asarray(r.randn(d, m) * 0.1, jnp.float32)
+    b1 = jnp.asarray(r.randn(m) * 0.1, jnp.float32)
+    w2 = jnp.asarray(r.randn(m, d) * 0.1, jnp.float32)
+    b2 = jnp.asarray(r.randn(d) * 0.1, jnp.float32)
+
+    def scalar(f):
+        return lambda *a: jnp.sum(jnp.sin(f(*a)))
+
+    g_kernel = jax.grad(scalar(adapter_k.adapter), argnums=(0, 1, 2, 3, 4))(
+        x, w1, b1, w2, b2)
+    g_ref = jax.grad(scalar(ref.adapter_ref), argnums=(0, 1, 2, 3, 4))(
+        x, w1, b1, w2, b2)
+    for got, want in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_adapter_bwd_accumulates_across_blocks():
+    """Weight grads must sum over row blocks (the revisiting accumulator)."""
+    r = rngs(3)
+    x = jnp.asarray(r.randn(300, 16), jnp.float32)  # 3 blocks of 128 (padded)
+    w1 = jnp.asarray(r.randn(16, 4) * 0.1, jnp.float32)
+    b1 = jnp.zeros((4,), jnp.float32)
+    w2 = jnp.asarray(r.randn(4, 16) * 0.1, jnp.float32)
+    g = jnp.asarray(r.randn(300, 16), jnp.float32)
+    dx, dw1, db1, dw2, db2 = adapter_k.adapter_bwd_pallas(x, w1, b1, w2, g)
+
+    # oracle via jax.vjp on the reference
+    b2 = jnp.zeros((16,), jnp.float32)
+    _, vjp = jax.vjp(ref.adapter_ref, x, w1, b1, w2, b2)
+    rx, rw1, rb1, rw2, rb2 = vjp(g)
+    np.testing.assert_allclose(dx, rx, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(dw1, rw1, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(db1, rb1, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(dw2, rw2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(db2, rb2, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 300),
+    d=st.sampled_from([8, 32, 128, 129]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(rows, d, seed):
+    r = rngs(seed)
+    x = jnp.asarray(r.randn(rows, d) * 3 + 1, jnp.float32)
+    g = jnp.asarray(r.rand(d) + 0.5, jnp.float32)
+    b = jnp.asarray(r.randn(d), jnp.float32)
+    got = layernorm_k.layernorm_pallas(x, g, b)
+    want = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_is_normalized():
+    r = rngs(7)
+    x = jnp.asarray(r.randn(50, 64) * 10 + 5, jnp.float32)
+    y = layernorm_k.layernorm_pallas(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.asarray(y).mean(axis=1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y).std(axis=1), 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bh=st.integers(1, 8),
+    s=st.sampled_from([16, 64, 128]),
+    dh=st.sampled_from([8, 16, 32]),
+    block_k=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(bh, s, dh, block_k, seed):
+    if s % block_k:
+        block_k = s
+    r = rngs(seed)
+    q = jnp.asarray(r.randn(bh, s, dh), jnp.float32)
+    k = jnp.asarray(r.randn(bh, s, dh), jnp.float32)
+    v = jnp.asarray(r.randn(bh, s, dh), jnp.float32)
+    mask = (r.rand(bh, s) > 0.3).astype(np.float32)
+    mask[:, 0] = 1.0  # at least one valid key
+    mask = jnp.asarray(mask)
+    got = attention_k.attention_pallas(q, k, v, mask, block_k=block_k)
+    want = jax.vmap(ref.attention_ref)(q, k, v, mask)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_attention_rows_are_convex_combinations():
+    """With all-ones mask, each output row lies in conv(V) — softmax sanity."""
+    r = rngs(11)
+    q = jnp.asarray(r.randn(2, 16, 8), jnp.float32)
+    k = jnp.asarray(r.randn(2, 16, 8), jnp.float32)
+    v = jnp.asarray(r.rand(2, 16, 8), jnp.float32)  # in [0,1]
+    mask = jnp.ones((2, 16), jnp.float32)
+    out = np.asarray(attention_k.attention_pallas(q, k, v, mask, block_k=8))
+    assert out.min() >= -1e-5 and out.max() <= 1.0 + 1e-5
+
+
+def test_attention_ignores_masked_positions():
+    r = rngs(13)
+    q = jnp.asarray(r.randn(1, 16, 8), jnp.float32)
+    k = jnp.asarray(r.randn(1, 16, 8), jnp.float32)
+    v = np.asarray(r.randn(1, 16, 8), np.float32)
+    mask = np.ones((1, 16), np.float32)
+    mask[0, 8:] = 0.0
+    out1 = attention_k.attention_pallas(q, k, jnp.asarray(v), jnp.asarray(mask))
+    v2 = v.copy()
+    v2[0, 8:] = 1e6  # garbage in masked positions must not leak
+    out2 = attention_k.attention_pallas(q, k, jnp.asarray(v2), jnp.asarray(mask))
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# softmax-xent oracle self-checks (it is itself the loss the artifacts use)
+# ---------------------------------------------------------------------------
+
+
+def test_softmax_xent_class_mask():
+    """Padded (invalid) classes must not receive probability mass."""
+    logits = jnp.asarray([[0.0, 0.0, 100.0, 0.0]], jnp.float32)
+    labels = jnp.asarray([0], jnp.int32)
+    valid = jnp.asarray([1.0, 1.0, 0.0, 0.0], jnp.float32)  # class 2 padded
+    loss = ref.softmax_xent_ref(logits, labels, valid)
+    np.testing.assert_allclose(float(loss), np.log(2.0), rtol=1e-5)

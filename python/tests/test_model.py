@@ -1,0 +1,238 @@
+"""L2 invariants: the model implements the paper's mechanism exactly.
+
+The tests here pin the *semantics* the Rust coordinator relies on:
+frozen-base partitions, adapter gating, near-identity init, and the
+train-step contract (loss decreases, only the trained set moves).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import steps
+
+CFG = M.PRESETS["test"]
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, kind, b, seed=0):
+    r = np.random.RandomState(seed)
+    batch = {
+        "tokens": jnp.asarray(r.randint(3, cfg.vocab, (b, cfg.seq)), jnp.int32),
+        "segments": jnp.asarray(r.randint(0, 2, (b, cfg.seq)), jnp.int32),
+        "attn_mask": jnp.ones((b, cfg.seq), jnp.float32),
+    }
+    if kind == "cls":
+        batch["labels"] = jnp.asarray(r.randint(0, 3, (b,)), jnp.int32)
+        valid = np.zeros(cfg.max_classes, np.float32)
+        valid[:3] = 1.0
+        batch["class_valid"] = jnp.asarray(valid)
+    elif kind == "reg":
+        batch["targets"] = jnp.asarray(r.randn(b), jnp.float32)
+    else:
+        starts = r.randint(1, cfg.seq - 2, (b,))
+        spans = np.stack([starts, starts + 1], axis=1)
+        batch["spans"] = jnp.asarray(spans, jnp.int32)
+    return batch
+
+
+def tree_allclose(a, b, **kw):
+    flat_a = jax.tree_util.tree_leaves(a)
+    flat_b = jax.tree_util.tree_leaves(b)
+    assert len(flat_a) == len(flat_b)
+    for x, y in zip(flat_a, flat_b):
+        np.testing.assert_allclose(x, y, **kw)
+
+
+def tree_equal(a, b):
+    tree_allclose(a, b, rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# partitions round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_topk_split_merge_roundtrip():
+    base = M.init_base_params(CFG, KEY)
+    for k in range(1, CFG.n_layers + 1):
+        tr, fr = M.split_base_for_topk(CFG, base, k)
+        merged = M.merge_topk(CFG, tr, fr)
+        tree_equal(base, merged)
+
+
+def test_ln_split_merge_roundtrip():
+    base = M.init_base_params(CFG, KEY)
+    tr, fr = M.split_base_for_ln(CFG, base)
+    tree_equal(base, M.merge_ln(CFG, tr, fr))
+
+
+def test_topk_full_unlocks_embeddings():
+    base = M.init_base_params(CFG, KEY)
+    tr_full, fr_full = M.split_base_for_topk(CFG, base, CFG.n_layers)
+    assert "tok_embed" in tr_full and not fr_full["layers"]
+    tr1, fr1 = M.split_base_for_topk(CFG, base, 1)
+    assert "tok_embed" in fr1 and len(tr1["layers"]) == 1
+
+
+def test_ln_partition_is_exactly_layernorms():
+    base = M.init_base_params(CFG, KEY)
+    tr, _ = M.split_base_for_ln(CFG, base)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(tr))
+    # 2 LN per layer * 2 tensors * d + embedding LN (2*d)
+    assert n == (2 * CFG.n_layers + 1) * 2 * CFG.d
+
+
+# ---------------------------------------------------------------------------
+# adapter mechanism
+# ---------------------------------------------------------------------------
+
+
+def test_gates_zero_equals_no_adapters():
+    """gate=0 must make the adapted encoder *bitwise* the plain encoder's
+    semantics (Fig. 6 'ablate all' = majority-class baseline relies on it)."""
+    base = M.init_base_params(CFG, KEY)
+    adapters = M.init_adapter_params(CFG, jax.random.PRNGKey(1), std=0.5)
+    b = make_batch(CFG, "cls", 4)
+    h_plain = M.encode(CFG, base, b["tokens"], b["segments"], b["attn_mask"])
+    gates = jnp.zeros((CFG.n_layers, 2), jnp.float32)
+    h_gated = M.encode(CFG, base, b["tokens"], b["segments"], b["attn_mask"],
+                       adapters=adapters, adapter_gates=gates)
+    np.testing.assert_allclose(h_gated, h_plain, rtol=1e-5, atol=1e-6)
+
+
+def test_adapter_init_is_near_identity_through_encoder():
+    """Paper §2: at init the adapted network ≈ the original network."""
+    base = M.init_base_params(CFG, KEY)
+    adapters = M.init_adapter_params(CFG, jax.random.PRNGKey(1), std=1e-2)
+    b = make_batch(CFG, "cls", 4)
+    ones = jnp.ones((CFG.n_layers, 2), jnp.float32)
+    h0 = M.encode(CFG, base, b["tokens"], b["segments"], b["attn_mask"])
+    h1 = M.encode(CFG, base, b["tokens"], b["segments"], b["attn_mask"],
+                  adapters=adapters, adapter_gates=ones)
+    assert float(jnp.max(jnp.abs(h0 - h1))) < 0.15
+
+
+def test_single_gate_ablation_changes_output():
+    base = M.init_base_params(CFG, KEY)
+    adapters = M.init_adapter_params(CFG, jax.random.PRNGKey(1), std=0.3)
+    b = make_batch(CFG, "cls", 2)
+    ones = np.ones((CFG.n_layers, 2), np.float32)
+    h_full = M.encode(CFG, base, b["tokens"], b["segments"], b["attn_mask"],
+                      adapters=adapters, adapter_gates=jnp.asarray(ones))
+    ones[0, 0] = 0.0
+    h_ablate = M.encode(CFG, base, b["tokens"], b["segments"], b["attn_mask"],
+                        adapters=adapters, adapter_gates=jnp.asarray(ones))
+    assert float(jnp.max(jnp.abs(h_full - h_ablate))) > 1e-6
+
+
+# ---------------------------------------------------------------------------
+# train-step contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["cls", "reg", "span"])
+def test_adapter_train_step_moves_only_trained(kind):
+    fn = jax.jit(steps.make_train_adapter_step(CFG, kind))
+    frozen, trained, opt_m, opt_v, step, batch, lr = steps.example_args_train(
+        CFG, kind, "adapter", 4)
+    # give real values
+    base = M.init_base_params(CFG, KEY)
+    base_ln, frozen = M.split_base_for_adapter(CFG, base)
+    trained = {
+        "adapters": M.init_adapter_params(CFG, jax.random.PRNGKey(2)),
+        "base_ln": base_ln,
+        "head": M.init_head_params(CFG, jax.random.PRNGKey(3), kind),
+    }
+    opt_m, opt_v = M.adam_init(trained)
+    batch = make_batch(CFG, kind, 4)
+    new, m2, v2, loss, metric = fn(frozen, trained, opt_m, opt_v,
+                                   jnp.int32(1), batch, jnp.float32(1e-3))
+    assert np.isfinite(float(loss))
+    # trained set moved
+    moved = [
+        float(np.abs(np.asarray(a) - np.asarray(b)).max())
+        for a, b in zip(jax.tree_util.tree_leaves(new),
+                        jax.tree_util.tree_leaves(trained))
+    ]
+    assert max(moved) > 0
+    # loss decreases over a few steps on a fixed batch
+    cur, cm, cv = new, m2, v2
+    losses = [float(loss)]
+    for t in range(2, 12):
+        cur, cm, cv, l, _ = fn(frozen, cur, cm, cv, jnp.int32(t), batch,
+                               jnp.float32(1e-3))
+        losses.append(float(l))
+    assert losses[-1] < losses[0]
+
+
+def test_topk_train_step_loss_decreases():
+    fn = jax.jit(steps.make_train_topk_step(CFG, "cls", 1))
+    base = M.init_base_params(CFG, KEY)
+    top, frozen = M.split_base_for_topk(CFG, base, 1)
+    trained = {"base_top": top,
+               "head": M.init_head_params(CFG, jax.random.PRNGKey(3), "cls")}
+    opt_m, opt_v = M.adam_init(trained)
+    batch = make_batch(CFG, "cls", 4)
+    losses = []
+    cur, cm, cv = trained, opt_m, opt_v
+    for t in range(1, 12):
+        cur, cm, cv, l, _ = fn(frozen, cur, cm, cv, jnp.int32(t), batch,
+                               jnp.float32(1e-3))
+        losses.append(float(l))
+    assert losses[-1] < losses[0]
+
+
+def test_pretrain_step_runs_and_decreases():
+    fn = jax.jit(steps.make_pretrain_step(CFG))
+    base = M.init_base_params(CFG, KEY)
+    m, v = M.adam_init(base)
+    r = np.random.RandomState(0)
+    b = 4
+    args = dict(
+        tokens=jnp.asarray(r.randint(3, CFG.vocab, (b, CFG.seq)), jnp.int32),
+        segments=jnp.zeros((b, CFG.seq), jnp.int32),
+        attn_mask=jnp.ones((b, CFG.seq), jnp.float32),
+        positions=jnp.asarray(r.randint(0, CFG.seq, (b, CFG.mlm_positions)),
+                              jnp.int32),
+        targets=jnp.asarray(r.randint(3, CFG.vocab, (b, CFG.mlm_positions)),
+                            jnp.int32),
+        weights=jnp.ones((b, CFG.mlm_positions), jnp.float32),
+    )
+    losses = []
+    for t in range(1, 10):
+        base, m, v, loss = fn(base, m, v, jnp.int32(t), args["tokens"],
+                              args["segments"], args["attn_mask"],
+                              args["positions"], args["targets"],
+                              args["weights"], jnp.float32(1e-3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_adam_bias_correction_first_step():
+    """After one step with grad g, update ≈ -lr * sign(g) (Adam property)."""
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0], jnp.float32)}
+    g = {"w": jnp.asarray([0.5, -0.1, 2.0], jnp.float32)}
+    m, v = M.adam_init(p)
+    new, _, _ = M.adam_update(p, g, m, v, jnp.int32(1), jnp.float32(0.01))
+    delta = np.asarray(new["w"] - p["w"])
+    np.testing.assert_allclose(delta, -0.01 * np.sign(np.asarray(g["w"])),
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# head padding
+# ---------------------------------------------------------------------------
+
+
+def test_cls_accuracy_respects_class_mask():
+    logits = jnp.asarray([[0.0, 1.0, 50.0]], jnp.float32)
+    labels = jnp.asarray([1], jnp.int32)
+    valid = jnp.asarray([1.0, 1.0, 0.0], jnp.float32)
+    cfg = dataclasses.replace(CFG, max_classes=3)
+    acc = M.cls_accuracy(cfg, logits, labels, valid)
+    assert float(acc) == 1.0  # class 2 is padding, must be ignored

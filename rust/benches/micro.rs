@@ -1,0 +1,163 @@
+//! Micro-benchmarks for the runtime + coordinator hot paths (criterion is
+//! unavailable offline; `util::timer::Samples` provides the stats).
+//!
+//! Covers: executable compile+cache, fwd execution latency by batch
+//! occupancy, adapter-bank swap (bank → literals) cost, store ops, router
+//! throughput, tokenizer throughput, tensor packing.
+//!
+//! Run: `cargo bench --offline` (or `--bench micro`). Uses the `test`
+//! preset so it is fast and deterministic.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adapterbert::coordinator::{FlushPolicy, Router};
+use adapterbert::data::grammar::World;
+use adapterbert::data::tasks;
+use adapterbert::eval::fwd_param_banks;
+use adapterbert::model::init;
+use adapterbert::runtime::{Bank, Runtime};
+use adapterbert::store::AdapterStore;
+use adapterbert::tokenizer::Tokenizer;
+use adapterbert::util::rng::Rng;
+use adapterbert::util::tensor::Tensor;
+use adapterbert::util::timer::Samples;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    f();
+    let mut s = Samples::default();
+    for _ in 0..iters {
+        s.time(&mut f);
+    }
+    println!(
+        "{name:40} n={:4} mean {:9.3}ms  p50 {:9.3}ms  p95 {:9.3}ms",
+        s.len(),
+        s.mean_s() * 1e3,
+        s.pctl_s(50.0) * 1e3,
+        s.pctl_s(95.0) * 1e3
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== micro benches (test preset) ==");
+    let rt = Arc::new(Runtime::open(Path::new("artifacts"), "test")?);
+    let dims = rt.manifest.dims.clone();
+
+    // --- compile + cache ---------------------------------------------------
+    let t0 = Instant::now();
+    let exe = rt.load("cls_fwd_adapter_m8")?;
+    println!("first compile cls_fwd_adapter_m8: {:.1}ms",
+             t0.elapsed().as_secs_f64() * 1e3);
+    bench("compile cache hit", 100, || {
+        let _ = rt.load("cls_fwd_adapter_m8").unwrap();
+    });
+
+    // --- fwd execution -----------------------------------------------------
+    let spec = exe.spec.clone();
+    let mk_zero = |group: &str| -> Bank {
+        let r = spec.input_group_range(group).unwrap();
+        spec.inputs[r]
+            .iter()
+            .map(|l| Tensor::zeros(&l.shape, l.dtype))
+            .collect()
+    };
+    let base = init::init_group(&spec, "base", 0, 1e-2)?;
+    let base_bank = base.to_bank(&spec, "base")?;
+    let adapters = mk_zero("adapters");
+    let head = mk_zero("head");
+    let gates = mk_zero("gates");
+    let tokens = mk_zero("tokens");
+    let segments = mk_zero("segments");
+    let mask: Bank = vec![Tensor::full_f32(
+        &[spec.batch, dims.seq],
+        1.0,
+    )];
+    bench("fwd execute (host banks)", 50, || {
+        let banks: Vec<&Bank> = vec![
+            &base_bank, &adapters, &head, &gates, &tokens, &segments, &mask,
+        ];
+        let _ = exe.run(&banks).unwrap();
+    });
+
+    // device-resident base (the serving path's bank cache)
+    use adapterbert::runtime::BankRef;
+    let dev_base = rt.upload_bank(&base_bank)?;
+    let dev_adapters = rt.upload_bank(&adapters)?;
+    let dev_head = rt.upload_bank(&head)?;
+    let dev_gates = rt.upload_bank(&gates)?;
+    bench("fwd execute (device param banks)", 50, || {
+        let banks = vec![
+            BankRef::Device(&dev_base),
+            BankRef::Device(&dev_adapters),
+            BankRef::Device(&dev_head),
+            BankRef::Device(&dev_gates),
+            BankRef::Host(&tokens),
+            BankRef::Host(&segments),
+            BankRef::Host(&mask),
+        ];
+        let _ = exe.run_refs(&banks).unwrap();
+    });
+
+    // --- adapter-bank swap (merge + pack) -----------------------------------
+    let world = World::new(dims.vocab, 0);
+    let task = tasks::find_spec("rte_s").unwrap();
+    let _ = (world, task);
+    let train_spec = rt.manifest.exe("cls_train_adapter_m8")?.clone();
+    let (_, trained) = init::init_trained(&train_spec, &base, dims.n_layers, 0, 1e-2)?;
+    let model = adapterbert::eval::TaskModel {
+        variant: "adapter".into(),
+        m: Some(8),
+        k: None,
+        kind: "cls".into(),
+        trained,
+    };
+    bench("adapter bank swap (merge+pack)", 100, || {
+        let _ = fwd_param_banks(&rt, &model, &base, None).unwrap();
+    });
+
+    // --- store ---------------------------------------------------------------
+    let store = AdapterStore::in_memory();
+    bench("store register+latest", 200, || {
+        store.register("bench_task", &model, 0.9).unwrap();
+        let _ = store.latest("bench_task").unwrap();
+    });
+
+    // --- router throughput ----------------------------------------------------
+    bench("router 10k pushes (4 tasks)", 20, || {
+        let mut r: Router<u64> = Router::new(FlushPolicy {
+            max_batch: 32,
+            max_delay: Duration::from_millis(1),
+        });
+        let now = Instant::now();
+        for i in 0..10_000u64 {
+            let t = format!("t{}", i % 4);
+            let _ = r.push(&t, i, now);
+        }
+        let _ = r.drain(now);
+    });
+
+    // --- tokenizer -------------------------------------------------------------
+    let tok = Tokenizer::new(dims.vocab);
+    let mut rng = Rng::new(3);
+    let text: String = (0..1000)
+        .map(|_| tok.word(4 + rng.below(dims.vocab - 4) as i32).to_string())
+        .collect::<Vec<_>>()
+        .join(" ");
+    bench("tokenizer encode 1k words", 100, || {
+        let _ = tok.encode(&text);
+    });
+
+    // --- tensor packing ----------------------------------------------------------
+    let t = Tensor::f32(vec![256, 64], vec![0.5; 256 * 64]);
+    bench("tensor→literal 64KB", 200, || {
+        let _ = t.to_literal().unwrap();
+    });
+    bench("upload_tensor 64KB", 200, || {
+        let _ = rt.upload_tensor(&t).unwrap();
+    });
+
+    println!("== micro benches done ==");
+    Ok(())
+}

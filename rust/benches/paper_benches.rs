@@ -1,0 +1,60 @@
+//! End-to-end paper benches: regenerates every table and figure in quick
+//! mode on the `test` preset by default (fast, CI-safe). The real runs for
+//! EXPERIMENTS.md use `adapterbert bench all [--full] --preset default` —
+//! same code path, bigger budget.
+//!
+//! Select with: `cargo bench --bench paper_benches -- table1 fig6 ...`
+//! Flags: `--preset default`, `--full`.
+
+use adapterbert::bench::{figures, tables, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let preset = args
+        .iter()
+        .position(|a| a == "--preset")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "test".into());
+    let wanted: Vec<&str> = args
+        .iter()
+        .filter(|a| !a.starts_with("--") && *a != &preset)
+        .map(|s| s.as_str())
+        .collect();
+    // `test` preset has adapter sizes {4,8} and topk {1,2} only, so the
+    // figure sweeps automatically narrow to what the manifest offers.
+    // Default = the CI subset (bounded wall-clock on one core); name more
+    // benches explicitly, or run the full set against the default preset
+    // via `adapterbert bench all` (that is what EXPERIMENTS.md records).
+    let all = ["params", "table1", "fig6"];
+    let to_run: Vec<&str> = if wanted.is_empty() {
+        all.to_vec()
+    } else {
+        wanted
+    };
+
+    let ctx = Ctx::open(&preset, !full)?;
+    for name in to_run {
+        println!("\n########## paper bench: {name} ##########");
+        let t = std::time::Instant::now();
+        match name {
+            "params" => tables::audit_params(&ctx)?,
+            "table1" => tables::table1(&ctx)?,
+            "table2" => tables::table2(&ctx)?,
+            "fig3" => figures::fig1_fig3(&ctx)?,
+            "fig3x" => figures::fig3_extra(&ctx)?,
+            "fig4" => figures::fig4(&ctx)?,
+            "fig5" => figures::fig5(&ctx)?,
+            "fig6" => {
+                figures::fig6_heatmap(&ctx)?;
+                figures::fig6_init(&ctx)?;
+            }
+            "fig7" => figures::fig7(&ctx)?,
+            "sizes" => figures::size_robustness(&ctx)?,
+            other => anyhow::bail!("unknown bench {other}"),
+        }
+        println!("[{name}] {:.1}s", t.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

@@ -1,0 +1,389 @@
+//! The "no BERT baseline" (Table 2, first column).
+//!
+//! The paper runs a week of Neural AutoML over feed-forward/conv networks
+//! stacked on frozen or fine-tuned pre-trained text embeddings. The
+//! reproduction keeps the *role* at CPU scale: mean-pooled token
+//! embeddings (from the pre-trained MiniBERT, extracted once through the
+//! `embed_fwd` artifact) feed a pure-Rust MLP trained with Adam and a
+//! budgeted random/grid search over topology + hyper-parameters. The
+//! search explores dozens of models per task instead of 10k — same
+//! selection rule (best validation accuracy), same freeze-vs-finetune
+//! embedding choice (here: embeddings are always frozen features; the
+//! MLP owns all trained capacity).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data::tasks::{Labels, Split, TaskData};
+use crate::model::params::NamedTensors;
+use crate::runtime::{Bank, Runtime};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+
+// ---------------------------------------------------------------------------
+// feature extraction (embed_fwd artifact; python never runs here)
+// ---------------------------------------------------------------------------
+
+/// Mean-pooled embedding features for every row of a split. [n, d]
+pub fn embed_features(
+    rt: &Arc<Runtime>,
+    base: &NamedTensors,
+    split: &Split,
+) -> Result<Vec<Vec<f32>>> {
+    let exe = rt.load("embed_fwd")?;
+    let b = exe.spec.batch;
+    let d = rt.manifest.dims.d;
+    let tok_embed = base.get("tok_embed").context("base missing tok_embed")?;
+    let emb_bank: Bank = vec![tok_embed.clone()];
+    let mut feats = Vec::with_capacity(split.n);
+    for batch in crate::data::batcher::eval_batches(split, b) {
+        let (tok, _seg, mask) = batch.to_fwd_banks();
+        let out = exe.run(&[&emb_bank, &tok, &mask])?;
+        let pooled = &out[0][0];
+        for row in 0..batch.real_rows {
+            feats.push(pooled.as_f32()[row * d..(row + 1) * d].to_vec());
+        }
+    }
+    Ok(feats)
+}
+
+// ---------------------------------------------------------------------------
+// a small dense MLP with manual backprop (no autograd available in rust)
+// ---------------------------------------------------------------------------
+
+/// Topology + hyper-parameters of one candidate (the search space axes
+/// mirror the paper's appendix Table 5 at MLP scale).
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub hidden: Vec<usize>,
+    pub lr: f64,
+    pub epochs: usize,
+    pub l2: f64,
+    pub seed: u64,
+}
+
+pub struct Mlp {
+    sizes: Vec<usize>, // [in, h1, ..., out]
+    w: Vec<Vec<f32>>,  // per layer, row-major [in × out]
+    b: Vec<Vec<f32>>,
+    // Adam state
+    mw: Vec<Vec<f32>>,
+    vw: Vec<Vec<f32>>,
+    mb: Vec<Vec<f32>>,
+    vb: Vec<Vec<f32>>,
+    t: usize,
+}
+
+impl Mlp {
+    pub fn new(sizes: &[usize], rng: &mut Rng) -> Mlp {
+        let mut w = Vec::new();
+        let mut b = Vec::new();
+        for win in sizes.windows(2) {
+            let (n_in, n_out) = (win[0], win[1]);
+            let scale = (2.0 / n_in as f64).sqrt();
+            w.push((0..n_in * n_out).map(|_| (rng.gauss() * scale) as f32).collect());
+            b.push(vec![0.0; n_out]);
+        }
+        let zeros = |v: &Vec<Vec<f32>>| v.iter().map(|x| vec![0.0; x.len()]).collect();
+        Mlp {
+            sizes: sizes.to_vec(),
+            mw: zeros(&w),
+            vw: zeros(&w),
+            mb: zeros(&b),
+            vb: zeros(&b),
+            w,
+            b,
+            t: 0,
+        }
+    }
+
+    /// Forward pass; returns activations per layer (input included).
+    fn forward(&self, x: &[f32]) -> Vec<Vec<f32>> {
+        let mut acts = vec![x.to_vec()];
+        for (li, (w, b)) in self.w.iter().zip(&self.b).enumerate() {
+            let n_in = self.sizes[li];
+            let n_out = self.sizes[li + 1];
+            let a = acts.last().unwrap();
+            let mut z = b.clone();
+            for i in 0..n_in {
+                let ai = a[i];
+                if ai != 0.0 {
+                    let row = &w[i * n_out..(i + 1) * n_out];
+                    for (zj, wj) in z.iter_mut().zip(row) {
+                        *zj += ai * wj;
+                    }
+                }
+            }
+            if li + 1 < self.w.len() {
+                for zj in &mut z {
+                    *zj = zj.max(0.0); // ReLU
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        self.forward(x).pop().unwrap()
+    }
+
+    /// One Adam step on a minibatch; returns mean CE loss.
+    pub fn train_batch(
+        &mut self,
+        xs: &[&[f32]],
+        ys: &[usize],
+        lr: f64,
+        l2: f64,
+    ) -> f64 {
+        let layers = self.w.len();
+        let mut gw: Vec<Vec<f32>> = self.w.iter().map(|x| vec![0.0; x.len()]).collect();
+        let mut gb: Vec<Vec<f32>> = self.b.iter().map(|x| vec![0.0; x.len()]).collect();
+        let mut loss = 0.0f64;
+        for (x, &y) in xs.iter().zip(ys) {
+            let acts = self.forward(x);
+            let out = acts.last().unwrap();
+            // softmax CE grad
+            let max = out.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = out.iter().map(|v| (v - max).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            let probs: Vec<f32> = exps.iter().map(|e| e / sum).collect();
+            loss -= (probs[y].max(1e-12)).ln() as f64;
+            let mut delta: Vec<f32> = probs;
+            delta[y] -= 1.0;
+            // backprop
+            for li in (0..layers).rev() {
+                let n_in = self.sizes[li];
+                let n_out = self.sizes[li + 1];
+                let a_in = &acts[li];
+                for i in 0..n_in {
+                    let ai = a_in[i];
+                    if ai != 0.0 {
+                        let grow = &mut gw[li][i * n_out..(i + 1) * n_out];
+                        for (g, d) in grow.iter_mut().zip(&delta) {
+                            *g += ai * d;
+                        }
+                    }
+                }
+                for (g, d) in gb[li].iter_mut().zip(&delta) {
+                    *g += d;
+                }
+                if li > 0 {
+                    let w = &self.w[li];
+                    let mut next = vec![0.0f32; n_in];
+                    for i in 0..n_in {
+                        let row = &w[i * n_out..(i + 1) * n_out];
+                        let mut acc = 0.0;
+                        for (wj, d) in row.iter().zip(&delta) {
+                            acc += wj * d;
+                        }
+                        // ReLU grad
+                        next[i] = if acts[li][i] > 0.0 { acc } else { 0.0 };
+                    }
+                    delta = next;
+                }
+            }
+        }
+        let n = xs.len() as f32;
+        self.t += 1;
+        let (b1, b2, eps) = (0.9f64, 0.999f64, 1e-8f64);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for li in 0..layers {
+            for (i, g) in gw[li].iter().enumerate() {
+                let g = (*g / n) as f64 + l2 * self.w[li][i] as f64;
+                let m = &mut self.mw[li][i];
+                *m = (b1 * *m as f64 + (1.0 - b1) * g) as f32;
+                let v = &mut self.vw[li][i];
+                *v = (b2 * *v as f64 + (1.0 - b2) * g * g) as f32;
+                self.w[li][i] -=
+                    (lr * (self.mw[li][i] as f64 / bc1)
+                        / ((self.vw[li][i] as f64 / bc2).sqrt() + eps)) as f32;
+            }
+            for (i, g) in gb[li].iter().enumerate() {
+                let g = (*g / n) as f64;
+                let m = &mut self.mb[li][i];
+                *m = (b1 * *m as f64 + (1.0 - b1) * g) as f32;
+                let v = &mut self.vb[li][i];
+                *v = (b2 * *v as f64 + (1.0 - b2) * g * g) as f32;
+                self.b[li][i] -=
+                    (lr * (self.mb[li][i] as f64 / bc1)
+                        / ((self.vb[li][i] as f64 / bc2).sqrt() + eps)) as f32;
+            }
+        }
+        loss / xs.len() as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// budgeted search (the AutoML stand-in)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct BaselineOutcome {
+    pub best: Candidate,
+    pub val_acc: f64,
+    pub test_acc: f64,
+    pub explored: usize,
+}
+
+/// Default search space (appendix Table 5 at MLP scale).
+pub fn search_space(budget: usize, seed: u64) -> Vec<Candidate> {
+    let hiddens: &[&[usize]] = &[&[], &[64], &[128], &[256], &[128, 64], &[256, 128]];
+    let lrs = [3e-4, 1e-3, 3e-3, 1e-2];
+    let l2s = [0.0, 1e-4, 1e-3];
+    let mut rng = Rng::new(seed ^ 0xBA5E);
+    let mut all: Vec<Candidate> = Vec::new();
+    for h in hiddens {
+        for &lr in &lrs {
+            for &l2 in &l2s {
+                all.push(Candidate {
+                    hidden: h.to_vec(),
+                    lr,
+                    epochs: 30,
+                    l2,
+                    seed: rng.next_u64(),
+                });
+            }
+        }
+    }
+    rng.shuffle(&mut all);
+    all.truncate(budget);
+    all
+}
+
+fn class_labels(labels: &Labels) -> Result<&[usize]> {
+    match labels {
+        Labels::Class(l) => Ok(l),
+        _ => anyhow::bail!("baseline supports classification tasks only"),
+    }
+}
+
+fn train_eval_candidate(
+    cand: &Candidate,
+    train_x: &[Vec<f32>],
+    train_y: &[usize],
+    val_x: &[Vec<f32>],
+    val_y: &[usize],
+    n_classes: usize,
+) -> (Mlp, f64) {
+    let d = train_x[0].len();
+    let mut sizes = vec![d];
+    sizes.extend(&cand.hidden);
+    sizes.push(n_classes);
+    let mut rng = Rng::new(cand.seed);
+    let mut mlp = Mlp::new(&sizes, &mut rng);
+    let batch = 32.min(train_x.len());
+    let mut order: Vec<usize> = (0..train_x.len()).collect();
+    for _ in 0..cand.epochs {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(batch) {
+            let xs: Vec<&[f32]> = chunk.iter().map(|&i| train_x[i].as_slice()).collect();
+            let ys: Vec<usize> = chunk.iter().map(|&i| train_y[i]).collect();
+            mlp.train_batch(&xs, &ys, cand.lr, cand.l2);
+        }
+    }
+    let preds: Vec<usize> = val_x.iter().map(|x| argmax(&mlp.logits(x))).collect();
+    let acc = stats::accuracy(&preds, val_y);
+    (mlp, acc)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+/// Run the budgeted search for one classification task.
+pub fn run_baseline(
+    rt: &Arc<Runtime>,
+    base: &NamedTensors,
+    task: &TaskData,
+    budget: usize,
+    n_classes: usize,
+) -> Result<BaselineOutcome> {
+    let train_x = embed_features(rt, base, &task.train)?;
+    let val_x = embed_features(rt, base, &task.val)?;
+    let test_x = embed_features(rt, base, &task.test)?;
+    let train_y = class_labels(&task.train.labels)?;
+    let val_y = class_labels(&task.val.labels)?;
+    let test_y = class_labels(&task.test.labels)?;
+
+    let mut best: Option<(Candidate, Mlp, f64)> = None;
+    let cands = search_space(budget, task.spec.seed);
+    let explored = cands.len();
+    for cand in cands {
+        let (mlp, acc) =
+            train_eval_candidate(&cand, &train_x, train_y, &val_x, val_y, n_classes);
+        if best.as_ref().map(|(_, _, b)| acc > *b).unwrap_or(true) {
+            best = Some((cand, mlp, acc));
+        }
+    }
+    let (best_cand, mlp, val_acc) = best.context("empty search budget")?;
+    let preds: Vec<usize> = test_x.iter().map(|x| argmax(&mlp.logits(x))).collect();
+    let test_acc = stats::accuracy(&preds, test_y);
+    Ok(BaselineOutcome { best: best_cand, val_acc, test_acc, explored })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_learns_xor() {
+        let xs: Vec<Vec<f32>> = vec![
+            vec![0.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 0.0],
+            vec![1.0, 1.0],
+        ];
+        let ys = [0usize, 1, 1, 0];
+        let mut rng = Rng::new(3);
+        let mut mlp = Mlp::new(&[2, 16, 2], &mut rng);
+        for _ in 0..800 {
+            let refs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+            mlp.train_batch(&refs, &ys, 1e-2, 0.0);
+        }
+        let preds: Vec<usize> = xs.iter().map(|x| argmax(&mlp.logits(x))).collect();
+        assert_eq!(preds, ys.to_vec());
+    }
+
+    #[test]
+    fn mlp_loss_decreases() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<Vec<f32>> =
+            (0..64).map(|_| (0..8).map(|_| rng.f32()).collect()).collect();
+        let ys: Vec<usize> = xs.iter().map(|x| (x[0] > 0.5) as usize).collect();
+        let mut mlp = Mlp::new(&[8, 16, 2], &mut rng);
+        let refs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let first = mlp.train_batch(&refs, &ys, 1e-2, 0.0);
+        let mut last = first;
+        for _ in 0..100 {
+            last = mlp.train_batch(&refs, &ys, 1e-2, 0.0);
+        }
+        assert!(last < first * 0.5, "{first} -> {last}");
+    }
+
+    #[test]
+    fn linear_model_when_no_hidden() {
+        let mut rng = Rng::new(5);
+        let mlp = Mlp::new(&[4, 3], &mut rng);
+        assert_eq!(mlp.w.len(), 1);
+        assert_eq!(mlp.logits(&[0.0; 4]).len(), 3);
+    }
+
+    #[test]
+    fn search_space_is_budgeted_and_deterministic() {
+        let a = search_space(10, 1);
+        let b = search_space(10, 1);
+        assert_eq!(a.len(), 10);
+        assert_eq!(
+            a.iter().map(|c| (c.hidden.clone(), c.lr.to_bits())).collect::<Vec<_>>(),
+            b.iter().map(|c| (c.hidden.clone(), c.lr.to_bits())).collect::<Vec<_>>()
+        );
+    }
+}

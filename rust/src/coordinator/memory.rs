@@ -1,0 +1,153 @@
+//! Parameter accounting — the paper's headline economics.
+//!
+//! Table 1: solving 9 GLUE tasks needs 9× BERT params with fine-tuning but
+//! 1.3× with adapters. This module computes those columns for any method
+//! from the manifest's shapes (no tensors needed).
+
+use crate::runtime::{Manifest, ModelDims};
+
+/// Per-task trained-parameter count (excluding the task head, which every
+/// method adds) for each tuning method, from the architecture dims.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// bottleneck adapters of size m (+ all LayerNorms)
+    Adapter { m: usize },
+    /// top-k layers (+ embeddings when k = n_layers)
+    TopK { k: usize },
+    LayerNormOnly,
+    FullFineTune,
+}
+
+pub fn trained_params_per_task(dims: &ModelDims, method: Method) -> usize {
+    let d = dims.d;
+    let ln_all = (2 * dims.n_layers + 1) * 2 * d; // every LN incl. embedding LN
+    match method {
+        Method::Adapter { m } => {
+            // two adapters per layer: (d·m + m) down + (m·d + d) up
+            let per_adapter = d * m + m + m * d + d;
+            dims.n_layers * 2 * per_adapter + ln_all
+        }
+        Method::TopK { k } => {
+            let per_layer = 4 * (d * d + d) + d * dims.ffn + dims.ffn
+                + dims.ffn * d + d + 4 * d;
+            let emb = if k == dims.n_layers {
+                dims.vocab * d + dims.seq * d + dims.type_vocab * d + 2 * d + dims.vocab
+            } else {
+                0
+            };
+            k * per_layer + emb
+        }
+        Method::LayerNormOnly => ln_all,
+        Method::FullFineTune => base_params(dims),
+    }
+}
+
+pub fn base_params(dims: &ModelDims) -> usize {
+    let d = dims.d;
+    let per_layer =
+        4 * (d * d + d) + d * dims.ffn + dims.ffn + dims.ffn * d + d + 4 * d;
+    dims.vocab * d + dims.seq * d + dims.type_vocab * d + 2 * d + dims.vocab
+        + dims.n_layers * per_layer
+}
+
+/// "Trained params / task" as a percentage of the base (Table 1 column).
+pub fn trained_percent(dims: &ModelDims, method: Method) -> f64 {
+    100.0 * trained_params_per_task(dims, method) as f64 / base_params(dims) as f64
+}
+
+/// "Total num params" multiple for solving `n_tasks` (Table 1 column):
+/// 1 base + n_tasks banks for sharing methods; n_tasks full copies for
+/// fine-tuning.
+pub fn total_params_ratio(dims: &ModelDims, method: Method, n_tasks: usize) -> f64 {
+    let base = base_params(dims) as f64;
+    match method {
+        Method::FullFineTune => n_tasks as f64,
+        m => (base + n_tasks as f64 * trained_params_per_task(dims, m) as f64) / base,
+    }
+}
+
+/// Verify the closed-form accounting against the real manifest signatures.
+pub fn audit_against_manifest(man: &Manifest) -> Vec<(String, usize, usize)> {
+    let mut rows = Vec::new();
+    for exe in man.executables.values() {
+        if exe.kind != "cls" {
+            continue;
+        }
+        let method = match exe.variant.as_str() {
+            "adapter" => Method::Adapter { m: exe.m.unwrap() },
+            "topk" => Method::TopK { k: exe.k.unwrap() },
+            "lnonly" => Method::LayerNormOnly,
+            _ => continue,
+        };
+        let formula = trained_params_per_task(&man.dims, method);
+        // actual trained group minus the head leaves
+        let actual: usize = {
+            let r = exe.input_group_range("trained").unwrap();
+            exe.inputs[r]
+                .iter()
+                .filter(|l| !l.name.starts_with("trained/head"))
+                .map(|l| l.elements())
+                .sum()
+        };
+        rows.push((exe.name.clone(), formula, actual));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 1024,
+            d: 128,
+            n_layers: 8,
+            n_heads: 4,
+            ffn: 512,
+            seq: 64,
+            max_classes: 20,
+            type_vocab: 2,
+            mlm_positions: 8,
+        }
+    }
+
+    #[test]
+    fn full_ft_is_100_percent() {
+        assert!((trained_percent(&dims(), Method::FullFineTune) - 100.0).abs() < 1e-9);
+        assert_eq!(
+            trained_params_per_task(&dims(), Method::TopK { k: 8 }),
+            base_params(&dims())
+        );
+    }
+
+    #[test]
+    fn adapters_are_two_orders_smaller_than_full_ft() {
+        let p1 = trained_percent(&dims(), Method::Adapter { m: 1 });
+        let p8 = trained_percent(&dims(), Method::Adapter { m: 8 });
+        assert!(p1 < 1.0, "m=1 trains {p1:.2}%");
+        assert!(p8 < 3.0, "m=8 trains {p8:.2}%");
+        // monotone in m
+        assert!(
+            trained_percent(&dims(), Method::Adapter { m: 64 })
+                > trained_percent(&dims(), Method::Adapter { m: 8 })
+        );
+    }
+
+    #[test]
+    fn lnonly_is_tiny() {
+        let ln = trained_params_per_task(&dims(), Method::LayerNormOnly);
+        assert_eq!(ln, (2 * 8 + 1) * 2 * 128);
+        assert!(trained_percent(&dims(), Method::LayerNormOnly) < 0.5);
+    }
+
+    #[test]
+    fn total_ratio_matches_paper_shape() {
+        // 9 tasks: fine-tuning 9×, adapters close to 1×
+        let ft = total_params_ratio(&dims(), Method::FullFineTune, 9);
+        let ad = total_params_ratio(&dims(), Method::Adapter { m: 8 }, 9);
+        assert_eq!(ft, 9.0);
+        assert!(ad < 1.5, "adapters total {ad:.2}×");
+        assert!(ad > 1.0);
+    }
+}

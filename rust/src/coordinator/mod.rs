@@ -1,0 +1,20 @@
+//! L3 coordinator — the paper's motivating system (§1): a cloud service
+//! where tasks arrive in a stream, one frozen base is shared by all of
+//! them, and per-task adapter banks are trained, stored and served.
+//!
+//! * `stream` — online task arrival: train → validate → register, with the
+//!   continual-learning invariant (old tasks' scores never move) checked
+//!   after every registration;
+//! * `router` — task-id routing with per-task queues and flush policy;
+//! * `server` — thread-based serving: executor pool, per-task bank cache,
+//!   adapter-bank swap per batch, latency/throughput metrics;
+//! * `memory` — parameter accounting (the 1.3×/9× "total params" columns).
+
+pub mod memory;
+pub mod router;
+pub mod server;
+pub mod stream;
+
+pub use router::{FlushPolicy, Router};
+pub use server::{Server, ServerConfig, ServerMetrics};
+pub use stream::{StreamConfig, StreamReport, TaskStream};

@@ -1,0 +1,304 @@
+//! Serving loop: multi-task inference over the shared frozen base.
+//!
+//! Thread topology (std threads + mpsc; tokio is unavailable offline):
+//!
+//! ```text
+//!   clients ── sync_channel (bounded = backpressure) ──► router thread
+//!      ▲                                                   │ flush jobs
+//!      │            per-request reply channels             ▼
+//!      └───────────────◄──────────────── executor pool (N threads)
+//! ```
+//!
+//! The router owns the per-task queues and flush policy; executors pick up
+//! flushed batches, swap in the task's cached parameter banks (base merge
+//! + adapters done **once per task version**, not per batch) and run the
+//! `*_fwd_*` executable. This is the adapter economics in action: one
+//! resident base, per-batch task switch = feeding different small input
+//! literals, no model reload.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::router::{FlushPolicy, Router};
+use crate::eval::fwd_param_banks;
+use crate::model::params::NamedTensors;
+use crate::runtime::{Bank, Runtime};
+use crate::store::AdapterStore;
+use crate::util::tensor::Tensor;
+use crate::util::timer::Samples;
+
+/// One inference request (already tokenized; see `tokenizer` for text).
+pub struct Request {
+    pub task: String,
+    pub tokens: Vec<i32>,
+    pub segments: Vec<i32>,
+    pub attn_mask: Vec<f32>,
+    pub reply: mpsc::Sender<Response>,
+    pub submitted: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub task: String,
+    /// argmax class (cls) — reg/span payloads unused by current demos
+    pub pred_class: usize,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub flush: FlushPolicy,
+    pub executors: usize,
+    /// bounded client→router channel (backpressure)
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            flush: FlushPolicy::default(),
+            executors: 2,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub latencies: Samples,
+    pub batches: usize,
+    pub requests: u64,
+    pub occupancy_sum: f64,
+}
+
+impl ServerMetrics {
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.occupancy_sum / self.batches as f64
+        }
+    }
+}
+
+/// A running server; drop-safe shutdown via `shutdown()`.
+pub struct Server {
+    tx: mpsc::SyncSender<Request>,
+    stop: Arc<AtomicBool>,
+    router_handle: Option<std::thread::JoinHandle<()>>,
+    executor_handles: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Mutex<ServerMetrics>>,
+    pub rejected: Arc<AtomicU64>,
+}
+
+struct TaskBanks {
+    fwd_name: String,
+    n_classes: usize,
+    /// parameter banks (base, adapters?, head, gates?) ready to execute
+    params: Vec<Bank>,
+}
+
+impl Server {
+    /// Start serving every task currently registered in `store`.
+    pub fn start(
+        rt: Arc<Runtime>,
+        store: &AdapterStore,
+        base: &NamedTensors,
+        task_classes: &BTreeMap<String, usize>,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        // Resolve and cache per-task banks up front (server startup =
+        // adapter swap-in; this is the only expensive per-task cost).
+        let mut banks: BTreeMap<String, Arc<TaskBanks>> = BTreeMap::new();
+        for task in store.task_names() {
+            let (_, model) = store.latest(&task).context("store raced")?;
+            let params = fwd_param_banks(&rt, &model, base, None)?;
+            let n_classes = *task_classes.get(&task).unwrap_or(&2);
+            banks.insert(
+                task.clone(),
+                Arc::new(TaskBanks { fwd_name: model.fwd_name(), n_classes, params }),
+            );
+            // warm the compile cache before traffic arrives
+            rt.load(&model.fwd_name())?;
+        }
+        let banks = Arc::new(banks);
+
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_capacity);
+        let (batch_tx, batch_rx) = mpsc::channel::<super::router::FlushedBatch<Request>>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let rejected = Arc::new(AtomicU64::new(0));
+
+        // router thread
+        let stop_r = stop.clone();
+        let flush = cfg.flush;
+        let router_handle = std::thread::Builder::new()
+            .name("ab-router".into())
+            .spawn(move || {
+                let mut router = Router::new(flush);
+                loop {
+                    let now = Instant::now();
+                    let timeout = router
+                        .next_deadline(now)
+                        .unwrap_or(Duration::from_millis(2))
+                        .max(Duration::from_micros(100));
+                    match rx.recv_timeout(timeout) {
+                        Ok(req) => {
+                            let task = req.task.clone();
+                            if let Some(b) = router.push(&task, req, Instant::now()) {
+                                let _ = batch_tx.send(b);
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                    for b in router.poll(Instant::now()) {
+                        let _ = batch_tx.send(b);
+                    }
+                    if stop_r.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+                for b in router.drain(Instant::now()) {
+                    let _ = batch_tx.send(b);
+                }
+                // dropping batch_tx stops the executors
+            })?;
+
+        // executor pool
+        let mut executor_handles = Vec::new();
+        for i in 0..cfg.executors.max(1) {
+            let rt = rt.clone();
+            let banks = banks.clone();
+            let batch_rx = batch_rx.clone();
+            let metrics = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ab-exec-{i}"))
+                .spawn(move || loop {
+                    let batch = {
+                        let rx = batch_rx.lock().unwrap();
+                        rx.recv()
+                    };
+                    let Ok(batch) = batch else { return };
+                    if let Err(e) = run_batch(&rt, &banks, batch, &metrics) {
+                        eprintln!("executor error: {e:#}");
+                    }
+                })?;
+            executor_handles.push(handle);
+        }
+
+        Ok(Server {
+            tx,
+            stop,
+            router_handle: Some(router_handle),
+            executor_handles,
+            metrics,
+            rejected,
+        })
+    }
+
+    /// Submit a request; `Err` when the bounded queue is full (backpressure).
+    pub fn submit(&self, req: Request) -> Result<(), Request> {
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(r)) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(r)
+            }
+            Err(mpsc::TrySendError::Disconnected(r)) => Err(r),
+        }
+    }
+
+    /// Blocking submit (client-side throttle).
+    pub fn submit_blocking(&self, req: Request) -> Result<()> {
+        self.tx.send(req).map_err(|_| anyhow::anyhow!("server stopped"))
+    }
+
+    pub fn shutdown(mut self) -> ServerMetrics {
+        self.stop.store(true, Ordering::Relaxed);
+        drop(self.tx);
+        if let Some(h) = self.router_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.executor_handles.drain(..) {
+            let _ = h.join();
+        }
+        let m = self.metrics.lock().unwrap();
+        ServerMetrics {
+            latencies: m.latencies.clone(),
+            batches: m.batches,
+            requests: m.requests,
+            occupancy_sum: m.occupancy_sum,
+        }
+    }
+}
+
+fn run_batch(
+    rt: &Arc<Runtime>,
+    banks: &BTreeMap<String, Arc<TaskBanks>>,
+    batch: super::router::FlushedBatch<Request>,
+    metrics: &Arc<Mutex<ServerMetrics>>,
+) -> Result<()> {
+    let tb = banks
+        .get(&batch.task)
+        .with_context(|| format!("no banks for task {:?}", batch.task))?;
+    let exe = rt.load(&tb.fwd_name)?;
+    let b = exe.spec.batch;
+    let seq = rt.manifest.dims.seq;
+    let n = batch.items.len();
+    // assemble padded token banks
+    let mut tokens = Vec::with_capacity(b * seq);
+    let mut segments = Vec::with_capacity(b * seq);
+    let mut attn = Vec::with_capacity(b * seq);
+    for req in &batch.items {
+        tokens.extend_from_slice(&req.tokens);
+        segments.extend_from_slice(&req.segments);
+        attn.extend_from_slice(&req.attn_mask);
+    }
+    for _ in n..b {
+        tokens.extend(std::iter::repeat(0).take(seq));
+        segments.extend(std::iter::repeat(0).take(seq));
+        let mut m = vec![0.0f32; seq];
+        m[0] = 1.0;
+        attn.extend(m);
+    }
+    let tok_bank = vec![Tensor::i32(vec![b, seq], tokens)];
+    let seg_bank = vec![Tensor::i32(vec![b, seq], segments)];
+    let mask_bank = vec![Tensor::f32(vec![b, seq], attn)];
+    let mut all: Vec<&Bank> = tb.params.iter().collect();
+    all.push(&tok_bank);
+    all.push(&seg_bank);
+    all.push(&mask_bank);
+    let out = exe.run(&all)?;
+    let logits = &out[0][0];
+    let c = logits.shape[1];
+    let now = Instant::now();
+    let mut m = metrics.lock().unwrap();
+    m.batches += 1;
+    m.occupancy_sum += n as f64 / b as f64;
+    for (row, req) in batch.items.into_iter().enumerate() {
+        let r = &logits.as_f32()[row * c..(row + 1) * c];
+        let pred = r[..tb.n_classes]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let latency = now.duration_since(req.submitted);
+        m.latencies.record(latency);
+        m.requests += 1;
+        let _ = req.reply.send(Response {
+            task: req.task,
+            pred_class: pred,
+            latency,
+            batch_size: n,
+        });
+    }
+    Ok(())
+}

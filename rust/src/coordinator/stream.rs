@@ -1,0 +1,184 @@
+//! Online task stream — the paper's continual setting (§1): "tasks arrive
+//! in a stream … the model has perfect memory of previous tasks".
+//!
+//! For each arriving task: run a (configurable) sweep, register the best
+//! bank in the store, then *re-evaluate every previously registered task*
+//! and assert its score is bit-identical to the score at registration —
+//! the frozen base + immutable banks make this exact, not approximate.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data::grammar::World;
+use crate::data::tasks::{generate, TaskKind, TaskSpec};
+use crate::eval::evaluate;
+use crate::model::params::NamedTensors;
+use crate::runtime::Runtime;
+use crate::store::AdapterStore;
+use crate::train::{run_sweep, SweepGrid};
+
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// adapter sizes offered to each task's sweep
+    pub adapter_sizes: Vec<usize>,
+    pub lrs: Vec<f64>,
+    pub epochs: usize,
+    pub seeds: Vec<u64>,
+    pub threads: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            adapter_sizes: vec![8],
+            lrs: vec![1e-3],
+            epochs: 6,
+            seeds: vec![0],
+            threads: 2,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ArrivalReport {
+    pub task: String,
+    pub val_score: f64,
+    pub test_score: f64,
+    pub chosen_exe: String,
+    pub trained_params_no_head: usize,
+    /// (old task, score at its registration, score now) — must match
+    pub memory_checks: Vec<(String, f64, f64)>,
+}
+
+#[derive(Debug)]
+pub struct StreamReport {
+    pub arrivals: Vec<ArrivalReport>,
+    pub total_params_ratio: f64,
+    pub forgetting_detected: bool,
+}
+
+/// Processes tasks one at a time against a shared frozen base.
+pub struct TaskStream {
+    rt: Arc<Runtime>,
+    base: NamedTensors,
+    store: Arc<AdapterStore>,
+    world: World,
+    cfg: StreamConfig,
+    /// test-time scores recorded at registration (task → score)
+    registered_scores: BTreeMap<String, f64>,
+    task_data_cache: BTreeMap<String, crate::data::tasks::TaskData>,
+}
+
+impl TaskStream {
+    pub fn new(
+        rt: Arc<Runtime>,
+        base: NamedTensors,
+        store: Arc<AdapterStore>,
+        world: World,
+        cfg: StreamConfig,
+    ) -> Self {
+        TaskStream {
+            rt,
+            base,
+            store,
+            world,
+            cfg,
+            registered_scores: BTreeMap::new(),
+            task_data_cache: BTreeMap::new(),
+        }
+    }
+
+    pub fn store(&self) -> &Arc<AdapterStore> {
+        &self.store
+    }
+
+    /// Handle one arriving task end-to-end.
+    pub fn arrive(&mut self, spec: &TaskSpec) -> Result<ArrivalReport> {
+        let seq = self.rt.manifest.dims.seq;
+        let data = generate(&self.world, spec, seq);
+        let kind = spec.kind.artifact_kind();
+        let grid = SweepGrid {
+            exes: self
+                .cfg
+                .adapter_sizes
+                .iter()
+                .map(|m| format!("{kind}_train_adapter_m{m}"))
+                .collect(),
+            lrs: self.cfg.lrs.clone(),
+            epochs: vec![self.cfg.epochs],
+            seeds: self.cfg.seeds.clone(),
+            stds: vec![1e-2],
+        };
+        let outcome = run_sweep(&self.rt, &data, &self.base, &grid, self.cfg.threads)?;
+        let n_classes = match &spec.kind {
+            TaskKind::Cls { n_classes, .. } => *n_classes,
+            _ => 0,
+        };
+        let test_score = evaluate(
+            &self.rt,
+            &outcome.best.model,
+            &self.base,
+            &data.test,
+            n_classes,
+            spec.metric,
+        )?;
+        self.store
+            .register(&spec.name, &outcome.best.model, outcome.best.val_score)?;
+        self.registered_scores.insert(spec.name.clone(), test_score);
+        self.task_data_cache.insert(spec.name.clone(), data);
+
+        // continual-learning invariant: all older tasks unchanged
+        let mut memory_checks = Vec::new();
+        for (old, &old_score) in &self.registered_scores {
+            if old == &spec.name {
+                continue;
+            }
+            let (_, model) = self.store.latest(old).context("store lost a task")?;
+            let od = &self.task_data_cache[old];
+            let on = match &od.spec.kind {
+                TaskKind::Cls { n_classes, .. } => *n_classes,
+                _ => 0,
+            };
+            let now =
+                evaluate(&self.rt, &model, &self.base, &od.test, on, od.spec.metric)?;
+            memory_checks.push((old.clone(), old_score, now));
+        }
+
+        Ok(ArrivalReport {
+            task: spec.name.clone(),
+            val_score: outcome.best.val_score,
+            test_score,
+            chosen_exe: outcome.best_config.exe.clone(),
+            trained_params_no_head: outcome.best.model.trained_param_count_no_head(),
+            memory_checks,
+        })
+    }
+
+    /// Process a whole stream and summarize.
+    pub fn run(&mut self, specs: &[TaskSpec]) -> Result<StreamReport> {
+        let mut arrivals = Vec::new();
+        let mut forgetting = false;
+        for spec in specs {
+            let rep = self.arrive(spec)?;
+            for (old, was, now) in &rep.memory_checks {
+                if (was - now).abs() > 1e-12 {
+                    eprintln!(
+                        "FORGETTING: task {old} score moved {was} -> {now}"
+                    );
+                    forgetting = true;
+                }
+            }
+            arrivals.push(rep);
+        }
+        let ratio = self
+            .store
+            .total_params_ratio(self.rt.manifest.base_param_count());
+        Ok(StreamReport {
+            arrivals,
+            total_params_ratio: ratio,
+            forgetting_detected: forgetting,
+        })
+    }
+}

@@ -1,0 +1,238 @@
+//! Batch assembly: splits → manifest-shaped input banks.
+//!
+//! Training iterates shuffled full batches (partial tail dropped, as in
+//! BERT's reference training loop); evaluation pads the tail batch and
+//! reports how many rows are real so metrics ignore padding.
+
+use anyhow::Result;
+
+use super::tasks::{Labels, Split};
+use crate::model::params::NamedTensors;
+use crate::runtime::manifest::ExeSpec;
+use crate::runtime::Bank;
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// One assembled batch (dense, fixed `batch × seq`).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    pub real_rows: usize,
+    pub tokens: Vec<i32>,
+    pub segments: Vec<i32>,
+    pub attn_mask: Vec<f32>,
+    pub labels: Labels,
+}
+
+impl Batch {
+    fn gather(split: &Split, idx: &[usize], batch: usize) -> Batch {
+        let seq = split.seq;
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut segments = Vec::with_capacity(batch * seq);
+        let mut attn_mask = Vec::with_capacity(batch * seq);
+        for &i in idx {
+            tokens.extend_from_slice(&split.tokens[i * seq..(i + 1) * seq]);
+            segments.extend_from_slice(&split.segments[i * seq..(i + 1) * seq]);
+            attn_mask.extend_from_slice(&split.attn_mask[i * seq..(i + 1) * seq]);
+        }
+        // pad rows: all-PAD tokens; CLS position kept valid in the mask so
+        // softmax/fwd stay finite (rows are discarded host-side anyway)
+        for _ in idx.len()..batch {
+            tokens.extend(std::iter::repeat(0).take(seq));
+            segments.extend(std::iter::repeat(0).take(seq));
+            let mut m = vec![0.0f32; seq];
+            m[0] = 1.0;
+            attn_mask.extend(m);
+        }
+        let labels = match &split.labels {
+            Labels::Class(l) => {
+                let mut v: Vec<usize> = idx.iter().map(|&i| l[i]).collect();
+                v.resize(batch, 0);
+                Labels::Class(v)
+            }
+            Labels::Score(l) => {
+                let mut v: Vec<f32> = idx.iter().map(|&i| l[i]).collect();
+                v.resize(batch, 0.0);
+                Labels::Score(v)
+            }
+            Labels::Span(l) => {
+                let mut v: Vec<(usize, usize)> = idx.iter().map(|&i| l[i]).collect();
+                v.resize(batch, (0, 0));
+                Labels::Span(v)
+            }
+        };
+        Batch {
+            batch,
+            seq,
+            real_rows: idx.len(),
+            tokens,
+            segments,
+            attn_mask,
+            labels,
+        }
+    }
+
+    /// The `batch` input group of a *train* executable, shaped by its
+    /// manifest signature (name-keyed, so leaf order is irrelevant here).
+    pub fn to_train_bank(&self, spec: &ExeSpec, n_classes: usize,
+                         max_classes: usize) -> Result<Bank> {
+        let mut named = NamedTensors::default();
+        named.insert(
+            "tokens",
+            Tensor::i32(vec![self.batch, self.seq], self.tokens.clone()),
+        );
+        named.insert(
+            "segments",
+            Tensor::i32(vec![self.batch, self.seq], self.segments.clone()),
+        );
+        named.insert(
+            "attn_mask",
+            Tensor::f32(vec![self.batch, self.seq], self.attn_mask.clone()),
+        );
+        match &self.labels {
+            Labels::Class(l) => {
+                named.insert(
+                    "labels",
+                    Tensor::i32(vec![self.batch], l.iter().map(|&x| x as i32).collect()),
+                );
+                let mut valid = vec![0.0f32; max_classes];
+                for v in valid.iter_mut().take(n_classes) {
+                    *v = 1.0;
+                }
+                named.insert("class_valid", Tensor::f32(vec![max_classes], valid));
+            }
+            Labels::Score(l) => {
+                named.insert("targets", Tensor::f32(vec![self.batch], l.clone()));
+            }
+            Labels::Span(l) => {
+                let mut flat = Vec::with_capacity(self.batch * 2);
+                for &(s, e) in l {
+                    flat.push(s as i32);
+                    flat.push(e as i32);
+                }
+                named.insert("spans", Tensor::i32(vec![self.batch, 2], flat));
+            }
+        }
+        named.to_bank(spec, "batch")
+    }
+
+    /// The `(tokens, segments, attn_mask)` banks of a *fwd* executable.
+    pub fn to_fwd_banks(&self) -> (Bank, Bank, Bank) {
+        (
+            vec![Tensor::i32(vec![self.batch, self.seq], self.tokens.clone())],
+            vec![Tensor::i32(vec![self.batch, self.seq], self.segments.clone())],
+            vec![Tensor::f32(vec![self.batch, self.seq], self.attn_mask.clone())],
+        )
+    }
+}
+
+/// Shuffled full-batch iterator over a split (drops the partial tail).
+pub struct EpochIter<'a> {
+    split: &'a Split,
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+}
+
+impl<'a> EpochIter<'a> {
+    pub fn new(split: &'a Split, batch: usize, rng: &mut Rng) -> Self {
+        let mut order: Vec<usize> = (0..split.n).collect();
+        rng.shuffle(&mut order);
+        EpochIter { split, order, pos: 0, batch }
+    }
+
+    pub fn batches_per_epoch(n: usize, batch: usize) -> usize {
+        n / batch
+    }
+}
+
+impl<'a> Iterator for EpochIter<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.pos + self.batch > self.order.len() {
+            return None;
+        }
+        let idx = &self.order[self.pos..self.pos + self.batch];
+        self.pos += self.batch;
+        Some(Batch::gather(self.split, idx, self.batch))
+    }
+}
+
+/// Sequential padded batches covering every row exactly once (evaluation).
+pub fn eval_batches(split: &Split, batch: usize) -> Vec<Batch> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < split.n {
+        let hi = (i + batch).min(split.n);
+        let idx: Vec<usize> = (i..hi).collect();
+        out.push(Batch::gather(split, &idx, batch));
+        i = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::grammar::World;
+    use crate::data::tasks::{generate, Metric, TaskKind, TaskSpec};
+
+    fn toy_split(n: usize) -> Split {
+        let spec = TaskSpec {
+            name: "t".into(),
+            kind: TaskKind::Cls { n_classes: 2, pair: false },
+            metric: Metric::Accuracy,
+            n_train: n,
+            n_val: 8,
+            n_test: 8,
+            purity: 0.5,
+            noise: 0.0,
+            seed: 9,
+        };
+        generate(&World::new(256, 1), &spec, 16).train
+    }
+
+    #[test]
+    fn epoch_covers_all_rows_once_without_tail() {
+        let split = toy_split(21);
+        let mut rng = Rng::new(1);
+        let mut seen = Vec::new();
+        for b in EpochIter::new(&split, 4, &mut rng) {
+            assert_eq!(b.real_rows, 4);
+            seen.push(b);
+        }
+        assert_eq!(seen.len(), 5); // 21/4 = 5 full batches, 1 row dropped
+    }
+
+    #[test]
+    fn epoch_shuffles_between_seeds() {
+        let split = toy_split(32);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(2);
+        let a: Vec<i32> = EpochIter::new(&split, 8, &mut r1)
+            .flat_map(|b| b.tokens)
+            .collect();
+        let b: Vec<i32> = EpochIter::new(&split, 8, &mut r2)
+            .flat_map(|b| b.tokens)
+            .collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn eval_batches_cover_everything_padded() {
+        let split = toy_split(10);
+        let batches = eval_batches(&split, 4);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[2].real_rows, 2);
+        assert_eq!(batches[2].batch, 4);
+        let total: usize = batches.iter().map(|b| b.real_rows).sum();
+        assert_eq!(total, 10);
+        // pad rows keep one valid mask slot (finite softmax)
+        let last = &batches[2];
+        let pad_row_mask = &last.attn_mask[3 * 16..4 * 16];
+        assert_eq!(pad_row_mask[0], 1.0);
+        assert!(pad_row_mask[1..].iter().all(|&x| x == 0.0));
+    }
+}

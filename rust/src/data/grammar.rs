@@ -1,0 +1,255 @@
+//! The synthetic generative world (substitution for BERT's corpus + the
+//! paper's 26 datasets — DESIGN.md §2).
+//!
+//! A latent-topic grammar over a shared vocabulary: each topic owns a set
+//! of boosted words; sentences mix 1–3 topics; non-topic words follow a
+//! Zipf background. MLM pre-training over this corpus gives the MiniBERT
+//! exactly the structure the paper's mechanism needs — lower layers learn
+//! task-general word/topic features, upper layers can specialize — and all
+//! downstream tasks (classification, pair, regression, span) are labeled
+//! functions of the same latent topics, so they are learnable by transfer.
+
+use crate::util::rng::Rng;
+
+/// Reserved token ids (must match `data::tasks` batch assembly).
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const MASK: i32 = 3;
+/// First ordinary word id.
+pub const WORD0: usize = 4;
+
+/// The world: topic → boosted-word assignments over the vocabulary.
+#[derive(Debug, Clone)]
+pub struct World {
+    pub vocab: usize,
+    pub n_topics: usize,
+    pub words_per_topic: usize,
+    /// topic → its boosted word ids
+    pub topic_words: Vec<Vec<usize>>,
+    /// word id → owning topic (if any)
+    pub word_topic: Vec<Option<usize>>,
+    pub seed: u64,
+}
+
+impl World {
+    /// Deterministic world for a vocabulary size. Topics partition a chunk
+    /// of the vocab; remaining words are topic-neutral background.
+    pub fn new(vocab: usize, seed: u64) -> World {
+        assert!(vocab >= 64, "vocab too small for a topic world");
+        let n_topics = (vocab / 32).clamp(8, 32);
+        // boosted words take ~60% of the non-special vocab
+        let usable = vocab - WORD0;
+        let words_per_topic = usable * 6 / 10 / n_topics;
+        let mut rng = Rng::new(seed ^ 0x7A57E11E);
+        let mut ids: Vec<usize> = (WORD0..vocab).collect();
+        rng.shuffle(&mut ids);
+        let mut topic_words = Vec::with_capacity(n_topics);
+        let mut word_topic = vec![None; vocab];
+        for t in 0..n_topics {
+            let ws: Vec<usize> =
+                ids[t * words_per_topic..(t + 1) * words_per_topic].to_vec();
+            for &w in &ws {
+                word_topic[w] = Some(t);
+            }
+            topic_words.push(ws);
+        }
+        World { vocab, n_topics, words_per_topic, topic_words, word_topic, seed }
+    }
+
+    /// Sample one word given an active topic (or background).
+    fn sample_word(&self, rng: &mut Rng, topic: Option<usize>, purity: f64) -> i32 {
+        if let Some(t) = topic {
+            if rng.f64() < purity {
+                let ws = &self.topic_words[t];
+                return ws[rng.below(ws.len())] as i32;
+            }
+        }
+        // Zipf background over the whole word range
+        (WORD0 + rng.zipf(self.vocab - WORD0, 1.1)) as i32
+    }
+
+    /// Generate a sentence of `len` words from a topic mixture
+    /// (`weights[t]` unnormalized). `purity` = probability a word is drawn
+    /// from its topic's boosted set rather than background.
+    pub fn sentence(
+        &self,
+        rng: &mut Rng,
+        weights: &[f64],
+        len: usize,
+        purity: f64,
+    ) -> Vec<i32> {
+        (0..len)
+            .map(|_| {
+                let t = rng.categorical(weights);
+                let topic = if weights[t] > 0.0 { Some(t) } else { None };
+                self.sample_word(rng, topic, purity)
+            })
+            .collect()
+    }
+
+    /// Uniform random topic mixture with `k` active topics.
+    pub fn random_mixture(&self, rng: &mut Rng, k: usize) -> Vec<f64> {
+        let mut w = vec![0.0; self.n_topics];
+        for _ in 0..k {
+            let t = rng.below(self.n_topics);
+            w[t] += 0.5 + rng.f64();
+        }
+        w
+    }
+
+    /// Empirical topic histogram of a token sequence (the "true" latent
+    /// feature the task labels are functions of).
+    pub fn topic_histogram(&self, tokens: &[i32]) -> Vec<f64> {
+        let mut h = vec![0.0; self.n_topics];
+        for &tok in tokens {
+            if tok >= WORD0 as i32 && (tok as usize) < self.vocab {
+                if let Some(t) = self.word_topic[tok as usize] {
+                    h[t] += 1.0;
+                }
+            }
+        }
+        let total: f64 = h.iter().sum();
+        if total > 0.0 {
+            for x in &mut h {
+                *x /= total;
+            }
+        }
+        h
+    }
+
+    /// Cosine similarity of two topic histograms (regression targets).
+    pub fn topic_cosine(a: &[f64], b: &[f64]) -> f64 {
+        let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            dot / (na * nb)
+        }
+    }
+}
+
+/// A pre-training corpus sampler: random mixtures, natural length spread.
+pub struct CorpusSampler {
+    pub world: World,
+    pub purity: f64,
+}
+
+impl CorpusSampler {
+    pub fn new(world: World) -> Self {
+        CorpusSampler { world, purity: 0.55 }
+    }
+
+    /// One MLM example: (tokens, positions, targets, weights) with `p`
+    /// masked positions out of a `seq`-long sentence ([CLS] + words).
+    pub fn mlm_example(
+        &self,
+        rng: &mut Rng,
+        seq: usize,
+        p: usize,
+    ) -> (Vec<i32>, Vec<i32>, Vec<i32>, Vec<f32>) {
+        let k = 1 + rng.below(3);
+        let weights = self.world.random_mixture(rng, k);
+        let mut tokens = vec![CLS];
+        tokens.extend(self.world.sentence(rng, &weights, seq - 1, self.purity));
+        // choose p distinct positions in [1, seq)
+        let mut cand: Vec<usize> = (1..seq).collect();
+        rng.shuffle(&mut cand);
+        let mut positions = Vec::with_capacity(p);
+        let mut targets = Vec::with_capacity(p);
+        let mut weights_out = Vec::with_capacity(p);
+        for &pos in cand.iter().take(p) {
+            positions.push(pos as i32);
+            targets.push(tokens[pos]);
+            weights_out.push(1.0f32);
+            // BERT's 80/10/10 masking
+            let u = rng.f64();
+            if u < 0.8 {
+                tokens[pos] = MASK;
+            } else if u < 0.9 {
+                tokens[pos] =
+                    (WORD0 + rng.below(self.world.vocab - WORD0)) as i32;
+            }
+        }
+        (tokens, positions, targets, weights_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_is_deterministic() {
+        let a = World::new(256, 7);
+        let b = World::new(256, 7);
+        assert_eq!(a.topic_words, b.topic_words);
+        let c = World::new(256, 8);
+        assert_ne!(a.topic_words, c.topic_words);
+    }
+
+    #[test]
+    fn topics_partition_disjointly() {
+        let w = World::new(1024, 1);
+        let mut seen = std::collections::HashSet::new();
+        for ws in &w.topic_words {
+            for &id in ws {
+                assert!(id >= WORD0);
+                assert!(seen.insert(id), "word {id} in two topics");
+            }
+        }
+    }
+
+    #[test]
+    fn pure_sentences_hit_their_topic() {
+        let w = World::new(512, 2);
+        let mut rng = Rng::new(3);
+        let mut weights = vec![0.0; w.n_topics];
+        weights[5] = 1.0;
+        let s = w.sentence(&mut rng, &weights, 200, 0.9);
+        let h = w.topic_histogram(&s);
+        assert!(h[5] > 0.8, "topic 5 mass {}", h[5]);
+    }
+
+    #[test]
+    fn histogram_separates_topics() {
+        let w = World::new(512, 2);
+        let mut rng = Rng::new(4);
+        let mut wa = vec![0.0; w.n_topics];
+        wa[0] = 1.0;
+        let mut wb = vec![0.0; w.n_topics];
+        wb[1] = 1.0;
+        let sa = w.sentence(&mut rng, &wa, 100, 0.7);
+        let sb = w.sentence(&mut rng, &wb, 100, 0.7);
+        let ha = w.topic_histogram(&sa);
+        let hb = w.topic_histogram(&sb);
+        let self_sim = World::topic_cosine(&ha, &ha);
+        let cross = World::topic_cosine(&ha, &hb);
+        assert!(self_sim > 0.99);
+        assert!(cross < 0.5, "cross-topic cosine {cross}");
+    }
+
+    #[test]
+    fn mlm_example_shapes_and_masking() {
+        let w = World::new(256, 5);
+        let sampler = CorpusSampler::new(w);
+        let mut rng = Rng::new(6);
+        let (tokens, positions, targets, weights) =
+            sampler.mlm_example(&mut rng, 16, 4);
+        assert_eq!(tokens.len(), 16);
+        assert_eq!(positions.len(), 4);
+        assert_eq!(targets.len(), 4);
+        assert_eq!(weights, vec![1.0; 4]);
+        assert_eq!(tokens[0], CLS);
+        // all positions distinct and in range
+        let mut ps = positions.clone();
+        ps.sort();
+        ps.dedup();
+        assert_eq!(ps.len(), 4);
+        assert!(ps.iter().all(|&p| p >= 1 && (p as usize) < 16));
+        // targets are real words
+        assert!(targets.iter().all(|&t| t >= WORD0 as i32));
+    }
+}

@@ -1,0 +1,9 @@
+//! Synthetic workload substrates (the paper's corpus + 26 datasets).
+//!
+//! `grammar` — the latent-topic generative world (shared by pre-training
+//! and every downstream task); `tasks` — GLUE / additional / SQuAD
+//! stand-in suites; `batcher` — splits → manifest-shaped banks.
+
+pub mod batcher;
+pub mod grammar;
+pub mod tasks;

@@ -1,0 +1,669 @@
+//! Task suites: the synthetic stand-ins for GLUE, the 17 additional
+//! classification datasets, and SQuAD (DESIGN.md §2).
+//!
+//! Every task is a labeled function of the *same* latent-topic world the
+//! MiniBERT was pre-trained on, so transfer works for the same reason it
+//! does in the paper. The suites mirror the papers' experimental design:
+//! size spread (hundreds to thousands of examples), class counts 2–20,
+//! single-sentence and sentence-pair tasks, one regression task scored
+//! with Spearman, one task scored with Matthews (CoLA's metric), two with
+//! F1, and a span-extraction task scored with EM/F1.
+
+use crate::data::grammar::{World, CLS, PAD, SEP, WORD0};
+use crate::util::rng::Rng;
+
+/// How a task is scored (Table 1's per-column metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    F1,
+    Matthews,
+    Spearman,
+    SpanF1,
+}
+
+impl Metric {
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Accuracy => "accuracy",
+            Metric::F1 => "f1",
+            Metric::Matthews => "matthews",
+            Metric::Spearman => "spearman",
+            Metric::SpanF1 => "span_f1",
+        }
+    }
+}
+
+/// Task family — decides head/artifact kind.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskKind {
+    /// classification; `pair` tasks encode two segments
+    Cls { n_classes: usize, pair: bool },
+    /// scalar regression on a sentence pair (STS-B stand-in)
+    Reg,
+    /// extractive span selection (SQuAD stand-in)
+    Span,
+}
+
+impl TaskKind {
+    pub fn artifact_kind(&self) -> &'static str {
+        match self {
+            TaskKind::Cls { .. } => "cls",
+            TaskKind::Reg => "reg",
+            TaskKind::Span => "span",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub name: String,
+    pub kind: TaskKind,
+    pub metric: Metric,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    /// word-from-topic probability during generation (difficulty knob)
+    pub purity: f64,
+    /// label-noise rate (creates headroom below 100%)
+    pub noise: f64,
+    /// task-level seed (combined with the run seed)
+    pub seed: u64,
+}
+
+/// Labels for one split.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Labels {
+    Class(Vec<usize>),
+    Score(Vec<f32>),
+    Span(Vec<(usize, usize)>),
+}
+
+impl Labels {
+    pub fn len(&self) -> usize {
+        match self {
+            Labels::Class(v) => v.len(),
+            Labels::Score(v) => v.len(),
+            Labels::Span(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One split: `n` examples of fixed length `seq` (row-major).
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub n: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub segments: Vec<i32>,
+    pub attn_mask: Vec<f32>,
+    pub labels: Labels,
+}
+
+impl Split {
+    pub fn row_tokens(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq..(i + 1) * self.seq]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskData {
+    pub spec: TaskSpec,
+    pub train: Split,
+    pub val: Split,
+    pub test: Split,
+    /// extra evaluation splits (e.g. MNLI-mm), name → split
+    pub extra_eval: Vec<(String, Split)>,
+}
+
+// ---------------------------------------------------------------------------
+// generation
+// ---------------------------------------------------------------------------
+
+/// Per-class topic signatures: each class boosts 2 distinct topics.
+fn class_topics(rng: &mut Rng, n_topics: usize, n_classes: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::with_capacity(n_classes);
+    for _ in 0..n_classes {
+        let a = rng.below(n_topics);
+        let mut b = rng.below(n_topics);
+        while b == a {
+            b = rng.below(n_topics);
+        }
+        out.push(vec![a, b]);
+    }
+    out
+}
+
+fn mixture_for(topics: &[usize], n_topics: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut w = vec![0.05; n_topics]; // small leak to every topic
+    for &t in topics {
+        w[t] += 1.0 + rng.f64();
+    }
+    w
+}
+
+struct RowSink<'a> {
+    split: &'a mut Split,
+}
+
+impl<'a> RowSink<'a> {
+    fn push_row(&mut self, tokens: Vec<i32>, segments: Vec<i32>) {
+        let seq = self.split.seq;
+        assert_eq!(tokens.len(), seq);
+        assert_eq!(segments.len(), seq);
+        for (t, s) in tokens.iter().zip(&segments) {
+            self.split.tokens.push(*t);
+            self.split.segments.push(*s);
+            self.split.attn_mask.push(if *t == PAD { 0.0 } else { 1.0 });
+        }
+        self.split.n += 1;
+    }
+}
+
+fn empty_split(seq: usize, labels: Labels) -> Split {
+    Split { n: 0, seq, tokens: vec![], segments: vec![], attn_mask: vec![], labels }
+}
+
+/// Assemble `[CLS] s1 (SEP s2 SEP)` padded to `seq`.
+fn assemble(seq: usize, s1: &[i32], s2: Option<&[i32]>) -> (Vec<i32>, Vec<i32>) {
+    let mut tokens = Vec::with_capacity(seq);
+    let mut segments = Vec::with_capacity(seq);
+    tokens.push(CLS);
+    segments.push(0);
+    for &w in s1 {
+        tokens.push(w);
+        segments.push(0);
+    }
+    if let Some(s2) = s2 {
+        tokens.push(SEP);
+        segments.push(0);
+        for &w in s2 {
+            tokens.push(w);
+            segments.push(1);
+        }
+        tokens.push(SEP);
+        segments.push(1);
+    }
+    assert!(tokens.len() <= seq, "assembled {} > seq {seq}", tokens.len());
+    while tokens.len() < seq {
+        tokens.push(PAD);
+        segments.push(0);
+    }
+    (tokens, segments)
+}
+
+/// Generate one classification split.
+#[allow(clippy::too_many_arguments)]
+fn gen_cls_split(
+    world: &World,
+    rng: &mut Rng,
+    seq: usize,
+    n: usize,
+    n_classes: usize,
+    pair: bool,
+    class_sig: &[Vec<usize>],
+    purity: f64,
+    noise: f64,
+) -> Split {
+    let mut split = empty_split(seq, Labels::Class(Vec::with_capacity(n)));
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let class = rng.below(n_classes);
+        let (tokens, segments) = if pair {
+            gen_pair_example(world, rng, seq, n_classes, class, class_sig, purity)
+        } else {
+            let len = seq - 1 - rng.below(seq / 4);
+            let weights = mixture_for(&class_sig[class], world.n_topics, rng);
+            let s = world.sentence(rng, &weights, len, purity);
+            assemble(seq, &s, None)
+        };
+        let mut sink = RowSink { split: &mut split };
+        sink.push_row(tokens, segments);
+        let observed = if rng.f64() < noise { rng.below(n_classes) } else { class };
+        labels.push(observed);
+    }
+    split.labels = Labels::Class(labels);
+    split
+}
+
+/// Sentence-pair semantics:
+///   2-class: 1 = same mixture ("paraphrase"), 0 = different;
+///   3-class: 0 = same ("entail"), 1 = one shared topic ("neutral"),
+///            2 = disjoint ("contradict");
+///   ≥4-class: class = relation pattern index over shared-topic counts.
+fn gen_pair_example(
+    world: &World,
+    rng: &mut Rng,
+    seq: usize,
+    n_classes: usize,
+    class: usize,
+    class_sig: &[Vec<usize>],
+    purity: f64,
+) -> (Vec<i32>, Vec<i32>) {
+    let budget = (seq - 3) / 2;
+    let len1 = budget - rng.below(budget / 3);
+    let len2 = budget - rng.below(budget / 3);
+    let t1 = class_sig[class % class_sig.len()].clone();
+    let w1 = mixture_for(&t1, world.n_topics, rng);
+    let s1 = world.sentence(rng, &w1, len1, purity);
+    let overlap = match n_classes {
+        2 => {
+            if class == 1 {
+                2
+            } else {
+                0
+            }
+        }
+        _ => 2usize.saturating_sub(class.min(2)), // 0->2 shared, 1->1, 2+->0
+    };
+    let mut t2: Vec<usize> = t1.iter().copied().take(overlap).collect();
+    while t2.len() < 2 {
+        let c = rng.below(world.n_topics);
+        if !t1.contains(&c) && !t2.contains(&c) {
+            t2.push(c);
+        }
+    }
+    let w2 = mixture_for(&t2, world.n_topics, rng);
+    let s2 = world.sentence(rng, &w2, len2, purity);
+    assemble(seq, &s1, Some(&s2))
+}
+
+/// Regression split: target = 5 × cosine(topic hist s1, topic hist s2),
+/// computed from the *generated tokens*, so it is exactly learnable.
+fn gen_reg_split(world: &World, rng: &mut Rng, seq: usize, n: usize, purity: f64)
+                 -> Split {
+    let mut split = empty_split(seq, Labels::Score(vec![]));
+    let mut scores = Vec::with_capacity(n);
+    for _ in 0..n {
+        let budget = (seq - 3) / 2;
+        let k1 = 1 + rng.below(2);
+        let w1 = world.random_mixture(rng, k1);
+        let s1 = world.sentence(rng, &w1, budget, purity);
+        // half the time reuse (a noisy copy of) the same mixture
+        let w2 = if rng.f64() < 0.5 {
+            let mut w = w1.clone();
+            if rng.f64() < 0.5 {
+                let t = rng.below(world.n_topics);
+                w[t] += 0.7;
+            }
+            w
+        } else {
+            let k2 = 1 + rng.below(2);
+            world.random_mixture(rng, k2)
+        };
+        let s2 = world.sentence(rng, &w2, budget, purity);
+        let target =
+            5.0 * World::topic_cosine(&world.topic_histogram(&s1),
+                                      &world.topic_histogram(&s2)) as f32;
+        let (tokens, segments) = assemble(seq, &s1, Some(&s2));
+        let mut sink = RowSink { split: &mut split };
+        sink.push_row(tokens, segments);
+        scores.push(target);
+    }
+    split.labels = Labels::Score(scores);
+    split
+}
+
+/// Span split: `[CLS] q q q [SEP] context [SEP]`. The three question words
+/// come from one topic; the context embeds exactly one contiguous run of
+/// 2–4 words from that topic in a background stream; the label is the run.
+fn gen_span_split(world: &World, rng: &mut Rng, seq: usize, n: usize, _purity: f64)
+                  -> Split {
+    let mut split = empty_split(seq, Labels::Span(vec![]));
+    let mut spans = Vec::with_capacity(n);
+    for _ in 0..n {
+        let topic = rng.below(world.n_topics);
+        let tw = &world.topic_words[topic];
+        let q: Vec<i32> = (0..3).map(|_| tw[rng.below(tw.len())] as i32).collect();
+        let ctx_len = seq - 6; // CLS + 3q + 2 SEP
+        // background context that avoids the query topic
+        let mut ctx = Vec::with_capacity(ctx_len);
+        while ctx.len() < ctx_len {
+            let w = (WORD0 + rng.zipf(world.vocab - WORD0, 1.1)) as i32;
+            if world.word_topic[w as usize] != Some(topic) {
+                ctx.push(w);
+            }
+        }
+        let run = 2 + rng.below(3);
+        let start_in_ctx = rng.below(ctx_len - run);
+        for j in 0..run {
+            ctx[start_in_ctx + j] = tw[rng.below(tw.len())] as i32;
+        }
+        // assemble manually (question is segment 0, context segment 1)
+        let mut tokens = vec![CLS];
+        let mut segments = vec![0];
+        tokens.extend(&q);
+        segments.extend([0, 0, 0]);
+        tokens.push(SEP);
+        segments.push(0);
+        let ctx_offset = tokens.len();
+        tokens.extend(&ctx);
+        segments.extend(std::iter::repeat(1).take(ctx.len()));
+        tokens.push(SEP);
+        segments.push(1);
+        assert_eq!(tokens.len(), seq);
+        let mut sink = RowSink { split: &mut split };
+        sink.push_row(tokens, segments);
+        spans.push((ctx_offset + start_in_ctx, ctx_offset + start_in_ctx + run - 1));
+    }
+    split.labels = Labels::Span(spans);
+    split
+}
+
+/// Generate all splits of a task deterministically from `(world, spec)`.
+pub fn generate(world: &World, spec: &TaskSpec, seq: usize) -> TaskData {
+    let mut rng = Rng::new(world.seed ^ spec.seed.wrapping_mul(0x9E3779B97F4A7C15));
+    let gen_split = |rng: &mut Rng, n: usize, purity: f64| -> Split {
+        match &spec.kind {
+            TaskKind::Cls { n_classes, pair } => {
+                // class signatures must be shared across splits: derive from
+                // a fixed fork of the task rng
+                let mut sig_rng = Rng::new(world.seed ^ spec.seed ^ 0xC1A55);
+                let sig = class_topics(&mut sig_rng, world.n_topics, *n_classes);
+                gen_cls_split(world, rng, seq, n, *n_classes, *pair, &sig, purity,
+                              spec.noise)
+            }
+            TaskKind::Reg => gen_reg_split(world, rng, seq, n, purity),
+            TaskKind::Span => gen_span_split(world, rng, seq, n, purity),
+        }
+    };
+    let train = gen_split(&mut rng, spec.n_train, spec.purity);
+    let val = gen_split(&mut rng, spec.n_val, spec.purity);
+    let test = gen_split(&mut rng, spec.n_test, spec.purity);
+    let mut extra_eval = Vec::new();
+    if spec.name.starts_with("mnli") {
+        // MNLI-mm: same labeling function, mismatched "domain" (purity shift)
+        let mm = gen_split(&mut rng, spec.n_val, (spec.purity - 0.12).max(0.25));
+        extra_eval.push(("mnli_s_mm".to_string(), mm));
+    }
+    TaskData { spec: spec.clone(), train, val, test, extra_eval }
+}
+
+// ---------------------------------------------------------------------------
+// suites
+// ---------------------------------------------------------------------------
+
+fn cls(name: &str, n_classes: usize, pair: bool, metric: Metric, n_train: usize,
+       purity: f64, noise: f64, seed: u64) -> TaskSpec {
+    let n_eval = (n_train / 6).clamp(96, 512);
+    TaskSpec {
+        name: name.to_string(),
+        kind: TaskKind::Cls { n_classes, pair },
+        metric,
+        n_train,
+        n_val: n_eval,
+        n_test: n_eval,
+        purity,
+        noise,
+        seed,
+    }
+}
+
+/// The GLUE stand-in (Table 1; WNLI omitted as in the paper, MNLI-mm is an
+/// extra eval split of `mnli_s`).
+pub fn glue_suite() -> Vec<TaskSpec> {
+    vec![
+        cls("cola_s", 2, false, Metric::Matthews, 860, 0.34, 0.12, 101),
+        cls("sst_s", 2, false, Metric::Accuracy, 3200, 0.50, 0.06, 102),
+        cls("mrpc_s", 2, true, Metric::F1, 400, 0.48, 0.08, 103),
+        TaskSpec {
+            name: "stsb_s".into(),
+            kind: TaskKind::Reg,
+            metric: Metric::Spearman,
+            n_train: 600,
+            n_val: 192,
+            n_test: 192,
+            purity: 0.5,
+            noise: 0.0,
+            seed: 104,
+        },
+        cls("qqp_s", 2, true, Metric::F1, 3600, 0.50, 0.08, 105),
+        cls("mnli_s", 3, true, Metric::Accuracy, 3900, 0.50, 0.05, 106),
+        cls("qnli_s", 2, true, Metric::Accuracy, 1000, 0.44, 0.07, 107),
+        cls("rte_s", 2, true, Metric::Accuracy, 250, 0.40, 0.10, 108),
+    ]
+}
+
+/// The 17 additional classification tasks (Table 2). Sizes are the paper's
+/// appendix Table 3 scaled by 1/8 (cap 3000, floor 120); class counts are
+/// the paper's, capped at `max_classes` = 20 (customer-complaint's 157
+/// classes exceed the padded head; DESIGN.md §2).
+pub fn extra_suite() -> Vec<TaskSpec> {
+    let raw: &[(&str, usize, usize)] = &[
+        // (name, paper train size, classes)
+        ("news20_s", 15076, 20),
+        ("cf_airline_s", 11712, 3),
+        ("cf_corporate_s", 2494, 4),
+        ("cf_disasters_s", 8688, 2),
+        ("cf_econ_news_s", 6392, 2),
+        ("cf_emotion_s", 32000, 13),
+        ("cf_warming_s", 3380, 2),
+        ("cf_pol_audience_s", 4000, 2),
+        ("cf_pol_bias_s", 4000, 2),
+        ("cf_pol_message_s", 4000, 9),
+        ("cf_prim_emotions_s", 2019, 18),
+        ("cf_prog_opinion_s", 927, 3),
+        ("cf_prog_stance_s", 927, 4),
+        ("cf_us_econ_s", 3961, 2),
+        ("complaints_s", 146667, 20),
+        ("news_agg_s", 338349, 4),
+        ("sms_spam_s", 4459, 2),
+    ];
+    raw.iter()
+        .enumerate()
+        .map(|(i, &(name, n, c))| {
+            let n_train = (n / 8).clamp(120, 3000);
+            // deterministic per-task difficulty spread
+            let mut r = Rng::new(0xD1FF ^ i as u64);
+            let purity = 0.32 + 0.26 * r.f64();
+            let noise = 0.03 + 0.12 * r.f64();
+            let metric = Metric::Accuracy;
+            cls(name, c.min(20), false, metric, n_train, purity, noise,
+                200 + i as u64)
+        })
+        .collect()
+}
+
+/// SQuAD stand-in (Fig. 5).
+pub fn span_task() -> TaskSpec {
+    TaskSpec {
+        name: "squad_s".into(),
+        kind: TaskKind::Span,
+        metric: Metric::SpanF1,
+        n_train: 2400,
+        n_val: 384,
+        n_test: 384,
+        purity: 0.9,
+        noise: 0.0,
+        seed: 300,
+    }
+}
+
+pub fn find_spec(name: &str) -> Option<TaskSpec> {
+    glue_suite()
+        .into_iter()
+        .chain(extra_suite())
+        .chain(std::iter::once(span_task()))
+        .find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> World {
+        World::new(256, 11)
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let w = world();
+        let spec = cls("t", 3, false, Metric::Accuracy, 50, 0.5, 0.05, 1);
+        let a = generate(&w, &spec, 16);
+        let b = generate(&w, &spec, 16);
+        assert_eq!(a.train.tokens, b.train.tokens);
+        assert_eq!(a.train.labels, b.train.labels);
+        assert_eq!(a.val.tokens, b.val.tokens);
+    }
+
+    #[test]
+    fn splits_have_requested_sizes_and_shapes() {
+        let w = world();
+        let spec = cls("t", 4, true, Metric::Accuracy, 40, 0.5, 0.05, 2);
+        let d = generate(&w, &spec, 32);
+        assert_eq!(d.train.n, 40);
+        assert_eq!(d.val.n, spec.n_val);
+        assert_eq!(d.train.tokens.len(), 40 * 32);
+        assert_eq!(d.train.attn_mask.len(), 40 * 32);
+        if let Labels::Class(l) = &d.train.labels {
+            assert!(l.iter().all(|&c| c < 4));
+        } else {
+            panic!("wrong label type")
+        }
+    }
+
+    #[test]
+    fn cls_rows_start_with_cls_token() {
+        let w = world();
+        let spec = cls("t", 2, false, Metric::Accuracy, 10, 0.5, 0.0, 3);
+        let d = generate(&w, &spec, 16);
+        for i in 0..d.train.n {
+            assert_eq!(d.train.row_tokens(i)[0], CLS);
+        }
+    }
+
+    #[test]
+    fn pair_rows_use_both_segments() {
+        let w = world();
+        let spec = cls("t", 3, true, Metric::Accuracy, 10, 0.5, 0.0, 4);
+        let d = generate(&w, &spec, 32);
+        let segs = &d.train.segments[0..32];
+        assert!(segs.contains(&0) && segs.contains(&1));
+    }
+
+    #[test]
+    fn labels_are_learnable_from_topics() {
+        // a topic-histogram nearest-centroid classifier must beat chance
+        // comfortably — otherwise no tuning method could learn the task
+        let w = world();
+        let spec = cls("t", 3, false, Metric::Accuracy, 300, 0.5, 0.05, 5);
+        let d = generate(&w, &spec, 32);
+        let (train_l, val_l) = match (&d.train.labels, &d.val.labels) {
+            (Labels::Class(a), Labels::Class(b)) => (a.clone(), b.clone()),
+            _ => panic!(),
+        };
+        let mut centroids = vec![vec![0.0; w.n_topics]; 3];
+        let mut counts = [0usize; 3];
+        for i in 0..d.train.n {
+            let h = w.topic_histogram(d.train.row_tokens(i));
+            for (c, x) in centroids[train_l[i]].iter_mut().zip(&h) {
+                *c += x;
+            }
+            counts[train_l[i]] += 1;
+        }
+        for (c, n) in centroids.iter_mut().zip(counts) {
+            for x in c.iter_mut() {
+                *x /= n.max(1) as f64;
+            }
+        }
+        let mut hits = 0;
+        for i in 0..d.val.n {
+            let h = w.topic_histogram(d.val.row_tokens(i));
+            let pred = (0..3)
+                .max_by(|&a, &b| {
+                    World::topic_cosine(&centroids[a], &h)
+                        .partial_cmp(&World::topic_cosine(&centroids[b], &h))
+                        .unwrap()
+                })
+                .unwrap();
+            if pred == val_l[i] {
+                hits += 1;
+            }
+        }
+        let acc = hits as f64 / d.val.n as f64;
+        assert!(acc > 0.6, "nearest-centroid acc {acc} — task not learnable");
+    }
+
+    #[test]
+    fn reg_targets_in_range_and_varied() {
+        let w = world();
+        let spec = TaskSpec {
+            name: "r".into(),
+            kind: TaskKind::Reg,
+            metric: Metric::Spearman,
+            n_train: 100,
+            n_val: 50,
+            n_test: 50,
+            purity: 0.5,
+            noise: 0.0,
+            seed: 6,
+        };
+        let d = generate(&w, &spec, 32);
+        if let Labels::Score(s) = &d.train.labels {
+            assert!(s.iter().all(|&x| (0.0..=5.0 + 1e-5).contains(&x)));
+            let spread = s.iter().cloned().fold(f32::MIN, f32::max)
+                - s.iter().cloned().fold(f32::MAX, f32::min);
+            assert!(spread > 1.0, "targets too flat: spread {spread}");
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn span_labels_point_at_topic_runs() {
+        let w = world();
+        let spec = span_task();
+        let mut spec = spec;
+        spec.n_train = 30;
+        spec.n_val = 10;
+        spec.n_test = 10;
+        let d = generate(&w, &spec, 64);
+        if let Labels::Span(spans) = &d.train.labels {
+            for (i, &(s, e)) in spans.iter().enumerate() {
+                assert!(s <= e && e < 64);
+                let row = d.train.row_tokens(i);
+                // the labeled span's words share the question's topic
+                let q_topic = w.word_topic[row[1] as usize].unwrap();
+                for &tok in &row[s..=e] {
+                    assert_eq!(w.word_topic[tok as usize], Some(q_topic));
+                }
+            }
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn mnli_gets_mm_split() {
+        let w = world();
+        let spec = glue_suite().into_iter().find(|s| s.name == "mnli_s").unwrap();
+        let mut small = spec.clone();
+        small.n_train = 30;
+        small.n_val = 20;
+        small.n_test = 20;
+        let d = generate(&w, &small, 32);
+        assert_eq!(d.extra_eval.len(), 1);
+        assert_eq!(d.extra_eval[0].0, "mnli_s_mm");
+        assert_eq!(d.extra_eval[0].1.n, 20);
+    }
+
+    #[test]
+    fn suites_have_paper_counts() {
+        assert_eq!(glue_suite().len(), 8); // 9 GLUE tasks with MNLI-m/mm shared
+        assert_eq!(extra_suite().len(), 17);
+        let names: std::collections::HashSet<_> =
+            glue_suite().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names.len(), 8);
+    }
+
+    #[test]
+    fn find_spec_resolves_names() {
+        assert!(find_spec("cola_s").is_some());
+        assert!(find_spec("squad_s").is_some());
+        assert!(find_spec("nope").is_none());
+    }
+}

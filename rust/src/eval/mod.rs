@@ -1,0 +1,290 @@
+//! Evaluation: run a trained bank over a split and score it with the
+//! task's paper metric (accuracy / F1 / Matthews / Spearman / span EM-F1).
+//!
+//! Serving-layout evaluation: the trained bank is re-wired into the
+//! `*_fwd_*` signature (`model::params::merge_base_for_fwd`) exactly the
+//! way the coordinator's server does it, so evaluation exercises the same
+//! path requests take.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::batcher::eval_batches;
+use crate::data::tasks::{Labels, Metric, Split};
+use crate::model::params::NamedTensors;
+use crate::runtime::{Bank, Runtime};
+use crate::util::stats;
+use crate::util::tensor::Tensor;
+
+/// A trained task model in store form: the trained bank plus how it was
+/// produced (which decides the fwd artifact and base merging).
+#[derive(Debug, Clone)]
+pub struct TaskModel {
+    /// adapter | topk | lnonly
+    pub variant: String,
+    /// adapter size (adapter variants)
+    pub m: Option<usize>,
+    /// top-k depth (topk variants)
+    pub k: Option<usize>,
+    /// artifact kind: cls | reg | span
+    pub kind: String,
+    pub trained: NamedTensors,
+}
+
+impl TaskModel {
+    /// Name of the fwd executable that serves this model.
+    pub fn fwd_name(&self) -> String {
+        match self.variant.as_str() {
+            "adapter" => format!("{}_fwd_adapter_m{}", self.kind, self.m.unwrap()),
+            // topk / lnonly merge into the plain base graph
+            _ => format!("{}_fwd_base", self.kind),
+        }
+    }
+
+    /// Trained parameters per task *excluding the classifier head* — the
+    /// paper's "trained params / task" convention (both methods add a head).
+    pub fn trained_param_count_no_head(&self) -> usize {
+        self.trained
+            .map
+            .iter()
+            .filter(|(k, _)| !k.starts_with("head/"))
+            .map(|(_, t)| t.len())
+            .sum()
+    }
+
+    pub fn trained_param_count(&self) -> usize {
+        self.trained.param_count()
+    }
+}
+
+/// Build the input banks for this model's fwd executable.
+///
+/// `gates` (adapter variant only): per-(layer, position) multiplier for the
+/// Fig. 6 ablation; `None` = all ones.
+pub fn fwd_param_banks(
+    rt: &Arc<Runtime>,
+    model: &TaskModel,
+    pretrained_base: &NamedTensors,
+    gates: Option<&[f32]>,
+) -> Result<Vec<Bank>> {
+    let fwd = model.fwd_name();
+    let spec = rt.manifest.exe(&fwd)?.clone();
+    let n_layers = rt.manifest.dims.n_layers;
+    let base = crate::model::params::merge_base_for_fwd(
+        pretrained_base,
+        &model.trained,
+        &model.variant,
+        model.k,
+        n_layers,
+    )?;
+    let mut banks = vec![base.to_bank(&spec, "base")?];
+    if model.variant == "adapter" {
+        let adapters = model.trained.strip_prefix("adapters");
+        banks.push(adapters.to_bank(&spec, "adapters")?);
+        banks.push(model.trained.strip_prefix("head").to_bank(&spec, "head")?);
+        let g = match gates {
+            Some(g) => {
+                if g.len() != n_layers * 2 {
+                    bail!("gates must be n_layers*2 = {}", n_layers * 2);
+                }
+                g.to_vec()
+            }
+            None => vec![1.0; n_layers * 2],
+        };
+        banks.push(vec![Tensor::f32(vec![n_layers, 2], g)]);
+    } else {
+        banks.push(model.trained.strip_prefix("head").to_bank(&spec, "head")?);
+    }
+    Ok(banks)
+}
+
+/// Raw forward predictions over a split, in row order.
+#[derive(Debug, Clone)]
+pub enum Predictions {
+    Class(Vec<usize>),
+    Score(Vec<f32>),
+    Span(Vec<(usize, usize)>),
+}
+
+pub fn predict_split(
+    rt: &Arc<Runtime>,
+    model: &TaskModel,
+    pretrained_base: &NamedTensors,
+    split: &Split,
+    n_classes: usize,
+    gates: Option<&[f32]>,
+) -> Result<Predictions> {
+    let fwd = model.fwd_name();
+    let exe = rt.load(&fwd)?;
+    let batch_size = exe.spec.batch;
+    let param_banks = fwd_param_banks(rt, model, pretrained_base, gates)?;
+    let mut preds_cls = Vec::new();
+    let mut preds_score = Vec::new();
+    let mut preds_span = Vec::new();
+    for b in eval_batches(split, batch_size) {
+        let (tok, seg, mask) = b.to_fwd_banks();
+        let mut banks: Vec<&Bank> = param_banks.iter().collect();
+        banks.push(&tok);
+        banks.push(&seg);
+        banks.push(&mask);
+        let out = exe.run(&banks).context("fwd execution")?;
+        match model.kind.as_str() {
+            "cls" => {
+                let logits = &out[0][0]; // [B, max_classes]
+                let c = logits.shape[1];
+                for row in 0..b.real_rows {
+                    let r = &logits.as_f32()[row * c..(row + 1) * c];
+                    let pred = r[..n_classes]
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    preds_cls.push(pred);
+                }
+            }
+            "reg" => {
+                let p = &out[0][0]; // [B]
+                preds_score.extend_from_slice(&p.as_f32()[..b.real_rows]);
+            }
+            "span" => {
+                let start = &out[0][0]; // [B, S]
+                let end = &out[1][0];
+                let s = start.shape[1];
+                for row in 0..b.real_rows {
+                    let rs = &start.as_f32()[row * s..(row + 1) * s];
+                    let re = &end.as_f32()[row * s..(row + 1) * s];
+                    let ps = argmax(rs);
+                    let pe = argmax(re);
+                    preds_span.push((ps, pe));
+                }
+            }
+            other => bail!("unknown kind {other}"),
+        }
+    }
+    Ok(match model.kind.as_str() {
+        "cls" => Predictions::Class(preds_cls),
+        "reg" => Predictions::Score(preds_score),
+        _ => Predictions::Span(preds_span),
+    })
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+/// Score predictions against a split's labels with `metric`.
+pub fn score(preds: &Predictions, labels: &Labels, metric: Metric) -> Result<f64> {
+    Ok(match (preds, labels, metric) {
+        (Predictions::Class(p), Labels::Class(t), Metric::Accuracy) => {
+            stats::accuracy(p, t)
+        }
+        (Predictions::Class(p), Labels::Class(t), Metric::F1) => {
+            stats::f1_binary(p, t, 1)
+        }
+        (Predictions::Class(p), Labels::Class(t), Metric::Matthews) => {
+            stats::matthews(p, t)
+        }
+        (Predictions::Score(p), Labels::Score(t), Metric::Spearman) => {
+            let p64: Vec<f64> = p.iter().map(|&x| x as f64).collect();
+            let t64: Vec<f64> = t.iter().map(|&x| x as f64).collect();
+            stats::spearman(&p64, &t64)
+        }
+        (Predictions::Span(p), Labels::Span(t), Metric::SpanF1) => {
+            stats::span_em_f1(p, t).1
+        }
+        (Predictions::Span(p), Labels::Span(t), Metric::Accuracy) => {
+            stats::span_em_f1(p, t).0
+        }
+        _ => bail!("metric {metric:?} incompatible with prediction/label kinds"),
+    })
+}
+
+/// Convenience: predict + score in one call.
+pub fn evaluate(
+    rt: &Arc<Runtime>,
+    model: &TaskModel,
+    pretrained_base: &NamedTensors,
+    split: &Split,
+    n_classes: usize,
+    metric: Metric,
+) -> Result<f64> {
+    let preds = predict_split(rt, model, pretrained_base, split, n_classes, None)?;
+    score(&preds, &split.labels, metric)
+}
+
+/// Evaluate with an adapter ablation gate vector (Fig. 6 left/center).
+pub fn evaluate_with_gates(
+    rt: &Arc<Runtime>,
+    model: &TaskModel,
+    pretrained_base: &NamedTensors,
+    split: &Split,
+    n_classes: usize,
+    metric: Metric,
+    gates: &[f32],
+) -> Result<f64> {
+    let preds =
+        predict_split(rt, model, pretrained_base, split, n_classes, Some(gates))?;
+    score(&preds, &split.labels, metric)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_accuracy_and_f1() {
+        let p = Predictions::Class(vec![1, 0, 1, 1]);
+        let l = Labels::Class(vec![1, 0, 0, 1]);
+        assert_eq!(score(&p, &l, Metric::Accuracy).unwrap(), 0.75);
+        assert!(score(&p, &l, Metric::F1).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn score_rejects_mismatch() {
+        let p = Predictions::Class(vec![1]);
+        let l = Labels::Score(vec![1.0]);
+        assert!(score(&p, &l, Metric::Accuracy).is_err());
+    }
+
+    #[test]
+    fn fwd_name_by_variant() {
+        let m = TaskModel {
+            variant: "adapter".into(),
+            m: Some(8),
+            k: None,
+            kind: "cls".into(),
+            trained: Default::default(),
+        };
+        assert_eq!(m.fwd_name(), "cls_fwd_adapter_m8");
+        let t = TaskModel {
+            variant: "topk".into(),
+            m: None,
+            k: Some(2),
+            kind: "span".into(),
+            trained: Default::default(),
+        };
+        assert_eq!(t.fwd_name(), "span_fwd_base");
+    }
+
+    #[test]
+    fn param_count_excludes_head() {
+        let mut trained = NamedTensors::default();
+        trained.insert("adapters/x", Tensor::f32(vec![4], vec![0.0; 4]));
+        trained.insert("head/w", Tensor::f32(vec![10], vec![0.0; 10]));
+        let m = TaskModel {
+            variant: "adapter".into(),
+            m: Some(8),
+            k: None,
+            kind: "cls".into(),
+            trained,
+        };
+        assert_eq!(m.trained_param_count(), 14);
+        assert_eq!(m.trained_param_count_no_head(), 4);
+    }
+}

@@ -1,0 +1,31 @@
+//! adapterbert: reproduction of "Parameter-Efficient Transfer Learning for
+//! NLP" (Houlsby et al., ICML 2019) as a three-layer Rust + JAX + Pallas
+//! system. See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+//!
+//! Layer map:
+//!   * `runtime`   — PJRT loader/executor for the AOT HLO-text artifacts
+//!   * `model`     — parameter banks, partitions, initializers
+//!   * `data`      — synthetic corpus + task suites (paper's 26 datasets)
+//!   * `tokenizer` — text ↔ ids for the serving path
+//!   * `train`     — training loops and hyper-parameter sweeps (paper §3.1)
+//!   * `coordinator` — the cloud-service layer: task stream, router,
+//!     batcher, server (paper §1's motivating setting)
+//!   * `store`     — versioned adapter banks + checkpoints
+//!   * `baseline`  — the no-BERT baseline searcher (Table 2, col. 1)
+//!   * `eval`      — task metrics and GLUE-style aggregation
+//!   * `report`    — table/figure emitters (stdout + CSV)
+//!   * `util`      — dependency-free substrates (json/rng/stats/tensor)
+
+pub mod baseline;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod store;
+pub mod tokenizer;
+pub mod train;
+pub mod util;

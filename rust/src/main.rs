@@ -1,0 +1,424 @@
+//! adapterbert CLI — the leader entrypoint.
+//!
+//! Subcommands (clap is unavailable offline; a small hand-rolled parser):
+//!
+//! ```text
+//! adapterbert pretrain  [--preset P] [--steps N] [--seed S]
+//! adapterbert train     --task NAME [--method adapter|finetune|topk:K|lnonly]
+//!                       [--m M] [--lr LR] [--epochs E] [--seed S]
+//! adapterbert stream    [--tasks a,b,c] [--store DIR]
+//! adapterbert serve     [--requests N] [--max-batch B] [--executors E]
+//! adapterbert baseline  --task NAME [--budget N]
+//! adapterbert bench     <table1|table2|fig3|fig3x|fig4|fig5|fig6|fig7|sizes|
+//!                        params|all> [--full]
+//! adapterbert list-tasks
+//! ```
+//!
+//! Everything runs from AOT artifacts (`make artifacts`); python is never
+//! on this path.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use adapterbert::bench::{figures, tables, Ctx};
+use adapterbert::coordinator::{Server, ServerConfig, StreamConfig, TaskStream};
+use adapterbert::data::grammar::World;
+use adapterbert::data::tasks::{self, TaskKind};
+use adapterbert::eval::evaluate;
+use adapterbert::runtime::Runtime;
+use adapterbert::store::AdapterStore;
+use adapterbert::tokenizer::Tokenizer;
+use adapterbert::train::{self, PretrainConfig, TrainConfig};
+
+/// Minimal flag parser: `--key value` and bare positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "pretrain" => cmd_pretrain(&args),
+        "train" => cmd_train(&args),
+        "stream" => cmd_stream(&args),
+        "serve" => cmd_serve(&args),
+        "baseline" => cmd_baseline(&args),
+        "bench" => cmd_bench(&args),
+        "list-tasks" => cmd_list_tasks(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `adapterbert help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "adapterbert — Houlsby et al. (ICML 2019) adapter-BERT reproduction\n\
+         \n\
+         commands:\n\
+         \x20 pretrain   MLM-pretrain the shared MiniBERT base\n\
+         \x20 train      tune one task (adapter/finetune/topk:K/lnonly)\n\
+         \x20 stream     online task stream with no-forgetting checks\n\
+         \x20 serve      multi-task serving demo with latency metrics\n\
+         \x20 baseline   no-BERT baseline search for one task\n\
+         \x20 bench      regenerate paper tables/figures (see DESIGN.md §6)\n\
+         \x20 list-tasks show the synthetic task suites\n\
+         \n\
+         common flags: --preset default|test  --full (bench)"
+    );
+}
+
+fn open_runtime(args: &Args) -> Result<(Arc<Runtime>, World)> {
+    let preset = args.get_or("preset", "default");
+    let rt = Arc::new(Runtime::open(Path::new("artifacts"), &preset)?);
+    let world = World::new(rt.manifest.dims.vocab, 0);
+    Ok((rt, world))
+}
+
+fn load_base(
+    rt: &Arc<Runtime>,
+    world: &World,
+    args: &Args,
+) -> Result<adapterbert::model::params::NamedTensors> {
+    let preset = args.get_or("preset", "default");
+    let steps =
+        args.parse_num("pretrain-steps", if preset == "test" { 120 } else { 800 })?;
+    train::load_or_pretrain(
+        rt,
+        world,
+        &PretrainConfig { steps, ..Default::default() },
+        Path::new(&format!("runs/base_{preset}.bank")),
+    )
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let (rt, world) = open_runtime(args)?;
+    let cfg = PretrainConfig {
+        steps: args.parse_num("steps", 800)?,
+        lr: args.parse_num("lr", 1e-3)?,
+        seed: args.parse_num("seed", 0u64)?,
+        ..Default::default()
+    };
+    let res = train::pretrain(&rt, &world, &cfg)?;
+    println!(
+        "mlm loss {:.3} → {:.3} over {} steps",
+        res.initial_loss, res.final_loss, cfg.steps
+    );
+    let preset = args.get_or("preset", "default");
+    let path = format!("runs/base_{preset}.bank");
+    train::pretrain::save_base(&res.base, Path::new(&path))?;
+    println!("saved {path}");
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (rt, world) = open_runtime(args)?;
+    let base = load_base(&rt, &world, args)?;
+    let task = args.get("task").context("--task required")?;
+    let spec = tasks::find_spec(task)
+        .with_context(|| format!("unknown task {task:?} (see list-tasks)"))?;
+    let data = tasks::generate(&world, &spec, rt.manifest.dims.seq);
+    let kind = spec.kind.artifact_kind();
+    let method = args.get_or("method", "adapter");
+    let exe = match method.as_str() {
+        "adapter" => format!("{kind}_train_adapter_m{}", args.get_or("m", "16")),
+        "finetune" => format!("{kind}_train_topk_k{}", rt.manifest.dims.n_layers),
+        "lnonly" => format!("{kind}_train_lnonly"),
+        m if m.starts_with("topk:") => {
+            format!("{kind}_train_topk_k{}", &m[5..])
+        }
+        other => bail!("unknown --method {other}"),
+    };
+    let default_lr = if method == "adapter" { 1e-3 } else { 1e-4 };
+    let mut cfg = TrainConfig::new(
+        &exe,
+        args.parse_num("lr", default_lr)?,
+        args.parse_num("epochs", 6usize)?,
+        args.parse_num("seed", 0u64)?,
+    );
+    cfg.adapter_std = args.parse_num("std", 1e-2)?;
+    println!("training {} on {} ({} examples)", exe, task, data.train.n);
+    let res = train::train_task(&rt, &cfg, &data, &base)?;
+    for (ep, loss, val) in &res.history {
+        println!("  epoch {ep:2}  loss {loss:.4}  val {val:.3}");
+    }
+    let n_classes = match &spec.kind {
+        TaskKind::Cls { n_classes, .. } => *n_classes,
+        _ => 0,
+    };
+    let test = evaluate(&rt, &res.model, &base, &data.test, n_classes, spec.metric)?;
+    println!(
+        "val {:.3} | test {} = {:.3} | trained params (no head) = {}",
+        res.val_score,
+        spec.metric.name(),
+        test,
+        res.model.trained_param_count_no_head()
+    );
+    if let Some(dir) = args.get("store") {
+        let store = AdapterStore::at(Path::new(dir))?;
+        let meta = store.register(task, &res.model, res.val_score)?;
+        println!("registered {}/v{:03} in {dir}", task, meta.version);
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    let (rt, world) = open_runtime(args)?;
+    let base = load_base(&rt, &world, args)?;
+    let store = match args.get("store") {
+        Some(dir) => Arc::new(AdapterStore::at(Path::new(dir))?),
+        None => Arc::new(AdapterStore::in_memory()),
+    };
+    let task_list = args.get_or("tasks", "rte_s,mrpc_s,cola_s,qnli_s");
+    let specs: Vec<_> = task_list
+        .split(',')
+        .map(|n| tasks::find_spec(n.trim()).with_context(|| format!("task {n:?}")))
+        .collect::<Result<_>>()?;
+    let cfg = StreamConfig::default();
+    let mut stream = TaskStream::new(rt.clone(), base, store, world, cfg);
+    let report = stream.run(&specs)?;
+    for a in &report.arrivals {
+        println!(
+            "task {:12} val {:.3} test {:.3} via {} ({} params)",
+            a.task, a.val_score, a.test_score, a.chosen_exe,
+            a.trained_params_no_head
+        );
+        for (old, was, now) in &a.memory_checks {
+            let ok = if (was - now).abs() < 1e-12 { "✓" } else { "✗ FORGOT" };
+            println!("    memory {old}: {was:.3} → {now:.3} {ok}");
+        }
+    }
+    println!(
+        "total params for {} tasks: {:.3}× base (fine-tuning would be {}×); \
+         forgetting: {}",
+        report.arrivals.len(),
+        report.total_params_ratio,
+        report.arrivals.len(),
+        report.forgetting_detected
+    );
+    anyhow::ensure!(
+        !report.forgetting_detected,
+        "continual-learning invariant broken"
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use adapterbert::coordinator::server::Request;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    let (rt, world) = open_runtime(args)?;
+    let base = load_base(&rt, &world, args)?;
+    let store = Arc::new(AdapterStore::in_memory());
+
+    // train a couple of tasks quickly so there is something to serve
+    let serve_tasks = ["rte_s", "mrpc_s"];
+    let mut task_classes = BTreeMap::new();
+    for name in serve_tasks {
+        let spec = tasks::find_spec(name).unwrap();
+        let data = tasks::generate(&world, &spec, rt.manifest.dims.seq);
+        let cfg = TrainConfig::new("cls_train_adapter_m8", 1e-3, 4, 0);
+        let res = train::train_task(&rt, &cfg, &data, &base)?;
+        store.register(name, &res.model, res.val_score)?;
+        if let TaskKind::Cls { n_classes, .. } = spec.kind {
+            task_classes.insert(name.to_string(), n_classes);
+        }
+        println!("serving task {name} (val {:.3})", res.val_score);
+    }
+
+    let mut scfg = ServerConfig::default();
+    scfg.flush.max_batch = args.parse_num("max-batch", rt.manifest.batch)?;
+    scfg.executors = args.parse_num("executors", 1usize)?;
+    let server = Server::start(rt.clone(), &store, &base, &task_classes, scfg)?;
+
+    // synthetic clients sending text through the tokenizer
+    let n_requests: usize = args.parse_num("requests", 256)?;
+    let tok = Tokenizer::new(rt.manifest.dims.vocab);
+    let seq = rt.manifest.dims.seq;
+    let mut rng = adapterbert::util::rng::Rng::new(7);
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let task = serve_tasks[i % serve_tasks.len()];
+        let words: Vec<String> = (0..20)
+            .map(|_| tok.word(4 + rng.below(400) as i32).to_string())
+            .collect();
+        let (tokens, mask) = tok.encode_for_cls(&words.join(" "), seq);
+        server.submit_blocking(Request {
+            task: task.to_string(),
+            tokens,
+            segments: vec![0; seq],
+            attn_mask: mask,
+            reply: reply_tx.clone(),
+            submitted: Instant::now(),
+        })?;
+    }
+    drop(reply_tx);
+    let mut got = 0usize;
+    while reply_rx.recv().is_ok() {
+        got += 1;
+        if got == n_requests {
+            break;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = server.shutdown();
+    println!(
+        "served {got} requests in {wall:.2}s → {:.1} req/s | latency {} | \
+         mean batch occupancy {:.2}",
+        got as f64 / wall,
+        metrics.latencies.summary(1.0),
+        metrics.mean_occupancy()
+    );
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let (rt, world) = open_runtime(args)?;
+    let base = load_base(&rt, &world, args)?;
+    let task = args.get("task").context("--task required")?;
+    let spec = tasks::find_spec(task).context("unknown task")?;
+    let data = tasks::generate(&world, &spec, rt.manifest.dims.seq);
+    let n_classes = match &spec.kind {
+        TaskKind::Cls { n_classes, .. } => *n_classes,
+        _ => bail!("baseline supports classification tasks"),
+    };
+    let budget = args.parse_num("budget", 24usize)?;
+    let out =
+        adapterbert::baseline::run_baseline(&rt, &base, &data, budget, n_classes)?;
+    println!(
+        "explored {} models; best {:?} lr={} l2={} → val {:.3} test {:.3}",
+        out.explored, out.best.hidden, out.best.lr, out.best.l2, out.val_acc,
+        out.test_acc
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let quick = !args.flags.contains_key("full");
+    let preset = args.get_or("preset", "default");
+    let ctx = Ctx::open(&preset, quick)?;
+    let t0 = std::time::Instant::now();
+    let run = |name: &str, ctx: &Ctx| -> Result<()> {
+        println!("\n########## bench {name} (quick={}) ##########", ctx.quick);
+        let t = std::time::Instant::now();
+        match name {
+            "table1" => tables::table1(ctx)?,
+            "table2" => tables::table2(ctx)?,
+            "params" => tables::audit_params(ctx)?,
+            "fig3" => figures::fig1_fig3(ctx)?,
+            "fig3x" => figures::fig3_extra(ctx)?,
+            "fig4" => figures::fig4(ctx)?,
+            "fig5" => figures::fig5(ctx)?,
+            "fig6" => {
+                figures::fig6_heatmap(ctx)?;
+                figures::fig6_init(ctx)?;
+            }
+            "fig7" => figures::fig7(ctx)?,
+            "sizes" => figures::size_robustness(ctx)?,
+            other => bail!("unknown bench {other:?}"),
+        }
+        println!("[bench {name}] done in {:.1}s", t.elapsed().as_secs_f64());
+        Ok(())
+    };
+    if what == "all" {
+        for name in ["params", "table1", "fig6", "fig4", "fig5", "fig7", "fig3",
+                     "sizes", "fig3x", "table2"]
+        {
+            run(name, &ctx)?;
+        }
+    } else {
+        run(what, &ctx)?;
+    }
+    println!("\nall requested benches done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_list_tasks() -> Result<()> {
+    println!("GLUE stand-in suite:");
+    for s in tasks::glue_suite() {
+        println!(
+            "  {:12} {:38} train {:5}  metric {}",
+            s.name,
+            format!("{:?}", s.kind),
+            s.n_train,
+            s.metric.name()
+        );
+    }
+    println!("additional suite:");
+    for s in tasks::extra_suite() {
+        println!(
+            "  {:20} {:30} train {:5}",
+            s.name,
+            format!("{:?}", s.kind),
+            s.n_train
+        );
+    }
+    let s = tasks::span_task();
+    println!(
+        "span task:\n  {:12} train {:5}  metric {}",
+        s.name, s.n_train, s.metric.name()
+    );
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Task-side initializers (Rust owns these so Fig. 6-right can sweep σ).
+//!
+//! Rules mirror `python/compile/model.py`:
+//!   * adapter projections (`w_down`/`w_up`): trunc-normal(σ), σ = 1e-2 by
+//!     default (paper §3.6), truncated at 2σ;
+//!   * dense weights / embeddings: trunc-normal(0.02) — only used when
+//!     initializing a base from scratch (pre-training start);
+//!   * LayerNorm gains → 1, everything bias-like → 0;
+//!   * task heads: trunc-normal(0.02) weights, zero bias.
+
+use anyhow::Result;
+
+use super::params::{group_leaves, NamedTensors};
+use crate::runtime::manifest::ExeSpec;
+use crate::util::rng::Rng;
+use crate::util::tensor::{DType, Tensor};
+
+/// What kind of value a leaf holds, decided from its relpath.
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+pub enum LeafRole {
+    LnGain,
+    Bias,
+    AdapterProj,
+    Dense,
+}
+
+pub fn leaf_role(rel: &str) -> LeafRole {
+    let last = rel.rsplit('/').next().unwrap_or(rel);
+    if last.ends_with("ln1_g") || last.ends_with("ln2_g") || last.ends_with("embed_ln_g")
+    {
+        return LeafRole::LnGain;
+    }
+    if last == "w_down" || last == "w_up" {
+        return LeafRole::AdapterProj;
+    }
+    if last.starts_with('b') || last.ends_with("_b") || last == "mlm_bias" {
+        return LeafRole::Bias;
+    }
+    LeafRole::Dense
+}
+
+fn init_tensor(shape: &[usize], dtype: DType, role: LeafRole, rng: &mut Rng,
+               adapter_std: f64) -> Tensor {
+    assert_eq!(dtype, DType::F32, "parameters are f32");
+    let n: usize = shape.iter().product();
+    let data = match role {
+        LeafRole::LnGain => vec![1.0f32; n],
+        LeafRole::Bias => vec![0.0f32; n],
+        LeafRole::AdapterProj => rng.trunc_normal_vec(n, adapter_std),
+        LeafRole::Dense => rng.trunc_normal_vec(n, 0.02),
+    };
+    Tensor::f32(shape.to_vec(), data)
+}
+
+/// Initialize every leaf of one input group by role. Used for:
+///   * a fresh base (`pretrain_step` group "base"),
+///   * the task-new parts of a trained bank (adapters + head); base-derived
+///     parts (base_ln / base_top) are copied from the pretrained base by
+///     `params::split_base_for_train` and overlay these.
+pub fn init_group(
+    spec: &ExeSpec,
+    group: &str,
+    seed: u64,
+    adapter_std: f64,
+) -> Result<NamedTensors> {
+    let mut rng = Rng::new(seed);
+    let mut out = NamedTensors::default();
+    for leaf in group_leaves(spec, group)? {
+        let rel = leaf
+            .name
+            .strip_prefix(group)
+            .and_then(|r| r.strip_prefix('/'))
+            .unwrap_or(&leaf.name);
+        let role = leaf_role(rel);
+        out.insert(rel, init_tensor(&leaf.shape, leaf.dtype, role, &mut rng,
+                                    adapter_std));
+    }
+    Ok(out)
+}
+
+/// Trained-bank init for a task: adapters (σ-swept) + head random, the
+/// base-derived subtrees (`base_ln`/`base_top`) copied from the pretrained
+/// base.
+pub fn init_trained(
+    spec: &ExeSpec,
+    pretrained_base: &NamedTensors,
+    n_layers: usize,
+    seed: u64,
+    adapter_std: f64,
+) -> Result<(NamedTensors, NamedTensors)> {
+    let (frozen, from_base) =
+        super::params::split_base_for_train(pretrained_base, spec, n_layers)?;
+    let fresh = init_group(spec, "trained", seed, adapter_std)?;
+    // base-derived values overlay the fresh random ones
+    let trained = fresh.overlaid(&from_base);
+    Ok((frozen, trained))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roles_from_paths() {
+        assert_eq!(leaf_role("adapters/layers/0/attn/w_down"), LeafRole::AdapterProj);
+        assert_eq!(leaf_role("adapters/layers/0/ffn/b_up"), LeafRole::Bias);
+        assert_eq!(leaf_role("base_ln/layers/3/ln1_g"), LeafRole::LnGain);
+        assert_eq!(leaf_role("base_ln/layers/3/ln2_b"), LeafRole::Bias);
+        assert_eq!(leaf_role("base_ln/embed_ln_g"), LeafRole::LnGain);
+        assert_eq!(leaf_role("head/w"), LeafRole::Dense);
+        assert_eq!(leaf_role("head/b"), LeafRole::Bias);
+        assert_eq!(leaf_role("layers/0/wq"), LeafRole::Dense);
+        assert_eq!(leaf_role("layers/0/bq"), LeafRole::Bias);
+        assert_eq!(leaf_role("mlm_bias"), LeafRole::Bias);
+        assert_eq!(leaf_role("tok_embed"), LeafRole::Dense);
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let a = init_tensor(&[4, 4], DType::F32, LeafRole::AdapterProj, &mut r1, 0.01);
+        let b = init_tensor(&[4, 4], DType::F32, LeafRole::AdapterProj, &mut r2, 0.01);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn adapter_std_is_respected() {
+        let mut rng = Rng::new(1);
+        let t = init_tensor(&[100, 100], DType::F32, LeafRole::AdapterProj, &mut rng,
+                            1e-3);
+        let max = t.as_f32().iter().fold(0f32, |m, x| m.max(x.abs()));
+        assert!(max <= 2e-3 + 1e-9);
+        assert!(max > 1e-4); // not all zeros
+    }
+}

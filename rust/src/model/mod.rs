@@ -1,0 +1,6 @@
+//! Parameter-bank plumbing: named tensors, signature-driven packing,
+//! split/merge between training and serving layouts, and task-side
+//! initializers (σ-sweepable for the Fig. 6 init ablation).
+
+pub mod init;
+pub mod params;

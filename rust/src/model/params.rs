@@ -1,0 +1,408 @@
+//! Named parameter sets and the bank↔bank rewiring between executables.
+//!
+//! Manifest leaf names are slash paths with the group as the first segment
+//! (`trained/adapters/layers/0/attn/w_down`). A [`NamedTensors`] is a
+//! group-stripped map `relpath → Tensor`; it converts to/from positional
+//! banks against any executable's signature, which is how one task's
+//! trained bank (produced by `*_train_*`) is re-wired into the differently
+//! shaped `*_fwd_*` inputs:
+//!
+//!   * adapter/lnonly variants: trained `base_ln/<rel>` overlays the
+//!     pretrained base at `<rel>` (the paper's per-task LayerNorms);
+//!   * topk variants: trained `base_top/layers/j/<rest>` maps to base
+//!     `layers/{L-k+j}/<rest>` (python re-indexes the top slice from 0),
+//!     and when k = L the embedding tables come along (full fine-tuning).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ExeSpec, LeafSpec};
+use crate::runtime::Bank;
+use crate::util::tensor::Tensor;
+
+/// Group-stripped `relpath → Tensor` map.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NamedTensors {
+    pub map: BTreeMap<String, Tensor>,
+}
+
+impl NamedTensors {
+    /// Build from a positional bank for `group` of `spec`.
+    pub fn from_bank(spec: &ExeSpec, group: &str, bank: &Bank) -> Result<Self> {
+        let range = spec.input_group_range(group)?;
+        let leaves = &spec.inputs[range];
+        if leaves.len() != bank.len() {
+            bail!(
+                "{}: group {group:?} expects {} tensors, got {}",
+                spec.name,
+                leaves.len(),
+                bank.len()
+            );
+        }
+        let mut map = BTreeMap::new();
+        for (leaf, t) in leaves.iter().zip(bank) {
+            map.insert(strip_group(&leaf.name, group)?.to_string(), t.clone());
+        }
+        Ok(NamedTensors { map })
+    }
+
+    /// Same, but from an *output* bank (groups `out0`, `out1`, …). Output
+    /// leaf paths mirror the input tree of the returned value, so a train
+    /// step's `out0` (new trained params) aligns with the `trained` input.
+    pub fn from_output_bank(spec: &ExeSpec, group: &str, bank: &Bank) -> Result<Self> {
+        let range = spec.output_group_range(group)?;
+        let leaves = &spec.outputs[range];
+        if leaves.len() != bank.len() {
+            bail!(
+                "{}: output group {group:?} expects {} tensors, got {}",
+                spec.name,
+                leaves.len(),
+                bank.len()
+            );
+        }
+        let mut map = BTreeMap::new();
+        for (leaf, t) in leaves.iter().zip(bank) {
+            // drop "out/<idx>/" prefix -> relpath within the tuple element
+            let rel = leaf
+                .name
+                .splitn(3, '/')
+                .nth(2)
+                .unwrap_or("")
+                .to_string();
+            map.insert(rel, t.clone());
+        }
+        Ok(NamedTensors { map })
+    }
+
+    /// Positional bank for `group` of `spec`, ordered by its signature.
+    pub fn to_bank(&self, spec: &ExeSpec, group: &str) -> Result<Bank> {
+        let range = spec.input_group_range(group)?;
+        let leaves = &spec.inputs[range];
+        let mut out = Vec::with_capacity(leaves.len());
+        for leaf in leaves {
+            let rel = strip_group(&leaf.name, group)?;
+            let t = self.map.get(rel).with_context(|| {
+                format!("{}: missing value for {}/{rel}", spec.name, group)
+            })?;
+            if t.shape != leaf.shape || t.dtype() != leaf.dtype {
+                bail!(
+                    "{}: {}/{rel} expects {:?} {}, got {:?} {}",
+                    spec.name,
+                    group,
+                    leaf.shape,
+                    leaf.dtype.name(),
+                    t.shape,
+                    t.dtype().name()
+                );
+            }
+            out.push(t.clone());
+        }
+        Ok(out)
+    }
+
+    pub fn insert(&mut self, rel: &str, t: Tensor) {
+        self.map.insert(rel.to_string(), t);
+    }
+
+    pub fn get(&self, rel: &str) -> Option<&Tensor> {
+        self.map.get(rel)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total element count (parameter accounting).
+    pub fn param_count(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Subset whose relpath starts with `prefix`; keys keep the remainder.
+    pub fn strip_prefix(&self, prefix: &str) -> NamedTensors {
+        let mut map = BTreeMap::new();
+        for (k, v) in &self.map {
+            if let Some(rest) = k.strip_prefix(prefix).and_then(|r| r.strip_prefix('/'))
+            {
+                map.insert(rest.to_string(), v.clone());
+            }
+        }
+        NamedTensors { map }
+    }
+
+    /// Overlay: values from `other` replace/extend `self`'s.
+    pub fn overlaid(&self, other: &NamedTensors) -> NamedTensors {
+        let mut map = self.map.clone();
+        for (k, v) in &other.map {
+            map.insert(k.clone(), v.clone());
+        }
+        NamedTensors { map }
+    }
+
+    // -- checkpoint (de)serialization --------------------------------------
+
+    /// Binary layout: count(u64) then per entry: name_len(u32) name bytes,
+    /// tensor (see `Tensor::write_to`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend((self.map.len() as u64).to_le_bytes());
+        for (k, v) in &self.map {
+            out.extend((k.len() as u32).to_le_bytes());
+            out.extend(k.as_bytes());
+            v.write_to(&mut out);
+        }
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("truncated checkpoint at byte {pos}");
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let count = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+        let mut map = BTreeMap::new();
+        for _ in 0..count {
+            let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut pos, n)?.to_vec())
+                .context("non-utf8 name")?;
+            let t = Tensor::read_from(buf, &mut pos)?;
+            map.insert(name, t);
+        }
+        if pos != buf.len() {
+            bail!("trailing bytes in checkpoint");
+        }
+        Ok(NamedTensors { map })
+    }
+}
+
+fn strip_group<'a>(name: &'a str, group: &str) -> Result<&'a str> {
+    if name == group {
+        // single-leaf group (e.g. "tokens", "lr"): relpath is the name itself
+        return Ok(name);
+    }
+    name.strip_prefix(group)
+        .and_then(|r| r.strip_prefix('/'))
+        .with_context(|| format!("leaf {name:?} not under group {group:?}"))
+}
+
+/// Zero-filled bank for a group (placeholder/opt-state init).
+pub fn zero_bank(spec: &ExeSpec, group: &str) -> Result<Bank> {
+    let range = spec.input_group_range(group)?;
+    Ok(spec.inputs[range]
+        .iter()
+        .map(|leaf| Tensor::zeros(&leaf.shape, leaf.dtype))
+        .collect())
+}
+
+pub fn group_leaves<'a>(spec: &'a ExeSpec, group: &str) -> Result<&'a [LeafSpec]> {
+    let range = spec.input_group_range(group)?;
+    Ok(&spec.inputs[range])
+}
+
+/// Re-wire a trained bank (+ the shared pretrained base) into the full
+/// `base` expected by the `*_fwd_*` executables. See module docs.
+pub fn merge_base_for_fwd(
+    pretrained_base: &NamedTensors,
+    trained: &NamedTensors,
+    variant: &str,
+    k: Option<usize>,
+    n_layers: usize,
+) -> Result<NamedTensors> {
+    let mut base = pretrained_base.clone();
+    match variant {
+        "adapter" | "lnonly" => {
+            for (key, val) in &trained.strip_prefix("base_ln").map {
+                if !base.map.contains_key(key) {
+                    bail!("base_ln overlay key {key:?} not in base");
+                }
+                base.insert(key, val.clone());
+            }
+        }
+        "topk" => {
+            let k = k.context("topk variant needs k")?;
+            let lo = n_layers - k;
+            for (key, val) in &trained.strip_prefix("base_top").map {
+                let target = if let Some(rest) = key.strip_prefix("layers/") {
+                    let (idx, tail) = rest
+                        .split_once('/')
+                        .with_context(|| format!("bad layer path {key:?}"))?;
+                    let j: usize = idx.parse()?;
+                    format!("layers/{}/{}", lo + j, tail)
+                } else {
+                    key.clone() // embeddings (k = n_layers)
+                };
+                if !base.map.contains_key(&target) {
+                    bail!("topk overlay target {target:?} not in base");
+                }
+                base.insert(&target, val.clone());
+            }
+        }
+        other => bail!("unknown trained variant {other:?}"),
+    }
+    Ok(base)
+}
+
+/// Build the frozen + trained-base-subtree inputs for a *train* executable
+/// from the shared pretrained base. Returns `(frozen, trained_base_part)`
+/// where `trained_base_part` holds the `base_ln/…` or `base_top/…` entries
+/// to place inside the trained bank (adapters/head are initialized
+/// separately by `init`).
+pub fn split_base_for_train(
+    pretrained_base: &NamedTensors,
+    spec: &ExeSpec,
+    n_layers: usize,
+) -> Result<(NamedTensors, NamedTensors)> {
+    let mut frozen = NamedTensors::default();
+    let mut trained = NamedTensors::default();
+    // full fine-tuning (k = n_layers) trains everything: the frozen group
+    // is empty and therefore absent from the HLO signature entirely
+    let frozen_leaves = match spec.input_group_range("frozen") {
+        Ok(r) => &spec.inputs[r],
+        Err(_) => &[],
+    };
+    for leaf in frozen_leaves {
+        let rel = strip_group(&leaf.name, "frozen")?;
+        let src = match spec.variant.as_str() {
+            // frozen tree of topk keeps original lower-layer indices
+            _ => rel.to_string(),
+        };
+        let t = pretrained_base
+            .get(&src)
+            .with_context(|| format!("pretrained base missing {src:?}"))?;
+        frozen.insert(rel, t.clone());
+    }
+    let trained_leaves = group_leaves(spec, "trained")?;
+    for leaf in trained_leaves {
+        let rel = strip_group(&leaf.name, "trained")?;
+        let src = if let Some(rest) = rel.strip_prefix("base_ln/") {
+            Some(rest.to_string())
+        } else if let Some(rest) = rel.strip_prefix("base_top/") {
+            let k = spec.k.context("topk needs k")?;
+            let lo = n_layers - k;
+            Some(if let Some(lrest) = rest.strip_prefix("layers/") {
+                let (idx, tail) = lrest
+                    .split_once('/')
+                    .with_context(|| format!("bad layer path {rel:?}"))?;
+                let j: usize = idx.parse()?;
+                format!("layers/{}/{}", lo + j, tail)
+            } else {
+                rest.to_string()
+            })
+        } else {
+            None // adapters/head — not from the base
+        };
+        if let Some(src) = src {
+            let t = pretrained_base
+                .get(&src)
+                .with_context(|| format!("pretrained base missing {src:?}"))?;
+            trained.insert(rel, t.clone());
+        }
+    }
+    Ok((frozen, trained))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::DType;
+
+    fn leaf(name: &str, group: &str, shape: Vec<usize>) -> LeafSpec {
+        LeafSpec { name: name.into(), group: group.into(), shape, dtype: DType::F32 }
+    }
+
+    fn toy_spec() -> ExeSpec {
+        ExeSpec {
+            name: "toy".into(),
+            file: "toy.hlo.txt".into(),
+            kind: "cls".into(),
+            variant: "adapter".into(),
+            m: Some(2),
+            k: None,
+            batch: 2,
+            inputs: vec![
+                leaf("frozen/layers/0/wq", "frozen", vec![2, 2]),
+                leaf("trained/base_ln/layers/0/ln1_g", "trained", vec![2]),
+                leaf("trained/head/w", "trained", vec![2, 3]),
+            ],
+            outputs: vec![leaf("out/0/base_ln/layers/0/ln1_g", "out0", vec![2])],
+        }
+    }
+
+    #[test]
+    fn bank_roundtrip_by_name() {
+        let spec = toy_spec();
+        let bank: Bank = vec![
+            Tensor::f32(vec![2], vec![1.0, 2.0]),
+            Tensor::f32(vec![2, 3], vec![0.0; 6]),
+        ];
+        let named = NamedTensors::from_bank(&spec, "trained", &bank).unwrap();
+        assert!(named.get("base_ln/layers/0/ln1_g").is_some());
+        let back = named.to_bank(&spec, "trained").unwrap();
+        assert_eq!(back, bank);
+    }
+
+    #[test]
+    fn wrong_count_rejected() {
+        let spec = toy_spec();
+        let bank: Bank = vec![Tensor::f32(vec![2], vec![1.0, 2.0])];
+        assert!(NamedTensors::from_bank(&spec, "trained", &bank).is_err());
+    }
+
+    #[test]
+    fn checkpoint_bytes_roundtrip() {
+        let mut n = NamedTensors::default();
+        n.insert("a/b", Tensor::f32(vec![2], vec![1.5, -2.0]));
+        n.insert("c", Tensor::i32(vec![], vec![7]));
+        let buf = n.to_bytes();
+        assert_eq!(NamedTensors::from_bytes(&buf).unwrap(), n);
+    }
+
+    #[test]
+    fn merge_adapter_overlays_ln() {
+        let mut base = NamedTensors::default();
+        base.insert("layers/0/ln1_g", Tensor::f32(vec![2], vec![1.0, 1.0]));
+        base.insert("layers/0/wq", Tensor::f32(vec![2, 2], vec![0.0; 4]));
+        let mut trained = NamedTensors::default();
+        trained.insert("base_ln/layers/0/ln1_g", Tensor::f32(vec![2], vec![9.0, 9.0]));
+        trained.insert("head/w", Tensor::f32(vec![2], vec![0.0; 2]));
+        let merged = merge_base_for_fwd(&base, &trained, "adapter", None, 1).unwrap();
+        assert_eq!(merged.get("layers/0/ln1_g").unwrap().as_f32(), &[9.0, 9.0]);
+        assert_eq!(merged.get("layers/0/wq").unwrap().as_f32(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn merge_topk_reindexes_layers() {
+        let mut base = NamedTensors::default();
+        for l in 0..4 {
+            base.insert(
+                &format!("layers/{l}/wq"),
+                Tensor::f32(vec![1], vec![l as f32]),
+            );
+        }
+        let mut trained = NamedTensors::default();
+        // k=2 over 4 layers: trained layer 0 -> base layer 2
+        trained.insert("base_top/layers/0/wq", Tensor::f32(vec![1], vec![20.0]));
+        trained.insert("base_top/layers/1/wq", Tensor::f32(vec![1], vec![30.0]));
+        let merged = merge_base_for_fwd(&base, &trained, "topk", Some(2), 4).unwrap();
+        assert_eq!(merged.get("layers/0/wq").unwrap().as_f32(), &[0.0]);
+        assert_eq!(merged.get("layers/2/wq").unwrap().as_f32(), &[20.0]);
+        assert_eq!(merged.get("layers/3/wq").unwrap().as_f32(), &[30.0]);
+    }
+
+    #[test]
+    fn merge_rejects_unknown_overlay() {
+        let base = NamedTensors::default();
+        let mut trained = NamedTensors::default();
+        trained.insert("base_ln/nope", Tensor::f32(vec![1], vec![0.0]));
+        assert!(merge_base_for_fwd(&base, &trained, "adapter", None, 1).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! Report emitters: paper-shaped tables on stdout + CSV series under
+//! `results/` for every figure. EXPERIMENTS.md references these outputs.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A simple fixed-width table (Table 1 / Table 2 shape).
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            let _ = writeln!(out, "| {} |", parts.join(" | "));
+        };
+        line(&mut out, &self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Also persist as CSV for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+}
+
+/// Results directory helper (`results/<name>.csv`).
+pub fn results_dir() -> PathBuf {
+    PathBuf::from("results")
+}
+
+pub fn write_csv(name: &str, content: &str) -> Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir).context("creating results dir")?;
+    let path = dir.join(format!("{name}.csv"));
+    std::fs::write(&path, content).with_context(|| format!("writing {path:?}"))?;
+    println!("wrote {}", path.display());
+    Ok(path)
+}
+
+pub fn write_table(name: &str, table: &Table) -> Result<()> {
+    table.print();
+    write_csv(name, &table.to_csv())?;
+    Ok(())
+}
+
+/// A long-format CSV series for figures: one row per (curve, x, y[, aux]).
+#[derive(Debug, Default)]
+pub struct Series {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Series {
+    pub fn new(headers: &[&str]) -> Series {
+        Series {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save(&self, name: &str) -> Result<PathBuf> {
+        write_csv(name, &self.to_csv())
+    }
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+pub fn fmt_score(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+pub fn fmt_pm(mean: f64, sem: f64) -> String {
+    format!("{:.1} ± {:.1}", 100.0 * mean, 100.0 * sem)
+}
+
+/// Load a CSV previously written by `write_csv` (bench resume/replot).
+pub fn read_csv(path: &Path) -> Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let headers: Vec<String> =
+        lines.next().unwrap_or("").split(',').map(|s| s.to_string()).collect();
+    let rows = lines
+        .map(|l| l.split(',').map(|s| s.to_string()).collect())
+        .collect();
+    Ok((headers, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["task", "score"]);
+        t.row(vec!["cola_s".into(), "41.2".into()]);
+        t.row(vec!["x".into(), "9".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("| cola_s |  41.2 |"));
+        assert!(s.contains("|      x |     9 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["va,l\"ue".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"va,l\"\"ue\""));
+    }
+
+    #[test]
+    fn series_roundtrip() {
+        let mut s = Series::new(&["curve", "x", "y"]);
+        s.push(vec!["adapters".into(), "1000".into(), "0.81".into()]);
+        let csv = s.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("curve,x,y\n"));
+    }
+}

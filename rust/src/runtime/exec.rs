@@ -1,0 +1,313 @@
+//! Typed execution over PJRT: load HLO text → compile once → run many.
+//!
+//! `Runtime` owns the PJRT CPU client and a compile cache (compilation of
+//! the larger train-step graphs costs seconds; every caller shares the
+//! compiled executable). `Executable::run*` takes *banks* — slices of
+//! tensors in manifest group order — validates them against the signature,
+//! executes, and splits the result tuple back into output groups.
+//!
+//! Buffer management: the vendored `xla` crate's literal-based
+//! `execute()` leaks every input device buffer (it `release()`s the
+//! `BufferFromHostLiteral` results and never frees them), so all execution
+//! here goes through `execute_b` with buffers owned on the Rust side.
+//! That also enables the key serving optimization: long-lived banks (the
+//! frozen base, a task's adapters) are uploaded **once** as a
+//! [`DeviceBank`] and reused across steps/batches; only per-step data
+//! (batches, scalars, updated trained params) is re-uploaded.
+//!
+//! Thread-safety: the `xla` wrappers are raw-pointer structs with no
+//! `Send`/`Sync`, but the PJRT C API guarantees thread-safe
+//! `Compile`/`Execute`/transfers (the CPU client runs its own thread
+//! pool). The `SendSync` wrapper asserts that contract so the coordinator
+//! can share `Arc<Executable>`/`DeviceBank`s across worker threads.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ExeSpec, LeafSpec, Manifest};
+use crate::util::tensor::{Data, DType, Tensor};
+
+/// Wrapper asserting PJRT thread-safety (see module docs).
+struct SendSync<T>(T);
+// SAFETY: PJRT's C API is documented thread-safe for compilation,
+// execution and host↔device transfers; the CPU plugin serializes
+// internally where required. The wrapped values are only used through
+// &self methods.
+unsafe impl<T> Send for SendSync<T> {}
+unsafe impl<T> Sync for SendSync<T> {}
+
+/// A bank: tensors for one contiguous input group, in manifest order.
+pub type Bank = Vec<Tensor>;
+
+/// A bank resident on the PJRT device, uploaded once and reused.
+pub struct DeviceBank {
+    bufs: Vec<SendSync<xla::PjRtBuffer>>,
+    shapes: Vec<(Vec<usize>, DType)>,
+}
+
+impl DeviceBank {
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
+/// Input argument: host tensors (uploaded per call) or a resident bank.
+pub enum BankRef<'a> {
+    Host(&'a Bank),
+    Device(&'a DeviceBank),
+}
+
+pub struct Runtime {
+    client: SendSync<xla::PjRtClient>,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    /// cumulative time spent in XLA compilation (perf accounting)
+    compile_seconds: Mutex<f64>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory for `preset` under `root`.
+    pub fn open(root: &Path, preset: &str) -> Result<Runtime> {
+        let dir = root.join(preset);
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client: SendSync(client),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_seconds: Mutex::new(0.0),
+        })
+    }
+
+    /// Get (compiling on first use) the named executable.
+    pub fn load(self: &Arc<Self>, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.exe(name)?.clone();
+        let path = self.manifest.hlo_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {name}"))?;
+        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        let exe = Arc::new(Executable { exe: SendSync(exe), rt: self.clone(), spec });
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile several executables (startup warm-up).
+    pub fn preload(self: &Arc<Self>, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+
+    pub fn compile_seconds(&self) -> f64 {
+        *self.compile_seconds.lock().unwrap()
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Upload one tensor to the device.
+    pub fn upload_tensor(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let buf = match &t.data {
+            Data::F32(v) => {
+                self.client.0.buffer_from_host_buffer::<f32>(v, &t.shape, None)
+            }
+            Data::I32(v) => {
+                self.client.0.buffer_from_host_buffer::<i32>(v, &t.shape, None)
+            }
+        }
+        .context("host→device transfer")?;
+        Ok(buf)
+    }
+
+    /// Upload a whole bank for reuse across many executions.
+    pub fn upload_bank(&self, bank: &Bank) -> Result<DeviceBank> {
+        let mut bufs = Vec::with_capacity(bank.len());
+        let mut shapes = Vec::with_capacity(bank.len());
+        for t in bank {
+            bufs.push(SendSync(self.upload_tensor(t)?));
+            shapes.push((t.shape.clone(), t.dtype()));
+        }
+        Ok(DeviceBank { bufs, shapes })
+    }
+}
+
+pub struct Executable {
+    exe: SendSync<xla::PjRtLoadedExecutable>,
+    rt: Arc<Runtime>,
+    pub spec: ExeSpec,
+}
+
+impl Executable {
+    /// Execute with all-host input banks in manifest group order.
+    pub fn run(&self, banks: &[&Bank]) -> Result<Vec<Bank>> {
+        let refs: Vec<BankRef> = banks.iter().map(|b| BankRef::Host(b)).collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute with a mix of host banks and resident device banks.
+    ///
+    /// Returns one bank per *output group* (top-level tuple element), so a
+    /// train step's `(trained, opt_m, opt_v, loss, metric)` comes back as
+    /// five banks.
+    pub fn run_refs(&self, banks: &[BankRef]) -> Result<Vec<Bank>> {
+        let groups = self.spec.input_groups();
+        if banks.len() != groups.len() {
+            bail!(
+                "{}: expected {} input banks ({:?}), got {}",
+                self.spec.name,
+                groups.len(),
+                groups,
+                banks.len()
+            );
+        }
+        // validate + collect buffer pointers; temporaries kept alive in
+        // `uploads` until after execution
+        let mut uploads: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<(bool, usize, usize)> = Vec::new(); // (is_upload, bank idx, pos)
+        let mut idx = 0usize;
+        for (bi, (bank, group)) in banks.iter().zip(&groups).enumerate() {
+            match bank {
+                BankRef::Host(b) => {
+                    for t in b.iter() {
+                        let leaf = self.leaf(idx, group, &t.shape, t.dtype())?;
+                        let _ = leaf;
+                        order.push((true, uploads.len(), 0));
+                        uploads.push(self.rt.upload_tensor(t)?);
+                        idx += 1;
+                    }
+                }
+                BankRef::Device(d) => {
+                    for (pos, (shape, dt)) in d.shapes.iter().enumerate() {
+                        self.leaf(idx, group, shape, *dt)?;
+                        order.push((false, bi, pos));
+                        idx += 1;
+                    }
+                }
+            }
+            if idx < self.spec.inputs.len() && &self.spec.inputs[idx].group == group {
+                bail!(
+                    "{}: bank for group {group:?} is missing tensors (next: {})",
+                    self.spec.name,
+                    self.spec.inputs[idx].name
+                );
+            }
+        }
+        if idx != self.spec.inputs.len() {
+            bail!("{}: packed {idx}/{} inputs", self.spec.name, self.spec.inputs.len());
+        }
+        let arg_bufs: Vec<&xla::PjRtBuffer> = order
+            .iter()
+            .map(|&(is_up, a, b)| {
+                if is_up {
+                    &uploads[a]
+                } else {
+                    match &banks[a] {
+                        BankRef::Device(d) => &d.bufs[b].0,
+                        _ => unreachable!(),
+                    }
+                }
+            })
+            .collect();
+        let outs = self
+            .exe
+            .0
+            .execute_b::<&xla::PjRtBuffer>(&arg_bufs)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        drop(uploads);
+        let mut tuple = outs[0][0]
+            .to_literal_sync()
+            .context("fetching result tuple")?;
+        let parts = tuple.decompose_tuple().context("decomposing result")?;
+        self.split_outputs(parts)
+    }
+
+    fn leaf(
+        &self,
+        idx: usize,
+        group: &str,
+        shape: &[usize],
+        dtype: DType,
+    ) -> Result<&LeafSpec> {
+        let leaf = self.spec.inputs.get(idx).with_context(|| {
+            format!("{}: bank for group {group:?} has too many tensors", self.spec.name)
+        })?;
+        if leaf.group != group {
+            bail!(
+                "{}: bank for group {group:?} has too many tensors (at {})",
+                self.spec.name,
+                leaf.name
+            );
+        }
+        if shape != leaf.shape.as_slice() || dtype != leaf.dtype {
+            bail!(
+                "{}: input {} ({}) expects {:?} {}, got {:?} {}",
+                self.spec.name,
+                idx,
+                leaf.name,
+                leaf.shape,
+                leaf.dtype.name(),
+                shape,
+                dtype.name()
+            );
+        }
+        Ok(leaf)
+    }
+
+    fn split_outputs(&self, parts: Vec<xla::Literal>) -> Result<Vec<Bank>> {
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: XLA returned {} leaves, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out: Vec<Bank> = Vec::new();
+        let mut current_group: Option<&str> = None;
+        for (lit, leaf) in parts.iter().zip(&self.spec.outputs) {
+            let t = Tensor::from_literal(lit)
+                .with_context(|| format!("{}: output {}", self.spec.name, leaf.name))?;
+            if t.shape != leaf.shape {
+                bail!(
+                    "{}: output {} shape {:?} != manifest {:?}",
+                    self.spec.name,
+                    leaf.name,
+                    t.shape,
+                    leaf.shape
+                );
+            }
+            if current_group != Some(leaf.group.as_str()) {
+                out.push(Vec::new());
+                current_group = Some(leaf.group.as_str());
+            }
+            out.last_mut().unwrap().push(t);
+        }
+        Ok(out)
+    }
+}

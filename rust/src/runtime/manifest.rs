@@ -1,0 +1,299 @@
+//! Manifest model: the contract between `python/compile/aot.py` and Rust.
+//!
+//! The manifest records, for every AOT executable, the *flattened* input
+//! and output leaves (group, path, shape, dtype) in the exact positional
+//! order of the HLO ENTRY computation. Parameter banks are packed and
+//! unpacked positionally against this — there is no reflection at runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::tensor::DType;
+
+/// Architecture hyper-parameters baked into a preset's artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    pub seq: usize,
+    pub max_classes: usize,
+    pub type_vocab: usize,
+    pub mlm_positions: usize,
+}
+
+/// One tensor slot in an executable's signature.
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub name: String,
+    pub group: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl LeafSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT executable (an HLO text file plus its signature).
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub name: String,
+    pub file: String,
+    /// task kind: cls | reg | span | mlm | embed
+    pub kind: String,
+    /// variant: adapter | topk | lnonly | fwd_adapter | fwd_base | pretrain | fwd
+    pub variant: String,
+    /// adapter bottleneck size (adapter variants)
+    pub m: Option<usize>,
+    /// top-k depth (topk variants)
+    pub k: Option<usize>,
+    pub batch: usize,
+    pub inputs: Vec<LeafSpec>,
+    pub outputs: Vec<LeafSpec>,
+}
+
+impl ExeSpec {
+    /// Contiguous index range of `group` among the inputs.
+    pub fn input_group_range(&self, group: &str) -> Result<std::ops::Range<usize>> {
+        group_range(&self.inputs, group)
+            .with_context(|| format!("{}: no input group {group:?}", self.name))
+    }
+
+    pub fn output_group_range(&self, group: &str) -> Result<std::ops::Range<usize>> {
+        group_range(&self.outputs, group)
+            .with_context(|| format!("{}: no output group {group:?}", self.name))
+    }
+
+    pub fn input_groups(&self) -> Vec<&str> {
+        distinct_groups(&self.inputs)
+    }
+
+    pub fn output_groups(&self) -> Vec<&str> {
+        distinct_groups(&self.outputs)
+    }
+
+    /// Total f32-equivalent element count of one input group (parameter
+    /// accounting for the paper's "params per task" columns).
+    pub fn group_param_count(&self, group: &str) -> usize {
+        match self.input_group_range(group) {
+            Ok(r) => self.inputs[r].iter().map(|l| l.elements()).sum(),
+            Err(_) => 0,
+        }
+    }
+}
+
+fn group_range(leaves: &[LeafSpec], group: &str) -> Option<std::ops::Range<usize>> {
+    let start = leaves.iter().position(|l| l.group == group)?;
+    let end = start
+        + leaves[start..]
+            .iter()
+            .take_while(|l| l.group == group)
+            .count();
+    Some(start..end)
+}
+
+fn distinct_groups(leaves: &[LeafSpec]) -> Vec<&str> {
+    let mut out: Vec<&str> = Vec::new();
+    for l in leaves {
+        if out.last() != Some(&l.group.as_str()) {
+            out.push(&l.group);
+        }
+    }
+    out
+}
+
+/// Parsed `manifest.json` for one preset.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub batch: usize,
+    pub executables: BTreeMap<String, ExeSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Manifest> {
+        let cfg = j.at("config");
+        let dims = ModelDims {
+            vocab: need_usize(cfg, "vocab")?,
+            d: need_usize(cfg, "d")?,
+            n_layers: need_usize(cfg, "n_layers")?,
+            n_heads: need_usize(cfg, "n_heads")?,
+            ffn: need_usize(cfg, "ffn")?,
+            seq: need_usize(cfg, "seq")?,
+            max_classes: need_usize(cfg, "max_classes")?,
+            type_vocab: need_usize(cfg, "type_vocab")?,
+            mlm_positions: need_usize(cfg, "mlm_positions")?,
+        };
+        let mut executables = BTreeMap::new();
+        for e in j.at("executables").as_arr().context("executables")? {
+            let spec = parse_exe(e)?;
+            executables.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest {
+            preset: j.at("preset").as_str().context("preset")?.to_string(),
+            dir: dir.to_path_buf(),
+            dims,
+            batch: need_usize(j, "batch")?,
+            executables,
+        })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
+        self.executables.get(name).with_context(|| {
+            format!("manifest has no executable {name:?} (preset {})", self.preset)
+        })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.exe(name)?.file))
+    }
+
+    /// Names of executables matching kind/variant (e.g. all adapter sizes).
+    pub fn find(&self, kind: &str, variant: &str) -> Vec<&ExeSpec> {
+        self.executables
+            .values()
+            .filter(|e| e.kind == kind && e.variant == variant)
+            .collect()
+    }
+
+    /// Trainable parameter count of the frozen base model (the paper's
+    /// 100% reference for "trained params / task").
+    pub fn base_param_count(&self) -> usize {
+        let d = &self.dims;
+        let per_layer = 4 * (d.d * d.d + d.d)            // attention QKVO
+            + d.d * d.ffn + d.ffn + d.ffn * d.d + d.d    // FFN
+            + 4 * d.d; // two LayerNorms
+        d.vocab * d.d + d.seq * d.d + d.type_vocab * d.d // embeddings
+            + 2 * d.d                                    // embedding LN
+            + d.vocab                                    // MLM bias
+            + d.n_layers * per_layer
+    }
+}
+
+fn parse_exe(e: &Json) -> Result<ExeSpec> {
+    let meta = e.at("meta");
+    let parse_leaves = |key: &str| -> Result<Vec<LeafSpec>> {
+        e.at(key)
+            .as_arr()
+            .with_context(|| key.to_string())?
+            .iter()
+            .map(|l| {
+                Ok(LeafSpec {
+                    name: l.at("name").as_str().context("leaf name")?.to_string(),
+                    group: l.at("group").as_str().context("leaf group")?.to_string(),
+                    shape: l
+                        .at("shape")
+                        .as_arr()
+                        .context("leaf shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<_>>()?,
+                    dtype: DType::from_name(
+                        l.at("dtype").as_str().context("leaf dtype")?,
+                    )?,
+                })
+            })
+            .collect()
+    };
+    let opt_usize = |j: &Json, k: &str| j.get(k).and_then(|v| v.as_usize());
+    let spec = ExeSpec {
+        name: e.at("name").as_str().context("name")?.to_string(),
+        file: e.at("file").as_str().context("file")?.to_string(),
+        kind: meta.at("kind").as_str().context("kind")?.to_string(),
+        variant: meta.at("variant").as_str().context("variant")?.to_string(),
+        m: opt_usize(meta, "m"),
+        k: opt_usize(meta, "k"),
+        batch: need_usize(meta, "batch")?,
+        inputs: parse_leaves("inputs")?,
+        outputs: parse_leaves("outputs")?,
+    };
+    if spec.inputs.is_empty() || spec.outputs.is_empty() {
+        bail!("{}: empty signature", spec.name);
+    }
+    Ok(spec)
+}
+
+fn need_usize(j: &Json, key: &str) -> Result<usize> {
+    j.at(key)
+        .as_usize()
+        .with_context(|| format!("expected number at {key:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest_json() -> Json {
+        Json::parse(
+            r#"{
+          "preset": "unit",
+          "config": {"vocab": 8, "d": 4, "n_layers": 1, "n_heads": 1,
+                     "ffn": 8, "seq": 4, "max_classes": 3, "type_vocab": 2,
+                     "mlm_positions": 2, "adapter_size": 2, "ln_eps": 1e-6},
+          "batch": 2,
+          "adam": {"b1": 0.9, "b2": 0.999, "eps": 1e-8},
+          "executables": [
+            {"name": "toy", "file": "toy.hlo.txt",
+             "meta": {"kind": "cls", "variant": "adapter", "m": 2, "batch": 2},
+             "inputs": [
+               {"name": "frozen/a", "group": "frozen", "shape": [4,4], "dtype": "f32"},
+               {"name": "trained/b", "group": "trained", "shape": [2], "dtype": "f32"},
+               {"name": "trained/c", "group": "trained", "shape": [], "dtype": "i32"}
+             ],
+             "outputs": [
+               {"name": "out/0", "group": "out0", "shape": [2,3], "dtype": "f32"}
+             ]}
+          ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_indexes_groups() {
+        let m = Manifest::from_json(&mini_manifest_json(), Path::new("/tmp/x")).unwrap();
+        let e = m.exe("toy").unwrap();
+        assert_eq!(e.input_group_range("frozen").unwrap(), 0..1);
+        assert_eq!(e.input_group_range("trained").unwrap(), 1..3);
+        assert!(e.input_group_range("nope").is_err());
+        assert_eq!(e.input_groups(), vec!["frozen", "trained"]);
+        assert_eq!(e.group_param_count("frozen"), 16);
+        assert_eq!(e.m, Some(2));
+        assert_eq!(e.k, None);
+    }
+
+    #[test]
+    fn base_param_count_formula() {
+        let m = Manifest::from_json(&mini_manifest_json(), Path::new("/tmp/x")).unwrap();
+        // vocab*d + seq*d + type*d + 2d + vocab + L*(4(d²+d) + d*f+f+f*d+d + 4d)
+        let d = 4usize;
+        let f = 8usize;
+        let expect = 8 * d + 4 * d + 2 * d + 2 * d + 8
+            + (4 * (d * d + d) + d * f + f + f * d + d + 4 * d);
+        assert_eq!(m.base_param_count(), expect);
+    }
+
+    #[test]
+    fn missing_exe_is_error() {
+        let m = Manifest::from_json(&mini_manifest_json(), Path::new("/tmp/x")).unwrap();
+        assert!(m.exe("missing").is_err());
+    }
+}

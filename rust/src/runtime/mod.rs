@@ -1,0 +1,13 @@
+//! Runtime: load AOT HLO-text artifacts and execute them via PJRT (CPU).
+//!
+//! `manifest` is the signature contract with `python/compile/aot.py`;
+//! `exec` owns the PJRT client, the compile cache and typed execution.
+//! Start-to-finish pattern (see /opt/xla-example/load_hlo/):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`.
+
+pub mod exec;
+pub mod manifest;
+
+pub use exec::{Bank, BankRef, DeviceBank, Executable, Runtime};
+pub use manifest::{ExeSpec, LeafSpec, Manifest, ModelDims};

@@ -1,0 +1,281 @@
+//! AdapterStore: versioned per-task parameter banks.
+//!
+//! The paper's economics live here: one frozen base plus a small bank per
+//! task. The store keeps every registered bank immutable (append-only
+//! versions) — that is the mechanism behind "perfect memory of previous
+//! tasks" (§1): adding task N+1 cannot touch the bytes serving tasks 1…N.
+//! Banks persist to disk as `<root>/<task>/v<NNN>.bank` (binary) with a
+//! `meta.json` sidecar, and reload into a byte-identical `TaskModel`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::eval::TaskModel;
+use crate::model::params::NamedTensors;
+use crate::util::json::Json;
+
+/// Immutable metadata attached to a registered bank.
+#[derive(Debug, Clone)]
+pub struct BankMeta {
+    pub task: String,
+    pub version: usize,
+    pub variant: String,
+    pub m: Option<usize>,
+    pub k: Option<usize>,
+    pub kind: String,
+    pub val_score: f64,
+    pub trained_params: usize,
+    pub trained_params_no_head: usize,
+}
+
+#[derive(Clone)]
+struct Entry {
+    meta: BankMeta,
+    model: Arc<TaskModel>,
+}
+
+/// Thread-safe in-memory store with optional disk persistence.
+pub struct AdapterStore {
+    root: Option<PathBuf>,
+    tasks: Mutex<BTreeMap<String, Vec<Entry>>>,
+}
+
+impl AdapterStore {
+    pub fn in_memory() -> AdapterStore {
+        AdapterStore { root: None, tasks: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn at(root: &Path) -> Result<AdapterStore> {
+        std::fs::create_dir_all(root)
+            .with_context(|| format!("creating store root {root:?}"))?;
+        let store =
+            AdapterStore { root: Some(root.to_path_buf()), tasks: Mutex::new(BTreeMap::new()) };
+        store.reload()?;
+        Ok(store)
+    }
+
+    /// Register a new version for `task`; returns the assigned version.
+    pub fn register(&self, task: &str, model: &TaskModel, val_score: f64)
+                    -> Result<BankMeta> {
+        let mut tasks = self.tasks.lock().unwrap();
+        let versions = tasks.entry(task.to_string()).or_default();
+        let version = versions.len() + 1;
+        let meta = BankMeta {
+            task: task.to_string(),
+            version,
+            variant: model.variant.clone(),
+            m: model.m,
+            k: model.k,
+            kind: model.kind.clone(),
+            val_score,
+            trained_params: model.trained_param_count(),
+            trained_params_no_head: model.trained_param_count_no_head(),
+        };
+        if let Some(root) = &self.root {
+            let dir = root.join(task);
+            std::fs::create_dir_all(&dir)?;
+            let bank_path = dir.join(format!("v{version:03}.bank"));
+            std::fs::write(&bank_path, model.trained.to_bytes())?;
+            let meta_path = dir.join(format!("v{version:03}.json"));
+            std::fs::write(&meta_path, meta_to_json(&meta).to_string())?;
+        }
+        versions.push(Entry { meta: meta.clone(), model: Arc::new(model.clone()) });
+        Ok(meta)
+    }
+
+    /// Latest version of a task's model.
+    pub fn latest(&self, task: &str) -> Option<(BankMeta, Arc<TaskModel>)> {
+        let tasks = self.tasks.lock().unwrap();
+        tasks
+            .get(task)
+            .and_then(|v| v.last())
+            .map(|e| (e.meta.clone(), e.model.clone()))
+    }
+
+    pub fn version(&self, task: &str, version: usize)
+                   -> Option<(BankMeta, Arc<TaskModel>)> {
+        let tasks = self.tasks.lock().unwrap();
+        tasks.get(task).and_then(|v| v.get(version.checked_sub(1)?)).map(|e| {
+            (e.meta.clone(), e.model.clone())
+        })
+    }
+
+    pub fn task_names(&self) -> Vec<String> {
+        self.tasks.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn total_versions(&self) -> usize {
+        self.tasks.lock().unwrap().values().map(|v| v.len()).sum()
+    }
+
+    /// Parameter accounting across the store (Table 1/2 "total params"
+    /// columns): `base_params` + one latest bank per task, expressed as a
+    /// multiple of the base.
+    pub fn total_params_ratio(&self, base_params: usize) -> f64 {
+        let tasks = self.tasks.lock().unwrap();
+        let extra: usize = tasks
+            .values()
+            .filter_map(|v| v.last())
+            .map(|e| e.meta.trained_params_no_head)
+            .sum();
+        (base_params + extra) as f64 / base_params as f64
+    }
+
+    /// Reload from disk (no-op for in-memory stores).
+    pub fn reload(&self) -> Result<()> {
+        let Some(root) = &self.root else { return Ok(()) };
+        let mut tasks = self.tasks.lock().unwrap();
+        tasks.clear();
+        if !root.exists() {
+            return Ok(());
+        }
+        for entry in std::fs::read_dir(root)? {
+            let dir = entry?.path();
+            if !dir.is_dir() {
+                continue;
+            }
+            let task = dir.file_name().unwrap().to_string_lossy().to_string();
+            let mut versions: Vec<(usize, Entry)> = Vec::new();
+            for f in std::fs::read_dir(&dir)? {
+                let p = f?.path();
+                if p.extension().map(|e| e == "json").unwrap_or(false) {
+                    let meta = meta_from_json(
+                        &Json::parse(&std::fs::read_to_string(&p)?)
+                            .map_err(|e| anyhow::anyhow!("{p:?}: {e}"))?,
+                    )?;
+                    let bank_path = p.with_extension("bank");
+                    let trained =
+                        NamedTensors::from_bytes(&std::fs::read(&bank_path)?)?;
+                    let model = TaskModel {
+                        variant: meta.variant.clone(),
+                        m: meta.m,
+                        k: meta.k,
+                        kind: meta.kind.clone(),
+                        trained,
+                    };
+                    versions.push((
+                        meta.version,
+                        Entry { meta, model: Arc::new(model) },
+                    ));
+                }
+            }
+            versions.sort_by_key(|(v, _)| *v);
+            // versions must be dense 1..=n
+            for (i, (v, _)) in versions.iter().enumerate() {
+                if *v != i + 1 {
+                    bail!("store {task}: non-dense versions on disk");
+                }
+            }
+            tasks.insert(task, versions.into_iter().map(|(_, e)| e).collect());
+        }
+        Ok(())
+    }
+}
+
+fn meta_to_json(m: &BankMeta) -> Json {
+    let mut pairs = vec![
+        ("task", Json::str(&m.task)),
+        ("version", Json::num(m.version as f64)),
+        ("variant", Json::str(&m.variant)),
+        ("kind", Json::str(&m.kind)),
+        ("val_score", Json::num(m.val_score)),
+        ("trained_params", Json::num(m.trained_params as f64)),
+        ("trained_params_no_head", Json::num(m.trained_params_no_head as f64)),
+    ];
+    if let Some(mm) = m.m {
+        pairs.push(("m", Json::num(mm as f64)));
+    }
+    if let Some(k) = m.k {
+        pairs.push(("k", Json::num(k as f64)));
+    }
+    Json::obj(pairs)
+}
+
+fn meta_from_json(j: &Json) -> Result<BankMeta> {
+    Ok(BankMeta {
+        task: j.at("task").as_str().context("task")?.to_string(),
+        version: j.at("version").as_usize().context("version")?,
+        variant: j.at("variant").as_str().context("variant")?.to_string(),
+        m: j.get("m").and_then(|v| v.as_usize()),
+        k: j.get("k").and_then(|v| v.as_usize()),
+        kind: j.at("kind").as_str().context("kind")?.to_string(),
+        val_score: j.at("val_score").as_f64().context("val_score")?,
+        trained_params: j.at("trained_params").as_usize().context("tp")?,
+        trained_params_no_head: j
+            .at("trained_params_no_head")
+            .as_usize()
+            .context("tpnh")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::Tensor;
+
+    fn model(tag: f32) -> TaskModel {
+        let mut trained = NamedTensors::default();
+        trained.insert("adapters/x", Tensor::f32(vec![3], vec![tag; 3]));
+        trained.insert("head/w", Tensor::f32(vec![2], vec![tag; 2]));
+        TaskModel {
+            variant: "adapter".into(),
+            m: Some(8),
+            k: None,
+            kind: "cls".into(),
+            trained,
+        }
+    }
+
+    #[test]
+    fn versions_are_append_only_and_isolated() {
+        let s = AdapterStore::in_memory();
+        s.register("a", &model(1.0), 0.5).unwrap();
+        let m2 = s.register("a", &model(2.0), 0.7).unwrap();
+        assert_eq!(m2.version, 2);
+        // v1 still intact after v2 registration (perfect memory)
+        let (meta1, model1) = s.version("a", 1).unwrap();
+        assert_eq!(meta1.val_score, 0.5);
+        assert_eq!(model1.trained.get("adapters/x").unwrap().as_f32(), &[1.0; 3]);
+        let (meta_latest, _) = s.latest("a").unwrap();
+        assert_eq!(meta_latest.version, 2);
+    }
+
+    #[test]
+    fn params_ratio_counts_latest_only() {
+        let s = AdapterStore::in_memory();
+        s.register("a", &model(1.0), 0.5).unwrap();
+        s.register("b", &model(1.0), 0.5).unwrap();
+        // base 100, 2 tasks × 3 no-head params
+        assert!((s.total_params_ratio(100) - 1.06).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disk_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("abstore_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let s = AdapterStore::at(&dir).unwrap();
+            s.register("taskx", &model(3.5), 0.9).unwrap();
+            s.register("taskx", &model(4.5), 0.95).unwrap();
+            s.register("tasky", &model(7.0), 0.8).unwrap();
+        }
+        let s2 = AdapterStore::at(&dir).unwrap();
+        assert_eq!(s2.task_names(), vec!["taskx", "tasky"]);
+        assert_eq!(s2.total_versions(), 3);
+        let (meta, m) = s2.latest("taskx").unwrap();
+        assert_eq!(meta.version, 2);
+        assert_eq!(meta.val_score, 0.95);
+        assert_eq!(m.trained.get("adapters/x").unwrap().as_f32(), &[4.5; 3]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_task_is_none() {
+        let s = AdapterStore::in_memory();
+        assert!(s.latest("zzz").is_none());
+        assert!(s.version("zzz", 1).is_none());
+    }
+}

@@ -1,0 +1,144 @@
+//! Tokenizer: text ↔ token ids for the serving path.
+//!
+//! The synthetic world is defined over token ids; to exercise a realistic
+//! request path (clients send *text*), every word id gets a deterministic
+//! pronounceable surface form ("zu", "kari", "moresa", …) built from CV
+//! syllables. The vocabulary is a bijection, so round-trips are exact —
+//! which the tests pin, and which makes the serving demo's inputs/outputs
+//! human-readable.
+
+use std::collections::HashMap;
+
+use crate::data::grammar::{CLS, MASK, PAD, SEP, WORD0};
+
+const CONSONANTS: &[&str] = &[
+    "b", "d", "f", "g", "h", "j", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z",
+];
+const VOWELS: &[&str] = &["a", "e", "i", "o", "u"];
+
+/// Deterministic surface form for a word id (id ≥ WORD0).
+fn surface(word_index: usize) -> String {
+    // base-80 positional code over CV syllables, at least two syllables so
+    // words look like words and never collide with specials
+    let mut n = word_index;
+    let mut syllables = Vec::new();
+    loop {
+        let c = CONSONANTS[n % CONSONANTS.len()];
+        let v = VOWELS[(n / CONSONANTS.len()) % VOWELS.len()];
+        syllables.push(format!("{c}{v}"));
+        n /= CONSONANTS.len() * VOWELS.len();
+        if n == 0 {
+            break;
+        }
+        n -= 1; // bijective numeration: no leading-zero ambiguity
+    }
+    syllables.reverse();
+    syllables.concat()
+}
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab: usize,
+    id_to_word: Vec<String>,
+    word_to_id: HashMap<String, i32>,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Tokenizer {
+        let mut id_to_word = vec![String::new(); vocab];
+        id_to_word[PAD as usize] = "[PAD]".into();
+        id_to_word[CLS as usize] = "[CLS]".into();
+        id_to_word[SEP as usize] = "[SEP]".into();
+        id_to_word[MASK as usize] = "[MASK]".into();
+        for id in WORD0..vocab {
+            id_to_word[id] = surface(id - WORD0);
+        }
+        let word_to_id = id_to_word
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Tokenizer { vocab, id_to_word, word_to_id }
+    }
+
+    /// Encode whitespace-separated text; unknown words map to `[MASK]`
+    /// (the closest analogue of BERT's [UNK] in our 4-special layout).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace()
+            .map(|w| *self.word_to_id.get(w).unwrap_or(&MASK))
+            .collect()
+    }
+
+    /// Encode into the classifier wire format `[CLS] text…` padded to `seq`.
+    pub fn encode_for_cls(&self, text: &str, seq: usize) -> (Vec<i32>, Vec<f32>) {
+        let mut ids = vec![CLS];
+        ids.extend(self.encode(text).into_iter().take(seq - 1));
+        let mut mask = vec![1.0; ids.len()];
+        while ids.len() < seq {
+            ids.push(PAD);
+            mask.push(0.0);
+        }
+        (ids, mask)
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&id| id != PAD)
+            .map(|&id| self.id_to_word[id as usize].as_str())
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        &self.id_to_word[id as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn surfaces_are_unique() {
+        let t = Tokenizer::new(1024);
+        let mut seen = std::collections::HashSet::new();
+        for w in &t.id_to_word {
+            assert!(seen.insert(w.clone()), "duplicate surface {w}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let t = Tokenizer::new(512);
+        let ids: Vec<i32> = vec![5, 100, 511, 42, 4];
+        let text = t.decode(&ids);
+        assert_eq!(t.encode(&text), ids);
+    }
+
+    #[test]
+    fn encode_for_cls_pads_and_masks() {
+        let t = Tokenizer::new(256);
+        let text = format!("{} {}", t.word(10), t.word(20));
+        let (ids, mask) = t.encode_for_cls(&text, 8);
+        assert_eq!(ids.len(), 8);
+        assert_eq!(ids[0], CLS);
+        assert_eq!(&ids[1..3], &[10, 20]);
+        assert_eq!(ids[3..], [PAD; 5]);
+        assert_eq!(&mask[0..3], &[1.0, 1.0, 1.0]);
+        assert!(mask[3..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn unknown_words_become_mask() {
+        let t = Tokenizer::new(256);
+        assert_eq!(t.encode("xyzzyplugh"), vec![MASK]);
+    }
+
+    #[test]
+    fn truncates_to_seq() {
+        let t = Tokenizer::new(256);
+        let long = (0..50).map(|_| t.word(9).to_string()).collect::<Vec<_>>().join(" ");
+        let (ids, _) = t.encode_for_cls(&long, 16);
+        assert_eq!(ids.len(), 16);
+    }
+}

@@ -1,0 +1,212 @@
+//! Training-loop driver (paper §3.1's procedure, host-side).
+//!
+//! The whole numeric step (fwd + bwd + Adam) is one AOT executable; Rust
+//! owns everything around it: the linear-warmup/linear-decay learning-rate
+//! schedule (warmup over the first 10% of steps, as in the paper), epoch
+//! shuffling, per-epoch validation, and best-on-validation model selection
+//! (the paper re-runs with several seeds and keeps the best val model —
+//! `sweep` drives that loop).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data::batcher::EpochIter;
+use crate::data::tasks::{TaskData, TaskKind};
+use crate::eval::{evaluate, TaskModel};
+use crate::model::init;
+use crate::model::params::NamedTensors;
+use crate::runtime::{Bank, Runtime};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// One training run's configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// train executable, e.g. "cls_train_adapter_m8"
+    pub exe: String,
+    pub lr: f64,
+    pub epochs: usize,
+    /// fraction of total steps spent in linear warmup (paper: 0.1)
+    pub warmup_frac: f64,
+    pub seed: u64,
+    /// adapter-init σ (Fig. 6 right sweeps this; default 1e-2)
+    pub adapter_std: f64,
+    /// evaluate on the validation split after each epoch and keep the best
+    pub eval_each_epoch: bool,
+}
+
+impl TrainConfig {
+    pub fn new(exe: &str, lr: f64, epochs: usize, seed: u64) -> Self {
+        TrainConfig {
+            exe: exe.to_string(),
+            lr,
+            epochs,
+            warmup_frac: 0.1,
+            seed,
+            adapter_std: 1e-2,
+            eval_each_epoch: true,
+        }
+    }
+}
+
+/// Outcome of one run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub model: TaskModel,
+    pub val_score: f64,
+    pub steps: usize,
+    pub final_loss: f64,
+    /// (epoch, mean train loss, val score) per epoch
+    pub history: Vec<(usize, f64, f64)>,
+}
+
+/// Linear warmup to `lr`, then linear decay to zero (paper §3.1).
+pub fn lr_at(step: usize, total: usize, peak: f64, warmup_frac: f64) -> f64 {
+    let warmup = ((total as f64 * warmup_frac).ceil() as usize).max(1);
+    if step < warmup {
+        peak * (step + 1) as f64 / warmup as f64
+    } else if total <= warmup {
+        peak
+    } else {
+        let rest = (total - step) as f64 / (total - warmup).max(1) as f64;
+        peak * rest.max(0.0)
+    }
+}
+
+/// Train one task with one configuration. `pretrained_base` is the shared
+/// frozen base in relpath form (from the pre-training checkpoint).
+pub fn train_task(
+    rt: &Arc<Runtime>,
+    cfg: &TrainConfig,
+    task: &TaskData,
+    pretrained_base: &NamedTensors,
+) -> Result<TrainResult> {
+    let exe = rt.load(&cfg.exe)?;
+    let spec = exe.spec.clone();
+    let n_layers = rt.manifest.dims.n_layers;
+    let max_classes = rt.manifest.dims.max_classes;
+    let n_classes = match &task.spec.kind {
+        TaskKind::Cls { n_classes, .. } => *n_classes,
+        _ => 0,
+    };
+
+    // --- initialize banks -------------------------------------------------
+    let (frozen_named, trained_named) =
+        init::init_trained(&spec, pretrained_base, n_layers, cfg.seed, cfg.adapter_std)?;
+    // full fine-tuning has no frozen group at all (see params.rs)
+    let has_frozen = spec.input_group_range("frozen").is_ok();
+    let frozen: Bank = if has_frozen {
+        frozen_named.to_bank(&spec, "frozen")?
+    } else {
+        Vec::new()
+    };
+    let mut trained: Bank = trained_named.to_bank(&spec, "trained")?;
+    let zeros = |b: &Bank| -> Bank {
+        b.iter().map(|t| Tensor::zeros(&t.shape, t.dtype())).collect()
+    };
+    let mut opt_m = zeros(&trained);
+    let mut opt_v = zeros(&trained);
+
+    // --- step loop ---------------------------------------------------------
+    let batch = spec.batch;
+    let steps_per_epoch = task.train.n / batch;
+    let total_steps = (steps_per_epoch * cfg.epochs).max(1);
+    let mut rng = Rng::new(cfg.seed ^ 0x7EA1);
+    let mut step = 0usize;
+    let mut best: Option<(f64, Bank)> = None;
+    let mut history = Vec::new();
+    let mut final_loss = f64::NAN;
+
+    for epoch in 0..cfg.epochs {
+        let mut epoch_losses = Vec::new();
+        for b in EpochIter::new(&task.train, batch, &mut rng) {
+            let lr = lr_at(step, total_steps, cfg.lr, cfg.warmup_frac);
+            let batch_bank = b.to_train_bank(&spec, n_classes, max_classes)?;
+            let step_bank = vec![Tensor::scalar_i32(step as i32 + 1)];
+            let lr_bank = vec![Tensor::scalar_f32(lr as f32)];
+            let mut banks: Vec<&Bank> = Vec::with_capacity(7);
+            if has_frozen {
+                banks.push(&frozen);
+            }
+            banks.extend([
+                &trained, &opt_m, &opt_v, &step_bank, &batch_bank, &lr_bank,
+            ]);
+            let mut out = exe.run(&banks).context("train step")?;
+            // outputs: trained', m', v', loss, metric
+            let metric_bank = out.pop().unwrap();
+            let loss_bank = out.pop().unwrap();
+            opt_v = out.pop().unwrap();
+            opt_m = out.pop().unwrap();
+            trained = out.pop().unwrap();
+            let _ = metric_bank;
+            let loss = loss_bank[0].scalar_value_f32() as f64;
+            epoch_losses.push(loss);
+            final_loss = loss;
+            step += 1;
+        }
+        let mean_loss = crate::util::stats::mean(&epoch_losses);
+        if cfg.eval_each_epoch || epoch + 1 == cfg.epochs {
+            let model = make_model(&spec, &trained)?;
+            let val = evaluate(
+                rt, &model, pretrained_base, &task.val, n_classes, task.spec.metric,
+            )?;
+            history.push((epoch, mean_loss, val));
+            if best.as_ref().map(|(b, _)| val > *b).unwrap_or(true) {
+                best = Some((val, trained.clone()));
+            }
+        } else {
+            history.push((epoch, mean_loss, f64::NAN));
+        }
+    }
+
+    let (val_score, best_bank) = best.context("no validation evaluation ran")?;
+    let model = make_model(&spec, &best_bank)?;
+    Ok(TrainResult { model, val_score, steps: step, final_loss, history })
+}
+
+/// Wrap a positional trained bank into a serveable `TaskModel`.
+fn make_model(
+    spec: &crate::runtime::ExeSpec,
+    trained: &Bank,
+) -> Result<TaskModel> {
+    Ok(TaskModel {
+        variant: spec.variant.clone(),
+        m: spec.m,
+        k: spec.k,
+        kind: spec.kind.clone(),
+        trained: NamedTensors::from_bank(spec, "trained", trained)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let total = 100;
+        // warmup: first 10 steps rise to peak
+        assert!(lr_at(0, total, 1.0, 0.1) > 0.0);
+        assert!(lr_at(4, total, 1.0, 0.1) < 1.0);
+        assert!((lr_at(9, total, 1.0, 0.1) - 1.0).abs() < 1e-9);
+        // decay to zero at the end
+        assert!(lr_at(50, total, 1.0, 0.1) < 1.0);
+        assert!(lr_at(99, total, 1.0, 0.1) < 0.02);
+        // monotone decay after warmup
+        let a = lr_at(20, total, 1.0, 0.1);
+        let b = lr_at(60, total, 1.0, 0.1);
+        assert!(a > b);
+    }
+
+    #[test]
+    fn lr_schedule_tiny_runs() {
+        // pathological sizes must stay finite and positive
+        for total in [1usize, 2, 3] {
+            for s in 0..total {
+                let lr = lr_at(s, total, 3e-4, 0.1);
+                assert!(lr.is_finite() && lr >= 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Training drivers: the per-step numeric work is AOT-compiled; Rust owns
+//! schedules, selection and orchestration.
+//!
+//! `loop` — single-run training with best-on-validation selection;
+//! `pretrain` — MLM pre-training of the shared base;
+//! `sweep` — hyper-parameter grids with fan-out over worker threads.
+
+pub mod r#loop;
+pub mod pretrain;
+pub mod sweep;
+
+pub use r#loop::{lr_at, train_task, TrainConfig, TrainResult};
+pub use pretrain::{load_or_pretrain, pretrain, PretrainConfig};
+pub use sweep::{run_sweep, SweepGrid, SweepOutcome};

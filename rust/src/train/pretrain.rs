@@ -1,0 +1,158 @@
+//! MLM pre-training: produces the repo's "pre-trained BERT" (DESIGN.md §2).
+//!
+//! Drives the `pretrain_step` artifact over the synthetic topic corpus and
+//! checkpoints the resulting base parameters; every downstream experiment
+//! loads that checkpoint as its frozen base. The loss curve is returned so
+//! the end-to-end example can log it (and EXPERIMENTS.md records it).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::data::grammar::{CorpusSampler, World};
+use crate::model::init;
+use crate::model::params::NamedTensors;
+use crate::runtime::{Bank, Runtime};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct PretrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup_frac: f64,
+    pub seed: u64,
+    /// log every n steps (0 = silent)
+    pub log_every: usize,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig { steps: 600, lr: 1e-3, warmup_frac: 0.1, seed: 0, log_every: 50 }
+    }
+}
+
+#[derive(Debug)]
+pub struct PretrainResult {
+    pub base: NamedTensors,
+    /// (step, loss) samples
+    pub loss_curve: Vec<(usize, f64)>,
+    pub final_loss: f64,
+    pub initial_loss: f64,
+}
+
+/// Run MLM pre-training from random init.
+pub fn pretrain(
+    rt: &Arc<Runtime>,
+    world: &World,
+    cfg: &PretrainConfig,
+) -> Result<PretrainResult> {
+    let exe = rt.load("pretrain_step")?;
+    let spec = exe.spec.clone();
+    let dims = rt.manifest.dims.clone();
+    let batch = spec.batch;
+
+    let base_named = init::init_group(&spec, "base", cfg.seed, 1e-2)?;
+    let mut base: Bank = base_named.to_bank(&spec, "base")?;
+    let zeros = |b: &Bank| -> Bank {
+        b.iter().map(|t| Tensor::zeros(&t.shape, t.dtype())).collect()
+    };
+    let mut opt_m = zeros(&base);
+    let mut opt_v = zeros(&base);
+
+    let sampler = CorpusSampler::new(world.clone());
+    let mut rng = Rng::new(cfg.seed ^ 0xC0DE);
+    let mut curve = Vec::new();
+    let mut initial_loss = f64::NAN;
+    let mut final_loss = f64::NAN;
+
+    for step in 0..cfg.steps {
+        // assemble a batch of MLM examples
+        let p = dims.mlm_positions;
+        let mut tokens = Vec::with_capacity(batch * dims.seq);
+        let mut positions = Vec::with_capacity(batch * p);
+        let mut targets = Vec::with_capacity(batch * p);
+        let mut weights = Vec::with_capacity(batch * p);
+        for _ in 0..batch {
+            let (t, pos, tgt, w) = sampler.mlm_example(&mut rng, dims.seq, p);
+            tokens.extend(t);
+            positions.extend(pos);
+            targets.extend(tgt);
+            weights.extend(w);
+        }
+        let lr = super::r#loop::lr_at(step, cfg.steps, cfg.lr, cfg.warmup_frac);
+        let banks: Vec<Bank> = vec![
+            vec![Tensor::scalar_i32(step as i32 + 1)],
+            vec![Tensor::i32(vec![batch, dims.seq], tokens)],
+            vec![Tensor::i32(vec![batch, dims.seq], vec![0; batch * dims.seq])],
+            vec![Tensor::full_f32(&[batch, dims.seq], 1.0)],
+            vec![Tensor::i32(vec![batch, p], positions)],
+            vec![Tensor::i32(vec![batch, p], targets)],
+            vec![Tensor::f32(vec![batch, p], weights)],
+            vec![Tensor::scalar_f32(lr as f32)],
+        ];
+        let all: Vec<&Bank> = std::iter::once(&base)
+            .chain([&opt_m, &opt_v])
+            .chain(banks.iter())
+            .collect();
+        let mut out = exe.run(&all).context("pretrain step")?;
+        let loss = out.pop().unwrap()[0].scalar_value_f32() as f64;
+        opt_v = out.pop().unwrap();
+        opt_m = out.pop().unwrap();
+        base = out.pop().unwrap();
+        if step == 0 {
+            initial_loss = loss;
+        }
+        final_loss = loss;
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            println!("  pretrain step {step:5}  lr {lr:.2e}  mlm loss {loss:.4}");
+            curve.push((step, loss));
+        } else if step % 10 == 0 {
+            curve.push((step, loss));
+        }
+    }
+
+    Ok(PretrainResult {
+        base: NamedTensors::from_bank(&spec, "base", &base)?,
+        loss_curve: curve,
+        final_loss,
+        initial_loss,
+    })
+}
+
+/// Checkpoint helpers: the shared base lives beside the run artifacts.
+pub fn save_base(base: &NamedTensors, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, base.to_bytes()).with_context(|| format!("writing {path:?}"))
+}
+
+pub fn load_base(path: &Path) -> Result<NamedTensors> {
+    let buf =
+        std::fs::read(path).with_context(|| format!("reading base ckpt {path:?}"))?;
+    NamedTensors::from_bytes(&buf)
+}
+
+/// Load the checkpoint at `path`, or pre-train + save it if absent.
+pub fn load_or_pretrain(
+    rt: &Arc<Runtime>,
+    world: &World,
+    cfg: &PretrainConfig,
+    path: &Path,
+) -> Result<NamedTensors> {
+    if path.exists() {
+        let base = load_base(path)?;
+        println!("loaded pre-trained base from {path:?} ({} tensors)", base.len());
+        return Ok(base);
+    }
+    println!("pre-training base ({} steps)…", cfg.steps);
+    let res = pretrain(rt, world, cfg)?;
+    println!(
+        "pre-training done: mlm loss {:.3} → {:.3}",
+        res.initial_loss, res.final_loss
+    );
+    save_base(&res.base, path)?;
+    Ok(res.base)
+}

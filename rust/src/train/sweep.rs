@@ -1,0 +1,188 @@
+//! Hyper-parameter sweeps with best-on-validation selection (paper §3.1:
+//! "for each dataset and algorithm, we run a hyperparameter sweep and
+//! select the best model according to accuracy on the validation set",
+//! plus the 5-random-seed re-runs for instability).
+//!
+//! Jobs fan out over a scoped thread pool sharing one `Runtime` (PJRT's
+//! CPU client is thread-safe; the compile cache de-duplicates work).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::r#loop::{train_task, TrainConfig, TrainResult};
+use crate::data::tasks::TaskData;
+use crate::model::params::NamedTensors;
+use crate::runtime::Runtime;
+
+/// Grid definition for one task + method.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    /// train executables to try (e.g. adapter sizes: one exe per size)
+    pub exes: Vec<String>,
+    pub lrs: Vec<f64>,
+    pub epochs: Vec<usize>,
+    pub seeds: Vec<u64>,
+    /// adapter init σ (usually just [1e-2]; Fig. 6-right sweeps it)
+    pub stds: Vec<f64>,
+}
+
+impl SweepGrid {
+    pub fn configs(&self) -> Vec<TrainConfig> {
+        let mut out = Vec::new();
+        for exe in &self.exes {
+            for &lr in &self.lrs {
+                for &ep in &self.epochs {
+                    for &seed in &self.seeds {
+                        for &std in &self.stds {
+                            let mut c = TrainConfig::new(exe, lr, ep, seed);
+                            c.adapter_std = std;
+                            out.push(c);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// All runs of a sweep plus the winner (best validation score).
+#[derive(Debug)]
+pub struct SweepOutcome {
+    pub best: TrainResult,
+    pub best_config: TrainConfig,
+    pub runs: Vec<(TrainConfig, TrainResult)>,
+}
+
+/// Run `grid` for `task`, using up to `threads` workers.
+pub fn run_sweep(
+    rt: &Arc<Runtime>,
+    task: &TaskData,
+    base: &NamedTensors,
+    grid: &SweepGrid,
+    threads: usize,
+) -> Result<SweepOutcome> {
+    let configs = grid.configs();
+    let queue: Mutex<VecDeque<TrainConfig>> = Mutex::new(configs.into());
+    let results: Mutex<Vec<(TrainConfig, TrainResult)>> = Mutex::new(Vec::new());
+    let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| loop {
+                let cfg = match queue.lock().unwrap().pop_front() {
+                    Some(c) => c,
+                    None => return,
+                };
+                match train_task(rt, &cfg, task, base) {
+                    Ok(res) => results.lock().unwrap().push((cfg, res)),
+                    Err(e) => errors.lock().unwrap().push(e),
+                }
+            });
+        }
+    });
+
+    let errors = errors.into_inner().unwrap();
+    if let Some(e) = errors.into_iter().next() {
+        return Err(e);
+    }
+    let mut runs = results.into_inner().unwrap();
+    // deterministic ordering regardless of thread interleaving
+    runs.sort_by(|a, b| {
+        (&a.0.exe, a.0.seed, a.0.lr.total_cmp(&b.0.lr))
+            .partial_cmp(&(&b.0.exe, b.0.seed, std::cmp::Ordering::Equal))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let (best_config, best) = runs
+        .iter()
+        .max_by(|a, b| a.1.val_score.total_cmp(&b.1.val_score))
+        .map(|(c, r)| (c.clone(), clone_result(r)))
+        .expect("sweep produced no runs");
+    Ok(SweepOutcome { best, best_config, runs })
+}
+
+fn clone_result(r: &TrainResult) -> TrainResult {
+    TrainResult {
+        model: r.model.clone(),
+        val_score: r.val_score,
+        steps: r.steps,
+        final_loss: r.final_loss,
+        history: r.history.clone(),
+    }
+}
+
+/// The paper's GLUE adapter sweep (§3.2), scaled: lr grid, epochs grid,
+/// seeds for instability re-runs. `quick` trims to a CPU-budget subset.
+pub fn adapter_grid(kind: &str, sizes: &[usize], quick: bool) -> SweepGrid {
+    let exes = sizes
+        .iter()
+        .map(|m| format!("{kind}_train_adapter_m{m}"))
+        .collect();
+    if quick {
+        SweepGrid {
+            exes,
+            lrs: vec![1e-3],
+            epochs: vec![6],
+            seeds: vec![0],
+            stds: vec![1e-2],
+        }
+    } else {
+        SweepGrid {
+            exes,
+            lrs: vec![3e-4, 1e-3, 3e-3],
+            epochs: vec![6, 12],
+            seeds: vec![0, 1, 2],
+            stds: vec![1e-2],
+        }
+    }
+}
+
+pub fn topk_grid(kind: &str, ks: &[usize], quick: bool) -> SweepGrid {
+    let exes = ks.iter().map(|k| format!("{kind}_train_topk_k{k}")).collect();
+    if quick {
+        SweepGrid {
+            exes,
+            lrs: vec![1e-4],
+            epochs: vec![6],
+            seeds: vec![0],
+            stds: vec![1e-2],
+        }
+    } else {
+        SweepGrid {
+            exes,
+            lrs: vec![3e-5, 1e-4, 3e-4],
+            epochs: vec![6, 12],
+            seeds: vec![0, 1, 2],
+            stds: vec![1e-2],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_cross_product() {
+        let g = SweepGrid {
+            exes: vec!["a".into(), "b".into()],
+            lrs: vec![1e-3, 1e-4],
+            epochs: vec![3],
+            seeds: vec![0, 1, 2],
+            stds: vec![1e-2],
+        };
+        assert_eq!(g.configs().len(), 2 * 2 * 1 * 3);
+    }
+
+    #[test]
+    fn paper_grids_have_expected_shape() {
+        let g = adapter_grid("cls", &[8, 64, 256], false);
+        assert_eq!(g.exes.len(), 3);
+        assert_eq!(g.lrs.len(), 3);
+        assert_eq!(g.seeds.len(), 3);
+        let q = adapter_grid("cls", &[8], true);
+        assert_eq!(q.configs().len(), 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Dependency-free substrates: JSON, RNG, statistics, tensors, timing.
+//!
+//! The offline build environment only ships the `xla` crate's dependency
+//! closure, so everything `serde_json` / `rand` / `criterion` would
+//! normally provide is implemented (and tested) here.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+pub mod timer;

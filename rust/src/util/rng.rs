@@ -1,0 +1,211 @@
+//! Deterministic RNG substrate (no `rand` crate offline).
+//!
+//! SplitMix64 core with helpers used across the repo: uniform ints/floats,
+//! Gaussians (Box–Muller), the paper's truncated normal (§3.6: zero-mean,
+//! σ=1e-2, truncated at 2σ), Zipf sampling for the synthetic corpus, and
+//! Fisher–Yates shuffling for epoch order.
+
+/// SplitMix64: tiny, fast, passes BigCrush when used as a stream.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Derive an independent stream (for per-task / per-worker RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Standard normal (Box–Muller; one value per call, simple over fast).
+    pub fn gauss(&mut self) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                let v = self.f64();
+                return (-2.0 * u.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * v).cos();
+            }
+        }
+    }
+
+    /// Truncated normal: N(0, std²) truncated to ±2 std (paper §3.6).
+    pub fn trunc_normal(&mut self, std: f64) -> f32 {
+        loop {
+            let g = self.gauss();
+            if g.abs() <= 2.0 {
+                return (g * std) as f32;
+            }
+        }
+    }
+
+    /// Fill with truncated normals.
+    pub fn trunc_normal_vec(&mut self, n: usize, std: f64) -> Vec<f32> {
+        (0..n).map(|_| self.trunc_normal(std)).collect()
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s` (synthetic corpus
+    /// word frequencies; inverse-CDF on precomputed weights is overkill —
+    /// rejection sampling per Devroye).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // simple inverse-transform on the fly; n is small (vocab ≤ 1024)
+        let h = |k: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-9 {
+                (k + 1.0).ln()
+            } else {
+                ((k + 1.0).powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        let total = h(n as f64);
+        let u = self.f64() * total;
+        // binary search the smallest k with h(k+1) >= u
+        let (mut lo, mut hi) = (0usize, n - 1);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if h(mid as f64 + 1.0) >= u {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forks_are_independent() {
+        let mut r = Rng::new(1);
+        let mut a = r.fork(0);
+        let mut b = r.fork(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(4);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.03, "{var}");
+    }
+
+    #[test]
+    fn trunc_normal_is_truncated_and_scaled() {
+        let mut r = Rng::new(5);
+        let std = 1e-2;
+        let xs = r.trunc_normal_vec(50_000, std);
+        assert!(xs.iter().all(|x| x.abs() <= (2.0 * std) as f32 + 1e-9));
+        let sd =
+            (xs.iter().map(|x| (*x as f64).powi(2)).sum::<f64>() / xs.len() as f64).sqrt();
+        // truncation at 2σ shrinks sd to ~0.88σ
+        assert!((sd / std - 0.88).abs() < 0.03, "{}", sd / std);
+    }
+
+    #[test]
+    fn zipf_is_monotone() {
+        let mut r = Rng::new(6);
+        let mut counts = vec![0usize; 16];
+        for _ in 0..200_000 {
+            counts[r.zipf(16, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[3] && counts[3] > counts[10]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&[1.0, 2.0, 7.0])] += 1;
+        }
+        assert!(counts[2] > counts[1] && counts[1] > counts[0]);
+        assert!((counts[2] as f64 / 30_000.0 - 0.7).abs() < 0.03);
+    }
+}

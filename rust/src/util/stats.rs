@@ -1,0 +1,262 @@
+//! Statistics substrate: everything the paper's tables/figures need.
+//!
+//! Mean / s.e.m. (Table 2 "±" columns), percentiles (Figs. 1 & 3 show the
+//! 20th/50th/80th percentile across tasks), Spearman's ρ (STS-B), Matthews
+//! correlation (CoLA), F1 (MRPC/QQP), and span EM/F1 (SQuAD).
+
+/// Arithmetic mean. Empty input → NaN.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Standard error of the mean (the paper's ± columns).
+pub fn sem(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolation percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Ranks with ties averaged (needed for a correct Spearman under ties).
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Pearson correlation.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx).powi(2);
+        syy += (y - my).powi(2);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Spearman's ρ (STS-B's metric): Pearson on tie-averaged ranks.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&ranks(xs), &ranks(ys))
+}
+
+/// Matthews correlation coefficient (CoLA's metric), binary labels.
+pub fn matthews(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let (mut tp, mut tn, mut fp, mut fnn) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &t) in pred.iter().zip(truth) {
+        match (p, t) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fnn += 1.0,
+            _ => panic!("matthews is defined for binary labels"),
+        }
+    }
+    let denom = ((tp + fp) * (tp + fnn) * (tn + fp) * (tn + fnn)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fnn) / denom
+    }
+}
+
+/// Binary F1 with `positive` as the positive class (MRPC/QQP's metric).
+pub fn f1_binary(pred: &[usize], truth: &[usize], positive: usize) -> f64 {
+    let (mut tp, mut fp, mut fnn) = (0f64, 0f64, 0f64);
+    for (&p, &t) in pred.iter().zip(truth) {
+        match (p == positive, t == positive) {
+            (true, true) => tp += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fnn += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fnn);
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Plain accuracy.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return f64::NAN;
+    }
+    let hits = pred.iter().zip(truth).filter(|(p, t)| p == t).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// SQuAD-style span scores: exact match, and token-overlap F1.
+pub fn span_em_f1(pred: &[(usize, usize)], truth: &[(usize, usize)]) -> (f64, f64) {
+    assert_eq!(pred.len(), truth.len());
+    let mut em = 0.0;
+    let mut f1 = 0.0;
+    for (&(ps, pe), &(ts, te)) in pred.iter().zip(truth) {
+        if ps == ts && pe == te {
+            em += 1.0;
+        }
+        let (ps, pe) = (ps.min(pe), ps.max(pe));
+        let inter = (pe.min(te) + 1).saturating_sub(ps.max(ts)) as f64;
+        if inter > 0.0 {
+            let p_len = (pe - ps + 1) as f64;
+            let t_len = (te - ts + 1) as f64;
+            let precision = inter / p_len;
+            let recall = inter / t_len;
+            f1 += 2.0 * precision * recall / (precision + recall);
+        }
+    }
+    let n = pred.len() as f64;
+    (em / n, f1 / n)
+}
+
+/// Majority-class frequency — the paper's "all adapters ablated" floor.
+pub fn majority_fraction(labels: &[usize]) -> f64 {
+    if labels.is_empty() {
+        return f64::NAN;
+    }
+    let max = *labels.iter().max().unwrap();
+    let mut counts = vec![0usize; max + 1];
+    for &l in labels {
+        counts[l] += 1;
+    }
+    *counts.iter().max().unwrap() as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_sem() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        let s = sem(&[1.0, 2.0, 3.0]);
+        assert!((s - 1.0 / 3.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 50.0), 30.0);
+        assert_eq!(percentile(&xs, 100.0), 50.0);
+        assert_eq!(percentile(&xs, 20.0), 18.0);
+    }
+
+    #[test]
+    fn spearman_monotone_is_one() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [10.0, 100.0, 1000.0, 10000.0];
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+        let yr = [4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&xs, &yr) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let xs = [1.0, 2.0, 2.0, 3.0];
+        let ys = [1.0, 2.0, 2.0, 3.0];
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_in_range_random() {
+        let mut r = crate::util::rng::Rng::new(2);
+        for _ in 0..50 {
+            let xs: Vec<f64> = (0..20).map(|_| r.f64()).collect();
+            let ys: Vec<f64> = (0..20).map(|_| r.f64()).collect();
+            let rho = spearman(&xs, &ys);
+            assert!((-1.0..=1.0).contains(&rho));
+        }
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverse() {
+        let t = [0, 1, 0, 1, 1, 0];
+        assert!((matthews(&t, &t) - 1.0).abs() < 1e-12);
+        let inv: Vec<usize> = t.iter().map(|x| 1 - x).collect();
+        assert!((matthews(&inv, &t) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matthews_constant_prediction_is_zero() {
+        assert_eq!(matthews(&[1, 1, 1, 1], &[0, 1, 0, 1]), 0.0);
+    }
+
+    #[test]
+    fn f1_known_value() {
+        // tp=2 fp=1 fn=1 -> p=2/3 r=2/3 -> f1=2/3
+        let pred = [1, 1, 1, 0, 0];
+        let truth = [1, 1, 0, 1, 0];
+        assert!((f1_binary(&pred, &truth, 1) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn span_scores() {
+        let pred = [(3, 5), (1, 2)];
+        let truth = [(3, 5), (2, 3)];
+        let (em, f1) = span_em_f1(&pred, &truth);
+        assert_eq!(em, 0.5);
+        // second: inter=1, p_len=2, t_len=2 -> f1=0.5; mean = 0.75
+        assert!((f1 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn majority() {
+        assert_eq!(majority_fraction(&[0, 0, 1, 0]), 0.75);
+    }
+}

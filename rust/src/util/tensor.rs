@@ -1,0 +1,276 @@
+//! Host-side tensor: the unit of parameter banks, batches and results.
+//!
+//! A deliberately small row-major container with exactly the two dtypes the
+//! artifacts use (`f32`, `i32`), plus lossless conversion to/from
+//! `xla::Literal` for PJRT execution and a compact binary (de)serialization
+//! used by the `store` checkpoints.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// Row-major tensor. Scalars have an empty shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn zeros(shape: &[usize], dtype: DType) -> Self {
+        let n = shape.iter().product();
+        match dtype {
+            DType::F32 => Tensor::f32(shape.to_vec(), vec![0.0; n]),
+            DType::I32 => Tensor::i32(shape.to_vec(), vec![0; n]),
+        }
+    }
+
+    pub fn full_f32(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor::f32(shape.to_vec(), vec![v; n])
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::i32(vec![], vec![v])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar_value_f32(&self) -> f32 {
+        assert!(self.len() == 1, "not a scalar: shape {:?}", self.shape);
+        self.as_f32()[0]
+    }
+
+    // -- xla interop -------------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+            Data::I32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    // -- binary (de)serialization (store checkpoints) -----------------------
+
+    /// Layout: dtype(u8) rank(u32 LE) dims(u64 LE each) payload(LE).
+    pub fn write_to(&self, out: &mut Vec<u8>) {
+        out.push(match self.dtype() {
+            DType::F32 => 0u8,
+            DType::I32 => 1u8,
+        });
+        out.extend((self.shape.len() as u32).to_le_bytes());
+        for &d in &self.shape {
+            out.extend((d as u64).to_le_bytes());
+        }
+        match &self.data {
+            Data::F32(v) => {
+                for x in v {
+                    out.extend(x.to_le_bytes());
+                }
+            }
+            Data::I32(v) => {
+                for x in v {
+                    out.extend(x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    pub fn read_from(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("truncated tensor at byte {pos}");
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let tag = take(pos, 1)?[0];
+        let rank = u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()) as usize;
+        if rank > 16 {
+            bail!("implausible tensor rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(u64::from_le_bytes(take(pos, 8)?.try_into().unwrap()) as usize);
+        }
+        let n: usize = shape.iter().product();
+        match tag {
+            0 => {
+                let raw = take(pos, n * 4)?;
+                let v = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Ok(Tensor::f32(shape, v))
+            }
+            1 => {
+                let raw = take(pos, n * 4)?;
+                let v = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Ok(Tensor::i32(shape, v))
+            }
+            other => bail!("bad dtype tag {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3], DType::F32);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let a = Tensor::f32(vec![2, 2], vec![1.0, -2.5, 3.25, 0.0]);
+        let b = Tensor::i32(vec![3], vec![7, -9, 11]);
+        let s = Tensor::scalar_f32(0.125);
+        let mut buf = Vec::new();
+        a.write_to(&mut buf);
+        b.write_to(&mut buf);
+        s.write_to(&mut buf);
+        let mut pos = 0;
+        assert_eq!(Tensor::read_from(&buf, &mut pos).unwrap(), a);
+        assert_eq!(Tensor::read_from(&buf, &mut pos).unwrap(), b);
+        assert_eq!(Tensor::read_from(&buf, &mut pos).unwrap(), s);
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let a = Tensor::f32(vec![4], vec![1.0; 4]);
+        let mut buf = Vec::new();
+        a.write_to(&mut buf);
+        buf.truncate(buf.len() - 2);
+        let mut pos = 0;
+        assert!(Tensor::read_from(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], (0..6).map(|i| i as f32 * 0.5).collect());
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_and_scalar() {
+        let t = Tensor::i32(vec![4], vec![1, -2, 3, -4]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+        let s = Tensor::scalar_f32(2.5);
+        let back = Tensor::from_literal(&s.to_literal().unwrap()).unwrap();
+        assert_eq!(back.scalar_value_f32(), 2.5);
+    }
+}

@@ -1,0 +1,80 @@
+//! Tiny timing/throughput helpers shared by the bench harness and metrics.
+
+use std::time::{Duration, Instant};
+
+/// Collects duration samples; reports mean/percentiles. Used by the micro
+/// benches and the serving-latency metrics (no criterion offline).
+#[derive(Debug, Default, Clone)]
+pub struct Samples {
+    pub durs: Vec<Duration>,
+}
+
+impl Samples {
+    pub fn record(&mut self, d: Duration) {
+        self.durs.push(d);
+    }
+
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed());
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.durs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.durs.is_empty()
+    }
+
+    fn secs(&self) -> Vec<f64> {
+        self.durs.iter().map(|d| d.as_secs_f64()).collect()
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        super::stats::mean(&self.secs())
+    }
+
+    pub fn pctl_s(&self, p: f64) -> f64 {
+        super::stats::percentile(&self.secs(), p)
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.secs().iter().sum()
+    }
+
+    /// "events per second" given one event per sample.
+    pub fn throughput(&self) -> f64 {
+        self.len() as f64 / self.total_s()
+    }
+
+    pub fn summary(&self, unit_per_sample: f64) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms thpt={:.1}/s",
+            self.len(),
+            self.mean_s() * 1e3,
+            self.pctl_s(50.0) * 1e3,
+            self.pctl_s(95.0) * 1e3,
+            self.throughput() * unit_per_sample,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut s = Samples::default();
+        for ms in [1u64, 2, 3] {
+            s.record(Duration::from_millis(ms));
+        }
+        assert_eq!(s.len(), 3);
+        assert!((s.mean_s() - 0.002).abs() < 1e-9);
+        assert!((s.pctl_s(50.0) - 0.002).abs() < 1e-9);
+        assert!(s.throughput() > 0.0);
+    }
+}

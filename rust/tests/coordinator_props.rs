@@ -1,0 +1,248 @@
+//! Property-based tests on coordinator invariants (own mini-framework —
+//! proptest is unavailable offline). Each property runs across many random
+//! seeds; failures print the seed for reproduction.
+
+use std::time::{Duration, Instant};
+
+use adapterbert::coordinator::{FlushPolicy, Router};
+use adapterbert::model::params::NamedTensors;
+use adapterbert::util::rng::Rng;
+use adapterbert::util::stats;
+use adapterbert::util::tensor::Tensor;
+
+/// run `f` for `n` random seeds, reporting the failing seed.
+fn for_seeds(n: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            panic!("property failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_router_conservation_order_and_bounds() {
+    for_seeds(30, |rng| {
+        let max_batch = 1 + rng.below(8);
+        let mut router: Router<(String, u64)> = Router::new(FlushPolicy {
+            max_batch,
+            max_delay: Duration::from_millis(2),
+        });
+        let t0 = Instant::now();
+        let n_tasks = 1 + rng.below(5);
+        let mut sent: Vec<Vec<u64>> = vec![vec![]; n_tasks];
+        let mut recv: Vec<Vec<u64>> = vec![vec![]; n_tasks];
+        let mut clock = t0;
+        let mut collect = |batches: Vec<
+            adapterbert::coordinator::router::FlushedBatch<(String, u64)>,
+        >,
+                           recv: &mut Vec<Vec<u64>>| {
+            for b in batches {
+                assert!(b.items.len() <= max_batch, "batch over max_batch");
+                assert!(!b.items.is_empty(), "empty flush");
+                for (task, v) in b.items {
+                    assert_eq!(task, b.task, "item routed to wrong task batch");
+                    let ti: usize = task[1..].parse().unwrap();
+                    recv[ti].push(v);
+                }
+            }
+        };
+        for i in 0..300u64 {
+            let ti = rng.below(n_tasks);
+            let task = format!("t{ti}");
+            sent[ti].push(i);
+            clock += Duration::from_micros(rng.below(500) as u64);
+            if let Some(b) = router.push(&task, (task.clone(), i), clock) {
+                collect(vec![b], &mut recv);
+            }
+            if rng.f64() < 0.15 {
+                clock += Duration::from_millis(3);
+                collect(router.poll(clock), &mut recv);
+            }
+        }
+        collect(router.drain(clock + Duration::from_secs(1)), &mut recv);
+        // conservation + per-task FIFO (sent ids are increasing per task)
+        assert_eq!(sent, recv);
+        assert_eq!(router.pending(), 0);
+    });
+}
+
+#[test]
+fn prop_named_tensors_bank_roundtrip() {
+    use adapterbert::runtime::manifest::LeafSpec;
+    use adapterbert::runtime::ExeSpec;
+    use adapterbert::util::tensor::DType;
+    for_seeds(40, |rng| {
+        // random group of leaves with random shapes
+        let n = 1 + rng.below(12);
+        let mut inputs = Vec::new();
+        let mut bank = Vec::new();
+        for i in 0..n {
+            let rank = rng.below(3);
+            let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(6)).collect();
+            let count: usize = shape.iter().product();
+            inputs.push(LeafSpec {
+                name: format!("trained/leaf/{i}"),
+                group: "trained".into(),
+                shape: shape.clone(),
+                dtype: DType::F32,
+            });
+            bank.push(Tensor::f32(
+                shape,
+                (0..count).map(|_| rng.f32()).collect(),
+            ));
+        }
+        let spec = ExeSpec {
+            name: "prop".into(),
+            file: "x".into(),
+            kind: "cls".into(),
+            variant: "adapter".into(),
+            m: Some(1),
+            k: None,
+            batch: 1,
+            inputs,
+            outputs: vec![LeafSpec {
+                name: "out/0".into(),
+                group: "out0".into(),
+                shape: vec![],
+                dtype: DType::F32,
+            }],
+        };
+        let named = NamedTensors::from_bank(&spec, "trained", &bank).unwrap();
+        let back = named.to_bank(&spec, "trained").unwrap();
+        assert_eq!(back, bank, "bank -> named -> bank must be identity");
+        // serialization round-trip too
+        let bytes = named.to_bytes();
+        assert_eq!(NamedTensors::from_bytes(&bytes).unwrap(), named);
+    });
+}
+
+#[test]
+fn prop_store_get_after_put() {
+    use adapterbert::eval::TaskModel;
+    use adapterbert::store::AdapterStore;
+    for_seeds(20, |rng| {
+        let store = AdapterStore::in_memory();
+        let n_tasks = 1 + rng.below(5);
+        let mut expected: Vec<Vec<f32>> = vec![vec![]; n_tasks];
+        for round in 0..rng.below(6) + 1 {
+            for t in 0..n_tasks {
+                if rng.f64() < 0.6 {
+                    let tag = (round * 100 + t) as f32;
+                    let mut trained = NamedTensors::default();
+                    trained.insert("adapters/x", Tensor::f32(vec![2], vec![tag; 2]));
+                    let model = TaskModel {
+                        variant: "adapter".into(),
+                        m: Some(4),
+                        k: None,
+                        kind: "cls".into(),
+                        trained,
+                    };
+                    store.register(&format!("t{t}"), &model, tag as f64).unwrap();
+                    expected[t].push(tag);
+                }
+            }
+        }
+        for t in 0..n_tasks {
+            match store.latest(&format!("t{t}")) {
+                None => assert!(expected[t].is_empty()),
+                Some((meta, model)) => {
+                    let want = *expected[t].last().unwrap();
+                    assert_eq!(meta.version, expected[t].len());
+                    assert_eq!(
+                        model.trained.get("adapters/x").unwrap().as_f32(),
+                        &[want; 2]
+                    );
+                    // all historical versions still intact
+                    for (vi, &tag) in expected[t].iter().enumerate() {
+                        let (_, m) =
+                            store.version(&format!("t{t}"), vi + 1).unwrap();
+                        assert_eq!(
+                            m.trained.get("adapters/x").unwrap().as_f32(),
+                            &[tag; 2]
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_stats_invariants() {
+    for_seeds(50, |rng| {
+        let n = 3 + rng.below(40);
+        let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0 - 5.0).collect();
+        let ys: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0 - 5.0).collect();
+        // spearman bounded and symmetric
+        let rho = stats::spearman(&xs, &ys);
+        assert!((-1.0 - 1e-9..=1.0 + 1e-9).contains(&rho));
+        assert!((rho - stats::spearman(&ys, &xs)).abs() < 1e-9);
+        // percentile monotone in p and within range
+        let p20 = stats::percentile(&xs, 20.0);
+        let p50 = stats::percentile(&xs, 50.0);
+        let p80 = stats::percentile(&xs, 80.0);
+        assert!(p20 <= p50 && p50 <= p80);
+        let min = xs.iter().cloned().fold(f64::MAX, f64::min);
+        let max = xs.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(p20 >= min && p80 <= max);
+        // permutation invariance of mean/percentiles
+        let mut perm = xs.clone();
+        let mut r2 = Rng::new(rng.next_u64());
+        r2.shuffle(&mut perm);
+        assert!((stats::mean(&xs) - stats::mean(&perm)).abs() < 1e-9);
+        assert!((stats::percentile(&xs, 50.0)
+            - stats::percentile(&perm, 50.0))
+            .abs()
+            < 1e-12);
+        // accuracy of identical predictions is 1
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        assert_eq!(stats::accuracy(&labels, &labels), 1.0);
+    });
+}
+
+#[test]
+fn prop_tensor_serialization_bijective() {
+    for_seeds(40, |rng| {
+        let rank = rng.below(4);
+        let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(5)).collect();
+        let count: usize = shape.iter().product();
+        let t = if rng.f64() < 0.5 {
+            Tensor::f32(shape, (0..count).map(|_| rng.f32() - 0.5).collect())
+        } else {
+            Tensor::i32(
+                shape,
+                (0..count).map(|_| rng.next_u64() as i32).collect(),
+            )
+        };
+        let mut buf = Vec::new();
+        t.write_to(&mut buf);
+        let mut pos = 0;
+        let back = Tensor::read_from(&buf, &mut pos).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(pos, buf.len());
+    });
+}
+
+#[test]
+fn prop_lr_schedule_bounded_and_continuous() {
+    use adapterbert::train::lr_at;
+    for_seeds(40, |rng| {
+        let total = 2 + rng.below(500);
+        let peak = 10f64.powf(-(2.0 + rng.f64() * 3.0));
+        let mut prev = None;
+        for s in 0..total {
+            let lr = lr_at(s, total, peak, 0.1);
+            assert!(lr >= 0.0 && lr <= peak * (1.0 + 1e-9), "lr {lr} peak {peak}");
+            if let Some(p) = prev {
+                let jump: f64 = (lr - p as f64).abs();
+                // no jump larger than peak (schedule is piecewise linear)
+                assert!(jump <= peak / (total as f64 * 0.05).max(1.0) + 1e-12);
+            }
+            prev = Some(lr);
+        }
+    });
+}

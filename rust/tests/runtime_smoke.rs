@@ -1,0 +1,133 @@
+//! Integration: load + execute real AOT artifacts (test preset).
+//!
+//! Requires `make artifacts-test` (the Makefile `test` target guarantees
+//! it). These tests pin the whole python→HLO-text→PJRT bridge.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use adapterbert::runtime::{Bank, Runtime};
+use adapterbert::util::tensor::Tensor;
+
+fn artifacts_root() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::open(artifacts_root(), "test").expect("open test artifacts"))
+}
+
+/// Zero-filled banks for every input group of an executable.
+fn zero_banks(rt: &Runtime, name: &str) -> Vec<Bank> {
+    let spec = rt.manifest.exe(name).unwrap();
+    spec.input_groups()
+        .iter()
+        .map(|g| {
+            let r = spec.input_group_range(g).unwrap();
+            spec.inputs[r]
+                .iter()
+                .map(|leaf| Tensor::zeros(&leaf.shape, leaf.dtype))
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn embed_fwd_runs_and_pools() {
+    let rt = runtime();
+    let exe = rt.load("embed_fwd").unwrap();
+    let mut banks = zero_banks(&rt, "embed_fwd");
+    // tok_embed: every token id embeds to [1.0, 2.0, ...d]; mask all ones.
+    let dims = rt.manifest.dims.clone();
+    let emb: Vec<f32> = (0..dims.vocab * dims.d)
+        .map(|i| (i % dims.d) as f32)
+        .collect();
+    banks[0] = vec![Tensor::f32(vec![dims.vocab, dims.d], emb)];
+    let b = rt.manifest.exe("embed_fwd").unwrap().batch;
+    banks[2] = vec![Tensor::full_f32(&[b, dims.seq], 1.0)];
+    let refs: Vec<&Bank> = banks.iter().collect();
+    let out = exe.run(&refs).unwrap();
+    // mean over identical rows = the row itself
+    let pooled = &out[0][0];
+    assert_eq!(pooled.shape, vec![b, dims.d]);
+    for row in pooled.as_f32().chunks(dims.d) {
+        for (j, v) in row.iter().enumerate() {
+            assert!((v - j as f32).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn cls_fwd_base_executes_with_correct_shapes() {
+    let rt = runtime();
+    let exe = rt.load("cls_fwd_base").unwrap();
+    let banks = zero_banks(&rt, "cls_fwd_base");
+    let refs: Vec<&Bank> = banks.iter().collect();
+    let out = exe.run(&refs).unwrap();
+    assert_eq!(out.len(), 1);
+    let spec = rt.manifest.exe("cls_fwd_base").unwrap();
+    assert_eq!(out[0][0].shape, vec![spec.batch, rt.manifest.dims.max_classes]);
+    assert!(out[0][0].as_f32().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_returns_all_groups() {
+    let rt = runtime();
+    let name = "cls_train_adapter_m8";
+    let exe = rt.load(name).unwrap();
+    let spec = rt.manifest.exe(name).unwrap().clone();
+    let mut banks = zero_banks(&rt, name);
+    // step=1, lr=1e-3; labels zeros are fine, class_valid: first 2 classes
+    let groups = spec.input_groups();
+    for (gi, g) in groups.iter().enumerate() {
+        if *g == "step" {
+            banks[gi] = vec![Tensor::scalar_i32(1)];
+        }
+        if *g == "lr" {
+            banks[gi] = vec![Tensor::scalar_f32(1e-3)];
+        }
+        if *g == "batch" {
+            let r = spec.input_group_range(g).unwrap();
+            for (t, leaf) in banks[gi].iter_mut().zip(&spec.inputs[r.clone()]) {
+                if leaf.name.ends_with("class_valid") {
+                    let mut v = vec![0.0f32; leaf.elements()];
+                    v[0] = 1.0;
+                    v[1] = 1.0;
+                    *t = Tensor::f32(leaf.shape.clone(), v);
+                }
+                if leaf.name.ends_with("attn_mask") {
+                    *t = Tensor::full_f32(&leaf.shape, 1.0);
+                }
+            }
+        }
+    }
+    let refs: Vec<&Bank> = banks.iter().collect();
+    let out = exe.run(&refs).unwrap();
+    // outputs: trained', opt_m', opt_v', loss, metric
+    assert_eq!(out.len(), 5);
+    let trained_range = spec.input_group_range("trained").unwrap();
+    assert_eq!(out[0].len(), trained_range.len());
+    let loss = out[3][0].scalar_value_f32();
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    let acc = out[4][0].scalar_value_f32();
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn bad_bank_shapes_are_rejected() {
+    let rt = runtime();
+    let exe = rt.load("embed_fwd").unwrap();
+    let mut banks = zero_banks(&rt, "embed_fwd");
+    banks[0] = vec![Tensor::zeros(&[3, 3], adapterbert::util::tensor::DType::F32)];
+    let refs: Vec<&Bank> = banks.iter().collect();
+    assert!(exe.run(&refs).is_err());
+}
+
+#[test]
+fn compile_cache_shares_executables() {
+    let rt = runtime();
+    let a = rt.load("embed_fwd").unwrap();
+    let b = rt.load("embed_fwd").unwrap();
+    assert!(Arc::ptr_eq(&a, &b));
+    assert_eq!(rt.cached_executables(), 1);
+}
