@@ -1,11 +1,15 @@
 //! Quickstart: the minimal end-to-end path through the public API.
 //!
-//! 1. open the AOT artifacts (`make artifacts` must have run once);
+//! 1. open the runtime — on-disk AOT artifacts + PJRT when available, the
+//!    built-in synthesized manifest + native Rust backend otherwise, so
+//!    this runs out of the box with nothing pre-generated;
 //! 2. load — or pre-train and checkpoint — the shared MiniBERT base;
 //! 3. adapter-tune one small task (RTE stand-in) with the paper's recipe;
 //! 4. evaluate on the held-out test split and print the parameter math.
 //!
 //! Run: `cargo run --release --example quickstart [--preset default]`
+//! (use `--preset test` for a much faster first run on the native backend;
+//! force an engine with `--backend native|pjrt`)
 
 use std::path::Path;
 use std::sync::Arc;
@@ -27,10 +31,18 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or("default")
         .to_string();
 
+    if let Some(i) = args.iter().position(|a| a == "--backend") {
+        if let Some(b) = args.get(i + 1) {
+            adapterbert::runtime::BackendKind::parse(b)?; // reject typos loudly
+            std::env::set_var("ADAPTERBERT_BACKEND", b);
+        }
+    }
     let rt = Arc::new(Runtime::open(Path::new("artifacts"), &preset)?);
     let dims = rt.manifest.dims.clone();
     println!(
-        "MiniBERT[{preset}]: d={} L={} heads={} vocab={} seq={} ({} base params)",
+        "MiniBERT[{preset}] on {} backend: d={} L={} heads={} vocab={} seq={} \
+         ({} base params)",
+        rt.backend_name(),
         dims.d, dims.n_layers, dims.n_heads, dims.vocab, dims.seq,
         rt.manifest.base_param_count()
     );

@@ -154,8 +154,9 @@ fn main() -> anyhow::Result<()> {
     bench("tensor→literal 64KB", 200, || {
         let _ = t.to_literal().unwrap();
     });
-    bench("upload_tensor 64KB", 200, || {
-        let _ = rt.upload_tensor(&t).unwrap();
+    let one_bank: Bank = vec![t.clone()];
+    bench("upload_bank 64KB", 200, || {
+        let _ = rt.upload_bank(&one_bank).unwrap();
     });
 
     println!("== micro benches done ==");

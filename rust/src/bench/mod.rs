@@ -19,7 +19,7 @@ use crate::data::grammar::World;
 use crate::data::tasks::{generate, TaskData, TaskKind, TaskSpec};
 use crate::eval::{evaluate, TaskModel};
 use crate::model::params::NamedTensors;
-use crate::runtime::Runtime;
+use crate::runtime::{BackendKind, Runtime};
 use crate::train::{self, PretrainConfig, TrainConfig};
 
 /// Shared experiment context: runtime + world + pre-trained base.
@@ -31,9 +31,15 @@ pub struct Ctx {
 }
 
 impl Ctx {
-    /// Open artifacts, load-or-pretrain the base checkpoint.
+    /// Open artifacts, load-or-pretrain the base checkpoint. The backend
+    /// comes from `ADAPTERBERT_BACKEND` / the CLI's `--backend` flag.
     pub fn open(preset: &str, quick: bool) -> Result<Ctx> {
-        let rt = Arc::new(Runtime::open(Path::new("artifacts"), preset)?);
+        Self::open_with_backend(preset, quick, BackendKind::from_env()?)
+    }
+
+    /// Same, with an explicit execution backend.
+    pub fn open_with_backend(preset: &str, quick: bool, kind: BackendKind) -> Result<Ctx> {
+        let rt = Arc::new(Runtime::open_with(Path::new("artifacts"), preset, kind)?);
         let world = World::new(rt.manifest.dims.vocab, 0);
         let steps = if preset == "test" { 3000 } else { 800 };
         let base = train::load_or_pretrain(

@@ -18,6 +18,7 @@ pub enum Method {
     FullFineTune,
 }
 
+/// Closed-form per-task trained parameters (head excluded) for `method`.
 pub fn trained_params_per_task(dims: &ModelDims, method: Method) -> usize {
     let d = dims.d;
     let ln_all = (2 * dims.n_layers + 1) * 2 * d; // every LN incl. embedding LN
@@ -42,6 +43,7 @@ pub fn trained_params_per_task(dims: &ModelDims, method: Method) -> usize {
     }
 }
 
+/// Total parameter count of the shared base (the paper's 100% reference).
 pub fn base_params(dims: &ModelDims) -> usize {
     let d = dims.d;
     let per_layer =

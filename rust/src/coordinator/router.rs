@@ -14,7 +14,9 @@ use std::time::{Duration, Instant};
 /// When to flush a per-task queue.
 #[derive(Debug, Clone, Copy)]
 pub struct FlushPolicy {
+    /// Flush as soon as a task has this many queued requests.
     pub max_batch: usize,
+    /// Flush once the oldest queued request has waited this long.
     pub max_delay: Duration,
 }
 
@@ -34,7 +36,9 @@ struct Queued<T> {
 /// One flushed batch for a task.
 #[derive(Debug)]
 pub struct FlushedBatch<T> {
+    /// The task whose queue this batch came from.
     pub task: String,
+    /// Queued payloads in FIFO order (≤ `max_batch` of them).
     pub items: Vec<T>,
     /// queueing delay of the oldest item at flush time
     pub oldest_wait: Duration,
@@ -48,10 +52,12 @@ pub struct Router<T> {
 }
 
 impl<T> Router<T> {
+    /// An empty router with the given flush policy.
     pub fn new(policy: FlushPolicy) -> Self {
         Router { policy, queues: BTreeMap::new(), pending: 0 }
     }
 
+    /// Number of queued (not yet flushed) items across all tasks.
     pub fn pending(&self) -> usize {
         self.pending
     }

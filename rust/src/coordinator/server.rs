@@ -33,26 +33,39 @@ use crate::util::timer::Samples;
 
 /// One inference request (already tokenized; see `tokenizer` for text).
 pub struct Request {
+    /// Which registered task should serve this request.
     pub task: String,
+    /// Token ids, padded to the model's sequence length.
     pub tokens: Vec<i32>,
+    /// Segment ids (sentence-pair encoding).
     pub segments: Vec<i32>,
+    /// 1.0 for real tokens, 0.0 for padding.
     pub attn_mask: Vec<f32>,
+    /// Where the [`Response`] is delivered.
     pub reply: mpsc::Sender<Response>,
+    /// Submission time (latency accounting).
     pub submitted: Instant,
 }
 
+/// The server's answer to one [`Request`].
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// The task that served the request.
     pub task: String,
     /// argmax class (cls) — reg/span payloads unused by current demos
     pub pred_class: usize,
+    /// Submit→reply wall time.
     pub latency: Duration,
+    /// Real rows in the batch this request rode in.
     pub batch_size: usize,
 }
 
+/// Serving-loop knobs: batching policy, executor pool size, queue bound.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// When the router flushes a task's queue into a batch.
     pub flush: FlushPolicy,
+    /// Worker threads executing flushed batches.
     pub executors: usize,
     /// bounded client→router channel (backpressure)
     pub queue_capacity: usize,
@@ -68,15 +81,21 @@ impl Default for ServerConfig {
     }
 }
 
+/// Aggregated serving metrics, returned by [`Server::shutdown`].
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
+    /// Per-request submit→reply latencies.
     pub latencies: Samples,
+    /// Number of executed batches.
     pub batches: usize,
+    /// Number of completed requests.
     pub requests: u64,
+    /// Sum over batches of `real rows / batch capacity`.
     pub occupancy_sum: f64,
 }
 
 impl ServerMetrics {
+    /// Mean batch occupancy in `[0, 1]` (0 when nothing ran).
     pub fn mean_occupancy(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -92,7 +111,9 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     router_handle: Option<std::thread::JoinHandle<()>>,
     executor_handles: Vec<std::thread::JoinHandle<()>>,
+    /// Live metrics (also returned, aggregated, from [`Server::shutdown`]).
     pub metrics: Arc<Mutex<ServerMetrics>>,
+    /// Requests rejected by backpressure (`submit` on a full queue).
     pub rejected: Arc<AtomicU64>,
 }
 
@@ -220,6 +241,8 @@ impl Server {
         self.tx.send(req).map_err(|_| anyhow::anyhow!("server stopped"))
     }
 
+    /// Stop accepting work, drain the queues, join every thread and
+    /// return the aggregated metrics.
     pub fn shutdown(mut self) -> ServerMetrics {
         self.stop.store(true, Ordering::Relaxed);
         drop(self.tx);

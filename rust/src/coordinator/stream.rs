@@ -19,13 +19,18 @@ use crate::runtime::Runtime;
 use crate::store::AdapterStore;
 use crate::train::{run_sweep, SweepGrid};
 
+/// Per-arrival sweep budget for the online task stream.
 #[derive(Debug, Clone)]
 pub struct StreamConfig {
     /// adapter sizes offered to each task's sweep
     pub adapter_sizes: Vec<usize>,
+    /// Learning rates in the sweep grid.
     pub lrs: Vec<f64>,
+    /// Training epochs per run.
     pub epochs: usize,
+    /// Seeds re-run per configuration (instability control).
     pub seeds: Vec<u64>,
+    /// Sweep worker threads.
     pub threads: usize,
 }
 
@@ -41,21 +46,31 @@ impl Default for StreamConfig {
     }
 }
 
+/// Outcome of one task's arrival: scores, chosen config, memory audit.
 #[derive(Debug)]
 pub struct ArrivalReport {
+    /// The arriving task's name.
     pub task: String,
+    /// Best validation score across the sweep.
     pub val_score: f64,
+    /// Held-out test score of the registered bank.
     pub test_score: f64,
+    /// The winning train executable (encodes method + size).
     pub chosen_exe: String,
+    /// Trained parameters excluding the head (paper accounting).
     pub trained_params_no_head: usize,
     /// (old task, score at its registration, score now) — must match
     pub memory_checks: Vec<(String, f64, f64)>,
 }
 
+/// Whole-stream summary.
 #[derive(Debug)]
 pub struct StreamReport {
+    /// One report per arrived task, in order.
     pub arrivals: Vec<ArrivalReport>,
+    /// Store-wide parameter multiple vs. one base (Table 1 column).
     pub total_params_ratio: f64,
+    /// True when any memory check moved (must stay false).
     pub forgetting_detected: bool,
 }
 
@@ -72,6 +87,7 @@ pub struct TaskStream {
 }
 
 impl TaskStream {
+    /// A stream over a shared frozen base, registering into `store`.
     pub fn new(
         rt: Arc<Runtime>,
         base: NamedTensors,
@@ -90,6 +106,7 @@ impl TaskStream {
         }
     }
 
+    /// The backing adapter store.
     pub fn store(&self) -> &Arc<AdapterStore> {
         &self.store
     }

@@ -1,10 +1,11 @@
 //! adapterbert: reproduction of "Parameter-Efficient Transfer Learning for
 //! NLP" (Houlsby et al., ICML 2019) as a three-layer Rust + JAX + Pallas
-//! system. See DESIGN.md for the architecture and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! system. See ARCHITECTURE.md for the layer/backend architecture and
+//! README.md for the quickstart and paper mapping.
 //!
 //! Layer map:
-//!   * `runtime`   — PJRT loader/executor for the AOT HLO-text artifacts
+//!   * `runtime`   — pluggable execution backends (PJRT for the AOT
+//!     HLO-text artifacts, pure-Rust native kernels) behind one facade
 //!   * `model`     — parameter banks, partitions, initializers
 //!   * `data`      — synthetic corpus + task suites (paper's 26 datasets)
 //!   * `tokenizer` — text ↔ ids for the serving path

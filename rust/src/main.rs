@@ -14,8 +14,9 @@
 //! adapterbert list-tasks
 //! ```
 //!
-//! Everything runs from AOT artifacts (`make artifacts`); python is never
-//! on this path.
+//! Python is never on this path: with PJRT linked the AOT artifacts are
+//! used, and otherwise `--backend auto` (the default) runs everything on
+//! the native Rust kernels with an in-process manifest.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -28,7 +29,7 @@ use adapterbert::coordinator::{Server, ServerConfig, StreamConfig, TaskStream};
 use adapterbert::data::grammar::World;
 use adapterbert::data::tasks::{self, TaskKind};
 use adapterbert::eval::evaluate;
-use adapterbert::runtime::Runtime;
+use adapterbert::runtime::{BackendKind, Runtime};
 use adapterbert::store::AdapterStore;
 use adapterbert::tokenizer::Tokenizer;
 use adapterbert::train::{self, PretrainConfig, TrainConfig};
@@ -90,6 +91,12 @@ fn main() -> Result<()> {
     }
     let cmd = argv[0].clone();
     let args = Args::parse(&argv[1..]);
+    if let Some(b) = args.get("backend") {
+        // validate early, then hand the choice to every Runtime::open in
+        // this process (train/eval/serve/bench all route through it)
+        BackendKind::parse(b)?;
+        std::env::set_var("ADAPTERBERT_BACKEND", b);
+    }
     match cmd.as_str() {
         "pretrain" => cmd_pretrain(&args),
         "train" => cmd_train(&args),
@@ -116,16 +123,19 @@ fn print_help() {
          \x20 stream     online task stream with no-forgetting checks\n\
          \x20 serve      multi-task serving demo with latency metrics\n\
          \x20 baseline   no-BERT baseline search for one task\n\
-         \x20 bench      regenerate paper tables/figures (see DESIGN.md §6)\n\
+         \x20 bench      regenerate paper tables/figures (see ARCHITECTURE.md)\n\
          \x20 list-tasks show the synthetic task suites\n\
          \n\
-         common flags: --preset default|test  --full (bench)"
+         common flags: --preset default|test  --full (bench)\n\
+         \x20              --backend auto|pjrt|native (default auto: PJRT\n\
+         \x20              when a plugin is linked, else pure-Rust kernels)"
     );
 }
 
 fn open_runtime(args: &Args) -> Result<(Arc<Runtime>, World)> {
     let preset = args.get_or("preset", "default");
     let rt = Arc::new(Runtime::open(Path::new("artifacts"), &preset)?);
+    println!("preset {preset} on {} backend", rt.backend_name());
     let world = World::new(rt.manifest.dims.vocab, 0);
     Ok((rt, world))
 }
@@ -351,11 +361,8 @@ fn cmd_baseline(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    let what = args
-        .positional
-        .first()
-        .map(|s| s.as_str())
-        .unwrap_or("all");
+    // every positional is a bench name; no names means the full set
+    let wanted: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
     let quick = !args.flags.contains_key("full");
     let preset = args.get_or("preset", "default");
     let ctx = Ctx::open(&preset, quick)?;
@@ -382,14 +389,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
         println!("[bench {name}] done in {:.1}s", t.elapsed().as_secs_f64());
         Ok(())
     };
-    if what == "all" {
+    if wanted.is_empty() || wanted.contains(&"all") {
         for name in ["params", "table1", "fig6", "fig4", "fig5", "fig7", "fig3",
                      "sizes", "fig3x", "table2"]
         {
             run(name, &ctx)?;
         }
     } else {
-        run(what, &ctx)?;
+        for name in wanted {
+            run(name, &ctx)?;
+        }
     }
     println!("\nall requested benches done in {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())

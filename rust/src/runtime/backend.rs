@@ -1,0 +1,124 @@
+//! The execution-backend seam: everything the runtime needs from an
+//! engine that can run the manifest's executables.
+//!
+//! Two implementations exist:
+//!
+//! * [`crate::runtime::pjrt::PjrtBackend`] — compiles the AOT HLO-text
+//!   artifacts with XLA and executes them through a PJRT plugin. Fastest
+//!   when a plugin is linked; unavailable when it is not.
+//! * [`crate::runtime::native::NativeBackend`] — evaluates the manifest's
+//!   forward/train graphs with hand-written Rust kernels (matmul,
+//!   layernorm, GELU, attention, softmax-xent, the adapter bottleneck and
+//!   their backward passes). Needs no artifacts beyond the manifest — it
+//!   can even synthesize one for the built-in presets — so training,
+//!   evaluation and serving run on any plain machine.
+//!
+//! The [`crate::runtime::Runtime`] facade owns one backend, validates all
+//! bank shapes against the manifest signature *before* dispatch, and
+//! splits flat outputs back into groups — so backends only deal in
+//! positionally flattened tensors.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ExeSpec, Manifest};
+use crate::util::tensor::{DType, Tensor};
+
+/// A bank: tensors for one contiguous input group, in manifest order.
+pub type Bank = Vec<Tensor>;
+
+/// Which execution backend to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Prefer PJRT, fall back to the native kernels when no plugin loads.
+    Auto,
+    /// Require the PJRT/XLA path (error if the plugin is unavailable).
+    Pjrt,
+    /// Always use the pure-Rust kernels.
+    Native,
+}
+
+impl BackendKind {
+    /// Parse a `--backend` / `ADAPTERBERT_BACKEND` value.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            "native" | "rust" => Ok(BackendKind::Native),
+            other => bail!("unknown backend {other:?} (expected auto|pjrt|native)"),
+        }
+    }
+
+    /// Resolve from the `ADAPTERBERT_BACKEND` environment variable.
+    /// Unset means [`BackendKind::Auto`]; a set-but-invalid value is an
+    /// error (a typo must not silently select a different engine).
+    pub fn from_env() -> Result<BackendKind> {
+        match std::env::var("ADAPTERBERT_BACKEND") {
+            Ok(v) => BackendKind::parse(&v)
+                .map_err(|e| anyhow::anyhow!("ADAPTERBERT_BACKEND: {e:#}")),
+            Err(_) => Ok(BackendKind::Auto),
+        }
+    }
+}
+
+/// One flattened input argument, in manifest positional order.
+pub enum ArgTensor<'a> {
+    /// A host tensor supplied fresh for this call.
+    Host(&'a Tensor),
+    /// Slot `index` of a bank previously moved into backend storage.
+    Stored {
+        /// The backend-resident bank (downcast by the owning backend).
+        bank: &'a dyn BankStorage,
+        /// Position within the bank.
+        index: usize,
+    },
+}
+
+/// Backend-resident storage for an uploaded bank.
+///
+/// The PJRT backend keeps device buffers here; the native backend keeps
+/// host tensors. The facade only reads `shapes()` for validation; each
+/// backend downcasts via `as_any()` to recover its own storage (mixing
+/// banks across backends is an error, not undefined behavior).
+pub trait BankStorage: Send + Sync {
+    /// Shape/dtype of each slot, in upload order.
+    fn shapes(&self) -> &[(Vec<usize>, DType)];
+    /// Downcast hook for the owning backend.
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// A compiled (or interpreted) executable produced by [`Backend::compile`].
+pub trait BackendExec: Send + Sync {
+    /// Execute with `args[i]` corresponding to `spec.inputs[i]`; returns
+    /// one tensor per `spec.outputs` leaf, in manifest order. Input shapes
+    /// are already validated by the facade; output shapes are validated by
+    /// the facade after the call.
+    fn execute(&self, spec: &ExeSpec, args: &[ArgTensor<'_>]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution engine for manifest executables.
+pub trait Backend: Send + Sync {
+    /// Short name for logs/metrics ("pjrt" or "native").
+    fn name(&self) -> &'static str;
+
+    /// Prepare `spec` for execution (XLA compilation, or plan selection
+    /// for the native interpreter). Called once per executable; the
+    /// facade caches the result.
+    fn compile(&self, manifest: &Manifest, spec: &ExeSpec) -> Result<Box<dyn BackendExec>>;
+
+    /// Move a bank into backend-resident storage for reuse across calls.
+    fn upload_bank(&self, bank: &Bank) -> Result<Box<dyn BankStorage>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_rejects() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("rust").unwrap(), BackendKind::Native);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+}

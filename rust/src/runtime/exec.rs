@@ -1,25 +1,29 @@
-//! Typed execution over PJRT: load HLO text → compile once → run many.
+//! Typed execution facade: manifest signature validation, the compile
+//! cache, and group packing/unpacking — independent of which backend runs
+//! the math.
 //!
-//! `Runtime` owns the PJRT CPU client and a compile cache (compilation of
-//! the larger train-step graphs costs seconds; every caller shares the
-//! compiled executable). `Executable::run*` takes *banks* — slices of
-//! tensors in manifest group order — validates them against the signature,
-//! executes, and splits the result tuple back into output groups.
+//! [`Runtime`] owns a [`Backend`] (PJRT or native, see
+//! [`super::backend::BackendKind`]) plus a compile cache: preparing the
+//! larger train-step graphs is expensive on the PJRT path, so every caller
+//! shares one [`Executable`] per name. [`Executable::run`]/[`run_refs`]
+//! take *banks* — slices of tensors in manifest group order — validate them
+//! against the signature, execute, and split the result tuple back into
+//! output groups. Long-lived banks (the frozen base, a task's adapters)
+//! can be moved into backend storage **once** as a [`DeviceBank`] and
+//! reused across steps/batches; only per-step data (batches, scalars,
+//! updated trained params) is re-supplied per call.
 //!
-//! Buffer management: the vendored `xla` crate's literal-based
-//! `execute()` leaks every input device buffer (it `release()`s the
-//! `BufferFromHostLiteral` results and never frees them), so all execution
-//! here goes through `execute_b` with buffers owned on the Rust side.
-//! That also enables the key serving optimization: long-lived banks (the
-//! frozen base, a task's adapters) are uploaded **once** as a
-//! [`DeviceBank`] and reused across steps/batches; only per-step data
-//! (batches, scalars, updated trained params) is re-uploaded.
+//! Backend selection: [`Runtime::open`] resolves
+//! [`BackendKind::from_env`] (`ADAPTERBERT_BACKEND`, or the CLI's
+//! `--backend` flag which sets it); [`Runtime::open_with`] takes the kind
+//! explicitly. `Auto` tries PJRT and falls back to the native kernels, so
+//! everything — training, evaluation, the serving loop — runs on machines
+//! with no PJRT plugin installed. When the manifest itself is missing and
+//! the preset is a built-in, it is synthesized in-process
+//! ([`super::synth`]), removing the artifacts dependency entirely.
 //!
-//! Thread-safety: the `xla` wrappers are raw-pointer structs with no
-//! `Send`/`Sync`, but the PJRT C API guarantees thread-safe
-//! `Compile`/`Execute`/transfers (the CPU client runs its own thread
-//! pool). The `SendSync` wrapper asserts that contract so the coordinator
-//! can share `Arc<Executable>`/`DeviceBank`s across worker threads.
+//! [`run_refs`]: Executable::run_refs
+//! [`Backend`]: super::backend::Backend
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -28,91 +32,119 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::{ArgTensor, Backend, BackendExec, BackendKind, BankStorage};
 use super::manifest::{ExeSpec, LeafSpec, Manifest};
-use crate::util::tensor::{Data, DType, Tensor};
+use super::native::NativeBackend;
+use super::pjrt::PjrtBackend;
+use super::synth;
+use crate::util::tensor::{DType, Tensor};
 
-/// Wrapper asserting PJRT thread-safety (see module docs).
-struct SendSync<T>(T);
-// SAFETY: PJRT's C API is documented thread-safe for compilation,
-// execution and host↔device transfers; the CPU plugin serializes
-// internally where required. The wrapped values are only used through
-// &self methods.
-unsafe impl<T> Send for SendSync<T> {}
-unsafe impl<T> Sync for SendSync<T> {}
+pub use super::backend::Bank;
 
-/// A bank: tensors for one contiguous input group, in manifest order.
-pub type Bank = Vec<Tensor>;
-
-/// A bank resident on the PJRT device, uploaded once and reused.
+/// A bank resident in backend storage, uploaded once and reused.
 pub struct DeviceBank {
-    bufs: Vec<SendSync<xla::PjRtBuffer>>,
-    shapes: Vec<(Vec<usize>, DType)>,
+    storage: Box<dyn BankStorage>,
 }
 
 impl DeviceBank {
+    /// Number of tensors in the bank.
     pub fn len(&self) -> usize {
-        self.bufs.len()
+        self.storage.shapes().len()
     }
 
+    /// True when the bank holds no tensors.
     pub fn is_empty(&self) -> bool {
-        self.bufs.is_empty()
+        self.storage.shapes().is_empty()
     }
 }
 
-/// Input argument: host tensors (uploaded per call) or a resident bank.
+/// Input argument: host tensors (supplied per call) or a resident bank.
 pub enum BankRef<'a> {
+    /// Host-side bank, validated and uploaded on every call.
     Host(&'a Bank),
+    /// Backend-resident bank uploaded earlier via [`Runtime::upload_bank`].
     Device(&'a DeviceBank),
 }
 
+/// The execution runtime for one preset's artifacts.
 pub struct Runtime {
-    client: SendSync<xla::PjRtClient>,
+    backend: Box<dyn Backend>,
+    /// Signature contract with the compiler (loaded or synthesized).
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
-    /// cumulative time spent in XLA compilation (perf accounting)
+    /// cumulative time spent preparing executables (perf accounting)
     compile_seconds: Mutex<f64>,
 }
 
 impl Runtime {
-    /// Open the artifacts directory for `preset` under `root`.
+    /// Open the artifacts directory for `preset` under `root`, selecting
+    /// the backend from `ADAPTERBERT_BACKEND` (default: `auto`).
     pub fn open(root: &Path, preset: &str) -> Result<Runtime> {
+        Self::open_with(root, preset, BackendKind::from_env()?)
+    }
+
+    /// Open with an explicit backend choice.
+    ///
+    /// * `Pjrt` requires both the plugin and on-disk artifacts.
+    /// * `Native` and `Auto` fall back to a synthesized manifest when
+    ///   `manifest.json` is absent and `preset` is a built-in.
+    pub fn open_with(root: &Path, preset: &str, kind: BackendKind) -> Result<Runtime> {
         let dir = root.join(preset);
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        // synthesize only when the manifest is genuinely absent — a present
+        // but unparseable manifest.json is corruption the user must see,
+        // not something to silently paper over with a built-in preset
+        let on_disk = dir.join("manifest.json").exists();
+        let (manifest, synthesized) = if on_disk {
+            (Manifest::load(&dir)?, false)
+        } else {
+            match synth::builtin_manifest(preset, &dir) {
+                Some(m) if kind != BackendKind::Pjrt => (m, true),
+                _ => (Manifest::load(&dir)?, false), // reports the missing file
+            }
+        };
+        let backend: Box<dyn Backend> = match kind {
+            BackendKind::Pjrt => Box::new(PjrtBackend::new()?),
+            BackendKind::Native => Box::new(NativeBackend::new(&manifest)),
+            // a synthesized manifest has no HLO files on disk, so even a
+            // working PJRT plugin could not compile anything — go native
+            BackendKind::Auto if synthesized => Box::new(NativeBackend::new(&manifest)),
+            BackendKind::Auto => match PjrtBackend::new() {
+                Ok(b) => Box::new(b),
+                Err(_) => Box::new(NativeBackend::new(&manifest)),
+            },
+        };
         Ok(Runtime {
-            client: SendSync(client),
+            backend,
             manifest,
             cache: Mutex::new(HashMap::new()),
             compile_seconds: Mutex::new(0.0),
         })
     }
 
-    /// Get (compiling on first use) the named executable.
+    /// Which backend this runtime resolved to ("pjrt" or "native").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Get (preparing on first use) the named executable.
     pub fn load(self: &Arc<Self>, name: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
         let spec = self.manifest.exe(name)?.clone();
-        let path = self.manifest.hlo_path(name)?;
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .0
-            .compile(&comp)
-            .with_context(|| format!("XLA compile of {name}"))?;
+        let inner = self.backend.compile(&self.manifest, &spec)?;
         *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
-        let exe = Arc::new(Executable { exe: SendSync(exe), rt: self.clone(), spec });
-        self.cache
+        let exe = Arc::new(Executable { inner, spec });
+        // two threads may have compiled concurrently; everyone returns the
+        // cached winner so the one-shared-executable invariant holds
+        Ok(self
+            .cache
             .lock()
             .unwrap()
             .entry(name.to_string())
-            .or_insert_with(|| exe.clone());
-        Ok(exe)
+            .or_insert_with(|| exe)
+            .clone())
     }
 
     /// Pre-compile several executables (startup warm-up).
@@ -123,43 +155,26 @@ impl Runtime {
         Ok(())
     }
 
+    /// Cumulative executable-preparation time in seconds.
     pub fn compile_seconds(&self) -> f64 {
         *self.compile_seconds.lock().unwrap()
     }
 
+    /// Number of executables currently cached.
     pub fn cached_executables(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
 
-    /// Upload one tensor to the device.
-    pub fn upload_tensor(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        let buf = match &t.data {
-            Data::F32(v) => {
-                self.client.0.buffer_from_host_buffer::<f32>(v, &t.shape, None)
-            }
-            Data::I32(v) => {
-                self.client.0.buffer_from_host_buffer::<i32>(v, &t.shape, None)
-            }
-        }
-        .context("host→device transfer")?;
-        Ok(buf)
-    }
-
-    /// Upload a whole bank for reuse across many executions.
+    /// Move a whole bank into backend storage for reuse across executions.
     pub fn upload_bank(&self, bank: &Bank) -> Result<DeviceBank> {
-        let mut bufs = Vec::with_capacity(bank.len());
-        let mut shapes = Vec::with_capacity(bank.len());
-        for t in bank {
-            bufs.push(SendSync(self.upload_tensor(t)?));
-            shapes.push((t.shape.clone(), t.dtype()));
-        }
-        Ok(DeviceBank { bufs, shapes })
+        Ok(DeviceBank { storage: self.backend.upload_bank(bank)? })
     }
 }
 
+/// A prepared executable bound to its manifest signature.
 pub struct Executable {
-    exe: SendSync<xla::PjRtLoadedExecutable>,
-    rt: Arc<Runtime>,
+    inner: Box<dyn BackendExec>,
+    /// The manifest signature this executable was prepared from.
     pub spec: ExeSpec,
 }
 
@@ -186,31 +201,29 @@ impl Executable {
                 banks.len()
             );
         }
-        // validate + collect buffer pointers; temporaries kept alive in
-        // `uploads` until after execution
-        let mut uploads: Vec<xla::PjRtBuffer> = Vec::new();
-        let mut order: Vec<(bool, usize, usize)> = Vec::new(); // (is_upload, bank idx, pos)
+        let mut flat: Vec<ArgTensor> = Vec::with_capacity(self.spec.inputs.len());
         let mut idx = 0usize;
-        for (bi, (bank, group)) in banks.iter().zip(&groups).enumerate() {
+        for (bank, group) in banks.iter().zip(&groups) {
             match bank {
                 BankRef::Host(b) => {
                     for t in b.iter() {
-                        let leaf = self.leaf(idx, group, &t.shape, t.dtype())?;
-                        let _ = leaf;
-                        order.push((true, uploads.len(), 0));
-                        uploads.push(self.rt.upload_tensor(t)?);
+                        self.leaf(idx, group, &t.shape, t.dtype())?;
+                        flat.push(ArgTensor::Host(t));
                         idx += 1;
                     }
                 }
                 BankRef::Device(d) => {
-                    for (pos, (shape, dt)) in d.shapes.iter().enumerate() {
+                    for (pos, (shape, dt)) in d.storage.shapes().iter().enumerate() {
                         self.leaf(idx, group, shape, *dt)?;
-                        order.push((false, bi, pos));
+                        flat.push(ArgTensor::Stored {
+                            bank: d.storage.as_ref(),
+                            index: pos,
+                        });
                         idx += 1;
                     }
                 }
             }
-            if idx < self.spec.inputs.len() && &self.spec.inputs[idx].group == group {
+            if idx < self.spec.inputs.len() && self.spec.inputs[idx].group == *group {
                 bail!(
                     "{}: bank for group {group:?} is missing tensors (next: {})",
                     self.spec.name,
@@ -221,30 +234,8 @@ impl Executable {
         if idx != self.spec.inputs.len() {
             bail!("{}: packed {idx}/{} inputs", self.spec.name, self.spec.inputs.len());
         }
-        let arg_bufs: Vec<&xla::PjRtBuffer> = order
-            .iter()
-            .map(|&(is_up, a, b)| {
-                if is_up {
-                    &uploads[a]
-                } else {
-                    match &banks[a] {
-                        BankRef::Device(d) => &d.bufs[b].0,
-                        _ => unreachable!(),
-                    }
-                }
-            })
-            .collect();
-        let outs = self
-            .exe
-            .0
-            .execute_b::<&xla::PjRtBuffer>(&arg_bufs)
-            .with_context(|| format!("executing {}", self.spec.name))?;
-        drop(uploads);
-        let mut tuple = outs[0][0]
-            .to_literal_sync()
-            .context("fetching result tuple")?;
-        let parts = tuple.decompose_tuple().context("decomposing result")?;
-        self.split_outputs(parts)
+        let outs = self.inner.execute(&self.spec, &flat)?;
+        self.split_outputs(outs)
     }
 
     fn leaf(
@@ -279,10 +270,10 @@ impl Executable {
         Ok(leaf)
     }
 
-    fn split_outputs(&self, parts: Vec<xla::Literal>) -> Result<Vec<Bank>> {
+    fn split_outputs(&self, parts: Vec<Tensor>) -> Result<Vec<Bank>> {
         if parts.len() != self.spec.outputs.len() {
             bail!(
-                "{}: XLA returned {} leaves, manifest says {}",
+                "{}: backend returned {} leaves, manifest says {}",
                 self.spec.name,
                 parts.len(),
                 self.spec.outputs.len()
@@ -290,9 +281,7 @@ impl Executable {
         }
         let mut out: Vec<Bank> = Vec::new();
         let mut current_group: Option<&str> = None;
-        for (lit, leaf) in parts.iter().zip(&self.spec.outputs) {
-            let t = Tensor::from_literal(lit)
-                .with_context(|| format!("{}: output {}", self.spec.name, leaf.name))?;
+        for (t, leaf) in parts.into_iter().zip(&self.spec.outputs) {
             if t.shape != leaf.shape {
                 bail!(
                     "{}: output {} shape {:?} != manifest {:?}",

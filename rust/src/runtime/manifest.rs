@@ -37,6 +37,7 @@ pub struct LeafSpec {
 }
 
 impl LeafSpec {
+    /// Element count of this leaf (product of its shape; 1 for scalars).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -67,15 +68,18 @@ impl ExeSpec {
             .with_context(|| format!("{}: no input group {group:?}", self.name))
     }
 
+    /// Contiguous index range of `group` among the outputs.
     pub fn output_group_range(&self, group: &str) -> Result<std::ops::Range<usize>> {
         group_range(&self.outputs, group)
             .with_context(|| format!("{}: no output group {group:?}", self.name))
     }
 
+    /// Distinct input group names, in positional order.
     pub fn input_groups(&self) -> Vec<&str> {
         distinct_groups(&self.inputs)
     }
 
+    /// Distinct output group names, in positional order.
     pub fn output_groups(&self) -> Vec<&str> {
         distinct_groups(&self.outputs)
     }
@@ -121,6 +125,7 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Read `manifest.json` from an artifacts directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -129,6 +134,7 @@ impl Manifest {
         Self::from_json(&j, dir)
     }
 
+    /// Parse an already-loaded manifest document (`dir` is only recorded).
     pub fn from_json(j: &Json, dir: &Path) -> Result<Manifest> {
         let cfg = j.at("config");
         let dims = ModelDims {
@@ -156,12 +162,14 @@ impl Manifest {
         })
     }
 
+    /// Look up an executable's signature by name.
     pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
         self.executables.get(name).with_context(|| {
             format!("manifest has no executable {name:?} (preset {})", self.preset)
         })
     }
 
+    /// On-disk location of an executable's HLO text (PJRT backend only).
     pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
         Ok(self.dir.join(&self.exe(name)?.file))
     }

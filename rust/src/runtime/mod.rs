@@ -1,13 +1,33 @@
-//! Runtime: load AOT HLO-text artifacts and execute them via PJRT (CPU).
+//! Runtime: load AOT artifacts and execute them on a pluggable backend.
 //!
-//! `manifest` is the signature contract with `python/compile/aot.py`;
-//! `exec` owns the PJRT client, the compile cache and typed execution.
-//! Start-to-finish pattern (see /opt/xla-example/load_hlo/):
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
-//! `execute`.
+//! * `manifest` — the signature contract with `python/compile/aot.py`;
+//! * `backend`  — the [`Backend`] seam every engine implements;
+//! * `pjrt`     — the XLA/PJRT implementation (HLO text → compile → run);
+//! * `native`   — pure-Rust kernels evaluating the same graphs, no plugin
+//!   or artifacts required;
+//! * `synth`    — in-process manifest synthesis for the built-in presets;
+//! * `exec`     — the [`Runtime`]/[`Executable`] facade: validation,
+//!   compile cache, group packing, backend selection.
+//!
+//! ```text
+//!            train/ · eval/ · coordinator/ · bench/
+//!                           │ banks in, banks out
+//!                           ▼
+//!        Runtime ──► Executable::run_refs (validate → flatten)
+//!                           │ Backend trait
+//!               ┌───────────┴───────────┐
+//!               ▼                       ▼
+//!        PjrtBackend              NativeBackend
+//!     (HLO text → XLA)        (hand-written kernels)
+//! ```
 
+pub mod backend;
 pub mod exec;
 pub mod manifest;
+pub mod native;
+pub mod pjrt;
+pub mod synth;
 
+pub use backend::{Backend, BackendExec, BackendKind, BankStorage};
 pub use exec::{Bank, BankRef, DeviceBank, Executable, Runtime};
 pub use manifest::{ExeSpec, LeafSpec, Manifest, ModelDims};

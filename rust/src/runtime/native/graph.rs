@@ -1,0 +1,1202 @@
+//! Native evaluation of the manifest's forward/train graphs.
+//!
+//! This module re-implements the semantics of `python/compile/model.py` and
+//! `python/compile/steps.py` — MiniBERT with Houlsby adapters, the task
+//! heads, their losses, hand-derived backprop and the in-graph Adam
+//! update — dispatching on each executable's manifest metadata
+//! (`kind`/`variant`/`m`/`k`). The backward formulas were validated against
+//! `jax.value_and_grad` of the reference model for every loss kind
+//! (cls/reg/span/mlm) and every trained-parameter partition before being
+//! transcribed; the adapter's gate follows the Fig. 6 semantics exactly
+//! (`gate = 0` is a bitwise identity).
+//!
+//! Parameter resolution works by *leaf name*: the inputs are flattened into
+//! a `name → tensor` map and a small resolver maps logical paths
+//! (`layers/3/wq`, `embed_ln_g`, …) onto whichever group holds them for the
+//! executable's partition:
+//!
+//! * `pretrain`            — everything lives under `base/…`, all trained;
+//! * `adapter` / `lnonly`  — LayerNorms under `trained/base_ln/…`, the rest
+//!   under `frozen/…`; adapters/head under `trained/…`;
+//! * `topk` (k)            — layers `≥ L−k` under `trained/base_top/layers/
+//!   {i−(L−k)}/…` (python re-indexes the top slice from 0), embeddings move
+//!   to `trained` only when `k = L`;
+//! * `fwd_*`               — the merged base under `base/…`, nothing trained.
+//!
+//! Gradients accumulate into a map pre-populated with zeros for exactly the
+//! trainable leaves, so grads flowing to frozen parameters are dropped and
+//! the Adam update covers every trained leaf.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::kernels as k;
+use crate::runtime::manifest::{ExeSpec, ModelDims};
+use crate::util::tensor::{Data, DType, Tensor};
+
+/// LayerNorm epsilon baked into both built-in presets
+/// (`ModelConfig.ln_eps` in `python/compile/model.py`).
+const LN_EPS: f32 = 1e-6;
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Architecture dims plus this executable's batch size.
+struct G {
+    b: usize,
+    s: usize,
+    d: usize,
+    h: usize,
+    dh: usize,
+    ffn: usize,
+    v: usize,
+    l: usize,
+    maxc: usize,
+    p: usize,
+    tvocab: usize,
+}
+
+impl G {
+    fn new(dims: &ModelDims, batch: usize) -> G {
+        G {
+            b: batch,
+            s: dims.seq,
+            d: dims.d,
+            h: dims.n_heads,
+            dh: dims.d / dims.n_heads,
+            ffn: dims.ffn,
+            v: dims.vocab,
+            l: dims.n_layers,
+            maxc: dims.max_classes,
+            p: dims.mlm_positions,
+            tvocab: dims.type_vocab,
+        }
+    }
+
+    fn rows(&self) -> usize {
+        self.b * self.s
+    }
+}
+
+/// Flattened inputs keyed by manifest leaf name.
+struct Env<'a> {
+    map: HashMap<&'a str, &'a Tensor>,
+}
+
+impl<'a> Env<'a> {
+    fn new(spec: &'a ExeSpec, flat: &[&'a Tensor]) -> Result<Env<'a>> {
+        if flat.len() != spec.inputs.len() {
+            bail!(
+                "{}: native exec got {} inputs, manifest says {}",
+                spec.name,
+                flat.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut map = HashMap::with_capacity(flat.len());
+        for (leaf, t) in spec.inputs.iter().zip(flat) {
+            map.insert(leaf.name.as_str(), *t);
+        }
+        Ok(Env { map })
+    }
+
+    fn tensor(&self, name: &str) -> Result<&'a Tensor> {
+        self.map
+            .get(name)
+            .copied()
+            .with_context(|| format!("native exec: missing input {name:?}"))
+    }
+
+    fn f32s(&self, name: &str) -> Result<&'a [f32]> {
+        match &self.tensor(name)?.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("native exec: input {name:?} is not f32"),
+        }
+    }
+
+    fn i32s(&self, name: &str) -> Result<&'a [i32]> {
+        match &self.tensor(name)?.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => bail!("native exec: input {name:?} is not i32"),
+        }
+    }
+
+    fn scalar_f32(&self, name: &str) -> Result<f32> {
+        Ok(self.f32s(name)?[0])
+    }
+
+    fn scalar_i32(&self, name: &str) -> Result<i32> {
+        Ok(self.i32s(name)?[0])
+    }
+}
+
+/// Which trained-parameter partition this executable uses.
+#[derive(Clone, Copy)]
+enum Part {
+    Pretrain,
+    Adapter,
+    TopK(usize),
+    LnOnly,
+    Fwd,
+}
+
+fn is_ln_rel(rel: &str) -> bool {
+    if rel == "embed_ln_g" || rel == "embed_ln_b" {
+        return true;
+    }
+    matches!(
+        rel.rsplit('/').next(),
+        Some("ln1_g") | Some("ln1_b") | Some("ln2_g") | Some("ln2_b")
+    ) && rel.starts_with("layers/")
+}
+
+/// Resolves logical base/adapters/head paths to manifest leaf names.
+struct P<'a> {
+    env: &'a Env<'a>,
+    part: Part,
+    l: usize,
+}
+
+impl<'a> P<'a> {
+    fn base_name(&self, rel: &str) -> String {
+        match self.part {
+            Part::Pretrain | Part::Fwd => format!("base/{rel}"),
+            Part::Adapter | Part::LnOnly => {
+                if is_ln_rel(rel) {
+                    format!("trained/base_ln/{rel}")
+                } else {
+                    format!("frozen/{rel}")
+                }
+            }
+            Part::TopK(kk) => {
+                let lo = self.l - kk;
+                if let Some(rest) = rel.strip_prefix("layers/") {
+                    if let Some((idx, tail)) = rest.split_once('/') {
+                        if let Ok(i) = idx.parse::<usize>() {
+                            if i >= lo {
+                                return format!(
+                                    "trained/base_top/layers/{}/{tail}",
+                                    i - lo
+                                );
+                            }
+                            return format!("frozen/layers/{i}/{tail}");
+                        }
+                    }
+                    format!("frozen/layers/{rest}")
+                } else if kk == self.l {
+                    format!("trained/base_top/{rel}")
+                } else {
+                    format!("frozen/{rel}")
+                }
+            }
+        }
+    }
+
+    fn base(&self, rel: &str) -> Result<&'a [f32]> {
+        self.env.f32s(&self.base_name(rel))
+    }
+
+    fn layer_name(&self, li: usize, leaf: &str) -> String {
+        self.base_name(&format!("layers/{li}/{leaf}"))
+    }
+
+    fn layer(&self, li: usize, leaf: &str) -> Result<&'a [f32]> {
+        self.env.f32s(&self.layer_name(li, leaf))
+    }
+
+    fn adapter_name(&self, li: usize, which: &str, leaf: &str) -> String {
+        match self.part {
+            Part::Fwd => format!("adapters/layers/{li}/{which}/{leaf}"),
+            _ => format!("trained/adapters/layers/{li}/{which}/{leaf}"),
+        }
+    }
+
+    fn adapter(&self, li: usize, which: &str, leaf: &str) -> Result<&'a [f32]> {
+        self.env.f32s(&self.adapter_name(li, which, leaf))
+    }
+
+    fn head_name(&self, leaf: &str) -> String {
+        match self.part {
+            Part::Fwd => format!("head/{leaf}"),
+            _ => format!("trained/head/{leaf}"),
+        }
+    }
+
+    fn head(&self, leaf: &str) -> Result<&'a [f32]> {
+        self.env.f32s(&self.head_name(leaf))
+    }
+}
+
+/// Gradient accumulator over exactly the trainable leaves.
+struct Grads {
+    map: HashMap<String, Vec<f32>>,
+}
+
+impl Grads {
+    fn for_group(spec: &ExeSpec, group: &str) -> Result<Grads> {
+        let range = spec.input_group_range(group)?;
+        let mut map = HashMap::new();
+        for leaf in &spec.inputs[range] {
+            if leaf.dtype == DType::F32 {
+                map.insert(leaf.name.clone(), vec![0.0f32; leaf.elements()]);
+            }
+        }
+        Ok(Grads { map })
+    }
+
+    /// Accumulate `contrib` into `name` if (and only if) it is trainable.
+    fn add(&mut self, name: &str, contrib: &[f32]) {
+        if let Some(g) = self.map.get_mut(name) {
+            k::add_assign(g, contrib);
+        }
+    }
+}
+
+/// Token-level batch inputs shared by every graph.
+struct BatchIn<'a> {
+    tokens: &'a [i32],
+    segments: &'a [i32],
+    mask: &'a [f32],
+}
+
+// ---------------------------------------------------------------------------
+// encoder forward (with tape) and backward
+// ---------------------------------------------------------------------------
+
+struct AdTape {
+    /// pre-GELU bottleneck activations `x·W_down + b_down`  [R, m]
+    h: Vec<f32>,
+    /// GELU(h)  [R, m]
+    a: Vec<f32>,
+}
+
+struct LayerTape {
+    x_in: Vec<f32>,
+    q: Vec<f32>,
+    kt: Vec<f32>,
+    v: Vec<f32>,
+    /// attention probabilities  [B, H, S, S]
+    probs: Vec<f32>,
+    /// merged head outputs before the output projection  [R, d]
+    ctx: Vec<f32>,
+    /// attention sub-layer output `ctx·wo + bo`; taped only when an
+    /// adapter will consume it in backward, empty otherwise  [R, d]
+    attn_sub: Vec<f32>,
+    ad_attn: Option<AdTape>,
+    ln1: k::LnTape,
+    x_mid: Vec<f32>,
+    ffn_pre: Vec<f32>,
+    ffn_act: Vec<f32>,
+    ffn_sub: Vec<f32>,
+    ad_ffn: Option<AdTape>,
+    ln2: k::LnTape,
+}
+
+struct Tape {
+    ln_e: k::LnTape,
+    layers: Vec<LayerTape>,
+    hidden: Vec<f32>,
+}
+
+fn adapter_fwd(
+    g: &G,
+    p: &P,
+    li: usize,
+    which: &str,
+    x_sub: &[f32],
+    gate: f32,
+    m: usize,
+) -> Result<(Vec<f32>, AdTape)> {
+    let r = g.rows();
+    let wd = p.adapter(li, which, "w_down")?;
+    let bd = p.adapter(li, which, "b_down")?;
+    let wu = p.adapter(li, which, "w_up")?;
+    let bu = p.adapter(li, which, "b_up")?;
+    let h = k::linear(x_sub, wd, bd, r, g.d, m);
+    let a = k::gelu_vec(&h);
+    let delta = k::linear(&a, wu, bu, r, m, g.d);
+    let mut out = x_sub.to_vec();
+    if gate != 0.0 {
+        for (o, dl) in out.iter_mut().zip(&delta) {
+            *o += gate * dl;
+        }
+    }
+    Ok((out, AdTape { h, a }))
+}
+
+fn adapter_bwd(
+    g: &G,
+    p: &P,
+    li: usize,
+    which: &str,
+    d_out: &[f32],
+    x_sub: &[f32],
+    tape: &AdTape,
+    gate: f32,
+    m: usize,
+    grads: &mut Grads,
+) -> Result<Vec<f32>> {
+    let r = g.rows();
+    let wu = p.adapter(li, which, "w_up")?;
+    let wd = p.adapter(li, which, "w_down")?;
+    let dyv: Vec<f32> = d_out.iter().map(|v| gate * v).collect();
+    grads.add(
+        &p.adapter_name(li, which, "w_up"),
+        &k::matmul_tn(&tape.a, &dyv, r, m, g.d),
+    );
+    grads.add(&p.adapter_name(li, which, "b_up"), &k::col_sums(&dyv, g.d));
+    let mut dh = k::matmul_nt(&dyv, wu, r, g.d, m);
+    for (dv, hv) in dh.iter_mut().zip(&tape.h) {
+        *dv *= k::gelu_grad(*hv);
+    }
+    grads.add(
+        &p.adapter_name(li, which, "w_down"),
+        &k::matmul_tn(x_sub, &dh, r, g.d, m),
+    );
+    grads.add(&p.adapter_name(li, which, "b_down"), &k::col_sums(&dh, m));
+    let mut dx = k::matmul_nt(&dh, wd, r, m, g.d);
+    k::add_assign(&mut dx, d_out);
+    Ok(dx)
+}
+
+fn encode_fwd(
+    g: &G,
+    p: &P,
+    bin: &BatchIn,
+    use_adapters: bool,
+    m: usize,
+    gates: &[f32],
+) -> Result<Tape> {
+    let r = g.rows();
+    let d = g.d;
+    let tok_e = p.base("tok_embed")?;
+    let pos_e = p.base("pos_embed")?;
+    let typ_e = p.base("type_embed")?;
+    let mut emb = vec![0.0f32; r * d];
+    for bi in 0..g.b {
+        for si in 0..g.s {
+            let row = bi * g.s + si;
+            let t = bin.tokens[row].clamp(0, g.v as i32 - 1) as usize;
+            let ty = bin.segments[row].clamp(0, g.tvocab as i32 - 1) as usize;
+            let out = &mut emb[row * d..(row + 1) * d];
+            for j in 0..d {
+                out[j] = tok_e[t * d + j] + pos_e[si * d + j] + typ_e[ty * d + j];
+            }
+        }
+    }
+    let (mut x, ln_e) =
+        k::ln_fwd(&emb, p.base("embed_ln_g")?, p.base("embed_ln_b")?, d, LN_EPS);
+
+    let alpha = 1.0 / (g.dh as f32).sqrt();
+    let mut layers = Vec::with_capacity(g.l);
+    for li in 0..g.l {
+        let x_in = x;
+        let q = k::linear(&x_in, p.layer(li, "wq")?, p.layer(li, "bq")?, r, d, d);
+        let kt = k::linear(&x_in, p.layer(li, "wk")?, p.layer(li, "bk")?, r, d, d);
+        let v = k::linear(&x_in, p.layer(li, "wv")?, p.layer(li, "bv")?, r, d, d);
+        let mut probs = vec![0.0f32; g.b * g.h * g.s * g.s];
+        let mut ctx = vec![0.0f32; r * d];
+        for bi in 0..g.b {
+            for hi in 0..g.h {
+                let pbase = (bi * g.h + hi) * g.s * g.s;
+                for si in 0..g.s {
+                    let qrow = &q[(bi * g.s + si) * d + hi * g.dh..][..g.dh];
+                    let prow = &mut probs[pbase + si * g.s..][..g.s];
+                    for (ti, pv) in prow.iter_mut().enumerate() {
+                        *pv = if bin.mask[bi * g.s + ti] > 0.0 {
+                            let krow = &kt[(bi * g.s + ti) * d + hi * g.dh..][..g.dh];
+                            let mut acc = 0.0f32;
+                            for j in 0..g.dh {
+                                acc += qrow[j] * krow[j];
+                            }
+                            alpha * acc
+                        } else {
+                            k::NEG
+                        };
+                    }
+                }
+                k::softmax_rows(&mut probs[pbase..pbase + g.s * g.s], g.s);
+                for si in 0..g.s {
+                    let prow = &probs[pbase + si * g.s..][..g.s];
+                    for ti in 0..g.s {
+                        let pv = prow[ti];
+                        if pv != 0.0 {
+                            let vrow = &v[(bi * g.s + ti) * d + hi * g.dh..][..g.dh];
+                            let crow =
+                                &mut ctx[(bi * g.s + si) * d + hi * g.dh..][..g.dh];
+                            for j in 0..g.dh {
+                                crow[j] += pv * vrow[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let attn_out = k::linear(&ctx, p.layer(li, "wo")?, p.layer(li, "bo")?, r, d, d);
+        // the pre-adapter sub-layer output is only taped when an adapter
+        // consumes it in backward; otherwise it moves straight into z1
+        let (sub, ad_attn, attn_sub) = if use_adapters {
+            let (s2, t) = adapter_fwd(g, p, li, "attn", &attn_out, gates[li * 2], m)?;
+            (s2, Some(t), attn_out)
+        } else {
+            (attn_out, None, Vec::new())
+        };
+        let mut z1 = sub;
+        k::add_assign(&mut z1, &x_in);
+        let (x_mid, ln1) =
+            k::ln_fwd(&z1, p.layer(li, "ln1_g")?, p.layer(li, "ln1_b")?, d, LN_EPS);
+
+        let ffn_pre = k::linear(&x_mid, p.layer(li, "w1")?, p.layer(li, "b1")?, r, d, g.ffn);
+        let ffn_act = k::gelu_vec(&ffn_pre);
+        let ffn_out = k::linear(&ffn_act, p.layer(li, "w2")?, p.layer(li, "b2")?, r, g.ffn, d);
+        let (sub, ad_ffn, ffn_sub) = if use_adapters {
+            let (s2, t) = adapter_fwd(g, p, li, "ffn", &ffn_out, gates[li * 2 + 1], m)?;
+            (s2, Some(t), ffn_out)
+        } else {
+            (ffn_out, None, Vec::new())
+        };
+        let mut z2 = sub;
+        k::add_assign(&mut z2, &x_mid);
+        let (x_out, ln2) =
+            k::ln_fwd(&z2, p.layer(li, "ln2_g")?, p.layer(li, "ln2_b")?, d, LN_EPS);
+
+        layers.push(LayerTape {
+            x_in,
+            q,
+            kt,
+            v,
+            probs,
+            ctx,
+            attn_sub,
+            ad_attn,
+            ln1,
+            x_mid: x_mid.clone(),
+            ffn_pre,
+            ffn_act,
+            ffn_sub,
+            ad_ffn,
+            ln2,
+        });
+        x = x_out;
+    }
+    Ok(Tape { ln_e, layers, hidden: x })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn encode_bwd(
+    g: &G,
+    p: &P,
+    bin: &BatchIn,
+    tape: &Tape,
+    d_hidden: Vec<f32>,
+    m: usize,
+    gates: &[f32],
+    grads: &mut Grads,
+) -> Result<()> {
+    let r = g.rows();
+    let d = g.d;
+    let alpha = 1.0 / (g.dh as f32).sqrt();
+    let mut dx = d_hidden;
+    for li in (0..g.l).rev() {
+        let t = &tape.layers[li];
+
+        // --- ln2 ---------------------------------------------------------
+        let mut dg = vec![0.0f32; d];
+        let mut db = vec![0.0f32; d];
+        let dz2 = k::ln_bwd(&dx, &t.ln2, p.layer(li, "ln2_g")?, d, &mut dg, &mut db);
+        grads.add(&p.layer_name(li, "ln2_g"), &dg);
+        grads.add(&p.layer_name(li, "ln2_b"), &db);
+        let mut d_xmid = dz2.clone();
+
+        // --- ffn adapter + ffn -------------------------------------------
+        let d_sub = match &t.ad_ffn {
+            Some(ad) => adapter_bwd(
+                g, p, li, "ffn", &dz2, &t.ffn_sub, ad, gates[li * 2 + 1], m, grads,
+            )?,
+            None => dz2,
+        };
+        let mut dpre = k::matmul_nt(&d_sub, p.layer(li, "w2")?, r, d, g.ffn);
+        grads.add(
+            &p.layer_name(li, "w2"),
+            &k::matmul_tn(&t.ffn_act, &d_sub, r, g.ffn, d),
+        );
+        grads.add(&p.layer_name(li, "b2"), &k::col_sums(&d_sub, d));
+        for (dv, pv) in dpre.iter_mut().zip(&t.ffn_pre) {
+            *dv *= k::gelu_grad(*pv);
+        }
+        grads.add(
+            &p.layer_name(li, "w1"),
+            &k::matmul_tn(&t.x_mid, &dpre, r, d, g.ffn),
+        );
+        grads.add(&p.layer_name(li, "b1"), &k::col_sums(&dpre, g.ffn));
+        k::add_assign(&mut d_xmid, &k::matmul_nt(&dpre, p.layer(li, "w1")?, r, g.ffn, d));
+
+        // --- ln1 ---------------------------------------------------------
+        let mut dg = vec![0.0f32; d];
+        let mut db = vec![0.0f32; d];
+        let dz1 = k::ln_bwd(&d_xmid, &t.ln1, p.layer(li, "ln1_g")?, d, &mut dg, &mut db);
+        grads.add(&p.layer_name(li, "ln1_g"), &dg);
+        grads.add(&p.layer_name(li, "ln1_b"), &db);
+        let mut d_xin = dz1.clone();
+
+        // --- attention adapter + attention -------------------------------
+        let d_sub = match &t.ad_attn {
+            Some(ad) => adapter_bwd(
+                g, p, li, "attn", &dz1, &t.attn_sub, ad, gates[li * 2], m, grads,
+            )?,
+            None => dz1,
+        };
+        grads.add(
+            &p.layer_name(li, "wo"),
+            &k::matmul_tn(&t.ctx, &d_sub, r, d, d),
+        );
+        grads.add(&p.layer_name(li, "bo"), &k::col_sums(&d_sub, d));
+        let dctx = k::matmul_nt(&d_sub, p.layer(li, "wo")?, r, d, d);
+
+        let mut dq = vec![0.0f32; r * d];
+        let mut dk = vec![0.0f32; r * d];
+        let mut dv = vec![0.0f32; r * d];
+        let mut dp = vec![0.0f32; g.s];
+        for bi in 0..g.b {
+            for hi in 0..g.h {
+                let pbase = (bi * g.h + hi) * g.s * g.s;
+                for si in 0..g.s {
+                    let dcrow = &dctx[(bi * g.s + si) * d + hi * g.dh..][..g.dh];
+                    let prow = &t.probs[pbase + si * g.s..][..g.s];
+                    for ti in 0..g.s {
+                        let vrow = &t.v[(bi * g.s + ti) * d + hi * g.dh..][..g.dh];
+                        let mut acc = 0.0f32;
+                        for j in 0..g.dh {
+                            acc += dcrow[j] * vrow[j];
+                        }
+                        dp[ti] = acc;
+                        let pv = prow[ti];
+                        if pv != 0.0 {
+                            let dvrow =
+                                &mut dv[(bi * g.s + ti) * d + hi * g.dh..][..g.dh];
+                            for j in 0..g.dh {
+                                dvrow[j] += pv * dcrow[j];
+                            }
+                        }
+                    }
+                    let mut ssum = 0.0f32;
+                    for ti in 0..g.s {
+                        ssum += dp[ti] * prow[ti];
+                    }
+                    for ti in 0..g.s {
+                        if bin.mask[bi * g.s + ti] <= 0.0 {
+                            continue;
+                        }
+                        let ds = alpha * prow[ti] * (dp[ti] - ssum);
+                        if ds != 0.0 {
+                            let krow =
+                                &t.kt[(bi * g.s + ti) * d + hi * g.dh..][..g.dh];
+                            let qrow = &t.q[(bi * g.s + si) * d + hi * g.dh..][..g.dh];
+                            let dqrow =
+                                &mut dq[(bi * g.s + si) * d + hi * g.dh..][..g.dh];
+                            for j in 0..g.dh {
+                                dqrow[j] += ds * krow[j];
+                            }
+                            let dkrow =
+                                &mut dk[(bi * g.s + ti) * d + hi * g.dh..][..g.dh];
+                            for j in 0..g.dh {
+                                dkrow[j] += ds * qrow[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for (wname, bname, dmat) in
+            [("wq", "bq", &dq), ("wk", "bk", &dk), ("wv", "bv", &dv)]
+        {
+            grads.add(&p.layer_name(li, wname), &k::matmul_tn(&t.x_in, dmat, r, d, d));
+            grads.add(&p.layer_name(li, bname), &k::col_sums(dmat, d));
+            k::add_assign(&mut d_xin, &k::matmul_nt(dmat, p.layer(li, wname)?, r, d, d));
+        }
+        dx = d_xin;
+    }
+
+    // --- embedding LayerNorm + tables -------------------------------------
+    let mut dg = vec![0.0f32; d];
+    let mut db = vec![0.0f32; d];
+    let demb = k::ln_bwd(&dx, &tape.ln_e, p.base("embed_ln_g")?, d, &mut dg, &mut db);
+    grads.add(&p.base_name("embed_ln_g"), &dg);
+    grads.add(&p.base_name("embed_ln_b"), &db);
+
+    let name_tok = p.base_name("tok_embed");
+    if let Some(gt) = grads.map.get_mut(&name_tok) {
+        for bi in 0..g.b {
+            for si in 0..g.s {
+                let row = bi * g.s + si;
+                let t = bin.tokens[row].clamp(0, g.v as i32 - 1) as usize;
+                for j in 0..d {
+                    gt[t * d + j] += demb[row * d + j];
+                }
+            }
+        }
+    }
+    let name_pos = p.base_name("pos_embed");
+    if let Some(gp) = grads.map.get_mut(&name_pos) {
+        for bi in 0..g.b {
+            for si in 0..g.s {
+                let row = bi * g.s + si;
+                for j in 0..d {
+                    gp[si * d + j] += demb[row * d + j];
+                }
+            }
+        }
+    }
+    let name_typ = p.base_name("type_embed");
+    if let Some(gy) = grads.map.get_mut(&name_typ) {
+        for bi in 0..g.b {
+            for si in 0..g.s {
+                let row = bi * g.s + si;
+                let ty = bin.segments[row].clamp(0, g.tvocab as i32 - 1) as usize;
+                for j in 0..d {
+                    gy[ty * d + j] += demb[row * d + j];
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// heads: loss, metric and d_hidden per task kind
+// ---------------------------------------------------------------------------
+
+fn gather_cls_rows(g: &G, hidden: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; g.b * g.d];
+    for bi in 0..g.b {
+        out[bi * g.d..(bi + 1) * g.d]
+            .copy_from_slice(&hidden[bi * g.s * g.d..bi * g.s * g.d + g.d]);
+    }
+    out
+}
+
+/// cls: masked softmax cross-entropy + accuracy; fills `d_hidden`,
+/// accumulates head grads.
+fn cls_loss_bwd(
+    g: &G,
+    p: &P,
+    env: &Env,
+    hidden: &[f32],
+    d_hidden: &mut [f32],
+    grads: &mut Grads,
+) -> Result<(f32, f32)> {
+    let c = g.maxc;
+    let hw = p.head("w")?;
+    let hb = p.head("b")?;
+    let valid = env.f32s("batch/class_valid")?;
+    let labels = env.i32s("batch/labels")?;
+    let cls = gather_cls_rows(g, hidden);
+    let logits = k::linear(&cls, hw, hb, g.b, g.d, c);
+    let mut loss = 0.0f32;
+    let mut hits = 0usize;
+    let mut dlogits = vec![0.0f32; g.b * c];
+    let mut masked = vec![0.0f32; c];
+    for bi in 0..g.b {
+        for ci in 0..c {
+            masked[ci] = if valid[ci] > 0.0 { logits[bi * c + ci] } else { k::NEG };
+        }
+        let lab = labels[bi].clamp(0, c as i32 - 1) as usize;
+        let lse = k::log_sum_exp(&masked);
+        loss += lse - masked[lab];
+        if k::argmax(&masked) == lab {
+            hits += 1;
+        }
+        for ci in 0..c {
+            if valid[ci] > 0.0 {
+                let pr = (masked[ci] - lse).exp();
+                dlogits[bi * c + ci] =
+                    (pr - if ci == lab { 1.0 } else { 0.0 }) / g.b as f32;
+            }
+        }
+    }
+    loss /= g.b as f32;
+    let metric = hits as f32 / g.b as f32;
+    grads.add(&p.head_name("w"), &k::matmul_tn(&cls, &dlogits, g.b, g.d, c));
+    grads.add(&p.head_name("b"), &k::col_sums(&dlogits, c));
+    let dcls = k::matmul_nt(&dlogits, hw, g.b, c, g.d);
+    for bi in 0..g.b {
+        k::add_assign(
+            &mut d_hidden[bi * g.s * g.d..bi * g.s * g.d + g.d],
+            &dcls[bi * g.d..(bi + 1) * g.d],
+        );
+    }
+    Ok((loss, metric))
+}
+
+/// reg: mean squared error; the in-graph metric is `-loss` (the host
+/// computes Spearman from raw predictions).
+fn reg_loss_bwd(
+    g: &G,
+    p: &P,
+    env: &Env,
+    hidden: &[f32],
+    d_hidden: &mut [f32],
+    grads: &mut Grads,
+) -> Result<(f32, f32)> {
+    let hw = p.head("w")?; // [d, 1]
+    let hb = p.head("b")?;
+    let targets = env.f32s("batch/targets")?;
+    let cls = gather_cls_rows(g, hidden);
+    let mut loss = 0.0f32;
+    let mut dpred = vec![0.0f32; g.b];
+    for bi in 0..g.b {
+        let mut pred = hb[0];
+        for j in 0..g.d {
+            pred += cls[bi * g.d + j] * hw[j];
+        }
+        let err = pred - targets[bi];
+        loss += err * err;
+        dpred[bi] = 2.0 * err / g.b as f32;
+    }
+    loss /= g.b as f32;
+    let mut dw = vec![0.0f32; g.d];
+    let mut dbh = 0.0f32;
+    for bi in 0..g.b {
+        dbh += dpred[bi];
+        for j in 0..g.d {
+            dw[j] += cls[bi * g.d + j] * dpred[bi];
+            d_hidden[bi * g.s * g.d + j] += dpred[bi] * hw[j];
+        }
+    }
+    grads.add(&p.head_name("w"), &dw);
+    grads.add(&p.head_name("b"), &[dbh]);
+    Ok((loss, -loss))
+}
+
+/// span: mean CE over both boundaries + exact-match fraction.
+fn span_loss_bwd(
+    g: &G,
+    p: &P,
+    env: &Env,
+    bin: &BatchIn,
+    hidden: &[f32],
+    d_hidden: &mut [f32],
+    grads: &mut Grads,
+) -> Result<(f32, f32)> {
+    let r = g.rows();
+    let hw = p.head("w")?; // [d, 2]
+    let hb = p.head("b")?;
+    let spans = env.i32s("batch/spans")?;
+    let both = k::linear(hidden, hw, hb, r, g.d, 2);
+    let mut loss = 0.0f32;
+    let mut hits = 0usize;
+    let mut dboth = vec![0.0f32; r * 2];
+    let mut st = vec![0.0f32; g.s];
+    let mut en = vec![0.0f32; g.s];
+    for bi in 0..g.b {
+        for si in 0..g.s {
+            let valid = bin.mask[bi * g.s + si] > 0.0;
+            st[si] = if valid { both[(bi * g.s + si) * 2] } else { k::NEG };
+            en[si] = if valid { both[(bi * g.s + si) * 2 + 1] } else { k::NEG };
+        }
+        let s0 = spans[bi * 2].clamp(0, g.s as i32 - 1) as usize;
+        let s1 = spans[bi * 2 + 1].clamp(0, g.s as i32 - 1) as usize;
+        let lse_s = k::log_sum_exp(&st);
+        let lse_e = k::log_sum_exp(&en);
+        loss += 0.5 * ((lse_s - st[s0]) + (lse_e - en[s1]));
+        if k::argmax(&st) == s0 && k::argmax(&en) == s1 {
+            hits += 1;
+        }
+        let scale = 0.5 / g.b as f32;
+        for si in 0..g.s {
+            if bin.mask[bi * g.s + si] <= 0.0 {
+                continue;
+            }
+            let ps = (st[si] - lse_s).exp();
+            let pe = (en[si] - lse_e).exp();
+            dboth[(bi * g.s + si) * 2] =
+                scale * (ps - if si == s0 { 1.0 } else { 0.0 });
+            dboth[(bi * g.s + si) * 2 + 1] =
+                scale * (pe - if si == s1 { 1.0 } else { 0.0 });
+        }
+    }
+    loss /= g.b as f32;
+    let metric = hits as f32 / g.b as f32;
+    grads.add(&p.head_name("w"), &k::matmul_tn(hidden, &dboth, r, g.d, 2));
+    grads.add(&p.head_name("b"), &k::col_sums(&dboth, 2));
+    k::add_assign(d_hidden, &k::matmul_nt(&dboth, hw, r, 2, g.d));
+    Ok((loss, metric))
+}
+
+/// Masked-LM loss at `positions` (tied output embedding + bias); fills
+/// `d_hidden` and accumulates the tied `tok_embed`/`mlm_bias` grads.
+fn mlm_loss_bwd(
+    g: &G,
+    p: &P,
+    env: &Env,
+    hidden: &[f32],
+    d_hidden: &mut [f32],
+    grads: &mut Grads,
+) -> Result<f32> {
+    let e = p.base("tok_embed")?; // [V, d]
+    let bias = p.base("mlm_bias")?;
+    let positions = env.i32s("positions")?;
+    let targets = env.i32s("targets")?;
+    let weights = env.f32s("weights")?;
+    let denom = weights.iter().sum::<f32>().max(1.0);
+    let mut loss = 0.0f32;
+    let mut d_e = vec![0.0f32; g.v * g.d];
+    let mut d_bias = vec![0.0f32; g.v];
+    let mut logits = vec![0.0f32; g.v];
+    for bi in 0..g.b {
+        for pi in 0..g.p {
+            let w = weights[bi * g.p + pi];
+            let pos = positions[bi * g.p + pi].clamp(0, g.s as i32 - 1) as usize;
+            let row = bi * g.s + pos;
+            let hrow = &hidden[row * g.d..(row + 1) * g.d];
+            for (vv, lv) in logits.iter_mut().enumerate() {
+                let erow = &e[vv * g.d..(vv + 1) * g.d];
+                let mut acc = bias[vv];
+                for j in 0..g.d {
+                    acc += hrow[j] * erow[j];
+                }
+                *lv = acc;
+            }
+            let tgt = targets[bi * g.p + pi].clamp(0, g.v as i32 - 1) as usize;
+            let lse = k::log_sum_exp(&logits);
+            loss += w * (lse - logits[tgt]);
+            let scale = w / denom;
+            if scale != 0.0 {
+                let drow = &mut d_hidden[row * g.d..(row + 1) * g.d];
+                for vv in 0..g.v {
+                    let pr = (logits[vv] - lse).exp();
+                    let dl = scale * (pr - if vv == tgt { 1.0 } else { 0.0 });
+                    d_bias[vv] += dl;
+                    let erow = &e[vv * g.d..(vv + 1) * g.d];
+                    let gerow = &mut d_e[vv * g.d..(vv + 1) * g.d];
+                    for j in 0..g.d {
+                        drow[j] += dl * erow[j];
+                        gerow[j] += dl * hrow[j];
+                    }
+                }
+            }
+        }
+    }
+    loss /= denom;
+    grads.add(&p.base_name("tok_embed"), &d_e);
+    grads.add(&p.base_name("mlm_bias"), &d_bias);
+    Ok(loss)
+}
+
+// ---------------------------------------------------------------------------
+// Adam + output assembly
+// ---------------------------------------------------------------------------
+
+type StepMaps = (
+    HashMap<String, Vec<f32>>,
+    HashMap<String, Vec<f32>>,
+    HashMap<String, Vec<f32>>,
+);
+
+/// One Adam step over every leaf of `group`, mirroring `M.adam_update`
+/// (`step` is the 1-based i32 step for bias correction; new `m`/`v` feed
+/// the update).
+fn adam_group(
+    spec: &ExeSpec,
+    env: &Env,
+    group: &str,
+    grads: &Grads,
+    step: i32,
+    lr: f32,
+) -> Result<StepMaps> {
+    let range = spec.input_group_range(group)?;
+    let t = step as f32;
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    let mut np = HashMap::new();
+    let mut nm = HashMap::new();
+    let mut nv = HashMap::new();
+    for leaf in &spec.inputs[range] {
+        let rel = leaf
+            .name
+            .strip_prefix(group)
+            .and_then(|r| r.strip_prefix('/'))
+            .unwrap_or(&leaf.name);
+        let pcur = env.f32s(&leaf.name)?;
+        let mcur = env.f32s(&format!("opt_m/{rel}"))?;
+        let vcur = env.f32s(&format!("opt_v/{rel}"))?;
+        let gr = grads
+            .map
+            .get(&leaf.name)
+            .with_context(|| format!("{}: no gradient slot for {}", spec.name, leaf.name))?;
+        let n = pcur.len();
+        let mut pn = vec![0.0f32; n];
+        let mut mn = vec![0.0f32; n];
+        let mut vn = vec![0.0f32; n];
+        for i in 0..n {
+            let m2 = ADAM_B1 * mcur[i] + (1.0 - ADAM_B1) * gr[i];
+            let v2 = ADAM_B2 * vcur[i] + (1.0 - ADAM_B2) * gr[i] * gr[i];
+            pn[i] = pcur[i] - lr * (m2 / bc1) / ((v2 / bc2).sqrt() + ADAM_EPS);
+            mn[i] = m2;
+            vn[i] = v2;
+        }
+        np.insert(leaf.name.clone(), pn);
+        nm.insert(leaf.name.clone(), mn);
+        nv.insert(leaf.name.clone(), vn);
+    }
+    Ok((np, nm, nv))
+}
+
+/// Relative path inside an output leaf name: `out/0/a/b` → `a/b`, `out/3` → ``.
+fn out_rel(name: &str) -> &str {
+    let mut it = name.splitn(3, '/');
+    it.next();
+    it.next();
+    it.next().unwrap_or("")
+}
+
+fn assemble_step(
+    spec: &ExeSpec,
+    group: &str,
+    maps: StepMaps,
+    loss: f32,
+    metric: Option<f32>,
+) -> Result<Vec<Tensor>> {
+    let (mut np, mut nm, mut nv) = maps;
+    let mut out = Vec::with_capacity(spec.outputs.len());
+    for leaf in &spec.outputs {
+        let t = match leaf.group.as_str() {
+            "out0" | "out1" | "out2" => {
+                let key = format!("{group}/{}", out_rel(&leaf.name));
+                let map = match leaf.group.as_str() {
+                    "out0" => &mut np,
+                    "out1" => &mut nm,
+                    _ => &mut nv,
+                };
+                let data = map
+                    .remove(&key)
+                    .with_context(|| format!("{}: missing step output {key}", spec.name))?;
+                Tensor::f32(leaf.shape.clone(), data)
+            }
+            "out3" => Tensor::scalar_f32(loss),
+            "out4" => Tensor::scalar_f32(
+                metric.with_context(|| format!("{}: no metric output", spec.name))?,
+            ),
+            other => bail!("{}: unexpected output group {other:?}", spec.name),
+        };
+        out.push(t);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// per-artifact drivers
+// ---------------------------------------------------------------------------
+
+fn run_train(g: &G, spec: &ExeSpec, env: &Env) -> Result<Vec<Tensor>> {
+    let part = match spec.variant.as_str() {
+        "adapter" => Part::Adapter,
+        "lnonly" => Part::LnOnly,
+        "topk" => Part::TopK(spec.k.with_context(|| format!("{}: topk needs k", spec.name))?),
+        other => bail!("{}: unknown train variant {other:?}", spec.name),
+    };
+    let p = P { env, part, l: g.l };
+    let bin = BatchIn {
+        tokens: env.i32s("batch/tokens")?,
+        segments: env.i32s("batch/segments")?,
+        mask: env.f32s("batch/attn_mask")?,
+    };
+    let use_ad = matches!(part, Part::Adapter);
+    let m = if use_ad {
+        spec.m.with_context(|| format!("{}: adapter needs m", spec.name))?
+    } else {
+        0
+    };
+    let gates = vec![1.0f32; g.l * 2];
+    let tape = encode_fwd(g, &p, &bin, use_ad, m, &gates)?;
+    let mut grads = Grads::for_group(spec, "trained")?;
+    let mut d_hidden = vec![0.0f32; g.rows() * g.d];
+    let (loss, metric) = match spec.kind.as_str() {
+        "cls" => cls_loss_bwd(g, &p, env, &tape.hidden, &mut d_hidden, &mut grads)?,
+        "reg" => reg_loss_bwd(g, &p, env, &tape.hidden, &mut d_hidden, &mut grads)?,
+        "span" => span_loss_bwd(g, &p, env, &bin, &tape.hidden, &mut d_hidden, &mut grads)?,
+        other => bail!("{}: unknown task kind {other:?}", spec.name),
+    };
+    encode_bwd(g, &p, &bin, &tape, d_hidden, m, &gates, &mut grads)?;
+    let step = env.scalar_i32("step")?;
+    let lr = env.scalar_f32("lr")?;
+    let maps = adam_group(spec, env, "trained", &grads, step, lr)?;
+    assemble_step(spec, "trained", maps, loss, Some(metric))
+}
+
+fn run_pretrain(g: &G, spec: &ExeSpec, env: &Env) -> Result<Vec<Tensor>> {
+    let p = P { env, part: Part::Pretrain, l: g.l };
+    let bin = BatchIn {
+        tokens: env.i32s("tokens")?,
+        segments: env.i32s("segments")?,
+        mask: env.f32s("attn_mask")?,
+    };
+    let gates = vec![1.0f32; g.l * 2];
+    let tape = encode_fwd(g, &p, &bin, false, 0, &gates)?;
+    let mut grads = Grads::for_group(spec, "base")?;
+    let mut d_hidden = vec![0.0f32; g.rows() * g.d];
+    let loss = mlm_loss_bwd(g, &p, env, &tape.hidden, &mut d_hidden, &mut grads)?;
+    encode_bwd(g, &p, &bin, &tape, d_hidden, 0, &gates, &mut grads)?;
+    let step = env.scalar_i32("step")?;
+    let lr = env.scalar_f32("lr")?;
+    let maps = adam_group(spec, env, "base", &grads, step, lr)?;
+    assemble_step(spec, "base", maps, loss, None)
+}
+
+fn run_fwd(g: &G, spec: &ExeSpec, env: &Env, with_adapters: bool) -> Result<Vec<Tensor>> {
+    let p = P { env, part: Part::Fwd, l: g.l };
+    let bin = BatchIn {
+        tokens: env.i32s("tokens")?,
+        segments: env.i32s("segments")?,
+        mask: env.f32s("attn_mask")?,
+    };
+    let ones = vec![1.0f32; g.l * 2];
+    let gates = if with_adapters { env.f32s("gates")? } else { &ones[..] };
+    let m = if with_adapters {
+        spec.m.with_context(|| format!("{}: adapter needs m", spec.name))?
+    } else {
+        0
+    };
+    let tape = encode_fwd(g, &p, &bin, with_adapters, m, gates)?;
+    let hidden = &tape.hidden;
+    match spec.kind.as_str() {
+        "cls" => {
+            let cls = gather_cls_rows(g, hidden);
+            let logits = k::linear(&cls, p.head("w")?, p.head("b")?, g.b, g.d, g.maxc);
+            Ok(vec![Tensor::f32(spec.outputs[0].shape.clone(), logits)])
+        }
+        "reg" => {
+            let hw = p.head("w")?;
+            let hb = p.head("b")?;
+            let cls = gather_cls_rows(g, hidden);
+            let mut preds = vec![0.0f32; g.b];
+            for bi in 0..g.b {
+                let mut acc = hb[0];
+                for j in 0..g.d {
+                    acc += cls[bi * g.d + j] * hw[j];
+                }
+                preds[bi] = acc;
+            }
+            Ok(vec![Tensor::f32(spec.outputs[0].shape.clone(), preds)])
+        }
+        "span" => {
+            let r = g.rows();
+            let both = k::linear(hidden, p.head("w")?, p.head("b")?, r, g.d, 2);
+            let mut start = vec![k::NEG; r];
+            let mut end = vec![k::NEG; r];
+            for row in 0..r {
+                if bin.mask[row] > 0.0 {
+                    start[row] = both[row * 2];
+                    end[row] = both[row * 2 + 1];
+                }
+            }
+            Ok(vec![
+                Tensor::f32(spec.outputs[0].shape.clone(), start),
+                Tensor::f32(spec.outputs[1].shape.clone(), end),
+            ])
+        }
+        other => bail!("{}: unknown fwd kind {other:?}", spec.name),
+    }
+}
+
+fn run_embed(g: &G, spec: &ExeSpec, env: &Env) -> Result<Vec<Tensor>> {
+    let e = env.f32s("tok_embed")?;
+    let tokens = env.i32s("tokens")?;
+    let mask = env.f32s("attn_mask")?;
+    let mut out = vec![0.0f32; g.b * g.d];
+    for bi in 0..g.b {
+        let mut wsum = 0.0f32;
+        let orow = &mut out[bi * g.d..(bi + 1) * g.d];
+        for si in 0..g.s {
+            let w = mask[bi * g.s + si];
+            wsum += w;
+            if w != 0.0 {
+                let t = tokens[bi * g.s + si].clamp(0, g.v as i32 - 1) as usize;
+                let erow = &e[t * g.d..(t + 1) * g.d];
+                for j in 0..g.d {
+                    orow[j] += w * erow[j];
+                }
+            }
+        }
+        let denom = wsum.max(1.0);
+        for v in orow.iter_mut() {
+            *v /= denom;
+        }
+    }
+    Ok(vec![Tensor::f32(spec.outputs[0].shape.clone(), out)])
+}
+
+/// Entry point: evaluate one executable on flattened inputs.
+pub(crate) fn run(dims: &ModelDims, spec: &ExeSpec, flat: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let env = Env::new(spec, flat)?;
+    let g = G::new(dims, spec.batch);
+    match (spec.kind.as_str(), spec.variant.as_str()) {
+        ("mlm", "pretrain") => run_pretrain(&g, spec, &env),
+        ("embed", "fwd") => run_embed(&g, spec, &env),
+        (_, "adapter") | (_, "topk") | (_, "lnonly") => run_train(&g, spec, &env),
+        (_, "fwd_adapter") => run_fwd(&g, spec, &env, true),
+        (_, "fwd_base") => run_fwd(&g, spec, &env, false),
+        (kind, variant) => bail!(
+            "native backend cannot evaluate {} (kind {kind:?}, variant {variant:?})",
+            spec.name
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_rel_detection() {
+        assert!(is_ln_rel("embed_ln_g"));
+        assert!(is_ln_rel("layers/3/ln1_b"));
+        assert!(is_ln_rel("layers/0/ln2_g"));
+        assert!(!is_ln_rel("layers/0/wq"));
+        assert!(!is_ln_rel("mlm_bias"));
+        assert!(!is_ln_rel("adapters/layers/0/attn/w_down"));
+    }
+
+    #[test]
+    fn out_rel_strips_tuple_prefix() {
+        assert_eq!(out_rel("out/0/adapters/layers/0/attn/b_down"), "adapters/layers/0/attn/b_down");
+        assert_eq!(out_rel("out/3"), "");
+        assert_eq!(out_rel("out"), "");
+    }
+
+    #[test]
+    fn base_name_partitions() {
+        let spec = ExeSpec {
+            name: "t".into(),
+            file: "t".into(),
+            kind: "cls".into(),
+            variant: "adapter".into(),
+            m: Some(2),
+            k: None,
+            batch: 1,
+            inputs: vec![],
+            outputs: vec![],
+        };
+        let flat: Vec<&Tensor> = Vec::new();
+        let env = Env::new(&spec, &flat).unwrap();
+        let p = P { env: &env, part: Part::Adapter, l: 4 };
+        assert_eq!(p.base_name("layers/1/ln1_g"), "trained/base_ln/layers/1/ln1_g");
+        assert_eq!(p.base_name("layers/1/wq"), "frozen/layers/1/wq");
+        assert_eq!(p.base_name("embed_ln_b"), "trained/base_ln/embed_ln_b");
+        assert_eq!(p.base_name("tok_embed"), "frozen/tok_embed");
+
+        let p = P { env: &env, part: Part::TopK(2), l: 4 };
+        assert_eq!(p.base_name("layers/1/wq"), "frozen/layers/1/wq");
+        assert_eq!(p.base_name("layers/2/wq"), "trained/base_top/layers/0/wq");
+        assert_eq!(p.base_name("layers/3/ln2_b"), "trained/base_top/layers/1/ln2_b");
+        assert_eq!(p.base_name("tok_embed"), "frozen/tok_embed");
+
+        let p = P { env: &env, part: Part::TopK(4), l: 4 };
+        assert_eq!(p.base_name("tok_embed"), "trained/base_top/tok_embed");
+        assert_eq!(p.base_name("layers/0/wq"), "trained/base_top/layers/0/wq");
+
+        let p = P { env: &env, part: Part::Pretrain, l: 4 };
+        assert_eq!(p.base_name("layers/0/wq"), "base/layers/0/wq");
+    }
+}

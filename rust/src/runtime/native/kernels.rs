@@ -1,0 +1,316 @@
+//! Hand-written CPU kernels for the native backend.
+//!
+//! These mirror `python/compile/kernels/ref.py` — the repo's correctness
+//! ground truth — including the tanh-form GELU, `-1e9` masking (not
+//! `-inf`), and the `eps` placement in LayerNorm. Each differentiable op
+//! comes with its hand-derived backward pass; the whole set was validated
+//! against `jax.grad` of the reference model to machine precision before
+//! being transcribed here (see `graph.rs` module docs).
+//!
+//! Everything is plain `f32` on row-major slices, single-threaded and
+//! allocation-simple: at reproduction scale (d ≤ 64) the matmuls
+//! autovectorize well and determinism matters more than peak FLOPs —
+//! `train_task` must be bitwise reproducible per seed.
+
+/// `sqrt(2/π)` for the tanh-form GELU.
+pub const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+/// Additive mask value for padded keys/classes (matches the jnp reference).
+pub const NEG: f32 = -1e9;
+
+/// `out[n,m] = a[n,k] @ b[k,m]`.
+pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// `out[k,m] = a[n,k]ᵀ @ b[n,m]` (gradient of weights: `xᵀ·dy`).
+pub fn matmul_tn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), n * m);
+    let mut out = vec![0.0f32; k * m];
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * m..(i + 1) * m];
+        for (kk, &av) in arow.iter().enumerate() {
+            let orow = &mut out[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// `out[n,m] = a[n,k] @ b[m,k]ᵀ` (gradient of inputs: `dy·Wᵀ`).
+pub fn matmul_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), m * k);
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (j, ov) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            *ov = acc;
+        }
+    }
+    out
+}
+
+/// `x[n,m] += bias[m]` broadcast over rows.
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let m = bias.len();
+    for row in x.chunks_exact_mut(m) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// `x @ w + b` for `x[n,k]`, `w[k,m]`, `b[m]`.
+pub fn linear(x: &[f32], w: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = matmul(x, w, n, k, m);
+    add_bias(&mut out, b);
+    out
+}
+
+/// Column sums of `x[n,m]` (bias gradients).
+pub fn col_sums(x: &[f32], m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m];
+    for row in x.chunks_exact(m) {
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Element-wise `a += b`.
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// tanh-approximation GELU (the BERT variant; matches `ref.gelu`).
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// `d gelu(x) / dx`.
+pub fn gelu_grad(x: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t)
+        + 0.5 * x * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// Element-wise GELU over a slice.
+pub fn gelu_vec(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| gelu(v)).collect()
+}
+
+/// Saved activations of one LayerNorm application (enough for backward).
+pub struct LnTape {
+    /// Normalized input `(x - μ)·rstd`, row-major.
+    pub xhat: Vec<f32>,
+    /// Per-row `1/√(σ² + eps)`.
+    pub rstd: Vec<f32>,
+}
+
+/// Row-wise LayerNorm over the last dim: `y = x̂·γ + β` (matches
+/// `ref.layernorm_ref`).
+pub fn ln_fwd(x: &[f32], gamma: &[f32], beta: &[f32], d: usize, eps: f32) -> (Vec<f32>, LnTape) {
+    let rows = x.len() / d;
+    let mut y = vec![0.0f32; x.len()];
+    let mut xhat = vec![0.0f32; x.len()];
+    let mut rstd = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + eps).sqrt();
+        rstd[r] = rs;
+        for j in 0..d {
+            let xh = (xr[j] - mu) * rs;
+            xhat[r * d + j] = xh;
+            y[r * d + j] = xh * gamma[j] + beta[j];
+        }
+    }
+    (y, LnTape { xhat, rstd })
+}
+
+/// LayerNorm backward: returns `dx` and accumulates `dγ`/`dβ`.
+pub fn ln_bwd(
+    dy: &[f32],
+    tape: &LnTape,
+    gamma: &[f32],
+    d: usize,
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) -> Vec<f32> {
+    let rows = dy.len() / d;
+    let mut dx = vec![0.0f32; dy.len()];
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xhr = &tape.xhat[r * d..(r + 1) * d];
+        let rs = tape.rstd[r];
+        let mut m1 = 0.0f32; // mean of dŷ = dy·γ
+        let mut m2 = 0.0f32; // mean of dŷ·x̂
+        for j in 0..d {
+            let dxh = dyr[j] * gamma[j];
+            m1 += dxh;
+            m2 += dxh * xhr[j];
+            dgamma[j] += dyr[j] * xhr[j];
+            dbeta[j] += dyr[j];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        for j in 0..d {
+            let dxh = dyr[j] * gamma[j];
+            dx[r * d + j] = rs * (dxh - m1 - xhr[j] * m2);
+        }
+    }
+    dx
+}
+
+/// In-place numerically stable softmax over each row of `x[rows, cols]`.
+pub fn softmax_rows(x: &mut [f32], cols: usize) {
+    for row in x.chunks_exact_mut(cols) {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// `log(Σ exp(row))` of one row, numerically stable.
+pub fn log_sum_exp(row: &[f32]) -> f32 {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    max + row.iter().map(|v| (v - max).exp()).sum::<f32>().ln()
+}
+
+/// Index of the first maximum (ties break low, like `jnp.argmax`).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() <= tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn matmul_identity_and_transposes() {
+        // a = [[1,2],[3,4]], b = I
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &eye, 2, 2, 2), a);
+        // aᵀ·I = aᵀ
+        assert_eq!(matmul_tn(&a, &eye, 2, 2, 2), vec![1.0, 3.0, 2.0, 4.0]);
+        // a·Iᵀ = a
+        assert_eq!(matmul_nt(&a, &eye, 2, 2, 2), a);
+        // rectangular sanity: [1,3]x[3,1]
+        let r = matmul(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0], 1, 3, 1);
+        assert_eq!(r, vec![32.0]);
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert_close(gelu(1.0), 0.8412, 1e-3);
+        assert_close(gelu(-1.0), -0.1588, 1e-3);
+        // gelu is odd about a shift: gelu(x) - x·1 ≈ gelu(-x) for large |x|
+        assert_close(gelu(6.0), 6.0, 1e-4);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert_close(gelu_grad(x), fd, 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_normalizes_and_applies_affine() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let g = vec![1.0, 1.0, 1.0, 1.0];
+        let b = vec![0.5, 0.5, 0.5, 0.5];
+        let (y, tape) = ln_fwd(&x, &g, &b, 4, 1e-6);
+        let mean: f32 = y.iter().sum::<f32>() / 4.0;
+        assert_close(mean, 0.5, 1e-5);
+        // x̂ has unit variance
+        let var: f32 = tape.xhat.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert_close(var, 1.0, 1e-4);
+    }
+
+    #[test]
+    fn layernorm_backward_matches_finite_difference() {
+        let d = 5;
+        let x: Vec<f32> = (0..2 * d).map(|i| (i as f32 * 0.7).sin()).collect();
+        let g: Vec<f32> = (0..d).map(|i| 1.0 + 0.1 * i as f32).collect();
+        let b: Vec<f32> = (0..d).map(|i| 0.05 * i as f32).collect();
+        // scalar objective: sum of squares of the LN output
+        let f = |x: &[f32]| {
+            let (y, _) = ln_fwd(x, &g, &b, d, 1e-6);
+            y.iter().map(|v| v * v).sum::<f32>()
+        };
+        let (y, tape) = ln_fwd(&x, &g, &b, d, 1e-6);
+        let dy: Vec<f32> = y.iter().map(|v| 2.0 * v).collect();
+        let mut dg = vec![0.0f32; d];
+        let mut db = vec![0.0f32; d];
+        let dx = ln_bwd(&dy, &tape, &g, d, &mut dg, &mut db);
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            let h = 1e-2;
+            xp[i] += h;
+            xm[i] -= h;
+            let fd = (f(&xp) - f(&xm)) / (2.0 * h);
+            assert_close(dx[i], fd, 2e-2);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_argmax_breaks_ties_low() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, NEG, 0.0];
+        softmax_rows(&mut x, 3);
+        assert_close(x[0..3].iter().sum::<f32>(), 1.0, 1e-6);
+        assert_close(x[3..6].iter().sum::<f32>(), 1.0, 1e-6);
+        assert_eq!(x[4], 0.0); // masked key underflows to exactly zero
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    }
+}

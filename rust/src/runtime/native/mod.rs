@@ -1,0 +1,115 @@
+//! Native execution backend: pure-Rust kernels, no PJRT plugin required.
+//!
+//! `kernels` holds the numeric primitives (mirroring
+//! `python/compile/kernels/ref.py`) and `graph` evaluates whole manifest
+//! executables — forward passes for serving/eval and full train steps
+//! (forward + hand-derived backward + Adam) for tuning. "Compilation" is
+//! trivial: the interpreter dispatches on the executable's manifest
+//! metadata, so no artifacts beyond `manifest.json` are needed, and for the
+//! built-in presets even that can be synthesized (see
+//! [`crate::runtime::synth`]).
+//!
+//! Uploaded banks are plain host tensors ([`HostBank`]); `upload_bank` is a
+//! cheap clone kept for API parity with the PJRT backend so the serving
+//! layer's bank-caching pattern is backend-agnostic.
+
+pub mod graph;
+pub mod kernels;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{ArgTensor, Backend, BackendExec, Bank, BankStorage};
+use super::manifest::{ExeSpec, Manifest, ModelDims};
+use crate::util::tensor::{DType, Tensor};
+
+/// The pure-Rust execution backend.
+pub struct NativeBackend {
+    dims: ModelDims,
+}
+
+impl NativeBackend {
+    /// Build a backend for the manifest's architecture dims.
+    pub fn new(manifest: &Manifest) -> NativeBackend {
+        NativeBackend { dims: manifest.dims.clone() }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn compile(
+        &self,
+        _manifest: &Manifest,
+        spec: &ExeSpec,
+    ) -> Result<Box<dyn BackendExec>> {
+        // validate the dispatch up front so unsupported graphs fail at
+        // load time (like an XLA compile error would), not mid-training
+        match (spec.kind.as_str(), spec.variant.as_str()) {
+            ("mlm", "pretrain")
+            | ("embed", "fwd")
+            | (_, "adapter")
+            | (_, "topk")
+            | (_, "lnonly")
+            | (_, "fwd_adapter")
+            | (_, "fwd_base") => {}
+            (kind, variant) => bail!(
+                "native backend cannot evaluate {} (kind {kind:?}, variant {variant:?})",
+                spec.name
+            ),
+        }
+        Ok(Box::new(NativeExec { dims: self.dims.clone() }))
+    }
+
+    fn upload_bank(&self, bank: &Bank) -> Result<Box<dyn BankStorage>> {
+        let shapes = bank.iter().map(|t| (t.shape.clone(), t.dtype())).collect();
+        Ok(Box::new(HostBank { tensors: bank.clone(), shapes }))
+    }
+}
+
+/// A "device" bank for the native backend: host tensors held for reuse.
+pub struct HostBank {
+    tensors: Vec<Tensor>,
+    shapes: Vec<(Vec<usize>, DType)>,
+}
+
+impl BankStorage for HostBank {
+    fn shapes(&self) -> &[(Vec<usize>, DType)] {
+        &self.shapes
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+struct NativeExec {
+    dims: ModelDims,
+}
+
+impl BackendExec for NativeExec {
+    fn execute(&self, spec: &ExeSpec, args: &[ArgTensor<'_>]) -> Result<Vec<Tensor>> {
+        let flat: Vec<&Tensor> = args
+            .iter()
+            .map(|arg| match arg {
+                ArgTensor::Host(t) => Ok(*t),
+                ArgTensor::Stored { bank, index } => {
+                    let hb = bank
+                        .as_any()
+                        .downcast_ref::<HostBank>()
+                        .with_context(|| {
+                            format!(
+                                "{}: device bank was not uploaded via the native backend",
+                                spec.name
+                            )
+                        })?;
+                    hb.tensors.get(*index).with_context(|| {
+                        format!("{}: bank slot {index} out of range", spec.name)
+                    })
+                }
+            })
+            .collect::<Result<_>>()?;
+        graph::run(&self.dims, spec, &flat)
+    }
+}

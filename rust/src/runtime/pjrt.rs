@@ -1,0 +1,174 @@
+//! PJRT backend: load HLO text → XLA-compile once → run many.
+//!
+//! Buffer management: the vendored `xla` crate's literal-based `execute()`
+//! leaks every input device buffer (it `release()`s the
+//! `BufferFromHostLiteral` results and never frees them), so all execution
+//! here goes through `execute_b` with buffers owned on the Rust side. That
+//! also enables the key serving optimization: long-lived banks (the frozen
+//! base, a task's adapters) are uploaded **once** as a [`PjrtBank`] and
+//! reused across steps/batches; only per-step data (batches, scalars,
+//! updated trained params) is re-uploaded.
+//!
+//! Thread-safety: the `xla` wrappers are raw-pointer structs with no
+//! `Send`/`Sync`, but the PJRT C API guarantees thread-safe
+//! `Compile`/`Execute`/transfers (the CPU client runs its own thread
+//! pool). The `SendSync` wrapper asserts that contract so the coordinator
+//! can share executables and banks across worker threads.
+//!
+//! In the default offline build, `vendor/xla` is a compile stub whose
+//! `PjRtClient::cpu()` always fails; [`PjrtBackend::new`] then returns an
+//! error and the `auto` backend selection falls back to the native one.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{ArgTensor, Backend, BackendExec, Bank, BankStorage};
+use super::manifest::{ExeSpec, Manifest};
+use crate::util::tensor::{Data, DType, Tensor};
+
+/// Wrapper asserting PJRT thread-safety (see module docs).
+struct SendSync<T>(T);
+// SAFETY: PJRT's C API is documented thread-safe for compilation,
+// execution and host↔device transfers; the CPU plugin serializes
+// internally where required. The wrapped values are only used through
+// &self methods.
+unsafe impl<T> Send for SendSync<T> {}
+unsafe impl<T> Sync for SendSync<T> {}
+
+/// The XLA/PJRT execution backend.
+pub struct PjrtBackend {
+    client: Arc<SendSync<xla::PjRtClient>>,
+}
+
+impl PjrtBackend {
+    /// Open the PJRT CPU plugin; fails when no plugin is linked.
+    pub fn new() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client: Arc::new(SendSync(client)) })
+    }
+}
+
+/// Host→device transfer of one tensor (shared by backend and executables).
+fn upload_tensor(client: &SendSync<xla::PjRtClient>, t: &Tensor) -> Result<xla::PjRtBuffer> {
+    match &t.data {
+        Data::F32(v) => client.0.buffer_from_host_buffer::<f32>(v, &t.shape, None),
+        Data::I32(v) => client.0.buffer_from_host_buffer::<i32>(v, &t.shape, None),
+    }
+    .context("host→device transfer")
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(
+        &self,
+        manifest: &Manifest,
+        spec: &ExeSpec,
+    ) -> Result<Box<dyn BackendExec>> {
+        let path = manifest.hlo_path(&spec.name)?;
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {}", spec.name))?;
+        Ok(Box::new(PjrtExec { exe: SendSync(exe), client: self.client.clone() }))
+    }
+
+    fn upload_bank(&self, bank: &Bank) -> Result<Box<dyn BankStorage>> {
+        let mut bufs = Vec::with_capacity(bank.len());
+        let mut shapes = Vec::with_capacity(bank.len());
+        for t in bank {
+            bufs.push(SendSync(upload_tensor(&self.client, t)?));
+            shapes.push((t.shape.clone(), t.dtype()));
+        }
+        Ok(Box::new(PjrtBank { bufs, shapes }))
+    }
+}
+
+/// A bank resident on the PJRT device, uploaded once and reused.
+pub struct PjrtBank {
+    bufs: Vec<SendSync<xla::PjRtBuffer>>,
+    shapes: Vec<(Vec<usize>, DType)>,
+}
+
+impl BankStorage for PjrtBank {
+    fn shapes(&self) -> &[(Vec<usize>, DType)] {
+        &self.shapes
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+struct PjrtExec {
+    exe: SendSync<xla::PjRtLoadedExecutable>,
+    client: Arc<SendSync<xla::PjRtClient>>,
+}
+
+impl BackendExec for PjrtExec {
+    fn execute(&self, spec: &ExeSpec, args: &[ArgTensor<'_>]) -> Result<Vec<Tensor>> {
+        // per-call host tensors are uploaded here and freed after execution;
+        // resident banks are referenced in place
+        let mut uploads: Vec<xla::PjRtBuffer> = Vec::new();
+        for arg in args {
+            if let ArgTensor::Host(t) = arg {
+                uploads.push(upload_tensor(&self.client, t)?);
+            }
+        }
+        let mut up = 0usize;
+        let mut arg_bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for arg in args {
+            match arg {
+                ArgTensor::Host(_) => {
+                    arg_bufs.push(&uploads[up]);
+                    up += 1;
+                }
+                ArgTensor::Stored { bank, index } => {
+                    let pb = bank.as_any().downcast_ref::<PjrtBank>().with_context(
+                        || {
+                            format!(
+                                "{}: device bank was not uploaded via the PJRT backend",
+                                spec.name
+                            )
+                        },
+                    )?;
+                    arg_bufs.push(&pb.bufs[*index].0);
+                }
+            }
+        }
+        let outs = self
+            .exe
+            .0
+            .execute_b::<&xla::PjRtBuffer>(&arg_bufs)
+            .with_context(|| format!("executing {}", spec.name))?;
+        drop(uploads);
+        let mut tuple = outs[0][0]
+            .to_literal_sync()
+            .context("fetching result tuple")?;
+        let parts = tuple.decompose_tuple().context("decomposing result")?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{}: XLA returned {} leaves, manifest says {}",
+                spec.name,
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, leaf)| {
+                Tensor::from_literal(lit)
+                    .with_context(|| format!("{}: output {}", spec.name, leaf.name))
+            })
+            .collect()
+    }
+}

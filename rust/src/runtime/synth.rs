@@ -1,0 +1,599 @@
+//! Built-in manifest synthesis: the Rust mirror of `python/compile/aot.py`.
+//!
+//! The native backend interprets executables from their manifest metadata
+//! alone — it never reads HLO files — so for the two built-in presets
+//! (`default` and `test`) the manifest itself can be generated in-process.
+//! `Runtime::open` falls back to this when `artifacts/<preset>/
+//! manifest.json` is absent and the PJRT backend was not explicitly
+//! requested, which is what lets `cargo test`, the examples and the CLI run
+//! on a machine with no Python toolchain and no PJRT plugin at all.
+//!
+//! Leaf names, groups, shapes and positional order replicate the python
+//! AOT pipeline exactly (jax's pytree flattening: dict keys sorted, lists
+//! by index; verified leaf-for-leaf against `aot._leaf_entries` for every
+//! executable of both presets). If you regenerate real artifacts with
+//! `python -m compile.aot`, the on-disk manifest takes precedence and must
+//! agree with this one — `tests` below pin the parameter-count identities.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::manifest::{ExeSpec, LeafSpec, Manifest, ModelDims};
+use crate::util::tensor::DType;
+
+/// A leaf relative to its group: (relpath, shape, dtype).
+type Rel = (String, Vec<usize>, DType);
+
+/// Static description of a built-in preset (mirrors `aot.py`'s registry
+/// tables and `model.PRESETS`).
+pub struct PresetSpec {
+    /// Architecture hyper-parameters.
+    pub dims: ModelDims,
+    /// Batch size baked into every executable.
+    pub batch: usize,
+    /// Adapter sizes lowered for classification tasks.
+    pub cls_adapter_sizes: &'static [usize],
+    /// Adapter sizes for regression tasks.
+    pub reg_adapter_sizes: &'static [usize],
+    /// Adapter sizes for span tasks.
+    pub span_adapter_sizes: &'static [usize],
+    /// Top-k fine-tuning depths for classification.
+    pub cls_topk: &'static [usize],
+    /// Top-k depths for regression/span.
+    pub reg_span_topk: &'static [usize],
+}
+
+/// Look up a built-in preset by name.
+pub fn builtin(preset: &str) -> Option<PresetSpec> {
+    match preset {
+        "default" => Some(PresetSpec {
+            dims: ModelDims {
+                vocab: 512,
+                d: 64,
+                n_layers: 6,
+                n_heads: 4,
+                ffn: 256,
+                seq: 32,
+                max_classes: 20,
+                type_vocab: 2,
+                mlm_positions: 5,
+            },
+            batch: 16,
+            cls_adapter_sizes: &[1, 2, 4, 8, 16, 32, 64],
+            reg_adapter_sizes: &[4, 16, 64],
+            span_adapter_sizes: &[1, 4, 16, 64],
+            cls_topk: &[1, 2, 3, 4, 5, 6],
+            reg_span_topk: &[1, 2, 4, 6],
+        }),
+        "test" => Some(PresetSpec {
+            dims: ModelDims {
+                vocab: 256,
+                d: 32,
+                n_layers: 2,
+                n_heads: 2,
+                ffn: 64,
+                seq: 16,
+                max_classes: 6,
+                type_vocab: 2,
+                mlm_positions: 4,
+            },
+            batch: 8,
+            cls_adapter_sizes: &[4, 8],
+            reg_adapter_sizes: &[8],
+            span_adapter_sizes: &[8],
+            cls_topk: &[1, 2],
+            reg_span_topk: &[1, 2],
+        }),
+        _ => None,
+    }
+}
+
+/// Synthesize the full manifest for a built-in preset (`None` for unknown
+/// preset names). `dir` is recorded as the artifacts directory so a later
+/// switch to the PJRT backend knows where HLO files would live.
+pub fn builtin_manifest(preset: &str, dir: &Path) -> Option<Manifest> {
+    let ps = builtin(preset)?;
+    let mut executables = BTreeMap::new();
+    let mut add = |spec: ExeSpec| {
+        executables.insert(spec.name.clone(), spec);
+    };
+
+    add(pretrain_exe(&ps));
+    add(embed_exe(&ps));
+    for kind in ["cls", "reg", "span"] {
+        let (sizes, topk, lnonly) = match kind {
+            "cls" => (ps.cls_adapter_sizes, ps.cls_topk, true),
+            "reg" => (ps.reg_adapter_sizes, ps.reg_span_topk, true),
+            _ => (ps.span_adapter_sizes, ps.reg_span_topk, false),
+        };
+        for &m in sizes {
+            add(train_exe(&ps, kind, "adapter", Some(m), None));
+            add(fwd_exe(&ps, kind, true, Some(m)));
+        }
+        for &kk in topk {
+            add(train_exe(&ps, kind, "topk", None, Some(kk)));
+        }
+        if lnonly {
+            add(train_exe(&ps, kind, "lnonly", None, None));
+        }
+        add(fwd_exe(&ps, kind, false, None));
+    }
+
+    Some(Manifest {
+        preset: preset.to_string(),
+        dir: dir.to_path_buf(),
+        dims: ps.dims,
+        batch: ps.batch,
+        executables,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// parameter trees (jax pytree order: dict keys sorted, lists by index)
+// ---------------------------------------------------------------------------
+
+fn rel(path: &str, shape: Vec<usize>, dt: DType) -> Rel {
+    (path.to_string(), shape, dt)
+}
+
+fn layer_rels_full(d: &ModelDims, li: usize) -> Vec<Rel> {
+    let (dd, ff) = (d.d, d.ffn);
+    let p = |leaf: &str| format!("layers/{li}/{leaf}");
+    vec![
+        rel(&p("b1"), vec![ff], DType::F32),
+        rel(&p("b2"), vec![dd], DType::F32),
+        rel(&p("bk"), vec![dd], DType::F32),
+        rel(&p("bo"), vec![dd], DType::F32),
+        rel(&p("bq"), vec![dd], DType::F32),
+        rel(&p("bv"), vec![dd], DType::F32),
+        rel(&p("ln1_b"), vec![dd], DType::F32),
+        rel(&p("ln1_g"), vec![dd], DType::F32),
+        rel(&p("ln2_b"), vec![dd], DType::F32),
+        rel(&p("ln2_g"), vec![dd], DType::F32),
+        rel(&p("w1"), vec![dd, ff], DType::F32),
+        rel(&p("w2"), vec![ff, dd], DType::F32),
+        rel(&p("wk"), vec![dd, dd], DType::F32),
+        rel(&p("wo"), vec![dd, dd], DType::F32),
+        rel(&p("wq"), vec![dd, dd], DType::F32),
+        rel(&p("wv"), vec![dd, dd], DType::F32),
+    ]
+}
+
+fn layer_rels_noln(d: &ModelDims, li: usize) -> Vec<Rel> {
+    layer_rels_full(d, li)
+        .into_iter()
+        .filter(|(p, _, _)| !p.contains("/ln"))
+        .collect()
+}
+
+fn layer_rels_ln(d: &ModelDims, li: usize) -> Vec<Rel> {
+    layer_rels_full(d, li)
+        .into_iter()
+        .filter(|(p, _, _)| p.contains("/ln"))
+        .collect()
+}
+
+fn embed_tail_rels(d: &ModelDims) -> Vec<Rel> {
+    vec![
+        rel("mlm_bias", vec![d.vocab], DType::F32),
+        rel("pos_embed", vec![d.seq, d.d], DType::F32),
+        rel("tok_embed", vec![d.vocab, d.d], DType::F32),
+        rel("type_embed", vec![d.type_vocab, d.d], DType::F32),
+    ]
+}
+
+fn base_rels(d: &ModelDims) -> Vec<Rel> {
+    let mut out = vec![
+        rel("embed_ln_b", vec![d.d], DType::F32),
+        rel("embed_ln_g", vec![d.d], DType::F32),
+    ];
+    for li in 0..d.n_layers {
+        out.extend(layer_rels_full(d, li));
+    }
+    out.extend(embed_tail_rels(d));
+    out
+}
+
+fn frozen_noln_rels(d: &ModelDims) -> Vec<Rel> {
+    let mut out = Vec::new();
+    for li in 0..d.n_layers {
+        out.extend(layer_rels_noln(d, li));
+    }
+    out.extend(embed_tail_rels(d));
+    out
+}
+
+fn ln_rels(d: &ModelDims) -> Vec<Rel> {
+    let mut out = vec![
+        rel("embed_ln_b", vec![d.d], DType::F32),
+        rel("embed_ln_g", vec![d.d], DType::F32),
+    ];
+    for li in 0..d.n_layers {
+        out.extend(layer_rels_ln(d, li));
+    }
+    out
+}
+
+fn adapters_rels(d: &ModelDims, m: usize) -> Vec<Rel> {
+    let mut out = Vec::new();
+    for li in 0..d.n_layers {
+        for which in ["attn", "ffn"] {
+            let p = |leaf: &str| format!("layers/{li}/{which}/{leaf}");
+            out.push(rel(&p("b_down"), vec![m], DType::F32));
+            out.push(rel(&p("b_up"), vec![d.d], DType::F32));
+            out.push(rel(&p("w_down"), vec![d.d, m], DType::F32));
+            out.push(rel(&p("w_up"), vec![m, d.d], DType::F32));
+        }
+    }
+    out
+}
+
+fn head_rels(d: &ModelDims, kind: &str) -> Vec<Rel> {
+    let n_out = match kind {
+        "cls" => d.max_classes,
+        "reg" => 1,
+        _ => 2,
+    };
+    vec![
+        rel("b", vec![n_out], DType::F32),
+        rel("w", vec![d.d, n_out], DType::F32),
+    ]
+}
+
+fn with_prefix(prefix: &str, rels: Vec<Rel>) -> Vec<Rel> {
+    rels.into_iter()
+        .map(|(p, s, t)| (format!("{prefix}/{p}"), s, t))
+        .collect()
+}
+
+/// Trained tree per variant (python: dict keys sorted at every level).
+fn trained_rels(d: &ModelDims, kind: &str, variant: &str, m: Option<usize>, k: Option<usize>) -> Vec<Rel> {
+    let mut out = Vec::new();
+    match variant {
+        "adapter" => {
+            out.extend(with_prefix("adapters", adapters_rels(d, m.unwrap())));
+            out.extend(with_prefix("base_ln", ln_rels(d)));
+        }
+        "lnonly" => out.extend(with_prefix("base_ln", ln_rels(d))),
+        "topk" => {
+            let kk = k.unwrap();
+            let mut top = Vec::new();
+            if kk == d.n_layers {
+                top.push(rel("embed_ln_b", vec![d.d], DType::F32));
+                top.push(rel("embed_ln_g", vec![d.d], DType::F32));
+            }
+            // python re-indexes the trained top slice from 0
+            for j in 0..kk {
+                top.extend(layer_rels_full(d, j));
+            }
+            if kk == d.n_layers {
+                top.extend(embed_tail_rels(d));
+            }
+            out.extend(with_prefix("base_top", top));
+        }
+        other => unreachable!("variant {other}"),
+    }
+    out.extend(with_prefix("head", head_rels(d, kind)));
+    out
+}
+
+/// Frozen tree per variant; empty means the group is absent entirely.
+fn frozen_rels(d: &ModelDims, variant: &str, k: Option<usize>) -> Vec<Rel> {
+    match variant {
+        "adapter" | "lnonly" => frozen_noln_rels(d),
+        "topk" => {
+            let kk = k.unwrap();
+            if kk == d.n_layers {
+                return Vec::new(); // full fine-tuning: nothing frozen
+            }
+            let lo = d.n_layers - kk;
+            let mut out = vec![
+                rel("embed_ln_b", vec![d.d], DType::F32),
+                rel("embed_ln_g", vec![d.d], DType::F32),
+            ];
+            for li in 0..lo {
+                out.extend(layer_rels_full(d, li));
+            }
+            out.extend(embed_tail_rels(d));
+            out
+        }
+        other => unreachable!("variant {other}"),
+    }
+}
+
+fn batch_rels(d: &ModelDims, kind: &str, b: usize) -> Vec<Rel> {
+    let mut out = vec![rel("attn_mask", vec![b, d.seq], DType::F32)];
+    match kind {
+        "cls" => {
+            out.push(rel("class_valid", vec![d.max_classes], DType::F32));
+            out.push(rel("labels", vec![b], DType::I32));
+            out.push(rel("segments", vec![b, d.seq], DType::I32));
+        }
+        "reg" => {
+            out.push(rel("segments", vec![b, d.seq], DType::I32));
+            out.push(rel("targets", vec![b], DType::F32));
+        }
+        _ => {
+            out.push(rel("segments", vec![b, d.seq], DType::I32));
+            out.push(rel("spans", vec![b, 2], DType::I32));
+        }
+    }
+    out.push(rel("tokens", vec![b, d.seq], DType::I32));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// executables
+// ---------------------------------------------------------------------------
+
+/// Expand rels to leaves: `name = prefix/rel` (or just `prefix` when the
+/// rel is empty — single-leaf groups and scalar outputs).
+fn leaves(rels: &[Rel], prefix: &str, group: &str) -> Vec<LeafSpec> {
+    rels.iter()
+        .map(|(p, shape, dt)| LeafSpec {
+            name: if p.is_empty() { prefix.to_string() } else { format!("{prefix}/{p}") },
+            group: group.to_string(),
+            shape: shape.clone(),
+            dtype: *dt,
+        })
+        .collect()
+}
+
+fn scalar(group: &str, dt: DType) -> Vec<LeafSpec> {
+    leaves(&[(String::new(), vec![], dt)], group, group)
+}
+
+fn single(group: &str, shape: Vec<usize>, dt: DType) -> Vec<LeafSpec> {
+    leaves(&[(String::new(), shape, dt)], group, group)
+}
+
+fn pretrain_exe(ps: &PresetSpec) -> ExeSpec {
+    let d = &ps.dims;
+    let b = ps.batch;
+    let base = base_rels(d);
+    let mut inputs = leaves(&base, "base", "base");
+    inputs.extend(leaves(&base, "opt_m", "opt_m"));
+    inputs.extend(leaves(&base, "opt_v", "opt_v"));
+    inputs.extend(scalar("step", DType::I32));
+    inputs.extend(single("tokens", vec![b, d.seq], DType::I32));
+    inputs.extend(single("segments", vec![b, d.seq], DType::I32));
+    inputs.extend(single("attn_mask", vec![b, d.seq], DType::F32));
+    inputs.extend(single("positions", vec![b, d.mlm_positions], DType::I32));
+    inputs.extend(single("targets", vec![b, d.mlm_positions], DType::I32));
+    inputs.extend(single("weights", vec![b, d.mlm_positions], DType::F32));
+    inputs.extend(scalar("lr", DType::F32));
+    let mut outputs = leaves(&base, "out/0", "out0");
+    outputs.extend(leaves(&base, "out/1", "out1"));
+    outputs.extend(leaves(&base, "out/2", "out2"));
+    outputs.extend(leaves(&[(String::new(), vec![], DType::F32)], "out/3", "out3"));
+    ExeSpec {
+        name: "pretrain_step".into(),
+        file: "pretrain_step.hlo.txt".into(),
+        kind: "mlm".into(),
+        variant: "pretrain".into(),
+        m: None,
+        k: None,
+        batch: b,
+        inputs,
+        outputs,
+    }
+}
+
+fn embed_exe(ps: &PresetSpec) -> ExeSpec {
+    let d = &ps.dims;
+    let b = ps.batch;
+    let mut inputs = single("tok_embed", vec![d.vocab, d.d], DType::F32);
+    inputs.extend(single("tokens", vec![b, d.seq], DType::I32));
+    inputs.extend(single("attn_mask", vec![b, d.seq], DType::F32));
+    let outputs = leaves(&[(String::new(), vec![b, d.d], DType::F32)], "out", "out0");
+    ExeSpec {
+        name: "embed_fwd".into(),
+        file: "embed_fwd.hlo.txt".into(),
+        kind: "embed".into(),
+        variant: "fwd".into(),
+        m: None,
+        k: None,
+        batch: b,
+        inputs,
+        outputs,
+    }
+}
+
+fn train_exe(
+    ps: &PresetSpec,
+    kind: &str,
+    variant: &str,
+    m: Option<usize>,
+    k: Option<usize>,
+) -> ExeSpec {
+    let d = &ps.dims;
+    let b = ps.batch;
+    let frozen = frozen_rels(d, variant, k);
+    let trained = trained_rels(d, kind, variant, m, k);
+    let mut inputs = Vec::new();
+    if !frozen.is_empty() {
+        inputs.extend(leaves(&frozen, "frozen", "frozen"));
+    }
+    inputs.extend(leaves(&trained, "trained", "trained"));
+    inputs.extend(leaves(&trained, "opt_m", "opt_m"));
+    inputs.extend(leaves(&trained, "opt_v", "opt_v"));
+    inputs.extend(scalar("step", DType::I32));
+    inputs.extend(leaves(&batch_rels(d, kind, b), "batch", "batch"));
+    inputs.extend(scalar("lr", DType::F32));
+    let mut outputs = leaves(&trained, "out/0", "out0");
+    outputs.extend(leaves(&trained, "out/1", "out1"));
+    outputs.extend(leaves(&trained, "out/2", "out2"));
+    outputs.extend(leaves(&[(String::new(), vec![], DType::F32)], "out/3", "out3"));
+    outputs.extend(leaves(&[(String::new(), vec![], DType::F32)], "out/4", "out4"));
+    let name = match variant {
+        "adapter" => format!("{kind}_train_adapter_m{}", m.unwrap()),
+        "topk" => format!("{kind}_train_topk_k{}", k.unwrap()),
+        _ => format!("{kind}_train_lnonly"),
+    };
+    ExeSpec {
+        name: name.clone(),
+        file: format!("{name}.hlo.txt"),
+        kind: kind.into(),
+        variant: variant.into(),
+        m,
+        k,
+        batch: b,
+        inputs,
+        outputs,
+    }
+}
+
+fn fwd_exe(ps: &PresetSpec, kind: &str, with_adapters: bool, m: Option<usize>) -> ExeSpec {
+    let d = &ps.dims;
+    let b = ps.batch;
+    let mut inputs = leaves(&base_rels(d), "base", "base");
+    if with_adapters {
+        inputs.extend(leaves(&adapters_rels(d, m.unwrap()), "adapters", "adapters"));
+    }
+    inputs.extend(leaves(&head_rels(d, kind), "head", "head"));
+    if with_adapters {
+        inputs.extend(single("gates", vec![d.n_layers, 2], DType::F32));
+    }
+    inputs.extend(single("tokens", vec![b, d.seq], DType::I32));
+    inputs.extend(single("segments", vec![b, d.seq], DType::I32));
+    inputs.extend(single("attn_mask", vec![b, d.seq], DType::F32));
+    let outputs = match kind {
+        "cls" => leaves(&[(String::new(), vec![b, d.max_classes], DType::F32)], "out", "out0"),
+        "reg" => leaves(&[(String::new(), vec![b], DType::F32)], "out", "out0"),
+        _ => {
+            let mut o =
+                leaves(&[(String::new(), vec![b, d.seq], DType::F32)], "out/0", "out0");
+            o.extend(leaves(&[(String::new(), vec![b, d.seq], DType::F32)], "out/1", "out1"));
+            o
+        }
+    };
+    let (name, variant) = if with_adapters {
+        (format!("{kind}_fwd_adapter_m{}", m.unwrap()), "fwd_adapter")
+    } else {
+        (format!("{kind}_fwd_base"), "fwd_base")
+    };
+    ExeSpec {
+        name: name.clone(),
+        file: format!("{name}.hlo.txt"),
+        kind: kind.into(),
+        variant: variant.into(),
+        m: if with_adapters { m } else { None },
+        k: None,
+        batch: b,
+        inputs,
+        outputs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::memory;
+
+    fn man() -> Manifest {
+        builtin_manifest("test", Path::new("/tmp/none")).unwrap()
+    }
+
+    #[test]
+    fn test_preset_registry_is_complete() {
+        let m = man();
+        for name in [
+            "pretrain_step",
+            "embed_fwd",
+            "cls_train_adapter_m4",
+            "cls_train_adapter_m8",
+            "cls_fwd_adapter_m8",
+            "cls_train_topk_k1",
+            "cls_train_topk_k2",
+            "cls_train_lnonly",
+            "cls_fwd_base",
+            "reg_train_adapter_m8",
+            "reg_fwd_base",
+            "span_train_adapter_m8",
+            "span_fwd_base",
+        ] {
+            assert!(m.exe(name).is_ok(), "missing {name}");
+        }
+        assert_eq!(m.executables.len(), 21);
+    }
+
+    #[test]
+    fn leaf_counts_match_python_lowering() {
+        // counts pinned against aot._leaf_entries output for preset "test"
+        let m = man();
+        let e = m.exe("cls_train_adapter_m8").unwrap();
+        assert_eq!(e.inputs.len(), 119);
+        assert_eq!(e.outputs.len(), 28 * 3 + 2);
+        assert_eq!(
+            e.input_groups(),
+            vec!["frozen", "trained", "opt_m", "opt_v", "step", "batch", "lr"]
+        );
+        assert_eq!(e.input_group_range("frozen").unwrap().len(), 28);
+        assert_eq!(e.input_group_range("trained").unwrap().len(), 28);
+        assert_eq!(e.input_group_range("batch").unwrap().len(), 5);
+
+        let p = m.exe("pretrain_step").unwrap();
+        assert_eq!(p.input_group_range("base").unwrap().len(), 38);
+        assert_eq!(p.output_groups(), vec!["out0", "out1", "out2", "out3"]);
+
+        // full fine-tuning (k = n_layers) has no frozen group at all
+        let t2 = m.exe("cls_train_topk_k2").unwrap();
+        assert!(t2.input_group_range("frozen").is_err());
+        assert_eq!(t2.input_group_range("trained").unwrap().len(), 40);
+
+        let t1 = m.exe("cls_train_topk_k1").unwrap();
+        assert_eq!(t1.input_group_range("frozen").unwrap().len(), 22);
+        assert_eq!(t1.input_group_range("trained").unwrap().len(), 18);
+
+        let f = m.exe("cls_fwd_adapter_m8").unwrap();
+        assert_eq!(
+            f.input_groups(),
+            vec!["base", "adapters", "head", "gates", "tokens", "segments", "attn_mask"]
+        );
+        assert_eq!(f.outputs.len(), 1);
+        assert_eq!(f.outputs[0].shape, vec![8, 6]);
+
+        let sf = m.exe("span_fwd_base").unwrap();
+        assert_eq!(sf.output_groups(), vec!["out0", "out1"]);
+    }
+
+    #[test]
+    fn param_counts_match_closed_forms() {
+        let m = man();
+        // base group of the pretrain step == the paper's 100% reference
+        let p = m.exe("pretrain_step").unwrap();
+        assert_eq!(p.group_param_count("base"), m.base_param_count());
+        // every cls train exe's trained-minus-head == the Table 1 formulas
+        for (name, formula, actual) in memory::audit_against_manifest(&m) {
+            assert_eq!(formula, actual, "param accounting mismatch for {name}");
+        }
+    }
+
+    #[test]
+    fn default_preset_synthesizes_consistently() {
+        let m = builtin_manifest("default", Path::new("/tmp/none")).unwrap();
+        assert_eq!(m.dims.d, 64);
+        assert!(m.exe("cls_train_adapter_m64").is_ok());
+        assert!(m.exe("cls_train_topk_k6").is_ok());
+        assert!(m.exe("span_fwd_adapter_m16").is_ok());
+        for (name, formula, actual) in memory::audit_against_manifest(&m) {
+            assert_eq!(formula, actual, "param accounting mismatch for {name}");
+        }
+        assert!(builtin_manifest("nope", Path::new("/tmp/none")).is_none());
+    }
+
+    #[test]
+    fn leaf_order_is_sorted_like_jax_pytrees() {
+        let m = man();
+        let e = m.exe("cls_train_adapter_m8").unwrap();
+        let trained: Vec<&str> = {
+            let r = e.input_group_range("trained").unwrap();
+            e.inputs[r].iter().map(|l| l.name.as_str()).collect()
+        };
+        let mut sorted = trained.clone();
+        sorted.sort_unstable();
+        assert_eq!(trained, sorted, "trained leaves must be in sorted pytree order");
+        assert_eq!(trained[0], "trained/adapters/layers/0/attn/b_down");
+        assert_eq!(*trained.last().unwrap(), "trained/head/w");
+    }
+}

@@ -44,10 +44,13 @@ pub struct AdapterStore {
 }
 
 impl AdapterStore {
+    /// A store with no disk persistence (tests, demos).
     pub fn in_memory() -> AdapterStore {
         AdapterStore { root: None, tasks: Mutex::new(BTreeMap::new()) }
     }
 
+    /// Open (creating if needed) a disk-backed store rooted at `root`,
+    /// loading every bank already registered there.
     pub fn at(root: &Path) -> Result<AdapterStore> {
         std::fs::create_dir_all(root)
             .with_context(|| format!("creating store root {root:?}"))?;
@@ -95,6 +98,7 @@ impl AdapterStore {
             .map(|e| (e.meta.clone(), e.model.clone()))
     }
 
+    /// A specific registered version (1-based), if it exists.
     pub fn version(&self, task: &str, version: usize)
                    -> Option<(BankMeta, Arc<TaskModel>)> {
         let tasks = self.tasks.lock().unwrap();
@@ -103,10 +107,12 @@ impl AdapterStore {
         })
     }
 
+    /// All registered task names, sorted.
     pub fn task_names(&self) -> Vec<String> {
         self.tasks.lock().unwrap().keys().cloned().collect()
     }
 
+    /// Count of banks across every task and version.
     pub fn total_versions(&self) -> usize {
         self.tasks.lock().unwrap().values().map(|v| v.len()).sum()
     }

@@ -1,4 +1,4 @@
-//! MLM pre-training: produces the repo's "pre-trained BERT" (DESIGN.md §2).
+//! MLM pre-training: produces the repo's "pre-trained BERT" (ARCHITECTURE.md).
 //!
 //! Drives the `pretrain_step` artifact over the synthetic topic corpus and
 //! checkpoints the resulting base parameters; every downstream experiment
@@ -122,11 +122,15 @@ pub fn pretrain(
 }
 
 /// Checkpoint helpers: the shared base lives beside the run artifacts.
+/// Writes go through a temp file + rename so concurrent readers (parallel
+/// test binaries sharing one checkpoint) never observe a partial file.
 pub fn save_base(base: &NamedTensors, path: &Path) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::write(path, base.to_bytes()).with_context(|| format!("writing {path:?}"))
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    std::fs::write(&tmp, base.to_bytes()).with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {path:?}"))
 }
 
 pub fn load_base(path: &Path) -> Result<NamedTensors> {

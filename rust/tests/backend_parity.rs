@@ -1,0 +1,138 @@
+//! Backend parity: native vs. PJRT outputs on identical inputs.
+//!
+//! When a PJRT plugin is linked (real `xla` crate instead of the vendored
+//! stub) and `artifacts/test` exists, this asserts forward and train-step
+//! outputs agree within 1e-4. When PJRT is unavailable — the default
+//! offline build — the test *skips* (prints why and passes), because there
+//! is nothing to compare against; the native backend is then pinned by the
+//! runtime smoke + training integration suites instead.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use adapterbert::model::init;
+use adapterbert::runtime::{BackendKind, Bank, Runtime};
+use adapterbert::util::tensor::{Data, DType, Tensor};
+
+const TOL: f32 = 1e-4;
+
+fn artifacts_root() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+/// Deterministic non-zero banks for every input group: parameter groups by
+/// role-aware init, data groups by small patterned values.
+fn banks_for(rt: &Runtime, name: &str) -> Vec<Bank> {
+    let spec = rt.manifest.exe(name).unwrap().clone();
+    let groups = spec.input_groups();
+    let mut out = Vec::with_capacity(groups.len());
+    for (gi, group) in groups.iter().enumerate() {
+        let range = spec.input_group_range(group).unwrap();
+        let param_group =
+            matches!(*group, "base" | "frozen" | "trained" | "adapters" | "head");
+        if param_group {
+            let named = init::init_group(&spec, group, 7 + gi as u64, 1e-2).unwrap();
+            out.push(named.to_bank(&spec, group).unwrap());
+            continue;
+        }
+        let bank: Bank = spec.inputs[range]
+            .iter()
+            .map(|leaf| match (leaf.name.as_str(), leaf.dtype) {
+                ("step", _) => Tensor::scalar_i32(1),
+                ("lr", _) => Tensor::scalar_f32(1e-3),
+                (n, DType::F32) if n.ends_with("attn_mask") => {
+                    Tensor::full_f32(&leaf.shape, 1.0)
+                }
+                (n, DType::F32) if n.ends_with("class_valid") => {
+                    let mut v = vec![0.0f32; leaf.elements()];
+                    v[0] = 1.0;
+                    v[1] = 1.0;
+                    Tensor::f32(leaf.shape.clone(), v)
+                }
+                (n, DType::F32) if n.ends_with("gates") => {
+                    Tensor::full_f32(&leaf.shape, 1.0)
+                }
+                (n, DType::F32) if n.ends_with("weights") => {
+                    Tensor::full_f32(&leaf.shape, 1.0)
+                }
+                (_, DType::F32) => Tensor::zeros(&leaf.shape, DType::F32),
+                (n, DType::I32) if n.ends_with("tokens") => Tensor::i32(
+                    leaf.shape.clone(),
+                    (0..leaf.elements()).map(|i| (i % 11) as i32).collect(),
+                ),
+                (n, DType::I32) if n.ends_with("labels") => Tensor::i32(
+                    leaf.shape.clone(),
+                    (0..leaf.elements()).map(|i| (i % 2) as i32).collect(),
+                ),
+                (_, DType::I32) => Tensor::zeros(&leaf.shape, DType::I32),
+            })
+            .collect();
+        out.push(bank);
+    }
+    out
+}
+
+fn max_abs_diff(a: &[Bank], b: &[Bank]) -> f32 {
+    let mut worst = 0.0f32;
+    for (ba, bb) in a.iter().zip(b) {
+        for (ta, tb) in ba.iter().zip(bb) {
+            match (&ta.data, &tb.data) {
+                (Data::F32(x), Data::F32(y)) => {
+                    for (u, v) in x.iter().zip(y) {
+                        worst = worst.max((u - v).abs());
+                    }
+                }
+                (Data::I32(x), Data::I32(y)) => {
+                    assert_eq!(x, y, "i32 outputs must match exactly");
+                }
+                _ => panic!("output dtype mismatch between backends"),
+            }
+        }
+    }
+    worst
+}
+
+#[test]
+fn native_matches_pjrt_when_plugin_is_available() {
+    let pjrt = match Runtime::open_with(artifacts_root(), "test", BackendKind::Pjrt) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!("skipping backend parity: PJRT unavailable ({e:#})");
+            return;
+        }
+    };
+    let native =
+        Arc::new(Runtime::open_with(artifacts_root(), "test", BackendKind::Native).unwrap());
+    assert_eq!(pjrt.backend_name(), "pjrt");
+    assert_eq!(native.backend_name(), "native");
+
+    for exe_name in [
+        "embed_fwd",
+        "cls_fwd_base",
+        "cls_fwd_adapter_m8",
+        "cls_train_adapter_m8",
+        "cls_train_topk_k2",
+        "pretrain_step",
+    ] {
+        let banks = banks_for(&pjrt, exe_name);
+        let refs: Vec<&Bank> = banks.iter().collect();
+        let a = pjrt.load(exe_name).unwrap().run(&refs).unwrap();
+        let b = native.load(exe_name).unwrap().run(&refs).unwrap();
+        assert_eq!(a.len(), b.len(), "{exe_name}: output group counts differ");
+        let worst = max_abs_diff(&a, &b);
+        assert!(
+            worst <= TOL,
+            "{exe_name}: native vs PJRT diverge by {worst} (tol {TOL})"
+        );
+    }
+}
+
+/// The native backend must be available unconditionally — this is the
+/// fallback the rest of the test suite depends on.
+#[test]
+fn native_backend_always_opens() {
+    let rt = Runtime::open_with(artifacts_root(), "test", BackendKind::Native).unwrap();
+    assert_eq!(rt.backend_name(), "native");
+    let rt = Runtime::open(artifacts_root(), "test").unwrap();
+    assert!(rt.backend_name() == "native" || rt.backend_name() == "pjrt");
+}

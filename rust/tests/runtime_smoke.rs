@@ -1,7 +1,9 @@
-//! Integration: load + execute real AOT artifacts (test preset).
+//! Integration: load + execute the test preset's executables.
 //!
-//! Requires `make artifacts-test` (the Makefile `test` target guarantees
-//! it). These tests pin the whole python→HLO-text→PJRT bridge.
+//! Runs hermetically on any machine: `Runtime::open` uses on-disk AOT
+//! artifacts + PJRT when available, and otherwise falls back to the
+//! synthesized manifest + native backend — so these pin the signature
+//! plumbing and execution semantics regardless of which engine is linked.
 
 use std::path::Path;
 use std::sync::Arc;

@@ -23,7 +23,7 @@ fn runtime() -> Arc<Runtime> {
             Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")),
             "test",
         )
-        .expect("open test artifacts (run `make artifacts`)"),
+        .expect("open test preset (built-in presets synthesize their manifest)"),
     )
 }
 
@@ -49,15 +49,20 @@ fn small_task(rt: &Runtime, seed: u64) -> (TaskSpec, tasks::TaskData) {
 }
 
 fn pretrained_base(rt: &Arc<Runtime>) -> NamedTensors {
-    // light pre-training is enough for the tiny world; cached across tests
-    // via an on-disk checkpoint keyed by preset
-    train::load_or_pretrain(
-        rt,
-        &world(rt),
-        &PretrainConfig { steps: 3000, log_every: 0, ..Default::default() },
-        Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs/base_test.bank")),
-    )
-    .unwrap()
+    // light pre-training is enough for the tiny world; cached once per
+    // process (tests run in parallel threads) and across runs via an
+    // on-disk checkpoint keyed by preset
+    static BASE: std::sync::OnceLock<NamedTensors> = std::sync::OnceLock::new();
+    BASE.get_or_init(|| {
+        train::load_or_pretrain(
+            rt,
+            &world(rt),
+            &PretrainConfig { steps: 3000, log_every: 0, ..Default::default() },
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs/base_test.bank")),
+        )
+        .unwrap()
+    })
+    .clone()
 }
 
 #[test]
