@@ -1,0 +1,159 @@
+//! The networked serving story, end to end: train two tenants, put the
+//! coordinator on a socket, drive it with the blocking client, then
+//! **hot-register a third task over `POST /tasks` while the gateway is
+//! live** — the paper's "add task N+1 without touching tasks 1…N" (§1)
+//! as a network operation. Finishes with a graceful drain and the
+//! gateway's per-task latency metrics.
+//!
+//! Run: `cargo run --release --example serve_http [-- --preset test]`
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use adapterbert::coordinator::{FlushPolicy, Server, ServerConfig};
+use adapterbert::data::grammar::World;
+use adapterbert::data::tasks::{self, TaskKind};
+use adapterbert::runtime::Runtime;
+use adapterbert::serve::{Client, Gateway, GatewayConfig, RegisterRequest};
+use adapterbert::store::AdapterStore;
+use adapterbert::tokenizer::Tokenizer;
+use adapterbert::train::{self, PretrainConfig, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let preset = args
+        .iter()
+        .position(|a| a == "--preset")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+        .unwrap_or("test")
+        .to_string();
+
+    let rt = Arc::new(Runtime::open(Path::new("artifacts"), &preset)?);
+    let dims = rt.manifest.dims.clone();
+    let world = World::new(dims.vocab, 0);
+    let base = train::load_or_pretrain(
+        &rt,
+        &world,
+        &PretrainConfig::default(),
+        Path::new(&format!("runs/base_{preset}.bank")),
+    )?;
+
+    // two initial tenants, registered before the server starts
+    let store = Arc::new(AdapterStore::in_memory());
+    let mut task_classes = BTreeMap::new();
+    let mut train_one = |name: &str| -> anyhow::Result<adapterbert::eval::TaskModel> {
+        let spec = tasks::find_spec(name).unwrap();
+        let data = tasks::generate(&world, &spec, dims.seq);
+        let res = train::train_task(
+            &rt,
+            &TrainConfig::new("cls_train_adapter_m8", 1e-3, 4, 0),
+            &data,
+            &base,
+        )?;
+        println!("tenant {name}: val {:.3}", res.val_score);
+        if let TaskKind::Cls { n_classes, .. } = spec.kind {
+            task_classes.insert(name.to_string(), n_classes);
+        }
+        store.register(name, &res.model, res.val_score)?;
+        Ok(res.model)
+    };
+    train_one("rte_s")?;
+    train_one("cola_s")?;
+    drop(train_one); // release the &mut task_classes borrow
+    // a third tenant, trained but NOT yet registered — it arrives later,
+    // over the wire
+    let late_spec = tasks::find_spec("mrpc_s").unwrap();
+    let late_data = tasks::generate(&world, &late_spec, dims.seq);
+    let late = train::train_task(
+        &rt,
+        &TrainConfig::new("cls_train_adapter_m8", 1e-3, 4, 0),
+        &late_data,
+        &base,
+    )?;
+    println!("tenant mrpc_s: val {:.3} (held back for hot registration)", late.val_score);
+
+    let server = Server::start(
+        rt.clone(),
+        &store,
+        &base,
+        &task_classes,
+        ServerConfig {
+            flush: FlushPolicy {
+                max_batch: rt.manifest.batch,
+                max_delay: std::time::Duration::from_millis(5),
+            },
+            executors: 2,
+            queue_capacity: 512,
+        },
+    )?;
+    let gw = Gateway::start(
+        rt.clone(),
+        store.clone(),
+        server,
+        GatewayConfig::default(), // 127.0.0.1:0 → ephemeral port
+    )?;
+    let addr = gw.local_addr().to_string();
+    println!("\ngateway listening on http://{addr}");
+
+    // a remote client: health, listing, text predictions
+    let mut client = Client::connect(&addr)?;
+    let health = client.health()?;
+    println!(
+        "health: {} | backend {} | {} tasks | seq {}",
+        health.status, health.backend, health.tasks, health.seq
+    );
+    let tok = Tokenizer::new(health.vocab);
+    let text: Vec<String> = (0..12).map(|i| tok.word(4 + i * 17).to_string()).collect();
+    let text = text.join(" ");
+    for task in ["rte_s", "cola_s"] {
+        let resp = client.predict_text(task, &text)?;
+        println!(
+            "predict {task:8} → class {:?}  ({:.2} ms server-side, batch {})",
+            resp.pred_class, resp.latency_ms, resp.batch_size
+        );
+    }
+
+    // the headline move: POST /tasks hot-registers mrpc_s while rte_s
+    // and cola_s keep serving — no restart, no pause
+    let reg = RegisterRequest::from_model("mrpc_s", 2, late.val_score, &late.model);
+    let reg_resp = client.register_task(&reg)?;
+    println!(
+        "\nhot-registered {} v{:03} ({} trained params) over POST /tasks",
+        reg_resp.task, reg_resp.version, reg_resp.trained_params
+    );
+    let resp = client.predict_pair("mrpc_s", &text, &text)?;
+    println!(
+        "predict mrpc_s  → class {:?} (served immediately after registration)",
+        resp.pred_class
+    );
+    println!(
+        "tasks now: {:?}",
+        client.tasks()?.iter().map(|t| t.task.clone()).collect::<Vec<_>>()
+    );
+
+    // per-task latency quantiles from the gateway's histograms
+    let metrics = client.metrics()?;
+    for task in ["rte_s", "cola_s", "mrpc_s"] {
+        if let Some(h) = metrics.at("tasks").get(task) {
+            println!(
+                "metrics {task:8} count {:3}  p50 {:.2} ms  p99 {:.2} ms",
+                h.at("count").as_usize().unwrap_or(0),
+                h.at("p50_ms").as_f64().unwrap_or(0.0),
+                h.at("p99_ms").as_f64().unwrap_or(0.0),
+            );
+        }
+    }
+
+    drop(client);
+    let report = gw.shutdown()?;
+    println!(
+        "\ngraceful drain: {} served | {} admission 503 | {} backpressure 503 | {} timeouts",
+        report.served,
+        report.admission_rejected,
+        report.backpressure_rejected,
+        report.timeouts
+    );
+    Ok(())
+}

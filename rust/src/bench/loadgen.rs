@@ -1,0 +1,346 @@
+//! Closed-loop load generator for the serving gateway.
+//!
+//! Drives `serve::Gateway` over real sockets: N worker threads, each with
+//! its own keep-alive connection, issue predict-by-text requests against
+//! a configurable task mix until a request budget or deadline runs out
+//! (closed loop: a worker sends its next request only after the previous
+//! response lands, so concurrency == open requests). The report — total
+//! and per-task throughput and latency quantiles — serializes to
+//! `BENCH_serve.json`, the serving entry in the repo's perf trajectory.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::Client;
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::timer::Samples;
+
+/// What to fire at the gateway.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Gateway address (`host:port`).
+    pub addr: String,
+    /// Task mix, cycled round-robin; empty = every task the gateway lists.
+    pub tasks: Vec<String>,
+    /// Closed-loop worker threads (= open requests at any moment).
+    pub concurrency: usize,
+    /// Total request budget (0 = unlimited, stop on `duration`).
+    pub requests: u64,
+    /// Optional wall-clock cap.
+    pub duration: Option<Duration>,
+    /// Words of random text per request.
+    pub words_per_request: usize,
+    /// RNG seed for the request text.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: String::new(),
+            tasks: Vec::new(),
+            concurrency: 4,
+            requests: 200,
+            duration: None,
+            words_per_request: 12,
+            seed: 7,
+        }
+    }
+}
+
+/// Per-task slice of the report.
+#[derive(Debug, Default, Clone)]
+pub struct TaskLoad {
+    pub requests: u64,
+    pub errors: u64,
+    pub latencies: Samples,
+}
+
+/// The whole run.
+#[derive(Debug)]
+pub struct LoadReport {
+    /// Resolved task mix (after discovery).
+    pub tasks: Vec<String>,
+    pub wall_s: f64,
+    pub requests: u64,
+    pub errors: u64,
+    pub per_task: BTreeMap<String, TaskLoad>,
+    /// All successful request latencies.
+    pub all: Samples,
+}
+
+impl LoadReport {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / self.wall_s
+        }
+    }
+
+    /// The `BENCH_serve.json` document (see `write_report`).
+    pub fn to_json(&self, cfg: &LoadgenConfig) -> Json {
+        let per_task = Json::Obj(
+            self.per_task
+                .iter()
+                .map(|(task, t)| {
+                    (
+                        task.clone(),
+                        Json::obj(vec![
+                            ("requests", Json::num(t.requests as f64)),
+                            ("errors", Json::num(t.errors as f64)),
+                            ("latency_ms", latency_json(&t.latencies)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("bench", Json::str("serve")),
+            ("schema_version", Json::num(1.0)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("concurrency", Json::num(cfg.concurrency as f64)),
+                    ("requests", Json::num(cfg.requests as f64)),
+                    (
+                        "duration_s",
+                        cfg.duration
+                            .map(|d| Json::num(d.as_secs_f64()))
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("words_per_request", Json::num(cfg.words_per_request as f64)),
+                    (
+                        "tasks",
+                        Json::arr(self.tasks.iter().map(|t| Json::str(t))),
+                    ),
+                ]),
+            ),
+            (
+                "totals",
+                Json::obj(vec![
+                    ("requests", Json::num(self.requests as f64)),
+                    ("errors", Json::num(self.errors as f64)),
+                    ("wall_s", Json::num(self.wall_s)),
+                    ("throughput_rps", Json::num(self.throughput_rps())),
+                    ("latency_ms", latency_json(&self.all)),
+                ]),
+            ),
+            ("per_task", per_task),
+        ])
+    }
+}
+
+/// `{mean, p50, p95, p99, max}` in milliseconds (zeros when empty — JSON
+/// has no NaN).
+fn latency_json(s: &Samples) -> Json {
+    let (mean, p50, p95, p99, max) = if s.is_empty() {
+        (0.0, 0.0, 0.0, 0.0, 0.0)
+    } else {
+        (
+            s.mean_s() * 1e3,
+            s.pctl_s(50.0) * 1e3,
+            s.pctl_s(95.0) * 1e3,
+            s.pctl_s(99.0) * 1e3,
+            s.pctl_s(100.0) * 1e3,
+        )
+    };
+    Json::obj(vec![
+        ("mean", Json::num(mean)),
+        ("p50", Json::num(p50)),
+        ("p95", Json::num(p95)),
+        ("p99", Json::num(p99)),
+        ("max", Json::num(max)),
+    ])
+}
+
+/// Run the closed loop and aggregate.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    if cfg.requests == 0 && cfg.duration.is_none() {
+        bail!("loadgen needs a request budget or a duration");
+    }
+    let mut probe = Client::connect(&cfg.addr)?;
+    let health = probe.health().context("gateway health check")?;
+    let tasks: Vec<String> = if cfg.tasks.is_empty() {
+        probe
+            .tasks()
+            .context("task discovery")?
+            .into_iter()
+            .map(|t| t.task)
+            .collect()
+    } else {
+        cfg.tasks.clone()
+    };
+    if tasks.is_empty() {
+        bail!("gateway serves no tasks and none were given");
+    }
+    // close the discovery connection before the closed loop starts, so
+    // the gateway's worker rotation only carries live load connections
+    drop(probe);
+    let tok = Tokenizer::new(health.vocab);
+    let word_ids = health.vocab.saturating_sub(4).max(1);
+
+    let issued = AtomicU64::new(0);
+    let deadline = cfg.duration.map(|d| Instant::now() + d);
+    let t0 = Instant::now();
+    let mut worker_stats: Vec<Result<BTreeMap<String, TaskLoad>>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..cfg.concurrency.max(1) {
+            let tasks = &tasks;
+            let tok = &tok;
+            let issued = &issued;
+            handles.push(scope.spawn(move || {
+                worker_loop(cfg, w as u64, tasks, tok, word_ids, issued, deadline)
+            }));
+        }
+        for h in handles {
+            worker_stats.push(match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("loadgen worker panicked")),
+            });
+        }
+    });
+
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut per_task: BTreeMap<String, TaskLoad> = BTreeMap::new();
+    for stats in worker_stats {
+        for (task, t) in stats? {
+            let agg = per_task.entry(task).or_default();
+            agg.requests += t.requests;
+            agg.errors += t.errors;
+            agg.latencies.durs.extend(t.latencies.durs);
+        }
+    }
+    let mut all = Samples::default();
+    let mut requests = 0;
+    let mut errors = 0;
+    for t in per_task.values() {
+        requests += t.requests;
+        errors += t.errors;
+        all.durs.extend(t.latencies.durs.iter().copied());
+    }
+    Ok(LoadReport { tasks, wall_s, requests, errors, per_task, all })
+}
+
+fn worker_loop(
+    cfg: &LoadgenConfig,
+    worker: u64,
+    tasks: &[String],
+    tok: &Tokenizer,
+    word_ids: usize,
+    issued: &AtomicU64,
+    deadline: Option<Instant>,
+) -> Result<BTreeMap<String, TaskLoad>> {
+    let mut client = Client::connect(&cfg.addr)?;
+    let mut rng = Rng::new(cfg.seed ^ (worker.wrapping_mul(0x9E37_79B9)));
+    let mut stats: BTreeMap<String, TaskLoad> = BTreeMap::new();
+    let mut consecutive_errors = 0usize;
+    loop {
+        let i = issued.fetch_add(1, Ordering::Relaxed);
+        if cfg.requests > 0 && i >= cfg.requests {
+            break;
+        }
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                break;
+            }
+        }
+        let task = &tasks[(i as usize) % tasks.len()];
+        let words: Vec<&str> = (0..cfg.words_per_request.max(1))
+            .map(|_| tok.word(4 + rng.below(word_ids) as i32))
+            .collect();
+        let text = words.join(" ");
+        let t0 = Instant::now();
+        let entry = stats.entry(task.clone()).or_default();
+        match client.predict_text(task, &text) {
+            Ok(_) => {
+                entry.requests += 1;
+                entry.latencies.record(t0.elapsed());
+                consecutive_errors = 0;
+            }
+            Err(e) => {
+                entry.errors += 1;
+                consecutive_errors += 1;
+                if consecutive_errors > 50 {
+                    return Err(e).context("worker giving up after 50 straight errors");
+                }
+                // connection may be poisoned (timeout mid-response); redial
+                let _ = client.reconnect();
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Atomically (write + rename) persist the report document.
+pub fn write_report(path: &Path, report: &Json) -> Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, format!("{report}\n"))
+        .with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_schema() {
+        let mut per_task = BTreeMap::new();
+        let mut lat = Samples::default();
+        lat.record(Duration::from_millis(3));
+        per_task.insert(
+            "rte_s".to_string(),
+            TaskLoad { requests: 10, errors: 0, latencies: lat },
+        );
+        let mut all = Samples::default();
+        all.record(Duration::from_millis(3));
+        let report = LoadReport {
+            tasks: vec!["rte_s".into()],
+            wall_s: 0.5,
+            requests: 10,
+            errors: 0,
+            per_task,
+            all,
+        };
+        let cfg = LoadgenConfig { addr: "x".into(), ..Default::default() };
+        let j = report.to_json(&cfg);
+        // must re-parse as valid JSON with the pinned schema fields
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.at("bench").as_str(), Some("serve"));
+        assert_eq!(back.at("schema_version").as_usize(), Some(1));
+        assert_eq!(back.at("totals").at("requests").as_usize(), Some(10));
+        assert!(back.at("totals").at("throughput_rps").as_f64().unwrap() > 0.0);
+        let lt = back.at("per_task").at("rte_s").at("latency_ms");
+        for key in ["mean", "p50", "p95", "p99", "max"] {
+            assert!(lt.at(key).as_f64().is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn empty_latency_emits_zeros_not_nan() {
+        let j = latency_json(&Samples::default());
+        let s = j.to_string();
+        assert!(!s.contains("NaN"), "{s}");
+        assert_eq!(j.at("p99").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn run_requires_a_stop_condition() {
+        let cfg = LoadgenConfig {
+            addr: "127.0.0.1:1".into(),
+            requests: 0,
+            duration: None,
+            ..Default::default()
+        };
+        assert!(run(&cfg).is_err());
+    }
+}

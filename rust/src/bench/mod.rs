@@ -8,6 +8,7 @@
 //! quick-mode results against the paper's numbers.
 
 pub mod figures;
+pub mod loadgen;
 pub mod tables;
 
 use std::path::Path;

@@ -16,5 +16,5 @@ pub mod server;
 pub mod stream;
 
 pub use router::{FlushPolicy, Router};
-pub use server::{Server, ServerConfig, ServerMetrics};
+pub use server::{Prediction, Server, ServerConfig, ServerMetrics};
 pub use stream::{StreamConfig, StreamReport, TaskStream};

@@ -15,16 +15,26 @@
 //! `*_fwd_*` executable. This is the adapter economics in action: one
 //! resident base, per-batch task switch = feeding different small input
 //! literals, no model reload.
+//!
+//! The bank cache is behind an `RwLock`, so tasks can be **hot-installed**
+//! while traffic flows: [`Server::prepare_task`] builds and validates the
+//! fwd banks off to the side (no lock held), [`Server::install_task`]
+//! swaps them in with a short write lock. In-flight batches for other
+//! tasks keep their own `Arc<TaskBanks>` and never notice. This is the
+//! executor-side half of the store's append-only guarantee: adding task
+//! N+1 touches no bytes serving tasks 1…N. [`Server::drain`] starts a
+//! graceful shutdown: new submits are refused, queued work is flushed and
+//! answered, then [`Server::shutdown`] joins every thread.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::router::{FlushPolicy, Router};
-use crate::eval::fwd_param_banks;
+use crate::eval::{fwd_param_banks, TaskModel};
 use crate::model::params::NamedTensors;
 use crate::runtime::{Bank, Runtime};
 use crate::store::AdapterStore;
@@ -47,13 +57,60 @@ pub struct Request {
     pub submitted: Instant,
 }
 
+/// What a task's head produced for one request — one variant per artifact
+/// kind (`cls` / `reg` / `span`), so the server can serve all three.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Prediction {
+    /// argmax class (classification heads)
+    Class(usize),
+    /// scalar score (regression heads, e.g. the STS-B stand-in)
+    Score(f32),
+    /// (start, end) token positions (span heads, e.g. the SQuAD stand-in)
+    Span(usize, usize),
+}
+
+impl Prediction {
+    /// The artifact kind that produces this payload.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Prediction::Class(_) => "cls",
+            Prediction::Score(_) => "reg",
+            Prediction::Span(..) => "span",
+        }
+    }
+
+    /// The class index, for classification predictions.
+    pub fn class(&self) -> Option<usize> {
+        match self {
+            Prediction::Class(c) => Some(*c),
+            _ => None,
+        }
+    }
+
+    /// The scalar score, for regression predictions.
+    pub fn score(&self) -> Option<f32> {
+        match self {
+            Prediction::Score(s) => Some(*s),
+            _ => None,
+        }
+    }
+
+    /// The (start, end) positions, for span predictions.
+    pub fn span(&self) -> Option<(usize, usize)> {
+        match self {
+            Prediction::Span(s, e) => Some((*s, *e)),
+            _ => None,
+        }
+    }
+}
+
 /// The server's answer to one [`Request`].
 #[derive(Debug, Clone)]
 pub struct Response {
     /// The task that served the request.
     pub task: String,
-    /// argmax class (cls) — reg/span payloads unused by current demos
-    pub pred_class: usize,
+    /// The head's output (class / score / span, by task kind).
+    pub prediction: Prediction,
     /// Submit→reply wall time.
     pub latency: Duration,
     /// Real rows in the batch this request rode in.
@@ -81,10 +138,18 @@ impl Default for ServerConfig {
     }
 }
 
+/// Latency samples kept in memory at most — beyond this the recorder
+/// switches to slot replacement, so a long-running server (the gateway
+/// runs indefinitely) holds O(1) memory instead of one `Duration` per
+/// request ever served.
+pub const LATENCY_SAMPLE_CAP: usize = 65_536;
+
 /// Aggregated serving metrics, returned by [`Server::shutdown`].
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct ServerMetrics {
-    /// Per-request submit→reply latencies.
+    /// Per-request submit→reply latencies. Exact below
+    /// [`LATENCY_SAMPLE_CAP`] samples; a sliding replacement set after
+    /// that (quantiles stay representative, memory stays bounded).
     pub latencies: Samples,
     /// Number of executed batches.
     pub batches: usize,
@@ -105,23 +170,40 @@ impl ServerMetrics {
     }
 }
 
+struct TaskBanks {
+    fwd_name: String,
+    /// artifact kind (cls | reg | span) — decides output decoding
+    kind: String,
+    n_classes: usize,
+    /// parameter banks (base, adapters?, head, gates?) ready to execute
+    params: Vec<Bank>,
+}
+
+/// The hot-swappable executor-side bank cache.
+type SharedBanks = Arc<RwLock<BTreeMap<String, Arc<TaskBanks>>>>;
+
+/// A task's serving banks, built and validated by [`Server::prepare_task`]
+/// and not yet visible to executors. Installing is a map insert under a
+/// short write lock — the expensive work (base merge, executable warm-up)
+/// already happened here.
+pub struct PreparedTask {
+    banks: Arc<TaskBanks>,
+}
+
 /// A running server; drop-safe shutdown via `shutdown()`.
 pub struct Server {
     tx: mpsc::SyncSender<Request>,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
     router_handle: Option<std::thread::JoinHandle<()>>,
     executor_handles: Vec<std::thread::JoinHandle<()>>,
+    rt: Arc<Runtime>,
+    base: Arc<NamedTensors>,
+    banks: SharedBanks,
     /// Live metrics (also returned, aggregated, from [`Server::shutdown`]).
     pub metrics: Arc<Mutex<ServerMetrics>>,
     /// Requests rejected by backpressure (`submit` on a full queue).
     pub rejected: Arc<AtomicU64>,
-}
-
-struct TaskBanks {
-    fwd_name: String,
-    n_classes: usize,
-    /// parameter banks (base, adapters?, head, gates?) ready to execute
-    params: Vec<Bank>,
 }
 
 impl Server {
@@ -135,19 +217,15 @@ impl Server {
     ) -> Result<Server> {
         // Resolve and cache per-task banks up front (server startup =
         // adapter swap-in; this is the only expensive per-task cost).
-        let mut banks: BTreeMap<String, Arc<TaskBanks>> = BTreeMap::new();
+        let base = Arc::new(base.clone());
+        let mut initial: BTreeMap<String, Arc<TaskBanks>> = BTreeMap::new();
         for task in store.task_names() {
             let (_, model) = store.latest(&task).context("store raced")?;
-            let params = fwd_param_banks(&rt, &model, base, None)?;
             let n_classes = *task_classes.get(&task).unwrap_or(&2);
-            banks.insert(
-                task.clone(),
-                Arc::new(TaskBanks { fwd_name: model.fwd_name(), n_classes, params }),
-            );
-            // warm the compile cache before traffic arrives
-            rt.load(&model.fwd_name())?;
+            let banks = build_task_banks(&rt, &base, n_classes, &model)?;
+            initial.insert(task.clone(), banks);
         }
-        let banks = Arc::new(banks);
+        let banks: SharedBanks = Arc::new(RwLock::new(initial));
 
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_capacity);
         let (batch_tx, batch_rx) = mpsc::channel::<super::router::FlushedBatch<Request>>();
@@ -217,15 +295,75 @@ impl Server {
         Ok(Server {
             tx,
             stop,
+            draining: Arc::new(AtomicBool::new(false)),
             router_handle: Some(router_handle),
             executor_handles,
+            rt,
+            base,
+            banks,
             metrics,
             rejected,
         })
     }
 
-    /// Submit a request; `Err` when the bounded queue is full (backpressure).
+    /// Build and validate serving banks for a task **without** installing
+    /// them: the base merge runs, the bank shapes are checked against the
+    /// manifest, and the fwd executable is warmed in the compile cache.
+    /// No lock is held, so traffic is unaffected. Errors here leave the
+    /// server exactly as it was.
+    pub fn prepare_task(&self, n_classes: usize, model: &TaskModel) -> Result<PreparedTask> {
+        let banks = build_task_banks(&self.rt, &self.base, n_classes, model)?;
+        Ok(PreparedTask { banks })
+    }
+
+    /// Make a prepared task visible to the executors (insert or replace,
+    /// under a short write lock). Batches already in flight keep the bank
+    /// `Arc` they resolved — no request is ever served from a half-swapped
+    /// state.
+    pub fn install_task(&self, task: &str, prepared: PreparedTask) {
+        self.banks.write().unwrap().insert(task.to_string(), prepared.banks);
+    }
+
+    /// Prepare + install in one call (the store write, if any, is the
+    /// caller's job — see `serve::registry` for the networked path).
+    pub fn register_live(&self, task: &str, n_classes: usize, model: &TaskModel) -> Result<()> {
+        let prepared = self.prepare_task(n_classes, model)?;
+        self.install_task(task, prepared);
+        Ok(())
+    }
+
+    /// Names of the tasks currently servable, sorted.
+    pub fn tasks(&self) -> Vec<String> {
+        self.banks.read().unwrap().keys().cloned().collect()
+    }
+
+    /// (artifact kind, n_classes) for a servable task.
+    pub fn task_info(&self, task: &str) -> Option<(String, usize)> {
+        self.banks
+            .read()
+            .unwrap()
+            .get(task)
+            .map(|b| (b.kind.clone(), b.n_classes))
+    }
+
+    /// Stop admitting new requests; queued and in-flight work still
+    /// completes and is answered. Part of graceful shutdown — call this
+    /// first, then [`Server::shutdown`] once callers have stopped.
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// True once [`Server::drain`] has been called.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Submit a request; `Err` when the bounded queue is full
+    /// (backpressure) or the server is draining.
     pub fn submit(&self, req: Request) -> Result<(), Request> {
+        if self.is_draining() {
+            return Err(req);
+        }
         match self.tx.try_send(req) {
             Ok(()) => Ok(()),
             Err(mpsc::TrySendError::Full(r)) => {
@@ -238,12 +376,17 @@ impl Server {
 
     /// Blocking submit (client-side throttle).
     pub fn submit_blocking(&self, req: Request) -> Result<()> {
+        if self.is_draining() {
+            bail!("server draining");
+        }
         self.tx.send(req).map_err(|_| anyhow::anyhow!("server stopped"))
     }
 
     /// Stop accepting work, drain the queues, join every thread and
-    /// return the aggregated metrics.
+    /// return the aggregated metrics. Every request accepted before the
+    /// drain began is still answered.
     pub fn shutdown(mut self) -> ServerMetrics {
+        self.drain();
         self.stop.store(true, Ordering::Relaxed);
         drop(self.tx);
         if let Some(h) = self.router_handle.take() {
@@ -253,24 +396,47 @@ impl Server {
             let _ = h.join();
         }
         let m = self.metrics.lock().unwrap();
-        ServerMetrics {
-            latencies: m.latencies.clone(),
-            batches: m.batches,
-            requests: m.requests,
-            occupancy_sum: m.occupancy_sum,
-        }
+        m.clone()
     }
+}
+
+/// Resolve a task's fwd banks (base merge + adapters + head + gates) and
+/// warm the executable in the compile cache before traffic arrives.
+fn build_task_banks(
+    rt: &Arc<Runtime>,
+    base: &NamedTensors,
+    n_classes: usize,
+    model: &TaskModel,
+) -> Result<Arc<TaskBanks>> {
+    if model.kind == "cls" {
+        let max = rt.manifest.dims.max_classes;
+        anyhow::ensure!(
+            (1..=max).contains(&n_classes),
+            "n_classes {n_classes} outside the padded head range [1, {max}]"
+        );
+    }
+    let fwd_name = model.fwd_name();
+    let params = fwd_param_banks(rt, model, base, None)?;
+    rt.load(&fwd_name)?;
+    Ok(Arc::new(TaskBanks {
+        fwd_name,
+        kind: model.kind.clone(),
+        n_classes,
+        params,
+    }))
 }
 
 fn run_batch(
     rt: &Arc<Runtime>,
-    banks: &BTreeMap<String, Arc<TaskBanks>>,
+    banks: &SharedBanks,
     batch: super::router::FlushedBatch<Request>,
     metrics: &Arc<Mutex<ServerMetrics>>,
 ) -> Result<()> {
-    let tb = banks
-        .get(&batch.task)
-        .with_context(|| format!("no banks for task {:?}", batch.task))?;
+    let tb = {
+        let map = banks.read().unwrap();
+        map.get(&batch.task).cloned()
+    };
+    let tb = tb.with_context(|| format!("no banks for task {:?}", batch.task))?;
     let exe = rt.load(&tb.fwd_name)?;
     let b = exe.spec.batch;
     let seq = rt.manifest.dims.seq;
@@ -299,29 +465,87 @@ fn run_batch(
     all.push(&seg_bank);
     all.push(&mask_bank);
     let out = exe.run(&all)?;
-    let logits = &out[0][0];
-    let c = logits.shape[1];
+    // decode per-row predictions by head kind
+    let preds: Vec<Prediction> = match tb.kind.as_str() {
+        "cls" => {
+            let logits = &out[0][0]; // [B, max_classes]
+            let c = logits.shape[1];
+            (0..n)
+                .map(|row| {
+                    let r = &logits.as_f32()[row * c..(row + 1) * c];
+                    Prediction::Class(argmax(&r[..tb.n_classes]))
+                })
+                .collect()
+        }
+        "reg" => {
+            let scores = out[0][0].as_f32(); // [B]
+            (0..n).map(|row| Prediction::Score(scores[row])).collect()
+        }
+        "span" => {
+            let start = &out[0][0]; // [B, S]
+            let end = &out[1][0];
+            let s = start.shape[1];
+            (0..n)
+                .map(|row| {
+                    let rs = &start.as_f32()[row * s..(row + 1) * s];
+                    let re = &end.as_f32()[row * s..(row + 1) * s];
+                    Prediction::Span(argmax(rs), argmax(re))
+                })
+                .collect()
+        }
+        other => bail!("unservable artifact kind {other:?}"),
+    };
     let now = Instant::now();
     let mut m = metrics.lock().unwrap();
     m.batches += 1;
     m.occupancy_sum += n as f64 / b as f64;
-    for (row, req) in batch.items.into_iter().enumerate() {
-        let r = &logits.as_f32()[row * c..(row + 1) * c];
-        let pred = r[..tb.n_classes]
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
+    for (req, pred) in batch.items.into_iter().zip(preds) {
         let latency = now.duration_since(req.submitted);
-        m.latencies.record(latency);
+        if m.latencies.durs.len() < LATENCY_SAMPLE_CAP {
+            m.latencies.record(latency);
+        } else {
+            // bounded memory for indefinite serving: overwrite a
+            // pseudo-random slot (Fibonacci hashing of the request
+            // counter) so old samples age out of the quantiles
+            let slot = (m.requests as usize).wrapping_mul(2654435761) % LATENCY_SAMPLE_CAP;
+            m.latencies.durs[slot] = latency;
+        }
         m.requests += 1;
         let _ = req.reply.send(Response {
             task: req.task,
-            pred_class: pred,
+            prediction: pred,
             latency,
             batch_size: n,
         });
     }
     Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prediction_accessors_match_kind() {
+        let c = Prediction::Class(3);
+        assert_eq!(c.kind(), "cls");
+        assert_eq!(c.class(), Some(3));
+        assert_eq!(c.score(), None);
+        assert_eq!(c.span(), None);
+        let r = Prediction::Score(0.25);
+        assert_eq!(r.kind(), "reg");
+        assert_eq!(r.score(), Some(0.25));
+        let s = Prediction::Span(2, 5);
+        assert_eq!(s.kind(), "span");
+        assert_eq!(s.span(), Some((2, 5)));
+        assert_eq!(s.class(), None);
+    }
 }

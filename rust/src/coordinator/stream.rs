@@ -13,7 +13,7 @@ use anyhow::{Context, Result};
 
 use crate::data::grammar::World;
 use crate::data::tasks::{generate, TaskKind, TaskSpec};
-use crate::eval::evaluate;
+use crate::eval::{evaluate, TaskModel};
 use crate::model::params::NamedTensors;
 use crate::runtime::Runtime;
 use crate::store::AdapterStore;
@@ -84,6 +84,10 @@ pub struct TaskStream {
     /// test-time scores recorded at registration (task → score)
     registered_scores: BTreeMap<String, f64>,
     task_data_cache: BTreeMap<String, crate::data::tasks::TaskData>,
+    /// called after each registration: (task, n_classes, model) — the
+    /// hot-swap seam that lets a live [`super::Server`] start serving the
+    /// task immediately (via [`super::Server::register_live`])
+    on_register: Option<Box<dyn Fn(&str, usize, &TaskModel) + Send>>,
 }
 
 impl TaskStream {
@@ -103,12 +107,23 @@ impl TaskStream {
             cfg,
             registered_scores: BTreeMap::new(),
             task_data_cache: BTreeMap::new(),
+            on_register: None,
         }
     }
 
     /// The backing adapter store.
     pub fn store(&self) -> &Arc<AdapterStore> {
         &self.store
+    }
+
+    /// Install a post-registration callback. Typical use: hot-install the
+    /// newly trained bank into a running server so task N+1 is servable
+    /// the moment it registers, with tasks 1…N untouched.
+    pub fn set_on_register<F>(&mut self, f: F)
+    where
+        F: Fn(&str, usize, &TaskModel) + Send + 'static,
+    {
+        self.on_register = Some(Box::new(f));
     }
 
     /// Handle one arriving task end-to-end.
@@ -143,6 +158,9 @@ impl TaskStream {
         )?;
         self.store
             .register(&spec.name, &outcome.best.model, outcome.best.val_score)?;
+        if let Some(cb) = &self.on_register {
+            cb(&spec.name, n_classes, &outcome.best.model);
+        }
         self.registered_scores.insert(spec.name.clone(), test_score);
         self.task_data_cache.insert(spec.name.clone(), data);
 

@@ -12,6 +12,8 @@
 //!   * `train`     — training loops and hyper-parameter sweeps (paper §3.1)
 //!   * `coordinator` — the cloud-service layer: task stream, router,
 //!     batcher, server (paper §1's motivating setting)
+//!   * `serve`     — the networked gateway over the coordinator: HTTP
+//!     front end, wire protocol, hot task registration, blocking client
 //!   * `store`     — versioned adapter banks + checkpoints
 //!   * `baseline`  — the no-BERT baseline searcher (Table 2, col. 1)
 //!   * `eval`      — task metrics and GLUE-style aggregation
@@ -26,6 +28,7 @@ pub mod eval;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod tokenizer;
 pub mod train;

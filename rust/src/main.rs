@@ -7,12 +7,19 @@
 //! adapterbert train     --task NAME [--method adapter|finetune|topk:K|lnonly]
 //!                       [--m M] [--lr LR] [--epochs E] [--seed S]
 //! adapterbert stream    [--tasks a,b,c] [--store DIR]
-//! adapterbert serve     [--requests N] [--max-batch B] [--executors E]
+//! adapterbert serve     [--tasks a,b] [--max-batch B] [--executors E]
+//!                       [--port P [--duration S] [--workers W]] [--requests N]
+//! adapterbert loadgen   --addr HOST:PORT [--tasks a,b] [--concurrency C]
+//!                       [--requests N] [--duration S] [--out FILE]
 //! adapterbert baseline  --task NAME [--budget N]
 //! adapterbert bench     <table1|table2|fig3|fig3x|fig4|fig5|fig6|fig7|sizes|
 //!                        params|all> [--full]
 //! adapterbert list-tasks
 //! ```
+//!
+//! `serve` without `--port` runs the in-process demo; with `--port` it
+//! starts the networked gateway (`serve::Gateway`, port 0 = ephemeral).
+//! `loadgen` drives a running gateway and writes `BENCH_serve.json`.
 //!
 //! Python is never on this path: with PJRT linked the AOT artifacts are
 //! used, and otherwise `--backend auto` (the default) runs everything on
@@ -102,6 +109,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "stream" => cmd_stream(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "baseline" => cmd_baseline(&args),
         "bench" => cmd_bench(&args),
         "list-tasks" => cmd_list_tasks(),
@@ -121,7 +129,10 @@ fn print_help() {
          \x20 pretrain   MLM-pretrain the shared MiniBERT base\n\
          \x20 train      tune one task (adapter/finetune/topk:K/lnonly)\n\
          \x20 stream     online task stream with no-forgetting checks\n\
-         \x20 serve      multi-task serving demo with latency metrics\n\
+         \x20 serve      multi-task serving: in-process demo, or the HTTP\n\
+         \x20            gateway with hot task registration (--port)\n\
+         \x20 loadgen    closed-loop load harness against a running\n\
+         \x20            gateway; writes BENCH_serve.json\n\
          \x20 baseline   no-BERT baseline search for one task\n\
          \x20 bench      regenerate paper tables/figures (see ARCHITECTURE.md)\n\
          \x20 list-tasks show the synthetic task suites\n\
@@ -270,34 +281,99 @@ fn cmd_stream(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use adapterbert::coordinator::server::Request;
+    use adapterbert::coordinator::FlushPolicy;
     use std::sync::mpsc;
-    use std::time::Instant;
+    use std::time::{Duration, Instant};
 
     let (rt, world) = open_runtime(args)?;
     let base = load_base(&rt, &world, args)?;
-    let store = Arc::new(AdapterStore::in_memory());
+    let store = match args.get("store") {
+        Some(dir) => Arc::new(AdapterStore::at(Path::new(dir))?),
+        None => Arc::new(AdapterStore::in_memory()),
+    };
 
-    // train a couple of tasks quickly so there is something to serve
-    let serve_tasks = ["rte_s", "mrpc_s"];
+    // train the requested tenants (unless the store already has them)
+    let task_list = args.get_or("tasks", "rte_s,mrpc_s");
+    let mut serve_tasks: Vec<String> = Vec::new();
     let mut task_classes = BTreeMap::new();
-    for name in serve_tasks {
-        let spec = tasks::find_spec(name).unwrap();
-        let data = tasks::generate(&world, &spec, rt.manifest.dims.seq);
-        let cfg = TrainConfig::new("cls_train_adapter_m8", 1e-3, 4, 0);
-        let res = train::train_task(&rt, &cfg, &data, &base)?;
-        store.register(name, &res.model, res.val_score)?;
+    for name in task_list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let spec = tasks::find_spec(name)
+            .with_context(|| format!("unknown task {name:?} (see list-tasks)"))?;
         if let TaskKind::Cls { n_classes, .. } = spec.kind {
             task_classes.insert(name.to_string(), n_classes);
         }
-        println!("serving task {name} (val {:.3})", res.val_score);
+        if store.latest(name).is_none() {
+            let data = tasks::generate(&world, &spec, rt.manifest.dims.seq);
+            let kind = spec.kind.artifact_kind();
+            let exe = format!("{kind}_train_adapter_m{}", args.get_or("m", "8"));
+            let cfg =
+                TrainConfig::new(&exe, 1e-3, args.parse_num("epochs", 4usize)?, 0);
+            let res = train::train_task(&rt, &cfg, &data, &base)?;
+            store.register(name, &res.model, res.val_score)?;
+            println!("serving task {name} (val {:.3})", res.val_score);
+        } else {
+            println!("serving task {name} (from store)");
+        }
+        serve_tasks.push(name.to_string());
     }
 
-    let mut scfg = ServerConfig::default();
-    scfg.flush.max_batch = args.parse_num("max-batch", rt.manifest.batch)?;
-    scfg.executors = args.parse_num("executors", 1usize)?;
+    let scfg = ServerConfig {
+        flush: FlushPolicy {
+            max_batch: args.parse_num("max-batch", rt.manifest.batch)?,
+            max_delay: Duration::from_millis(5),
+        },
+        executors: args.parse_num("executors", 1usize)?,
+        queue_capacity: 1024,
+    };
     let server = Server::start(rt.clone(), &store, &base, &task_classes, scfg)?;
 
-    // synthetic clients sending text through the tokenizer
+    // --port: expose the coordinator over HTTP (the networked gateway)
+    if let Some(port) = args.get("port") {
+        use adapterbert::serve::{Gateway, GatewayConfig, HttpConfig};
+        let port: u16 = port
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--port {port:?}: {e}"))?;
+        let gcfg = GatewayConfig {
+            addr: format!("127.0.0.1:{port}"),
+            http: HttpConfig {
+                workers: args.parse_num("workers", 4usize)?,
+                ..Default::default()
+            },
+            max_inflight: args.parse_num("max-inflight", 256usize)?,
+            reply_timeout: Duration::from_secs(30),
+        };
+        let gw = Gateway::start(rt.clone(), store.clone(), server, gcfg)?;
+        println!("gateway listening on http://{}", gw.local_addr());
+        println!(
+            "routes: GET /health /tasks /metrics | POST /predict /predict_ids /tasks"
+        );
+        let duration: f64 = args.parse_num("duration", 0.0f64)?;
+        if duration > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(duration));
+            let report = gw.shutdown()?;
+            println!(
+                "drained: {} served | 503 admission {} | 503 backpressure {} | \
+                 504 timeouts {}",
+                report.served,
+                report.admission_rejected,
+                report.backpressure_rejected,
+                report.timeouts
+            );
+            println!(
+                "coordinator: {} requests in {} batches, mean occupancy {:.2}",
+                report.server.requests,
+                report.server.batches,
+                report.server.mean_occupancy()
+            );
+        } else {
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        return Ok(());
+    }
+
+    // no --port: the original in-process demo with synthetic clients
     let n_requests: usize = args.parse_num("requests", 256)?;
     let tok = Tokenizer::new(rt.manifest.dims.vocab);
     let seq = rt.manifest.dims.seq;
@@ -305,13 +381,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (reply_tx, reply_rx) = mpsc::channel();
     let t0 = Instant::now();
     for i in 0..n_requests {
-        let task = serve_tasks[i % serve_tasks.len()];
+        let task = &serve_tasks[i % serve_tasks.len()];
         let words: Vec<String> = (0..20)
             .map(|_| tok.word(4 + rng.below(400) as i32).to_string())
             .collect();
         let (tokens, mask) = tok.encode_for_cls(&words.join(" "), seq);
         server.submit_blocking(Request {
-            task: task.to_string(),
+            task: task.clone(),
             tokens,
             segments: vec![0; seq],
             attn_mask: mask,
@@ -336,6 +412,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
         metrics.latencies.summary(1.0),
         metrics.mean_occupancy()
     );
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use adapterbert::bench::loadgen;
+    use std::time::Duration;
+
+    let addr = args
+        .get("addr")
+        .context("--addr HOST:PORT required (a running `serve --port`)")?
+        .to_string();
+    let tasks: Vec<String> = args
+        .get("tasks")
+        .map(|t| {
+            t.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
+    let duration = match args.get("duration") {
+        Some(v) => {
+            let secs: f64 =
+                v.parse().map_err(|e| anyhow::anyhow!("--duration {v:?}: {e}"))?;
+            anyhow::ensure!(secs > 0.0, "--duration must be positive");
+            Some(Duration::from_secs_f64(secs))
+        }
+        None => None,
+    };
+    let cfg = loadgen::LoadgenConfig {
+        addr,
+        tasks,
+        concurrency: args.parse_num("concurrency", 4usize)?,
+        requests: args.parse_num("requests", 200u64)?,
+        duration,
+        words_per_request: args.parse_num("words", 12usize)?,
+        seed: args.parse_num("seed", 7u64)?,
+    };
+    let report = loadgen::run(&cfg)?;
+    let out = args.get_or("out", "BENCH_serve.json");
+    loadgen::write_report(Path::new(&out), &report.to_json(&cfg))?;
+    println!(
+        "{} requests ({} errors) in {:.2}s → {:.1} req/s",
+        report.requests,
+        report.errors,
+        report.wall_s,
+        report.throughput_rps()
+    );
+    for (task, t) in &report.per_task {
+        let (p50, p99) = if t.latencies.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (t.latencies.pctl_s(50.0) * 1e3, t.latencies.pctl_s(99.0) * 1e3)
+        };
+        println!(
+            "  {:16} {:6} req  {:3} err  p50 {p50:8.2}ms  p99 {p99:8.2}ms",
+            task, t.requests, t.errors
+        );
+    }
+    println!("wrote {out}");
+    anyhow::ensure!(report.errors == 0, "{} request(s) failed", report.errors);
     Ok(())
 }
 

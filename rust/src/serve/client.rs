@@ -1,0 +1,134 @@
+//! Blocking Rust client for the gateway protocol — one keep-alive
+//! connection per client, suitable for one thread of a load generator or
+//! a remote trainer pushing banks via hot registration.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use super::http;
+use super::protocol::{
+    Health, PredictRequest, PredictResponse, RegisterRequest, RegisterResponse,
+    TaskEntry,
+};
+use crate::util::json::Json;
+
+/// A blocking HTTP client pinned to one gateway address.
+pub struct Client {
+    addr: String,
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to `addr` (`host:port`).
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to gateway at {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+        Ok(Client { addr: addr.to_string(), reader, writer: stream })
+    }
+
+    /// The gateway address this client talks to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Drop the current connection and dial again (after an io error).
+    pub fn reconnect(&mut self) -> Result<()> {
+        let fresh = Client::connect(&self.addr)?;
+        *self = fresh;
+        Ok(())
+    }
+
+    /// One request/response exchange; returns (status, parsed JSON body).
+    pub fn roundtrip(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> Result<(u16, Json)> {
+        let bytes = body.map(|j| j.to_string().into_bytes());
+        http::write_request(&mut self.writer, method, path, bytes.as_deref())
+            .context("writing request")?;
+        let resp = http::read_client_response(&mut self.reader)?;
+        let text =
+            String::from_utf8(resp.body).context("response body not utf-8")?;
+        let j = if text.trim().is_empty() {
+            Json::Null
+        } else {
+            Json::parse(&text).map_err(|e| anyhow::anyhow!("bad response json: {e}"))?
+        };
+        Ok((resp.status, j))
+    }
+
+    fn expect_ok(&mut self, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
+        let (status, j) = self.roundtrip(method, path, body)?;
+        if status != 200 {
+            let msg = j
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("(no error message)");
+            bail!("{method} {path}: HTTP {status}: {msg}");
+        }
+        Ok(j)
+    }
+
+    /// `GET /health`.
+    pub fn health(&mut self) -> Result<Health> {
+        let j = self.expect_ok("GET", "/health", None)?;
+        Health::from_json(&j)
+    }
+
+    /// `GET /tasks`.
+    pub fn tasks(&mut self) -> Result<Vec<TaskEntry>> {
+        let j = self.expect_ok("GET", "/tasks", None)?;
+        j.at("tasks")
+            .as_arr()
+            .context("tasks must be an array")?
+            .iter()
+            .map(TaskEntry::from_json)
+            .collect()
+    }
+
+    /// `GET /metrics` (raw JSON — shape documented in `serve::gateway`).
+    pub fn metrics(&mut self) -> Result<Json> {
+        self.expect_ok("GET", "/metrics", None)
+    }
+
+    /// `POST /predict` with an arbitrary request.
+    pub fn predict(&mut self, req: &PredictRequest) -> Result<PredictResponse> {
+        let j = self.expect_ok("POST", "/predict", Some(&req.to_json()))?;
+        PredictResponse::from_json(&j)
+    }
+
+    /// Predict on a single sentence.
+    pub fn predict_text(&mut self, task: &str, text: &str) -> Result<PredictResponse> {
+        self.predict(&PredictRequest::text(task, text))
+    }
+
+    /// Predict on a sentence pair.
+    pub fn predict_pair(
+        &mut self,
+        task: &str,
+        a: &str,
+        b: &str,
+    ) -> Result<PredictResponse> {
+        self.predict(&PredictRequest::pair(task, a, b))
+    }
+
+    /// Predict on pre-tokenized input (`POST /predict_ids`).
+    pub fn predict_ids(&mut self, task: &str, tokens: &[i32]) -> Result<PredictResponse> {
+        let req = PredictRequest::ids(task, tokens.to_vec());
+        let j = self.expect_ok("POST", "/predict_ids", Some(&req.to_json()))?;
+        PredictResponse::from_json(&j)
+    }
+
+    /// Hot-register a trained bank (`POST /tasks`).
+    pub fn register_task(&mut self, req: &RegisterRequest) -> Result<RegisterResponse> {
+        let j = self.expect_ok("POST", "/tasks", Some(&req.to_json()))?;
+        RegisterResponse::from_json(&j)
+    }
+}

@@ -1,0 +1,560 @@
+//! The serving gateway: coordinator behind an HTTP front end.
+//!
+//! Responsibilities, layered on top of `coordinator::Server`:
+//!
+//! * **routing** — the wire protocol table in `serve::protocol` mapped
+//!   onto handlers (predict by text / ids, task listing, health, hot
+//!   registration, metrics);
+//! * **admission control** — a bounded in-flight window *in front of* the
+//!   router's bounded queue: overload answers `503` immediately instead
+//!   of stacking blocked HTTP workers;
+//! * **observability** — per-task latency histograms (log-spaced buckets,
+//!   constant memory) exposing p50/p95/p99 at `GET /metrics`, plus the
+//!   coordinator's batch/occupancy counters;
+//! * **graceful drain** — [`Gateway::shutdown`] stops the accept loop,
+//!   lets in-flight requests finish and be answered, then drains and
+//!   joins the coordinator. No accepted request is dropped.
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::http::{Handler, HttpConfig, HttpRequest, HttpResponse, HttpServer};
+use super::protocol::{PredictRequest, PredictResponse, RegisterRequest, TaskEntry};
+use super::registry;
+use crate::coordinator::server::{Request, Server, ServerMetrics};
+use crate::data::grammar::PAD;
+use crate::runtime::Runtime;
+use crate::store::AdapterStore;
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// latency histograms
+// ---------------------------------------------------------------------------
+
+const HIST_MIN_S: f64 = 1e-5; // 10 µs
+const HIST_RATIO: f64 = 1.25; // ~25% bucket resolution
+const HIST_BUCKETS: usize = 80; // covers 10 µs … ≈ 500 s
+
+/// Fixed-memory latency histogram: log-spaced buckets from 10 µs up, each
+/// 25% wider than the last. Quantiles come back as the geometric mean of
+/// the winning bucket's bounds, so error is bounded by the bucket ratio —
+/// plenty for p50/p95/p99 serving dashboards, with no per-sample storage.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    counts: Vec<u64>,
+    count: u64,
+    sum_s: f64,
+    max_s: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist { counts: vec![0; HIST_BUCKETS], count: 0, sum_s: 0.0, max_s: 0.0 }
+    }
+}
+
+impl LatencyHist {
+    fn bucket(s: f64) -> usize {
+        if s <= HIST_MIN_S {
+            return 0;
+        }
+        let i = ((s / HIST_MIN_S).ln() / HIST_RATIO.ln()).floor();
+        (i as usize).min(HIST_BUCKETS - 1)
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let s = d.as_secs_f64();
+        self.count += 1;
+        self.sum_s += s;
+        if s > self.max_s {
+            self.max_s = s;
+        }
+        self.counts[Self::bucket(s)] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    /// Quantile in seconds, `q` in `[0, 1]`.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let lo = HIST_MIN_S * HIST_RATIO.powi(i as i32);
+                let hi = lo * HIST_RATIO;
+                return (lo * hi).sqrt().min(self.max_s);
+            }
+        }
+        self.max_s
+    }
+
+    /// `{count, mean_ms, p50_ms, p95_ms, p99_ms, max_ms}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean_ms", Json::num(self.mean_s() * 1e3)),
+            ("p50_ms", Json::num(self.quantile_s(0.50) * 1e3)),
+            ("p95_ms", Json::num(self.quantile_s(0.95) * 1e3)),
+            ("p99_ms", Json::num(self.quantile_s(0.99) * 1e3)),
+            ("max_ms", Json::num(self.max_s * 1e3)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gateway
+// ---------------------------------------------------------------------------
+
+/// Gateway policy knobs (transport knobs live in [`HttpConfig`]).
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub addr: String,
+    pub http: HttpConfig,
+    /// Admission window: predicts in flight beyond this answer `503`.
+    pub max_inflight: usize,
+    /// How long a predict waits for its coordinator reply before `504`.
+    pub reply_timeout: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            http: HttpConfig::default(),
+            max_inflight: 256,
+            reply_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Counters + histograms behind `GET /metrics`.
+struct GatewayStats {
+    per_task: Mutex<BTreeMap<String, LatencyHist>>,
+    served: AtomicU64,
+    admission_rejected: AtomicU64,
+    backpressure_rejected: AtomicU64,
+    timeouts: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// Shared state behind the HTTP worker pool.
+pub struct GatewayState {
+    server: Server,
+    store: Arc<AdapterStore>,
+    rt: Arc<Runtime>,
+    tok: Tokenizer,
+    cfg: GatewayConfig,
+    inflight: AtomicUsize,
+    stats: GatewayStats,
+    /// serializes `POST /tasks` so store version order matches the
+    /// executor-side install order
+    reg_lock: Mutex<()>,
+}
+
+/// Final numbers handed back by [`Gateway::shutdown`].
+#[derive(Debug)]
+pub struct GatewayReport {
+    /// Aggregated coordinator metrics (latencies, batches, occupancy).
+    pub server: ServerMetrics,
+    /// Predicts answered `200`.
+    pub served: u64,
+    /// Predicts answered `503` by the admission window.
+    pub admission_rejected: u64,
+    /// Predicts answered `503` by router backpressure.
+    pub backpressure_rejected: u64,
+    /// Predicts answered `504`.
+    pub timeouts: u64,
+}
+
+/// A running gateway: HTTP front end + coordinator + hot registry.
+pub struct Gateway {
+    state: Arc<GatewayState>,
+    http: HttpServer,
+}
+
+impl Gateway {
+    /// Put `server` (already serving `store`'s tasks) on the network.
+    pub fn start(
+        rt: Arc<Runtime>,
+        store: Arc<AdapterStore>,
+        server: Server,
+        cfg: GatewayConfig,
+    ) -> Result<Gateway> {
+        let tok = Tokenizer::new(rt.manifest.dims.vocab);
+        let state = Arc::new(GatewayState {
+            server,
+            store,
+            rt,
+            tok,
+            cfg: cfg.clone(),
+            inflight: AtomicUsize::new(0),
+            stats: GatewayStats {
+                per_task: Mutex::new(BTreeMap::new()),
+                served: AtomicU64::new(0),
+                admission_rejected: AtomicU64::new(0),
+                backpressure_rejected: AtomicU64::new(0),
+                timeouts: AtomicU64::new(0),
+                errors: AtomicU64::new(0),
+            },
+            reg_lock: Mutex::new(()),
+        });
+        let handler: Arc<dyn Handler> = state.clone();
+        let http = HttpServer::start(&cfg.addr, cfg.http, handler)?;
+        Ok(Gateway { state, http })
+    }
+
+    /// The bound address (ephemeral port resolved).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.http.local_addr()
+    }
+
+    /// The coordinator behind the gateway (e.g. for local hot installs).
+    pub fn server(&self) -> &Server {
+        &self.state.server
+    }
+
+    /// Graceful shutdown: stop the accept loop, finish and answer every
+    /// in-flight HTTP request, then drain + join the coordinator.
+    pub fn shutdown(self) -> Result<GatewayReport> {
+        // 1. transport first: no new connections/requests; workers finish
+        //    their current request (including its coordinator reply)
+        self.http.stop();
+        // 2. all worker Arcs are gone now — reclaim the state
+        let state = match Arc::try_unwrap(self.state) {
+            Ok(s) => s,
+            Err(_) => bail!("gateway state still shared after worker join"),
+        };
+        // 3. coordinator: refuse new submits, flush queues, join threads
+        state.server.drain();
+        let server = state.server.shutdown();
+        Ok(GatewayReport {
+            server,
+            served: state.stats.served.load(Ordering::Relaxed),
+            admission_rejected: state.stats.admission_rejected.load(Ordering::Relaxed),
+            backpressure_rejected: state
+                .stats
+                .backpressure_rejected
+                .load(Ordering::Relaxed),
+            timeouts: state.stats.timeouts.load(Ordering::Relaxed),
+        })
+    }
+}
+
+/// RAII decrement for the admission window.
+struct InflightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Handler for GatewayState {
+    fn handle(&self, req: &HttpRequest) -> HttpResponse {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/health") => self.health(),
+            ("GET", "/tasks") => self.task_list(),
+            ("GET", "/metrics") => self.metrics(),
+            ("POST", "/predict") | ("POST", "/predict_ids") => self.predict(req),
+            ("POST", "/tasks") => self.register(req),
+            ("GET" | "POST", _) => HttpResponse::error(404, "no such route"),
+            _ => HttpResponse::error(405, "method not allowed"),
+        }
+    }
+}
+
+impl GatewayState {
+    fn health(&self) -> HttpResponse {
+        let h = super::protocol::Health {
+            status: "ok".to_string(),
+            backend: self.rt.backend_name().to_string(),
+            preset: self.rt.manifest.preset.clone(),
+            vocab: self.rt.manifest.dims.vocab,
+            seq: self.rt.manifest.dims.seq,
+            tasks: self.server.tasks().len(),
+            draining: self.server.is_draining(),
+        };
+        HttpResponse::json(200, &h.to_json())
+    }
+
+    fn task_list(&self) -> HttpResponse {
+        let entries: Vec<Json> = self
+            .server
+            .tasks()
+            .into_iter()
+            .filter_map(|task| {
+                let (kind, n_classes) = self.server.task_info(&task)?;
+                let entry = match self.store.latest(&task) {
+                    Some((meta, _)) => TaskEntry {
+                        task,
+                        version: meta.version,
+                        variant: meta.variant,
+                        kind,
+                        n_classes,
+                        val_score: meta.val_score,
+                        trained_params: meta.trained_params,
+                    },
+                    // servable but not in this store (locally installed)
+                    None => TaskEntry {
+                        task,
+                        version: 0,
+                        variant: String::new(),
+                        kind,
+                        n_classes,
+                        val_score: 0.0,
+                        trained_params: 0,
+                    },
+                };
+                Some(entry.to_json())
+            })
+            .collect();
+        HttpResponse::json(200, &Json::obj(vec![("tasks", Json::arr(entries))]))
+    }
+
+    fn metrics(&self) -> HttpResponse {
+        let per_task = self.stats.per_task.lock().unwrap();
+        let tasks = Json::Obj(
+            per_task
+                .iter()
+                .map(|(task, hist)| (task.clone(), hist.to_json()))
+                .collect(),
+        );
+        drop(per_task);
+        let coord = self.server.metrics.lock().unwrap().clone();
+        let j = Json::obj(vec![
+            ("tasks", tasks),
+            ("served", Json::num(self.stats.served.load(Ordering::Relaxed) as f64)),
+            (
+                "admission_rejected",
+                Json::num(self.stats.admission_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "backpressure_rejected",
+                Json::num(
+                    self.stats.backpressure_rejected.load(Ordering::Relaxed) as f64
+                ),
+            ),
+            (
+                "timeouts",
+                Json::num(self.stats.timeouts.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "errors",
+                Json::num(self.stats.errors.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "inflight",
+                Json::num(self.inflight.load(Ordering::SeqCst) as f64),
+            ),
+            ("draining", Json::Bool(self.server.is_draining())),
+            (
+                "coordinator",
+                Json::obj(vec![
+                    ("requests", Json::num(coord.requests as f64)),
+                    ("batches", Json::num(coord.batches as f64)),
+                    ("mean_occupancy", Json::num(coord.mean_occupancy())),
+                    (
+                        "queue_rejected",
+                        Json::num(
+                            self.server.rejected.load(Ordering::Relaxed) as f64
+                        ),
+                    ),
+                ]),
+            ),
+        ]);
+        HttpResponse::json(200, &j)
+    }
+
+    fn predict(&self, req: &HttpRequest) -> HttpResponse {
+        let preq = match req.json_body().and_then(|j| PredictRequest::from_json(&j)) {
+            Ok(p) => p,
+            Err(e) => return HttpResponse::error(400, &format!("{e:#}")),
+        };
+        if self.server.task_info(&preq.task).is_none() {
+            return HttpResponse::error(
+                404,
+                &format!("unknown task {:?} (see GET /tasks)", preq.task),
+            );
+        }
+        if self.server.is_draining() {
+            return HttpResponse::error(503, "server draining");
+        }
+        // admission control: bound the number of predicts parked on reply
+        // channels before they even reach the router's bounded queue
+        let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+        let _guard = InflightGuard(&self.inflight);
+        if prev >= self.cfg.max_inflight {
+            self.stats.admission_rejected.fetch_add(1, Ordering::Relaxed);
+            return HttpResponse::error(503, "over capacity (admission window full)");
+        }
+        let (tokens, segments, attn_mask) = match self.encode(&preq) {
+            Ok(t) => t,
+            Err(e) => return HttpResponse::error(400, &format!("{e:#}")),
+        };
+        let (reply, rx) = mpsc::channel();
+        let creq = Request {
+            task: preq.task.clone(),
+            tokens,
+            segments,
+            attn_mask,
+            reply,
+            submitted: Instant::now(),
+        };
+        if self.server.submit(creq).is_err() {
+            self.stats.backpressure_rejected.fetch_add(1, Ordering::Relaxed);
+            return HttpResponse::error(503, "router queue full, retry");
+        }
+        match rx.recv_timeout(self.cfg.reply_timeout) {
+            Ok(resp) => {
+                let mut per_task = self.stats.per_task.lock().unwrap();
+                per_task.entry(resp.task.clone()).or_default().record(resp.latency);
+                drop(per_task);
+                self.stats.served.fetch_add(1, Ordering::Relaxed);
+                HttpResponse::json(200, &PredictResponse::from_response(&resp).to_json())
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                HttpResponse::error(504, "prediction timed out")
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                HttpResponse::error(500, "request dropped by executor")
+            }
+        }
+    }
+
+    fn register(&self, req: &HttpRequest) -> HttpResponse {
+        let rreq = match req.json_body().and_then(|j| RegisterRequest::from_json(&j)) {
+            Ok(r) => r,
+            Err(e) => return HttpResponse::error(400, &format!("{e:#}")),
+        };
+        if self.server.is_draining() {
+            return HttpResponse::error(503, "server draining");
+        }
+        let _serial = self.reg_lock.lock().unwrap();
+        match registry::register_from_wire(&self.store, &self.server, &rreq) {
+            Ok(resp) => HttpResponse::json(200, &resp.to_json()),
+            Err(e) => HttpResponse::error(400, &format!("{e:#}")),
+        }
+    }
+
+    /// Turn a wire request into padded (tokens, segments, attention mask).
+    fn encode(&self, preq: &PredictRequest) -> Result<(Vec<i32>, Vec<i32>, Vec<f32>)> {
+        let seq = self.rt.manifest.dims.seq;
+        let vocab = self.rt.manifest.dims.vocab as i32;
+        if let Some(given) = &preq.tokens {
+            if given.len() > seq {
+                bail!("{} tokens exceed model seq length {seq}", given.len());
+            }
+            if let Some(&bad) = given.iter().find(|&&t| t < 0 || t >= vocab) {
+                bail!("token id {bad} outside vocab [0, {vocab})");
+            }
+            let mut tokens = given.clone();
+            let mut attn: Vec<f32> = tokens
+                .iter()
+                .map(|&t| if t == PAD { 0.0 } else { 1.0 })
+                .collect();
+            let segments = match &preq.segments {
+                Some(s) => {
+                    if s.len() != given.len() {
+                        bail!(
+                            "segments length {} != tokens length {}",
+                            s.len(),
+                            given.len()
+                        );
+                    }
+                    if s.iter().any(|&x| !(0..=1).contains(&x)) {
+                        bail!("segment ids must be 0 or 1");
+                    }
+                    let mut s = s.clone();
+                    s.resize(seq, 0);
+                    s
+                }
+                None => vec![0; seq],
+            };
+            tokens.resize(seq, PAD);
+            attn.resize(seq, 0.0);
+            Ok((tokens, segments, attn))
+        } else {
+            let text = preq.text.as_deref().context("request needs text or tokens")?;
+            match preq.text_b.as_deref() {
+                Some(b) => Ok(self.tok.encode_for_pair(text, b, seq)),
+                None => {
+                    let (tokens, attn) = self.tok.encode_for_cls(text, seq);
+                    Ok((tokens, vec![0; seq], attn))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_quantiles_land_in_bucket() {
+        let mut h = LatencyHist::default();
+        for _ in 0..100 {
+            h.record(Duration::from_millis(10));
+        }
+        let p50 = h.quantile_s(0.50);
+        // within one bucket ratio of the true value
+        assert!(p50 >= 0.010 / HIST_RATIO && p50 <= 0.010 * HIST_RATIO, "{p50}");
+        assert_eq!(h.count(), 100);
+        assert!((h.mean_s() - 0.010).abs() < 1e-4);
+    }
+
+    #[test]
+    fn hist_tail_quantiles_order() {
+        let mut h = LatencyHist::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i * 100)); // 0.1ms … 100ms
+        }
+        let (p50, p95, p99) = (h.quantile_s(0.5), h.quantile_s(0.95), h.quantile_s(0.99));
+        // p95/p99 may share a log bucket; ordering is still monotone
+        assert!(p50 < p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(p99 <= h.max_s + 1e-12);
+        // p50 of a uniform 0.1..100ms spread sits near 50ms
+        assert!(p50 > 0.030 && p50 < 0.070, "{p50}");
+    }
+
+    #[test]
+    fn hist_empty_is_zero() {
+        let h = LatencyHist::default();
+        assert_eq!(h.quantile_s(0.99), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+        let j = h.to_json();
+        assert_eq!(j.at("count").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn hist_extremes_clamp_to_edge_buckets() {
+        let mut h = LatencyHist::default();
+        h.record(Duration::from_nanos(1)); // below first bucket
+        h.record(Duration::from_secs(10_000)); // beyond last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_s(1.0) <= h.max_s);
+    }
+}

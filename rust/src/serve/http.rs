@@ -1,0 +1,637 @@
+//! Minimal HTTP/1.1 over `std::net` — the transport under the gateway.
+//!
+//! The environment is offline (no tokio/hyper), so this mirrors the
+//! std-threads choice in `coordinator/server.rs`: a non-blocking accept
+//! loop feeds a **bounded** connection queue (overflow is answered with
+//! `503` and closed — backpressure, not an unbounded backlog), and a
+//! fixed worker pool round-robins over keep-alive connections at request
+//! granularity (no connection ever pins a worker). Parsing is the
+//! small subset the wire protocol needs: request line, headers,
+//! `Content-Length` bodies (no chunked encoding), with hard limits on
+//! header and body size so a bad client cannot balloon memory.
+//!
+//! Both sides of the protocol live here: [`read_request`]/
+//! [`write_response`] for the server, [`write_request`]/
+//! [`read_client_response`] for `serve::client` and the load generator.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Request line + headers must fit in this many bytes.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Bodies larger than this are refused (covers hot-registration banks).
+pub const MAX_BODY_BYTES: usize = 32 * 1024 * 1024;
+
+/// One parsed request. Header names are lowercased at parse time.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Header value by (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 keep-alive semantics: persistent unless `Connection: close`.
+    pub fn keep_alive(&self) -> bool {
+        !self
+            .header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+
+    /// Body parsed as JSON (`400`-shaped error text on failure).
+    pub fn json_body(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body).context("body is not utf-8")?;
+        if text.trim().is_empty() {
+            bail!("empty body (expected a JSON object)");
+        }
+        Json::parse(text).map_err(|e| anyhow::anyhow!("bad json body: {e}"))
+    }
+}
+
+/// One response to serialize. Always `application/json` in this protocol.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, j: &Json) -> HttpResponse {
+        HttpResponse { status, body: j.to_string().into_bytes() }
+    }
+
+    /// `{"error": msg}` with the given status.
+    pub fn error(status: u16, msg: &str) -> HttpResponse {
+        Self::json(status, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+}
+
+/// Canonical reason phrase for the status codes this protocol uses.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wire reading/writing
+// ---------------------------------------------------------------------------
+
+/// Outcome of trying to read one request off a keep-alive connection.
+pub enum ReadOutcome {
+    Request(HttpRequest),
+    /// Peer closed the connection between requests.
+    Eof,
+    /// Read timed out with no bytes received — idle keep-alive; the
+    /// caller may check its stop flag and retry.
+    Idle,
+}
+
+enum LineOutcome {
+    Line(Vec<u8>),
+    Eof,
+    Idle,
+}
+
+fn read_line(r: &mut impl BufRead, max: usize) -> Result<LineOutcome> {
+    let mut buf = Vec::new();
+    // cap the read itself (not just the result): an endless line without
+    // a newline must fail at `max`, not balloon memory first
+    let mut limited = Read::take(&mut *r, max as u64 + 1);
+    match limited.read_until(b'\n', &mut buf) {
+        Ok(0) => {
+            if buf.is_empty() {
+                Ok(LineOutcome::Eof)
+            } else {
+                bail!("connection closed mid-line")
+            }
+        }
+        Ok(_) => {
+            if buf.len() > max {
+                bail!("header line over {max} bytes");
+            }
+            if buf.last() != Some(&b'\n') {
+                bail!("connection closed mid-line");
+            }
+            while matches!(buf.last(), Some(b'\n' | b'\r')) {
+                buf.pop();
+            }
+            Ok(LineOutcome::Line(buf))
+        }
+        Err(e)
+            if e.kind() == io::ErrorKind::WouldBlock
+                || e.kind() == io::ErrorKind::TimedOut =>
+        {
+            if buf.is_empty() {
+                Ok(LineOutcome::Idle)
+            } else {
+                bail!("read timed out mid-request")
+            }
+        }
+        Err(e) => Err(e).context("socket read"),
+    }
+}
+
+/// Read one request (server side). `Idle`/`Eof` are not errors — they let
+/// the worker poll its stop flag on quiet keep-alive connections.
+pub fn read_request(r: &mut impl BufRead) -> Result<ReadOutcome> {
+    let start = match read_line(r, MAX_HEAD_BYTES)? {
+        LineOutcome::Eof => return Ok(ReadOutcome::Eof),
+        LineOutcome::Idle => return Ok(ReadOutcome::Idle),
+        LineOutcome::Line(l) => String::from_utf8(l).context("request line not utf-8")?,
+    };
+    let mut parts = start.split_whitespace();
+    let method = parts
+        .next()
+        .context("missing method")?
+        .to_ascii_uppercase();
+    let path = parts.next().context("missing path")?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol version {version:?}");
+    }
+    let mut headers = Vec::new();
+    let mut head_bytes = start.len();
+    loop {
+        let line = match read_line(r, MAX_HEAD_BYTES)? {
+            LineOutcome::Line(l) => l,
+            _ => bail!("connection closed inside headers"),
+        };
+        if line.is_empty() {
+            break;
+        }
+        head_bytes += line.len();
+        if head_bytes > MAX_HEAD_BYTES {
+            bail!("headers over {MAX_HEAD_BYTES} bytes");
+        }
+        let text = String::from_utf8(line).context("header not utf-8")?;
+        let (name, value) = text
+            .split_once(':')
+            .with_context(|| format!("malformed header {text:?}"))?;
+        headers.push((
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+    let mut req = HttpRequest { method, path, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        bail!("chunked transfer encoding is not supported");
+    }
+    let content_length = match req.header("content-length") {
+        Some(v) => v.parse::<usize>().context("bad content-length")?,
+        None => 0,
+    };
+    if content_length > MAX_BODY_BYTES {
+        bail!("body of {content_length} bytes over limit {MAX_BODY_BYTES}");
+    }
+    if content_length > 0 {
+        let mut body = vec![0u8; content_length];
+        r.read_exact(&mut body).context("reading body")?;
+        req.body = body;
+    }
+    Ok(ReadOutcome::Request(req))
+}
+
+/// Serialize a response (server side).
+pub fn write_response(
+    w: &mut impl Write,
+    resp: &HttpResponse,
+    keep_alive: bool,
+) -> io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", resp.status, status_text(resp.status))?;
+    write!(w, "content-type: application/json\r\n")?;
+    write!(w, "content-length: {}\r\n", resp.body.len())?;
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    write!(w, "connection: {conn}\r\n\r\n")?;
+    w.write_all(&resp.body)?;
+    w.flush()
+}
+
+/// Serialize a request (client side).
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+) -> io::Result<()> {
+    write!(w, "{method} {path} HTTP/1.1\r\n")?;
+    write!(w, "host: adapterbert\r\n")?;
+    if body.is_some() {
+        write!(w, "content-type: application/json\r\n")?;
+    }
+    write!(w, "content-length: {}\r\n", body.map_or(0, <[u8]>::len))?;
+    write!(w, "connection: keep-alive\r\n\r\n")?;
+    if let Some(b) = body {
+        w.write_all(b)?;
+    }
+    w.flush()
+}
+
+/// A client-side view of one response: status + body.
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub body: Vec<u8>,
+}
+
+/// Read one response (client side).
+pub fn read_client_response(r: &mut impl BufRead) -> Result<ClientResponse> {
+    let status_line = match read_line(r, MAX_HEAD_BYTES)? {
+        LineOutcome::Line(l) => String::from_utf8(l).context("status line not utf-8")?,
+        _ => bail!("connection closed before response"),
+    };
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .with_context(|| format!("malformed status line {status_line:?}"))?
+        .parse()
+        .context("bad status code")?;
+    let mut content_length = 0usize;
+    loop {
+        let line = match read_line(r, MAX_HEAD_BYTES)? {
+            LineOutcome::Line(l) => l,
+            _ => bail!("connection closed inside response headers"),
+        };
+        if line.is_empty() {
+            break;
+        }
+        let text = String::from_utf8(line).context("header not utf-8")?;
+        if let Some((name, value)) = text.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!("response body over limit");
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).context("reading response body")?;
+    Ok(ClientResponse { status, body })
+}
+
+// ---------------------------------------------------------------------------
+// server plumbing: bounded accept loop + worker pool
+// ---------------------------------------------------------------------------
+
+/// What the gateway (or any user of this layer) plugs into the pool.
+pub trait Handler: Send + Sync + 'static {
+    fn handle(&self, req: &HttpRequest) -> HttpResponse;
+}
+
+/// Transport knobs, separate from the gateway's serving policy.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Worker threads serving connections. Connections do **not** pin a
+    /// worker: the pool round-robins at request granularity (see
+    /// [`HttpServer::start`]), so more concurrent keep-alive connections
+    /// than workers still all make progress.
+    pub workers: usize,
+    /// Bounded connection queue (accepted + requeued-between-requests);
+    /// overflow at accept time is answered `503`.
+    pub max_queued_connections: usize,
+    /// How long a worker waits for a dequeued connection's next request
+    /// before putting it back in the rotation — also bounds how fast
+    /// workers observe the stop flag.
+    pub read_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            workers: 4,
+            max_queued_connections: 64,
+            read_timeout: Duration::from_millis(100),
+        }
+    }
+}
+
+/// A running HTTP front end; `stop()` joins every thread.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    worker_handles: Vec<std::thread::JoinHandle<()>>,
+    /// Connections accepted into the queue.
+    pub accepted: Arc<AtomicU64>,
+    /// Connections refused with `503` because the queue was full.
+    pub refused: Arc<AtomicU64>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (port 0 = ephemeral; see [`HttpServer::local_addr`])
+    /// and start the accept loop + worker pool.
+    pub fn start(addr: &str, cfg: HttpConfig, handler: Arc<dyn Handler>) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("local_addr")?;
+        listener
+            .set_nonblocking(true)
+            .context("listener nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let refused = Arc::new(AtomicU64::new(0));
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.max_queued_connections);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+        // Workers round-robin over connections at REQUEST granularity: a
+        // worker dequeues a connection, serves at most one request (plus
+        // any bytes already pipelined), and puts the connection back in
+        // the queue. A keep-alive connection therefore never pins a
+        // worker, so `connections > workers` all make progress — the
+        // closed-loop load harness depends on this.
+        let mut worker_handles = Vec::new();
+        for i in 0..cfg.workers.max(1) {
+            let conn_rx = conn_rx.clone();
+            let conn_tx = conn_tx.clone();
+            let handler = handler.clone();
+            let stop = stop.clone();
+            let read_timeout = cfg.read_timeout;
+            let handle = std::thread::Builder::new()
+                .name(format!("ab-http-{i}"))
+                .spawn(move || loop {
+                    // recv_timeout (not recv): workers hold conn_tx
+                    // clones for requeueing, so the channel never
+                    // disconnects — the stop flag is the exit signal
+                    let conn = {
+                        let rx = conn_rx.lock().unwrap();
+                        rx.recv_timeout(Duration::from_millis(50))
+                    };
+                    match conn {
+                        Ok(stream) => {
+                            match serve_turn(stream, &*handler, &stop, read_timeout) {
+                                Ok(ConnTurn::Requeue(s)) => {
+                                    // queue full ⇒ drop the connection —
+                                    // bounded state beats silent backlog
+                                    let _ = conn_tx.try_send(s);
+                                }
+                                Ok(ConnTurn::Done) => {}
+                                Err(e) => {
+                                    // connection-level failures are the
+                                    // client's problem — log and move on
+                                    eprintln!("http connection error: {e:#}");
+                                }
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if stop.load(Ordering::SeqCst) {
+                                return;
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                    }
+                })?;
+            worker_handles.push(handle);
+        }
+
+        let stop_a = stop.clone();
+        let accepted_a = accepted.clone();
+        let refused_a = refused.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("ab-http-accept".into())
+            .spawn(move || {
+                loop {
+                    if stop_a.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            // accepted sockets may inherit the listener's
+                            // non-blocking flag on some platforms
+                            let _ = stream.set_nonblocking(false);
+                            match conn_tx.try_send(stream) {
+                                Ok(()) => {
+                                    accepted_a.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(mpsc::TrySendError::Full(s)) => {
+                                    refused_a.fetch_add(1, Ordering::Relaxed);
+                                    busy_reject(s);
+                                }
+                                Err(mpsc::TrySendError::Disconnected(_)) => break,
+                            }
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+                // workers hold their own conn_tx clones for requeueing,
+                // so they exit via the stop flag, not channel disconnect
+            })?;
+
+        Ok(HttpServer {
+            addr: local,
+            stop,
+            accept_handle: Some(accept_handle),
+            worker_handles,
+            accepted,
+            refused,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port chosen).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, finish in-flight requests, join every thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn busy_reject(mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let resp = HttpResponse::error(503, "connection queue full");
+    let _ = write_response(&mut stream, &resp, false);
+}
+
+/// What one worker turn on a connection decided.
+enum ConnTurn {
+    /// Keep-alive connection with no buffered data — rotate it back into
+    /// the queue so this worker can serve someone else.
+    Requeue(TcpStream),
+    /// Connection finished (EOF, `Connection: close`, or stop).
+    Done,
+}
+
+/// Serve one request on `stream` (plus any already-pipelined ones), then
+/// yield. `Idle` (request not yet arrived within `read_timeout`) also
+/// yields, so slow or quiet connections cost a worker at most one
+/// timeout slice per rotation.
+fn serve_turn(
+    stream: TcpStream,
+    handler: &dyn Handler,
+    stop: &AtomicBool,
+    read_timeout: Duration,
+) -> Result<ConnTurn> {
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(read_timeout))
+        .context("set_read_timeout")?;
+    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut writer = stream;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(ConnTurn::Done);
+        }
+        match read_request(&mut reader) {
+            Ok(ReadOutcome::Eof) => return Ok(ConnTurn::Done),
+            // `Idle` guarantees the BufReader holds no bytes (the read
+            // timed out with nothing consumed), so dropping `reader` and
+            // requeueing the raw stream loses nothing
+            Ok(ReadOutcome::Idle) => return Ok(ConnTurn::Requeue(writer)),
+            Ok(ReadOutcome::Request(req)) => {
+                let keep = req.keep_alive();
+                let resp = handler.handle(&req);
+                write_response(&mut writer, &resp, keep).context("writing response")?;
+                if !keep {
+                    return Ok(ConnTurn::Done);
+                }
+                if reader.buffer().is_empty() {
+                    // fair rotation: one request per turn; any bytes
+                    // that arrive from here on wait in the socket buffer
+                    return Ok(ConnTurn::Requeue(writer));
+                }
+                // the client pipelined — the next request is already in
+                // our BufReader, which cannot be requeued; serve it now
+            }
+            Err(e) => {
+                // malformed request: answer 400 if the socket still
+                // works, then drop the connection either way
+                let resp = HttpResponse::error(400, &format!("{e:#}"));
+                let _ = write_response(&mut writer, &resp, false);
+                return Err(e);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<ReadOutcome> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let ReadOutcome::Request(req) = parse(raw).unwrap() else {
+            panic!("expected request");
+        };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/predict");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"abcd");
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let raw = "GET /health HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let ReadOutcome::Request(req) = parse(raw).unwrap() else {
+            panic!("expected request");
+        };
+        assert!(!req.keep_alive());
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn eof_between_requests_is_clean() {
+        assert!(matches!(parse("").unwrap(), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("NOT-HTTP\r\n\r\n").is_err()); // no path
+        assert!(parse("GET /x SPDY/3\r\n\r\n").is_err()); // bad version
+        assert!(parse("GET /x HTTP/1.1\r\nbroken header\r\n\r\n").is_err());
+        assert!(
+            parse("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort").is_err(),
+            "truncated body"
+        );
+        let huge = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(parse(&huge).is_err(), "oversized body refused up front");
+    }
+
+    #[test]
+    fn endless_header_line_fails_at_the_cap() {
+        // a request line with no newline must error at MAX_HEAD_BYTES,
+        // not accumulate the whole stream
+        let endless = "G".repeat(MAX_HEAD_BYTES + 64);
+        assert!(parse(&endless).is_err());
+        let long_header = format!(
+            "GET /x HTTP/1.1\r\nx-pad: {}\r\n\r\n",
+            "y".repeat(MAX_HEAD_BYTES)
+        );
+        assert!(parse(&long_header).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resp = HttpResponse::json(200, &Json::obj(vec![("ok", Json::Bool(true))]));
+        let mut wire = Vec::new();
+        write_response(&mut wire, &resp, true).unwrap();
+        let parsed = read_client_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(parsed.status, 200);
+        assert_eq!(parsed.body, br#"{"ok":true}"#);
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/tasks", Some(br#"{"a":1}"#)).unwrap();
+        let ReadOutcome::Request(req) =
+            read_request(&mut Cursor::new(wire)).unwrap()
+        else {
+            panic!("expected request");
+        };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/tasks");
+        assert_eq!(req.body, br#"{"a":1}"#);
+    }
+
+    #[test]
+    fn error_response_shape() {
+        let resp = HttpResponse::error(503, "over capacity");
+        assert_eq!(resp.status, 503);
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.at("error").as_str(), Some("over capacity"));
+    }
+}

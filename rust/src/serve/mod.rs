@@ -1,0 +1,42 @@
+//! L4 serving gateway — the coordinator, networked.
+//!
+//! The paper's motivating scenario (§1) is a *cloud service*: many tasks
+//! share one frozen base, and task N+1 can be added without touching
+//! tasks 1…N. `coordinator` implements that in-process; this module puts
+//! it on a socket and makes "adding a task" a network operation:
+//!
+//! * `http` — hand-rolled HTTP/1.1 over `std::net` (offline environment:
+//!   no tokio/hyper): bounded accept loop, worker pool, keep-alive;
+//! * `protocol` — JSON wire types (predict by text / ids, task listing,
+//!   health, hot registration) over `util::json`;
+//! * `gateway` — admission control on top of the router's backpressure,
+//!   per-task latency histograms with p50/p95/p99 at `GET /metrics`,
+//!   graceful drain on shutdown;
+//! * `registry` — `POST /tasks` hot registration: append the bank to the
+//!   `AdapterStore` and swap it into the executors **while traffic for
+//!   other tasks keeps flowing**;
+//! * `client` — blocking Rust client (used by `bench::loadgen` and any
+//!   remote trainer).
+//!
+//! ```text
+//!   HTTP clients ──► accept loop ─► worker pool ─► Gateway (admission,
+//!        ▲            (bounded)      (keep-alive)   histograms, routes)
+//!        │                                              │ submit
+//!        └────────────── JSON responses ◄── replies ────┤
+//!                                                       ▼
+//!                                   coordinator::Server (router+executors)
+//! ```
+
+pub mod client;
+pub mod gateway;
+pub mod http;
+pub mod protocol;
+pub mod registry;
+
+pub use client::Client;
+pub use gateway::{Gateway, GatewayConfig, GatewayReport, LatencyHist};
+pub use http::{HttpConfig, HttpServer};
+pub use protocol::{
+    Health, PredictRequest, PredictResponse, RegisterRequest, RegisterResponse,
+    TaskEntry,
+};

@@ -1,0 +1,576 @@
+//! JSON wire types for the gateway protocol (via `util::json` — serde is
+//! unreachable offline).
+//!
+//! | route            | request                    | response            |
+//! |------------------|----------------------------|---------------------|
+//! | `GET  /health`   | —                          | [`Health`]          |
+//! | `GET  /tasks`    | —                          | `{"tasks":[TaskEntry…]}` |
+//! | `POST /predict`  | [`PredictRequest`] (text)  | [`PredictResponse`] |
+//! | `POST /predict_ids` | [`PredictRequest`] (ids) | [`PredictResponse`] |
+//! | `POST /tasks`    | [`RegisterRequest`]        | [`RegisterResponse`]|
+//! | `GET  /metrics`  | —                          | per-task latency histograms (raw JSON) |
+//!
+//! Trained banks travel as lowercase hex of `NamedTensors::to_bytes` —
+//! byte-exact, so a hot-registered bank reloads into the identical
+//! `TaskModel` the trainer produced.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::server::Response;
+use crate::eval::TaskModel;
+use crate::model::params::NamedTensors;
+use crate::store::BankMeta;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// hex (bank payload encoding)
+// ---------------------------------------------------------------------------
+
+const HEX_DIGITS: &[u8; 16] = b"0123456789abcdef";
+
+/// Lowercase hex of `bytes`.
+pub fn to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX_DIGITS[(b >> 4) as usize] as char);
+        s.push(HEX_DIGITS[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+fn hex_nibble(c: u8) -> Result<u8> {
+    match c {
+        b'0'..=b'9' => Ok(c - b'0'),
+        b'a'..=b'f' => Ok(c - b'a' + 10),
+        b'A'..=b'F' => Ok(c - b'A' + 10),
+        _ => bail!("invalid hex digit {:?}", c as char),
+    }
+}
+
+/// Decode hex (case-insensitive).
+pub fn from_hex(s: &str) -> Result<Vec<u8>> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        bail!("odd-length hex string");
+    }
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        out.push((hex_nibble(pair[0])? << 4) | hex_nibble(pair[1])?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// json helpers
+// ---------------------------------------------------------------------------
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .with_context(|| format!("missing or non-string field {key:?}"))
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("missing or non-numeric field {key:?}"))
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("missing or non-numeric field {key:?}"))
+}
+
+fn opt_str(j: &Json, key: &str) -> Option<String> {
+    j.get(key).and_then(Json::as_str).map(str::to_string)
+}
+
+fn opt_usize(j: &Json, key: &str) -> Option<usize> {
+    j.get(key).and_then(Json::as_usize)
+}
+
+fn opt_i32_vec(j: &Json, key: &str) -> Result<Option<Vec<i32>>> {
+    let Some(v) = j.get(key) else { return Ok(None) };
+    let arr = v
+        .as_arr()
+        .with_context(|| format!("field {key:?} must be an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for x in arr {
+        let n = x
+            .as_f64()
+            .with_context(|| format!("field {key:?} must hold numbers"))?;
+        out.push(n as i32);
+    }
+    Ok(Some(out))
+}
+
+// ---------------------------------------------------------------------------
+// wire types
+// ---------------------------------------------------------------------------
+
+/// `GET /health` response.
+#[derive(Debug, Clone)]
+pub struct Health {
+    pub status: String,
+    pub backend: String,
+    pub preset: String,
+    /// model vocabulary size (lets remote clients build a [`crate::tokenizer::Tokenizer`])
+    pub vocab: usize,
+    /// model sequence length (token-id requests must fit this)
+    pub seq: usize,
+    pub tasks: usize,
+    pub draining: bool,
+}
+
+impl Health {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("status", Json::str(&self.status)),
+            ("backend", Json::str(&self.backend)),
+            ("preset", Json::str(&self.preset)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("seq", Json::num(self.seq as f64)),
+            ("tasks", Json::num(self.tasks as f64)),
+            ("draining", Json::Bool(self.draining)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Health> {
+        Ok(Health {
+            status: get_str(j, "status")?,
+            backend: get_str(j, "backend")?,
+            preset: get_str(j, "preset")?,
+            vocab: get_usize(j, "vocab")?,
+            seq: get_usize(j, "seq")?,
+            tasks: get_usize(j, "tasks")?,
+            draining: j.get("draining").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+/// One row of the `GET /tasks` listing.
+#[derive(Debug, Clone)]
+pub struct TaskEntry {
+    pub task: String,
+    pub version: usize,
+    pub variant: String,
+    pub kind: String,
+    pub n_classes: usize,
+    pub val_score: f64,
+    pub trained_params: usize,
+}
+
+impl TaskEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task", Json::str(&self.task)),
+            ("version", Json::num(self.version as f64)),
+            ("variant", Json::str(&self.variant)),
+            ("kind", Json::str(&self.kind)),
+            ("n_classes", Json::num(self.n_classes as f64)),
+            ("val_score", Json::num(self.val_score)),
+            ("trained_params", Json::num(self.trained_params as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TaskEntry> {
+        Ok(TaskEntry {
+            task: get_str(j, "task")?,
+            version: get_usize(j, "version")?,
+            variant: get_str(j, "variant")?,
+            kind: get_str(j, "kind")?,
+            n_classes: get_usize(j, "n_classes")?,
+            val_score: get_f64(j, "val_score")?,
+            trained_params: get_usize(j, "trained_params")?,
+        })
+    }
+}
+
+/// `POST /predict` / `POST /predict_ids` request: exactly one of `text`
+/// (optionally with `text_b` for sentence pairs) or `tokens` (optionally
+/// with `segments`) must be present.
+#[derive(Debug, Clone, Default)]
+pub struct PredictRequest {
+    pub task: String,
+    pub text: Option<String>,
+    pub text_b: Option<String>,
+    pub tokens: Option<Vec<i32>>,
+    pub segments: Option<Vec<i32>>,
+}
+
+impl PredictRequest {
+    /// Text request (single sentence).
+    pub fn text(task: &str, text: &str) -> PredictRequest {
+        PredictRequest {
+            task: task.to_string(),
+            text: Some(text.to_string()),
+            ..Default::default()
+        }
+    }
+
+    /// Text request (sentence pair).
+    pub fn pair(task: &str, a: &str, b: &str) -> PredictRequest {
+        PredictRequest {
+            task: task.to_string(),
+            text: Some(a.to_string()),
+            text_b: Some(b.to_string()),
+            ..Default::default()
+        }
+    }
+
+    /// Pre-tokenized request.
+    pub fn ids(task: &str, tokens: Vec<i32>) -> PredictRequest {
+        PredictRequest {
+            task: task.to_string(),
+            tokens: Some(tokens),
+            ..Default::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("task", Json::str(&self.task))];
+        if let Some(t) = &self.text {
+            pairs.push(("text", Json::str(t)));
+        }
+        if let Some(t) = &self.text_b {
+            pairs.push(("text_b", Json::str(t)));
+        }
+        if let Some(ids) = &self.tokens {
+            pairs.push((
+                "tokens",
+                Json::arr(ids.iter().map(|&i| Json::num(i as f64))),
+            ));
+        }
+        if let Some(segs) = &self.segments {
+            pairs.push((
+                "segments",
+                Json::arr(segs.iter().map(|&i| Json::num(i as f64))),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<PredictRequest> {
+        let req = PredictRequest {
+            task: get_str(j, "task")?,
+            text: opt_str(j, "text"),
+            text_b: opt_str(j, "text_b"),
+            tokens: opt_i32_vec(j, "tokens")?,
+            segments: opt_i32_vec(j, "segments")?,
+        };
+        if req.text.is_none() && req.tokens.is_none() {
+            bail!("request needs either \"text\" or \"tokens\"");
+        }
+        Ok(req)
+    }
+}
+
+/// `POST /predict*` response: exactly one of `pred_class` / `score` /
+/// `span` is set, matching the task's head `kind`.
+#[derive(Debug, Clone)]
+pub struct PredictResponse {
+    pub task: String,
+    /// head kind: cls | reg | span
+    pub kind: String,
+    pub pred_class: Option<usize>,
+    pub score: Option<f32>,
+    pub span: Option<(usize, usize)>,
+    /// coordinator submit→reply latency, as observed server-side
+    pub latency_ms: f64,
+    /// real rows in the batch this request rode in
+    pub batch_size: usize,
+}
+
+impl PredictResponse {
+    /// Build from a coordinator [`Response`].
+    pub fn from_response(resp: &Response) -> PredictResponse {
+        PredictResponse {
+            task: resp.task.clone(),
+            kind: resp.prediction.kind().to_string(),
+            pred_class: resp.prediction.class(),
+            score: resp.prediction.score(),
+            span: resp.prediction.span(),
+            latency_ms: resp.latency.as_secs_f64() * 1e3,
+            batch_size: resp.batch_size,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("task", Json::str(&self.task)),
+            ("kind", Json::str(&self.kind)),
+            ("latency_ms", Json::num(self.latency_ms)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+        ];
+        if let Some(c) = self.pred_class {
+            pairs.push(("pred_class", Json::num(c as f64)));
+        }
+        if let Some(s) = self.score {
+            pairs.push(("score", Json::num(s as f64)));
+        }
+        if let Some((s, e)) = self.span {
+            pairs.push((
+                "span",
+                Json::arr([Json::num(s as f64), Json::num(e as f64)]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<PredictResponse> {
+        let span = match j.get("span") {
+            Some(v) => {
+                let arr = v.as_arr().context("span must be an array")?;
+                if arr.len() != 2 {
+                    bail!("span must be [start, end]");
+                }
+                Some((
+                    arr[0].as_usize().context("span start")?,
+                    arr[1].as_usize().context("span end")?,
+                ))
+            }
+            None => None,
+        };
+        Ok(PredictResponse {
+            task: get_str(j, "task")?,
+            kind: get_str(j, "kind")?,
+            pred_class: opt_usize(j, "pred_class"),
+            score: j.get("score").and_then(Json::as_f64).map(|f| f as f32),
+            span,
+            latency_ms: get_f64(j, "latency_ms")?,
+            batch_size: get_usize(j, "batch_size")?,
+        })
+    }
+}
+
+/// `POST /tasks` request: hot-register a trained bank under `task`.
+#[derive(Debug, Clone)]
+pub struct RegisterRequest {
+    pub task: String,
+    pub n_classes: usize,
+    pub val_score: f64,
+    /// adapter | topk | lnonly
+    pub variant: String,
+    pub m: Option<usize>,
+    pub k: Option<usize>,
+    /// artifact kind: cls | reg | span
+    pub kind: String,
+    /// hex of `NamedTensors::to_bytes` for the trained bank
+    pub bank_hex: String,
+}
+
+impl RegisterRequest {
+    /// Package a locally trained model for the wire.
+    pub fn from_model(
+        task: &str,
+        n_classes: usize,
+        val_score: f64,
+        model: &TaskModel,
+    ) -> RegisterRequest {
+        RegisterRequest {
+            task: task.to_string(),
+            n_classes,
+            val_score,
+            variant: model.variant.clone(),
+            m: model.m,
+            k: model.k,
+            kind: model.kind.clone(),
+            bank_hex: to_hex(&model.trained.to_bytes()),
+        }
+    }
+
+    /// Decode the payload back into the trainer's `TaskModel`.
+    pub fn to_model(&self) -> Result<TaskModel> {
+        let bytes = from_hex(&self.bank_hex).context("bank_hex")?;
+        let trained =
+            NamedTensors::from_bytes(&bytes).context("decoding trained bank")?;
+        Ok(TaskModel {
+            variant: self.variant.clone(),
+            m: self.m,
+            k: self.k,
+            kind: self.kind.clone(),
+            trained,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("task", Json::str(&self.task)),
+            ("n_classes", Json::num(self.n_classes as f64)),
+            ("val_score", Json::num(self.val_score)),
+            ("variant", Json::str(&self.variant)),
+            ("kind", Json::str(&self.kind)),
+            ("bank_hex", Json::str(&self.bank_hex)),
+        ];
+        if let Some(m) = self.m {
+            pairs.push(("m", Json::num(m as f64)));
+        }
+        if let Some(k) = self.k {
+            pairs.push(("k", Json::num(k as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RegisterRequest> {
+        Ok(RegisterRequest {
+            task: get_str(j, "task")?,
+            n_classes: get_usize(j, "n_classes")?,
+            val_score: get_f64(j, "val_score")?,
+            variant: get_str(j, "variant")?,
+            m: opt_usize(j, "m"),
+            k: opt_usize(j, "k"),
+            kind: get_str(j, "kind")?,
+            bank_hex: get_str(j, "bank_hex")?,
+        })
+    }
+}
+
+/// `POST /tasks` response.
+#[derive(Debug, Clone)]
+pub struct RegisterResponse {
+    pub task: String,
+    /// store version assigned to the new bank (append-only, 1-based)
+    pub version: usize,
+    pub trained_params: usize,
+}
+
+impl RegisterResponse {
+    pub fn from_meta(meta: &BankMeta) -> RegisterResponse {
+        RegisterResponse {
+            task: meta.task.clone(),
+            version: meta.version,
+            trained_params: meta.trained_params,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task", Json::str(&self.task)),
+            ("version", Json::num(self.version as f64)),
+            ("trained_params", Json::num(self.trained_params as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RegisterResponse> {
+        Ok(RegisterResponse {
+            task: get_str(j, "task")?,
+            version: get_usize(j, "version")?,
+            trained_params: get_usize(j, "trained_params")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::Prediction;
+    use crate::util::tensor::Tensor;
+    use std::time::Duration;
+
+    #[test]
+    fn hex_roundtrip() {
+        let data: Vec<u8> = (0..=255).collect();
+        let hex = to_hex(&data);
+        assert_eq!(hex.len(), 512);
+        assert_eq!(from_hex(&hex).unwrap(), data);
+        assert_eq!(from_hex("DEADbeef").unwrap(), vec![0xde, 0xad, 0xbe, 0xef]);
+        assert!(from_hex("abc").is_err());
+        assert!(from_hex("zz").is_err());
+    }
+
+    #[test]
+    fn predict_request_roundtrip() {
+        let req = PredictRequest::pair("rte_s", "zu kari", "moresa");
+        let j = Json::parse(&req.to_json().to_string()).unwrap();
+        let back = PredictRequest::from_json(&j).unwrap();
+        assert_eq!(back.task, "rte_s");
+        assert_eq!(back.text.as_deref(), Some("zu kari"));
+        assert_eq!(back.text_b.as_deref(), Some("moresa"));
+        assert!(back.tokens.is_none());
+
+        let req = PredictRequest::ids("cola_s", vec![1, 5, 9, 0]);
+        let back =
+            PredictRequest::from_json(&Json::parse(&req.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.tokens, Some(vec![1, 5, 9, 0]));
+
+        // neither text nor tokens → error
+        assert!(
+            PredictRequest::from_json(&Json::parse(r#"{"task":"x"}"#).unwrap()).is_err()
+        );
+    }
+
+    #[test]
+    fn predict_response_covers_all_kinds() {
+        for (pred, kind) in [
+            (Prediction::Class(2), "cls"),
+            (Prediction::Score(0.75), "reg"),
+            (Prediction::Span(3, 7), "span"),
+        ] {
+            let resp = Response {
+                task: "t".into(),
+                prediction: pred,
+                latency: Duration::from_millis(4),
+                batch_size: 3,
+            };
+            let wire = PredictResponse::from_response(&resp);
+            assert_eq!(wire.kind, kind);
+            let back = PredictResponse::from_json(
+                &Json::parse(&wire.to_json().to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.kind, kind);
+            assert_eq!(back.pred_class, pred.class());
+            assert_eq!(back.span, pred.span());
+            match (back.score, pred.score()) {
+                (Some(a), Some(b)) => assert!((a - b).abs() < 1e-6),
+                (None, None) => {}
+                other => panic!("score mismatch: {other:?}"),
+            }
+            assert_eq!(back.batch_size, 3);
+        }
+    }
+
+    #[test]
+    fn register_request_bank_is_byte_exact() {
+        let mut trained = NamedTensors::default();
+        trained.insert("adapters/x", Tensor::f32(vec![3], vec![1.5, -2.0, 0.25]));
+        trained.insert("head/w", Tensor::i32(vec![2], vec![7, -7]));
+        let model = TaskModel {
+            variant: "adapter".into(),
+            m: Some(8),
+            k: None,
+            kind: "cls".into(),
+            trained,
+        };
+        let req = RegisterRequest::from_model("new_task", 4, 0.91, &model);
+        let j = Json::parse(&req.to_json().to_string()).unwrap();
+        let back = RegisterRequest::from_json(&j).unwrap();
+        let rebuilt = back.to_model().unwrap();
+        assert_eq!(rebuilt.trained, model.trained);
+        assert_eq!(rebuilt.fwd_name(), "cls_fwd_adapter_m8");
+        assert_eq!(back.n_classes, 4);
+        assert_eq!(back.val_score, 0.91);
+    }
+
+    #[test]
+    fn health_roundtrip() {
+        let h = Health {
+            status: "ok".into(),
+            backend: "native".into(),
+            preset: "test".into(),
+            vocab: 256,
+            seq: 16,
+            tasks: 2,
+            draining: false,
+        };
+        let back =
+            Health::from_json(&Json::parse(&h.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.vocab, 256);
+        assert_eq!(back.seq, 16);
+        assert_eq!(back.tasks, 2);
+        assert!(!back.draining);
+    }
+}

@@ -1,0 +1,45 @@
+//! Hot registration: `POST /tasks` → store append → live bank swap.
+//!
+//! This operationalizes the store's append-only guarantee end to end: a
+//! new task (or a new version of an existing one) becomes servable over
+//! the network **without restarting or pausing other tasks**. The order
+//! of operations matters:
+//!
+//! 1. decode + **prepare** — the bank is validated against the manifest
+//!    and merged with the frozen base entirely off to the side. A
+//!    malformed payload fails here and nothing has changed;
+//! 2. **store append** — the immutable version record (disk write when
+//!    the store is disk-backed);
+//! 3. **install** — one map insert under a short write lock makes the
+//!    banks visible to executors. In-flight batches for other tasks hold
+//!    their own `Arc`s and never block on, or observe, the swap.
+//!
+//! The gateway serializes calls into this module (`reg_lock`), so store
+//! version order always matches executor-side install order.
+
+use anyhow::{Context, Result};
+
+use super::protocol::{RegisterRequest, RegisterResponse};
+use crate::coordinator::server::Server;
+use crate::store::AdapterStore;
+
+/// Handle one wire-format registration against a live server.
+pub fn register_from_wire(
+    store: &AdapterStore,
+    server: &Server,
+    req: &RegisterRequest,
+) -> Result<RegisterResponse> {
+    let model = req
+        .to_model()
+        .with_context(|| format!("decoding bank for task {:?}", req.task))?;
+    // validate + build first: a bad bank must not leave a store version
+    // behind that can never serve
+    let prepared = server
+        .prepare_task(req.n_classes, &model)
+        .with_context(|| format!("bank for task {:?} is not servable", req.task))?;
+    let meta = store
+        .register(&req.task, &model, req.val_score)
+        .with_context(|| format!("storing bank for task {:?}", req.task))?;
+    server.install_task(&req.task, prepared);
+    Ok(RegisterResponse::from_meta(&meta))
+}

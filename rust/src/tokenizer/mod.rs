@@ -81,6 +81,43 @@ impl Tokenizer {
         (ids, mask)
     }
 
+    /// Encode a sentence pair into the wire format the pair tasks train
+    /// on — `[CLS] a [SEP] b [SEP]` with segment ids 0/1 (matching
+    /// `data::tasks::assemble`) — padded to `seq`. Returns
+    /// (token ids, segment ids, attention mask).
+    pub fn encode_for_pair(
+        &self,
+        a: &str,
+        b: &str,
+        seq: usize,
+    ) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let a_ids = self.encode(a);
+        let b_ids = self.encode(b);
+        // reserve room for [CLS] and both [SEP]s; split leftover evenly,
+        // then let each side reclaim room the other did not use
+        let budget = seq.saturating_sub(3);
+        let half = (budget + 1) / 2;
+        let b_take = b_ids.len().min(budget - a_ids.len().min(half));
+        let a_take = a_ids.len().min(budget - b_take);
+        let mut ids = vec![CLS];
+        let mut segments = vec![0];
+        ids.extend(&a_ids[..a_take]);
+        segments.extend(std::iter::repeat(0).take(a_take));
+        ids.push(SEP);
+        segments.push(0);
+        ids.extend(&b_ids[..b_take]);
+        segments.extend(std::iter::repeat(1).take(b_take));
+        ids.push(SEP);
+        segments.push(1);
+        let mut mask = vec![1.0; ids.len()];
+        while ids.len() < seq {
+            ids.push(PAD);
+            segments.push(0);
+            mask.push(0.0);
+        }
+        (ids, segments, mask)
+    }
+
     pub fn decode(&self, ids: &[i32]) -> String {
         ids.iter()
             .filter(|&&id| id != PAD)
@@ -132,6 +169,39 @@ mod tests {
     fn unknown_words_become_mask() {
         let t = Tokenizer::new(256);
         assert_eq!(t.encode("xyzzyplugh"), vec![MASK]);
+    }
+
+    #[test]
+    fn encode_for_pair_matches_training_layout() {
+        let t = Tokenizer::new(256);
+        let a = format!("{} {}", t.word(10), t.word(11));
+        let b = t.word(20).to_string();
+        let (ids, segs, mask) = t.encode_for_pair(&a, &b, 10);
+        assert_eq!(ids.len(), 10);
+        assert_eq!(segs.len(), 10);
+        assert_eq!(mask.len(), 10);
+        // [CLS] a a [SEP] | b [SEP] | pad…
+        assert_eq!(&ids[..6], &[CLS, 10, 11, SEP, 20, SEP]);
+        assert_eq!(&segs[..6], &[0, 0, 0, 0, 1, 1]);
+        assert_eq!(&ids[6..], &[PAD; 4]);
+        assert!(mask[..6].iter().all(|&m| m == 1.0));
+        assert!(mask[6..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn encode_for_pair_truncates_both_sides() {
+        let t = Tokenizer::new(256);
+        let long: Vec<String> = (0..40).map(|_| t.word(9).to_string()).collect();
+        let long = long.join(" ");
+        let (ids, segs, mask) = t.encode_for_pair(&long, &long, 16);
+        assert_eq!(ids.len(), 16);
+        assert_eq!(segs.len(), 16);
+        assert_eq!(ids[0], CLS);
+        // fully packed: no padding, both separators present
+        assert!(mask.iter().all(|&m| m == 1.0));
+        assert_eq!(ids.iter().filter(|&&i| i == SEP).count(), 2);
+        assert_eq!(*ids.last().unwrap(), SEP);
+        assert_eq!(*segs.last().unwrap(), 1);
     }
 
     #[test]

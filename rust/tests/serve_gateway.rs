@@ -1,0 +1,448 @@
+//! Gateway integration tests (test preset, native backend, real sockets).
+//!
+//! The acceptance path for the networked serving layer: start the
+//! gateway on an ephemeral port, serve concurrent traffic for two tasks,
+//! hot-register a third task over `POST /tasks` **mid-traffic**, and
+//! verify (a) the new task serves correctly (vs. offline eval on the
+//! same rows), (b) in-flight and subsequent requests for the prior tasks
+//! are unaffected, (c) `/metrics` reports per-task p50/p99 — then drive
+//! the closed-loop load generator over the same socket and check the
+//! `BENCH_serve.json` it writes is schema-valid.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use adapterbert::bench::loadgen;
+use adapterbert::coordinator::server::{Prediction, Request};
+use adapterbert::coordinator::{
+    FlushPolicy, Server, ServerConfig, StreamConfig, TaskStream,
+};
+use adapterbert::data::grammar::World;
+use adapterbert::data::tasks::{self, TaskKind, TaskSpec};
+use adapterbert::eval::{predict_split, Predictions, TaskModel};
+use adapterbert::model::params::NamedTensors;
+use adapterbert::runtime::Runtime;
+use adapterbert::serve::{Client, Gateway, GatewayConfig, RegisterRequest};
+use adapterbert::store::AdapterStore;
+use adapterbert::train::{self, PretrainConfig, TrainConfig};
+use adapterbert::util::json::Json;
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(
+        Runtime::open(
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")),
+            "test",
+        )
+        .expect("open test preset (built-in presets synthesize their manifest)"),
+    )
+}
+
+fn world(rt: &Runtime) -> World {
+    World::new(rt.manifest.dims.vocab, 0)
+}
+
+fn pretrained_base(rt: &Arc<Runtime>) -> NamedTensors {
+    static BASE: std::sync::OnceLock<NamedTensors> = std::sync::OnceLock::new();
+    BASE.get_or_init(|| {
+        train::load_or_pretrain(
+            rt,
+            &world(rt),
+            &PretrainConfig { steps: 3000, log_every: 0, ..Default::default() },
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs/base_test.bank")),
+        )
+        .unwrap()
+    })
+    .clone()
+}
+
+fn cls_spec(name: &str, seed: u64) -> TaskSpec {
+    TaskSpec {
+        name: name.to_string(),
+        kind: TaskKind::Cls { n_classes: 2, pair: false },
+        metric: tasks::Metric::Accuracy,
+        n_train: 240,
+        n_val: 48,
+        n_test: 48,
+        purity: 0.85,
+        noise: 0.0,
+        seed,
+    }
+}
+
+fn train_cls(
+    rt: &Arc<Runtime>,
+    base: &NamedTensors,
+    name: &str,
+    seed: u64,
+) -> (TaskModel, tasks::TaskData, f64) {
+    let spec = cls_spec(name, seed);
+    let data = tasks::generate(&world(rt), &spec, rt.manifest.dims.seq);
+    let cfg = TrainConfig::new("cls_train_adapter_m4", 1e-3, 5, 0);
+    let res = train::train_task(rt, &cfg, &data, base).unwrap();
+    (res.model, data, res.val_score)
+}
+
+fn class_preds(
+    rt: &Arc<Runtime>,
+    model: &TaskModel,
+    base: &NamedTensors,
+    split: &tasks::Split,
+) -> Vec<usize> {
+    match predict_split(rt, model, base, split, 2, None).unwrap() {
+        Predictions::Class(v) => v,
+        other => panic!("expected class predictions, got {other:?}"),
+    }
+}
+
+fn quick_server(
+    rt: &Arc<Runtime>,
+    store: &AdapterStore,
+    base: &NamedTensors,
+    classes: &BTreeMap<String, usize>,
+) -> Server {
+    Server::start(
+        rt.clone(),
+        store,
+        base,
+        classes,
+        ServerConfig {
+            flush: FlushPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_millis(2),
+            },
+            executors: 2,
+            queue_capacity: 256,
+        },
+    )
+    .unwrap()
+}
+
+/// The headline test: hot registration mid-traffic, per-task metrics,
+/// loadgen → schema-valid BENCH_serve.json.
+#[test]
+fn gateway_hot_registration_mid_traffic() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let (model_a, data_a, val_a) = train_cls(&rt, &base, "gwa", 21);
+    let (model_b, data_b, val_b) = train_cls(&rt, &base, "gwb", 22);
+    let (model_c, data_c, _val_c) = train_cls(&rt, &base, "gwc", 23);
+
+    let store = Arc::new(AdapterStore::in_memory());
+    store.register("gwa", &model_a, val_a).unwrap();
+    store.register("gwb", &model_b, val_b).unwrap();
+    let mut classes = BTreeMap::new();
+    classes.insert("gwa".to_string(), 2);
+    classes.insert("gwb".to_string(), 2);
+    let server = quick_server(&rt, &store, &base, &classes);
+    let gw = Gateway::start(
+        rt.clone(),
+        store.clone(),
+        server,
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )
+    .unwrap();
+    let addr = gw.local_addr().to_string();
+
+    // ground truth: offline predictions over the same rows the clients send
+    let exp_a = class_preds(&rt, &model_a, &base, &data_a.test);
+    let exp_b = class_preds(&rt, &model_b, &base, &data_b.test);
+    let exp_c = class_preds(&rt, &model_c, &base, &data_c.test);
+    let rows = 16usize.min(data_a.test.n).min(data_b.test.n);
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let stop = &stop;
+        let addr = &addr;
+        // concurrent traffic on the two pre-registered tasks — every
+        // response must match offline eval, before, during and after the
+        // hot registration
+        for (task, data, exp) in
+            [("gwa", &data_a, &exp_a), ("gwb", &data_b, &exp_b)]
+        {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let row = i % rows;
+                    let resp =
+                        client.predict_ids(task, data.test.row_tokens(row)).unwrap();
+                    assert_eq!(resp.kind, "cls", "{task} row {row}");
+                    assert_eq!(
+                        resp.pred_class,
+                        Some(exp[row]),
+                        "{task} row {row}: served prediction diverged"
+                    );
+                    i += 1;
+                }
+                assert!(i > 0, "worker for {task} made no requests");
+            });
+        }
+
+        let mut client = Client::connect(addr).unwrap();
+        let health = client.health().unwrap();
+        assert_eq!(health.status, "ok");
+        assert_eq!(health.tasks, 2);
+        assert_eq!(health.seq, rt.manifest.dims.seq);
+
+        // before registration the third task 404s
+        assert!(client.predict_ids("gwc", data_c.test.row_tokens(0)).is_err());
+
+        // let traffic flow, then hot-register mid-stream
+        std::thread::sleep(Duration::from_millis(150));
+        let reg = RegisterRequest::from_model("gwc", 2, 0.9, &model_c);
+        let reg_resp = client.register_task(&reg).unwrap();
+        assert_eq!(reg_resp.task, "gwc");
+        assert_eq!(reg_resp.version, 1);
+
+        // (a) the new task serves correctly, immediately
+        for row in 0..16usize.min(data_c.test.n) {
+            let resp =
+                client.predict_ids("gwc", data_c.test.row_tokens(row)).unwrap();
+            assert_eq!(
+                resp.pred_class,
+                Some(exp_c[row]),
+                "hot-registered task row {row}"
+            );
+        }
+        let listing = client.tasks().unwrap();
+        let names: Vec<&str> = listing.iter().map(|t| t.task.as_str()).collect();
+        assert_eq!(names, vec!["gwa", "gwb", "gwc"]);
+
+        // (b) keep prior-task traffic flowing a little longer post-swap
+        std::thread::sleep(Duration::from_millis(150));
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    // (c) per-task latency quantiles for all three tasks
+    let mut client = Client::connect(&addr).unwrap();
+    let metrics = client.metrics().unwrap();
+    for task in ["gwa", "gwb", "gwc"] {
+        let h = metrics.at("tasks").at(task);
+        assert!(h.at("count").as_usize().unwrap() > 0, "{task} count");
+        let p50 = h.at("p50_ms").as_f64().unwrap();
+        let p99 = h.at("p99_ms").as_f64().unwrap();
+        assert!(p50 > 0.0, "{task} p50");
+        assert!(p99 >= p50, "{task} p99 >= p50");
+    }
+    drop(client);
+
+    // closed-loop load generator over the same socket
+    let cfg = loadgen::LoadgenConfig {
+        addr: addr.clone(),
+        tasks: vec!["gwa".into(), "gwb".into(), "gwc".into()],
+        concurrency: 3,
+        requests: 60,
+        duration: None,
+        words_per_request: 8,
+        seed: 3,
+    };
+    let report = loadgen::run(&cfg).unwrap();
+    assert_eq!(report.requests, 60, "every loadgen request answered");
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.per_task.len(), 3);
+
+    // BENCH_serve.json: written at the repo root, schema-valid
+    let out = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_serve.json"));
+    loadgen::write_report(out, &report.to_json(&cfg)).unwrap();
+    let text = std::fs::read_to_string(out).unwrap();
+    let j = Json::parse(text.trim()).unwrap();
+    assert_eq!(j.at("bench").as_str(), Some("serve"));
+    assert_eq!(j.at("schema_version").as_usize(), Some(1));
+    assert_eq!(j.at("totals").at("requests").as_usize(), Some(60));
+    assert!(j.at("totals").at("throughput_rps").as_f64().unwrap() > 0.0);
+    for key in ["mean", "p50", "p95", "p99", "max"] {
+        assert!(
+            j.at("totals").at("latency_ms").at(key).as_f64().is_some(),
+            "totals.latency_ms.{key}"
+        );
+    }
+    for task in ["gwa", "gwb", "gwc"] {
+        let t = j.at("per_task").at(task);
+        assert!(t.at("requests").as_usize().unwrap() > 0, "{task} in per_task");
+    }
+
+    // graceful drain: everything accepted was answered
+    let final_report = gw.shutdown().unwrap();
+    assert!(final_report.served >= 60, "served {}", final_report.served);
+    assert_eq!(final_report.timeouts, 0);
+    assert_eq!(
+        final_report.server.requests,
+        final_report.server.latencies.len() as u64
+    );
+}
+
+/// The gateway serves all three head kinds: wire a regression and a span
+/// task through and check payloads against offline eval, row by row.
+#[test]
+fn gateway_serves_reg_and_span_heads() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let seq = rt.manifest.dims.seq;
+
+    let reg_spec = TaskSpec {
+        name: "gwreg".to_string(),
+        kind: TaskKind::Reg,
+        metric: tasks::Metric::Spearman,
+        n_train: 160,
+        n_val: 32,
+        n_test: 32,
+        purity: 0.5,
+        noise: 0.0,
+        seed: 31,
+    };
+    let span_spec = TaskSpec {
+        name: "gwspan".to_string(),
+        kind: TaskKind::Span,
+        metric: tasks::Metric::SpanF1,
+        n_train: 160,
+        n_val: 32,
+        n_test: 32,
+        purity: 0.9,
+        noise: 0.0,
+        seed: 32,
+    };
+    let reg_data = tasks::generate(&world(&rt), &reg_spec, seq);
+    let span_data = tasks::generate(&world(&rt), &span_spec, seq);
+    let reg_model = train::train_task(
+        &rt,
+        &TrainConfig::new("reg_train_adapter_m8", 1e-3, 2, 0),
+        &reg_data,
+        &base,
+    )
+    .unwrap()
+    .model;
+    let span_model = train::train_task(
+        &rt,
+        &TrainConfig::new("span_train_adapter_m8", 1e-3, 2, 0),
+        &span_data,
+        &base,
+    )
+    .unwrap()
+    .model;
+
+    let exp_reg = match predict_split(&rt, &reg_model, &base, &reg_data.test, 0, None)
+        .unwrap()
+    {
+        Predictions::Score(v) => v,
+        other => panic!("expected scores, got {other:?}"),
+    };
+    let exp_span =
+        match predict_split(&rt, &span_model, &base, &span_data.test, 0, None).unwrap()
+        {
+            Predictions::Span(v) => v,
+            other => panic!("expected spans, got {other:?}"),
+        };
+
+    let store = Arc::new(AdapterStore::in_memory());
+    store.register("gwreg", &reg_model, 0.5).unwrap();
+    store.register("gwspan", &span_model, 0.5).unwrap();
+    let mut classes = BTreeMap::new();
+    classes.insert("gwreg".to_string(), 0);
+    classes.insert("gwspan".to_string(), 0);
+    let server = quick_server(&rt, &store, &base, &classes);
+    let gw = Gateway::start(
+        rt.clone(),
+        store.clone(),
+        server,
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )
+    .unwrap();
+    let mut client = Client::connect(&gw.local_addr().to_string()).unwrap();
+
+    for row in 0..8usize.min(reg_data.test.n) {
+        let resp = client
+            .predict_ids("gwreg", reg_data.test.row_tokens(row))
+            .unwrap();
+        assert_eq!(resp.kind, "reg", "row {row}");
+        let served = resp.score.expect("reg response carries a score");
+        assert!(
+            (served - exp_reg[row]).abs() < 1e-5,
+            "row {row}: served {served} vs offline {}",
+            exp_reg[row]
+        );
+        assert!(resp.pred_class.is_none());
+    }
+    for row in 0..8usize.min(span_data.test.n) {
+        let resp = client
+            .predict_ids("gwspan", span_data.test.row_tokens(row))
+            .unwrap();
+        assert_eq!(resp.kind, "span", "row {row}");
+        assert_eq!(resp.span, Some(exp_span[row]), "row {row}");
+    }
+
+    gw.shutdown().unwrap();
+}
+
+/// The in-process seam: a `TaskStream` wired to a live server via
+/// `set_on_register` + `register_live` — train-and-serve with no restart.
+#[test]
+fn stream_hot_installs_into_live_server() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let store = Arc::new(AdapterStore::in_memory());
+    let server = Arc::new(quick_server(&rt, &store, &base, &BTreeMap::new()));
+    assert!(server.tasks().is_empty());
+
+    let cfg = StreamConfig {
+        adapter_sizes: vec![4],
+        lrs: vec![1e-3],
+        epochs: 3,
+        seeds: vec![0],
+        threads: 1,
+    };
+    let mut stream =
+        TaskStream::new(rt.clone(), base.clone(), store.clone(), world(&rt), cfg);
+    let srv = server.clone();
+    stream.set_on_register(move |task, n_classes, model| {
+        srv.register_live(task, n_classes, model).unwrap();
+    });
+    let spec = cls_spec("streamed", 41);
+    let report = stream.run(std::slice::from_ref(&spec)).unwrap();
+    assert!(!report.forgetting_detected);
+    drop(stream); // releases the server Arc held by the callback
+
+    // the server picked the task up live
+    assert_eq!(server.tasks(), vec!["streamed".to_string()]);
+    assert_eq!(server.task_info("streamed"), Some(("cls".to_string(), 2)));
+
+    // and it answers requests
+    let data = tasks::generate(&world(&rt), &spec, rt.manifest.dims.seq);
+    let (reply, rx) = mpsc::channel();
+    let row: Vec<i32> = data.test.row_tokens(0).to_vec();
+    let seq = rt.manifest.dims.seq;
+    server
+        .submit_blocking(Request {
+            task: "streamed".to_string(),
+            tokens: row.clone(),
+            segments: vec![0; seq],
+            attn_mask: row
+                .iter()
+                .map(|&t| if t == 0 { 0.0 } else { 1.0 })
+                .collect(),
+            reply,
+            submitted: Instant::now(),
+        })
+        .unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(matches!(resp.prediction, Prediction::Class(_)));
+
+    // drain refuses new work but the accepted request above was answered
+    server.drain();
+    let (reply2, _rx2) = mpsc::channel();
+    assert!(server
+        .submit(Request {
+            task: "streamed".to_string(),
+            tokens: row,
+            segments: vec![0; seq],
+            attn_mask: vec![1.0; seq],
+            reply: reply2,
+            submitted: Instant::now(),
+        })
+        .is_err());
+    let server = Arc::try_unwrap(server).ok().expect("no other refs");
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests, 1);
+}
