@@ -75,6 +75,7 @@ fn main() -> anyhow::Result<()> {
             },
             executors: 1,
             queue_capacity: 512,
+            ..Default::default()
         },
     )?;
 

@@ -86,6 +86,7 @@ fn main() -> anyhow::Result<()> {
             },
             executors: 2,
             queue_capacity: 512,
+            ..Default::default()
         },
     )?;
     let gw = Gateway::start(

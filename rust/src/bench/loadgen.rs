@@ -5,8 +5,16 @@
 //! a configurable task mix until a request budget or deadline runs out
 //! (closed loop: a worker sends its next request only after the previous
 //! response lands, so concurrency == open requests). The report — total
-//! and per-task throughput and latency quantiles — serializes to
-//! `BENCH_serve.json`, the serving entry in the repo's perf trajectory.
+//! and per-task throughput, latency quantiles, the batch-size histogram
+//! observed in responses and the server-side occupancy over the run
+//! window — serializes to `BENCH_serve.json` (schema v2), the serving
+//! entry in the repo's perf trajectory.
+//!
+//! The **many-tasks/low-rate preset** (`task_count` + `rate`) recreates
+//! the paper's serving regime — 26 tasks, modest traffic each — where
+//! per-task batching collapses to 1–2-row batches and the fused engine's
+//! cross-task batches win; the recorded `mean_occupancy` is the
+//! comparison the CI smoke job pins.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -28,12 +36,19 @@ pub struct LoadgenConfig {
     pub addr: String,
     /// Task mix, cycled round-robin; empty = every task the gateway lists.
     pub tasks: Vec<String>,
+    /// Many-tasks preset: use the first N discovered tasks (errors if the
+    /// gateway serves fewer). Ignored when `tasks` is non-empty.
+    pub task_count: Option<usize>,
     /// Closed-loop worker threads (= open requests at any moment).
     pub concurrency: usize,
     /// Total request budget (0 = unlimited, stop on `duration`).
     pub requests: u64,
     /// Optional wall-clock cap.
     pub duration: Option<Duration>,
+    /// Low-rate preset: pace the closed loop to ≈ this many req/s total
+    /// (request `i` is not issued before `t0 + i/rate`). `None` = as
+    /// fast as responses come back.
+    pub rate: Option<f64>,
     /// Words of random text per request.
     pub words_per_request: usize,
     /// RNG seed for the request text.
@@ -45,9 +60,11 @@ impl Default for LoadgenConfig {
         LoadgenConfig {
             addr: String::new(),
             tasks: Vec::new(),
+            task_count: None,
             concurrency: 4,
             requests: 200,
             duration: None,
+            rate: None,
             words_per_request: 12,
             seed: 7,
         }
@@ -60,6 +77,34 @@ pub struct TaskLoad {
     pub requests: u64,
     pub errors: u64,
     pub latencies: Samples,
+    /// `batch_size → count` as observed in responses (how many real rows
+    /// rode in the batch that served each request).
+    pub batch_sizes: BTreeMap<usize, u64>,
+}
+
+/// Server-side counters over the run window, from `GET /metrics` deltas
+/// (absent when the gateway predates them or metrics were unreachable).
+#[derive(Debug, Clone)]
+pub struct ServerWindow {
+    /// `per_task` | `fused`.
+    pub exec_mode: String,
+    /// Batches executed during the run.
+    pub batches: f64,
+    /// Of those, batches through the fused engine.
+    pub fused_batches: f64,
+    /// Sum of per-batch occupancy during the run.
+    pub occupancy_sum: f64,
+}
+
+impl ServerWindow {
+    /// Mean batch occupancy over the run window, in `[0, 1]`.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches <= 0.0 {
+            0.0
+        } else {
+            self.occupancy_sum / self.batches
+        }
+    }
 }
 
 /// The whole run.
@@ -73,6 +118,10 @@ pub struct LoadReport {
     pub per_task: BTreeMap<String, TaskLoad>,
     /// All successful request latencies.
     pub all: Samples,
+    /// Aggregate `batch_size → count` across tasks.
+    pub batch_size_hist: BTreeMap<usize, u64>,
+    /// Server-side occupancy/mode over the run window.
+    pub server: Option<ServerWindow>,
 }
 
 impl LoadReport {
@@ -84,7 +133,9 @@ impl LoadReport {
         }
     }
 
-    /// The `BENCH_serve.json` document (see `write_report`).
+    /// The `BENCH_serve.json` document, schema v2 (see `write_report`).
+    /// v2 adds `config.rate_rps`, `totals.batch_size_hist` and the
+    /// `server` section (exec mode + occupancy over the run window).
     pub fn to_json(&self, cfg: &LoadgenConfig) -> Json {
         let per_task = Json::Obj(
             self.per_task
@@ -101,9 +152,18 @@ impl LoadReport {
                 })
                 .collect(),
         );
+        let server = match &self.server {
+            Some(w) => Json::obj(vec![
+                ("exec_mode", Json::str(&w.exec_mode)),
+                ("batches", Json::num(w.batches)),
+                ("fused_batches", Json::num(w.fused_batches)),
+                ("mean_occupancy", Json::num(w.mean_occupancy())),
+            ]),
+            None => Json::Null,
+        };
         Json::obj(vec![
             ("bench", Json::str("serve")),
-            ("schema_version", Json::num(1.0)),
+            ("schema_version", Json::num(2.0)),
             (
                 "config",
                 Json::obj(vec![
@@ -114,6 +174,10 @@ impl LoadReport {
                         cfg.duration
                             .map(|d| Json::num(d.as_secs_f64()))
                             .unwrap_or(Json::Null),
+                    ),
+                    (
+                        "rate_rps",
+                        cfg.rate.map(Json::num).unwrap_or(Json::Null),
                     ),
                     ("words_per_request", Json::num(cfg.words_per_request as f64)),
                     (
@@ -130,8 +194,20 @@ impl LoadReport {
                     ("wall_s", Json::num(self.wall_s)),
                     ("throughput_rps", Json::num(self.throughput_rps())),
                     ("latency_ms", latency_json(&self.all)),
+                    (
+                        "batch_size_hist",
+                        Json::Obj(
+                            self.batch_size_hist
+                                .iter()
+                                .map(|(size, count)| {
+                                    (size.to_string(), Json::num(*count as f64))
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
+            ("server", server),
             ("per_task", per_task),
         ])
     }
@@ -160,6 +236,22 @@ fn latency_json(s: &Samples) -> Json {
     ])
 }
 
+/// Parse the server-side counters this harness windows over from a
+/// `GET /metrics` document (`None` when the fields are missing).
+fn server_counters(metrics: &Json) -> Option<(String, f64, f64, f64)> {
+    let coord = metrics.get("coordinator")?;
+    Some((
+        metrics
+            .get("exec_mode")
+            .and_then(Json::as_str)
+            .unwrap_or("per_task")
+            .to_string(),
+        coord.get("batches").and_then(Json::as_f64)?,
+        coord.get("fused_batches").and_then(Json::as_f64).unwrap_or(0.0),
+        coord.get("occupancy_sum").and_then(Json::as_f64)?,
+    ))
+}
+
 /// Run the closed loop and aggregate.
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     if cfg.requests == 0 && cfg.duration.is_none() {
@@ -168,18 +260,34 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     let mut probe = Client::connect(&cfg.addr)?;
     let health = probe.health().context("gateway health check")?;
     let tasks: Vec<String> = if cfg.tasks.is_empty() {
-        probe
+        let discovered: Vec<String> = probe
             .tasks()
             .context("task discovery")?
             .into_iter()
             .map(|t| t.task)
-            .collect()
+            .collect();
+        match cfg.task_count {
+            Some(n) => {
+                if discovered.len() < n {
+                    bail!(
+                        "many-tasks preset wants {n} tasks but the gateway \
+                         serves only {} ({discovered:?})",
+                        discovered.len()
+                    );
+                }
+                discovered.into_iter().take(n).collect()
+            }
+            None => discovered,
+        }
     } else {
         cfg.tasks.clone()
     };
     if tasks.is_empty() {
         bail!("gateway serves no tasks and none were given");
     }
+    // snapshot the server counters so the report windows occupancy over
+    // exactly this run, not the gateway's whole lifetime
+    let before = probe.metrics().ok().as_ref().and_then(server_counters);
     // close the discovery connection before the closed loop starts, so
     // the gateway's worker rotation only carries live load connections
     drop(probe);
@@ -197,7 +305,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
             let tok = &tok;
             let issued = &issued;
             handles.push(scope.spawn(move || {
-                worker_loop(cfg, w as u64, tasks, tok, word_ids, issued, deadline)
+                worker_loop(cfg, w as u64, tasks, tok, word_ids, issued, deadline, t0)
             }));
         }
         for h in handles {
@@ -209,6 +317,20 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     });
 
     let wall_s = t0.elapsed().as_secs_f64();
+    let server = match (before, Client::connect(&cfg.addr)) {
+        (Some((mode, b0, f0, o0)), Ok(mut c)) => c
+            .metrics()
+            .ok()
+            .as_ref()
+            .and_then(server_counters)
+            .map(|(_, b1, f1, o1)| ServerWindow {
+                exec_mode: mode,
+                batches: (b1 - b0).max(0.0),
+                fused_batches: (f1 - f0).max(0.0),
+                occupancy_sum: (o1 - o0).max(0.0),
+            }),
+        _ => None,
+    };
     let mut per_task: BTreeMap<String, TaskLoad> = BTreeMap::new();
     for stats in worker_stats {
         for (task, t) in stats? {
@@ -216,19 +338,36 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
             agg.requests += t.requests;
             agg.errors += t.errors;
             agg.latencies.durs.extend(t.latencies.durs);
+            for (size, count) in t.batch_sizes {
+                *agg.batch_sizes.entry(size).or_insert(0) += count;
+            }
         }
     }
     let mut all = Samples::default();
     let mut requests = 0;
     let mut errors = 0;
+    let mut batch_size_hist: BTreeMap<usize, u64> = BTreeMap::new();
     for t in per_task.values() {
         requests += t.requests;
         errors += t.errors;
         all.durs.extend(t.latencies.durs.iter().copied());
+        for (size, count) in &t.batch_sizes {
+            *batch_size_hist.entry(*size).or_insert(0) += count;
+        }
     }
-    Ok(LoadReport { tasks, wall_s, requests, errors, per_task, all })
+    Ok(LoadReport {
+        tasks,
+        wall_s,
+        requests,
+        errors,
+        per_task,
+        all,
+        batch_size_hist,
+        server,
+    })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     cfg: &LoadgenConfig,
     worker: u64,
@@ -237,6 +376,7 @@ fn worker_loop(
     word_ids: usize,
     issued: &AtomicU64,
     deadline: Option<Instant>,
+    t0: Instant,
 ) -> Result<BTreeMap<String, TaskLoad>> {
     let mut client = Client::connect(&cfg.addr)?;
     let mut rng = Rng::new(cfg.seed ^ (worker.wrapping_mul(0x9E37_79B9)));
@@ -252,17 +392,26 @@ fn worker_loop(
                 break;
             }
         }
+        // low-rate pacing: request i is not issued before t0 + i/rate
+        if let Some(rate) = cfg.rate {
+            let slot = t0 + Duration::from_secs_f64(i as f64 / rate);
+            let now = Instant::now();
+            if slot > now {
+                std::thread::sleep(slot - now);
+            }
+        }
         let task = &tasks[(i as usize) % tasks.len()];
         let words: Vec<&str> = (0..cfg.words_per_request.max(1))
             .map(|_| tok.word(4 + rng.below(word_ids) as i32))
             .collect();
         let text = words.join(" ");
-        let t0 = Instant::now();
+        let t_req = Instant::now();
         let entry = stats.entry(task.clone()).or_default();
         match client.predict_text(task, &text) {
-            Ok(_) => {
+            Ok(resp) => {
                 entry.requests += 1;
-                entry.latencies.record(t0.elapsed());
+                entry.latencies.record(t_req.elapsed());
+                *entry.batch_sizes.entry(resp.batch_size).or_insert(0) += 1;
                 consecutive_errors = 0;
             }
             Err(e) => {
@@ -297,12 +446,16 @@ mod tests {
         let mut per_task = BTreeMap::new();
         let mut lat = Samples::default();
         lat.record(Duration::from_millis(3));
+        let mut batch_sizes = BTreeMap::new();
+        batch_sizes.insert(3usize, 10u64);
         per_task.insert(
             "rte_s".to_string(),
-            TaskLoad { requests: 10, errors: 0, latencies: lat },
+            TaskLoad { requests: 10, errors: 0, latencies: lat, batch_sizes },
         );
         let mut all = Samples::default();
         all.record(Duration::from_millis(3));
+        let mut hist = BTreeMap::new();
+        hist.insert(3usize, 10u64);
         let report = LoadReport {
             tasks: vec!["rte_s".into()],
             wall_s: 0.5,
@@ -310,19 +463,74 @@ mod tests {
             errors: 0,
             per_task,
             all,
+            batch_size_hist: hist,
+            server: Some(ServerWindow {
+                exec_mode: "fused".into(),
+                batches: 4.0,
+                fused_batches: 4.0,
+                occupancy_sum: 3.0,
+            }),
         };
-        let cfg = LoadgenConfig { addr: "x".into(), ..Default::default() };
+        let cfg = LoadgenConfig {
+            addr: "x".into(),
+            rate: Some(50.0),
+            ..Default::default()
+        };
         let j = report.to_json(&cfg);
         // must re-parse as valid JSON with the pinned schema fields
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(back.at("bench").as_str(), Some("serve"));
-        assert_eq!(back.at("schema_version").as_usize(), Some(1));
+        assert_eq!(back.at("schema_version").as_usize(), Some(2));
+        assert_eq!(back.at("config").at("rate_rps").as_f64(), Some(50.0));
         assert_eq!(back.at("totals").at("requests").as_usize(), Some(10));
         assert!(back.at("totals").at("throughput_rps").as_f64().unwrap() > 0.0);
+        assert_eq!(
+            back.at("totals").at("batch_size_hist").at("3").as_usize(),
+            Some(10)
+        );
+        assert_eq!(back.at("server").at("exec_mode").as_str(), Some("fused"));
+        assert_eq!(back.at("server").at("mean_occupancy").as_f64(), Some(0.75));
+        assert_eq!(back.at("server").at("fused_batches").as_usize(), Some(4));
         let lt = back.at("per_task").at("rte_s").at("latency_ms");
         for key in ["mean", "p50", "p95", "p99", "max"] {
             assert!(lt.at(key).as_f64().is_some(), "missing {key}");
         }
+    }
+
+    #[test]
+    fn report_without_server_window_emits_null() {
+        let report = LoadReport {
+            tasks: vec![],
+            wall_s: 0.0,
+            requests: 0,
+            errors: 0,
+            per_task: BTreeMap::new(),
+            all: Samples::default(),
+            batch_size_hist: BTreeMap::new(),
+            server: None,
+        };
+        let cfg = LoadgenConfig { addr: "x".into(), ..Default::default() };
+        let back = Json::parse(&report.to_json(&cfg).to_string()).unwrap();
+        assert_eq!(back.at("server"), &Json::Null);
+        assert_eq!(back.at("config").at("rate_rps"), &Json::Null);
+    }
+
+    #[test]
+    fn server_counters_parses_metrics_document() {
+        let j = Json::parse(
+            r#"{"exec_mode":"fused",
+                "coordinator":{"batches":7,"fused_batches":5,
+                               "occupancy_sum":4.5,"requests":30}}"#,
+        )
+        .unwrap();
+        let (mode, b, f, o) = server_counters(&j).unwrap();
+        assert_eq!(mode, "fused");
+        assert_eq!(b, 7.0);
+        assert_eq!(f, 5.0);
+        assert_eq!(o, 4.5);
+        // missing occupancy_sum (older gateway) → None
+        let j = Json::parse(r#"{"coordinator":{"batches":7}}"#).unwrap();
+        assert!(server_counters(&j).is_none());
     }
 
     #[test]

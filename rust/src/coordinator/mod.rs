@@ -7,7 +7,10 @@
 //!   after every registration;
 //! * `router` — task-id routing with per-task queues and flush policy;
 //! * `server` — thread-based serving: executor pool, per-task bank cache,
-//!   adapter-bank swap per batch, latency/throughput metrics;
+//!   adapter-bank swap per batch, latency/throughput metrics; in
+//!   [`ExecMode::Fused`] it drives the cross-task planner (`crate::fuse`)
+//!   and the backend's fused engine instead — mixed batches, one shared
+//!   trunk forward;
 //! * `memory` — parameter accounting (the 1.3×/9× "total params" columns).
 
 pub mod memory;
@@ -16,5 +19,5 @@ pub mod server;
 pub mod stream;
 
 pub use router::{FlushPolicy, Router};
-pub use server::{Prediction, Server, ServerConfig, ServerMetrics};
+pub use server::{ExecMode, Prediction, Server, ServerConfig, ServerMetrics};
 pub use stream::{StreamConfig, StreamReport, TaskStream};

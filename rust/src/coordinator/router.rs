@@ -112,6 +112,35 @@ impl<T> Router<T> {
             .min()
     }
 
+    // -- cross-task planner primitives (see `crate::fuse::plan`) ------------
+
+    /// Number of queued items for one task.
+    pub fn queued(&self, task: &str) -> usize {
+        self.queues.get(task).map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// `(task, oldest arrival)` for every non-empty queue — the input to
+    /// a cross-task flush policy's fairness ordering.
+    pub fn oldest_arrivals(&self) -> Vec<(String, Instant)> {
+        self.queues
+            .iter()
+            .filter_map(|(t, q)| q.front().map(|f| (t.clone(), f.arrived)))
+            .collect()
+    }
+
+    /// Pop up to `n` items from the front of `task`'s queue (FIFO order
+    /// preserved). This is how a cross-task planner assembles mixed
+    /// batches without bypassing the per-task queues.
+    pub fn take(&mut self, task: &str, n: usize) -> Vec<T> {
+        let Some(q) = self.queues.get_mut(task) else {
+            return Vec::new();
+        };
+        let n = n.min(q.len());
+        let items: Vec<T> = q.drain(..n).map(|x| x.item).collect();
+        self.pending -= items.len();
+        items
+    }
+
     fn flush_task(&mut self, task: &str, now: Instant) -> Option<FlushedBatch<T>> {
         let q = self.queues.get_mut(task)?;
         if q.is_empty() {
@@ -190,6 +219,37 @@ mod tests {
         r.push("a", 1, t0);
         let d = r.next_deadline(t0 + Duration::from_millis(3)).unwrap();
         assert!(d <= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn take_pops_fifo_and_updates_pending() {
+        let mut r = Router::new(policy(100, 1000));
+        let t0 = Instant::now();
+        for i in 0..5 {
+            r.push("a", i, t0 + Duration::from_millis(i as u64));
+        }
+        r.push("b", 99, t0);
+        assert_eq!(r.queued("a"), 5);
+        assert_eq!(r.queued("nope"), 0);
+        assert_eq!(r.take("a", 3), vec![0, 1, 2]);
+        assert_eq!(r.pending(), 3);
+        assert_eq!(r.take("a", 10), vec![3, 4]);
+        assert_eq!(r.take("a", 10), Vec::<i32>::new());
+        assert_eq!(r.take("nope", 1), Vec::<i32>::new());
+        assert_eq!(r.pending(), 1);
+    }
+
+    #[test]
+    fn oldest_arrivals_skips_empty_queues() {
+        let mut r = Router::new(policy(100, 1000));
+        let t0 = Instant::now();
+        r.push("a", 1, t0);
+        r.push("b", 2, t0 + Duration::from_millis(5));
+        r.take("a", 1);
+        let ages = r.oldest_arrivals();
+        assert_eq!(ages.len(), 1);
+        assert_eq!(ages[0].0, "b");
+        assert_eq!(ages[0].1, t0 + Duration::from_millis(5));
     }
 
     /// Property: random arrivals across tasks — nothing lost, nothing

@@ -25,6 +25,18 @@
 //! N+1 touches no bytes serving tasks 1…N. [`Server::drain`] starts a
 //! graceful shutdown: new submits are refused, queued work is flushed and
 //! answered, then [`Server::shutdown`] joins every thread.
+//!
+//! **Execution modes** ([`ExecMode`]): `PerTask` batches per task as
+//! above. `Fused` replaces the router with the cross-task planner
+//! (`fuse::plan`) and executes mixed batches through the backend's fused
+//! engine — one shared-trunk forward, per-segment LN/adapter/head gather
+//! (`runtime::fused`), no padding to the artifact batch shape. Tasks
+//! whose trunk cannot be shared (`topk`) and backends without a fused
+//! engine (PJRT) transparently keep the per-task path; requesting
+//! `Fused` on such a backend warns and falls back. Hot registration
+//! builds the new task's gatherable bank in [`Server::prepare_task`], so
+//! it becomes fusable the instant it installs — fused traffic for other
+//! tasks never pauses.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -34,9 +46,11 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::router::{FlushPolicy, Router};
-use crate::eval::{fwd_param_banks, TaskModel};
+use crate::eval::{fused_bank, fwd_param_banks, TaskModel};
+use crate::fuse::plan::{FusePlanner, FusedFlush, PlanSegment};
 use crate::model::params::NamedTensors;
-use crate::runtime::{Bank, Runtime};
+use crate::runtime::fused::{FusedBackend, FusedSegment, RowOutput};
+use crate::runtime::{Bank, FusedTaskBank, Runtime};
 use crate::store::AdapterStore;
 use crate::util::tensor::Tensor;
 use crate::util::timer::Samples;
@@ -117,6 +131,28 @@ pub struct Response {
     pub batch_size: usize,
 }
 
+/// How flushed work is mapped onto forward passes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One task per batch; the batch runs the task's `*_fwd_*` executable
+    /// padded to the artifact batch shape.
+    PerTask,
+    /// Mixed batches: rows from many tasks share one trunk forward with
+    /// per-segment parameter gather (native backend only; falls back to
+    /// [`ExecMode::PerTask`] with a warning elsewhere).
+    Fused,
+}
+
+impl ExecMode {
+    /// Wire/metrics name (`per_task` | `fused`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::PerTask => "per_task",
+            ExecMode::Fused => "fused",
+        }
+    }
+}
+
 /// Serving-loop knobs: batching policy, executor pool size, queue bound.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -126,6 +162,8 @@ pub struct ServerConfig {
     pub executors: usize,
     /// bounded client→router channel (backpressure)
     pub queue_capacity: usize,
+    /// Per-task or fused cross-task execution.
+    pub mode: ExecMode,
 }
 
 impl Default for ServerConfig {
@@ -134,6 +172,7 @@ impl Default for ServerConfig {
             flush: FlushPolicy::default(),
             executors: 2,
             queue_capacity: 1024,
+            mode: ExecMode::PerTask,
         }
     }
 }
@@ -153,9 +192,13 @@ pub struct ServerMetrics {
     pub latencies: Samples,
     /// Number of executed batches.
     pub batches: usize,
+    /// Batches that ran through the fused multi-task engine.
+    pub fused_batches: usize,
     /// Number of completed requests.
     pub requests: u64,
-    /// Sum over batches of `real rows / batch capacity`.
+    /// Sum over batches of `real rows / batch capacity` (capacity is the
+    /// artifact batch shape on the per-task path, the flush policy's
+    /// `max_batch` on the fused path — what the hardware actually ran).
     pub occupancy_sum: f64,
 }
 
@@ -177,6 +220,9 @@ struct TaskBanks {
     n_classes: usize,
     /// parameter banks (base, adapters?, head, gates?) ready to execute
     params: Vec<Bank>,
+    /// gatherable bank for the fused engine; `None` for task-specific
+    /// trunks (topk), which keep the per-task path even in fused mode
+    fused: Option<Arc<FusedTaskBank>>,
 }
 
 /// The hot-swappable executor-side bank cache.
@@ -190,6 +236,87 @@ pub struct PreparedTask {
     banks: Arc<TaskBanks>,
 }
 
+/// Mode-selected batcher driven by the router thread: the classic
+/// per-task router, or the cross-task planner. Either way the executors
+/// receive [`FusedFlush`]es (per-task batches are single-segment).
+///
+/// In fused mode, tasks **without** a fused bank (topk trunks) are routed
+/// to a side per-task router instead of the planner: mixing them into
+/// cross-task batches would split their rows into 1–2-row padded per-task
+/// forwards, which is strictly worse than letting them batch among
+/// themselves under the normal flush policy. Fusability is looked up per
+/// push against the live bank cache, so a hot-registered task lands on
+/// the right side immediately.
+enum Batcher {
+    PerTask(Router<Request>),
+    Fused {
+        planner: FusePlanner<Request>,
+        side: Router<Request>,
+        banks: SharedBanks,
+    },
+}
+
+impl Batcher {
+    fn push(&mut self, task: &str, req: Request, now: Instant) -> Option<FusedFlush<Request>> {
+        match self {
+            Batcher::PerTask(r) => r.push(task, req, now).map(FusedFlush::from_single),
+            Batcher::Fused { planner, side, banks } => {
+                // unknown tasks go to the planner; the executor reports them
+                let fusable = banks
+                    .read()
+                    .unwrap()
+                    .get(task)
+                    .map(|tb| tb.fused.is_some())
+                    .unwrap_or(true);
+                if fusable {
+                    planner.push(task, req, now)
+                } else {
+                    side.push(task, req, now).map(FusedFlush::from_single)
+                }
+            }
+        }
+    }
+
+    fn poll(&mut self, now: Instant) -> Vec<FusedFlush<Request>> {
+        match self {
+            Batcher::PerTask(r) => {
+                r.poll(now).into_iter().map(FusedFlush::from_single).collect()
+            }
+            Batcher::Fused { planner, side, .. } => {
+                let mut out = planner.poll(now);
+                out.extend(side.poll(now).into_iter().map(FusedFlush::from_single));
+                out
+            }
+        }
+    }
+
+    fn drain(&mut self, now: Instant) -> Vec<FusedFlush<Request>> {
+        match self {
+            Batcher::PerTask(r) => {
+                r.drain(now).into_iter().map(FusedFlush::from_single).collect()
+            }
+            Batcher::Fused { planner, side, .. } => {
+                let mut out = planner.drain(now);
+                out.extend(side.drain(now).into_iter().map(FusedFlush::from_single));
+                out
+            }
+        }
+    }
+
+    fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        match self {
+            Batcher::PerTask(r) => r.next_deadline(now),
+            Batcher::Fused { planner, side, .. } => {
+                match (planner.next_deadline(now), side.next_deadline(now)) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, None) => a,
+                    (None, b) => b,
+                }
+            }
+        }
+    }
+}
+
 /// A running server; drop-safe shutdown via `shutdown()`.
 pub struct Server {
     tx: mpsc::SyncSender<Request>,
@@ -200,6 +327,7 @@ pub struct Server {
     rt: Arc<Runtime>,
     base: Arc<NamedTensors>,
     banks: SharedBanks,
+    mode: ExecMode,
     /// Live metrics (also returned, aggregated, from [`Server::shutdown`]).
     pub metrics: Arc<Mutex<ServerMetrics>>,
     /// Requests rejected by backpressure (`submit` on a full queue).
@@ -215,6 +343,18 @@ impl Server {
         task_classes: &BTreeMap<String, usize>,
         cfg: ServerConfig,
     ) -> Result<Server> {
+        // fused mode needs a fused engine; PJRT keeps the per-task path
+        let mode = match cfg.mode {
+            ExecMode::Fused if rt.fused().is_none() => {
+                eprintln!(
+                    "warning: {} backend has no fused engine; \
+                     falling back to per-task batching",
+                    rt.backend_name()
+                );
+                ExecMode::PerTask
+            }
+            m => m,
+        };
         // Resolve and cache per-task banks up front (server startup =
         // adapter swap-in; this is the only expensive per-task cost).
         let base = Arc::new(base.clone());
@@ -222,13 +362,14 @@ impl Server {
         for task in store.task_names() {
             let (_, model) = store.latest(&task).context("store raced")?;
             let n_classes = *task_classes.get(&task).unwrap_or(&2);
-            let banks = build_task_banks(&rt, &base, n_classes, &model)?;
+            let banks =
+                build_task_banks(&rt, &base, n_classes, &model, mode == ExecMode::Fused)?;
             initial.insert(task.clone(), banks);
         }
         let banks: SharedBanks = Arc::new(RwLock::new(initial));
 
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_capacity);
-        let (batch_tx, batch_rx) = mpsc::channel::<super::router::FlushedBatch<Request>>();
+        let (batch_tx, batch_rx) = mpsc::channel::<FusedFlush<Request>>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
@@ -237,55 +378,68 @@ impl Server {
         // router thread
         let stop_r = stop.clone();
         let flush = cfg.flush;
+        let banks_r = banks.clone();
         let router_handle = std::thread::Builder::new()
             .name("ab-router".into())
             .spawn(move || {
-                let mut router = Router::new(flush);
+                let mut batcher = match mode {
+                    ExecMode::PerTask => Batcher::PerTask(Router::new(flush)),
+                    ExecMode::Fused => Batcher::Fused {
+                        planner: FusePlanner::new(flush),
+                        side: Router::new(flush),
+                        banks: banks_r,
+                    },
+                };
                 loop {
                     let now = Instant::now();
-                    let timeout = router
+                    let timeout = batcher
                         .next_deadline(now)
                         .unwrap_or(Duration::from_millis(2))
                         .max(Duration::from_micros(100));
                     match rx.recv_timeout(timeout) {
                         Ok(req) => {
                             let task = req.task.clone();
-                            if let Some(b) = router.push(&task, req, Instant::now()) {
+                            if let Some(b) = batcher.push(&task, req, Instant::now()) {
                                 let _ = batch_tx.send(b);
                             }
                         }
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
-                    for b in router.poll(Instant::now()) {
+                    for b in batcher.poll(Instant::now()) {
                         let _ = batch_tx.send(b);
                     }
                     if stop_r.load(Ordering::Relaxed) {
                         break;
                     }
                 }
-                for b in router.drain(Instant::now()) {
+                for b in batcher.drain(Instant::now()) {
                     let _ = batch_tx.send(b);
                 }
                 // dropping batch_tx stops the executors
             })?;
 
         // executor pool
+        let capacity = cfg.flush.max_batch;
         let mut executor_handles = Vec::new();
         for i in 0..cfg.executors.max(1) {
             let rt = rt.clone();
             let banks = banks.clone();
+            let base = base.clone();
             let batch_rx = batch_rx.clone();
             let metrics = metrics.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("ab-exec-{i}"))
                 .spawn(move || loop {
-                    let batch = {
+                    let flush = {
                         let rx = batch_rx.lock().unwrap();
                         rx.recv()
                     };
-                    let Ok(batch) = batch else { return };
-                    if let Err(e) = run_batch(&rt, &banks, batch, &metrics) {
+                    let Ok(flush) = flush else { return };
+                    let fused = mode == ExecMode::Fused;
+                    if let Err(e) =
+                        run_flush(&rt, &banks, &base, capacity, fused, flush, &metrics)
+                    {
                         eprintln!("executor error: {e:#}");
                     }
                 })?;
@@ -301,9 +455,16 @@ impl Server {
             rt,
             base,
             banks,
+            mode,
             metrics,
             rejected,
         })
+    }
+
+    /// The execution mode this server resolved to (fused requests fall
+    /// back to per-task when the backend has no fused engine).
+    pub fn mode(&self) -> ExecMode {
+        self.mode
     }
 
     /// Build and validate serving banks for a task **without** installing
@@ -312,7 +473,13 @@ impl Server {
     /// No lock is held, so traffic is unaffected. Errors here leave the
     /// server exactly as it was.
     pub fn prepare_task(&self, n_classes: usize, model: &TaskModel) -> Result<PreparedTask> {
-        let banks = build_task_banks(&self.rt, &self.base, n_classes, model)?;
+        let banks = build_task_banks(
+            &self.rt,
+            &self.base,
+            n_classes,
+            model,
+            self.mode == ExecMode::Fused,
+        )?;
         Ok(PreparedTask { banks })
     }
 
@@ -401,51 +568,128 @@ impl Server {
 }
 
 /// Resolve a task's fwd banks (base merge + adapters + head + gates) and
-/// warm the executable in the compile cache before traffic arrives.
+/// warm the executable in the compile cache before traffic arrives. The
+/// bank is validated against the manifest first, so a malformed
+/// registration fails here with a descriptive error instead of inside
+/// `execute`. With `build_fused` (a fused-mode server), fusable variants
+/// (adapter/lnonly) also get their gatherable fused bank built, making
+/// the task fusable the moment it installs; per-task/PJRT servers skip
+/// that work and memory entirely.
 fn build_task_banks(
     rt: &Arc<Runtime>,
     base: &NamedTensors,
     n_classes: usize,
     model: &TaskModel,
+    build_fused: bool,
 ) -> Result<Arc<TaskBanks>> {
-    if model.kind == "cls" {
-        let max = rt.manifest.dims.max_classes;
-        anyhow::ensure!(
-            (1..=max).contains(&n_classes),
-            "n_classes {n_classes} outside the padded head range [1, {max}]"
-        );
-    }
+    model.validate_against(&rt.manifest, n_classes)?;
     let fwd_name = model.fwd_name();
     let params = fwd_param_banks(rt, model, base, None)?;
     rt.load(&fwd_name)?;
+    let fused = match model.variant.as_str() {
+        "adapter" | "lnonly" if build_fused => {
+            Some(Arc::new(fused_bank(rt, model, base, n_classes)?))
+        }
+        _ => None,
+    };
     Ok(Arc::new(TaskBanks {
         fwd_name,
         kind: model.kind.clone(),
         n_classes,
         params,
+        fused,
     }))
 }
 
-fn run_batch(
+/// Bounded-memory latency recording: exact below [`LATENCY_SAMPLE_CAP`]
+/// samples, then pseudo-random slot replacement (Fibonacci hashing of the
+/// request counter) so old samples age out of the quantiles.
+fn record_latency(m: &mut ServerMetrics, latency: Duration) {
+    if m.latencies.durs.len() < LATENCY_SAMPLE_CAP {
+        m.latencies.record(latency);
+    } else {
+        let slot = (m.requests as usize).wrapping_mul(2654435761) % LATENCY_SAMPLE_CAP;
+        m.latencies.durs[slot] = latency;
+    }
+}
+
+/// Execute one flush: fusable segments share a single trunk forward;
+/// everything else (topk trunks, or per-task mode) runs the classic
+/// per-task executable per segment. Segments for unknown tasks are
+/// dropped (their reply channels close → the gateway answers 500) without
+/// taking the rest of the batch down.
+fn run_flush(
     rt: &Arc<Runtime>,
     banks: &SharedBanks,
-    batch: super::router::FlushedBatch<Request>,
+    base: &Arc<NamedTensors>,
+    capacity: usize,
+    use_fused: bool,
+    flush: FusedFlush<Request>,
     metrics: &Arc<Mutex<ServerMetrics>>,
 ) -> Result<()> {
-    let tb = {
-        let map = banks.read().unwrap();
-        map.get(&batch.task).cloned()
-    };
-    let tb = tb.with_context(|| format!("no banks for task {:?}", batch.task))?;
+    let FusedFlush { segments, mut items, .. } = flush;
+    // split the row vector back into per-segment request vectors
+    let mut per_seg: Vec<(PlanSegment, Vec<Request>)> = Vec::with_capacity(segments.len());
+    for seg in segments.into_iter().rev() {
+        let reqs = items.split_off(seg.start);
+        per_seg.push((seg, reqs));
+    }
+    per_seg.reverse();
+
+    let engine = if use_fused { rt.fused() } else { None };
+    let mut fused_groups: Vec<(Arc<TaskBanks>, Vec<Request>)> = Vec::new();
+    let mut first_err: Option<anyhow::Error> = None;
+    for (seg, reqs) in per_seg {
+        let tb = {
+            let map = banks.read().unwrap();
+            map.get(&seg.task).cloned()
+        };
+        let Some(tb) = tb else {
+            first_err.get_or_insert_with(|| {
+                anyhow::anyhow!(
+                    "no banks for task {:?} ({} rows dropped)",
+                    seg.task,
+                    reqs.len()
+                )
+            });
+            continue;
+        };
+        if engine.is_some() && tb.fused.is_some() {
+            fused_groups.push((tb, reqs));
+        } else if let Err(e) = run_per_task(rt, &tb, reqs, metrics) {
+            first_err.get_or_insert(e);
+        }
+    }
+    if !fused_groups.is_empty() {
+        let engine = engine.expect("fused groups are only collected with an engine");
+        if let Err(e) = run_fused_groups(rt, engine, base, capacity, fused_groups, metrics)
+        {
+            first_err.get_or_insert(e);
+        }
+    }
+    match first_err {
+        None => Ok(()),
+        Some(e) => Err(e),
+    }
+}
+
+/// Classic path: one task, its `*_fwd_*` executable, rows padded to the
+/// artifact batch shape.
+fn run_per_task(
+    rt: &Arc<Runtime>,
+    tb: &Arc<TaskBanks>,
+    items: Vec<Request>,
+    metrics: &Arc<Mutex<ServerMetrics>>,
+) -> Result<()> {
     let exe = rt.load(&tb.fwd_name)?;
     let b = exe.spec.batch;
     let seq = rt.manifest.dims.seq;
-    let n = batch.items.len();
+    let n = items.len();
     // assemble padded token banks
     let mut tokens = Vec::with_capacity(b * seq);
     let mut segments = Vec::with_capacity(b * seq);
     let mut attn = Vec::with_capacity(b * seq);
-    for req in &batch.items {
+    for req in &items {
         tokens.extend_from_slice(&req.tokens);
         segments.extend_from_slice(&req.segments);
         attn.extend_from_slice(&req.attn_mask);
@@ -499,17 +743,9 @@ fn run_batch(
     let mut m = metrics.lock().unwrap();
     m.batches += 1;
     m.occupancy_sum += n as f64 / b as f64;
-    for (req, pred) in batch.items.into_iter().zip(preds) {
+    for (req, pred) in items.into_iter().zip(preds) {
         let latency = now.duration_since(req.submitted);
-        if m.latencies.durs.len() < LATENCY_SAMPLE_CAP {
-            m.latencies.record(latency);
-        } else {
-            // bounded memory for indefinite serving: overwrite a
-            // pseudo-random slot (Fibonacci hashing of the request
-            // counter) so old samples age out of the quantiles
-            let slot = (m.requests as usize).wrapping_mul(2654435761) % LATENCY_SAMPLE_CAP;
-            m.latencies.durs[slot] = latency;
-        }
+        record_latency(&mut m, latency);
         m.requests += 1;
         let _ = req.reply.send(Response {
             task: req.task,
@@ -517,6 +753,69 @@ fn run_batch(
             latency,
             batch_size: n,
         });
+    }
+    Ok(())
+}
+
+/// Fused path: one shared-trunk forward over every fusable segment of the
+/// flush — no padding, per-segment parameter gather (`runtime::fused`).
+fn run_fused_groups(
+    rt: &Arc<Runtime>,
+    engine: &dyn FusedBackend,
+    base: &Arc<NamedTensors>,
+    capacity: usize,
+    groups: Vec<(Arc<TaskBanks>, Vec<Request>)>,
+    metrics: &Arc<Mutex<ServerMetrics>>,
+) -> Result<()> {
+    let seq = rt.manifest.dims.seq;
+    let rows: usize = groups.iter().map(|(_, r)| r.len()).sum();
+    let mut tokens = Vec::with_capacity(rows * seq);
+    let mut type_ids = Vec::with_capacity(rows * seq);
+    let mut attn = Vec::with_capacity(rows * seq);
+    let mut segs: Vec<FusedSegment> = Vec::with_capacity(groups.len());
+    for (tb, reqs) in &groups {
+        let bank = tb.fused.clone().context("fusable group lost its bank")?;
+        segs.push(FusedSegment { bank, len: reqs.len() });
+        for req in reqs {
+            tokens.extend_from_slice(&req.tokens);
+            type_ids.extend_from_slice(&req.segments);
+            attn.extend_from_slice(&req.attn_mask);
+        }
+    }
+    let outs = engine.fused_forward(&base.map, &segs, &tokens, &type_ids, &attn)?;
+    anyhow::ensure!(
+        outs.len() == rows,
+        "fused forward returned {} rows for a {rows}-row batch",
+        outs.len()
+    );
+    let now = Instant::now();
+    let mut m = metrics.lock().unwrap();
+    m.batches += 1;
+    m.fused_batches += 1;
+    m.occupancy_sum += rows as f64 / capacity.max(1) as f64;
+    let mut it = outs.into_iter();
+    for (tb, reqs) in groups {
+        for req in reqs {
+            let pred = match it.next().expect("row count checked above") {
+                RowOutput::Class(logits) => {
+                    let n = tb.n_classes.min(logits.len()).max(1);
+                    Prediction::Class(argmax(&logits[..n]))
+                }
+                RowOutput::Score(s) => Prediction::Score(s),
+                RowOutput::Span(start, end) => {
+                    Prediction::Span(argmax(&start), argmax(&end))
+                }
+            };
+            let latency = now.duration_since(req.submitted);
+            record_latency(&mut m, latency);
+            m.requests += 1;
+            let _ = req.reply.send(Response {
+                task: req.task,
+                prediction: pred,
+                latency,
+                batch_size: rows,
+            });
+        }
     }
     Ok(())
 }

@@ -13,7 +13,8 @@ use anyhow::{bail, Context, Result};
 use crate::data::batcher::eval_batches;
 use crate::data::tasks::{Labels, Metric, Split};
 use crate::model::params::NamedTensors;
-use crate::runtime::{Bank, Runtime};
+use crate::runtime::fused::{AdapterParams, FusedAdapters, LayerLn};
+use crate::runtime::{Bank, FusedTaskBank, Manifest, Runtime};
 use crate::util::stats;
 use crate::util::tensor::Tensor;
 
@@ -56,6 +57,114 @@ impl TaskModel {
     pub fn trained_param_count(&self) -> usize {
         self.trained.param_count()
     }
+
+    /// Name of the train executable whose `trained` group defines this
+    /// bank's layout.
+    pub fn train_name(&self) -> Result<String> {
+        match self.variant.as_str() {
+            "adapter" => {
+                let m = self.m.context("adapter variant needs m")?;
+                Ok(format!("{}_train_adapter_m{m}", self.kind))
+            }
+            "topk" => {
+                let k = self.k.context("topk variant needs k")?;
+                Ok(format!("{}_train_topk_k{k}", self.kind))
+            }
+            "lnonly" => Ok(format!("{}_train_lnonly", self.kind)),
+            other => bail!("unknown variant {other:?} (expected adapter|topk|lnonly)"),
+        }
+    }
+
+    /// Validate this bank against the manifest **at registration time**:
+    /// the serving executable must exist for the claimed variant/size,
+    /// and every trained leaf must match the train executable's `trained`
+    /// group in name, shape and dtype (no missing leaves, no extras).
+    /// Descriptive errors here replace shape panics/errors that would
+    /// otherwise surface later inside `execute`.
+    pub fn validate_against(&self, manifest: &Manifest, n_classes: usize) -> Result<()> {
+        if !matches!(self.kind.as_str(), "cls" | "reg" | "span") {
+            bail!("unservable artifact kind {:?} (expected cls|reg|span)", self.kind);
+        }
+        if self.kind == "cls" {
+            let max = manifest.dims.max_classes;
+            anyhow::ensure!(
+                (1..=max).contains(&n_classes),
+                "n_classes {n_classes} outside the padded head range [1, {max}]"
+            );
+        }
+        let train = self.train_name()?;
+        let spec = match manifest.exe(&train) {
+            Ok(s) => s,
+            Err(_) => match self.variant.as_str() {
+                "adapter" => {
+                    let mut sizes: Vec<usize> = manifest
+                        .find(&self.kind, "adapter")
+                        .iter()
+                        .filter_map(|e| e.m)
+                        .collect();
+                    sizes.sort_unstable();
+                    bail!(
+                        "preset {:?} has no {} adapter of size m={} \
+                         (available sizes: {sizes:?})",
+                        manifest.preset,
+                        self.kind,
+                        self.m.unwrap_or(0)
+                    );
+                }
+                "topk" => {
+                    let mut depths: Vec<usize> = manifest
+                        .find(&self.kind, "topk")
+                        .iter()
+                        .filter_map(|e| e.k)
+                        .collect();
+                    depths.sort_unstable();
+                    bail!(
+                        "preset {:?} has no {} top-k depth k={} \
+                         (available depths: {depths:?})",
+                        manifest.preset,
+                        self.kind,
+                        self.k.unwrap_or(0)
+                    );
+                }
+                _ => bail!("preset {:?} has no executable {train:?}", manifest.preset),
+            },
+        };
+        let range = spec.input_group_range("trained")?;
+        let mut expected: std::collections::BTreeMap<&str, &crate::runtime::LeafSpec> =
+            std::collections::BTreeMap::new();
+        for leaf in &spec.inputs[range] {
+            let rel = leaf
+                .name
+                .strip_prefix("trained/")
+                .unwrap_or(leaf.name.as_str());
+            expected.insert(rel, leaf);
+        }
+        for (rel, t) in &self.trained.map {
+            let Some(leaf) = expected.get(rel.as_str()) else {
+                bail!(
+                    "bank leaf {rel:?} is not part of {train}'s trained group \
+                     (did the variant/m/k metadata get mislabeled?)"
+                );
+            };
+            if t.shape != leaf.shape || t.dtype() != leaf.dtype {
+                bail!(
+                    "bank leaf {rel:?}: got shape {:?} {}, {train} expects {:?} {}",
+                    t.shape,
+                    t.dtype().name(),
+                    leaf.shape,
+                    leaf.dtype.name()
+                );
+            }
+        }
+        for rel in expected.keys() {
+            if !self.trained.map.contains_key(*rel) {
+                bail!("bank is missing leaf {rel:?} required by {train}");
+            }
+        }
+        // the fwd executable that would serve it must exist too
+        manifest.exe(&self.fwd_name())?;
+        Ok(())
+    }
 }
 
 /// Build the input banks for this model's fwd executable.
@@ -97,6 +206,93 @@ pub fn fwd_param_banks(
         banks.push(model.trained.strip_prefix("head").to_bank(&spec, "head")?);
     }
     Ok(banks)
+}
+
+/// Build the gatherable fused-serving bank for a task: its task-tuned
+/// LayerNorms (pretrained base overlaid by the trained `base_ln`
+/// subtree — exactly the merge the per-task path performs), its adapter
+/// stack (adapter variant) and its head.
+///
+/// Only variants whose trunk differs from the pretrained base by LayerNorm
+/// parameters alone can be fused; `topk` rewrites whole trunk layers per
+/// task, so it keeps the per-task path and this returns an error.
+pub fn fused_bank(
+    rt: &Arc<Runtime>,
+    model: &TaskModel,
+    pretrained_base: &NamedTensors,
+    n_classes: usize,
+) -> Result<FusedTaskBank> {
+    if !matches!(model.variant.as_str(), "adapter" | "lnonly") {
+        bail!(
+            "variant {:?} has a task-specific trunk and cannot be fused",
+            model.variant
+        );
+    }
+    let dims = rt.manifest.dims.clone();
+    let merged = crate::model::params::merge_base_for_fwd(
+        pretrained_base,
+        &model.trained,
+        &model.variant,
+        model.k,
+        dims.n_layers,
+    )?;
+    let get = |name: &str| -> Result<Tensor> {
+        merged
+            .get(name)
+            .cloned()
+            .with_context(|| format!("merged base missing {name:?}"))
+    };
+    let mut layer_ln = Vec::with_capacity(dims.n_layers);
+    for li in 0..dims.n_layers {
+        layer_ln.push(LayerLn {
+            ln1_g: get(&format!("layers/{li}/ln1_g"))?,
+            ln1_b: get(&format!("layers/{li}/ln1_b"))?,
+            ln2_g: get(&format!("layers/{li}/ln2_g"))?,
+            ln2_b: get(&format!("layers/{li}/ln2_b"))?,
+        });
+    }
+    let adapters = if model.variant == "adapter" {
+        let m = model.m.context("adapter variant needs m")?;
+        let ad = model.trained.strip_prefix("adapters");
+        let mut layers = Vec::with_capacity(dims.n_layers);
+        for li in 0..dims.n_layers {
+            let part = |which: &str| -> Result<AdapterParams> {
+                let g = |leaf: &str| -> Result<Tensor> {
+                    ad.get(&format!("layers/{li}/{which}/{leaf}"))
+                        .cloned()
+                        .with_context(|| {
+                            format!(
+                                "trained bank missing \
+                                 adapters/layers/{li}/{which}/{leaf}"
+                            )
+                        })
+                };
+                Ok(AdapterParams {
+                    w_down: g("w_down")?,
+                    b_down: g("b_down")?,
+                    w_up: g("w_up")?,
+                    b_up: g("b_up")?,
+                })
+            };
+            layers.push([part("attn")?, part("ffn")?]);
+        }
+        Some(FusedAdapters { m, layers, gates: vec![1.0; dims.n_layers * 2] })
+    } else {
+        None
+    };
+    let head = model.trained.strip_prefix("head");
+    let bank = FusedTaskBank {
+        kind: model.kind.clone(),
+        n_classes,
+        embed_ln_g: get("embed_ln_g")?,
+        embed_ln_b: get("embed_ln_b")?,
+        layer_ln,
+        adapters,
+        head_w: head.get("w").cloned().context("trained bank missing head/w")?,
+        head_b: head.get("b").cloned().context("trained bank missing head/b")?,
+    };
+    bank.check_shapes(&dims)?;
+    Ok(bank)
 }
 
 /// Raw forward predictions over a split, in row order.

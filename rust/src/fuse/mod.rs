@@ -1,0 +1,24 @@
+//! L3.5: the fused multi-task batch engine's policy layer.
+//!
+//! The paper's setting is many tasks sharing one frozen trunk, each with
+//! modest traffic. Per-task batching (the `coordinator::Router` flush
+//! policy) collapses there: every task's queue flushes at `max_delay`
+//! with 1–2 rows and the executor pays a full trunk forward per task.
+//! Since adapter inference cost is dominated by the shared trunk (Mundra
+//! et al. 2023), rows from *different* tasks can ride one forward pass —
+//! the execution side gathers per-task parameters per row segment
+//! (`runtime::fused`), and this module decides **which rows share a
+//! batch**:
+//!
+//! * [`plan::FusePlanner`] — a cross-task flush policy layered on the
+//!   router's per-task queues: assemble mixed batches with rows grouped
+//!   into contiguous same-task segments, oldest-task-first fairness (no
+//!   task starves under skewed arrivals), FIFO within each task.
+//!
+//! `coordinator::Server` drives the planner when started with
+//! [`crate::coordinator::ExecMode::Fused`]; see ARCHITECTURE.md §Fused
+//! engine for the batch layout diagram.
+
+pub mod plan;
+
+pub use plan::{FusePlanner, FusedFlush, PlanSegment};

@@ -1,0 +1,257 @@
+//! Cross-task flush policy: assemble mixed batches from per-task queues.
+//!
+//! Layered on [`Router`]'s queues via its planner primitives (`take`,
+//! `oldest_arrivals`), so within-task FIFO and conservation are inherited
+//! from the structure the property tests already pin. The policy itself:
+//!
+//! * **capacity flush** — as soon as total pending rows reach
+//!   `max_batch`, assemble a full mixed batch (occupancy 1);
+//! * **deadline flush** — once any task's oldest row has waited
+//!   `max_delay`, assemble a batch that *starts* with that task and is
+//!   opportunistically topped up with fresher rows from other tasks (the
+//!   cross-task occupancy win: one task's deadline pays the trunk
+//!   forward, everyone else rides along);
+//! * **fairness** — tasks enter a batch oldest-head-first, so the task
+//!   with the longest-waiting row is always included in the next flush:
+//!   no task starves, however skewed the arrival mix (property-tested in
+//!   `tests/coordinator_props.rs`).
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::{FlushPolicy, FlushedBatch, Router};
+
+/// A contiguous same-task run inside a [`FusedFlush`]'s `items`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanSegment {
+    /// Task the rows belong to.
+    pub task: String,
+    /// First row index in `items`.
+    pub start: usize,
+    /// Number of rows.
+    pub len: usize,
+}
+
+/// One assembled mixed batch: rows grouped into contiguous same-task
+/// segments, ≤ `max_batch` rows total.
+#[derive(Debug)]
+pub struct FusedFlush<T> {
+    /// Same-task segments, in assembly (fairness) order.
+    pub segments: Vec<PlanSegment>,
+    /// All rows, concatenated in segment order (FIFO within each task).
+    pub items: Vec<T>,
+    /// Queueing delay of the oldest row at flush time.
+    pub oldest_wait: Duration,
+}
+
+impl<T> FusedFlush<T> {
+    /// Wrap a single-task router flush (per-task mode, or a task that
+    /// filled a whole batch by itself).
+    pub fn from_single(b: FlushedBatch<T>) -> FusedFlush<T> {
+        FusedFlush {
+            segments: vec![PlanSegment { task: b.task, start: 0, len: b.items.len() }],
+            items: b.items,
+            oldest_wait: b.oldest_wait,
+        }
+    }
+
+    /// Total rows in the batch.
+    pub fn rows(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Number of distinct tasks riding this batch.
+    pub fn tasks(&self) -> usize {
+        self.segments.len()
+    }
+}
+
+/// The cross-task batcher: per-task queues (via [`Router`]) plus the
+/// mixed-batch assembly policy above.
+pub struct FusePlanner<T> {
+    policy: FlushPolicy,
+    router: Router<T>,
+}
+
+impl<T> FusePlanner<T> {
+    /// An empty planner with the given flush policy.
+    pub fn new(policy: FlushPolicy) -> Self {
+        FusePlanner { policy, router: Router::new(policy) }
+    }
+
+    /// Number of queued (not yet flushed) rows across all tasks.
+    pub fn pending(&self) -> usize {
+        self.router.pending()
+    }
+
+    /// Enqueue; returns a batch when this push reached capacity — either
+    /// the task's own queue hit `max_batch` (single-segment batch) or
+    /// total pending did (mixed batch).
+    pub fn push(&mut self, task: &str, item: T, now: Instant) -> Option<FusedFlush<T>> {
+        if let Some(b) = self.router.push(task, item, now) {
+            return Some(FusedFlush::from_single(b));
+        }
+        if self.router.pending() >= self.policy.max_batch {
+            return self.assemble(now);
+        }
+        None
+    }
+
+    /// Assemble batches for every expired deadline (each batch starts
+    /// with the longest-waiting task and is topped up across tasks).
+    pub fn poll(&mut self, now: Instant) -> Vec<FusedFlush<T>> {
+        let mut out = Vec::new();
+        while self.deadline_due(now) {
+            match self.assemble(now) {
+                Some(f) => out.push(f),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Flush everything (shutdown).
+    pub fn drain(&mut self, now: Instant) -> Vec<FusedFlush<T>> {
+        let mut out = Vec::new();
+        while self.router.pending() > 0 {
+            match self.assemble(now) {
+                Some(f) => out.push(f),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Time until the earliest pending deadline (event-loop sleep hint).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.router.next_deadline(now)
+    }
+
+    fn deadline_due(&self, now: Instant) -> bool {
+        self.router
+            .oldest_arrivals()
+            .iter()
+            .any(|(_, a)| now.saturating_duration_since(*a) >= self.policy.max_delay)
+    }
+
+    /// One mixed batch: tasks oldest-head-first, FIFO within task, total
+    /// rows ≤ `max_batch`.
+    fn assemble(&mut self, now: Instant) -> Option<FusedFlush<T>> {
+        let mut ages = self.router.oldest_arrivals();
+        if ages.is_empty() {
+            return None;
+        }
+        ages.sort_by_key(|(_, arrived)| *arrived);
+        let oldest = ages[0].1;
+        let mut segments = Vec::new();
+        let mut items = Vec::new();
+        let mut room = self.policy.max_batch;
+        for (task, _) in ages {
+            if room == 0 {
+                break;
+            }
+            let taken = self.router.take(&task, room);
+            if taken.is_empty() {
+                continue;
+            }
+            room -= taken.len();
+            segments.push(PlanSegment { task, start: items.len(), len: taken.len() });
+            items.extend(taken);
+        }
+        if items.is_empty() {
+            return None;
+        }
+        Some(FusedFlush {
+            segments,
+            items,
+            oldest_wait: now.saturating_duration_since(oldest),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, ms: u64) -> FlushPolicy {
+        FlushPolicy { max_batch, max_delay: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn capacity_flush_mixes_tasks_oldest_first() {
+        let mut p = FusePlanner::new(policy(4, 1000));
+        let t0 = Instant::now();
+        assert!(p.push("b", 10, t0 + Duration::from_millis(1)).is_none());
+        assert!(p.push("a", 1, t0).is_none());
+        assert!(p.push("a", 2, t0 + Duration::from_millis(2)).is_none());
+        let f = p.push("c", 20, t0 + Duration::from_millis(3)).expect("capacity");
+        // oldest head is a (t0), then b, then c; FIFO within a
+        assert_eq!(f.items, vec![1, 2, 10, 20]);
+        assert_eq!(
+            f.segments,
+            vec![
+                PlanSegment { task: "a".into(), start: 0, len: 2 },
+                PlanSegment { task: "b".into(), start: 2, len: 1 },
+                PlanSegment { task: "c".into(), start: 3, len: 1 },
+            ]
+        );
+        assert_eq!(f.rows(), 4);
+        assert_eq!(f.tasks(), 3);
+        assert_eq!(p.pending(), 0);
+    }
+
+    #[test]
+    fn single_task_filling_a_batch_stays_single_segment() {
+        let mut p = FusePlanner::new(policy(3, 1000));
+        let t0 = Instant::now();
+        p.push("solo", 1, t0);
+        p.push("solo", 2, t0);
+        let f = p.push("solo", 3, t0).expect("task-local capacity");
+        assert_eq!(f.segments.len(), 1);
+        assert_eq!(f.items, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn deadline_flush_rides_fresh_rows_along() {
+        let mut p = FusePlanner::new(policy(8, 5));
+        let t0 = Instant::now();
+        p.push("old", 1, t0);
+        // fresh rows from other tasks, well under their own deadline
+        p.push("fresh", 2, t0 + Duration::from_millis(4));
+        assert!(p.poll(t0 + Duration::from_millis(4)).is_empty());
+        let batches = p.poll(t0 + Duration::from_millis(6));
+        assert_eq!(batches.len(), 1);
+        let f = &batches[0];
+        // the overdue task leads, the fresh one rides along
+        assert_eq!(f.segments[0].task, "old");
+        assert_eq!(f.items, vec![1, 2]);
+        assert!(f.oldest_wait >= Duration::from_millis(5));
+        assert_eq!(p.pending(), 0);
+    }
+
+    #[test]
+    fn capacity_caps_batch_and_leaves_remainder_queued() {
+        let mut p = FusePlanner::new(policy(3, 1000));
+        let t0 = Instant::now();
+        p.push("a", 1, t0);
+        p.push("a", 2, t0);
+        p.push("b", 10, t0 + Duration::from_millis(1));
+        // b now has another row that cannot fit
+        let f = p.push("b", 11, t0 + Duration::from_millis(2)).expect("capacity");
+        assert_eq!(f.items, vec![1, 2, 10]);
+        assert_eq!(p.pending(), 1);
+        let rest = p.drain(t0 + Duration::from_secs(1));
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].items, vec![11]);
+        assert_eq!(p.pending(), 0);
+    }
+
+    #[test]
+    fn next_deadline_delegates_to_queues() {
+        let mut p = FusePlanner::new(policy(10, 8));
+        let t0 = Instant::now();
+        assert!(p.next_deadline(t0).is_none());
+        p.push("a", 1, t0);
+        let d = p.next_deadline(t0 + Duration::from_millis(3)).unwrap();
+        assert!(d <= Duration::from_millis(5));
+    }
+}

@@ -12,6 +12,8 @@
 //!   * `train`     — training loops and hyper-parameter sweeps (paper §3.1)
 //!   * `coordinator` — the cloud-service layer: task stream, router,
 //!     batcher, server (paper §1's motivating setting)
+//!   * `fuse`      — the fused multi-task batch engine's policy layer:
+//!     cross-task flush planning for one-shared-trunk mixed batches
 //!   * `serve`     — the networked gateway over the coordinator: HTTP
 //!     front end, wire protocol, hot task registration, blocking client
 //!   * `store`     — versioned adapter banks + checkpoints
@@ -25,6 +27,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod fuse;
 pub mod model;
 pub mod report;
 pub mod runtime;

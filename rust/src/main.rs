@@ -7,10 +7,11 @@
 //! adapterbert train     --task NAME [--method adapter|finetune|topk:K|lnonly]
 //!                       [--m M] [--lr LR] [--epochs E] [--seed S]
 //! adapterbert stream    [--tasks a,b,c] [--store DIR]
-//! adapterbert serve     [--tasks a,b] [--max-batch B] [--executors E]
+//! adapterbert serve     [--tasks a,b] [--max-batch B] [--executors E] [--fuse]
 //!                       [--port P [--duration S] [--workers W]] [--requests N]
-//! adapterbert loadgen   --addr HOST:PORT [--tasks a,b] [--concurrency C]
-//!                       [--requests N] [--duration S] [--out FILE]
+//! adapterbert loadgen   --addr HOST:PORT [--tasks a,b | --tasks N] [--rate R]
+//!                       [--concurrency C] [--requests N] [--duration S]
+//!                       [--out FILE]
 //! adapterbert baseline  --task NAME [--budget N]
 //! adapterbert bench     <table1|table2|fig3|fig3x|fig4|fig5|fig6|fig7|sizes|
 //!                        params|all> [--full]
@@ -130,9 +131,12 @@ fn print_help() {
          \x20 train      tune one task (adapter/finetune/topk:K/lnonly)\n\
          \x20 stream     online task stream with no-forgetting checks\n\
          \x20 serve      multi-task serving: in-process demo, or the HTTP\n\
-         \x20            gateway with hot task registration (--port)\n\
+         \x20            gateway with hot task registration (--port);\n\
+         \x20            --fuse batches rows from many tasks into one\n\
+         \x20            shared-trunk forward (native backend)\n\
          \x20 loadgen    closed-loop load harness against a running\n\
-         \x20            gateway; writes BENCH_serve.json\n\
+         \x20            gateway; writes BENCH_serve.json. --tasks N\n\
+         \x20            --rate R is the many-tasks/low-rate preset\n\
          \x20 baseline   no-BERT baseline search for one task\n\
          \x20 bench      regenerate paper tables/figures (see ARCHITECTURE.md)\n\
          \x20 list-tasks show the synthetic task suites\n\
@@ -317,6 +321,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         serve_tasks.push(name.to_string());
     }
 
+    // --fuse: cross-task mixed batches, one shared-trunk forward (native
+    // backend; PJRT falls back to per-task with a warning)
+    let mode = if args.flags.contains_key("fuse") {
+        adapterbert::coordinator::ExecMode::Fused
+    } else {
+        adapterbert::coordinator::ExecMode::PerTask
+    };
     let scfg = ServerConfig {
         flush: FlushPolicy {
             max_batch: args.parse_num("max-batch", rt.manifest.batch)?,
@@ -324,8 +335,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         executors: args.parse_num("executors", 1usize)?,
         queue_capacity: 1024,
+        mode,
     };
     let server = Server::start(rt.clone(), &store, &base, &task_classes, scfg)?;
+    println!("execution mode: {}", server.mode().name());
 
     // --port: expose the coordinator over HTTP (the networked gateway)
     if let Some(port) = args.get("port") {
@@ -423,15 +436,22 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         .get("addr")
         .context("--addr HOST:PORT required (a running `serve --port`)")?
         .to_string();
-    let tasks: Vec<String> = args
-        .get("tasks")
-        .map(|t| {
-            t.split(',')
-                .map(|s| s.trim().to_string())
-                .filter(|s| !s.is_empty())
-                .collect()
-        })
-        .unwrap_or_default();
+    // --tasks takes either a comma list of task names, or a bare count N
+    // ("many-tasks" preset: the first N tasks the gateway lists)
+    let mut tasks: Vec<String> = Vec::new();
+    let mut task_count: Option<usize> = None;
+    if let Some(t) = args.get("tasks") {
+        match t.parse::<usize>() {
+            Ok(n) => task_count = Some(n),
+            Err(_) => {
+                tasks = t
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+            }
+        }
+    }
     let duration = match args.get("duration") {
         Some(v) => {
             let secs: f64 =
@@ -441,12 +461,23 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    // --rate R: low-rate preset — pace the closed loop to ≈R req/s total
+    let rate = match args.get("rate") {
+        Some(v) => {
+            let r: f64 = v.parse().map_err(|e| anyhow::anyhow!("--rate {v:?}: {e}"))?;
+            anyhow::ensure!(r > 0.0, "--rate must be positive");
+            Some(r)
+        }
+        None => None,
+    };
     let cfg = loadgen::LoadgenConfig {
         addr,
         tasks,
+        task_count,
         concurrency: args.parse_num("concurrency", 4usize)?,
         requests: args.parse_num("requests", 200u64)?,
         duration,
+        rate,
         words_per_request: args.parse_num("words", 12usize)?,
         seed: args.parse_num("seed", 7u64)?,
     };

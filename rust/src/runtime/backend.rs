@@ -107,6 +107,14 @@ pub trait Backend: Send + Sync {
 
     /// Move a bank into backend-resident storage for reuse across calls.
     fn upload_bank(&self, bank: &Bank) -> Result<Box<dyn BankStorage>>;
+
+    /// The fused multi-task engine, when this backend has one. PJRT
+    /// executables have static single-task signatures, so only the native
+    /// backend returns `Some`; callers fall back to the per-task path
+    /// otherwise (see `coordinator::server`).
+    fn fused(&self) -> Option<&dyn super::fused::FusedBackend> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -169,6 +169,12 @@ impl Runtime {
     pub fn upload_bank(&self, bank: &Bank) -> Result<DeviceBank> {
         Ok(DeviceBank { storage: self.backend.upload_bank(bank)? })
     }
+
+    /// The backend's fused multi-task engine, when it has one (native
+    /// only — PJRT callers keep the per-task path).
+    pub fn fused(&self) -> Option<&dyn super::fused::FusedBackend> {
+        self.backend.fused()
+    }
 }
 
 /// A prepared executable bound to its manifest signature.

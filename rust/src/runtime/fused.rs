@@ -1,0 +1,286 @@
+//! The fused multi-task execution seam: one shared-trunk forward serving
+//! rows from **many tasks** in a single batch.
+//!
+//! The paper's economics (one frozen base, tiny per-task deltas) mean rows
+//! from different tasks run the *same* trunk matmuls — only the per-task
+//! LayerNorms, adapters and heads differ, and those are cheap enough to
+//! gather **per row segment** inside the layer loop. A fused batch is laid
+//! out as contiguous same-task segments:
+//!
+//! ```text
+//!   rows    ┌─────────────┬───────┬──────────────────┐
+//!           │ task A (×3) │ B (×1)│    task C (×4)   │   one batch
+//!           └─────────────┴───────┴──────────────────┘
+//!   trunk     one shared forward (embeddings, QKV/O, FFN matmuls)
+//!   gather    per-segment LN γ/β · adapters (w_down/w_up) · head
+//! ```
+//!
+//! This module defines the backend-agnostic types: [`FusedTaskBank`] (the
+//! gatherable per-task parameters), [`FusedSegment`] (a contiguous run of
+//! same-task rows), [`RowOutput`] (raw per-row head outputs) and the
+//! [`FusedBackend`] trait. Only the native backend implements it — PJRT
+//! executables have static signatures, so fused mode falls back to the
+//! per-task path there (see `coordinator::server`).
+//!
+//! Fusable variants are `adapter` and `lnonly`: their trunks differ from
+//! the pretrained base only in LayerNorm parameters. `topk` banks rewrite
+//! whole trunk layers per task, so there is nothing to share — they keep
+//! the per-task path even in fused mode.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::ModelDims;
+use crate::util::tensor::{Data, Tensor};
+
+/// One adapter bottleneck's parameters (`x·W_down + b_down → GELU → ·W_up
+/// + b_up`), shapes `[d,m]`, `[m]`, `[m,d]`, `[d]`.
+#[derive(Debug, Clone)]
+pub struct AdapterParams {
+    pub w_down: Tensor,
+    pub b_down: Tensor,
+    pub w_up: Tensor,
+    pub b_up: Tensor,
+}
+
+/// A task's adapter stack: per layer, one bottleneck after the attention
+/// sub-layer (`[li][0]`) and one after the FFN sub-layer (`[li][1]`).
+#[derive(Debug, Clone)]
+pub struct FusedAdapters {
+    /// Bottleneck size.
+    pub m: usize,
+    /// `n_layers` entries of `[attn, ffn]`.
+    pub layers: Vec<[AdapterParams; 2]>,
+    /// Fig. 6 gates, `n_layers * 2` (position `li*2` = attn, `+1` = ffn);
+    /// all ones in normal serving.
+    pub gates: Vec<f32>,
+}
+
+/// Per-layer LayerNorm parameters (`ln1` after attention, `ln2` after FFN).
+#[derive(Debug, Clone)]
+pub struct LayerLn {
+    pub ln1_g: Tensor,
+    pub ln1_b: Tensor,
+    pub ln2_g: Tensor,
+    pub ln2_b: Tensor,
+}
+
+/// Everything a fused forward gathers for one task's rows: the task's
+/// LayerNorms (the per-task LN tuning of the adapter/lnonly variants),
+/// its adapters (absent for lnonly) and its head.
+///
+/// Built once per task version (see `eval::fused_bank`) and held behind
+/// the coordinator's hot-swappable bank cache, so registering task N+1
+/// makes it gatherable without pausing fused traffic for tasks 1…N.
+#[derive(Debug, Clone)]
+pub struct FusedTaskBank {
+    /// Artifact kind: `cls` | `reg` | `span` — decides head application.
+    pub kind: String,
+    /// Live classes for `cls` heads (logits beyond this are padding).
+    pub n_classes: usize,
+    /// Embedding LayerNorm `γ` (task-tuned).
+    pub embed_ln_g: Tensor,
+    /// Embedding LayerNorm `β` (task-tuned).
+    pub embed_ln_b: Tensor,
+    /// Per-layer LayerNorms (task-tuned), `n_layers` entries.
+    pub layer_ln: Vec<LayerLn>,
+    /// Adapter stack; `None` for the lnonly variant.
+    pub adapters: Option<FusedAdapters>,
+    /// Head weight: `[d, max_classes]` (cls), `[d, 1]` (reg), `[d, 2]` (span).
+    pub head_w: Tensor,
+    /// Head bias.
+    pub head_b: Tensor,
+}
+
+impl FusedTaskBank {
+    /// Validate internal shapes against the model dims (defense in depth —
+    /// the builder already checked the bank against the manifest).
+    pub fn check_shapes(&self, dims: &ModelDims) -> Result<()> {
+        let d = dims.d;
+        ensure_shape("embed_ln_g", &self.embed_ln_g, &[d])?;
+        ensure_shape("embed_ln_b", &self.embed_ln_b, &[d])?;
+        if self.layer_ln.len() != dims.n_layers {
+            bail!(
+                "fused bank has {} layer LNs, model has {} layers",
+                self.layer_ln.len(),
+                dims.n_layers
+            );
+        }
+        for (li, ln) in self.layer_ln.iter().enumerate() {
+            ensure_shape(&format!("layers/{li}/ln1_g"), &ln.ln1_g, &[d])?;
+            ensure_shape(&format!("layers/{li}/ln1_b"), &ln.ln1_b, &[d])?;
+            ensure_shape(&format!("layers/{li}/ln2_g"), &ln.ln2_g, &[d])?;
+            ensure_shape(&format!("layers/{li}/ln2_b"), &ln.ln2_b, &[d])?;
+        }
+        if let Some(ad) = &self.adapters {
+            if ad.layers.len() != dims.n_layers {
+                bail!(
+                    "fused bank has {} adapter layers, model has {}",
+                    ad.layers.len(),
+                    dims.n_layers
+                );
+            }
+            if ad.gates.len() != dims.n_layers * 2 {
+                bail!("fused bank gates must be n_layers*2");
+            }
+            for (li, pair) in ad.layers.iter().enumerate() {
+                for (which, a) in ["attn", "ffn"].iter().zip(pair.iter()) {
+                    let p = |leaf: &str| format!("layers/{li}/{which}/{leaf}");
+                    ensure_shape(&p("w_down"), &a.w_down, &[d, ad.m])?;
+                    ensure_shape(&p("b_down"), &a.b_down, &[ad.m])?;
+                    ensure_shape(&p("w_up"), &a.w_up, &[ad.m, d])?;
+                    ensure_shape(&p("b_up"), &a.b_up, &[d])?;
+                }
+            }
+        }
+        let n_out = match self.kind.as_str() {
+            "cls" => dims.max_classes,
+            "reg" => 1,
+            "span" => 2,
+            other => bail!("fused bank has unservable kind {other:?}"),
+        };
+        ensure_shape("head/w", &self.head_w, &[d, n_out])?;
+        ensure_shape("head/b", &self.head_b, &[n_out])?;
+        Ok(())
+    }
+}
+
+fn ensure_shape(name: &str, t: &Tensor, want: &[usize]) -> Result<()> {
+    if t.shape != want {
+        bail!("fused bank {name}: shape {:?}, expected {:?}", t.shape, want);
+    }
+    match &t.data {
+        Data::F32(_) => Ok(()),
+        Data::I32(_) => bail!("fused bank {name}: dtype i32, expected f32"),
+    }
+}
+
+/// A contiguous run of same-task rows inside a fused batch.
+#[derive(Clone)]
+pub struct FusedSegment {
+    /// The task's gatherable parameters.
+    pub bank: Arc<FusedTaskBank>,
+    /// Number of batch rows in this segment.
+    pub len: usize,
+}
+
+/// Raw per-row head output of a fused forward; decoding (argmax, class
+/// masking) is the caller's job so parity with the per-task executables
+/// can be checked on the raw numbers.
+#[derive(Debug, Clone)]
+pub enum RowOutput {
+    /// `[max_classes]` logits (padding classes included, like `cls_fwd_*`).
+    Class(Vec<f32>),
+    /// Scalar regression score.
+    Score(f32),
+    /// `(start, end)` logits over the sequence, `-1e9` at masked positions.
+    Span(Vec<f32>, Vec<f32>),
+}
+
+/// A backend that can run one shared-trunk forward over a mixed batch,
+/// gathering per-task parameters per segment.
+///
+/// `base` is the **pretrained** trunk keyed by relpath (`tok_embed`,
+/// `layers/0/wq`, …) — the same map for every call; per-task LN values in
+/// it are ignored in favor of each segment's bank. `tokens` / `type_ids` /
+/// `mask` are row-major `[rows, seq]` with `rows = Σ seg.len`.
+pub trait FusedBackend: Send + Sync {
+    /// Execute the fused forward; returns one [`RowOutput`] per row, in
+    /// batch order.
+    fn fused_forward(
+        &self,
+        base: &BTreeMap<String, Tensor>,
+        segments: &[FusedSegment],
+        tokens: &[i32],
+        type_ids: &[i32],
+        mask: &[f32],
+    ) -> Result<Vec<RowOutput>>;
+}
+
+/// Look up an f32 leaf in a base map (shared helper for implementations).
+pub fn base_f32<'a>(base: &'a BTreeMap<String, Tensor>, name: &str) -> Result<&'a [f32]> {
+    let t = base
+        .get(name)
+        .with_context(|| format!("fused forward: base missing {name:?}"))?;
+    match &t.data {
+        Data::F32(v) => Ok(v),
+        Data::I32(_) => bail!("fused forward: base leaf {name:?} is not f32"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 8,
+            d: 4,
+            n_layers: 1,
+            n_heads: 1,
+            ffn: 8,
+            seq: 4,
+            max_classes: 3,
+            type_vocab: 2,
+            mlm_positions: 2,
+        }
+    }
+
+    fn ln(d: usize) -> LayerLn {
+        LayerLn {
+            ln1_g: Tensor::full_f32(&[d], 1.0),
+            ln1_b: Tensor::zeros(&[d], crate::util::tensor::DType::F32),
+            ln2_g: Tensor::full_f32(&[d], 1.0),
+            ln2_b: Tensor::zeros(&[d], crate::util::tensor::DType::F32),
+        }
+    }
+
+    fn bank(kind: &str, n_out: usize) -> FusedTaskBank {
+        let d = 4;
+        FusedTaskBank {
+            kind: kind.to_string(),
+            n_classes: 2,
+            embed_ln_g: Tensor::full_f32(&[d], 1.0),
+            embed_ln_b: Tensor::zeros(&[d], crate::util::tensor::DType::F32),
+            layer_ln: vec![ln(d)],
+            adapters: None,
+            head_w: Tensor::zeros(&[d, n_out], crate::util::tensor::DType::F32),
+            head_b: Tensor::zeros(&[n_out], crate::util::tensor::DType::F32),
+        }
+    }
+
+    #[test]
+    fn shape_check_accepts_wellformed() {
+        assert!(bank("cls", 3).check_shapes(&dims()).is_ok());
+        assert!(bank("reg", 1).check_shapes(&dims()).is_ok());
+        assert!(bank("span", 2).check_shapes(&dims()).is_ok());
+    }
+
+    #[test]
+    fn shape_check_rejects_malformed() {
+        // head width must match the kind
+        let b = bank("cls", 2);
+        let err = b.check_shapes(&dims()).unwrap_err().to_string();
+        assert!(err.contains("head/w"), "{err}");
+        // layer count mismatch
+        let mut b = bank("reg", 1);
+        b.layer_ln.clear();
+        assert!(b.check_shapes(&dims()).is_err());
+        // unknown kind
+        let mut b = bank("reg", 1);
+        b.kind = "mlm".into();
+        assert!(b.check_shapes(&dims()).is_err());
+    }
+
+    #[test]
+    fn base_f32_reports_missing_and_wrong_dtype() {
+        let mut base = BTreeMap::new();
+        base.insert("x".to_string(), Tensor::f32(vec![2], vec![1.0, 2.0]));
+        base.insert("y".to_string(), Tensor::i32(vec![1], vec![3]));
+        assert_eq!(base_f32(&base, "x").unwrap(), &[1.0, 2.0]);
+        assert!(base_f32(&base, "zz").is_err());
+        assert!(base_f32(&base, "y").is_err());
+    }
+}

@@ -5,6 +5,9 @@
 //! * `pjrt`     — the XLA/PJRT implementation (HLO text → compile → run);
 //! * `native`   — pure-Rust kernels evaluating the same graphs, no plugin
 //!   or artifacts required;
+//! * `fused`    — the multi-task fused-batch seam: one shared-trunk
+//!   forward over rows from many tasks, per-segment parameter gather
+//!   (native backend only);
 //! * `synth`    — in-process manifest synthesis for the built-in presets;
 //! * `exec`     — the [`Runtime`]/[`Executable`] facade: validation,
 //!   compile cache, group packing, backend selection.
@@ -23,6 +26,7 @@
 
 pub mod backend;
 pub mod exec;
+pub mod fused;
 pub mod manifest;
 pub mod native;
 pub mod pjrt;
@@ -30,4 +34,5 @@ pub mod synth;
 
 pub use backend::{Backend, BackendExec, BackendKind, BankStorage};
 pub use exec::{Bank, BankRef, DeviceBank, Executable, Runtime};
+pub use fused::{FusedBackend, FusedSegment, FusedTaskBank, RowOutput};
 pub use manifest::{ExeSpec, LeafSpec, Manifest, ModelDims};

@@ -10,6 +10,12 @@
 //! transcribed; the adapter's gate follows the Fig. 6 semantics exactly
 //! (`gate = 0` is a bitwise identity).
 //!
+//! Besides the per-task executables, this module hosts the **fused
+//! multi-task forward** (`run_fused`): one shared-trunk pass over a
+//! batch whose rows belong to different tasks, with each task's
+//! LayerNorms/adapters/head gathered per contiguous row segment (see
+//! `crate::runtime::fused` for the layout).
+//!
 //! Parameter resolution works by *leaf name*: the inputs are flattened into
 //! a `name → tensor` map and a small resolver maps logical paths
 //! (`layers/3/wq`, `embed_ln_g`, …) onto whichever group holds them for the
@@ -27,11 +33,12 @@
 //! trainable leaves, so grads flowing to frozen parameters are dropped and
 //! the Adam update covers every trained leaf.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use anyhow::{bail, Context, Result};
 
 use super::kernels as k;
+use crate::runtime::fused::{self, FusedSegment, FusedTaskBank, RowOutput};
 use crate::runtime::manifest::{ExeSpec, ModelDims};
 use crate::util::tensor::{Data, DType, Tensor};
 
@@ -388,51 +395,14 @@ fn encode_fwd(
     let (mut x, ln_e) =
         k::ln_fwd(&emb, p.base("embed_ln_g")?, p.base("embed_ln_b")?, d, LN_EPS);
 
-    let alpha = 1.0 / (g.dh as f32).sqrt();
     let mut layers = Vec::with_capacity(g.l);
     for li in 0..g.l {
         let x_in = x;
         let q = k::linear(&x_in, p.layer(li, "wq")?, p.layer(li, "bq")?, r, d, d);
         let kt = k::linear(&x_in, p.layer(li, "wk")?, p.layer(li, "bk")?, r, d, d);
         let v = k::linear(&x_in, p.layer(li, "wv")?, p.layer(li, "bv")?, r, d, d);
-        let mut probs = vec![0.0f32; g.b * g.h * g.s * g.s];
-        let mut ctx = vec![0.0f32; r * d];
-        for bi in 0..g.b {
-            for hi in 0..g.h {
-                let pbase = (bi * g.h + hi) * g.s * g.s;
-                for si in 0..g.s {
-                    let qrow = &q[(bi * g.s + si) * d + hi * g.dh..][..g.dh];
-                    let prow = &mut probs[pbase + si * g.s..][..g.s];
-                    for (ti, pv) in prow.iter_mut().enumerate() {
-                        *pv = if bin.mask[bi * g.s + ti] > 0.0 {
-                            let krow = &kt[(bi * g.s + ti) * d + hi * g.dh..][..g.dh];
-                            let mut acc = 0.0f32;
-                            for j in 0..g.dh {
-                                acc += qrow[j] * krow[j];
-                            }
-                            alpha * acc
-                        } else {
-                            k::NEG
-                        };
-                    }
-                }
-                k::softmax_rows(&mut probs[pbase..pbase + g.s * g.s], g.s);
-                for si in 0..g.s {
-                    let prow = &probs[pbase + si * g.s..][..g.s];
-                    for ti in 0..g.s {
-                        let pv = prow[ti];
-                        if pv != 0.0 {
-                            let vrow = &v[(bi * g.s + ti) * d + hi * g.dh..][..g.dh];
-                            let crow =
-                                &mut ctx[(bi * g.s + si) * d + hi * g.dh..][..g.dh];
-                            for j in 0..g.dh {
-                                crow[j] += pv * vrow[j];
-                            }
-                        }
-                    }
-                }
-            }
-        }
+        let (probs, ctx) =
+            k::attention_fwd(&q, &kt, &v, bin.mask, g.b, g.s, d, g.h, g.dh);
         let attn_out = k::linear(&ctx, p.layer(li, "wo")?, p.layer(li, "bo")?, r, d, d);
         // the pre-adapter sub-layer output is only taped when an adapter
         // consumes it in backward; otherwise it moves straight into z1
@@ -1125,6 +1095,232 @@ fn run_embed(g: &G, spec: &ExeSpec, env: &Env) -> Result<Vec<Tensor>> {
         }
     }
     Ok(vec![Tensor::f32(spec.outputs[0].shape.clone(), out)])
+}
+
+// ---------------------------------------------------------------------------
+// fused multi-task forward (per-segment parameter gather)
+// ---------------------------------------------------------------------------
+
+/// Apply each segment's adapter (if any) at `(layer li, pos)` to its own
+/// rows of the sub-layer output; rows of adapter-less (lnonly) segments
+/// pass through untouched. `pos` 0 = attention, 1 = FFN.
+fn segment_adapters(
+    g: &G,
+    segments: &[FusedSegment],
+    x_sub: &[f32],
+    li: usize,
+    pos: usize,
+) -> Vec<f32> {
+    let d = g.d;
+    let mut out = x_sub.to_vec();
+    let mut row0 = 0usize; // batch-row offset of the current segment
+    for sg in segments {
+        if let Some(ad) = &sg.bank.adapters {
+            let gate = ad.gates[li * 2 + pos];
+            if gate != 0.0 {
+                let rows = sg.len * g.s;
+                let span = row0 * g.s * d..(row0 + sg.len) * g.s * d;
+                let a = &ad.layers[li][pos];
+                let h = k::linear(
+                    &x_sub[span.clone()],
+                    a.w_down.as_f32(),
+                    a.b_down.as_f32(),
+                    rows,
+                    d,
+                    ad.m,
+                );
+                let act = k::gelu_vec(&h);
+                let delta =
+                    k::linear(&act, a.w_up.as_f32(), a.b_up.as_f32(), rows, ad.m, d);
+                for (o, dl) in out[span].iter_mut().zip(&delta) {
+                    *o += gate * dl;
+                }
+            }
+        }
+        row0 += sg.len;
+    }
+    out
+}
+
+/// Per-segment `(token_rows, γ, β)` table for [`k::segment_ln`], selecting
+/// each task's LayerNorm via `pick`.
+fn ln_gather<'a>(
+    g: &G,
+    segments: &'a [FusedSegment],
+    pick: impl Fn(&'a FusedTaskBank) -> (&'a Tensor, &'a Tensor),
+) -> Vec<(usize, &'a [f32], &'a [f32])> {
+    segments
+        .iter()
+        .map(|sg| {
+            let (gam, bet) = pick(&sg.bank);
+            (sg.len * g.s, gam.as_f32(), bet.as_f32())
+        })
+        .collect()
+}
+
+/// One shared-trunk forward over a mixed batch: trunk matmuls run over
+/// **all** rows at once from the shared pretrained `base`, while
+/// LayerNorms, adapters and heads are gathered per same-task segment.
+/// Per-row results are identical to the per-task `*_fwd_*` path (same
+/// kernels, same op order), which the integration tests pin to ≤ 1e-5.
+pub(crate) fn run_fused(
+    dims: &ModelDims,
+    base: &BTreeMap<String, Tensor>,
+    segments: &[FusedSegment],
+    tokens: &[i32],
+    type_ids: &[i32],
+    mask: &[f32],
+) -> Result<Vec<RowOutput>> {
+    let b: usize = segments.iter().map(|sg| sg.len).sum();
+    if b == 0 {
+        bail!("fused forward: empty batch");
+    }
+    for sg in segments {
+        sg.bank.check_shapes(dims)?;
+    }
+    let g = G::new(dims, b);
+    let (r, d, s) = (g.rows(), g.d, g.s);
+    if tokens.len() != r || type_ids.len() != r || mask.len() != r {
+        bail!(
+            "fused forward: batch inputs must be [{b}, {s}] \
+             (got tokens {}, type_ids {}, mask {})",
+            tokens.len(),
+            type_ids.len(),
+            mask.len()
+        );
+    }
+
+    // embeddings from the shared tables (same lookup as `encode_fwd`)
+    let tok_e = fused::base_f32(base, "tok_embed")?;
+    let pos_e = fused::base_f32(base, "pos_embed")?;
+    let typ_e = fused::base_f32(base, "type_embed")?;
+    let mut emb = vec![0.0f32; r * d];
+    for bi in 0..b {
+        for si in 0..s {
+            let row = bi * s + si;
+            let t = tokens[row].clamp(0, g.v as i32 - 1) as usize;
+            let ty = type_ids[row].clamp(0, g.tvocab as i32 - 1) as usize;
+            let out = &mut emb[row * d..(row + 1) * d];
+            for j in 0..d {
+                out[j] = tok_e[t * d + j] + pos_e[si * d + j] + typ_e[ty * d + j];
+            }
+        }
+    }
+    let embed_segs = ln_gather(&g, segments, |bk| (&bk.embed_ln_g, &bk.embed_ln_b));
+    let mut x = k::segment_ln(&emb, d, LN_EPS, &embed_segs);
+
+    for li in 0..g.l {
+        let lp = |leaf: &str| format!("layers/{li}/{leaf}");
+        let q = k::linear(
+            &x,
+            fused::base_f32(base, &lp("wq"))?,
+            fused::base_f32(base, &lp("bq"))?,
+            r,
+            d,
+            d,
+        );
+        let kt = k::linear(
+            &x,
+            fused::base_f32(base, &lp("wk"))?,
+            fused::base_f32(base, &lp("bk"))?,
+            r,
+            d,
+            d,
+        );
+        let v = k::linear(
+            &x,
+            fused::base_f32(base, &lp("wv"))?,
+            fused::base_f32(base, &lp("bv"))?,
+            r,
+            d,
+            d,
+        );
+        let ctx = k::attention_ctx(&q, &kt, &v, mask, b, s, d, g.h, g.dh);
+        let attn_out = k::linear(
+            &ctx,
+            fused::base_f32(base, &lp("wo"))?,
+            fused::base_f32(base, &lp("bo"))?,
+            r,
+            d,
+            d,
+        );
+        let mut z1 = segment_adapters(&g, segments, &attn_out, li, 0);
+        k::add_assign(&mut z1, &x);
+        let ln1_segs = ln_gather(&g, segments, |bk| {
+            (&bk.layer_ln[li].ln1_g, &bk.layer_ln[li].ln1_b)
+        });
+        let x_mid = k::segment_ln(&z1, d, LN_EPS, &ln1_segs);
+
+        let ffn_pre = k::linear(
+            &x_mid,
+            fused::base_f32(base, &lp("w1"))?,
+            fused::base_f32(base, &lp("b1"))?,
+            r,
+            d,
+            g.ffn,
+        );
+        let ffn_act = k::gelu_vec(&ffn_pre);
+        let ffn_out = k::linear(
+            &ffn_act,
+            fused::base_f32(base, &lp("w2"))?,
+            fused::base_f32(base, &lp("b2"))?,
+            r,
+            g.ffn,
+            d,
+        );
+        let mut z2 = segment_adapters(&g, segments, &ffn_out, li, 1);
+        k::add_assign(&mut z2, &x_mid);
+        let ln2_segs = ln_gather(&g, segments, |bk| {
+            (&bk.layer_ln[li].ln2_g, &bk.layer_ln[li].ln2_b)
+        });
+        x = k::segment_ln(&z2, d, LN_EPS, &ln2_segs);
+    }
+
+    // heads: gathered per segment, decoded per row by the segment's kind
+    let mut out = Vec::with_capacity(b);
+    let mut row0 = 0usize;
+    for sg in segments {
+        let bank = &sg.bank;
+        let hw = bank.head_w.as_f32();
+        let hb = bank.head_b.as_f32();
+        match bank.kind.as_str() {
+            "cls" => {
+                for bi in row0..row0 + sg.len {
+                    let cls = &x[bi * s * d..bi * s * d + d];
+                    let logits = k::linear(cls, hw, hb, 1, d, g.maxc);
+                    out.push(RowOutput::Class(logits));
+                }
+            }
+            "reg" => {
+                for bi in row0..row0 + sg.len {
+                    let cls = &x[bi * s * d..bi * s * d + d];
+                    let mut acc = hb[0];
+                    for j in 0..d {
+                        acc += cls[j] * hw[j];
+                    }
+                    out.push(RowOutput::Score(acc));
+                }
+            }
+            "span" => {
+                for bi in row0..row0 + sg.len {
+                    let rows = &x[bi * s * d..(bi + 1) * s * d];
+                    let both = k::linear(rows, hw, hb, s, d, 2);
+                    let mut start = vec![k::NEG; s];
+                    let mut end = vec![k::NEG; s];
+                    for si in 0..s {
+                        if mask[bi * s + si] > 0.0 {
+                            start[si] = both[si * 2];
+                            end[si] = both[si * 2 + 1];
+                        }
+                    }
+                    out.push(RowOutput::Span(start, end));
+                }
+            }
+            other => bail!("fused forward: unservable head kind {other:?}"),
+        }
+        row0 += sg.len;
+    }
+    Ok(out)
 }
 
 /// Entry point: evaluate one executable on flattened inputs.

@@ -191,6 +191,154 @@ pub fn ln_bwd(
     dx
 }
 
+/// Multi-head scaled-dot-product attention forward over already-projected
+/// `q`/`k`/`v` (each `[b*s, d]` with heads packed along `d`): returns
+/// `(probs [b, h, s, s], ctx [b*s, d])`. Shared by the per-task encoder
+/// and the fused multi-task path, so both run bit-identical float ops.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_fwd(
+    q: &[f32],
+    kt: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    b: usize,
+    s: usize,
+    d: usize,
+    h: usize,
+    dh: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let alpha = 1.0 / (dh as f32).sqrt();
+    let mut probs = vec![0.0f32; b * h * s * s];
+    let mut ctx = vec![0.0f32; b * s * d];
+    for bi in 0..b {
+        for hi in 0..h {
+            let pbase = (bi * h + hi) * s * s;
+            for si in 0..s {
+                let qrow = &q[(bi * s + si) * d + hi * dh..][..dh];
+                let prow = &mut probs[pbase + si * s..][..s];
+                for (ti, pv) in prow.iter_mut().enumerate() {
+                    *pv = if mask[bi * s + ti] > 0.0 {
+                        let krow = &kt[(bi * s + ti) * d + hi * dh..][..dh];
+                        let mut acc = 0.0f32;
+                        for j in 0..dh {
+                            acc += qrow[j] * krow[j];
+                        }
+                        alpha * acc
+                    } else {
+                        NEG
+                    };
+                }
+            }
+            softmax_rows(&mut probs[pbase..pbase + s * s], s);
+            for si in 0..s {
+                let prow = &probs[pbase + si * s..][..s];
+                for ti in 0..s {
+                    let pv = prow[ti];
+                    if pv != 0.0 {
+                        let vrow = &v[(bi * s + ti) * d + hi * dh..][..dh];
+                        let crow = &mut ctx[(bi * s + si) * d + hi * dh..][..dh];
+                        for j in 0..dh {
+                            crow[j] += pv * vrow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (probs, ctx)
+}
+
+/// Forward-only attention: same math as [`attention_fwd`] (row-for-row
+/// identical ops) but without materializing the `[b, h, s, s]` probs
+/// tensor — only one `[s]` scratch row is live at a time. This is the
+/// serving hot path (no backward tape needed); `attention_fwd` remains
+/// for the training path, which tapes probs.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_ctx(
+    q: &[f32],
+    kt: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    b: usize,
+    s: usize,
+    d: usize,
+    h: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let alpha = 1.0 / (dh as f32).sqrt();
+    let mut ctx = vec![0.0f32; b * s * d];
+    let mut row = vec![0.0f32; s];
+    for bi in 0..b {
+        for hi in 0..h {
+            for si in 0..s {
+                let qrow = &q[(bi * s + si) * d + hi * dh..][..dh];
+                for (ti, pv) in row.iter_mut().enumerate() {
+                    *pv = if mask[bi * s + ti] > 0.0 {
+                        let krow = &kt[(bi * s + ti) * d + hi * dh..][..dh];
+                        let mut acc = 0.0f32;
+                        for j in 0..dh {
+                            acc += qrow[j] * krow[j];
+                        }
+                        alpha * acc
+                    } else {
+                        NEG
+                    };
+                }
+                softmax_rows(&mut row, s);
+                for ti in 0..s {
+                    let pv = row[ti];
+                    if pv != 0.0 {
+                        let vrow = &v[(bi * s + ti) * d + hi * dh..][..dh];
+                        let crow = &mut ctx[(bi * s + si) * d + hi * dh..][..dh];
+                        for j in 0..dh {
+                            crow[j] += pv * vrow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    ctx
+}
+
+/// LayerNorm forward without a tape (serving path — no backward needed).
+/// Same math as [`ln_fwd`].
+pub fn ln_apply(x: &[f32], gamma: &[f32], beta: &[f32], d: usize, eps: f32) -> Vec<f32> {
+    let rows = x.len() / d;
+    let mut y = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + eps).sqrt();
+        for j in 0..d {
+            y[r * d + j] = (xr[j] - mu) * rs * gamma[j] + beta[j];
+        }
+    }
+    y
+}
+
+/// Segmented LayerNorm: `x[rows, d]` is split into contiguous row
+/// segments, each normalized with its **own** `γ`/`β` — the per-task LN
+/// gather of the fused multi-task path. `segs` entries are
+/// `(row_count, gamma, beta)`; row counts must sum to `rows`.
+pub fn segment_ln(
+    x: &[f32],
+    d: usize,
+    eps: f32,
+    segs: &[(usize, &[f32], &[f32])],
+) -> Vec<f32> {
+    let mut y = Vec::with_capacity(x.len());
+    let mut row0 = 0usize;
+    for &(rows, gamma, beta) in segs {
+        let xs = &x[row0 * d..(row0 + rows) * d];
+        y.extend(ln_apply(xs, gamma, beta, d, eps));
+        row0 += rows;
+    }
+    debug_assert_eq!(row0 * d, x.len());
+    y
+}
+
 /// In-place numerically stable softmax over each row of `x[rows, cols]`.
 pub fn softmax_rows(x: &mut [f32], cols: usize) {
     for row in x.chunks_exact_mut(cols) {
@@ -302,6 +450,67 @@ mod tests {
             let fd = (f(&xp) - f(&xm)) / (2.0 * h);
             assert_close(dx[i], fd, 2e-2);
         }
+    }
+
+    #[test]
+    fn ln_apply_matches_ln_fwd() {
+        let d = 4;
+        let x: Vec<f32> = (0..3 * d).map(|i| (i as f32 * 0.37).cos()).collect();
+        let g: Vec<f32> = (0..d).map(|i| 1.0 + 0.2 * i as f32).collect();
+        let b: Vec<f32> = (0..d).map(|i| -0.1 * i as f32).collect();
+        let (want, _) = ln_fwd(&x, &g, &b, d, 1e-6);
+        assert_eq!(ln_apply(&x, &g, &b, d, 1e-6), want);
+    }
+
+    #[test]
+    fn segment_ln_gathers_per_segment_params() {
+        let d = 2;
+        let x = vec![1.0, 3.0, 2.0, 6.0, -1.0, 1.0];
+        let g1 = [1.0, 1.0];
+        let b1 = [0.0, 0.0];
+        let g2 = [2.0, 2.0];
+        let b2 = [5.0, 5.0];
+        // first 2 rows with (g1,b1), last row with (g2,b2)
+        let y = segment_ln(&x, d, 1e-6, &[(2, &g1, &b1), (1, &g2, &b2)]);
+        let y1 = ln_apply(&x[..4], &g1, &b1, d, 1e-6);
+        let y2 = ln_apply(&x[4..], &g2, &b2, d, 1e-6);
+        assert_eq!(&y[..4], &y1[..]);
+        assert_eq!(&y[4..], &y2[..]);
+    }
+
+    #[test]
+    fn attention_ctx_matches_attention_fwd() {
+        let (b, s, d, h, dh) = (2usize, 4usize, 4usize, 2usize, 2usize);
+        let mk = |seed: f32| -> Vec<f32> {
+            (0..b * s * d).map(|i| ((i as f32 + seed) * 0.37).sin()).collect()
+        };
+        let (q, k, v) = (mk(1.0), mk(2.0), mk(3.0));
+        let mask = vec![1.0, 1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0];
+        let (_, ctx_taped) = attention_fwd(&q, &k, &v, &mask, b, s, d, h, dh);
+        let ctx = attention_ctx(&q, &k, &v, &mask, b, s, d, h, dh);
+        assert_eq!(ctx, ctx_taped, "serving attention must match the taped path");
+    }
+
+    #[test]
+    fn attention_fwd_uniform_probs_average_values() {
+        // q = 0 -> uniform attention over unmasked keys -> ctx = mean(v)
+        let (b, s, d, h, dh) = (1usize, 3usize, 2usize, 1usize, 2usize);
+        let q = vec![0.0; b * s * d];
+        let k = vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6];
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mask = vec![1.0, 1.0, 1.0];
+        let (probs, ctx) = attention_fwd(&q, &k, &v, &mask, b, s, d, h, dh);
+        for &p in &probs {
+            assert!((p - 1.0 / 3.0).abs() < 1e-6, "{p}");
+        }
+        for si in 0..s {
+            assert!((ctx[si * d] - 3.0).abs() < 1e-5);
+            assert!((ctx[si * d + 1] - 4.0).abs() < 1e-5);
+        }
+        // masked key gets exactly zero probability
+        let mask = vec![1.0, 0.0, 1.0];
+        let (probs, _) = attention_fwd(&q, &k, &v, &mask, b, s, d, h, dh);
+        assert_eq!(probs[1], 0.0);
     }
 
     #[test]

@@ -16,9 +16,12 @@
 pub mod graph;
 pub mod kernels;
 
+use std::collections::BTreeMap;
+
 use anyhow::{bail, Context, Result};
 
 use super::backend::{ArgTensor, Backend, BackendExec, Bank, BankStorage};
+use super::fused::{FusedBackend, FusedSegment, RowOutput};
 use super::manifest::{ExeSpec, Manifest, ModelDims};
 use crate::util::tensor::{DType, Tensor};
 
@@ -65,6 +68,23 @@ impl Backend for NativeBackend {
     fn upload_bank(&self, bank: &Bank) -> Result<Box<dyn BankStorage>> {
         let shapes = bank.iter().map(|t| (t.shape.clone(), t.dtype())).collect();
         Ok(Box::new(HostBank { tensors: bank.clone(), shapes }))
+    }
+
+    fn fused(&self) -> Option<&dyn FusedBackend> {
+        Some(self)
+    }
+}
+
+impl FusedBackend for NativeBackend {
+    fn fused_forward(
+        &self,
+        base: &BTreeMap<String, Tensor>,
+        segments: &[FusedSegment],
+        tokens: &[i32],
+        type_ids: &[i32],
+        mask: &[f32],
+    ) -> Result<Vec<RowOutput>> {
+        graph::run_fused(&self.dims, base, segments, tokens, type_ids, mask)
     }
 }
 

@@ -368,12 +368,17 @@ impl GatewayState {
                 Json::num(self.inflight.load(Ordering::SeqCst) as f64),
             ),
             ("draining", Json::Bool(self.server.is_draining())),
+            ("exec_mode", Json::str(self.server.mode().name())),
             (
                 "coordinator",
                 Json::obj(vec![
                     ("requests", Json::num(coord.requests as f64)),
                     ("batches", Json::num(coord.batches as f64)),
+                    ("fused_batches", Json::num(coord.fused_batches as f64)),
                     ("mean_occupancy", Json::num(coord.mean_occupancy())),
+                    // raw sum so clients (loadgen) can window occupancy
+                    // over a run via before/after deltas
+                    ("occupancy_sum", Json::num(coord.occupancy_sum)),
                     (
                         "queue_rejected",
                         Json::num(

@@ -5,6 +5,7 @@
 use std::time::{Duration, Instant};
 
 use adapterbert::coordinator::{FlushPolicy, Router};
+use adapterbert::fuse::{FusePlanner, FusedFlush};
 use adapterbert::model::params::NamedTensors;
 use adapterbert::util::rng::Rng;
 use adapterbert::util::stats;
@@ -67,6 +68,145 @@ fn prop_router_conservation_order_and_bounds() {
         // conservation + per-task FIFO (sent ids are increasing per task)
         assert_eq!(sent, recv);
         assert_eq!(router.pending(), 0);
+    });
+}
+
+/// Cross-task flush policy: under random arrival mixes, no request is
+/// dropped, duplicated or reordered within its task; batches never exceed
+/// `max_batch`; and every batch is a valid segmentation — contiguous
+/// same-task runs whose task labels match their rows.
+#[test]
+fn prop_fuse_planner_conservation_order_and_segments() {
+    for_seeds(30, |rng| {
+        let max_batch = 1 + rng.below(8);
+        let mut planner: FusePlanner<(String, u64)> = FusePlanner::new(FlushPolicy {
+            max_batch,
+            max_delay: Duration::from_millis(2),
+        });
+        let t0 = Instant::now();
+        let n_tasks = 1 + rng.below(5);
+        let mut sent: Vec<Vec<u64>> = vec![vec![]; n_tasks];
+        let mut recv: Vec<Vec<u64>> = vec![vec![]; n_tasks];
+        let mut clock = t0;
+        let mut collect = |batches: Vec<FusedFlush<(String, u64)>>,
+                           recv: &mut Vec<Vec<u64>>| {
+            for b in batches {
+                assert!(b.rows() <= max_batch, "batch over max_batch");
+                assert!(b.rows() > 0, "empty flush");
+                // segments exactly tile the items, in order
+                let mut cursor = 0usize;
+                for seg in &b.segments {
+                    assert_eq!(seg.start, cursor, "segment not contiguous");
+                    assert!(seg.len > 0, "empty segment");
+                    for (task, _) in &b.items[seg.start..seg.start + seg.len] {
+                        assert_eq!(*task, seg.task, "row in wrong segment");
+                    }
+                    cursor += seg.len;
+                }
+                assert_eq!(cursor, b.rows(), "segments do not cover the batch");
+                // distinct tasks per batch (planner takes each task once)
+                let mut names: Vec<&str> =
+                    b.segments.iter().map(|s| s.task.as_str()).collect();
+                names.sort_unstable();
+                names.dedup();
+                assert_eq!(names.len(), b.segments.len(), "task split across segments");
+                for (task, v) in b.items {
+                    let ti: usize = task[1..].parse().unwrap();
+                    recv[ti].push(v);
+                }
+            }
+        };
+        for i in 0..300u64 {
+            let ti = rng.below(n_tasks);
+            let task = format!("t{ti}");
+            sent[ti].push(i);
+            clock += Duration::from_micros(rng.below(500) as u64);
+            if let Some(b) = planner.push(&task, (task.clone(), i), clock) {
+                collect(vec![b], &mut recv);
+            }
+            if rng.f64() < 0.15 {
+                clock += Duration::from_millis(3);
+                collect(planner.poll(clock), &mut recv);
+            }
+        }
+        collect(planner.drain(clock + Duration::from_secs(1)), &mut recv);
+        // conservation + per-task FIFO (sent ids are increasing per task)
+        assert_eq!(sent, recv);
+        assert_eq!(planner.pending(), 0);
+    });
+}
+
+/// Fairness under adversarially skewed arrivals: one task floods, one
+/// sends a single request. The rare request must be served after at most
+/// `ceil(backlog/max_batch) + 1` flushes — the rows ahead of it drain
+/// oldest-first, so it can never be starved by newer flood traffic.
+#[test]
+fn prop_fuse_planner_no_starvation_under_skew() {
+    for_seeds(20, |rng| {
+        let max_batch = 2 + rng.below(7);
+        let mut planner: FusePlanner<(String, u64)> = FusePlanner::new(FlushPolicy {
+            max_batch,
+            max_delay: Duration::from_millis(2),
+        });
+        let t0 = Instant::now();
+        let mut clock = t0;
+        let mut flood_id = 0u64;
+        let mut drained = Vec::new();
+        // pre-existing flood backlog, older than the rare request
+        let backlog = rng.below(3 * max_batch);
+        for _ in 0..backlog {
+            clock += Duration::from_micros(100);
+            if let Some(b) = planner.push("flood", ("flood".into(), flood_id), clock) {
+                drained.push(b);
+            }
+            flood_id += 1;
+        }
+        let ahead = planner.pending();
+        clock += Duration::from_micros(100);
+        let mut flushes_until_rare = 0usize;
+        let mut found = false;
+        // rare's own push may complete a capacity batch that already
+        // carries it — that is immediate service, not starvation
+        if let Some(b) = planner.push("rare", ("rare".into(), 0), clock) {
+            flushes_until_rare += 1;
+            found = b.items.iter().any(|(t, _)| t == "rare");
+        }
+        // flood keeps arriving *after* the rare request, faster than it
+        // can possibly drain
+        for _ in 0..200 {
+            if found {
+                break;
+            }
+            clock += Duration::from_micros(300);
+            if let Some(b) = planner.push("flood", ("flood".into(), flood_id), clock) {
+                flushes_until_rare += 1;
+                if b.items.iter().any(|(t, _)| t == "rare") {
+                    found = true;
+                    break;
+                }
+            }
+            flood_id += 1;
+            clock += Duration::from_millis(3);
+            let mut done = false;
+            for b in planner.poll(clock) {
+                flushes_until_rare += 1;
+                if b.items.iter().any(|(t, _)| t == "rare") {
+                    done = true;
+                    break;
+                }
+            }
+            if done {
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "rare request starved (backlog {ahead}, max_batch {max_batch})");
+        let bound = ahead / max_batch + 2;
+        assert!(
+            flushes_until_rare <= bound,
+            "rare served after {flushes_until_rare} flushes, bound {bound} \
+             (backlog {ahead}, max_batch {max_batch})"
+        );
     });
 }
 

@@ -1,0 +1,706 @@
+//! Fused multi-task engine integration tests (test preset, native
+//! backend) — the acceptance path for `ExecMode::Fused`:
+//!
+//! * **per-row parity**: a mixed batch (cls + lnonly + reg + span
+//!   segments) through `FusedBackend::fused_forward` produces raw head
+//!   outputs within 1e-5 of the per-task `*_fwd_*` executables, row by
+//!   row, regardless of segment order;
+//! * **throughput**: on the many-tasks/low-rate shape (one row per task)
+//!   the fused engine serves the same rows ≥2× faster than the per-task
+//!   path, which pads every row to the artifact batch;
+//! * **occupancy**: driving the same wave trace through a fused
+//!   `coordinator::Server` yields strictly higher mean batch occupancy
+//!   than per-task mode, with correct predictions and genuinely mixed
+//!   batches;
+//! * **hot registration**: a task registered while fused traffic flows
+//!   becomes gatherable immediately, without pausing other tasks;
+//! * **validation**: malformed banks fail `prepare_task` with
+//!   descriptive errors naming the offending leaf/size — at registration
+//!   time, not inside `execute`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{mpsc, Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+use adapterbert::coordinator::server::Request;
+use adapterbert::coordinator::{
+    ExecMode, FlushPolicy, Server, ServerConfig, ServerMetrics,
+};
+use adapterbert::data::grammar::World;
+use adapterbert::data::tasks::{self, TaskData, TaskKind, TaskSpec};
+use adapterbert::eval::{
+    fused_bank, fwd_param_banks, predict_split, Predictions, TaskModel,
+};
+use adapterbert::model::params::NamedTensors;
+use adapterbert::runtime::{
+    Bank, Executable, FusedSegment, FusedTaskBank, RowOutput, Runtime,
+};
+use adapterbert::store::AdapterStore;
+use adapterbert::train::{self, PretrainConfig, TrainConfig};
+use adapterbert::util::tensor::Tensor;
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(
+        Runtime::open(
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")),
+            "test",
+        )
+        .expect("open test preset (built-in presets synthesize their manifest)"),
+    )
+}
+
+fn world(rt: &Runtime) -> World {
+    World::new(rt.manifest.dims.vocab, 0)
+}
+
+fn pretrained_base(rt: &Arc<Runtime>) -> NamedTensors {
+    static BASE: OnceLock<NamedTensors> = OnceLock::new();
+    BASE.get_or_init(|| {
+        train::load_or_pretrain(
+            rt,
+            &world(rt),
+            &PretrainConfig { steps: 3000, log_every: 0, ..Default::default() },
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs/base_test.bank")),
+        )
+        .unwrap()
+    })
+    .clone()
+}
+
+fn cls_spec(name: &str, seed: u64) -> TaskSpec {
+    TaskSpec {
+        name: name.to_string(),
+        kind: TaskKind::Cls { n_classes: 2, pair: false },
+        metric: tasks::Metric::Accuracy,
+        n_train: 240,
+        n_val: 48,
+        n_test: 48,
+        purity: 0.85,
+        noise: 0.0,
+        seed,
+    }
+}
+
+fn train_cls(
+    rt: &Arc<Runtime>,
+    base: &NamedTensors,
+    name: &str,
+    seed: u64,
+    exe: &str,
+) -> (TaskModel, TaskData, f64) {
+    let spec = cls_spec(name, seed);
+    let data = tasks::generate(&world(rt), &spec, rt.manifest.dims.seq);
+    let cfg = TrainConfig::new(exe, 1e-3, 4, 0);
+    let res = train::train_task(rt, &cfg, &data, base).unwrap();
+    (res.model, data, res.val_score)
+}
+
+fn class_preds(
+    rt: &Arc<Runtime>,
+    model: &TaskModel,
+    base: &NamedTensors,
+    split: &tasks::Split,
+) -> Vec<usize> {
+    match predict_split(rt, model, base, split, 2, None).unwrap() {
+        Predictions::Class(v) => v,
+        other => panic!("expected class predictions, got {other:?}"),
+    }
+}
+
+/// `(tokens, type_ids, attn_mask)` for one split row, server-style.
+type RowIn = (Vec<i32>, Vec<i32>, Vec<f32>);
+
+fn row_from_split(split: &tasks::Split, row: usize, seq: usize) -> RowIn {
+    let tokens = split.row_tokens(row).to_vec();
+    let mask: Vec<f32> = tokens
+        .iter()
+        .map(|&t| if t == 0 { 0.0 } else { 1.0 })
+        .collect();
+    (tokens, vec![0; seq], mask)
+}
+
+/// The per-task reference path, exactly as the server executes it: the
+/// task's `*_fwd_*` executable with rows padded to the artifact batch.
+struct RefExec {
+    exe: Arc<Executable>,
+    params: Vec<Bank>,
+    kind: String,
+}
+
+fn build_ref(rt: &Arc<Runtime>, model: &TaskModel, base: &NamedTensors) -> RefExec {
+    RefExec {
+        exe: rt.load(&model.fwd_name()).unwrap(),
+        params: fwd_param_banks(rt, model, base, None).unwrap(),
+        kind: model.kind.clone(),
+    }
+}
+
+fn run_ref(rt: &Arc<Runtime>, r: &RefExec, rows: &[RowIn]) -> Vec<RowOutput> {
+    let b = r.exe.spec.batch;
+    let seq = rt.manifest.dims.seq;
+    assert!(rows.len() <= b, "reference path is single-batch");
+    let n = rows.len();
+    let mut tokens = Vec::with_capacity(b * seq);
+    let mut type_ids = Vec::with_capacity(b * seq);
+    let mut mask = Vec::with_capacity(b * seq);
+    for (t, s, m) in rows {
+        tokens.extend_from_slice(t);
+        type_ids.extend_from_slice(s);
+        mask.extend_from_slice(m);
+    }
+    for _ in n..b {
+        tokens.extend(std::iter::repeat(0).take(seq));
+        type_ids.extend(std::iter::repeat(0).take(seq));
+        let mut mrow = vec![0.0f32; seq];
+        mrow[0] = 1.0;
+        mask.extend(mrow);
+    }
+    let tok_bank = vec![Tensor::i32(vec![b, seq], tokens)];
+    let seg_bank = vec![Tensor::i32(vec![b, seq], type_ids)];
+    let mask_bank = vec![Tensor::f32(vec![b, seq], mask)];
+    let mut all: Vec<&Bank> = r.params.iter().collect();
+    all.push(&tok_bank);
+    all.push(&seg_bank);
+    all.push(&mask_bank);
+    let out = r.exe.run(&all).unwrap();
+    match r.kind.as_str() {
+        "cls" => {
+            let logits = &out[0][0];
+            let c = logits.shape[1];
+            (0..n)
+                .map(|row| {
+                    RowOutput::Class(logits.as_f32()[row * c..(row + 1) * c].to_vec())
+                })
+                .collect()
+        }
+        "reg" => {
+            let scores = out[0][0].as_f32();
+            (0..n).map(|row| RowOutput::Score(scores[row])).collect()
+        }
+        "span" => {
+            let start = &out[0][0];
+            let end = &out[1][0];
+            let s = start.shape[1];
+            (0..n)
+                .map(|row| {
+                    RowOutput::Span(
+                        start.as_f32()[row * s..(row + 1) * s].to_vec(),
+                        end.as_f32()[row * s..(row + 1) * s].to_vec(),
+                    )
+                })
+                .collect()
+        }
+        other => panic!("unexpected kind {other}"),
+    }
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= tol, "{ctx}[{i}]: fused {x} vs per-task {y}");
+    }
+}
+
+fn assert_rows_close(got: &RowOutput, want: &RowOutput, tol: f32, ctx: &str) {
+    match (got, want) {
+        (RowOutput::Class(a), RowOutput::Class(b)) => assert_close(a, b, tol, ctx),
+        (RowOutput::Score(a), RowOutput::Score(b)) => {
+            assert!((a - b).abs() <= tol, "{ctx}: fused {a} vs per-task {b}");
+        }
+        (RowOutput::Span(a1, a2), RowOutput::Span(b1, b2)) => {
+            assert_close(a1, b1, tol, &format!("{ctx}.start"));
+            assert_close(a2, b2, tol, &format!("{ctx}.end"));
+        }
+        other => panic!("{ctx}: head kind mismatch {other:?}"),
+    }
+}
+
+/// Four small adapter-tuned classification tenants, trained once and
+/// shared by the throughput/occupancy and hot-registration tests.
+struct Fixture {
+    models: Vec<(String, TaskModel, TaskData, f64)>,
+}
+
+fn fixture() -> &'static Fixture {
+    static F: OnceLock<Fixture> = OnceLock::new();
+    F.get_or_init(|| {
+        let rt = runtime();
+        let base = pretrained_base(&rt);
+        let models = ["fta", "ftb", "ftc", "ftd"]
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let (m, d, v) =
+                    train_cls(&rt, &base, name, 61 + i as u64, "cls_train_adapter_m4");
+                (name.to_string(), m, d, v)
+            })
+            .collect();
+        Fixture { models }
+    })
+}
+
+/// Headline parity: one mixed batch across all three head kinds and both
+/// fusable variants matches the per-task executables to ≤ 1e-5 per row,
+/// in either segment order.
+#[test]
+fn fused_forward_matches_per_task_per_row() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let seq = rt.manifest.dims.seq;
+
+    let (cls_model, cls_data, _) =
+        train_cls(&rt, &base, "fpa", 51, "cls_train_adapter_m4");
+    let (ln_model, ln_data, _) = train_cls(&rt, &base, "fpl", 52, "cls_train_lnonly");
+    let reg_spec = TaskSpec {
+        name: "fpr".to_string(),
+        kind: TaskKind::Reg,
+        metric: tasks::Metric::Spearman,
+        n_train: 160,
+        n_val: 32,
+        n_test: 32,
+        purity: 0.5,
+        noise: 0.0,
+        seed: 53,
+    };
+    let span_spec = TaskSpec {
+        name: "fps".to_string(),
+        kind: TaskKind::Span,
+        metric: tasks::Metric::SpanF1,
+        n_train: 160,
+        n_val: 32,
+        n_test: 32,
+        purity: 0.9,
+        noise: 0.0,
+        seed: 54,
+    };
+    let reg_data = tasks::generate(&world(&rt), &reg_spec, seq);
+    let span_data = tasks::generate(&world(&rt), &span_spec, seq);
+    let reg_model = train::train_task(
+        &rt,
+        &TrainConfig::new("reg_train_adapter_m8", 1e-3, 2, 0),
+        &reg_data,
+        &base,
+    )
+    .unwrap()
+    .model;
+    let span_model = train::train_task(
+        &rt,
+        &TrainConfig::new("span_train_adapter_m8", 1e-3, 2, 0),
+        &span_data,
+        &base,
+    )
+    .unwrap()
+    .model;
+
+    // (model, n_classes, rows) per segment — mixed sizes on purpose
+    let groups: Vec<(&TaskModel, usize, Vec<RowIn>)> = vec![
+        (
+            &cls_model,
+            2,
+            (0..3).map(|r| row_from_split(&cls_data.test, r, seq)).collect(),
+        ),
+        (
+            &ln_model,
+            2,
+            (0..2).map(|r| row_from_split(&ln_data.test, r, seq)).collect(),
+        ),
+        (
+            &reg_model,
+            0,
+            (0..2).map(|r| row_from_split(&reg_data.test, r, seq)).collect(),
+        ),
+        (
+            &span_model,
+            0,
+            (0..1).map(|r| row_from_split(&span_data.test, r, seq)).collect(),
+        ),
+    ];
+
+    let engine = rt.fused().expect("native backend exposes the fused engine");
+    let mut orders: Vec<Vec<usize>> = vec![(0..groups.len()).collect()];
+    orders.push((0..groups.len()).rev().collect());
+    for order in orders {
+        let mut segments: Vec<FusedSegment> = Vec::new();
+        let mut tokens = Vec::new();
+        let mut type_ids = Vec::new();
+        let mut mask = Vec::new();
+        for &gi in &order {
+            let (model, n_classes, rows) = &groups[gi];
+            let bank = Arc::new(fused_bank(&rt, model, &base, *n_classes).unwrap());
+            segments.push(FusedSegment { bank, len: rows.len() });
+            for (t, s, m) in rows {
+                tokens.extend_from_slice(t);
+                type_ids.extend_from_slice(s);
+                mask.extend_from_slice(m);
+            }
+        }
+        let fused_out = engine
+            .fused_forward(&base.map, &segments, &tokens, &type_ids, &mask)
+            .unwrap();
+        assert_eq!(fused_out.len(), 8);
+        let mut idx = 0usize;
+        for &gi in &order {
+            let (model, _, rows) = &groups[gi];
+            let reference = build_ref(&rt, model, &base);
+            let want = run_ref(&rt, &reference, rows);
+            for (ri, w) in want.iter().enumerate() {
+                let ctx = format!("order {order:?} group {gi} row {ri}");
+                assert_rows_close(&fused_out[idx], w, 1e-5, &ctx);
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Engine throughput on the many-tasks/low-rate shape: four tasks, one
+/// row each. Per-task execution pads each row to the artifact batch (8
+/// row-slots per real row); the fused forward runs exactly 4 rows.
+/// Acceptance floor is 2×; the expected ratio is ~8×.
+#[test]
+fn fused_engine_at_least_2x_on_low_rate_shape() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let seq = rt.manifest.dims.seq;
+    let fix = fixture();
+
+    let engine = rt.fused().unwrap();
+    let refs: Vec<RefExec> =
+        fix.models.iter().map(|(_, m, _, _)| build_ref(&rt, m, &base)).collect();
+    let rows: Vec<RowIn> = fix
+        .models
+        .iter()
+        .map(|(_, _, d, _)| row_from_split(&d.test, 0, seq))
+        .collect();
+    let banks: Vec<Arc<FusedTaskBank>> = fix
+        .models
+        .iter()
+        .map(|(_, m, _, _)| Arc::new(fused_bank(&rt, m, &base, 2).unwrap()))
+        .collect();
+    let segments: Vec<FusedSegment> = banks
+        .iter()
+        .map(|b| FusedSegment { bank: b.clone(), len: 1 })
+        .collect();
+    let mut tokens = Vec::new();
+    let mut type_ids = Vec::new();
+    let mut mask = Vec::new();
+    for (t, s, m) in &rows {
+        tokens.extend_from_slice(t);
+        type_ids.extend_from_slice(s);
+        mask.extend_from_slice(m);
+    }
+
+    // warm both paths (compile cache, page faults), and check agreement
+    let warm_fused = engine
+        .fused_forward(&base.map, &segments, &tokens, &type_ids, &mask)
+        .unwrap();
+    for (i, r) in refs.iter().enumerate() {
+        let want = run_ref(&rt, r, std::slice::from_ref(&rows[i]));
+        assert_rows_close(&warm_fused[i], &want[0], 1e-5, &format!("warmup row {i}"));
+    }
+
+    let reps = 15;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for (i, r) in refs.iter().enumerate() {
+            run_ref(&rt, r, std::slice::from_ref(&rows[i]));
+        }
+    }
+    let per_task_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    for _ in 0..reps {
+        engine
+            .fused_forward(&base.map, &segments, &tokens, &type_ids, &mask)
+            .unwrap();
+    }
+    let fused_s = t1.elapsed().as_secs_f64();
+    assert!(
+        per_task_s >= 2.0 * fused_s,
+        "fused engine must be ≥2× on the low-rate shape: per-task {per_task_s:.4}s \
+         vs fused {fused_s:.4}s over {reps} reps"
+    );
+}
+
+/// Drive the same low-rate wave trace through a per-task and a fused
+/// server: every prediction must match offline eval in both modes, and
+/// fused mode must batch across tasks (mixed batch sizes observed,
+/// strictly higher mean occupancy, fused_batches > 0).
+#[test]
+fn fused_server_occupancy_beats_per_task_on_same_trace() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let seq = rt.manifest.dims.seq;
+    let fix = fixture();
+
+    let store = Arc::new(AdapterStore::in_memory());
+    let mut classes = BTreeMap::new();
+    for (name, model, _, val) in &fix.models {
+        store.register(name, model, *val).unwrap();
+        classes.insert(name.clone(), 2);
+    }
+    let offline: Vec<Vec<usize>> = fix
+        .models
+        .iter()
+        .map(|(_, m, d, _)| class_preds(&rt, m, &base, &d.test))
+        .collect();
+
+    let run_trace = |mode: ExecMode| -> (ServerMetrics, usize) {
+        let server = Server::start(
+            rt.clone(),
+            &store,
+            &base,
+            &classes,
+            ServerConfig {
+                flush: FlushPolicy {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(2),
+                },
+                executors: 1,
+                queue_capacity: 256,
+                mode,
+            },
+        )
+        .unwrap();
+        assert_eq!(server.mode(), mode);
+        let waves = 8usize;
+        let mut pending: Vec<(usize, usize, mpsc::Receiver<_>)> = Vec::new();
+        for wave in 0..waves {
+            for (ti, (name, _, data, _)) in fix.models.iter().enumerate() {
+                let row = wave % data.test.n;
+                let (tokens, type_ids, mask) = row_from_split(&data.test, row, seq);
+                let (reply, rx) = mpsc::channel();
+                server
+                    .submit_blocking(Request {
+                        task: name.clone(),
+                        tokens,
+                        segments: type_ids,
+                        attn_mask: mask,
+                        reply,
+                        submitted: Instant::now(),
+                    })
+                    .unwrap();
+                pending.push((ti, row, rx));
+            }
+            // waves spaced past max_delay: per-task queues hold ≤1 row
+            std::thread::sleep(Duration::from_millis(4));
+        }
+        let mut max_batch_size = 0usize;
+        for (ti, row, rx) in pending {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(
+                resp.prediction.class(),
+                Some(offline[ti][row]),
+                "mode {mode:?} task {ti} row {row}: served prediction diverged"
+            );
+            max_batch_size = max_batch_size.max(resp.batch_size);
+        }
+        (server.shutdown(), max_batch_size)
+    };
+
+    let (per_task, per_task_max_bs) = run_trace(ExecMode::PerTask);
+    let (fused, fused_max_bs) = run_trace(ExecMode::Fused);
+
+    assert_eq!(per_task.fused_batches, 0);
+    assert!(fused.fused_batches > 0, "no batch ran through the fused engine");
+    // per-task mode can never mix tasks: with one row per task per wave
+    // its batches stay at ≤ waves-that-backed-up rows; fused mode packs
+    // a whole wave (4 tasks) into one batch
+    assert!(
+        fused_max_bs > 1,
+        "fused mode never built a mixed batch (max size {fused_max_bs})"
+    );
+    assert!(
+        fused_max_bs >= per_task_max_bs,
+        "fused batches ({fused_max_bs}) smaller than per-task ({per_task_max_bs})"
+    );
+    assert!(
+        fused.mean_occupancy() > per_task.mean_occupancy(),
+        "fused occupancy {:.3} must beat per-task {:.3}",
+        fused.mean_occupancy(),
+        per_task.mean_occupancy()
+    );
+}
+
+/// Hot registration while fused traffic flows: the new task's gatherable
+/// bank installs without pausing the others, and its rows ride mixed
+/// batches immediately.
+#[test]
+fn fused_hot_registration_is_gatherable_immediately() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let seq = rt.manifest.dims.seq;
+    let fix = fixture();
+
+    // three tenants up front, the fourth arrives live
+    let store = Arc::new(AdapterStore::in_memory());
+    let mut classes = BTreeMap::new();
+    for (name, model, _, val) in fix.models.iter().take(3) {
+        store.register(name, model, *val).unwrap();
+        classes.insert(name.clone(), 2);
+    }
+    let (late_name, late_model, late_data, _) = &fix.models[3];
+    let late_offline = class_preds(&rt, late_model, &base, &late_data.test);
+
+    let server = Arc::new(
+        Server::start(
+            rt.clone(),
+            &store,
+            &base,
+            &classes,
+            ServerConfig {
+                flush: FlushPolicy {
+                    max_batch: 8,
+                    max_delay: Duration::from_millis(2),
+                },
+                executors: 1,
+                queue_capacity: 256,
+                mode: ExecMode::Fused,
+            },
+        )
+        .unwrap(),
+    );
+    assert_eq!(server.mode(), ExecMode::Fused);
+    assert_eq!(server.tasks().len(), 3);
+
+    // background traffic on the first three tasks
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let traffic = {
+        let server = server.clone();
+        let stop = stop.clone();
+        let rows: Vec<(String, RowIn)> = fix
+            .models
+            .iter()
+            .take(3)
+            .map(|(name, _, d, _)| (name.clone(), row_from_split(&d.test, 0, seq)))
+            .collect();
+        std::thread::spawn(move || {
+            let (reply, rx) = mpsc::channel();
+            let mut sent = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                for (name, (tokens, type_ids, mask)) in &rows {
+                    server
+                        .submit_blocking(Request {
+                            task: name.clone(),
+                            tokens: tokens.clone(),
+                            segments: type_ids.clone(),
+                            attn_mask: mask.clone(),
+                            reply: reply.clone(),
+                            submitted: Instant::now(),
+                        })
+                        .unwrap();
+                    sent += 1;
+                }
+                std::thread::sleep(Duration::from_millis(3));
+            }
+            drop(reply);
+            let mut got = 0usize;
+            while got < sent && rx.recv_timeout(Duration::from_secs(30)).is_ok() {
+                got += 1;
+            }
+            assert_eq!(got, sent, "background traffic lost replies");
+        })
+    };
+
+    std::thread::sleep(Duration::from_millis(30));
+    // hot-register the fourth task mid-traffic
+    server.register_live(late_name, 2, late_model).unwrap();
+    assert_eq!(server.tasks().len(), 4);
+
+    // its rows serve correctly, through the fused path, right away
+    for row in 0..8usize.min(late_data.test.n) {
+        let (tokens, type_ids, mask) = row_from_split(&late_data.test, row, seq);
+        let (reply, rx) = mpsc::channel();
+        server
+            .submit_blocking(Request {
+                task: late_name.clone(),
+                tokens,
+                segments: type_ids,
+                attn_mask: mask,
+                reply,
+                submitted: Instant::now(),
+            })
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(
+            resp.prediction.class(),
+            Some(late_offline[row]),
+            "hot-registered task row {row}"
+        );
+    }
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    traffic.join().unwrap();
+    let server = Arc::try_unwrap(server).ok().expect("no other refs");
+    let metrics = server.shutdown();
+    assert!(metrics.fused_batches > 0);
+}
+
+/// Registration-time validation: malformed banks fail `prepare_task`
+/// with descriptive errors instead of surfacing inside `execute`.
+#[test]
+fn malformed_banks_fail_registration_with_descriptive_errors() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let fix = fixture();
+    let (_, good, _, _) = &fix.models[0];
+
+    let store = Arc::new(AdapterStore::in_memory());
+    let server = Server::start(
+        rt.clone(),
+        &store,
+        &base,
+        &BTreeMap::new(),
+        ServerConfig::default(),
+    )
+    .unwrap();
+
+    // the genuine bank is accepted
+    assert!(server.prepare_task(2, good).is_ok());
+
+    // (a) adapter size not in the preset → error names available sizes
+    let mut bad = good.clone();
+    bad.m = Some(5);
+    let err = server.prepare_task(2, &bad).err().expect("must fail").to_string();
+    assert!(err.contains("m=5"), "{err}");
+    assert!(err.contains("available sizes"), "{err}");
+
+    // (b) a leaf with the wrong shape → error names the leaf
+    let mut bad = good.clone();
+    let (key, tensor) = {
+        let (k, t) = bad
+            .trained
+            .map
+            .iter()
+            .find(|(k, _)| k.contains("w_down"))
+            .map(|(k, t)| (k.clone(), t.clone()))
+            .unwrap();
+        (k, t)
+    };
+    let truncated = Tensor::f32(vec![1], vec![tensor.as_f32()[0]]);
+    bad.trained.map.insert(key.clone(), truncated);
+    let err = server.prepare_task(2, &bad).err().expect("must fail").to_string();
+    assert!(err.contains(&key), "{err}");
+    assert!(err.contains("shape"), "{err}");
+
+    // (c) an extra leaf that is not part of the trained group
+    let mut bad = good.clone();
+    bad.trained.insert("bogus/extra", Tensor::f32(vec![2], vec![0.0; 2]));
+    let err = server.prepare_task(2, &bad).err().expect("must fail").to_string();
+    assert!(err.contains("bogus/extra"), "{err}");
+
+    // (d) a missing required leaf
+    let mut bad = good.clone();
+    bad.trained.map.remove("head/w");
+    let err = server.prepare_task(2, &bad).err().expect("must fail").to_string();
+    assert!(err.contains("head/w"), "{err}");
+
+    // (e) unknown variant
+    let mut bad = good.clone();
+    bad.variant = "lora".to_string();
+    let err = server.prepare_task(2, &bad).err().expect("must fail").to_string();
+    assert!(err.contains("lora"), "{err}");
+
+    // (f) cls head outside the padded class range
+    let err = server.prepare_task(0, good).err().expect("must fail").to_string();
+    assert!(err.contains("n_classes"), "{err}");
+}

@@ -115,6 +115,7 @@ fn quick_server(
             },
             executors: 2,
             queue_capacity: 256,
+            ..Default::default()
         },
     )
     .unwrap()
@@ -235,9 +236,9 @@ fn gateway_hot_registration_mid_traffic() {
         tasks: vec!["gwa".into(), "gwb".into(), "gwc".into()],
         concurrency: 3,
         requests: 60,
-        duration: None,
         words_per_request: 8,
         seed: 3,
+        ..Default::default()
     };
     let report = loadgen::run(&cfg).unwrap();
     assert_eq!(report.requests, 60, "every loadgen request answered");
@@ -250,7 +251,7 @@ fn gateway_hot_registration_mid_traffic() {
     let text = std::fs::read_to_string(out).unwrap();
     let j = Json::parse(text.trim()).unwrap();
     assert_eq!(j.at("bench").as_str(), Some("serve"));
-    assert_eq!(j.at("schema_version").as_usize(), Some(1));
+    assert_eq!(j.at("schema_version").as_usize(), Some(2));
     assert_eq!(j.at("totals").at("requests").as_usize(), Some(60));
     assert!(j.at("totals").at("throughput_rps").as_f64().unwrap() > 0.0);
     for key in ["mean", "p50", "p95", "p99", "max"] {
@@ -259,6 +260,13 @@ fn gateway_hot_registration_mid_traffic() {
             "totals.latency_ms.{key}"
         );
     }
+    // schema v2: batch-size histogram + server occupancy window
+    assert!(
+        j.at("totals").at("batch_size_hist").as_obj().is_some(),
+        "totals.batch_size_hist missing"
+    );
+    assert_eq!(j.at("server").at("exec_mode").as_str(), Some("per_task"));
+    assert!(j.at("server").at("mean_occupancy").as_f64().is_some());
     for task in ["gwa", "gwb", "gwc"] {
         let t = j.at("per_task").at(task);
         assert!(t.at("requests").as_usize().unwrap() > 0, "{task} in per_task");
