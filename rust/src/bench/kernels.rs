@@ -1,0 +1,440 @@
+//! Kernel benchmark suite: the `bench kernels` subcommand and the
+//! `BENCH_kernels.json` perf-trajectory entry.
+//!
+//! Three sections, all on the native backend:
+//!
+//! * **GEMM sweep** — GFLOP/s for every matmul shape the preset's
+//!   executables actually hit (QKV/output projections, both FFN halves,
+//!   the classifier head, the tied MLM vocab projection), comparing the
+//!   single-threaded naive i-k-j reference kernel against the blocked
+//!   panel-packed kernel across a thread-count sweep (explicit pools, so
+//!   the sweep is independent of `ADAPTERBERT_THREADS`).
+//! * **Wall times** — end-to-end forward, fused mixed-batch forward and
+//!   full train-step latency on synthesized banks.
+//! * **Summary** — the largest shape's blocked-vs-naive speedup per
+//!   thread count, the number the CI smoke job asserts on.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::model::init;
+use crate::runtime::fused::LayerLn;
+use crate::runtime::native::kernels as k;
+use crate::runtime::native::pool::Pool;
+use crate::runtime::native::NativeBackend;
+use crate::runtime::synth;
+use crate::runtime::{Backend, BackendKind, Bank, FusedSegment, FusedTaskBank, Runtime};
+use crate::util::json::Json;
+use crate::util::tensor::{DType, Tensor};
+
+/// What to measure.
+#[derive(Debug, Clone)]
+pub struct KernelBenchConfig {
+    /// Built-in preset whose shapes are swept (`default` | `test`).
+    pub preset: String,
+    /// Thread counts for the blocked-GEMM sweep (explicit pools).
+    pub threads: Vec<usize>,
+    /// Trimmed timing budget (used by the schema test / CI smoke).
+    pub quick: bool,
+}
+
+impl Default for KernelBenchConfig {
+    fn default() -> Self {
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut threads = vec![1, 2, 4];
+        if !threads.contains(&avail) {
+            threads.push(avail);
+        }
+        threads.sort_unstable();
+        threads.dedup();
+        KernelBenchConfig { preset: "default".to_string(), threads, quick: false }
+    }
+}
+
+/// One GEMM shape's measurements.
+#[derive(Debug, Clone)]
+pub struct GemmBench {
+    /// Which executable site this shape comes from.
+    pub name: String,
+    pub n: usize,
+    pub k: usize,
+    pub m: usize,
+    /// FLOPs per call (`2·n·k·m`).
+    pub flops: f64,
+    /// Naive single-threaded reference throughput.
+    pub naive_st_gflops: f64,
+    /// Blocked kernel throughput per thread count, ascending.
+    pub blocked_gflops: Vec<(usize, f64)>,
+    /// True for the largest shape (by FLOPs) — the CI assertion target.
+    pub largest: bool,
+}
+
+/// The whole `bench kernels` run.
+#[derive(Debug, Clone)]
+pub struct KernelBenchReport {
+    pub preset: String,
+    pub threads_available: usize,
+    pub gemm: Vec<GemmBench>,
+    /// Per-task serving forward (`cls_fwd_adapter_m8`), ms per call.
+    pub wall_forward_ms: f64,
+    /// Fused two-segment mixed-batch forward, ms per call.
+    pub wall_fused_ms: f64,
+    /// Full train step (`cls_train_adapter_m8`), ms per call.
+    pub wall_train_ms: f64,
+}
+
+impl KernelBenchReport {
+    /// The largest swept shape.
+    pub fn largest(&self) -> &GemmBench {
+        self.gemm.iter().find(|g| g.largest).expect("sweep is non-empty")
+    }
+
+    /// Blocked-vs-naive-ST speedup on the largest shape at `threads`.
+    pub fn speedup_at(&self, threads: usize) -> Option<f64> {
+        let l = self.largest();
+        l.blocked_gflops
+            .iter()
+            .find(|(t, _)| *t == threads)
+            .map(|(_, g)| g / l.naive_st_gflops)
+    }
+
+    /// The `BENCH_kernels.json` document (schema v1).
+    pub fn to_json(&self) -> Json {
+        let gemm = self
+            .gemm
+            .iter()
+            .map(|g| {
+                let mut by_threads = std::collections::BTreeMap::new();
+                for (t, gf) in &g.blocked_gflops {
+                    by_threads.insert(t.to_string(), Json::Num(*gf));
+                }
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(g.name.clone()));
+                o.insert("n".to_string(), Json::Num(g.n as f64));
+                o.insert("k".to_string(), Json::Num(g.k as f64));
+                o.insert("m".to_string(), Json::Num(g.m as f64));
+                o.insert("flops".to_string(), Json::Num(g.flops));
+                o.insert("naive_st_gflops".to_string(), Json::Num(g.naive_st_gflops));
+                o.insert("blocked_gflops".to_string(), Json::Obj(by_threads));
+                o.insert("largest".to_string(), Json::Bool(g.largest));
+                Json::Obj(o)
+            })
+            .collect::<Vec<_>>();
+        let l = self.largest();
+        let mut speedups = std::collections::BTreeMap::new();
+        for (t, _) in &l.blocked_gflops {
+            if let Some(s) = self.speedup_at(*t) {
+                speedups.insert(t.to_string(), Json::Num(s));
+            }
+        }
+        let mut largest = std::collections::BTreeMap::new();
+        largest.insert("name".to_string(), Json::Str(l.name.clone()));
+        largest.insert("flops".to_string(), Json::Num(l.flops));
+        largest.insert("naive_st_gflops".to_string(), Json::Num(l.naive_st_gflops));
+        largest.insert("speedup_by_threads".to_string(), Json::Obj(speedups));
+        Json::obj(vec![
+            ("bench", Json::str("kernels")),
+            ("schema_version", Json::num(1.0)),
+            ("preset", Json::str(&self.preset)),
+            ("threads_available", Json::num(self.threads_available as f64)),
+            ("gemm", Json::Arr(gemm)),
+            ("largest", Json::Obj(largest)),
+            (
+                "wall_ms",
+                Json::obj(vec![
+                    ("forward", Json::num(self.wall_forward_ms)),
+                    ("fused", Json::num(self.wall_fused_ms)),
+                    ("train_step", Json::num(self.wall_train_ms)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Atomically write the report next to the other `BENCH_*.json` files.
+pub fn write_report(path: &Path, report: &Json) -> Result<()> {
+    crate::bench::loadgen::write_report(path, report)
+}
+
+fn seeded(n: usize, seed: f32) -> Vec<f32> {
+    (0..n).map(|i| ((i as f32 + seed) * 0.37).sin() * 0.25).collect()
+}
+
+/// Best-of-reps throughput for `f`, which performs `flops` float ops.
+fn bench_gflops(flops: f64, min_time: f64, reps: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut best = 0.0f64;
+    for _ in 0..reps {
+        let mut calls = 0u32;
+        let t0 = Instant::now();
+        loop {
+            f();
+            calls += 1;
+            if t0.elapsed().as_secs_f64() >= min_time {
+                break;
+            }
+        }
+        let gflops = flops * calls as f64 / t0.elapsed().as_secs_f64() / 1e9;
+        best = best.max(gflops);
+    }
+    best
+}
+
+/// Minimum wall time per call over `iters` calls of `f`.
+fn bench_wall_ms(iters: usize, mut f: impl FnMut() -> Result<()>) -> Result<f64> {
+    f()?; // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f()?;
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(best)
+}
+
+/// Deterministic non-zero banks for every input group of an executable:
+/// parameter groups by role-aware init, data groups by small patterned
+/// values. Shared with `tests/backend_parity.rs` so the bench and the
+/// parity test exercise identical inputs.
+pub fn banks_for(rt: &Runtime, name: &str) -> Result<Vec<Bank>> {
+    let spec = rt.manifest.exe(name)?.clone();
+    let groups = spec.input_groups();
+    let mut out = Vec::with_capacity(groups.len());
+    for (gi, group) in groups.iter().enumerate() {
+        let range = spec.input_group_range(group)?;
+        let param_group =
+            matches!(*group, "base" | "frozen" | "trained" | "adapters" | "head");
+        if param_group {
+            let named = init::init_group(&spec, group, 7 + gi as u64, 1e-2)?;
+            out.push(named.to_bank(&spec, group)?);
+            continue;
+        }
+        let bank: Bank = spec.inputs[range]
+            .iter()
+            .map(|leaf| match (leaf.name.as_str(), leaf.dtype) {
+                ("step", _) => Tensor::scalar_i32(1),
+                ("lr", _) => Tensor::scalar_f32(1e-3),
+                (n, DType::F32) if n.ends_with("attn_mask") => {
+                    Tensor::full_f32(&leaf.shape, 1.0)
+                }
+                (n, DType::F32) if n.ends_with("class_valid") => {
+                    let mut v = vec![0.0f32; leaf.elements()];
+                    v[0] = 1.0;
+                    v[1] = 1.0;
+                    Tensor::f32(leaf.shape.clone(), v)
+                }
+                (n, DType::F32) if n.ends_with("gates") => {
+                    Tensor::full_f32(&leaf.shape, 1.0)
+                }
+                (n, DType::F32) if n.ends_with("weights") => {
+                    Tensor::full_f32(&leaf.shape, 1.0)
+                }
+                (_, DType::F32) => Tensor::zeros(&leaf.shape, DType::F32),
+                (n, DType::I32) if n.ends_with("tokens") => Tensor::i32(
+                    leaf.shape.clone(),
+                    (0..leaf.elements()).map(|i| (i % 11) as i32).collect(),
+                ),
+                (n, DType::I32) if n.ends_with("labels") => Tensor::i32(
+                    leaf.shape.clone(),
+                    (0..leaf.elements()).map(|i| (i % 2) as i32).collect(),
+                ),
+                (_, DType::I32) => Tensor::zeros(&leaf.shape, DType::I32),
+            })
+            .collect();
+        out.push(bank);
+    }
+    Ok(out)
+}
+
+/// A minimal lnonly-style fused bank (identity LayerNorms, random head).
+fn demo_bank(dims: &crate::runtime::ModelDims) -> FusedTaskBank {
+    let d = dims.d;
+    let ln = || LayerLn {
+        ln1_g: Tensor::full_f32(&[d], 1.0),
+        ln1_b: Tensor::zeros(&[d], DType::F32),
+        ln2_g: Tensor::full_f32(&[d], 1.0),
+        ln2_b: Tensor::zeros(&[d], DType::F32),
+    };
+    FusedTaskBank {
+        kind: "cls".to_string(),
+        n_classes: dims.max_classes,
+        embed_ln_g: Tensor::full_f32(&[d], 1.0),
+        embed_ln_b: Tensor::zeros(&[d], DType::F32),
+        layer_ln: (0..dims.n_layers).map(|_| ln()).collect(),
+        adapters: None,
+        head_w: Tensor::f32(vec![d, dims.max_classes], seeded(d * dims.max_classes, 9.0)),
+        head_b: Tensor::zeros(&[dims.max_classes], DType::F32),
+    }
+}
+
+/// Run the whole suite.
+pub fn run(cfg: &KernelBenchConfig) -> Result<KernelBenchReport> {
+    let ps = synth::builtin(&cfg.preset)
+        .with_context(|| format!("unknown preset {:?}", cfg.preset))?;
+    let d = &ps.dims;
+    let r = ps.batch * d.seq;
+    let shapes = [
+        ("qkv_proj", r, d.d, d.d),
+        ("ffn_in", r, d.d, d.ffn),
+        ("ffn_out", r, d.ffn, d.d),
+        ("cls_head", ps.batch, d.d, d.max_classes),
+        ("mlm_logits", ps.batch * d.mlm_positions, d.d, d.vocab),
+    ];
+    let largest_i = shapes
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, s)| s.1 * s.2 * s.3)
+        .map(|(i, _)| i)
+        .unwrap();
+    let (min_time, reps) = if cfg.quick { (0.02, 2) } else { (0.1, 3) };
+
+    let mut gemm = Vec::new();
+    for (i, &(name, n, kk, m)) in shapes.iter().enumerate() {
+        let a = seeded(n * kk, 1.0 + i as f32);
+        let b = seeded(kk * m, 2.0 + i as f32);
+        let flops = 2.0 * n as f64 * kk as f64 * m as f64;
+        let naive =
+            bench_gflops(flops, min_time, reps, || {
+                std::hint::black_box(k::matmul_naive(
+                    std::hint::black_box(&a),
+                    &b,
+                    n,
+                    kk,
+                    m,
+                ));
+            });
+        let mut blocked = Vec::new();
+        let mut out = vec![0.0f32; n * m];
+        for &t in &cfg.threads {
+            let pool = Pool::new(t);
+            let g = bench_gflops(flops, min_time, reps, || {
+                k::matmul_into_on(&pool, std::hint::black_box(&a), &b, &mut out, n, kk, m);
+                std::hint::black_box(&out);
+            });
+            blocked.push((t, g));
+        }
+        gemm.push(GemmBench {
+            name: name.to_string(),
+            n,
+            k: kk,
+            m,
+            flops,
+            naive_st_gflops: naive,
+            blocked_gflops: blocked,
+            largest: i == largest_i,
+        });
+    }
+
+    // wall times on the real executables (native backend, synth manifest)
+    let rt = Arc::new(Runtime::open_with(
+        Path::new("artifacts"),
+        &cfg.preset,
+        BackendKind::Native,
+    )?);
+    let iters = if cfg.quick { 2 } else { 5 };
+    let fwd_banks = banks_for(&rt, "cls_fwd_adapter_m8")?;
+    let fwd_refs: Vec<&Bank> = fwd_banks.iter().collect();
+    let fwd = rt.load("cls_fwd_adapter_m8")?;
+    let wall_forward_ms = bench_wall_ms(iters, || fwd.run(&fwd_refs).map(|_| ()))?;
+
+    let train_banks = banks_for(&rt, "cls_train_adapter_m8")?;
+    let train_refs: Vec<&Bank> = train_banks.iter().collect();
+    let train = rt.load("cls_train_adapter_m8")?;
+    let wall_train_ms = bench_wall_ms(iters, || train.run(&train_refs).map(|_| ()))?;
+
+    // fused mixed batch: two segments sharing one lnonly-style bank
+    let backend = NativeBackend::new(&rt.manifest);
+    let fused = backend.fused().context("native backend must support fused")?;
+    let base_spec = rt.manifest.exe("cls_fwd_base")?.clone();
+    let base = init::init_group(&base_spec, "base", 7, 1e-2)?;
+    let bank = Arc::new(demo_bank(&rt.manifest.dims));
+    let half = (ps.batch / 2).max(1);
+    let segments = vec![
+        FusedSegment { bank: Arc::clone(&bank), len: half },
+        FusedSegment { bank: Arc::clone(&bank), len: half },
+    ];
+    let rows = 2 * half;
+    let tokens: Vec<i32> =
+        (0..rows * d.seq).map(|i| (i % d.vocab) as i32).collect();
+    let type_ids = vec![0i32; rows * d.seq];
+    let mask = vec![1.0f32; rows * d.seq];
+    let wall_fused_ms = bench_wall_ms(iters, || {
+        fused
+            .fused_forward(&base.map, &segments, &tokens, &type_ids, &mask)
+            .map(|_| ())
+    })?;
+
+    Ok(KernelBenchReport {
+        preset: cfg.preset.clone(),
+        threads_available: std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        gemm,
+        wall_forward_ms,
+        wall_fused_ms,
+        wall_train_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_thread_sweep_is_sorted_and_deduped() {
+        let cfg = KernelBenchConfig::default();
+        let mut sorted = cfg.threads.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(cfg.threads, sorted);
+        assert!(cfg.threads.contains(&1) && cfg.threads.contains(&4));
+    }
+
+    #[test]
+    fn speedup_reads_the_largest_shape() {
+        let report = KernelBenchReport {
+            preset: "test".into(),
+            threads_available: 2,
+            gemm: vec![
+                GemmBench {
+                    name: "small".into(),
+                    n: 1,
+                    k: 1,
+                    m: 1,
+                    flops: 2.0,
+                    naive_st_gflops: 1.0,
+                    blocked_gflops: vec![(1, 9.0)],
+                    largest: false,
+                },
+                GemmBench {
+                    name: "big".into(),
+                    n: 8,
+                    k: 8,
+                    m: 8,
+                    flops: 1024.0,
+                    naive_st_gflops: 2.0,
+                    blocked_gflops: vec![(1, 3.0), (4, 8.0)],
+                    largest: true,
+                },
+            ],
+            wall_forward_ms: 1.0,
+            wall_fused_ms: 2.0,
+            wall_train_ms: 3.0,
+        };
+        assert_eq!(report.largest().name, "big");
+        assert_eq!(report.speedup_at(4), Some(4.0));
+        assert_eq!(report.speedup_at(2), None);
+        let doc = report.to_json();
+        assert_eq!(doc.at("bench").as_str(), Some("kernels"));
+        assert_eq!(doc.at("schema_version").as_usize(), Some(1));
+        let largest = doc.at("largest");
+        assert_eq!(largest.at("name").as_str(), Some("big"));
+        assert_eq!(
+            largest.at("speedup_by_threads").at("4").as_f64(),
+            Some(4.0)
+        );
+    }
+}

@@ -8,6 +8,7 @@
 //! quick-mode results against the paper's numbers.
 
 pub mod figures;
+pub mod kernels;
 pub mod loadgen;
 pub mod tables;
 

@@ -14,7 +14,9 @@
 //!                       [--out FILE]
 //! adapterbert baseline  --task NAME [--budget N]
 //! adapterbert bench     <table1|table2|fig3|fig3x|fig4|fig5|fig6|fig7|sizes|
-//!                        params|all> [--full]
+//!                        params|kernels|all> [--full]
+//!                       (`kernels` also takes --threads 1,2,4 --out FILE and
+//!                        writes BENCH_kernels.json; it is not part of `all`)
 //! adapterbert list-tasks
 //! ```
 //!
@@ -138,7 +140,9 @@ fn print_help() {
          \x20            gateway; writes BENCH_serve.json. --tasks N\n\
          \x20            --rate R is the many-tasks/low-rate preset\n\
          \x20 baseline   no-BERT baseline search for one task\n\
-         \x20 bench      regenerate paper tables/figures (see ARCHITECTURE.md)\n\
+         \x20 bench      regenerate paper tables/figures (see ARCHITECTURE.md);\n\
+         \x20            `bench kernels` sweeps the native GEMM/attention\n\
+         \x20            kernels and writes BENCH_kernels.json\n\
          \x20 list-tasks show the synthetic task suites\n\
          \n\
          common flags: --preset default|test  --full (bench)\n\
@@ -528,11 +532,82 @@ fn cmd_baseline(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `bench kernels`: the native-kernel throughput suite. Needs no trained
+/// base or experiment context — pure kernels plus synthesized banks — so
+/// it runs before (and without) `Ctx::open`.
+fn bench_kernels(args: &Args, preset: &str, quick: bool) -> Result<()> {
+    use adapterbert::bench::kernels;
+    let mut cfg = kernels::KernelBenchConfig {
+        preset: preset.to_string(),
+        quick,
+        ..Default::default()
+    };
+    if let Some(spec) = args.get("threads") {
+        let mut threads = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let t: usize = part
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--threads {part:?}: {e}"))?;
+            anyhow::ensure!(t >= 1, "--threads entries must be >= 1");
+            threads.push(t);
+        }
+        anyhow::ensure!(!threads.is_empty(), "--threads needs at least one count");
+        threads.sort_unstable();
+        threads.dedup();
+        cfg.threads = threads;
+    }
+    println!("\n########## bench kernels (quick={quick}) ##########");
+    let t0 = std::time::Instant::now();
+    let report = kernels::run(&cfg)?;
+    for g in &report.gemm {
+        let blocked: Vec<String> = g
+            .blocked_gflops
+            .iter()
+            .map(|(t, gf)| format!("{t}t {gf:6.2}"))
+            .collect();
+        println!(
+            "  {:12} [{:4}x{:4}x{:4}]{} naive-1t {:6.2} GF/s | blocked {}",
+            g.name,
+            g.n,
+            g.k,
+            g.m,
+            if g.largest { " *" } else { "  " },
+            g.naive_st_gflops,
+            blocked.join("  ")
+        );
+    }
+    let l = report.largest();
+    for (t, _) in &l.blocked_gflops {
+        if let Some(s) = report.speedup_at(*t) {
+            println!(
+                "  largest shape {} speedup vs naive-1t at {t} thread(s): {s:.2}x",
+                l.name
+            );
+        }
+    }
+    println!(
+        "  wall: forward {:.2}ms | fused {:.2}ms | train step {:.2}ms",
+        report.wall_forward_ms, report.wall_fused_ms, report.wall_train_ms
+    );
+    let out = args.get_or("out", "BENCH_kernels.json");
+    kernels::write_report(Path::new(&out), &report.to_json())?;
+    println!("wrote {out}");
+    println!("[bench kernels] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     // every positional is a bench name; no names means the full set
-    let wanted: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
+    let mut wanted: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
     let quick = !args.flags.contains_key("full");
     let preset = args.get_or("preset", "default");
+    if wanted.contains(&"kernels") {
+        bench_kernels(args, &preset, quick)?;
+        wanted.retain(|w| *w != "kernels");
+        if wanted.is_empty() {
+            return Ok(());
+        }
+    }
     let ctx = Ctx::open(&preset, quick)?;
     let t0 = std::time::Instant::now();
     let run = |name: &str, ctx: &Ctx| -> Result<()> {

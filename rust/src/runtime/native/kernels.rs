@@ -7,18 +7,295 @@
 //! against `jax.grad` of the reference model to machine precision before
 //! being transcribed here (see `graph.rs` module docs).
 //!
-//! Everything is plain `f32` on row-major slices, single-threaded and
-//! allocation-simple: at reproduction scale (d ≤ 64) the matmuls
-//! autovectorize well and determinism matters more than peak FLOPs —
-//! `train_task` must be bitwise reproducible per seed.
+//! ## Throughput layer
+//!
+//! The three GEMM orientations (`matmul` = A·B, `matmul_tn` = Aᵀ·B,
+//! `matmul_nt` = A·Bᵀ) share one cache-blocked, panel-packed core
+//! (`gemm`): B is packed into `KC×NR` column panels, each `MC`-row panel
+//! of A is packed into `MR`-interleaved strips, and a register-tiled
+//! `MR×NR` microkernel does the FLOPs. Row panels run in parallel on the
+//! persistent worker pool (`super::pool`); every output row is produced by
+//! exactly one thread with a k-ascending, block-sequential summation
+//! order, so results are **bitwise identical for any thread count and any
+//! batch size** (row `i` never sees other rows' data). The textbook
+//! i-k-j kernel survives as [`matmul_naive`] — the reference the property
+//! tests and `bench kernels` compare against.
+//!
+//! Elementwise epilogues are fused where the serving path allows it:
+//! [`bias_gelu`] (bias add + GELU in one pass), [`add_ln_into`] /
+//! [`segment_add_ln_into`] (residual add + LayerNorm without
+//! materializing the sum), and [`attention_ctx_into`] (blocked streaming
+//! attention: per query tile, scores → softmax → value accumulation with
+//! only a `[QT, s]` scratch live, never the full `s×s` probs tensor).
+//!
+//! `*_into` variants write caller-provided buffers (see
+//! `super::workspace`); the old allocating signatures remain as thin
+//! wrappers.
+
+use std::cell::RefCell;
+
+use super::pool::{self, Pool, SendPtr};
 
 /// `sqrt(2/π)` for the tanh-form GELU.
 pub const SQRT_2_OVER_PI: f32 = 0.797_884_6;
 /// Additive mask value for padded keys/classes (matches the jnp reference).
 pub const NEG: f32 = -1e9;
 
-/// `out[n,m] = a[n,k] @ b[k,m]`.
+// ---------------------------------------------------------------------------
+// blocked GEMM core
+// ---------------------------------------------------------------------------
+
+/// Microkernel row tile (A rows held in registers per step).
+const MR: usize = 4;
+/// Microkernel column tile (one SIMD-friendly f32 lane group).
+const NR: usize = 8;
+/// k-dimension cache block: one `KC×NR` B panel stays L1-resident.
+const KC: usize = 256;
+/// Rows per parallel panel — the unit of work the pool distributes.
+const MC: usize = 64;
+/// Below this `rows·inner·cols` volume the pool dispatch costs more than
+/// it buys; run the (identical) blocked loop inline instead.
+const PAR_THRESHOLD: usize = 32 * 1024;
+
+thread_local! {
+    /// Caller-side packed-B scratch (whole B, reused across calls).
+    static PACK_B: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Worker-side packed-A scratch (one row panel, reused across calls).
+    static PACK_A: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// `acc[ir][jr] += Σ_kk ap[kk,ir] · bp[kk,jr]` over one k block; plain
+/// nested loops that LLVM turns into broadcast-FMA over the `NR` lane.
+#[inline]
+fn microkernel(ap: &[f32], bp: &[f32], kb: usize) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..kb {
+        let b = &bp[kk * NR..kk * NR + NR];
+        let a = &ap[kk * MR..kk * MR + MR];
+        for (av, arow) in a.iter().zip(acc.iter_mut()) {
+            for (ac, bv) in arow.iter_mut().zip(b) {
+                *ac += av * bv;
+            }
+        }
+    }
+    acc
+}
+
+/// Shared blocked core. Computes `out[rows, cols] = A·B` where element
+/// `(i, kk)` of A is `a[i*ars + kk*acs]` and element `(kk, j)` of B is
+/// `b[kk*brs + j*bcs]` — the three public orientations differ only in
+/// these strides. The k loop is blocked by `KC`; per output element the
+/// summation order (k ascending within a block, blocks in order, one
+/// register accumulator per block) is a pure function of `inner`, never
+/// of `rows`, `cols` or the thread count.
+#[allow(clippy::too_many_arguments)]
+fn gemm(
+    pl: &Pool,
+    a: &[f32],
+    ars: usize,
+    acs: usize,
+    b: &[f32],
+    brs: usize,
+    bcs: usize,
+    out: &mut [f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+) {
+    debug_assert_eq!(out.len(), rows * cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    if inner == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let jpanels = cols.div_ceil(NR);
+    let kblocks = inner.div_ceil(KC);
+    PACK_B.with(|pb| {
+        let mut pb = pb.borrow_mut();
+        let need = kblocks * jpanels * NR * KC;
+        if pb.len() < need {
+            pb.resize(need, 0.0);
+        }
+        // pack all of B once: panel (kb_i, jp) holds kb k-rows of NR
+        // columns, zero-padded on the column edge
+        for kb_i in 0..kblocks {
+            let k0 = kb_i * KC;
+            let kb = (inner - k0).min(KC);
+            for jp in 0..jpanels {
+                let j0 = jp * NR;
+                let nr = (cols - j0).min(NR);
+                let dst = &mut pb[(kb_i * jpanels + jp) * NR * KC..][..kb * NR];
+                for kk in 0..kb {
+                    let srow = (k0 + kk) * brs;
+                    let drow = &mut dst[kk * NR..kk * NR + NR];
+                    for (jr, dv) in drow.iter_mut().enumerate() {
+                        *dv = if jr < nr { b[srow + (j0 + jr) * bcs] } else { 0.0 };
+                    }
+                }
+            }
+        }
+        let bp: &[f32] = &pb;
+        let npanels = rows.div_ceil(MC);
+        let outp = SendPtr(out.as_mut_ptr());
+        let run_panel = move |p: usize| {
+            let i0 = p * MC;
+            let ib = (rows - i0).min(MC);
+            let strips = ib.div_ceil(MR);
+            PACK_A.with(|pa| {
+                let mut pa = pa.borrow_mut();
+                let need = strips * MR * KC;
+                if pa.len() < need {
+                    pa.resize(need, 0.0);
+                }
+                for kb_i in 0..kblocks {
+                    let k0 = kb_i * KC;
+                    let kb = (inner - k0).min(KC);
+                    // pack this panel's A block into MR-interleaved strips
+                    for st in 0..strips {
+                        let r0 = i0 + st * MR;
+                        let mr = (i0 + ib - r0).min(MR);
+                        let dst = &mut pa[st * MR * KC..][..kb * MR];
+                        for kk in 0..kb {
+                            let col = (k0 + kk) * acs;
+                            let drow = &mut dst[kk * MR..kk * MR + MR];
+                            for (ir, dv) in drow.iter_mut().enumerate() {
+                                *dv =
+                                    if ir < mr { a[(r0 + ir) * ars + col] } else { 0.0 };
+                            }
+                        }
+                    }
+                    let first = kb_i == 0;
+                    for jp in 0..jpanels {
+                        let j0 = jp * NR;
+                        let nr = (cols - j0).min(NR);
+                        let bpanel = &bp[(kb_i * jpanels + jp) * NR * KC..][..kb * NR];
+                        for st in 0..strips {
+                            let r0 = i0 + st * MR;
+                            let mr = (i0 + ib - r0).min(MR);
+                            let apanel = &pa[st * MR * KC..][..kb * MR];
+                            let acc = microkernel(apanel, bpanel, kb);
+                            for (ir, arow) in acc.iter().enumerate().take(mr) {
+                                // SAFETY: row `r0+ir` belongs to panel `p`
+                                // alone; panels partition the row range.
+                                let orow = unsafe {
+                                    std::slice::from_raw_parts_mut(
+                                        outp.get().add((r0 + ir) * cols + j0),
+                                        nr,
+                                    )
+                                };
+                                if first {
+                                    orow.copy_from_slice(&arow[..nr]);
+                                } else {
+                                    for (o, v) in orow.iter_mut().zip(arow) {
+                                        *o += v;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        };
+        if npanels == 1 || rows * inner * cols < PAR_THRESHOLD {
+            for p in 0..npanels {
+                run_panel(p);
+            }
+        } else {
+            pl.parallel_for(npanels, &run_panel);
+        }
+    });
+}
+
+/// `out[n,m] = a[n,k] @ b[k,m]` into a caller buffer, on an explicit pool.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_into_on(
+    pl: &Pool,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    gemm(pl, a, k, 1, b, m, 1, out, n, k, m);
+}
+
+/// `out[k,m] = a[n,k]ᵀ @ b[n,m]` into a caller buffer, on an explicit pool.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_into_on(
+    pl: &Pool,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), n * m);
+    gemm(pl, a, 1, k, b, m, 1, out, k, n, m);
+}
+
+/// `out[n,m] = a[n,k] @ b[m,k]ᵀ` into a caller buffer, on an explicit pool.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_into_on(
+    pl: &Pool,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), m * k);
+    gemm(pl, a, k, 1, b, 1, k, out, n, k, m);
+}
+
+/// `out[n,m] = a[n,k] @ b[k,m]` into a caller buffer (global pool).
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
+    matmul_into_on(pool::global(), a, b, out, n, k, m);
+}
+
+/// `out[k,m] = a[n,k]ᵀ @ b[n,m]` (gradient of weights: `xᵀ·dy`).
+pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
+    matmul_tn_into_on(pool::global(), a, b, out, n, k, m);
+}
+
+/// `out[n,m] = a[n,k] @ b[m,k]ᵀ` (gradient of inputs: `dy·Wᵀ`).
+pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
+    matmul_nt_into_on(pool::global(), a, b, out, n, k, m);
+}
+
+/// `out[n,m] = a[n,k] @ b[k,m]` (allocating wrapper).
 pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    matmul_into(a, b, &mut out, n, k, m);
+    out
+}
+
+/// `out[k,m] = a[n,k]ᵀ @ b[n,m]` (allocating wrapper).
+pub fn matmul_tn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k * m];
+    matmul_tn_into(a, b, &mut out, n, k, m);
+    out
+}
+
+/// `out[n,m] = a[n,k] @ b[m,k]ᵀ` (allocating wrapper).
+pub fn matmul_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    matmul_nt_into(a, b, &mut out, n, k, m);
+    out
+}
+
+/// The textbook single-threaded i-k-j matmul — the correctness and
+/// throughput reference for the blocked core (property tests assert
+/// blocked ≤ 1e-5 of this; `bench kernels` reports the speedup over it).
+pub fn matmul_naive(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), n * k);
     debug_assert_eq!(b.len(), k * m);
     let mut out = vec![0.0f32; n * m];
@@ -35,43 +312,9 @@ pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
     out
 }
 
-/// `out[k,m] = a[n,k]ᵀ @ b[n,m]` (gradient of weights: `xᵀ·dy`).
-pub fn matmul_tn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), n * k);
-    debug_assert_eq!(b.len(), n * m);
-    let mut out = vec![0.0f32; k * m];
-    for i in 0..n {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * m..(i + 1) * m];
-        for (kk, &av) in arow.iter().enumerate() {
-            let orow = &mut out[kk * m..(kk + 1) * m];
-            for j in 0..m {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
-    out
-}
-
-/// `out[n,m] = a[n,k] @ b[m,k]ᵀ` (gradient of inputs: `dy·Wᵀ`).
-pub fn matmul_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), n * k);
-    debug_assert_eq!(b.len(), m * k);
-    let mut out = vec![0.0f32; n * m];
-    for i in 0..n {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * m..(i + 1) * m];
-        for (j, ov) in orow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
-            }
-            *ov = acc;
-        }
-    }
-    out
-}
+// ---------------------------------------------------------------------------
+// elementwise / bias / activation
+// ---------------------------------------------------------------------------
 
 /// `x[n,m] += bias[m]` broadcast over rows.
 pub fn add_bias(x: &mut [f32], bias: &[f32]) {
@@ -83,21 +326,34 @@ pub fn add_bias(x: &mut [f32], bias: &[f32]) {
     }
 }
 
-/// `x @ w + b` for `x[n,k]`, `w[k,m]`, `b[m]`.
+/// `x @ w + b` into a caller buffer, for `x[n,k]`, `w[k,m]`, `b[m]`.
+pub fn linear_into(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
+    matmul_into(x, w, out, n, k, m);
+    add_bias(out, b);
+}
+
+/// `x @ w + b` for `x[n,k]`, `w[k,m]`, `b[m]` (allocating wrapper).
 pub fn linear(x: &[f32], w: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    let mut out = matmul(x, w, n, k, m);
-    add_bias(&mut out, b);
+    let mut out = vec![0.0f32; n * m];
+    linear_into(x, w, b, &mut out, n, k, m);
     out
 }
 
-/// Column sums of `x[n,m]` (bias gradients).
-pub fn col_sums(x: &[f32], m: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m];
+/// Column sums of `x[n,m]` into a caller buffer (bias gradients).
+pub fn col_sums_into(x: &[f32], out: &mut [f32], m: usize) {
+    debug_assert_eq!(out.len(), m);
+    out.fill(0.0);
     for row in x.chunks_exact(m) {
         for (o, v) in out.iter_mut().zip(row) {
             *o += v;
         }
     }
+}
+
+/// Column sums of `x[n,m]` (allocating wrapper).
+pub fn col_sums(x: &[f32], m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m];
+    col_sums_into(x, &mut out, m);
     out
 }
 
@@ -106,6 +362,14 @@ pub fn add_assign(a: &mut [f32], b: &[f32]) {
     debug_assert_eq!(a.len(), b.len());
     for (x, y) in a.iter_mut().zip(b) {
         *x += y;
+    }
+}
+
+/// Element-wise `a += gate * b` (adapter delta application).
+pub fn scale_add(a: &mut [f32], b: &[f32], gate: f32) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += gate * y;
     }
 }
 
@@ -122,10 +386,35 @@ pub fn gelu_grad(x: f32) -> f32 {
         + 0.5 * x * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * x * x)
 }
 
-/// Element-wise GELU over a slice.
-pub fn gelu_vec(x: &[f32]) -> Vec<f32> {
-    x.iter().map(|&v| gelu(v)).collect()
+/// In-place element-wise GELU.
+pub fn gelu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = gelu(*v);
+    }
 }
+
+/// Element-wise GELU over a slice (allocating wrapper; hot paths use
+/// [`gelu_inplace`] or [`bias_gelu`]).
+pub fn gelu_vec(x: &[f32]) -> Vec<f32> {
+    let mut out = x.to_vec();
+    gelu_inplace(&mut out);
+    out
+}
+
+/// Fused `x = gelu(x + bias)` for `x[n,m]`, `bias[m]` — one pass instead
+/// of a bias broadcast followed by an activation sweep.
+pub fn bias_gelu(x: &mut [f32], bias: &[f32]) {
+    let m = bias.len();
+    for row in x.chunks_exact_mut(m) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v = gelu(*v + b);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm
+// ---------------------------------------------------------------------------
 
 /// Saved activations of one LayerNorm application (enough for backward).
 pub struct LnTape {
@@ -191,10 +480,130 @@ pub fn ln_bwd(
     dx
 }
 
+/// LayerNorm forward without a tape into a caller buffer (serving path).
+/// Same math as [`ln_fwd`].
+pub fn ln_apply_into(x: &[f32], gamma: &[f32], beta: &[f32], d: usize, eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let rows = x.len() / d;
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let orow = &mut out[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + eps).sqrt();
+        for j in 0..d {
+            orow[j] = (xr[j] - mu) * rs * gamma[j] + beta[j];
+        }
+    }
+}
+
+/// LayerNorm forward without a tape (allocating wrapper).
+pub fn ln_apply(x: &[f32], gamma: &[f32], beta: &[f32], d: usize, eps: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    ln_apply_into(x, gamma, beta, d, eps, &mut out);
+    out
+}
+
+/// Fused residual-add + LayerNorm: `out = LN(a + b)` without
+/// materializing the sum. Bit-identical to `add_assign` followed by
+/// [`ln_apply`]: the sum `a[j]+b[j]` is formed once per element (staged in
+/// the output row), then the same mean/var/affine sequence runs over it.
+pub fn add_ln_into(
+    a: &[f32],
+    b: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    d: usize,
+    eps: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(out.len(), a.len());
+    let rows = a.len() / d;
+    for r in 0..rows {
+        let ar = &a[r * d..(r + 1) * d];
+        let br = &b[r * d..(r + 1) * d];
+        let orow = &mut out[r * d..(r + 1) * d];
+        for j in 0..d {
+            orow[j] = ar[j] + br[j];
+        }
+        let mu = orow.iter().sum::<f32>() / d as f32;
+        let var = orow.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + eps).sqrt();
+        for j in 0..d {
+            orow[j] = (orow[j] - mu) * rs * gamma[j] + beta[j];
+        }
+    }
+}
+
+/// Segmented LayerNorm into a caller buffer: `x[rows, d]` is split into
+/// contiguous row segments, each normalized with its **own** `γ`/`β` —
+/// the per-task LN gather of the fused multi-task path. `segs` entries
+/// are `(row_count, gamma, beta)`; row counts must sum to `rows`.
+pub fn segment_ln_into(
+    x: &[f32],
+    d: usize,
+    eps: f32,
+    segs: &[(usize, &[f32], &[f32])],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), x.len());
+    let mut row0 = 0usize;
+    for &(rows, gamma, beta) in segs {
+        let span = row0 * d..(row0 + rows) * d;
+        ln_apply_into(&x[span.clone()], gamma, beta, d, eps, &mut out[span]);
+        row0 += rows;
+    }
+    debug_assert_eq!(row0 * d, x.len());
+}
+
+/// Segmented LayerNorm (allocating wrapper).
+pub fn segment_ln(x: &[f32], d: usize, eps: f32, segs: &[(usize, &[f32], &[f32])]) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    segment_ln_into(x, d, eps, segs, &mut out);
+    out
+}
+
+/// Fused residual-add + segmented LayerNorm: `out = segment_LN(a + b)`,
+/// the per-segment counterpart of [`add_ln_into`].
+pub fn segment_add_ln_into(
+    a: &[f32],
+    b: &[f32],
+    d: usize,
+    eps: f32,
+    segs: &[(usize, &[f32], &[f32])],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(out.len(), a.len());
+    let mut row0 = 0usize;
+    for &(rows, gamma, beta) in segs {
+        let span = row0 * d..(row0 + rows) * d;
+        add_ln_into(&a[span.clone()], &b[span.clone()], gamma, beta, d, eps, &mut out[span]);
+        row0 += rows;
+    }
+    debug_assert_eq!(row0 * d, a.len());
+}
+
+// ---------------------------------------------------------------------------
+// attention
+// ---------------------------------------------------------------------------
+
+/// Query rows per streaming-attention tile: the `[QT, s]` score scratch
+/// stays L1-resident while K/V rows are reused across the tile.
+const QT: usize = 8;
+
+thread_local! {
+    /// Per-thread score-tile scratch for the streaming attention path.
+    static ATTN_ROWS: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
 /// Multi-head scaled-dot-product attention forward over already-projected
 /// `q`/`k`/`v` (each `[b*s, d]` with heads packed along `d`): returns
 /// `(probs [b, h, s, s], ctx [b*s, d])`. Shared by the per-task encoder
 /// and the fused multi-task path, so both run bit-identical float ops.
+/// `(batch, head)` pairs run in parallel — each owns disjoint probs/ctx
+/// slices, so the values are thread-count independent.
 #[allow(clippy::too_many_arguments)]
 pub fn attention_fwd(
     q: &[f32],
@@ -210,49 +619,130 @@ pub fn attention_fwd(
     let alpha = 1.0 / (dh as f32).sqrt();
     let mut probs = vec![0.0f32; b * h * s * s];
     let mut ctx = vec![0.0f32; b * s * d];
-    for bi in 0..b {
-        for hi in 0..h {
-            let pbase = (bi * h + hi) * s * s;
-            for si in 0..s {
-                let qrow = &q[(bi * s + si) * d + hi * dh..][..dh];
-                let prow = &mut probs[pbase + si * s..][..s];
-                for (ti, pv) in prow.iter_mut().enumerate() {
-                    *pv = if mask[bi * s + ti] > 0.0 {
-                        let krow = &kt[(bi * s + ti) * d + hi * dh..][..dh];
-                        let mut acc = 0.0f32;
-                        for j in 0..dh {
-                            acc += qrow[j] * krow[j];
-                        }
-                        alpha * acc
-                    } else {
-                        NEG
-                    };
-                }
+    let probs_p = SendPtr(probs.as_mut_ptr());
+    let ctx_p = SendPtr(ctx.as_mut_ptr());
+    pool::global().parallel_for(b * h, &move |t| {
+        let (bi, hi) = (t / h, t % h);
+        let pbase = (bi * h + hi) * s * s;
+        // SAFETY: `(bi, hi)` owns probs rows `pbase..pbase+s*s` and the
+        // `hi*dh..(hi+1)*dh` column slice of batch `bi`'s ctx rows.
+        let probs = unsafe { std::slice::from_raw_parts_mut(probs_p.get().add(pbase), s * s) };
+        for si in 0..s {
+            let qrow = &q[(bi * s + si) * d + hi * dh..][..dh];
+            let prow = &mut probs[si * s..(si + 1) * s];
+            for (ti, pv) in prow.iter_mut().enumerate() {
+                *pv = if mask[bi * s + ti] > 0.0 {
+                    let krow = &kt[(bi * s + ti) * d + hi * dh..][..dh];
+                    let mut acc = 0.0f32;
+                    for j in 0..dh {
+                        acc += qrow[j] * krow[j];
+                    }
+                    alpha * acc
+                } else {
+                    NEG
+                };
             }
-            softmax_rows(&mut probs[pbase..pbase + s * s], s);
-            for si in 0..s {
-                let prow = &probs[pbase + si * s..][..s];
-                for ti in 0..s {
-                    let pv = prow[ti];
-                    if pv != 0.0 {
-                        let vrow = &v[(bi * s + ti) * d + hi * dh..][..dh];
-                        let crow = &mut ctx[(bi * s + si) * d + hi * dh..][..dh];
-                        for j in 0..dh {
-                            crow[j] += pv * vrow[j];
-                        }
+        }
+        softmax_rows(probs, s);
+        for si in 0..s {
+            let prow = &probs[si * s..(si + 1) * s];
+            let crow = unsafe {
+                std::slice::from_raw_parts_mut(
+                    ctx_p.get().add((bi * s + si) * d + hi * dh),
+                    dh,
+                )
+            };
+            for ti in 0..s {
+                let pv = prow[ti];
+                if pv != 0.0 {
+                    let vrow = &v[(bi * s + ti) * d + hi * dh..][..dh];
+                    for j in 0..dh {
+                        crow[j] += pv * vrow[j];
                     }
                 }
             }
         }
-    }
+    });
     (probs, ctx)
 }
 
-/// Forward-only attention: same math as [`attention_fwd`] (row-for-row
-/// identical ops) but without materializing the `[b, h, s, s]` probs
-/// tensor — only one `[s]` scratch row is live at a time. This is the
-/// serving hot path (no backward tape needed); `attention_fwd` remains
-/// for the training path, which tapes probs.
+/// Blocked streaming attention into a caller buffer: same math as
+/// [`attention_fwd`] (row-for-row identical ops) but without ever
+/// materializing the `[b, h, s, s]` probs tensor — only one `[QT, s]`
+/// score tile is live per thread, and K/V rows are reused across the
+/// tile's queries. This is the serving hot path (no backward tape
+/// needed); `attention_fwd` remains for the training path, which tapes
+/// probs. `ctx` must be zeroed on entry.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_ctx_into(
+    q: &[f32],
+    kt: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    b: usize,
+    s: usize,
+    d: usize,
+    h: usize,
+    dh: usize,
+    ctx: &mut [f32],
+) {
+    debug_assert_eq!(ctx.len(), b * s * d);
+    let alpha = 1.0 / (dh as f32).sqrt();
+    let ctx_p = SendPtr(ctx.as_mut_ptr());
+    pool::global().parallel_for(b * h, &move |t| {
+        let (bi, hi) = (t / h, t % h);
+        ATTN_ROWS.with(|rows| {
+            let mut rows = rows.borrow_mut();
+            if rows.len() < QT * s {
+                rows.resize(QT * s, 0.0);
+            }
+            for s0 in (0..s).step_by(QT) {
+                let qt = (s - s0).min(QT);
+                // scores for the whole query tile
+                for (sr, si) in (s0..s0 + qt).enumerate() {
+                    let qrow = &q[(bi * s + si) * d + hi * dh..][..dh];
+                    let prow = &mut rows[sr * s..(sr + 1) * s];
+                    for (ti, pv) in prow.iter_mut().enumerate() {
+                        *pv = if mask[bi * s + ti] > 0.0 {
+                            let krow = &kt[(bi * s + ti) * d + hi * dh..][..dh];
+                            let mut acc = 0.0f32;
+                            for j in 0..dh {
+                                acc += qrow[j] * krow[j];
+                            }
+                            alpha * acc
+                        } else {
+                            NEG
+                        };
+                    }
+                }
+                softmax_rows(&mut rows[..qt * s], s);
+                // value pass over the tile (K/V stay cache-hot across it)
+                for (sr, si) in (s0..s0 + qt).enumerate() {
+                    let prow = &rows[sr * s..(sr + 1) * s];
+                    // SAFETY: `(bi, hi)` owns this dh-column slice of
+                    // batch bi's ctx rows; tasks partition (bi, hi).
+                    let crow = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            ctx_p.get().add((bi * s + si) * d + hi * dh),
+                            dh,
+                        )
+                    };
+                    for ti in 0..s {
+                        let pv = prow[ti];
+                        if pv != 0.0 {
+                            let vrow = &v[(bi * s + ti) * d + hi * dh..][..dh];
+                            for j in 0..dh {
+                                crow[j] += pv * vrow[j];
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    });
+}
+
+/// Forward-only attention (allocating wrapper over [`attention_ctx_into`]).
 #[allow(clippy::too_many_arguments)]
 pub fn attention_ctx(
     q: &[f32],
@@ -265,79 +755,14 @@ pub fn attention_ctx(
     h: usize,
     dh: usize,
 ) -> Vec<f32> {
-    let alpha = 1.0 / (dh as f32).sqrt();
     let mut ctx = vec![0.0f32; b * s * d];
-    let mut row = vec![0.0f32; s];
-    for bi in 0..b {
-        for hi in 0..h {
-            for si in 0..s {
-                let qrow = &q[(bi * s + si) * d + hi * dh..][..dh];
-                for (ti, pv) in row.iter_mut().enumerate() {
-                    *pv = if mask[bi * s + ti] > 0.0 {
-                        let krow = &kt[(bi * s + ti) * d + hi * dh..][..dh];
-                        let mut acc = 0.0f32;
-                        for j in 0..dh {
-                            acc += qrow[j] * krow[j];
-                        }
-                        alpha * acc
-                    } else {
-                        NEG
-                    };
-                }
-                softmax_rows(&mut row, s);
-                for ti in 0..s {
-                    let pv = row[ti];
-                    if pv != 0.0 {
-                        let vrow = &v[(bi * s + ti) * d + hi * dh..][..dh];
-                        let crow = &mut ctx[(bi * s + si) * d + hi * dh..][..dh];
-                        for j in 0..dh {
-                            crow[j] += pv * vrow[j];
-                        }
-                    }
-                }
-            }
-        }
-    }
+    attention_ctx_into(q, kt, v, mask, b, s, d, h, dh, &mut ctx);
     ctx
 }
 
-/// LayerNorm forward without a tape (serving path — no backward needed).
-/// Same math as [`ln_fwd`].
-pub fn ln_apply(x: &[f32], gamma: &[f32], beta: &[f32], d: usize, eps: f32) -> Vec<f32> {
-    let rows = x.len() / d;
-    let mut y = vec![0.0f32; x.len()];
-    for r in 0..rows {
-        let xr = &x[r * d..(r + 1) * d];
-        let mu = xr.iter().sum::<f32>() / d as f32;
-        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-        let rs = 1.0 / (var + eps).sqrt();
-        for j in 0..d {
-            y[r * d + j] = (xr[j] - mu) * rs * gamma[j] + beta[j];
-        }
-    }
-    y
-}
-
-/// Segmented LayerNorm: `x[rows, d]` is split into contiguous row
-/// segments, each normalized with its **own** `γ`/`β` — the per-task LN
-/// gather of the fused multi-task path. `segs` entries are
-/// `(row_count, gamma, beta)`; row counts must sum to `rows`.
-pub fn segment_ln(
-    x: &[f32],
-    d: usize,
-    eps: f32,
-    segs: &[(usize, &[f32], &[f32])],
-) -> Vec<f32> {
-    let mut y = Vec::with_capacity(x.len());
-    let mut row0 = 0usize;
-    for &(rows, gamma, beta) in segs {
-        let xs = &x[row0 * d..(row0 + rows) * d];
-        y.extend(ln_apply(xs, gamma, beta, d, eps));
-        row0 += rows;
-    }
-    debug_assert_eq!(row0 * d, x.len());
-    y
-}
+// ---------------------------------------------------------------------------
+// softmax / reductions
+// ---------------------------------------------------------------------------
 
 /// In-place numerically stable softmax over each row of `x[rows, cols]`.
 pub fn softmax_rows(x: &mut [f32], cols: usize) {
@@ -379,6 +804,10 @@ mod tests {
         assert!((a - b).abs() <= tol, "{a} vs {b}");
     }
 
+    fn seeded(n: usize, seed: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i as f32 + seed) * 0.37).sin()).collect()
+    }
+
     #[test]
     fn matmul_identity_and_transposes() {
         // a = [[1,2],[3,4]], b = I
@@ -392,6 +821,78 @@ mod tests {
         // rectangular sanity: [1,3]x[3,1]
         let r = matmul(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0], 1, 3, 1);
         assert_eq!(r, vec![32.0]);
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_ragged_shapes() {
+        for &(n, k, m) in &[(1, 1, 1), (3, 5, 7), (17, 65, 9), (66, 257, 33)] {
+            let a = seeded(n * k, 1.0);
+            let b = seeded(k * m, 2.0);
+            let want = matmul_naive(&a, &b, n, k, m);
+            let got = matmul(&a, &b, n, k, m);
+            for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                assert!((x - y).abs() <= 1e-5, "({n},{k},{m})[{i}]: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn tn_and_nt_match_explicit_transposes() {
+        let (n, k, m) = (7, 5, 9);
+        let a = seeded(n * k, 3.0);
+        let b_tn = seeded(n * m, 4.0);
+        // aᵀ[k,n] materialized, then naive
+        let mut at = vec![0.0f32; k * n];
+        for i in 0..n {
+            for kk in 0..k {
+                at[kk * n + i] = a[i * k + kk];
+            }
+        }
+        let want = matmul_naive(&at, &b_tn, k, n, m);
+        let got = matmul_tn(&a, &b_tn, n, k, m);
+        for (x, y) in got.iter().zip(&want) {
+            assert_close(*x, *y, 1e-5);
+        }
+        let b_nt = seeded(m * k, 5.0);
+        let mut bt = vec![0.0f32; k * m];
+        for j in 0..m {
+            for kk in 0..k {
+                bt[kk * m + j] = b_nt[j * k + kk];
+            }
+        }
+        let want = matmul_naive(&a, &bt, n, k, m);
+        let got = matmul_nt(&a, &b_nt, n, k, m);
+        for (x, y) in got.iter().zip(&want) {
+            assert_close(*x, *y, 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_rows_are_batch_size_independent() {
+        // the fused engine relies on row i of a GEMM being bitwise
+        // identical whether computed in a 1-row or a 70-row batch
+        let (n, k, m) = (70, 33, 17);
+        let a = seeded(n * k, 1.5);
+        let b = seeded(k * m, 2.5);
+        let full = matmul(&a, &b, n, k, m);
+        for &i in &[0usize, 1, 41, 69] {
+            let one = matmul(&a[i * k..(i + 1) * k], &b, 1, k, m);
+            assert_eq!(&full[i * m..(i + 1) * m], &one[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn into_variants_match_wrappers() {
+        let (n, k, m) = (5, 9, 6);
+        let a = seeded(n * k, 6.0);
+        let b = seeded(k * m, 7.0);
+        let mut out = vec![9.9f32; n * m]; // stale garbage must be overwritten
+        matmul_into(&a, &b, &mut out, n, k, m);
+        assert_eq!(out, matmul(&a, &b, n, k, m));
+        let bias = seeded(m, 8.0);
+        let mut lin = vec![0.0f32; n * m];
+        linear_into(&a, &b, &bias, &mut lin, n, k, m);
+        assert_eq!(lin, linear(&a, &b, &bias, n, k, m));
     }
 
     #[test]
@@ -410,6 +911,19 @@ mod tests {
             let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
             assert_close(gelu_grad(x), fd, 1e-3);
         }
+    }
+
+    #[test]
+    fn bias_gelu_matches_two_pass() {
+        let m = 5;
+        let x = seeded(3 * m, 1.0);
+        let bias = seeded(m, 2.0);
+        let mut fused = x.clone();
+        bias_gelu(&mut fused, &bias);
+        let mut two = x.clone();
+        add_bias(&mut two, &bias);
+        let two = gelu_vec(&two);
+        assert_eq!(fused, two);
     }
 
     #[test]
@@ -463,6 +977,21 @@ mod tests {
     }
 
     #[test]
+    fn add_ln_matches_two_pass() {
+        let d = 4;
+        let a = seeded(3 * d, 1.0);
+        let b = seeded(3 * d, 2.0);
+        let g: Vec<f32> = (0..d).map(|i| 1.0 + 0.2 * i as f32).collect();
+        let be: Vec<f32> = (0..d).map(|i| -0.1 * i as f32).collect();
+        let mut z = a.clone();
+        add_assign(&mut z, &b);
+        let want = ln_apply(&z, &g, &be, d, 1e-6);
+        let mut got = vec![0.0f32; a.len()];
+        add_ln_into(&a, &b, &g, &be, d, 1e-6, &mut got);
+        assert_eq!(got, want, "fused residual+LN must be bit-identical");
+    }
+
+    #[test]
     fn segment_ln_gathers_per_segment_params() {
         let d = 2;
         let x = vec![1.0, 3.0, 2.0, 6.0, -1.0, 1.0];
@@ -479,16 +1008,45 @@ mod tests {
     }
 
     #[test]
+    fn segment_add_ln_matches_two_pass() {
+        let d = 2;
+        let a = seeded(3 * d, 3.0);
+        let b = seeded(3 * d, 4.0);
+        let g1 = [1.0, 1.5];
+        let b1 = [0.0, 0.3];
+        let g2 = [2.0, 0.5];
+        let b2 = [5.0, -1.0];
+        let segs: &[(usize, &[f32], &[f32])] = &[(2, &g1, &b1), (1, &g2, &b2)];
+        let mut z = a.clone();
+        add_assign(&mut z, &b);
+        let want = segment_ln(&z, d, 1e-6, segs);
+        let mut got = vec![0.0f32; a.len()];
+        segment_add_ln_into(&a, &b, d, 1e-6, segs, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
     fn attention_ctx_matches_attention_fwd() {
         let (b, s, d, h, dh) = (2usize, 4usize, 4usize, 2usize, 2usize);
-        let mk = |seed: f32| -> Vec<f32> {
-            (0..b * s * d).map(|i| ((i as f32 + seed) * 0.37).sin()).collect()
-        };
+        let mk = |seed: f32| -> Vec<f32> { seeded(b * s * d, seed) };
         let (q, k, v) = (mk(1.0), mk(2.0), mk(3.0));
         let mask = vec![1.0, 1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0];
         let (_, ctx_taped) = attention_fwd(&q, &k, &v, &mask, b, s, d, h, dh);
         let ctx = attention_ctx(&q, &k, &v, &mask, b, s, d, h, dh);
         assert_eq!(ctx, ctx_taped, "serving attention must match the taped path");
+    }
+
+    #[test]
+    fn streaming_attention_tiles_are_invisible() {
+        // s > QT exercises multiple query tiles per (batch, head)
+        let (b, s, d, h, dh) = (1usize, 2 * QT + 3, 6usize, 2usize, 3usize);
+        let mk = |seed: f32| -> Vec<f32> { seeded(b * s * d, seed) };
+        let (q, k, v) = (mk(1.0), mk(2.0), mk(3.0));
+        let mask: Vec<f32> =
+            (0..b * s).map(|i| if i % 5 == 4 { 0.0 } else { 1.0 }).collect();
+        let (_, want) = attention_fwd(&q, &k, &v, &mask, b, s, d, h, dh);
+        let got = attention_ctx(&q, &k, &v, &mask, b, s, d, h, dh);
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -12,9 +12,19 @@
 //! Uploaded banks are plain host tensors ([`HostBank`]); `upload_bank` is a
 //! cheap clone kept for API parity with the PJRT backend so the serving
 //! layer's bank-caching pattern is backend-agnostic.
+//!
+//! Throughput comes from three pieces (see ARCHITECTURE.md §Native
+//! performance): `pool` (a persistent std-only worker pool sized by
+//! `ADAPTERBERT_THREADS`), the blocked panel-packed GEMM and fused
+//! elementwise kernels in `kernels`, and `workspace` (a per-thread
+//! scratch-buffer arena so steady-state execution allocates nothing per
+//! op). `bench kernels` pins the resulting speedups in
+//! `BENCH_kernels.json`.
 
 pub mod graph;
 pub mod kernels;
+pub mod pool;
+pub mod workspace;
 
 use std::collections::BTreeMap;
 

@@ -1,0 +1,263 @@
+//! Persistent std-only worker pool for the native kernels.
+//!
+//! The build is fully offline (no rayon), so this is a hand-rolled scoped
+//! parallel-for: a fixed set of worker threads parked on a condvar, woken
+//! once per [`Pool::parallel_for`] call, pulling task indices from a shared
+//! atomic counter until the range is drained. The caller thread
+//! participates too, so a pool of size `n` uses `n - 1` spawned workers and
+//! `Pool::new(1)` degenerates to a plain serial loop with zero overhead.
+//!
+//! Scheduling is dynamic (whichever thread is free claims the next index)
+//! but the *values* computed are scheduling-independent: kernels partition
+//! work so each index owns a disjoint output slice and performs a fixed
+//! sequence of float ops, which is what makes N-thread results bitwise
+//! equal to 1-thread results (pinned by `tests/kernel_props.rs`).
+//!
+//! The global pool is sized by `ADAPTERBERT_THREADS` (default: available
+//! parallelism) and constructed lazily on first use.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::{self, JoinHandle};
+
+/// One `parallel_for` invocation: the erased closure plus its own claim /
+/// completion counters. Counters live *inside* the job so a worker that
+/// wakes late for an old epoch can only touch that old job's (drained)
+/// counters, never the next call's.
+struct Job {
+    /// Caller's `&(dyn Fn(usize) + Sync)` with the lifetime erased. Only
+    /// dereferenced after a successful claim (`next < tasks`), which
+    /// implies the issuing `parallel_for` has not yet returned, so the
+    /// borrow is still live.
+    f: *const (dyn Fn(usize) + Sync),
+    tasks: usize,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+// SAFETY: the raw closure pointer is only shared with worker threads while
+// the issuing `parallel_for` blocks on `done == tasks`; see `Job::f`.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and run indices until the range is drained.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.tasks {
+                return;
+            }
+            // SAFETY: claim succeeded, so the caller is still waiting.
+            let f = unsafe { &*self.f };
+            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            self.done.fetch_add(1, Ordering::Release);
+        }
+    }
+}
+
+struct State {
+    epoch: u64,
+    job: Option<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// A fixed-size worker pool; see the module docs.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool running `threads` ways in `parallel_for` (the caller counts
+    /// as one, so `threads - 1` OS threads are spawned; `0` is clamped
+    /// to `1`).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { epoch: 0, job: None, shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("kernel-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn kernel worker")
+            })
+            .collect();
+        Pool { shared, workers, threads }
+    }
+
+    /// Parallelism degree (including the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0) … f(tasks-1)` across the pool; returns when all are done.
+    /// Each index must own a disjoint slice of any shared output.
+    pub fn parallel_for(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        if self.workers.is_empty() || tasks == 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        // SAFETY: erase the borrow's lifetime; `Job::f` documents why the
+        // pointer never outlives this call.
+        let f_static = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let job = Arc::new(Job {
+            f: f_static as *const (dyn Fn(usize) + Sync),
+            tasks,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(Arc::clone(&job));
+            st.epoch += 1;
+            self.shared.cv.notify_all();
+        }
+        job.work();
+        while job.done.load(Ordering::Acquire) < tasks {
+            thread::yield_now();
+        }
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("kernel pool: a parallel task panicked");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(job) = &st.job {
+                        break Arc::clone(job);
+                    }
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        job.work();
+    }
+}
+
+/// Pool size for the process: `ADAPTERBERT_THREADS` if set (values < 1
+/// are clamped, unparseable values fall back to the default), else the
+/// machine's available parallelism.
+pub fn configured_threads() -> usize {
+    let avail = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match std::env::var("ADAPTERBERT_THREADS") {
+        Ok(v) => v.trim().parse::<usize>().map(|n| n.max(1)).unwrap_or(avail),
+        Err(_) => avail,
+    }
+}
+
+/// The process-wide pool used by the kernel entry points; built on first
+/// use with [`configured_threads`] ways.
+pub fn global() -> &'static Pool {
+    static GLOBAL: OnceLock<Pool> = OnceLock::new();
+    GLOBAL.get_or_init(|| Pool::new(configured_threads()))
+}
+
+/// A `*mut f32` that can cross thread boundaries; used by kernels whose
+/// parallel tasks write disjoint regions of one output buffer.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub *mut f32);
+// SAFETY: every kernel using SendPtr partitions the output so no two task
+// indices touch the same element.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// The wrapped pointer; caller must respect the disjointness contract.
+    #[inline]
+    pub fn get(self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(10, &|i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn reusable_across_calls() {
+        let pool = Pool::new(3);
+        for round in 0..50 {
+            let sum = AtomicU64::new(0);
+            pool.parallel_for(round + 1, &|i| {
+                sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+            let n = (round + 1) as u64;
+            assert_eq!(sum.load(Ordering::Relaxed), n * (n + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn zero_tasks_is_a_noop() {
+        Pool::new(2).parallel_for(0, &|_| panic!("must not run"));
+    }
+}

@@ -1,0 +1,144 @@
+//! Scratch-buffer arena for the native graph evaluator.
+//!
+//! Every op in the old kernels allocated its outputs fresh (`matmul` &co
+//! each returned a new `Vec`), so a single fused forward performed dozens
+//! of heap round-trips per layer. A [`Workspace`] recycles those buffers:
+//! `take(len)` hands out a zeroed `f32` buffer (reusing the best-fitting
+//! retired one), `give` retires a buffer for reuse. The graph evaluator
+//! keeps one workspace per OS thread ([`Workspace::with`]), so steady-state
+//! serving allocates nothing per request beyond the tensors it returns.
+//!
+//! Lifetime rules (see ARCHITECTURE.md §Native performance):
+//!
+//! * a taken buffer is owned — it may be returned to the caller as an
+//!   output (never `give` it back in that case), or retired with `give`
+//!   once its contents are dead;
+//! * `take` zero-fills, so buffers are safe accumulator targets;
+//! * workspaces are per-thread and never shared, which keeps `with`
+//!   re-entrant and lock-free.
+
+use std::cell::RefCell;
+
+/// Upper bound on retired buffers kept per thread. When it is exceeded
+/// the *smallest* retired buffer is dropped: large buffers are the
+/// expensive ones to recreate, so they are deliberately retained — the
+/// bound is on buffer count (churny small scratch), not on bytes.
+const MAX_RETIRED: usize = 48;
+
+/// A recycling arena of `f32` scratch buffers.
+#[derive(Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    /// An empty workspace (buffers are grown on demand).
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// A zeroed buffer of exactly `len` elements, reusing the retired
+    /// buffer whose capacity fits best (smallest capacity ≥ `len`, else
+    /// the largest available, growing it).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut pick: Option<usize> = None;
+        for (i, buf) in self.free.iter().enumerate() {
+            let better = match pick {
+                None => true,
+                Some(j) => {
+                    let (have, best) = (buf.capacity(), self.free[j].capacity());
+                    if best >= len {
+                        have >= len && have < best
+                    } else {
+                        have > best
+                    }
+                }
+            };
+            if better {
+                pick = Some(i);
+            }
+        }
+        let mut buf = match pick {
+            Some(i) => self.free.swap_remove(i),
+            None => Vec::new(),
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Retire a buffer for reuse by a later [`Workspace::take`].
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        self.free.push(buf);
+        if self.free.len() > MAX_RETIRED {
+            // drop the smallest — big buffers are the expensive ones
+            let smallest = self
+                .free
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, b)| b.capacity())
+                .map(|(i, _)| i);
+            if let Some(i) = smallest {
+                self.free.swap_remove(i);
+            }
+        }
+    }
+
+    /// Number of retired buffers currently held.
+    pub fn retired(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Run `f` with this thread's workspace (one per OS thread, reused
+    /// across calls — the steady-state serving path hits only warm
+    /// buffers).
+    pub fn with<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+        thread_local! {
+            static WS: RefCell<Workspace> = RefCell::new(Workspace::new());
+        }
+        WS.with(|ws| f(&mut ws.borrow_mut()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zero_fills_and_reuses() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(8);
+        assert_eq!(a, vec![0.0; 8]);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        let cap = a.capacity();
+        ws.give(a);
+        let b = ws.take(4);
+        assert_eq!(b, vec![0.0; 4], "reused buffers must be re-zeroed");
+        assert_eq!(b.capacity(), cap, "should reuse the retired buffer");
+        assert_eq!(ws.retired(), 0);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let mut ws = Workspace::new();
+        ws.give(Vec::with_capacity(100));
+        ws.give(Vec::with_capacity(10));
+        let b = ws.take(8);
+        assert!(b.capacity() >= 8 && b.capacity() < 100);
+        assert_eq!(ws.free[0].capacity(), 100, "big buffer stays retired");
+    }
+
+    #[test]
+    fn retired_count_is_bounded() {
+        let mut ws = Workspace::new();
+        for i in 1..=2 * MAX_RETIRED {
+            ws.give(Vec::with_capacity(i));
+        }
+        assert!(ws.retired() <= MAX_RETIRED);
+        // the survivors are the largest ones
+        assert!(ws.free.iter().all(|b| b.capacity() > MAX_RETIRED / 2));
+    }
+}

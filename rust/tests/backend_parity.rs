@@ -10,66 +10,14 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use adapterbert::model::init;
+use adapterbert::bench::kernels::banks_for;
 use adapterbert::runtime::{BackendKind, Bank, Runtime};
-use adapterbert::util::tensor::{Data, DType, Tensor};
+use adapterbert::util::tensor::Data;
 
 const TOL: f32 = 1e-4;
 
 fn artifacts_root() -> &'static Path {
     Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-}
-
-/// Deterministic non-zero banks for every input group: parameter groups by
-/// role-aware init, data groups by small patterned values.
-fn banks_for(rt: &Runtime, name: &str) -> Vec<Bank> {
-    let spec = rt.manifest.exe(name).unwrap().clone();
-    let groups = spec.input_groups();
-    let mut out = Vec::with_capacity(groups.len());
-    for (gi, group) in groups.iter().enumerate() {
-        let range = spec.input_group_range(group).unwrap();
-        let param_group =
-            matches!(*group, "base" | "frozen" | "trained" | "adapters" | "head");
-        if param_group {
-            let named = init::init_group(&spec, group, 7 + gi as u64, 1e-2).unwrap();
-            out.push(named.to_bank(&spec, group).unwrap());
-            continue;
-        }
-        let bank: Bank = spec.inputs[range]
-            .iter()
-            .map(|leaf| match (leaf.name.as_str(), leaf.dtype) {
-                ("step", _) => Tensor::scalar_i32(1),
-                ("lr", _) => Tensor::scalar_f32(1e-3),
-                (n, DType::F32) if n.ends_with("attn_mask") => {
-                    Tensor::full_f32(&leaf.shape, 1.0)
-                }
-                (n, DType::F32) if n.ends_with("class_valid") => {
-                    let mut v = vec![0.0f32; leaf.elements()];
-                    v[0] = 1.0;
-                    v[1] = 1.0;
-                    Tensor::f32(leaf.shape.clone(), v)
-                }
-                (n, DType::F32) if n.ends_with("gates") => {
-                    Tensor::full_f32(&leaf.shape, 1.0)
-                }
-                (n, DType::F32) if n.ends_with("weights") => {
-                    Tensor::full_f32(&leaf.shape, 1.0)
-                }
-                (_, DType::F32) => Tensor::zeros(&leaf.shape, DType::F32),
-                (n, DType::I32) if n.ends_with("tokens") => Tensor::i32(
-                    leaf.shape.clone(),
-                    (0..leaf.elements()).map(|i| (i % 11) as i32).collect(),
-                ),
-                (n, DType::I32) if n.ends_with("labels") => Tensor::i32(
-                    leaf.shape.clone(),
-                    (0..leaf.elements()).map(|i| (i % 2) as i32).collect(),
-                ),
-                (_, DType::I32) => Tensor::zeros(&leaf.shape, DType::I32),
-            })
-            .collect();
-        out.push(bank);
-    }
-    out
 }
 
 fn max_abs_diff(a: &[Bank], b: &[Bank]) -> f32 {
@@ -114,7 +62,7 @@ fn native_matches_pjrt_when_plugin_is_available() {
         "cls_train_topk_k2",
         "pretrain_step",
     ] {
-        let banks = banks_for(&pjrt, exe_name);
+        let banks = banks_for(&pjrt, exe_name).unwrap();
         let refs: Vec<&Bank> = banks.iter().collect();
         let a = pjrt.load(exe_name).unwrap().run(&refs).unwrap();
         let b = native.load(exe_name).unwrap().run(&refs).unwrap();

@@ -1,0 +1,78 @@
+//! Schema pin for `BENCH_kernels.json` — the kernel entry in the repo's
+//! perf trajectory. Runs the real suite in quick mode on the `test`
+//! preset, writes the report at the repo root (like the loadgen schema
+//! test does for `BENCH_serve.json`), re-parses it and asserts the v1
+//! schema the CI smoke job also validates.
+
+use std::path::Path;
+
+use adapterbert::bench::kernels::{self, KernelBenchConfig};
+use adapterbert::util::json::Json;
+
+#[test]
+fn bench_kernels_writes_schema_v1_report() {
+    let cfg = KernelBenchConfig {
+        preset: "test".to_string(),
+        threads: vec![1, 2],
+        quick: true,
+    };
+    let report = kernels::run(&cfg).expect("kernel bench runs on the test preset");
+
+    // the typed report is self-consistent
+    assert_eq!(report.gemm.len(), 5, "one entry per preset GEMM site");
+    assert_eq!(
+        report.gemm.iter().filter(|g| g.largest).count(),
+        1,
+        "exactly one largest shape"
+    );
+    for g in &report.gemm {
+        assert!(g.naive_st_gflops > 0.0, "{}: naive throughput", g.name);
+        assert_eq!(g.blocked_gflops.len(), 2, "{}: sweep covers both counts", g.name);
+        for (t, gf) in &g.blocked_gflops {
+            assert!(*gf > 0.0, "{}: blocked throughput at {t} threads", g.name);
+        }
+        assert!((g.flops - 2.0 * (g.n * g.k * g.m) as f64).abs() < 1.0);
+    }
+    assert!(report.speedup_at(1).is_some());
+    assert!(report.speedup_at(16).is_none(), "unswept counts are absent");
+    assert!(report.wall_forward_ms > 0.0);
+    assert!(report.wall_fused_ms > 0.0);
+    assert!(report.wall_train_ms > 0.0);
+
+    // round-trip through the file at the repo root
+    let path = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_kernels.json"));
+    kernels::write_report(path, &report.to_json()).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+
+    assert_eq!(doc.at("bench").as_str(), Some("kernels"));
+    assert_eq!(doc.at("schema_version").as_usize(), Some(1));
+    assert_eq!(doc.at("preset").as_str(), Some("test"));
+    assert!(doc.at("threads_available").as_usize().unwrap_or(0) >= 1);
+    let gemm = doc.at("gemm").as_arr().expect("gemm array");
+    assert_eq!(gemm.len(), 5);
+    let mut largest_seen = 0usize;
+    for g in gemm {
+        for key in ["name", "n", "k", "m", "flops", "naive_st_gflops"] {
+            assert!(g.get(key).is_some(), "gemm entry missing {key}");
+        }
+        let blocked = g.at("blocked_gflops").as_obj().expect("blocked_gflops obj");
+        assert_eq!(
+            blocked.keys().cloned().collect::<Vec<_>>(),
+            vec!["1".to_string(), "2".to_string()]
+        );
+        if g.at("largest").as_bool() == Some(true) {
+            largest_seen += 1;
+        }
+    }
+    assert_eq!(largest_seen, 1);
+    let largest = doc.at("largest");
+    assert!(largest.get("name").is_some());
+    let speedups = largest.at("speedup_by_threads").as_obj().expect("speedups");
+    for (t, s) in speedups {
+        assert!(s.as_f64().unwrap() > 0.0, "speedup at {t} threads");
+    }
+    let wall = doc.at("wall_ms");
+    for key in ["forward", "fused", "train_step"] {
+        assert!(wall.at(key).as_f64().unwrap() > 0.0, "wall_ms.{key}");
+    }
+}
