@@ -214,8 +214,8 @@ impl LoadReport {
 }
 
 /// `{mean, p50, p95, p99, max}` in milliseconds (zeros when empty — JSON
-/// has no NaN).
-fn latency_json(s: &Samples) -> Json {
+/// has no NaN). Shared with the train-and-serve harness.
+pub(crate) fn latency_json(s: &Samples) -> Json {
     let (mean, p50, p95, p99, max) = if s.is_empty() {
         (0.0, 0.0, 0.0, 0.0, 0.0)
     } else {

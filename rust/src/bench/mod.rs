@@ -11,6 +11,7 @@ pub mod figures;
 pub mod kernels;
 pub mod loadgen;
 pub mod tables;
+pub mod trainserve;
 
 use std::path::Path;
 use std::sync::Arc;

@@ -1,0 +1,455 @@
+//! Train-and-serve co-location harness → `BENCH_trainserve.json`.
+//!
+//! The claim under test: because adapters are independent given the
+//! frozen trunk, background training jobs can share the serving
+//! runtime's kernels without taking serving latency down. The harness
+//! stands up a complete gateway (two pre-trained tenants + the training
+//! service), then measures the same closed-loop predict load twice —
+//! once **idle** (no jobs) and once **co-trained** (K jobs submitted
+//! over `POST /train` right before the load starts) — and records each
+//! job's wall time and training throughput from its final `GET /train`
+//! status. The report is schema-pinned (v1) like `BENCH_serve.json` /
+//! `BENCH_kernels.json`; CI's trainserve smoke job validates it and
+//! requires every job to complete and every request to succeed (the
+//! in-flight-predictions-never-error-during-install property, over a
+//! real socket).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::loadgen::{self, LoadgenConfig, LoadReport};
+use crate::coordinator::{FlushPolicy, Server, ServerConfig};
+use crate::data::grammar::World;
+use crate::data::tasks::{self, Metric, TaskKind, TaskSpec};
+use crate::serve::{
+    self, Client, Gateway, GatewayConfig, TrainJobRequest, TrainJobStatus,
+};
+use crate::store::AdapterStore;
+use crate::train::{self, PretrainConfig, ServiceConfig, TrainConfig, TrainService};
+use crate::util::json::Json;
+use crate::util::timer::Samples;
+
+/// Harness knobs.
+#[derive(Debug, Clone)]
+pub struct TrainServeConfig {
+    pub preset: String,
+    /// Concurrent training jobs in the co-trained phase (= pool workers).
+    pub jobs: usize,
+    /// Predict requests per phase.
+    pub requests: u64,
+    /// Closed-loop client threads.
+    pub concurrency: usize,
+    /// Epochs per training job.
+    pub job_epochs: usize,
+    /// Training-set size per job.
+    pub job_n_train: usize,
+    /// Adapter size for tenants and jobs.
+    pub m: usize,
+    /// MLM pre-training steps when no cached base exists.
+    pub pretrain_steps: usize,
+    /// How long to wait for jobs to finish after the co-trained phase.
+    pub job_timeout: Duration,
+}
+
+impl Default for TrainServeConfig {
+    fn default() -> Self {
+        TrainServeConfig {
+            preset: "test".to_string(),
+            jobs: 2,
+            requests: 120,
+            concurrency: 2,
+            job_epochs: 3,
+            job_n_train: 240,
+            m: 8,
+            pretrain_steps: 120,
+            job_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+/// One phase's serving-side numbers.
+#[derive(Debug, Clone)]
+pub struct PhaseStats {
+    pub requests: u64,
+    pub errors: u64,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub latencies: Samples,
+}
+
+impl PhaseStats {
+    fn from_report(r: &LoadReport) -> PhaseStats {
+        PhaseStats {
+            requests: r.requests,
+            errors: r.errors,
+            wall_s: r.wall_s,
+            throughput_rps: r.throughput_rps(),
+            latencies: Samples { durs: r.all.durs.clone() },
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("latency_ms", loadgen::latency_json(&self.latencies)),
+        ])
+    }
+}
+
+/// One training job's outcome, from its final `GET /train/<id>` status.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job_id: u64,
+    pub task: String,
+    pub status: String,
+    pub wall_s: f64,
+    pub steps: usize,
+    pub total_steps: usize,
+    pub steps_per_sec: f64,
+    pub best_val: Option<f64>,
+    pub version: Option<usize>,
+}
+
+impl JobOutcome {
+    fn from_status(s: &TrainJobStatus) -> JobOutcome {
+        JobOutcome {
+            job_id: s.job_id,
+            task: s.task.clone(),
+            status: s.status.clone(),
+            wall_s: s.wall_s,
+            steps: s.step,
+            total_steps: s.total_steps,
+            steps_per_sec: s.steps_per_sec,
+            best_val: s.best_val,
+            version: s.version,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("job_id", Json::num(self.job_id as f64)),
+            ("task", Json::str(&self.task)),
+            ("status", Json::str(&self.status)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("steps", Json::num(self.steps as f64)),
+            ("total_steps", Json::num(self.total_steps as f64)),
+            ("steps_per_sec", Json::num(self.steps_per_sec)),
+        ];
+        if let Some(v) = self.best_val {
+            pairs.push(("best_val", Json::num(v)));
+        }
+        if let Some(v) = self.version {
+            pairs.push(("version", Json::num(v as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// The whole run: idle vs co-trained serving plus per-job outcomes.
+#[derive(Debug)]
+pub struct TrainServeReport {
+    pub idle: PhaseStats,
+    pub cotrained: PhaseStats,
+    pub jobs: Vec<JobOutcome>,
+}
+
+impl TrainServeReport {
+    /// The `BENCH_trainserve.json` document (schema v1).
+    pub fn to_json(&self, cfg: &TrainServeConfig) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("trainserve")),
+            ("schema_version", Json::num(1.0)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("preset", Json::str(&cfg.preset)),
+                    ("jobs", Json::num(cfg.jobs as f64)),
+                    ("requests", Json::num(cfg.requests as f64)),
+                    ("concurrency", Json::num(cfg.concurrency as f64)),
+                    ("job_epochs", Json::num(cfg.job_epochs as f64)),
+                    ("job_n_train", Json::num(cfg.job_n_train as f64)),
+                    ("m", Json::num(cfg.m as f64)),
+                ]),
+            ),
+            (
+                "serving",
+                Json::obj(vec![
+                    ("idle", self.idle.to_json()),
+                    ("cotrained", self.cotrained.to_json()),
+                ]),
+            ),
+            ("jobs", Json::arr(self.jobs.iter().map(JobOutcome::to_json))),
+        ])
+    }
+}
+
+fn tenant_spec(name: &str, seed: u64) -> TaskSpec {
+    TaskSpec {
+        name: name.to_string(),
+        kind: TaskKind::Cls { n_classes: 2, pair: false },
+        metric: Metric::Accuracy,
+        n_train: 240,
+        n_val: 48,
+        n_test: 48,
+        purity: 0.85,
+        noise: 0.0,
+        seed,
+    }
+}
+
+/// Stand up the gateway, run both phases, wait out the jobs.
+pub fn run(cfg: &TrainServeConfig) -> Result<TrainServeReport> {
+    let rt = Arc::new(crate::runtime::Runtime::open(
+        Path::new("artifacts"),
+        &cfg.preset,
+    )?);
+    let world = World::new(rt.manifest.dims.vocab, 0);
+    let base = train::load_or_pretrain(
+        &rt,
+        &world,
+        &PretrainConfig { steps: cfg.pretrain_steps, ..Default::default() },
+        Path::new(&format!("runs/base_{}.bank", cfg.preset)),
+    )?;
+
+    // two pre-trained tenants so the serving side has real traffic
+    let store = Arc::new(AdapterStore::in_memory());
+    let mut classes = BTreeMap::new();
+    let exe = format!("cls_train_adapter_m{}", cfg.m);
+    for (name, seed) in [("tsa", 11u64), ("tsb", 12u64)] {
+        let data = tasks::generate(&world, &tenant_spec(name, seed), rt.manifest.dims.seq);
+        let res = train::train_task(
+            &rt,
+            &TrainConfig::new(&exe, 1e-3, 3, 0),
+            &data,
+            &base,
+        )?;
+        store.register(name, &res.model, res.val_score)?;
+        classes.insert(name.to_string(), 2usize);
+        println!("  tenant {name}: val {:.3}", res.val_score);
+    }
+
+    let server = Arc::new(Server::start(
+        rt.clone(),
+        &store,
+        &base,
+        &classes,
+        ServerConfig {
+            flush: FlushPolicy {
+                max_batch: rt.manifest.batch,
+                max_delay: Duration::from_millis(2),
+            },
+            executors: 2,
+            ..Default::default()
+        },
+    )?);
+    let store_t = store.clone();
+    let server_t = server.clone();
+    let install = move |task: &str,
+                        n_classes: usize,
+                        val: f64,
+                        model: &crate::eval::TaskModel| {
+        serve::install_trained(&store_t, &server_t, task, n_classes, val, model)
+            .map(|meta| meta.version)
+    };
+    let trainer = Arc::new(TrainService::start(
+        rt.clone(),
+        Arc::new(base),
+        world,
+        ServiceConfig { workers: cfg.jobs.max(1), ..Default::default() },
+        Box::new(install),
+    )?);
+    let gw = Gateway::start_with_trainer(
+        rt,
+        store,
+        server,
+        Some(trainer),
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )?;
+    let addr = gw.local_addr().to_string();
+
+    let load_cfg = |seed: u64| LoadgenConfig {
+        addr: addr.clone(),
+        tasks: vec!["tsa".into(), "tsb".into()],
+        concurrency: cfg.concurrency,
+        requests: cfg.requests,
+        seed,
+        ..Default::default()
+    };
+
+    // phase 1: serving alone
+    println!("  idle phase: {} requests …", cfg.requests);
+    let idle = loadgen::run(&load_cfg(1))?;
+    ensure!(idle.errors == 0, "{} idle-phase request(s) failed", idle.errors);
+
+    // phase 2: K training jobs submitted, then the identical load
+    let mut client = Client::connect(&addr)?;
+    let mut job_ids = Vec::new();
+    for i in 0..cfg.jobs {
+        let mut req = TrainJobRequest::new(&format!("job{i}"));
+        req.m = Some(cfg.m);
+        req.epochs = Some(cfg.job_epochs);
+        req.n_train = Some(cfg.job_n_train);
+        req.purity = Some(0.85);
+        req.data_seed = Some(100 + i as u64);
+        req.seed = Some(0);
+        let status = client.submit_train(&req)?;
+        println!(
+            "  submitted job {} ({}, {} total steps)",
+            status.job_id, status.task, status.total_steps
+        );
+        job_ids.push(status.job_id);
+    }
+    println!("  co-trained phase: {} requests …", cfg.requests);
+    let cotrained = loadgen::run(&load_cfg(2))?;
+    ensure!(
+        cotrained.errors == 0,
+        "{} co-trained-phase request(s) failed",
+        cotrained.errors
+    );
+
+    // wait for every job and collect its final status
+    let deadline = Instant::now() + cfg.job_timeout;
+    let mut outcomes = Vec::new();
+    for id in job_ids {
+        loop {
+            let s = client.train_status(id)?;
+            match s.status.as_str() {
+                "completed" => {
+                    println!(
+                        "  job {id} done in {:.2}s ({:.1} steps/s, val {:.3})",
+                        s.wall_s,
+                        s.steps_per_sec,
+                        s.best_val.unwrap_or(f64::NAN)
+                    );
+                    outcomes.push(JobOutcome::from_status(&s));
+                    break;
+                }
+                "failed" => bail!(
+                    "job {id} failed: {}",
+                    s.error.as_deref().unwrap_or("(no message)")
+                ),
+                _ => {
+                    if Instant::now() > deadline {
+                        bail!("job {id} still {} after {:?}", s.status, cfg.job_timeout);
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+    }
+    // the trained tasks must now be servable over the same socket
+    let tasks_now = client.tasks()?;
+    for i in 0..cfg.jobs {
+        let name = format!("job{i}");
+        ensure!(
+            tasks_now.iter().any(|t| t.task == name),
+            "completed job's task {name:?} is not in GET /tasks"
+        );
+        let resp = client
+            .predict_text(&name, "moresa zu kari letu")
+            .with_context(|| format!("predicting on hot-installed {name:?}"))?;
+        ensure!(resp.kind == "cls", "unexpected head kind {:?}", resp.kind);
+    }
+    drop(client);
+    gw.shutdown()?;
+
+    Ok(TrainServeReport {
+        idle: PhaseStats::from_report(&idle),
+        cotrained: PhaseStats::from_report(&cotrained),
+        jobs: outcomes,
+    })
+}
+
+/// Atomically persist the report (same contract as the other benches).
+pub fn write_report(path: &Path, report: &Json) -> Result<()> {
+    loadgen::write_report(path, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phase(ms: u64) -> PhaseStats {
+        let mut s = Samples::default();
+        for i in 1..=20u64 {
+            s.record(Duration::from_millis(ms + i % 3));
+        }
+        PhaseStats {
+            requests: 20,
+            errors: 0,
+            wall_s: 0.5,
+            throughput_rps: 40.0,
+            latencies: s,
+        }
+    }
+
+    /// Pins the BENCH_trainserve.json v1 schema CI validates against.
+    #[test]
+    fn report_json_schema() {
+        let report = TrainServeReport {
+            idle: phase(3),
+            cotrained: phase(5),
+            jobs: vec![JobOutcome {
+                job_id: 1,
+                task: "job0".into(),
+                status: "completed".into(),
+                wall_s: 2.5,
+                steps: 90,
+                total_steps: 90,
+                steps_per_sec: 36.0,
+                best_val: Some(0.9),
+                version: Some(1),
+            }],
+        };
+        let cfg = TrainServeConfig::default();
+        let back = Json::parse(&report.to_json(&cfg).to_string()).unwrap();
+        assert_eq!(back.at("bench").as_str(), Some("trainserve"));
+        assert_eq!(back.at("schema_version").as_usize(), Some(1));
+        assert_eq!(back.at("config").at("jobs").as_usize(), Some(2));
+        for phase in ["idle", "cotrained"] {
+            let p = back.at("serving").at(phase);
+            assert_eq!(p.at("requests").as_usize(), Some(20), "{phase}");
+            assert_eq!(p.at("errors").as_usize(), Some(0), "{phase}");
+            assert!(p.at("throughput_rps").as_f64().unwrap() > 0.0);
+            for key in ["mean", "p50", "p95", "p99", "max"] {
+                assert!(
+                    p.at("latency_ms").at(key).as_f64().is_some(),
+                    "{phase}.latency_ms.{key}"
+                );
+            }
+        }
+        let jobs = back.at("jobs").as_arr().unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].at("status").as_str(), Some("completed"));
+        assert_eq!(jobs[0].at("version").as_usize(), Some(1));
+        assert!(jobs[0].at("steps_per_sec").as_f64().unwrap() > 0.0);
+        assert!(jobs[0].at("wall_s").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn job_outcome_without_val_or_version_serializes() {
+        let j = JobOutcome {
+            job_id: 2,
+            task: "j".into(),
+            status: "failed".into(),
+            wall_s: 0.1,
+            steps: 3,
+            total_steps: 90,
+            steps_per_sec: 30.0,
+            best_val: None,
+            version: None,
+        }
+        .to_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert!(back.get("best_val").is_none());
+        assert!(back.get("version").is_none());
+        assert_eq!(back.at("status").as_str(), Some("failed"));
+    }
+}

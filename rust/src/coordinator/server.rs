@@ -328,6 +328,9 @@ pub struct Server {
     base: Arc<NamedTensors>,
     banks: SharedBanks,
     mode: ExecMode,
+    /// Serializes registration flows (store append + install) across
+    /// producers — see [`Server::registration_lock`].
+    reg_serial: Mutex<()>,
     /// Live metrics (also returned, aggregated, from [`Server::shutdown`]).
     pub metrics: Arc<Mutex<ServerMetrics>>,
     /// Requests rejected by backpressure (`submit` on a full queue).
@@ -456,9 +459,21 @@ impl Server {
             base,
             banks,
             mode,
+            reg_serial: Mutex::new(()),
             metrics,
             rejected,
         })
+    }
+
+    /// Take the registration serialization lock. Every producer that
+    /// appends to a store **and** installs into this server (the
+    /// gateway's `POST /tasks`, a completing training job) must hold this
+    /// across both operations so store version order matches executor-side
+    /// install order — otherwise two producers finishing the same task
+    /// concurrently could leave the server serving version N while the
+    /// store's latest is N+1.
+    pub fn registration_lock(&self) -> std::sync::MutexGuard<'_, ()> {
+        self.reg_serial.lock().unwrap()
     }
 
     /// The execution mode this server resolved to (fused requests fall

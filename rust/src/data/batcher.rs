@@ -26,6 +26,14 @@ pub struct Batch {
 }
 
 impl Batch {
+    /// Assemble one batch from explicit row indices, padded to `batch`
+    /// rows. Public for callers that own the epoch order themselves (the
+    /// resumable `train::TrainState` checkpoints its shuffled order, so it
+    /// cannot use the borrowing [`EpochIter`]).
+    pub fn from_rows(split: &Split, idx: &[usize], batch: usize) -> Batch {
+        Batch::gather(split, idx, batch)
+    }
+
     fn gather(split: &Split, idx: &[usize], batch: usize) -> Batch {
         let seq = split.seq;
         let mut tokens = Vec::with_capacity(batch * seq);

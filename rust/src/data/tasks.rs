@@ -32,6 +32,19 @@ impl Metric {
             Metric::SpanF1 => "span_f1",
         }
     }
+
+    /// Inverse of [`Metric::name`] (job descriptors round-trip through
+    /// JSON).
+    pub fn from_name(s: &str) -> Option<Metric> {
+        Some(match s {
+            "accuracy" => Metric::Accuracy,
+            "f1" => Metric::F1,
+            "matthews" => Metric::Matthews,
+            "spearman" => Metric::Spearman,
+            "span_f1" => Metric::SpanF1,
+            _ => return None,
+        })
+    }
 }
 
 /// Task family — decides head/artifact kind.

@@ -8,21 +8,27 @@
 //!                       [--m M] [--lr LR] [--epochs E] [--seed S]
 //! adapterbert stream    [--tasks a,b,c] [--store DIR]
 //! adapterbert serve     [--tasks a,b] [--max-batch B] [--executors E] [--fuse]
-//!                       [--port P [--duration S] [--workers W]] [--requests N]
+//!                       [--port P [--duration S] [--workers W]
+//!                        [--train-workers T]] [--requests N]
 //! adapterbert loadgen   --addr HOST:PORT [--tasks a,b | --tasks N] [--rate R]
 //!                       [--concurrency C] [--requests N] [--duration S]
 //!                       [--out FILE]
 //! adapterbert baseline  --task NAME [--budget N]
 //! adapterbert bench     <table1|table2|fig3|fig3x|fig4|fig5|fig6|fig7|sizes|
-//!                        params|kernels|all> [--full]
+//!                        params|kernels|trainserve|all> [--full]
 //!                       (`kernels` also takes --threads 1,2,4 --out FILE and
-//!                        writes BENCH_kernels.json; it is not part of `all`)
+//!                        writes BENCH_kernels.json; `trainserve` takes
+//!                        --jobs K --requests N --out FILE and writes
+//!                        BENCH_trainserve.json; neither is part of `all`)
 //! adapterbert list-tasks
 //! ```
 //!
 //! `serve` without `--port` runs the in-process demo; with `--port` it
-//! starts the networked gateway (`serve::Gateway`, port 0 = ephemeral).
-//! `loadgen` drives a running gateway and writes `BENCH_serve.json`.
+//! starts the networked gateway (`serve::Gateway`, port 0 = ephemeral)
+//! with an online training service attached (`POST /train` trains new
+//! tasks next to live traffic and hot-installs them; `--train-workers 0`
+//! disables it). `loadgen` drives a running gateway and writes
+//! `BENCH_serve.json`.
 //!
 //! Python is never on this path: with PJRT linked the AOT artifacts are
 //! used, and otherwise `--backend auto` (the default) runs everything on
@@ -135,14 +141,20 @@ fn print_help() {
          \x20 serve      multi-task serving: in-process demo, or the HTTP\n\
          \x20            gateway with hot task registration (--port);\n\
          \x20            --fuse batches rows from many tasks into one\n\
-         \x20            shared-trunk forward (native backend)\n\
+         \x20            shared-trunk forward (native backend); the\n\
+         \x20            gateway also accepts POST /train — background\n\
+         \x20            training jobs with resumable checkpoints that\n\
+         \x20            hot-install on completion (--train-workers)\n\
          \x20 loadgen    closed-loop load harness against a running\n\
          \x20            gateway; writes BENCH_serve.json. --tasks N\n\
          \x20            --rate R is the many-tasks/low-rate preset\n\
          \x20 baseline   no-BERT baseline search for one task\n\
          \x20 bench      regenerate paper tables/figures (see ARCHITECTURE.md);\n\
          \x20            `bench kernels` sweeps the native GEMM/attention\n\
-         \x20            kernels and writes BENCH_kernels.json\n\
+         \x20            kernels and writes BENCH_kernels.json;\n\
+         \x20            `bench trainserve` measures serving latency with\n\
+         \x20            0 vs K co-located training jobs and writes\n\
+         \x20            BENCH_trainserve.json\n\
          \x20 list-tasks show the synthetic task suites\n\
          \n\
          common flags: --preset default|test  --full (bench)\n\
@@ -346,7 +358,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     // --port: expose the coordinator over HTTP (the networked gateway)
     if let Some(port) = args.get("port") {
-        use adapterbert::serve::{Gateway, GatewayConfig, HttpConfig};
+        use adapterbert::serve::{self, Gateway, GatewayConfig, HttpConfig};
+        use adapterbert::train::{ServiceConfig, TrainService};
         let port: u16 = port
             .parse()
             .map_err(|e| anyhow::anyhow!("--port {port:?}: {e}"))?;
@@ -359,10 +372,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_inflight: args.parse_num("max-inflight", 256usize)?,
             reply_timeout: Duration::from_secs(30),
         };
-        let gw = Gateway::start(rt.clone(), store.clone(), server, gcfg)?;
+        let server = Arc::new(server);
+        // --train-workers N: background training jobs next to serving
+        // (0 disables POST /train). Checkpoints live under the disk
+        // store's `_jobs/` area when --store is given.
+        let train_workers: usize = args.parse_num("train-workers", 1usize)?;
+        let trainer = if train_workers > 0 {
+            let store_t = store.clone();
+            let server_t = server.clone();
+            let install = move |task: &str,
+                                n_classes: usize,
+                                val: f64,
+                                model: &adapterbert::eval::TaskModel| {
+                serve::install_trained(&store_t, &server_t, task, n_classes, val, model)
+                    .map(|meta| meta.version)
+            };
+            let jcfg = ServiceConfig {
+                workers: train_workers,
+                ckpt_dir: args.get("store").map(|d| Path::new(d).join("_jobs")),
+                checkpoint_every: 1,
+            };
+            // the gateway branch never touches `base` again (Server::start
+            // merged it into the bank cache already) — move it, don't
+            // duplicate the whole trunk in RAM for the process lifetime
+            let svc = TrainService::start(
+                rt.clone(),
+                Arc::new(base),
+                world.clone(),
+                jcfg,
+                Box::new(install),
+            )?;
+            let recovered = svc.recover()?;
+            if recovered > 0 {
+                println!("recovered {recovered} checkpointed training job(s)");
+            }
+            Some(Arc::new(svc))
+        } else {
+            None
+        };
+        let gw =
+            Gateway::start_with_trainer(rt.clone(), store.clone(), server, trainer, gcfg)?;
         println!("gateway listening on http://{}", gw.local_addr());
         println!(
-            "routes: GET /health /tasks /metrics | POST /predict /predict_ids /tasks"
+            "routes: GET /health /tasks /metrics /train[/<id>] | \
+             POST /predict /predict_ids /tasks /train"
         );
         let duration: f64 = args.parse_num("duration", 0.0f64)?;
         if duration > 0.0 {
@@ -596,6 +649,48 @@ fn bench_kernels(args: &Args, preset: &str, quick: bool) -> Result<()> {
     Ok(())
 }
 
+/// `bench trainserve`: serving latency with 0 vs K co-located training
+/// jobs, over a real socket. Self-contained (does its own pretrain +
+/// tenant setup), so it runs before (and without) `Ctx::open`.
+fn bench_trainserve(args: &Args, preset: &str) -> Result<()> {
+    use adapterbert::bench::trainserve;
+    let cfg = trainserve::TrainServeConfig {
+        preset: preset.to_string(),
+        jobs: args.parse_num("jobs", 2usize)?,
+        requests: args.parse_num("requests", 120u64)?,
+        concurrency: args.parse_num("concurrency", 2usize)?,
+        job_epochs: args.parse_num("epochs", 3usize)?,
+        job_n_train: args.parse_num("n-train", 240usize)?,
+        m: args.parse_num("m", 8usize)?,
+        pretrain_steps: args
+            .parse_num("pretrain-steps", if preset == "test" { 120 } else { 800 })?,
+        ..Default::default()
+    };
+    println!("\n########## bench trainserve (jobs={}) ##########", cfg.jobs);
+    let t0 = std::time::Instant::now();
+    let report = trainserve::run(&cfg)?;
+    for (name, p) in [("idle", &report.idle), ("co-trained", &report.cotrained)] {
+        println!(
+            "  {name:10} {:4} req  {:6.1} req/s  p50 {:7.2}ms  p95 {:7.2}ms",
+            p.requests,
+            p.throughput_rps,
+            p.latencies.pctl_s(50.0) * 1e3,
+            p.latencies.pctl_s(95.0) * 1e3,
+        );
+    }
+    for j in &report.jobs {
+        println!(
+            "  job {:3} {:10} {:9} wall {:6.2}s  {:6.1} steps/s",
+            j.job_id, j.task, j.status, j.wall_s, j.steps_per_sec
+        );
+    }
+    let out = args.get_or("out", "BENCH_trainserve.json");
+    trainserve::write_report(Path::new(&out), &report.to_json(&cfg))?;
+    println!("wrote {out}");
+    println!("[bench trainserve] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     // every positional is a bench name; no names means the full set
     let mut wanted: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
@@ -604,6 +699,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if wanted.contains(&"kernels") {
         bench_kernels(args, &preset, quick)?;
         wanted.retain(|w| *w != "kernels");
+        if wanted.is_empty() {
+            return Ok(());
+        }
+    }
+    if wanted.contains(&"trainserve") {
+        bench_trainserve(args, &preset)?;
+        wanted.retain(|w| *w != "trainserve");
         if wanted.is_empty() {
             return Ok(());
         }

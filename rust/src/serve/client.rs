@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 use super::http;
 use super::protocol::{
     Health, PredictRequest, PredictResponse, RegisterRequest, RegisterResponse,
-    TaskEntry,
+    TaskEntry, TrainJobRequest, TrainJobStatus,
 };
 use crate::util::json::Json;
 
@@ -130,5 +130,29 @@ impl Client {
     pub fn register_task(&mut self, req: &RegisterRequest) -> Result<RegisterResponse> {
         let j = self.expect_ok("POST", "/tasks", Some(&req.to_json()))?;
         RegisterResponse::from_json(&j)
+    }
+
+    /// Start a background training job (`POST /train`); the returned
+    /// status carries the assigned `job_id`.
+    pub fn submit_train(&mut self, req: &TrainJobRequest) -> Result<TrainJobStatus> {
+        let j = self.expect_ok("POST", "/train", Some(&req.to_json()))?;
+        TrainJobStatus::from_json(&j)
+    }
+
+    /// One job's live status (`GET /train/<id>`).
+    pub fn train_status(&mut self, id: u64) -> Result<TrainJobStatus> {
+        let j = self.expect_ok("GET", &format!("/train/{id}"), None)?;
+        TrainJobStatus::from_json(&j)
+    }
+
+    /// Every training job the gateway knows about (`GET /train`).
+    pub fn train_jobs(&mut self) -> Result<Vec<TrainJobStatus>> {
+        let j = self.expect_ok("GET", "/train", None)?;
+        j.at("jobs")
+            .as_arr()
+            .context("jobs must be an array")?
+            .iter()
+            .map(TrainJobStatus::from_json)
+            .collect()
     }
 }

@@ -12,8 +12,15 @@
 //!   constant memory) exposing p50/p95/p99 at `GET /metrics`, plus the
 //!   coordinator's batch/occupancy counters;
 //! * **graceful drain** — [`Gateway::shutdown`] stops the accept loop,
-//!   lets in-flight requests finish and be answered, then drains and
-//!   joins the coordinator. No accepted request is dropped.
+//!   lets in-flight requests finish and be answered, then stops the
+//!   training service (running jobs checkpoint and park) and drains and
+//!   joins the coordinator. No accepted request is dropped;
+//! * **online training** — with a [`TrainService`] attached,
+//!   `POST /train` enqueues a background training job on the same
+//!   runtime that serves traffic and `GET /train[/<id>]` reports its
+//!   progress; a completed job hot-installs via the same
+//!   prepare→store→install seam as `POST /tasks`, so the new task
+//!   answers predictions with zero restart.
 
 use std::collections::BTreeMap;
 use std::net::SocketAddr;
@@ -24,13 +31,17 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::http::{Handler, HttpConfig, HttpRequest, HttpResponse, HttpServer};
-use super::protocol::{PredictRequest, PredictResponse, RegisterRequest, TaskEntry};
+use super::protocol::{
+    PredictRequest, PredictResponse, RegisterRequest, TaskEntry, TrainJobRequest,
+    TrainJobStatus,
+};
 use super::registry;
 use crate::coordinator::server::{Request, Server, ServerMetrics};
 use crate::data::grammar::PAD;
 use crate::runtime::Runtime;
 use crate::store::AdapterStore;
 use crate::tokenizer::Tokenizer;
+use crate::train::TrainService;
 use crate::util::json::Json;
 
 // ---------------------------------------------------------------------------
@@ -160,16 +171,16 @@ struct GatewayStats {
 
 /// Shared state behind the HTTP worker pool.
 pub struct GatewayState {
-    server: Server,
+    server: Arc<Server>,
     store: Arc<AdapterStore>,
     rt: Arc<Runtime>,
     tok: Tokenizer,
     cfg: GatewayConfig,
     inflight: AtomicUsize,
     stats: GatewayStats,
-    /// serializes `POST /tasks` so store version order matches the
-    /// executor-side install order
-    reg_lock: Mutex<()>,
+    /// background training jobs (`POST /train`); absent on gateways
+    /// started without one
+    trainer: Option<Arc<TrainService>>,
 }
 
 /// Final numbers handed back by [`Gateway::shutdown`].
@@ -201,6 +212,22 @@ impl Gateway {
         server: Server,
         cfg: GatewayConfig,
     ) -> Result<Gateway> {
+        Self::start_with_trainer(rt, store, Arc::new(server), None, cfg)
+    }
+
+    /// Like [`Gateway::start`], but with an online training service
+    /// attached: `POST /train` enqueues jobs, completed jobs hot-install
+    /// into `server`. The trainer's install callback is expected to hold
+    /// clones of this `server`/`store` (see `cmd_serve` in `main.rs` for
+    /// the wiring); [`Gateway::shutdown`] stops it before draining the
+    /// coordinator.
+    pub fn start_with_trainer(
+        rt: Arc<Runtime>,
+        store: Arc<AdapterStore>,
+        server: Arc<Server>,
+        trainer: Option<Arc<TrainService>>,
+        cfg: GatewayConfig,
+    ) -> Result<Gateway> {
         let tok = Tokenizer::new(rt.manifest.dims.vocab);
         let state = Arc::new(GatewayState {
             server,
@@ -217,7 +244,7 @@ impl Gateway {
                 timeouts: AtomicU64::new(0),
                 errors: AtomicU64::new(0),
             },
-            reg_lock: Mutex::new(()),
+            trainer,
         });
         let handler: Arc<dyn Handler> = state.clone();
         let http = HttpServer::start(&cfg.addr, cfg.http, handler)?;
@@ -235,7 +262,8 @@ impl Gateway {
     }
 
     /// Graceful shutdown: stop the accept loop, finish and answer every
-    /// in-flight HTTP request, then drain + join the coordinator.
+    /// in-flight HTTP request, stop the training service (running jobs
+    /// checkpoint and park), then drain + join the coordinator.
     pub fn shutdown(self) -> Result<GatewayReport> {
         // 1. transport first: no new connections/requests; workers finish
         //    their current request (including its coordinator reply)
@@ -245,9 +273,21 @@ impl Gateway {
             Ok(s) => s,
             Err(_) => bail!("gateway state still shared after worker join"),
         };
-        // 3. coordinator: refuse new submits, flush queues, join threads
+        // 3. training jobs: checkpoint + park, join workers. Dropping the
+        //    service also drops its install callback's Server/store Arcs,
+        //    which step 4 needs to be the last holder of.
+        if let Some(trainer) = state.trainer {
+            match Arc::try_unwrap(trainer) {
+                Ok(t) => t.shutdown(),
+                Err(_) => bail!("training service still shared at shutdown"),
+            }
+        }
+        // 4. coordinator: refuse new submits, flush queues, join threads
         state.server.drain();
-        let server = state.server.shutdown();
+        let server = match Arc::try_unwrap(state.server) {
+            Ok(s) => s.shutdown(),
+            Err(_) => bail!("coordinator still shared after trainer shutdown"),
+        };
         Ok(GatewayReport {
             server,
             served: state.stats.served.load(Ordering::Relaxed),
@@ -278,6 +318,11 @@ impl Handler for GatewayState {
             ("GET", "/metrics") => self.metrics(),
             ("POST", "/predict") | ("POST", "/predict_ids") => self.predict(req),
             ("POST", "/tasks") => self.register(req),
+            ("POST", "/train") => self.train_submit(req),
+            ("GET", "/train") => self.train_list(),
+            ("GET", path) if path.starts_with("/train/") => {
+                self.train_status(&path["/train/".len()..])
+            }
             ("GET" | "POST", _) => HttpResponse::error(404, "no such route"),
             _ => HttpResponse::error(405, "method not allowed"),
         }
@@ -457,10 +502,72 @@ impl GatewayState {
         if self.server.is_draining() {
             return HttpResponse::error(503, "server draining");
         }
-        let _serial = self.reg_lock.lock().unwrap();
+        // registration is serialized inside install_trained, via the
+        // server's registration lock shared with the training service
         match registry::register_from_wire(&self.store, &self.server, &rreq) {
             Ok(resp) => HttpResponse::json(200, &resp.to_json()),
             Err(e) => HttpResponse::error(400, &format!("{e:#}")),
+        }
+    }
+
+    /// `POST /train`: resolve the wire request into a job spec, enqueue
+    /// it on the training service, and answer with the job's status
+    /// (carrying the assigned `job_id`).
+    fn train_submit(&self, req: &HttpRequest) -> HttpResponse {
+        let Some(trainer) = &self.trainer else {
+            return HttpResponse::error(
+                503,
+                "no training service attached (start the gateway with training workers)",
+            );
+        };
+        if self.server.is_draining() {
+            return HttpResponse::error(503, "server draining");
+        }
+        let treq = match req.json_body().and_then(|j| TrainJobRequest::from_json(&j)) {
+            Ok(t) => t,
+            Err(e) => return HttpResponse::error(400, &format!("{e:#}")),
+        };
+        let job = match registry::job_spec_from_wire(&treq, &self.rt.manifest) {
+            Ok(j) => j,
+            Err(e) => return HttpResponse::error(400, &format!("{e:#}")),
+        };
+        match trainer.submit(job) {
+            Ok(id) => match trainer.status(id) {
+                Some(rec) => {
+                    HttpResponse::json(200, &TrainJobStatus::from_record(&rec).to_json())
+                }
+                None => HttpResponse::error(500, "job vanished after submit"),
+            },
+            Err(e) => HttpResponse::error(400, &format!("{e:#}")),
+        }
+    }
+
+    /// `GET /train`: every job, by id.
+    fn train_list(&self) -> HttpResponse {
+        let Some(trainer) = &self.trainer else {
+            return HttpResponse::error(503, "no training service attached");
+        };
+        let jobs: Vec<Json> = trainer
+            .jobs()
+            .iter()
+            .map(|r| TrainJobStatus::from_record(r).to_json())
+            .collect();
+        HttpResponse::json(200, &Json::obj(vec![("jobs", Json::arr(jobs))]))
+    }
+
+    /// `GET /train/<id>`: one job's live status.
+    fn train_status(&self, id: &str) -> HttpResponse {
+        let Some(trainer) = &self.trainer else {
+            return HttpResponse::error(503, "no training service attached");
+        };
+        let Ok(id) = id.parse::<u64>() else {
+            return HttpResponse::error(400, &format!("bad job id {id:?}"));
+        };
+        match trainer.status(id) {
+            Some(rec) => {
+                HttpResponse::json(200, &TrainJobStatus::from_record(&rec).to_json())
+            }
+            None => HttpResponse::error(404, &format!("no job {id} (see GET /train)")),
         }
     }
 

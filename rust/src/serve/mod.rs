@@ -12,11 +12,18 @@
 //! * `gateway` — admission control on top of the router's backpressure,
 //!   per-task latency histograms with p50/p95/p99 at `GET /metrics`,
 //!   graceful drain on shutdown;
-//! * `registry` — `POST /tasks` hot registration: append the bank to the
+//! * `registry` — `POST /tasks` hot registration (append the bank to the
 //!   `AdapterStore` and swap it into the executors **while traffic for
-//!   other tasks keeps flowing**;
+//!   other tasks keeps flowing**) and the `POST /train` wire→job
+//!   resolution; both producers share one prepare→store→install seam
+//!   ([`registry::install_trained`]);
 //! * `client` — blocking Rust client (used by `bench::loadgen` and any
 //!   remote trainer).
+//!
+//! With a `train::TrainService` attached ([`Gateway::start_with_trainer`]),
+//! the gateway closes the paper's train-and-serve loop over the network:
+//! `POST /train` → background job on the shared runtime → hot-install →
+//! `POST /predict` for the new task, with zero restarts.
 //!
 //! ```text
 //!   HTTP clients ──► accept loop ─► worker pool ─► Gateway (admission,
@@ -38,5 +45,6 @@ pub use gateway::{Gateway, GatewayConfig, GatewayReport, LatencyHist};
 pub use http::{HttpConfig, HttpServer};
 pub use protocol::{
     Health, PredictRequest, PredictResponse, RegisterRequest, RegisterResponse,
-    TaskEntry,
+    TaskEntry, TrainJobRequest, TrainJobStatus,
 };
+pub use registry::{install_trained, job_spec_from_wire};

@@ -8,6 +8,9 @@
 //! | `POST /predict`  | [`PredictRequest`] (text)  | [`PredictResponse`] |
 //! | `POST /predict_ids` | [`PredictRequest`] (ids) | [`PredictResponse`] |
 //! | `POST /tasks`    | [`RegisterRequest`]        | [`RegisterResponse`]|
+//! | `POST /train`    | [`TrainJobRequest`]        | [`TrainJobStatus`]  |
+//! | `GET  /train`    | —                          | `{"jobs":[TrainJobStatus…]}` |
+//! | `GET  /train/<id>` | —                        | [`TrainJobStatus`]  |
 //! | `GET  /metrics`  | —                          | per-task latency histograms (raw JSON) |
 //!
 //! Trained banks travel as lowercase hex of `NamedTensors::to_bytes` —
@@ -20,6 +23,7 @@ use crate::coordinator::server::Response;
 use crate::eval::TaskModel;
 use crate::model::params::NamedTensors;
 use crate::store::BankMeta;
+use crate::train::JobRecord;
 use crate::util::json::Json;
 
 // ---------------------------------------------------------------------------
@@ -89,6 +93,18 @@ fn opt_str(j: &Json, key: &str) -> Option<String> {
 
 fn opt_usize(j: &Json, key: &str) -> Option<usize> {
     j.get(key).and_then(Json::as_usize)
+}
+
+fn opt_f64(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(Json::as_f64)
+}
+
+fn opt_u64(j: &Json, key: &str) -> Option<u64> {
+    j.get(key).and_then(Json::as_f64).map(|n| n as u64)
+}
+
+fn opt_bool(j: &Json, key: &str) -> Option<bool> {
+    j.get(key).and_then(Json::as_bool)
 }
 
 fn opt_i32_vec(j: &Json, key: &str) -> Result<Option<Vec<i32>>> {
@@ -462,6 +478,227 @@ impl RegisterResponse {
     }
 }
 
+/// `POST /train` request: start a background training job for `task`.
+///
+/// Every field except `task` is optional. A `task` naming a built-in
+/// suite task trains that task; any other name defines a custom
+/// synthetic classification task (`n_classes`, `pair`, `purity`,
+/// `noise`, `data_seed` shape its data — see `serve::registry` for the
+/// defaults). `method`/`m`/`lr`/`epochs`/`seed` mirror the CLI `train`
+/// flags.
+#[derive(Debug, Clone, Default)]
+pub struct TrainJobRequest {
+    pub task: String,
+    /// adapter (default) | lnonly | topk:K | finetune
+    pub method: Option<String>,
+    /// adapter size (adapter method; default 8)
+    pub m: Option<usize>,
+    pub lr: Option<f64>,
+    pub epochs: Option<usize>,
+    /// training seed (init + epoch shuffling)
+    pub seed: Option<u64>,
+    /// training-set size override
+    pub n_train: Option<usize>,
+    /// validation-set size override (test split follows it)
+    pub n_val: Option<usize>,
+    /// custom tasks only: class count (default 2)
+    pub n_classes: Option<usize>,
+    /// custom tasks only: sentence-pair encoding (default false)
+    pub pair: Option<bool>,
+    /// custom tasks only: word-from-topic probability (default 0.8)
+    pub purity: Option<f64>,
+    /// custom tasks only: label-noise rate (default 0)
+    pub noise: Option<f64>,
+    /// custom tasks only: data-generation seed (default: name hash)
+    pub data_seed: Option<u64>,
+}
+
+impl TrainJobRequest {
+    /// A job request with every knob at its default.
+    pub fn new(task: &str) -> TrainJobRequest {
+        TrainJobRequest { task: task.to_string(), ..Default::default() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("task", Json::str(&self.task))];
+        if let Some(v) = &self.method {
+            pairs.push(("method", Json::str(v)));
+        }
+        if let Some(v) = self.m {
+            pairs.push(("m", Json::num(v as f64)));
+        }
+        if let Some(v) = self.lr {
+            pairs.push(("lr", Json::num(v)));
+        }
+        if let Some(v) = self.epochs {
+            pairs.push(("epochs", Json::num(v as f64)));
+        }
+        if let Some(v) = self.seed {
+            pairs.push(("seed", Json::num(v as f64)));
+        }
+        if let Some(v) = self.n_train {
+            pairs.push(("n_train", Json::num(v as f64)));
+        }
+        if let Some(v) = self.n_val {
+            pairs.push(("n_val", Json::num(v as f64)));
+        }
+        if let Some(v) = self.n_classes {
+            pairs.push(("n_classes", Json::num(v as f64)));
+        }
+        if let Some(v) = self.pair {
+            pairs.push(("pair", Json::Bool(v)));
+        }
+        if let Some(v) = self.purity {
+            pairs.push(("purity", Json::num(v)));
+        }
+        if let Some(v) = self.noise {
+            pairs.push(("noise", Json::num(v)));
+        }
+        if let Some(v) = self.data_seed {
+            pairs.push(("data_seed", Json::num(v as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainJobRequest> {
+        Ok(TrainJobRequest {
+            task: get_str(j, "task")?,
+            method: opt_str(j, "method"),
+            m: opt_usize(j, "m"),
+            lr: opt_f64(j, "lr"),
+            epochs: opt_usize(j, "epochs"),
+            seed: opt_u64(j, "seed"),
+            n_train: opt_usize(j, "n_train"),
+            n_val: opt_usize(j, "n_val"),
+            n_classes: opt_usize(j, "n_classes"),
+            pair: opt_bool(j, "pair"),
+            purity: opt_f64(j, "purity"),
+            noise: opt_f64(j, "noise"),
+            data_seed: opt_u64(j, "data_seed"),
+        })
+    }
+}
+
+/// `POST /train` / `GET /train/<id>` response: one job's live status.
+/// `loss`/`best_val` are absent until the first step/eval (JSON has no
+/// NaN); `version` appears when the job completes and the task becomes
+/// servable.
+#[derive(Debug, Clone)]
+pub struct TrainJobStatus {
+    pub job_id: u64,
+    pub task: String,
+    /// queued | running | completed | failed
+    pub status: String,
+    pub epoch: usize,
+    pub total_epochs: usize,
+    pub step: usize,
+    pub total_steps: usize,
+    pub loss: Option<f64>,
+    pub best_val: Option<f64>,
+    pub steps_per_sec: f64,
+    pub wall_s: f64,
+    /// `(epoch, val score)` per evaluated epoch.
+    pub val_history: Vec<(usize, f64)>,
+    pub version: Option<usize>,
+    pub error: Option<String>,
+    pub resumed: bool,
+}
+
+impl TrainJobStatus {
+    /// Build from a service-side [`JobRecord`].
+    pub fn from_record(r: &JobRecord) -> TrainJobStatus {
+        TrainJobStatus {
+            job_id: r.id,
+            task: r.task.clone(),
+            status: r.state.name().to_string(),
+            epoch: r.epoch,
+            total_epochs: r.total_epochs,
+            step: r.step,
+            total_steps: r.total_steps,
+            loss: if r.loss.is_finite() { Some(r.loss) } else { None },
+            best_val: if r.best_val.is_finite() { Some(r.best_val) } else { None },
+            steps_per_sec: r.steps_per_sec,
+            wall_s: r.wall_s,
+            val_history: r.val_history.clone(),
+            version: r.version,
+            error: r.error.clone(),
+            resumed: r.resumed,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("job_id", Json::num(self.job_id as f64)),
+            ("task", Json::str(&self.task)),
+            ("status", Json::str(&self.status)),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("total_epochs", Json::num(self.total_epochs as f64)),
+            ("step", Json::num(self.step as f64)),
+            ("total_steps", Json::num(self.total_steps as f64)),
+            ("steps_per_sec", Json::num(self.steps_per_sec)),
+            ("wall_s", Json::num(self.wall_s)),
+            (
+                "val_history",
+                Json::arr(self.val_history.iter().map(|&(e, v)| {
+                    Json::arr([Json::num(e as f64), Json::num(v)])
+                })),
+            ),
+            ("resumed", Json::Bool(self.resumed)),
+        ];
+        if let Some(l) = self.loss {
+            pairs.push(("loss", Json::num(l)));
+        }
+        if let Some(v) = self.best_val {
+            pairs.push(("best_val", Json::num(v)));
+        }
+        if let Some(v) = self.version {
+            pairs.push(("version", Json::num(v as f64)));
+        }
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::str(e)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainJobStatus> {
+        let val_history = match j.get("val_history") {
+            Some(v) => {
+                let arr = v.as_arr().context("val_history must be an array")?;
+                let mut out = Vec::with_capacity(arr.len());
+                for row in arr {
+                    let pair = row.as_arr().context("val_history rows are [epoch, val]")?;
+                    if pair.len() != 2 {
+                        bail!("val_history rows are [epoch, val]");
+                    }
+                    out.push((
+                        pair[0].as_usize().context("val_history epoch")?,
+                        pair[1].as_f64().context("val_history score")?,
+                    ));
+                }
+                out
+            }
+            None => Vec::new(),
+        };
+        Ok(TrainJobStatus {
+            job_id: opt_u64(j, "job_id").context("missing job_id")?,
+            task: get_str(j, "task")?,
+            status: get_str(j, "status")?,
+            epoch: get_usize(j, "epoch")?,
+            total_epochs: get_usize(j, "total_epochs")?,
+            step: get_usize(j, "step")?,
+            total_steps: get_usize(j, "total_steps")?,
+            loss: opt_f64(j, "loss"),
+            best_val: opt_f64(j, "best_val"),
+            steps_per_sec: get_f64(j, "steps_per_sec")?,
+            wall_s: get_f64(j, "wall_s")?,
+            val_history,
+            version: opt_usize(j, "version"),
+            error: opt_str(j, "error"),
+            resumed: opt_bool(j, "resumed").unwrap_or(false),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -553,6 +790,80 @@ mod tests {
         assert_eq!(rebuilt.fwd_name(), "cls_fwd_adapter_m8");
         assert_eq!(back.n_classes, 4);
         assert_eq!(back.val_score, 0.91);
+    }
+
+    #[test]
+    fn train_job_request_roundtrip() {
+        let mut req = TrainJobRequest::new("hot3");
+        req.m = Some(4);
+        req.epochs = Some(3);
+        req.n_train = Some(240);
+        req.pair = Some(true);
+        req.purity = Some(0.85);
+        req.data_seed = Some(77);
+        let back =
+            TrainJobRequest::from_json(&Json::parse(&req.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.task, "hot3");
+        assert_eq!(back.m, Some(4));
+        assert_eq!(back.epochs, Some(3));
+        assert_eq!(back.n_train, Some(240));
+        assert_eq!(back.pair, Some(true));
+        assert_eq!(back.purity, Some(0.85));
+        assert_eq!(back.data_seed, Some(77));
+        assert!(back.method.is_none() && back.lr.is_none() && back.noise.is_none());
+        // task is required
+        assert!(TrainJobRequest::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn train_job_status_roundtrip_and_nan_safety() {
+        use crate::train::{JobRecord, JobSpec, TrainConfig};
+        use crate::data::tasks::{Metric, TaskKind, TaskSpec};
+        let spec = JobSpec {
+            task: TaskSpec {
+                name: "t".into(),
+                kind: TaskKind::Cls { n_classes: 2, pair: false },
+                metric: Metric::Accuracy,
+                n_train: 240,
+                n_val: 48,
+                n_test: 48,
+                purity: 0.8,
+                noise: 0.0,
+                seed: 1,
+            },
+            train: TrainConfig::new("cls_train_adapter_m4", 1e-3, 3, 0),
+        };
+        let fresh = JobRecord::new(7, &spec, 90);
+        // NaN loss/best_val before any step must serialize as *absent*,
+        // not produce invalid JSON
+        let wire = TrainJobStatus::from_record(&fresh);
+        assert!(wire.loss.is_none() && wire.best_val.is_none());
+        let text = wire.to_json().to_string();
+        assert!(!text.contains("NaN"), "{text}");
+        let back = TrainJobStatus::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.job_id, 7);
+        assert_eq!(back.status, "queued");
+        assert_eq!(back.total_steps, 90);
+        assert!(back.loss.is_none());
+        assert!(!back.resumed);
+
+        let mut done = fresh;
+        done.loss = 0.4;
+        done.best_val = 0.9;
+        done.val_history = vec![(0, 0.7), (1, 0.9)];
+        done.version = Some(2);
+        done.resumed = true;
+        let back = TrainJobStatus::from_json(
+            &Json::parse(&TrainJobStatus::from_record(&done).to_json().to_string())
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.loss, Some(0.4));
+        assert_eq!(back.best_val, Some(0.9));
+        assert_eq!(back.val_history, vec![(0, 0.7), (1, 0.9)]);
+        assert_eq!(back.version, Some(2));
+        assert!(back.resumed);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Hot registration: `POST /tasks` → store append → live bank swap.
+//! Hot registration: `POST /tasks` → store append → live bank swap, and
+//! the wire→job resolution for `POST /train`.
 //!
 //! This operationalizes the store's append-only guarantee end to end: a
 //! new task (or a new version of an existing one) becomes servable over
@@ -14,14 +15,47 @@
 //!    banks visible to executors. In-flight batches for other tasks hold
 //!    their own `Arc`s and never block on, or observe, the swap.
 //!
-//! The gateway serializes calls into this module (`reg_lock`), so store
-//! version order always matches executor-side install order.
+//! [`install_trained`] is that sequence under the server's
+//! [`registration lock`](crate::coordinator::Server::registration_lock),
+//! shared by both producers — the wire path (`POST /tasks`, a remote
+//! trainer pushing a finished bank) and the in-process training service
+//! (a background job completing) — so store version order always matches
+//! executor-side install order no matter who finishes first.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use super::protocol::{RegisterRequest, RegisterResponse};
+use super::protocol::{RegisterRequest, RegisterResponse, TrainJobRequest};
 use crate::coordinator::server::Server;
-use crate::store::AdapterStore;
+use crate::data::tasks::{self, Metric, TaskKind, TaskSpec};
+use crate::eval::TaskModel;
+use crate::runtime::Manifest;
+use crate::store::{AdapterStore, BankMeta};
+use crate::train::{JobSpec, TrainConfig};
+
+/// Prepare → store append → install, under the server's registration
+/// lock. The single entry point for making a trained bank servable; a
+/// bank that fails validation leaves both the store and the server
+/// untouched.
+pub fn install_trained(
+    store: &AdapterStore,
+    server: &Server,
+    task: &str,
+    n_classes: usize,
+    val_score: f64,
+    model: &TaskModel,
+) -> Result<BankMeta> {
+    let _serial = server.registration_lock();
+    // validate + build first: a bad bank must not leave a store version
+    // behind that can never serve
+    let prepared = server
+        .prepare_task(n_classes, model)
+        .with_context(|| format!("bank for task {task:?} is not servable"))?;
+    let meta = store
+        .register(task, model, val_score)
+        .with_context(|| format!("storing bank for task {task:?}"))?;
+    server.install_task(task, prepared);
+    Ok(meta)
+}
 
 /// Handle one wire-format registration against a live server.
 pub fn register_from_wire(
@@ -32,14 +66,204 @@ pub fn register_from_wire(
     let model = req
         .to_model()
         .with_context(|| format!("decoding bank for task {:?}", req.task))?;
-    // validate + build first: a bad bank must not leave a store version
-    // behind that can never serve
-    let prepared = server
-        .prepare_task(req.n_classes, &model)
-        .with_context(|| format!("bank for task {:?} is not servable", req.task))?;
-    let meta = store
-        .register(&req.task, &model, req.val_score)
-        .with_context(|| format!("storing bank for task {:?}", req.task))?;
-    server.install_task(&req.task, prepared);
+    let meta =
+        install_trained(store, server, &req.task, req.n_classes, req.val_score, &model)?;
     Ok(RegisterResponse::from_meta(&meta))
+}
+
+/// Resolve a `POST /train` request into a runnable [`JobSpec`].
+///
+/// A `task` naming one of the built-in suites (`tasks::find_spec`) trains
+/// that suite task — size/difficulty overrides apply, class structure is
+/// the suite's. Any other name defines a **custom** synthetic
+/// classification task from the request's `n_classes`/`pair`/`purity`/
+/// `noise`/`data_seed` knobs (defaults in [`TrainJobRequest`]). Training
+/// hyper-parameters (`method`, `m`, `lr`, `epochs`, `seed`) use the same
+/// method grammar as the CLI's `train` subcommand; note the *serving*
+/// defaults differ from the offline CLI's (`m` defaults to 8 here, like
+/// `serve`'s tenant training, vs the CLI `train` default of 16) — pass
+/// `m` explicitly when an online job must reproduce an offline run. The
+/// chosen train executable is validated against the manifest here so an
+/// impossible job is a `400`, not a failure discovered after queueing.
+pub fn job_spec_from_wire(req: &TrainJobRequest, manifest: &Manifest) -> Result<JobSpec> {
+    let mut spec = match tasks::find_spec(&req.task) {
+        Some(s) => {
+            if req.n_classes.is_some() || req.pair.is_some() {
+                bail!(
+                    "task {:?} is a built-in suite task; its class structure \
+                     is fixed (omit n_classes/pair, or pick a new task name)",
+                    req.task
+                );
+            }
+            s
+        }
+        None => {
+            let n_classes = req.n_classes.unwrap_or(2);
+            TaskSpec {
+                name: req.task.clone(),
+                kind: TaskKind::Cls {
+                    n_classes,
+                    pair: req.pair.unwrap_or(false),
+                },
+                metric: Metric::Accuracy,
+                n_train: 240,
+                n_val: 64,
+                n_test: 64,
+                purity: 0.8,
+                noise: 0.0,
+                // derived from the name so two different custom tasks get
+                // different data by default
+                seed: fnv1a(&req.task),
+            }
+        }
+    };
+    if let Some(n) = req.n_train {
+        spec.n_train = n;
+    }
+    if let Some(n) = req.n_val {
+        spec.n_val = n;
+        spec.n_test = n;
+    }
+    if let Some(p) = req.purity {
+        if !(0.0..=1.0).contains(&p) {
+            bail!("purity {p} outside [0, 1]");
+        }
+        spec.purity = p;
+    }
+    if let Some(z) = req.noise {
+        if !(0.0..=1.0).contains(&z) {
+            bail!("noise {z} outside [0, 1]");
+        }
+        spec.noise = z;
+    }
+    if let Some(s) = req.data_seed {
+        spec.seed = s;
+    }
+    if let TaskKind::Cls { n_classes, .. } = &spec.kind {
+        let max = manifest.dims.max_classes;
+        if !(2..=max).contains(n_classes) {
+            bail!("n_classes {n_classes} outside the servable range [2, {max}]");
+        }
+    }
+
+    let kind = spec.kind.artifact_kind();
+    let method = req.method.as_deref().unwrap_or("adapter");
+    let exe = match method {
+        "adapter" => format!("{kind}_train_adapter_m{}", req.m.unwrap_or(8)),
+        "lnonly" => format!("{kind}_train_lnonly"),
+        "finetune" => format!("{kind}_train_topk_k{}", manifest.dims.n_layers),
+        m if m.starts_with("topk:") => {
+            let k: usize = m[5..]
+                .parse()
+                .with_context(|| format!("bad top-k depth in method {m:?}"))?;
+            format!("{kind}_train_topk_k{k}")
+        }
+        other => bail!("unknown method {other:?} (adapter|lnonly|topk:K|finetune)"),
+    };
+    manifest
+        .exe(&exe)
+        .with_context(|| format!("method {method:?} resolves to no executable"))?;
+    let default_lr = if method == "adapter" { 1e-3 } else { 1e-4 };
+    let train = TrainConfig::new(
+        &exe,
+        req.lr.unwrap_or(default_lr),
+        req.epochs.unwrap_or(6),
+        req.seed.unwrap_or(0),
+    );
+    if train.epochs == 0 {
+        bail!("epochs must be at least 1");
+    }
+    Ok(JobSpec { task: spec, train })
+}
+
+/// FNV-1a over the task name — a stable default data seed for custom
+/// tasks.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::synth;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        synth::builtin_manifest("test", Path::new("artifacts/test")).unwrap()
+    }
+
+    #[test]
+    fn custom_task_resolves_with_defaults() {
+        let m = manifest();
+        let req = TrainJobRequest::new("fresh_task");
+        let job = job_spec_from_wire(&req, &m).unwrap();
+        assert_eq!(job.task.name, "fresh_task");
+        assert_eq!(job.task.kind, TaskKind::Cls { n_classes: 2, pair: false });
+        assert_eq!(job.train.exe, "cls_train_adapter_m8");
+        assert_eq!(job.train.lr, 1e-3);
+        assert_eq!(job.train.epochs, 6);
+        // name-derived data seed is stable
+        let again = job_spec_from_wire(&req, &m).unwrap();
+        assert_eq!(job.task.seed, again.task.seed);
+        let other = job_spec_from_wire(&TrainJobRequest::new("other_task"), &m).unwrap();
+        assert_ne!(job.task.seed, other.task.seed);
+    }
+
+    #[test]
+    fn suite_task_keeps_its_structure() {
+        let m = manifest();
+        let mut req = TrainJobRequest::new("rte_s");
+        req.n_train = Some(120);
+        let job = job_spec_from_wire(&req, &m).unwrap();
+        assert_eq!(job.task.kind, TaskKind::Cls { n_classes: 2, pair: true });
+        assert_eq!(job.task.n_train, 120);
+        // overriding a suite task's class structure is refused
+        req.n_classes = Some(5);
+        assert!(job_spec_from_wire(&req, &m).is_err());
+    }
+
+    #[test]
+    fn bad_requests_are_rejected_up_front() {
+        let m = manifest();
+        // adapter size the preset doesn't ship
+        let mut req = TrainJobRequest::new("x");
+        req.m = Some(999);
+        assert!(job_spec_from_wire(&req, &m).is_err());
+        // unknown method
+        let mut req = TrainJobRequest::new("x");
+        req.method = Some("magic".into());
+        assert!(job_spec_from_wire(&req, &m).is_err());
+        // class count beyond the padded head
+        let mut req = TrainJobRequest::new("x");
+        req.n_classes = Some(10_000);
+        assert!(job_spec_from_wire(&req, &m).is_err());
+        // zero epochs
+        let mut req = TrainJobRequest::new("x");
+        req.epochs = Some(0);
+        assert!(job_spec_from_wire(&req, &m).is_err());
+        // out-of-range difficulty knobs
+        let mut req = TrainJobRequest::new("x");
+        req.purity = Some(1.5);
+        assert!(job_spec_from_wire(&req, &m).is_err());
+    }
+
+    #[test]
+    fn method_strings_resolve_like_the_cli() {
+        let m = manifest();
+        let mut req = TrainJobRequest::new("x");
+        req.method = Some("lnonly".into());
+        assert_eq!(
+            job_spec_from_wire(&req, &m).unwrap().train.exe,
+            "cls_train_lnonly"
+        );
+        req.method = Some("topk:1".into());
+        let job = job_spec_from_wire(&req, &m).unwrap();
+        assert_eq!(job.train.exe, "cls_train_topk_k1");
+        assert_eq!(job.train.lr, 1e-4, "non-adapter default lr");
+    }
 }

@@ -5,7 +5,26 @@
 //! versions) — that is the mechanism behind "perfect memory of previous
 //! tasks" (§1): adding task N+1 cannot touch the bytes serving tasks 1…N.
 //! Banks persist to disk as `<root>/<task>/v<NNN>.bank` (binary) with a
-//! `meta.json` sidecar, and reload into a byte-identical `TaskModel`.
+//! `v<NNN>.json` sidecar, and reload into a byte-identical `TaskModel`.
+//!
+//! Durability rules:
+//!
+//! * **Atomic registration** — both files are written to a temporary name
+//!   and renamed into place, bank first, sidecar last. The sidecar is the
+//!   commit record: a crash mid-register leaves at worst an orphaned
+//!   `.bank`/`.tmp` file that reload ignores, never a sidecar pointing at
+//!   a torn bank.
+//! * **Quarantine on reload** — a sidecar whose bank is missing or
+//!   unreadable (external truncation, pre-atomic-write crashes) is
+//!   skipped with a warning instead of poisoning every other task's
+//!   banks. Surviving versions keep their on-disk version numbers, so
+//!   [`AdapterStore::version`] answers by *number*, not position, and a
+//!   subsequent [`AdapterStore::register`] appends after the highest
+//!   survivor.
+//! * **Reserved names** — directories starting with `_` or `.` under the
+//!   root are internal (e.g. `_jobs`, the training service's checkpoint
+//!   area) and are not treated as tasks; task names may not collide with
+//!   them.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -61,11 +80,19 @@ impl AdapterStore {
     }
 
     /// Register a new version for `task`; returns the assigned version.
+    ///
+    /// Disk writes are atomic (tmp file + rename) with the `v<NNN>.json`
+    /// sidecar renamed last as the commit record: a crash at any point
+    /// leaves either the complete pair or nothing reload will serve.
     pub fn register(&self, task: &str, model: &TaskModel, val_score: f64)
                     -> Result<BankMeta> {
+        validate_task_name(task)?;
         let mut tasks = self.tasks.lock().unwrap();
         let versions = tasks.entry(task.to_string()).or_default();
-        let version = versions.len() + 1;
+        // after quarantine the survivors may be sparse — append past the
+        // highest surviving version so a fresh bank never reuses a number
+        // an older, readable bank already holds
+        let version = versions.last().map(|e| e.meta.version).unwrap_or(0) + 1;
         let meta = BankMeta {
             task: task.to_string(),
             version,
@@ -81,9 +108,9 @@ impl AdapterStore {
             let dir = root.join(task);
             std::fs::create_dir_all(&dir)?;
             let bank_path = dir.join(format!("v{version:03}.bank"));
-            std::fs::write(&bank_path, model.trained.to_bytes())?;
+            write_atomic(&bank_path, &model.trained.to_bytes())?;
             let meta_path = dir.join(format!("v{version:03}.json"));
-            std::fs::write(&meta_path, meta_to_json(&meta).to_string())?;
+            write_atomic(&meta_path, meta_to_json(&meta).to_string().as_bytes())?;
         }
         versions.push(Entry { meta: meta.clone(), model: Arc::new(model.clone()) });
         Ok(meta)
@@ -98,13 +125,17 @@ impl AdapterStore {
             .map(|e| (e.meta.clone(), e.model.clone()))
     }
 
-    /// A specific registered version (1-based), if it exists.
+    /// A specific registered version (1-based), if it exists. Lookup is
+    /// by version *number*, not position, so it agrees with
+    /// [`AdapterStore::latest`] even when quarantine left holes in the
+    /// on-disk sequence.
     pub fn version(&self, task: &str, version: usize)
                    -> Option<(BankMeta, Arc<TaskModel>)> {
         let tasks = self.tasks.lock().unwrap();
-        tasks.get(task).and_then(|v| v.get(version.checked_sub(1)?)).map(|e| {
-            (e.meta.clone(), e.model.clone())
-        })
+        tasks
+            .get(task)
+            .and_then(|v| v.iter().find(|e| e.meta.version == version))
+            .map(|e| (e.meta.clone(), e.model.clone()))
     }
 
     /// All registered task names, sorted.
@@ -127,10 +158,24 @@ impl AdapterStore {
             .filter_map(|v| v.last())
             .map(|e| e.meta.trained_params_no_head)
             .sum();
+        if base_params == 0 {
+            // an empty base makes the ratio undefined; keep the result
+            // total and JSON-safe (util::json renders NaN/inf as invalid
+            // literals) — an empty store over an empty base costs
+            // nothing, any bank over nothing saturates to f64::MAX
+            return if extra == 0 { 1.0 } else { f64::MAX };
+        }
         (base_params + extra) as f64 / base_params as f64
     }
 
     /// Reload from disk (no-op for in-memory stores).
+    ///
+    /// Crash recovery: a `v<NNN>.json` sidecar whose bank is missing or
+    /// unreadable is **quarantined** — skipped with a warning — instead
+    /// of failing the whole store; every other task and version keeps
+    /// serving. Internal directories (names starting with `_` or `.`)
+    /// are not tasks and are ignored. Duplicate version numbers within a
+    /// task are genuine corruption and still fail loudly.
     pub fn reload(&self) -> Result<()> {
         let Some(root) = &self.root else { return Ok(()) };
         let mut tasks = self.tasks.lock().unwrap();
@@ -144,41 +189,112 @@ impl AdapterStore {
                 continue;
             }
             let task = dir.file_name().unwrap().to_string_lossy().to_string();
+            if task.starts_with('_') || task.starts_with('.') {
+                continue; // reserved for internal state (e.g. `_jobs`)
+            }
             let mut versions: Vec<(usize, Entry)> = Vec::new();
             for f in std::fs::read_dir(&dir)? {
                 let p = f?.path();
-                if p.extension().map(|e| e == "json").unwrap_or(false) {
-                    let meta = meta_from_json(
-                        &Json::parse(&std::fs::read_to_string(&p)?)
-                            .map_err(|e| anyhow::anyhow!("{p:?}: {e}"))?,
-                    )?;
-                    let bank_path = p.with_extension("bank");
-                    let trained =
-                        NamedTensors::from_bytes(&std::fs::read(&bank_path)?)?;
-                    let model = TaskModel {
-                        variant: meta.variant.clone(),
-                        m: meta.m,
-                        k: meta.k,
-                        kind: meta.kind.clone(),
-                        trained,
-                    };
-                    versions.push((
-                        meta.version,
-                        Entry { meta, model: Arc::new(model) },
-                    ));
+                if !p.extension().map(|e| e == "json").unwrap_or(false) {
+                    continue;
+                }
+                match load_version(&p) {
+                    Ok(entry) => versions.push((entry.meta.version, entry)),
+                    Err(e) => {
+                        eprintln!(
+                            "warning: store {task}: quarantining {p:?}: {e:#}"
+                        );
+                    }
                 }
             }
             versions.sort_by_key(|(v, _)| *v);
-            // versions must be dense 1..=n
-            for (i, (v, _)) in versions.iter().enumerate() {
-                if *v != i + 1 {
-                    bail!("store {task}: non-dense versions on disk");
+            // duplicate numbers are corruption quarantine cannot explain;
+            // holes are what quarantine (or a pre-crash orphan) leaves
+            // behind, so they only warn
+            for pair in versions.windows(2) {
+                if pair[0].0 == pair[1].0 {
+                    bail!("store {task}: duplicate version v{:03} on disk", pair[0].0);
                 }
+            }
+            let dense = versions
+                .iter()
+                .enumerate()
+                .all(|(i, (v, _))| *v == i + 1);
+            if !dense && !versions.is_empty() {
+                eprintln!(
+                    "warning: store {task}: non-dense versions on disk \
+                     ({:?}) — quarantined or externally removed banks leave \
+                     holes; surviving versions keep their numbers",
+                    versions.iter().map(|(v, _)| *v).collect::<Vec<_>>()
+                );
             }
             tasks.insert(task, versions.into_iter().map(|(_, e)| e).collect());
         }
         Ok(())
     }
+}
+
+/// Read one `v<NNN>.json` + `v<NNN>.bank` pair into an [`Entry`].
+fn load_version(meta_path: &Path) -> Result<Entry> {
+    let meta = meta_from_json(
+        &Json::parse(&std::fs::read_to_string(meta_path)?)
+            .map_err(|e| anyhow::anyhow!("{meta_path:?}: {e}"))?,
+    )?;
+    let bank_path = meta_path.with_extension("bank");
+    let bytes = std::fs::read(&bank_path)
+        .with_context(|| format!("reading bank {bank_path:?}"))?;
+    let trained = NamedTensors::from_bytes(&bytes)
+        .with_context(|| format!("decoding bank {bank_path:?}"))?;
+    let model = TaskModel {
+        variant: meta.variant.clone(),
+        m: meta.m,
+        k: meta.k,
+        kind: meta.kind.clone(),
+        trained,
+    };
+    Ok(Entry { meta, model: Arc::new(model) })
+}
+
+/// Write `bytes` to `path` atomically: write a sibling `.tmp`, then
+/// rename into place. Readers (and reload) never observe a torn file.
+/// Shared with the training service's job checkpoints, which live under
+/// the same root and follow the same durability rules.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut tmp_name = path
+        .file_name()
+        .with_context(|| format!("no file name in {path:?}"))?
+        .to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} into {path:?}"))?;
+    Ok(())
+}
+
+/// Task names become directory names under the store root; keep them to
+/// a safe charset and away from the `_`/`.` prefixes reserved for
+/// internal state (reload would silently skip such a "task").
+pub fn validate_task_name(task: &str) -> Result<()> {
+    if task.is_empty() {
+        bail!("task name is empty");
+    }
+    if task.starts_with('_') || task.starts_with('.') {
+        bail!(
+            "task name {task:?} starts with a reserved prefix \
+             ('_' and '.' directories are internal store state)"
+        );
+    }
+    if !task
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.'))
+    {
+        bail!(
+            "task name {task:?} contains characters outside \
+             [A-Za-z0-9_.-] (it becomes a directory name)"
+        );
+    }
+    Ok(())
 }
 
 fn meta_to_json(m: &BankMeta) -> Json {
@@ -283,6 +399,103 @@ mod tests {
         let s = AdapterStore::in_memory();
         assert!(s.latest("zzz").is_none());
         assert!(s.version("zzz", 1).is_none());
+    }
+
+    #[test]
+    fn params_ratio_is_total_on_empty_base() {
+        let s = AdapterStore::in_memory();
+        // empty base + empty store: no cost, and crucially never NaN/inf
+        // (util::json would render either as an invalid literal)
+        assert_eq!(s.total_params_ratio(0), 1.0);
+        s.register("a", &model(1.0), 0.5).unwrap();
+        let r = s.total_params_ratio(0);
+        assert_eq!(r, f64::MAX, "saturates instead of inf");
+        assert!(r.is_finite() && !r.is_nan());
+    }
+
+    #[test]
+    fn task_names_are_validated() {
+        let s = AdapterStore::in_memory();
+        for bad in ["", "_jobs", ".hidden", "a/b", "a\\b", "..", "sp ace"] {
+            assert!(
+                s.register(bad, &model(1.0), 0.5).is_err(),
+                "accepted bad task name {bad:?}"
+            );
+        }
+        for good in ["rte_s", "my-task.v2", "A9"] {
+            s.register(good, &model(1.0), 0.5).unwrap();
+        }
+    }
+
+    #[test]
+    fn register_leaves_no_tmp_files() {
+        let dir =
+            std::env::temp_dir().join(format!("abstore_tmp_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = AdapterStore::at(&dir).unwrap();
+        s.register("t", &model(1.0), 0.5).unwrap();
+        for f in std::fs::read_dir(dir.join("t")).unwrap() {
+            let p = f.unwrap().path();
+            assert_ne!(
+                p.extension().map(|e| e.to_string_lossy().to_string()),
+                Some("tmp".to_string()),
+                "tmp file {p:?} left behind"
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Crash recovery: one truncated bank and one orphaned sidecar must
+    /// quarantine those versions only — every other version of the task
+    /// and every other task reloads intact, lookups answer by version
+    /// *number*, and a post-recovery register appends past the highest
+    /// survivor instead of colliding.
+    #[test]
+    fn reload_quarantines_torn_and_orphaned_banks() {
+        let dir =
+            std::env::temp_dir().join(format!("abstore_crash_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let s = AdapterStore::at(&dir).unwrap();
+            s.register("t", &model(1.0), 0.1).unwrap();
+            s.register("t", &model(2.0), 0.2).unwrap();
+            s.register("t", &model(3.0), 0.3).unwrap();
+            s.register("u", &model(7.0), 0.7).unwrap();
+        }
+        // externally truncate v2's bank (torn write / disk damage) …
+        let v2 = dir.join("t").join("v002.bank");
+        let bytes = std::fs::read(&v2).unwrap();
+        std::fs::write(&v2, &bytes[..bytes.len() / 2]).unwrap();
+        // … and plant an orphan sidecar whose bank never made it to disk
+        let meta9 = std::fs::read_to_string(dir.join("t").join("v001.json"))
+            .unwrap()
+            .replace("\"version\":1", "\"version\":9");
+        std::fs::write(dir.join("t").join("v009.json"), meta9).unwrap();
+        // internal dirs must not be read as tasks
+        std::fs::create_dir_all(dir.join("_jobs")).unwrap();
+        std::fs::write(dir.join("_jobs").join("job_1.json"), "{}").unwrap();
+
+        let s = AdapterStore::at(&dir).unwrap();
+        assert_eq!(s.task_names(), vec!["t", "u"], "_jobs leaked in as a task");
+        // v1 and v3 survive; v2 (torn) and v9 (orphan) are quarantined
+        assert_eq!(s.total_versions(), 3);
+        assert!(s.version("t", 1).is_some());
+        assert!(s.version("t", 2).is_none());
+        assert!(s.version("t", 9).is_none());
+        let (meta3, m3) = s.version("t", 3).unwrap();
+        assert_eq!(meta3.version, 3);
+        assert_eq!(m3.trained.get("adapters/x").unwrap().as_f32(), &[3.0; 3]);
+        // latest agrees with lookup-by-number under the hole
+        let (latest, _) = s.latest("t").unwrap();
+        assert_eq!(latest.version, 3);
+        // the other task is untouched
+        assert_eq!(s.latest("u").unwrap().0.val_score, 0.7);
+        // registering after recovery appends past the highest survivor
+        let meta = s.register("t", &model(4.0), 0.4).unwrap();
+        assert_eq!(meta.version, 4);
+        let s2 = AdapterStore::at(&dir).unwrap();
+        assert_eq!(s2.version("t", 4).unwrap().0.val_score, 0.4);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     /// Parallel `register` of new versions (same task and different

@@ -1,0 +1,362 @@
+//! Durable training-job state: everything a [`crate::train::TrainState`]
+//! needs to continue a run after a crash, byte for byte.
+//!
+//! A checkpoint is a full snapshot of the host-side training loop —
+//! optimizer moments (`opt_m`/`opt_v`), the current trained bank, the
+//! best-on-validation bank so far, the step/epoch cursors, the shuffled
+//! epoch order and the raw RNG state — so resuming replays *exactly* the
+//! remaining steps the uninterrupted run would have taken. The binary
+//! layout is versioned and self-delimiting (magic + version header,
+//! length-prefixed sections, [`Tensor::write_to`] for tensors) and the
+//! originating [`TrainConfig`](crate::train::TrainConfig) is echoed in
+//! full, so resuming under a different configuration fails loudly instead
+//! of silently diverging.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Bank;
+use crate::util::tensor::Tensor;
+
+/// File magic for serialized checkpoints (`ABTC` = AdapterBert Train
+/// Checkpoint).
+const MAGIC: &[u8; 4] = b"ABTC";
+/// Current serialization version.
+const VERSION: u32 = 1;
+
+/// A serializable snapshot of one training run.
+///
+/// Produced by [`crate::train::TrainState::checkpoint`] and consumed by
+/// [`crate::train::TrainState::resume`]. The config fields (`exe` … `eval_each_epoch`)
+/// echo the `TrainConfig` the run started with; resume validates them.
+#[derive(Debug, Clone)]
+pub struct TrainCheckpoint {
+    // -- config echo (validated on resume) ---------------------------------
+    pub exe: String,
+    pub lr: f64,
+    pub epochs: usize,
+    pub warmup_frac: f64,
+    pub seed: u64,
+    pub adapter_std: f64,
+    pub eval_each_epoch: bool,
+    // -- loop cursors ------------------------------------------------------
+    /// Optimizer steps taken so far.
+    pub step: usize,
+    /// Completed epochs.
+    pub epoch: usize,
+    /// Cursor into `order` (start of the next batch of the current epoch).
+    pub pos: usize,
+    /// Whether `order` has been shuffled for the current epoch yet.
+    pub shuffled: bool,
+    /// Raw [`crate::util::rng::Rng`] state (epoch shuffling).
+    pub rng_state: u64,
+    /// Loss of the last executed step (`NaN` before the first).
+    pub final_loss: f64,
+    /// The current epoch's (possibly shuffled) row order.
+    pub order: Vec<usize>,
+    /// Per-step losses accumulated inside the current epoch.
+    pub epoch_losses: Vec<f64>,
+    /// `(epoch, mean train loss, val score)` rows so far.
+    pub history: Vec<(usize, f64, f64)>,
+    // -- numeric state -----------------------------------------------------
+    /// Current trained bank (positional, train-exe `trained` order).
+    pub trained: Bank,
+    /// Adam first moments.
+    pub opt_m: Bank,
+    /// Adam second moments.
+    pub opt_v: Bank,
+    /// Best-on-validation snapshot so far: `(val score, trained bank)`.
+    pub best: Option<(f64, Bank)>,
+}
+
+impl TrainCheckpoint {
+    /// Serialize to the versioned binary layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend(MAGIC);
+        out.extend(VERSION.to_le_bytes());
+        put_str(&mut out, &self.exe);
+        put_f64(&mut out, self.lr);
+        put_u64(&mut out, self.epochs as u64);
+        put_f64(&mut out, self.warmup_frac);
+        put_u64(&mut out, self.seed);
+        put_f64(&mut out, self.adapter_std);
+        out.push(self.eval_each_epoch as u8);
+        put_u64(&mut out, self.step as u64);
+        put_u64(&mut out, self.epoch as u64);
+        put_u64(&mut out, self.pos as u64);
+        out.push(self.shuffled as u8);
+        put_u64(&mut out, self.rng_state);
+        put_f64(&mut out, self.final_loss);
+        put_u64(&mut out, self.order.len() as u64);
+        for &i in &self.order {
+            put_u64(&mut out, i as u64);
+        }
+        put_u64(&mut out, self.epoch_losses.len() as u64);
+        for &l in &self.epoch_losses {
+            put_f64(&mut out, l);
+        }
+        put_u64(&mut out, self.history.len() as u64);
+        for &(e, loss, val) in &self.history {
+            put_u64(&mut out, e as u64);
+            put_f64(&mut out, loss);
+            put_f64(&mut out, val);
+        }
+        put_bank(&mut out, &self.trained);
+        put_bank(&mut out, &self.opt_m);
+        put_bank(&mut out, &self.opt_v);
+        match &self.best {
+            None => out.push(0),
+            Some((val, bank)) => {
+                out.push(1);
+                put_f64(&mut out, *val);
+                put_bank(&mut out, bank);
+            }
+        }
+        out
+    }
+
+    /// Parse a checkpoint previously produced by [`Self::to_bytes`].
+    pub fn from_bytes(buf: &[u8]) -> Result<TrainCheckpoint> {
+        let mut pos = 0usize;
+        let magic = take(buf, &mut pos, 4)?;
+        if magic != MAGIC {
+            bail!("not a training checkpoint (bad magic {magic:?})");
+        }
+        let version = u32::from_le_bytes(take(buf, &mut pos, 4)?.try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version} (expected {VERSION})");
+        }
+        let exe = get_str(buf, &mut pos)?;
+        let lr = get_f64(buf, &mut pos)?;
+        let epochs = get_u64(buf, &mut pos)? as usize;
+        let warmup_frac = get_f64(buf, &mut pos)?;
+        let seed = get_u64(buf, &mut pos)?;
+        let adapter_std = get_f64(buf, &mut pos)?;
+        let eval_each_epoch = get_bool(buf, &mut pos)?;
+        let step = get_u64(buf, &mut pos)? as usize;
+        let epoch = get_u64(buf, &mut pos)? as usize;
+        let cursor = get_u64(buf, &mut pos)? as usize;
+        let shuffled = get_bool(buf, &mut pos)?;
+        let rng_state = get_u64(buf, &mut pos)?;
+        let final_loss = get_f64(buf, &mut pos)?;
+        let n = get_u64(buf, &mut pos)? as usize;
+        if n > buf.len() {
+            bail!("implausible order length {n}");
+        }
+        let mut order = Vec::with_capacity(n);
+        for _ in 0..n {
+            order.push(get_u64(buf, &mut pos)? as usize);
+        }
+        let n = get_u64(buf, &mut pos)? as usize;
+        if n > buf.len() {
+            bail!("implausible loss count {n}");
+        }
+        let mut epoch_losses = Vec::with_capacity(n);
+        for _ in 0..n {
+            epoch_losses.push(get_f64(buf, &mut pos)?);
+        }
+        let n = get_u64(buf, &mut pos)? as usize;
+        if n > buf.len() {
+            bail!("implausible history length {n}");
+        }
+        let mut history = Vec::with_capacity(n);
+        for _ in 0..n {
+            let e = get_u64(buf, &mut pos)? as usize;
+            let loss = get_f64(buf, &mut pos)?;
+            let val = get_f64(buf, &mut pos)?;
+            history.push((e, loss, val));
+        }
+        let trained = get_bank(buf, &mut pos)?;
+        let opt_m = get_bank(buf, &mut pos)?;
+        let opt_v = get_bank(buf, &mut pos)?;
+        let best = match take(buf, &mut pos, 1)?[0] {
+            0 => None,
+            1 => {
+                let val = get_f64(buf, &mut pos)?;
+                let bank = get_bank(buf, &mut pos)?;
+                Some((val, bank))
+            }
+            other => bail!("bad best-bank tag {other}"),
+        };
+        if pos != buf.len() {
+            bail!("trailing bytes in checkpoint ({} of {})", pos, buf.len());
+        }
+        Ok(TrainCheckpoint {
+            exe,
+            lr,
+            epochs,
+            warmup_frac,
+            seed,
+            adapter_std,
+            eval_each_epoch,
+            step,
+            epoch,
+            pos: cursor,
+            shuffled,
+            rng_state,
+            final_loss,
+            order,
+            epoch_losses,
+            history,
+            trained,
+            opt_m,
+            opt_v,
+            best,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// little-endian section primitives
+// ---------------------------------------------------------------------------
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend(v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend(v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend(s.as_bytes());
+}
+
+fn put_bank(out: &mut Vec<u8>, bank: &Bank) {
+    put_u64(out, bank.len() as u64);
+    for t in bank {
+        t.write_to(out);
+    }
+}
+
+fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *pos + n > buf.len() {
+        bail!("truncated checkpoint at byte {pos}");
+    }
+    let s = &buf[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+fn get_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(take(buf, pos, 8)?.try_into().unwrap()))
+}
+
+fn get_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+    Ok(f64::from_le_bytes(take(buf, pos, 8)?.try_into().unwrap()))
+}
+
+fn get_bool(buf: &[u8], pos: &mut usize) -> Result<bool> {
+    match take(buf, pos, 1)?[0] {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => bail!("bad bool tag {other}"),
+    }
+}
+
+fn get_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let n = get_u64(buf, pos)? as usize;
+    if n > buf.len() {
+        bail!("implausible string length {n}");
+    }
+    String::from_utf8(take(buf, pos, n)?.to_vec()).context("non-utf8 string")
+}
+
+fn get_bank(buf: &[u8], pos: &mut usize) -> Result<Bank> {
+    let n = get_u64(buf, pos)? as usize;
+    if n > buf.len() {
+        bail!("implausible bank length {n}");
+    }
+    let mut bank = Vec::with_capacity(n);
+    for _ in 0..n {
+        bank.push(Tensor::read_from(buf, pos)?);
+    }
+    Ok(bank)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrainCheckpoint {
+        TrainCheckpoint {
+            exe: "cls_train_adapter_m8".into(),
+            lr: 1e-3,
+            epochs: 6,
+            warmup_frac: 0.1,
+            seed: 7,
+            adapter_std: 1e-2,
+            eval_each_epoch: true,
+            step: 42,
+            epoch: 2,
+            pos: 16,
+            shuffled: true,
+            rng_state: 0xDEAD_BEEF_CAFE_F00D,
+            final_loss: 0.625,
+            order: vec![3, 1, 2, 0],
+            epoch_losses: vec![0.9, 0.8],
+            history: vec![(0, 1.2, 0.5), (1, 0.9, f64::NAN)],
+            trained: vec![Tensor::f32(vec![2, 2], vec![1.0, -2.0, 0.5, 0.25])],
+            opt_m: vec![Tensor::f32(vec![2, 2], vec![0.0; 4])],
+            opt_v: vec![Tensor::f32(vec![2, 2], vec![0.1; 4])],
+            best: Some((0.75, vec![Tensor::f32(vec![2, 2], vec![9.0; 4])])),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_lossless() {
+        let ck = sample();
+        let back = TrainCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.exe, ck.exe);
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.epoch, ck.epoch);
+        assert_eq!(back.pos, ck.pos);
+        assert_eq!(back.shuffled, ck.shuffled);
+        assert_eq!(back.rng_state, ck.rng_state);
+        assert_eq!(back.order, ck.order);
+        assert_eq!(back.epoch_losses, ck.epoch_losses);
+        assert_eq!(back.trained, ck.trained);
+        assert_eq!(back.opt_m, ck.opt_m);
+        assert_eq!(back.opt_v, ck.opt_v);
+        let (val, bank) = back.best.unwrap();
+        assert_eq!(val, 0.75);
+        assert_eq!(bank, ck.best.as_ref().unwrap().1);
+        // NaN survives (history row without an eval)
+        assert!(back.history[1].2.is_nan());
+        assert_eq!(back.history.len(), 2);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let ck = sample();
+        let bytes = ck.to_bytes();
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(TrainCheckpoint::from_bytes(&bad).is_err());
+        // truncation anywhere must error, never panic
+        for cut in [5, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                TrainCheckpoint::from_bytes(&bytes[..cut]).is_err(),
+                "cut at {cut} accepted"
+            );
+        }
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(TrainCheckpoint::from_bytes(&long).is_err());
+        // wrong version
+        let mut vbad = bytes;
+        vbad[4] = 99;
+        assert!(TrainCheckpoint::from_bytes(&vbad).is_err());
+    }
+
+    #[test]
+    fn no_best_bank_roundtrips() {
+        let mut ck = sample();
+        ck.best = None;
+        let back = TrainCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert!(back.best.is_none());
+    }
+}

@@ -6,17 +6,33 @@
 //! shuffling, per-epoch validation, and best-on-validation model selection
 //! (the paper re-runs with several seeds and keeps the best val model —
 //! `sweep` drives that loop).
+//!
+//! The loop is exposed at two granularities:
+//!
+//! * [`train_task`] — run one configuration start to finish (the classic
+//!   offline path used by the CLI, sweeps and benches);
+//! * [`TrainState`] — the same loop as an explicit state machine
+//!   (`step` → `end_epoch` → … → `finish`) that can [`TrainState::checkpoint`]
+//!   its complete state (trained bank, Adam moments, step/epoch cursors,
+//!   epoch order, RNG) at *any* point and [`TrainState::resume`] later,
+//!   reproducing the uninterrupted run byte for byte. The online training
+//!   service (`train::service`) drives jobs through this API so a crashed
+//!   or restarted job continues instead of starting over.
+//!
+//! `train_task` is a thin wrapper over `TrainState`, so both paths are the
+//! same numerics by construction.
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::data::batcher::EpochIter;
+use super::checkpoint::TrainCheckpoint;
+use crate::data::batcher::Batch;
 use crate::data::tasks::{TaskData, TaskKind};
 use crate::eval::{evaluate, TaskModel};
 use crate::model::init;
 use crate::model::params::NamedTensors;
-use crate::runtime::{Bank, Runtime};
+use crate::runtime::{Bank, Executable, Runtime};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
@@ -74,95 +90,413 @@ pub fn lr_at(step: usize, total: usize, peak: f64, warmup_frac: f64) -> f64 {
     }
 }
 
+/// The training loop as an explicit, resumable state machine.
+///
+/// Lifecycle: [`TrainState::new`] (or [`TrainState::resume`]), then repeat
+/// `while !epoch_done() { step() }` + [`TrainState::end_epoch`] until
+/// [`TrainState::done`], then [`TrainState::finish`]. Between any two
+/// calls the full loop state can be snapshotted with
+/// [`TrainState::checkpoint`]; resuming from that snapshot replays the
+/// remaining steps exactly (same shuffles, same learning rates, same
+/// Adam state), so interrupted and uninterrupted runs produce
+/// byte-identical final banks.
+pub struct TrainState<'a> {
+    rt: &'a Arc<Runtime>,
+    cfg: TrainConfig,
+    task: &'a TaskData,
+    base: &'a NamedTensors,
+    exe: Arc<Executable>,
+    n_classes: usize,
+    max_classes: usize,
+    has_frozen: bool,
+    frozen: Bank,
+    trained: Bank,
+    opt_m: Bank,
+    opt_v: Bank,
+    rng: Rng,
+    batch: usize,
+    total_steps: usize,
+    step: usize,
+    epoch: usize,
+    /// row order for the current epoch (shuffled lazily on first step)
+    order: Vec<usize>,
+    /// cursor into `order` (start of the next batch)
+    pos: usize,
+    /// whether `order` has been shuffled for the current epoch yet
+    shuffled: bool,
+    epoch_losses: Vec<f64>,
+    best: Option<(f64, Bank)>,
+    history: Vec<(usize, f64, f64)>,
+    final_loss: f64,
+}
+
+impl<'a> TrainState<'a> {
+    /// Start a fresh run. Fails when the train split is smaller than the
+    /// executable's batch: `steps_per_epoch` would floor to zero and the
+    /// run would silently return an untrained model with a real-looking
+    /// validation score (the low-resource regime the paper cares about
+    /// lives exactly at this edge).
+    pub fn new(
+        rt: &'a Arc<Runtime>,
+        cfg: &TrainConfig,
+        task: &'a TaskData,
+        pretrained_base: &'a NamedTensors,
+    ) -> Result<TrainState<'a>> {
+        Self::build(rt, cfg, task, pretrained_base)
+    }
+
+    /// Rebuild a run from a [`TrainCheckpoint`]. The checkpoint's config
+    /// echo must match `cfg` and its epoch order must match the task's
+    /// train split — resuming under different hyper-parameters or data
+    /// is an error, not silent divergence.
+    pub fn resume(
+        rt: &'a Arc<Runtime>,
+        cfg: &TrainConfig,
+        task: &'a TaskData,
+        pretrained_base: &'a NamedTensors,
+        ck: &TrainCheckpoint,
+    ) -> Result<TrainState<'a>> {
+        ensure!(
+            ck.exe == cfg.exe
+                && ck.lr == cfg.lr
+                && ck.epochs == cfg.epochs
+                && ck.warmup_frac == cfg.warmup_frac
+                && ck.seed == cfg.seed
+                && ck.adapter_std == cfg.adapter_std
+                && ck.eval_each_epoch == cfg.eval_each_epoch,
+            "checkpoint was taken under a different configuration \
+             (checkpoint: {} lr={} epochs={} seed={}; requested: {} lr={} \
+             epochs={} seed={})",
+            ck.exe,
+            ck.lr,
+            ck.epochs,
+            ck.seed,
+            cfg.exe,
+            cfg.lr,
+            cfg.epochs,
+            cfg.seed,
+        );
+        let mut st = Self::build(rt, cfg, task, pretrained_base)?;
+        ensure!(
+            ck.order.len() == task.train.n,
+            "checkpoint epoch order covers {} rows but the train split has {}",
+            ck.order.len(),
+            task.train.n
+        );
+        ensure!(
+            ck.epoch <= cfg.epochs && ck.step <= st.total_steps,
+            "checkpoint cursors (epoch {}, step {}) exceed the run \
+             ({} epochs, {} steps)",
+            ck.epoch,
+            ck.step,
+            cfg.epochs,
+            st.total_steps
+        );
+        for (name, bank, expect) in [
+            ("trained", &ck.trained, st.trained.len()),
+            ("opt_m", &ck.opt_m, st.opt_m.len()),
+            ("opt_v", &ck.opt_v, st.opt_v.len()),
+        ] {
+            ensure!(
+                bank.len() == expect,
+                "checkpoint {name} bank has {} tensors, {} expects {expect}",
+                bank.len(),
+                cfg.exe
+            );
+        }
+        st.trained = ck.trained.clone();
+        st.opt_m = ck.opt_m.clone();
+        st.opt_v = ck.opt_v.clone();
+        st.rng = Rng::from_state(ck.rng_state);
+        st.step = ck.step;
+        st.epoch = ck.epoch;
+        st.order = ck.order.clone();
+        st.pos = ck.pos;
+        st.shuffled = ck.shuffled;
+        st.epoch_losses = ck.epoch_losses.clone();
+        st.best = ck.best.clone();
+        st.history = ck.history.clone();
+        st.final_loss = ck.final_loss;
+        Ok(st)
+    }
+
+    fn build(
+        rt: &'a Arc<Runtime>,
+        cfg: &TrainConfig,
+        task: &'a TaskData,
+        pretrained_base: &'a NamedTensors,
+    ) -> Result<TrainState<'a>> {
+        let exe = rt.load(&cfg.exe)?;
+        let spec = &exe.spec;
+        let n_layers = rt.manifest.dims.n_layers;
+        let max_classes = rt.manifest.dims.max_classes;
+        let n_classes = match &task.spec.kind {
+            TaskKind::Cls { n_classes, .. } => *n_classes,
+            _ => 0,
+        };
+        let batch = spec.batch;
+        let steps_per_epoch = task.train.n / batch;
+        if steps_per_epoch == 0 {
+            bail!(
+                "task {:?}: train split has {} examples but {} trains with \
+                 batch {batch}; steps_per_epoch floors to 0, so the run would \
+                 return an untrained model with a real-looking validation \
+                 score — provide at least {batch} training examples (or use a \
+                 smaller-batch preset)",
+                task.spec.name,
+                task.train.n,
+                cfg.exe
+            );
+        }
+
+        // --- initialize banks -------------------------------------------
+        let (frozen_named, trained_named) =
+            init::init_trained(spec, pretrained_base, n_layers, cfg.seed, cfg.adapter_std)?;
+        // full fine-tuning has no frozen group at all (see params.rs)
+        let has_frozen = spec.input_group_range("frozen").is_ok();
+        let frozen: Bank = if has_frozen {
+            frozen_named.to_bank(spec, "frozen")?
+        } else {
+            Vec::new()
+        };
+        let trained: Bank = trained_named.to_bank(spec, "trained")?;
+        let zeros = |b: &Bank| -> Bank {
+            b.iter().map(|t| Tensor::zeros(&t.shape, t.dtype())).collect()
+        };
+        let opt_m = zeros(&trained);
+        let opt_v = zeros(&trained);
+        let total_steps = (steps_per_epoch * cfg.epochs).max(1);
+
+        Ok(TrainState {
+            rt,
+            cfg: cfg.clone(),
+            task,
+            base: pretrained_base,
+            exe,
+            n_classes,
+            max_classes,
+            has_frozen,
+            frozen,
+            trained,
+            opt_m,
+            opt_v,
+            rng: Rng::new(cfg.seed ^ 0x7EA1),
+            batch,
+            total_steps,
+            step: 0,
+            epoch: 0,
+            order: (0..task.train.n).collect(),
+            pos: 0,
+            shuffled: false,
+            epoch_losses: Vec::new(),
+            best: None,
+            history: Vec::new(),
+            final_loss: f64::NAN,
+        })
+    }
+
+    /// True once every configured epoch has been closed with
+    /// [`TrainState::end_epoch`].
+    pub fn done(&self) -> bool {
+        self.epoch >= self.cfg.epochs
+    }
+
+    /// True when the current epoch has no full batch left (call
+    /// [`TrainState::end_epoch`]).
+    pub fn epoch_done(&self) -> bool {
+        self.pos + self.batch > self.order.len()
+    }
+
+    /// Run one optimizer step (one shuffled full batch through the train
+    /// executable) and return its loss.
+    pub fn step(&mut self) -> Result<f64> {
+        ensure!(!self.done(), "training already finished");
+        ensure!(!self.epoch_done(), "epoch exhausted — call end_epoch");
+        if !self.shuffled {
+            // each epoch shuffles a fresh identity permutation (exactly
+            // what EpochIter::new did) — shuffling the previous epoch's
+            // order in place would visit a different sequence
+            self.order = (0..self.task.train.n).collect();
+            self.rng.shuffle(&mut self.order);
+            self.shuffled = true;
+        }
+        let lr = lr_at(self.step, self.total_steps, self.cfg.lr, self.cfg.warmup_frac);
+        let idx = &self.order[self.pos..self.pos + self.batch];
+        let b = Batch::from_rows(&self.task.train, idx, self.batch);
+        let batch_bank = b.to_train_bank(&self.exe.spec, self.n_classes, self.max_classes)?;
+        let step_bank = vec![Tensor::scalar_i32(self.step as i32 + 1)];
+        let lr_bank = vec![Tensor::scalar_f32(lr as f32)];
+        let mut banks: Vec<&Bank> = Vec::with_capacity(7);
+        if self.has_frozen {
+            banks.push(&self.frozen);
+        }
+        banks.extend([
+            &self.trained,
+            &self.opt_m,
+            &self.opt_v,
+            &step_bank,
+            &batch_bank,
+            &lr_bank,
+        ]);
+        let mut out = self.exe.run(&banks).context("train step")?;
+        // outputs: trained', m', v', loss, metric
+        let _metric = out.pop().unwrap();
+        let loss_bank = out.pop().unwrap();
+        self.opt_v = out.pop().unwrap();
+        self.opt_m = out.pop().unwrap();
+        self.trained = out.pop().unwrap();
+        let loss = loss_bank[0].scalar_value_f32() as f64;
+        self.epoch_losses.push(loss);
+        self.final_loss = loss;
+        self.step += 1;
+        self.pos += self.batch;
+        Ok(loss)
+    }
+
+    /// Close the current epoch: record mean train loss, run validation
+    /// when configured (or on the final epoch), keep the best bank, and
+    /// reset the cursors for the next epoch. Returns the new history row
+    /// `(epoch, mean train loss, val score)` (`NaN` when no eval ran).
+    pub fn end_epoch(&mut self) -> Result<(usize, f64, f64)> {
+        ensure!(!self.done(), "training already finished");
+        ensure!(self.epoch_done(), "epoch still has batches — call step");
+        let mean_loss = crate::util::stats::mean(&self.epoch_losses);
+        let epoch = self.epoch;
+        let val = if self.cfg.eval_each_epoch || self.epoch + 1 == self.cfg.epochs {
+            let v = self.eval()?;
+            if self.best.as_ref().map(|(b, _)| v > *b).unwrap_or(true) {
+                self.best = Some((v, self.trained.clone()));
+            }
+            v
+        } else {
+            f64::NAN
+        };
+        self.history.push((epoch, mean_loss, val));
+        self.epoch += 1;
+        self.pos = 0;
+        self.shuffled = false;
+        self.epoch_losses.clear();
+        Ok((epoch, mean_loss, val))
+    }
+
+    /// Evaluate the *current* trained bank on the validation split.
+    pub fn eval(&self) -> Result<f64> {
+        let model = make_model(&self.exe.spec, &self.trained)?;
+        evaluate(
+            self.rt,
+            &model,
+            self.base,
+            &self.task.val,
+            self.n_classes,
+            self.task.spec.metric,
+        )
+    }
+
+    /// Snapshot the complete loop state. Valid at any point in the
+    /// lifecycle — mid-epoch checkpoints capture the shuffled order and
+    /// cursor, so resuming replays the very next batch.
+    pub fn checkpoint(&self) -> TrainCheckpoint {
+        TrainCheckpoint {
+            exe: self.cfg.exe.clone(),
+            lr: self.cfg.lr,
+            epochs: self.cfg.epochs,
+            warmup_frac: self.cfg.warmup_frac,
+            seed: self.cfg.seed,
+            adapter_std: self.cfg.adapter_std,
+            eval_each_epoch: self.cfg.eval_each_epoch,
+            step: self.step,
+            epoch: self.epoch,
+            pos: self.pos,
+            shuffled: self.shuffled,
+            rng_state: self.rng.state(),
+            final_loss: self.final_loss,
+            order: self.order.clone(),
+            epoch_losses: self.epoch_losses.clone(),
+            history: self.history.clone(),
+            trained: self.trained.clone(),
+            opt_m: self.opt_m.clone(),
+            opt_v: self.opt_v.clone(),
+            best: self.best.clone(),
+        }
+    }
+
+    /// Wrap up a finished run into a [`TrainResult`] (best-on-validation
+    /// model selection, as in the paper).
+    pub fn finish(self) -> Result<TrainResult> {
+        ensure!(
+            self.done(),
+            "training still has epochs ({} of {})",
+            self.epoch,
+            self.cfg.epochs
+        );
+        let (val_score, best_bank) = self.best.context("no validation evaluation ran")?;
+        let model = make_model(&self.exe.spec, &best_bank)?;
+        Ok(TrainResult {
+            model,
+            val_score,
+            steps: self.step,
+            final_loss: self.final_loss,
+            history: self.history,
+        })
+    }
+
+    // -- progress accessors (job status reporting) -------------------------
+
+    /// Optimizer steps taken so far.
+    pub fn steps_taken(&self) -> usize {
+        self.step
+    }
+
+    /// Total steps this run will take.
+    pub fn total_steps(&self) -> usize {
+        self.total_steps
+    }
+
+    /// Completed epochs.
+    pub fn epochs_done(&self) -> usize {
+        self.epoch
+    }
+
+    /// Configured epochs.
+    pub fn epochs_total(&self) -> usize {
+        self.cfg.epochs
+    }
+
+    /// Loss of the most recent step (`NaN` before the first).
+    pub fn last_loss(&self) -> f64 {
+        self.final_loss
+    }
+
+    /// Best validation score so far.
+    pub fn best_val(&self) -> Option<f64> {
+        self.best.as_ref().map(|(v, _)| *v)
+    }
+
+    /// `(epoch, mean train loss, val score)` rows recorded so far.
+    pub fn history(&self) -> &[(usize, f64, f64)] {
+        &self.history
+    }
+}
+
 /// Train one task with one configuration. `pretrained_base` is the shared
 /// frozen base in relpath form (from the pre-training checkpoint).
+///
+/// This is [`TrainState`] driven start to finish — errors (including the
+/// too-few-examples guard) and numerics are identical between the two.
 pub fn train_task(
     rt: &Arc<Runtime>,
     cfg: &TrainConfig,
     task: &TaskData,
     pretrained_base: &NamedTensors,
 ) -> Result<TrainResult> {
-    let exe = rt.load(&cfg.exe)?;
-    let spec = exe.spec.clone();
-    let n_layers = rt.manifest.dims.n_layers;
-    let max_classes = rt.manifest.dims.max_classes;
-    let n_classes = match &task.spec.kind {
-        TaskKind::Cls { n_classes, .. } => *n_classes,
-        _ => 0,
-    };
-
-    // --- initialize banks -------------------------------------------------
-    let (frozen_named, trained_named) =
-        init::init_trained(&spec, pretrained_base, n_layers, cfg.seed, cfg.adapter_std)?;
-    // full fine-tuning has no frozen group at all (see params.rs)
-    let has_frozen = spec.input_group_range("frozen").is_ok();
-    let frozen: Bank = if has_frozen {
-        frozen_named.to_bank(&spec, "frozen")?
-    } else {
-        Vec::new()
-    };
-    let mut trained: Bank = trained_named.to_bank(&spec, "trained")?;
-    let zeros = |b: &Bank| -> Bank {
-        b.iter().map(|t| Tensor::zeros(&t.shape, t.dtype())).collect()
-    };
-    let mut opt_m = zeros(&trained);
-    let mut opt_v = zeros(&trained);
-
-    // --- step loop ---------------------------------------------------------
-    let batch = spec.batch;
-    let steps_per_epoch = task.train.n / batch;
-    let total_steps = (steps_per_epoch * cfg.epochs).max(1);
-    let mut rng = Rng::new(cfg.seed ^ 0x7EA1);
-    let mut step = 0usize;
-    let mut best: Option<(f64, Bank)> = None;
-    let mut history = Vec::new();
-    let mut final_loss = f64::NAN;
-
-    for epoch in 0..cfg.epochs {
-        let mut epoch_losses = Vec::new();
-        for b in EpochIter::new(&task.train, batch, &mut rng) {
-            let lr = lr_at(step, total_steps, cfg.lr, cfg.warmup_frac);
-            let batch_bank = b.to_train_bank(&spec, n_classes, max_classes)?;
-            let step_bank = vec![Tensor::scalar_i32(step as i32 + 1)];
-            let lr_bank = vec![Tensor::scalar_f32(lr as f32)];
-            let mut banks: Vec<&Bank> = Vec::with_capacity(7);
-            if has_frozen {
-                banks.push(&frozen);
-            }
-            banks.extend([
-                &trained, &opt_m, &opt_v, &step_bank, &batch_bank, &lr_bank,
-            ]);
-            let mut out = exe.run(&banks).context("train step")?;
-            // outputs: trained', m', v', loss, metric
-            let metric_bank = out.pop().unwrap();
-            let loss_bank = out.pop().unwrap();
-            opt_v = out.pop().unwrap();
-            opt_m = out.pop().unwrap();
-            trained = out.pop().unwrap();
-            let _ = metric_bank;
-            let loss = loss_bank[0].scalar_value_f32() as f64;
-            epoch_losses.push(loss);
-            final_loss = loss;
-            step += 1;
+    let mut st = TrainState::new(rt, cfg, task, pretrained_base)?;
+    while !st.done() {
+        while !st.epoch_done() {
+            st.step()?;
         }
-        let mean_loss = crate::util::stats::mean(&epoch_losses);
-        if cfg.eval_each_epoch || epoch + 1 == cfg.epochs {
-            let model = make_model(&spec, &trained)?;
-            let val = evaluate(
-                rt, &model, pretrained_base, &task.val, n_classes, task.spec.metric,
-            )?;
-            history.push((epoch, mean_loss, val));
-            if best.as_ref().map(|(b, _)| val > *b).unwrap_or(true) {
-                best = Some((val, trained.clone()));
-            }
-        } else {
-            history.push((epoch, mean_loss, f64::NAN));
-        }
+        st.end_epoch()?;
     }
-
-    let (val_score, best_bank) = best.context("no validation evaluation ran")?;
-    let model = make_model(&spec, &best_bank)?;
-    Ok(TrainResult { model, val_score, steps: step, final_loss, history })
+    st.finish()
 }
 
 /// Wrap a positional trained bank into a serveable `TaskModel`.

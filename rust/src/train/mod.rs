@@ -1,14 +1,24 @@
 //! Training drivers: the per-step numeric work is AOT-compiled; Rust owns
 //! schedules, selection and orchestration.
 //!
-//! `loop` — single-run training with best-on-validation selection;
+//! `loop` — single-run training, as a one-shot call (`train_task`) or the
+//! resumable [`TrainState`] state machine;
+//! `checkpoint` — the durable snapshot format `TrainState` persists;
+//! `service` — background training jobs on a bounded pool, with
+//! checkpoint/resume and live hot-install on completion;
 //! `pretrain` — MLM pre-training of the shared base;
 //! `sweep` — hyper-parameter grids with fan-out over worker threads.
 
+pub mod checkpoint;
 pub mod r#loop;
 pub mod pretrain;
+pub mod service;
 pub mod sweep;
 
-pub use r#loop::{lr_at, train_task, TrainConfig, TrainResult};
+pub use checkpoint::TrainCheckpoint;
+pub use r#loop::{lr_at, train_task, TrainConfig, TrainResult, TrainState};
 pub use pretrain::{load_or_pretrain, pretrain, PretrainConfig};
+pub use service::{
+    InstallFn, JobRecord, JobSpec, JobState, ServiceConfig, TrainService,
+};
 pub use sweep::{run_sweep, SweepGrid, SweepOutcome};

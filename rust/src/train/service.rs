@@ -1,0 +1,730 @@
+//! Background training jobs: a bounded worker pool that trains adapter
+//! banks *next to* live serving, with durable, resumable checkpoints.
+//!
+//! This is the producer side of the paper's continual-service story
+//! (§1: "new tasks can be added without revisiting previous ones"):
+//! because every task's trainable parameters are independent given the
+//! frozen trunk, training jobs for different tasks run concurrently on
+//! the same [`Runtime`] (and kernel worker pool) that serves traffic —
+//! no second model copy, no process restart.
+//!
+//! Job lifecycle:
+//!
+//! ```text
+//!   submit ─► queued ─► running ─► completed (installed + store version)
+//!                 ▲         │  └──► failed (error recorded)
+//!                 └─────────┘ shutdown: checkpoint + back to queued
+//! ```
+//!
+//! Durability: with a checkpoint directory configured (the disk-backed
+//! store's `_jobs/` area), a job writes `job_<id>.json` (its full spec)
+//! at submit time and `job_<id>.ckpt` (a [`TrainCheckpoint`] — trained
+//! bank, Adam moments, cursors, RNG) every `checkpoint_every` epochs and
+//! on shutdown, all via atomic tmp+rename. [`TrainService::recover`]
+//! re-enqueues any descriptors found on disk; a job with a checkpoint
+//! resumes mid-run and produces the *byte-identical* final bank the
+//! uninterrupted run would have (see `TrainState`). Only successful
+//! completion removes a job's files — failures keep them, both for
+//! post-mortem and because the durable state may be valid (a park whose
+//! checkpoint write failed, a recover under the wrong preset) and a
+//! later process's recover() should retry from it.
+//!
+//! Completion is delegated to an injected `install` callback so this
+//! module stays independent of the serving stack: the gateway wires it
+//! to "store append + hot-install into the live coordinator" (see
+//! `serve::registry::install_trained`), making a finished job servable
+//! with zero restart.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::checkpoint::TrainCheckpoint;
+use super::r#loop::{TrainConfig, TrainState};
+use crate::data::grammar::World;
+use crate::data::tasks::{generate, Metric, TaskKind, TaskSpec};
+use crate::eval::TaskModel;
+use crate::model::params::NamedTensors;
+use crate::runtime::Runtime;
+use crate::store::{validate_task_name, write_atomic};
+use crate::util::json::Json;
+
+/// Where a job is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting for a worker (also the parked state after a shutdown
+    /// checkpointed a running job).
+    Queued,
+    /// A worker is stepping it right now.
+    Running,
+    /// Trained, installed, servable; `version` holds the store version.
+    Completed,
+    /// Terminal error; `error` holds the message.
+    Failed,
+}
+
+impl JobState {
+    /// Wire/status name.
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "completed",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+/// Everything a job needs to run: the synthetic-task spec (data is
+/// regenerated deterministically from it) plus the training config.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub task: TaskSpec,
+    pub train: TrainConfig,
+}
+
+impl JobSpec {
+    /// Class count for registration/serving (0 for reg/span heads).
+    pub fn n_classes(&self) -> usize {
+        match &self.task.kind {
+            TaskKind::Cls { n_classes, .. } => *n_classes,
+            _ => 0,
+        }
+    }
+}
+
+/// Live view of one job, cloned out for status reporting.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: u64,
+    pub task: String,
+    pub n_classes: usize,
+    pub state: JobState,
+    /// Completed epochs / configured epochs.
+    pub epoch: usize,
+    pub total_epochs: usize,
+    /// Optimizer steps taken / total steps of the run.
+    pub step: usize,
+    pub total_steps: usize,
+    /// Latest train-step loss (`NaN` before the first step).
+    pub loss: f64,
+    /// Best validation score so far (`NaN` before the first eval).
+    pub best_val: f64,
+    /// `(epoch, val score)` per evaluated epoch.
+    pub val_history: Vec<(usize, f64)>,
+    /// Store version assigned on completion.
+    pub version: Option<usize>,
+    /// Failure message for [`JobState::Failed`].
+    pub error: Option<String>,
+    /// Wall-clock seconds of the current (or final) run leg.
+    pub wall_s: f64,
+    /// Training throughput of the current run leg.
+    pub steps_per_sec: f64,
+    /// True when this leg resumed from an on-disk checkpoint.
+    pub resumed: bool,
+}
+
+impl JobRecord {
+    /// A fresh queued record for `spec` (exposed for wire-type tests).
+    pub fn new(id: u64, spec: &JobSpec, total_steps: usize) -> JobRecord {
+        JobRecord {
+            id,
+            task: spec.task.name.clone(),
+            n_classes: spec.n_classes(),
+            state: JobState::Queued,
+            epoch: 0,
+            total_epochs: spec.train.epochs,
+            step: 0,
+            total_steps,
+            loss: f64::NAN,
+            best_val: f64::NAN,
+            val_history: Vec::new(),
+            version: None,
+            error: None,
+            wall_s: 0.0,
+            steps_per_sec: 0.0,
+            resumed: false,
+        }
+    }
+}
+
+/// Pool sizing and durability knobs.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Concurrent training jobs (worker threads). Jobs beyond this queue.
+    pub workers: usize,
+    /// Where job descriptors and checkpoints persist (`None` = jobs are
+    /// in-memory only and die with the process).
+    pub ckpt_dir: Option<PathBuf>,
+    /// Checkpoint cadence in epochs (0 = only on shutdown).
+    pub checkpoint_every: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { workers: 1, ckpt_dir: None, checkpoint_every: 1 }
+    }
+}
+
+/// Called when a job finishes: `(task, n_classes, val_score, model)` →
+/// assigned store version. The serving stack injects store-append +
+/// hot-install here.
+pub type InstallFn = dyn Fn(&str, usize, f64, &TaskModel) -> Result<usize> + Send + Sync;
+
+struct ServiceState {
+    jobs: BTreeMap<u64, JobRecord>,
+    specs: BTreeMap<u64, JobSpec>,
+    queue: VecDeque<u64>,
+}
+
+struct Inner {
+    rt: Arc<Runtime>,
+    base: Arc<NamedTensors>,
+    world: World,
+    cfg: ServiceConfig,
+    install: Box<InstallFn>,
+    state: Mutex<ServiceState>,
+    cv: Condvar,
+    next_id: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// A running training-job pool; shut down with [`TrainService::shutdown`].
+pub struct TrainService {
+    inner: Arc<Inner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl TrainService {
+    /// Start the pool. `world` must be the same topic world serving/eval
+    /// use (job data is regenerated from it); `install` runs on a worker
+    /// thread when a job completes.
+    pub fn start(
+        rt: Arc<Runtime>,
+        base: Arc<NamedTensors>,
+        world: World,
+        cfg: ServiceConfig,
+        install: Box<InstallFn>,
+    ) -> Result<TrainService> {
+        if let Some(dir) = &cfg.ckpt_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {dir:?}"))?;
+        }
+        let inner = Arc::new(Inner {
+            rt,
+            base,
+            world,
+            cfg: cfg.clone(),
+            install,
+            state: Mutex::new(ServiceState {
+                jobs: BTreeMap::new(),
+                specs: BTreeMap::new(),
+                queue: VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+        });
+        let mut workers = Vec::new();
+        for i in 0..cfg.workers.max(1) {
+            let inner = inner.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("ab-train-{i}"))
+                    .spawn(move || worker_loop(&inner))?,
+            );
+        }
+        Ok(TrainService { inner, workers })
+    }
+
+    /// Enqueue a job. Validates up front — the task name, that the train
+    /// executable exists in the manifest, and that the train split is at
+    /// least one batch — so a doomed job is an immediate error instead
+    /// of a failure discovered minutes later. Returns the job id.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        validate_task_name(&spec.task.name)?;
+        let exe = self.inner.rt.manifest.exe(&spec.train.exe)?;
+        let steps_per_epoch = spec.task.n_train / exe.batch;
+        if steps_per_epoch == 0 {
+            bail!(
+                "job for task {:?}: {} training examples < batch {} of {} — \
+                 the run would take zero optimizer steps",
+                spec.task.name,
+                spec.task.n_train,
+                exe.batch,
+                spec.train.exe
+            );
+        }
+        let total_steps = steps_per_epoch * spec.train.epochs;
+        let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst);
+        // durable first: the descriptor hits disk before the job is
+        // visible, so a crash right after submit is still recoverable
+        if let Some(dir) = &self.inner.cfg.ckpt_dir {
+            write_atomic(
+                &desc_path(dir, id),
+                job_descriptor_json(id, &spec).to_string().as_bytes(),
+            )?;
+        }
+        let record = JobRecord::new(id, &spec, total_steps);
+        let mut st = self.inner.state.lock().unwrap();
+        st.jobs.insert(id, record);
+        st.specs.insert(id, spec);
+        st.queue.push_back(id);
+        drop(st);
+        self.inner.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Re-enqueue every job whose descriptor survives in the checkpoint
+    /// directory (call once at startup). Jobs with a checkpoint resume
+    /// mid-run; descriptor-only jobs start over. Returns how many jobs
+    /// were recovered.
+    pub fn recover(&self) -> Result<usize> {
+        let Some(dir) = self.inner.cfg.ckpt_dir.clone() else {
+            return Ok(0);
+        };
+        let mut found: Vec<(u64, JobSpec)> = Vec::new();
+        for f in std::fs::read_dir(&dir)? {
+            let p = f?.path();
+            let Some(name) = p.file_name().map(|n| n.to_string_lossy().to_string())
+            else {
+                continue;
+            };
+            let Some(id) = name
+                .strip_prefix("job_")
+                .and_then(|r| r.strip_suffix(".json"))
+                .and_then(|r| r.parse::<u64>().ok())
+            else {
+                continue;
+            };
+            let text = std::fs::read_to_string(&p)
+                .with_context(|| format!("reading descriptor {p:?}"))?;
+            match Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{p:?}: {e}"))
+                .and_then(|j| job_spec_from_descriptor(&j))
+            {
+                Ok(spec) => found.push((id, spec)),
+                Err(e) => eprintln!("warning: skipping job descriptor {p:?}: {e:#}"),
+            }
+        }
+        found.sort_by_key(|(id, _)| *id);
+        let mut recovered = 0;
+        let mut st = self.inner.state.lock().unwrap();
+        for (id, spec) in found {
+            if st.jobs.contains_key(&id) {
+                continue;
+            }
+            self.inner.next_id.fetch_max(id + 1, Ordering::SeqCst);
+            let steps_per_epoch = self
+                .inner
+                .rt
+                .manifest
+                .exe(&spec.train.exe)
+                .map(|e| spec.task.n_train / e.batch)
+                .unwrap_or(0);
+            let mut record = JobRecord::new(id, &spec, steps_per_epoch * spec.train.epochs);
+            record.resumed = ckpt_path(&dir, id).exists();
+            st.jobs.insert(id, record);
+            st.specs.insert(id, spec);
+            st.queue.push_back(id);
+            recovered += 1;
+        }
+        drop(st);
+        self.inner.cv.notify_all();
+        Ok(recovered)
+    }
+
+    /// Snapshot of one job.
+    pub fn status(&self, id: u64) -> Option<JobRecord> {
+        self.inner.state.lock().unwrap().jobs.get(&id).cloned()
+    }
+
+    /// Snapshot of every job, by id.
+    pub fn jobs(&self) -> Vec<JobRecord> {
+        self.inner.state.lock().unwrap().jobs.values().cloned().collect()
+    }
+
+    /// Jobs not yet terminal (queued or running).
+    pub fn active_jobs(&self) -> usize {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .jobs
+            .values()
+            .filter(|r| matches!(r.state, JobState::Queued | JobState::Running))
+            .count()
+    }
+
+    /// Stop the pool: running jobs checkpoint (when durable) and park
+    /// back to `queued`; workers are joined. Queued durable jobs stay on
+    /// disk for the next process's [`TrainService::recover`].
+    pub fn shutdown(self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+        for h in self.workers {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &Arc<Inner>) {
+    loop {
+        let id = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if inner.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(id) = st.queue.pop_front() {
+                    break id;
+                }
+                let (guard, _) = inner
+                    .cv
+                    .wait_timeout(st, Duration::from_millis(50))
+                    .unwrap();
+                st = guard;
+            }
+        };
+        if let Err(e) = run_job(inner, id) {
+            let msg = format!("{e:#}");
+            eprintln!("training job {id} failed: {msg}");
+            let mut st = inner.state.lock().unwrap();
+            if let Some(rec) = st.jobs.get_mut(&id) {
+                rec.state = JobState::Failed;
+                rec.error = Some(msg);
+            }
+            // durable state is kept on failure: the descriptor/checkpoint
+            // may be perfectly valid (a park whose checkpoint write
+            // failed, a recover under the wrong preset) and a later
+            // process's recover() retries from them — only successful
+            // completion removes job files
+        }
+    }
+}
+
+/// Drive one job to completion (or park it on shutdown).
+///
+/// Completion semantics are **at-least-once**: the install callback and
+/// the job-file cleanup are not atomic, so a crash in the window between
+/// them re-runs the job on the next `recover()` and appends another
+/// store version of the same bank. That is benign under the append-only
+/// store (serving always resolves `latest`, and the re-run is
+/// deterministic), and strictly safer than deleting the descriptor
+/// first, which would lose the job entirely if the install never ran.
+fn run_job(inner: &Arc<Inner>, id: u64) -> Result<()> {
+    let spec = inner
+        .state
+        .lock()
+        .unwrap()
+        .specs
+        .get(&id)
+        .cloned()
+        .context("job spec missing")?;
+    let t0 = Instant::now();
+    let data = generate(&inner.world, &spec.task, inner.rt.manifest.dims.seq);
+    let ck = load_checkpoint(inner, id);
+    let resumed = ck.is_some();
+    let mut ts = match &ck {
+        Some(c) => TrainState::resume(&inner.rt, &spec.train, &data, &inner.base, c)
+            .context("resuming from checkpoint")?,
+        None => TrainState::new(&inner.rt, &spec.train, &data, &inner.base)?,
+    };
+    drop(ck);
+    let start_steps = ts.steps_taken();
+    {
+        let mut st = inner.state.lock().unwrap();
+        if let Some(rec) = st.jobs.get_mut(&id) {
+            rec.state = JobState::Running;
+            rec.resumed = resumed;
+            rec.total_epochs = ts.epochs_total();
+            rec.total_steps = ts.total_steps();
+            rec.epoch = ts.epochs_done();
+            rec.step = ts.steps_taken();
+            // a resumed run carries its pre-restart progress — surface
+            // it so GET /train/<id> doesn't under-report a job that is
+            // already several epochs in
+            rec.val_history = ts
+                .history()
+                .iter()
+                .filter(|(_, _, v)| !v.is_nan())
+                .map(|&(e, _, v)| (e, v))
+                .collect();
+            if let Some(b) = ts.best_val() {
+                rec.best_val = b;
+            }
+            rec.loss = ts.last_loss();
+        }
+    }
+    while !ts.done() {
+        while !ts.epoch_done() {
+            if inner.stop.load(Ordering::SeqCst) {
+                return park_job(inner, id, &ts);
+            }
+            let loss = ts.step()?;
+            let mut st = inner.state.lock().unwrap();
+            if let Some(rec) = st.jobs.get_mut(&id) {
+                rec.step = ts.steps_taken();
+                rec.loss = loss;
+                rec.wall_s = t0.elapsed().as_secs_f64();
+                if rec.wall_s > 0.0 {
+                    rec.steps_per_sec =
+                        (ts.steps_taken() - start_steps) as f64 / rec.wall_s;
+                }
+            }
+        }
+        let (epoch, _mean_loss, val) = ts.end_epoch()?;
+        {
+            let mut st = inner.state.lock().unwrap();
+            if let Some(rec) = st.jobs.get_mut(&id) {
+                rec.epoch = ts.epochs_done();
+                if !val.is_nan() {
+                    rec.val_history.push((epoch, val));
+                }
+                if let Some(b) = ts.best_val() {
+                    rec.best_val = b;
+                }
+            }
+        }
+        if inner.cfg.checkpoint_every > 0
+            && !ts.done()
+            && ts.epochs_done() % inner.cfg.checkpoint_every == 0
+        {
+            save_checkpoint(inner, id, &ts)?;
+        }
+    }
+    let result = ts.finish()?;
+    let version = (inner.install)(
+        &spec.task.name,
+        spec.n_classes(),
+        result.val_score,
+        &result.model,
+    )
+    .with_context(|| format!("installing trained bank for {:?}", spec.task.name))?;
+    {
+        let mut st = inner.state.lock().unwrap();
+        if let Some(rec) = st.jobs.get_mut(&id) {
+            rec.state = JobState::Completed;
+            rec.version = Some(version);
+            rec.best_val = result.val_score;
+            rec.wall_s = t0.elapsed().as_secs_f64();
+        }
+    }
+    remove_job_files(inner, id);
+    Ok(())
+}
+
+/// Shutdown hit mid-run: checkpoint (when durable) and put the job back
+/// in `queued` so recover/restart continues it.
+fn park_job(inner: &Arc<Inner>, id: u64, ts: &TrainState<'_>) -> Result<()> {
+    save_checkpoint(inner, id, ts)?;
+    let mut st = inner.state.lock().unwrap();
+    if let Some(rec) = st.jobs.get_mut(&id) {
+        rec.state = JobState::Queued;
+    }
+    Ok(())
+}
+
+fn ckpt_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("job_{id:06}.ckpt"))
+}
+
+fn desc_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("job_{id:06}.json"))
+}
+
+fn save_checkpoint(inner: &Inner, id: u64, ts: &TrainState<'_>) -> Result<()> {
+    let Some(dir) = &inner.cfg.ckpt_dir else { return Ok(()) };
+    write_atomic(&ckpt_path(dir, id), &ts.checkpoint().to_bytes())
+        .with_context(|| format!("checkpointing job {id}"))
+}
+
+/// Best-effort checkpoint read: a missing file starts fresh; an
+/// unreadable one warns and starts fresh (the descriptor is the source
+/// of truth for *what* to train, the checkpoint only for *where it was*).
+fn load_checkpoint(inner: &Inner, id: u64) -> Option<TrainCheckpoint> {
+    let dir = inner.cfg.ckpt_dir.as_ref()?;
+    let path = ckpt_path(dir, id);
+    let bytes = std::fs::read(&path).ok()?;
+    match TrainCheckpoint::from_bytes(&bytes) {
+        Ok(ck) => Some(ck),
+        Err(e) => {
+            eprintln!(
+                "warning: job {id}: unreadable checkpoint {path:?} ({e:#}); \
+                 restarting from scratch"
+            );
+            None
+        }
+    }
+}
+
+fn remove_job_files(inner: &Inner, id: u64) {
+    if let Some(dir) = &inner.cfg.ckpt_dir {
+        let _ = std::fs::remove_file(ckpt_path(dir, id));
+        let _ = std::fs::remove_file(desc_path(dir, id));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// durable job descriptors
+// ---------------------------------------------------------------------------
+
+/// Serialize a job's full spec (task generation + training config) for
+/// crash recovery. Seeds are exact through JSON for values < 2^53 —
+/// far beyond any seed this repo uses.
+fn job_descriptor_json(id: u64, spec: &JobSpec) -> Json {
+    let kind = match &spec.task.kind {
+        TaskKind::Cls { n_classes, pair } => Json::obj(vec![
+            ("kind", Json::str("cls")),
+            ("n_classes", Json::num(*n_classes as f64)),
+            ("pair", Json::Bool(*pair)),
+        ]),
+        TaskKind::Reg => Json::obj(vec![("kind", Json::str("reg"))]),
+        TaskKind::Span => Json::obj(vec![("kind", Json::str("span"))]),
+    };
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("name", Json::str(&spec.task.name)),
+        ("task_kind", kind),
+        ("metric", Json::str(spec.task.metric.name())),
+        ("n_train", Json::num(spec.task.n_train as f64)),
+        ("n_val", Json::num(spec.task.n_val as f64)),
+        ("n_test", Json::num(spec.task.n_test as f64)),
+        ("purity", Json::num(spec.task.purity)),
+        ("noise", Json::num(spec.task.noise)),
+        ("data_seed", Json::num(spec.task.seed as f64)),
+        ("exe", Json::str(&spec.train.exe)),
+        ("lr", Json::num(spec.train.lr)),
+        ("epochs", Json::num(spec.train.epochs as f64)),
+        ("warmup_frac", Json::num(spec.train.warmup_frac)),
+        ("seed", Json::num(spec.train.seed as f64)),
+        ("adapter_std", Json::num(spec.train.adapter_std)),
+        ("eval_each_epoch", Json::Bool(spec.train.eval_each_epoch)),
+    ])
+}
+
+/// Inverse of [`job_descriptor_json`].
+fn job_spec_from_descriptor(j: &Json) -> Result<JobSpec> {
+    let get_num = |key: &str| -> Result<f64> {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("descriptor missing {key:?}"))
+    };
+    let get_str = |key: &str| -> Result<String> {
+        j.get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .with_context(|| format!("descriptor missing {key:?}"))
+    };
+    let kj = j.get("task_kind").context("descriptor missing task_kind")?;
+    let kind = match kj.get("kind").and_then(Json::as_str) {
+        Some("cls") => TaskKind::Cls {
+            n_classes: kj
+                .get("n_classes")
+                .and_then(Json::as_usize)
+                .context("cls kind missing n_classes")?,
+            pair: kj.get("pair").and_then(Json::as_bool).unwrap_or(false),
+        },
+        Some("reg") => TaskKind::Reg,
+        Some("span") => TaskKind::Span,
+        other => bail!("unknown task kind {other:?}"),
+    };
+    let metric_name = get_str("metric")?;
+    let metric = Metric::from_name(&metric_name)
+        .with_context(|| format!("unknown metric {metric_name:?}"))?;
+    let task = TaskSpec {
+        name: get_str("name")?,
+        kind,
+        metric,
+        n_train: get_num("n_train")? as usize,
+        n_val: get_num("n_val")? as usize,
+        n_test: get_num("n_test")? as usize,
+        purity: get_num("purity")?,
+        noise: get_num("noise")?,
+        seed: get_num("data_seed")? as u64,
+    };
+    let train = TrainConfig {
+        exe: get_str("exe")?,
+        lr: get_num("lr")?,
+        epochs: get_num("epochs")? as usize,
+        warmup_frac: get_num("warmup_frac")?,
+        seed: get_num("seed")? as u64,
+        adapter_std: get_num("adapter_std")?,
+        eval_each_epoch: j
+            .get("eval_each_epoch")
+            .and_then(Json::as_bool)
+            .unwrap_or(true),
+    };
+    Ok(JobSpec { task, train })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            task: TaskSpec {
+                name: "jobtask".into(),
+                kind: TaskKind::Cls { n_classes: 3, pair: true },
+                metric: Metric::Accuracy,
+                n_train: 240,
+                n_val: 48,
+                n_test: 48,
+                purity: 0.85,
+                noise: 0.0,
+                seed: 77,
+            },
+            train: TrainConfig::new("cls_train_adapter_m4", 1e-3, 4, 9),
+        }
+    }
+
+    #[test]
+    fn descriptor_roundtrip_is_exact() {
+        let s = spec();
+        let j = job_descriptor_json(5, &s);
+        let back = job_spec_from_descriptor(&Json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.task.name, "jobtask");
+        assert_eq!(back.task.kind, TaskKind::Cls { n_classes: 3, pair: true });
+        assert_eq!(back.task.metric, Metric::Accuracy);
+        assert_eq!(back.task.n_train, 240);
+        assert_eq!(back.task.seed, 77);
+        assert_eq!(back.task.purity, 0.85);
+        assert_eq!(back.train.exe, "cls_train_adapter_m4");
+        assert_eq!(back.train.lr, 1e-3);
+        assert_eq!(back.train.epochs, 4);
+        assert_eq!(back.train.seed, 9);
+        assert!(back.train.eval_each_epoch);
+    }
+
+    #[test]
+    fn descriptor_covers_reg_and_span_kinds() {
+        for (kind, metric) in [
+            (TaskKind::Reg, Metric::Spearman),
+            (TaskKind::Span, Metric::SpanF1),
+        ] {
+            let mut s = spec();
+            s.task.kind = kind.clone();
+            s.task.metric = metric;
+            let back = job_spec_from_descriptor(
+                &Json::parse(&job_descriptor_json(1, &s).to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.task.kind, kind);
+            assert_eq!(back.task.metric, metric);
+        }
+    }
+
+    #[test]
+    fn job_state_names_are_stable() {
+        assert_eq!(JobState::Queued.name(), "queued");
+        assert_eq!(JobState::Running.name(), "running");
+        assert_eq!(JobState::Completed.name(), "completed");
+        assert_eq!(JobState::Failed.name(), "failed");
+    }
+}

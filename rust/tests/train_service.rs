@@ -1,0 +1,477 @@
+//! Online train-and-serve integration (test preset, native backend,
+//! real sockets).
+//!
+//! The acceptance path for the training service: a gateway serving two
+//! tasks accepts `POST /train` for a third while live traffic flows, the
+//! job runs on the shared runtime, the task hot-installs and answers
+//! predictions that match the offline `train_task` for the same seed —
+//! and in-flight predictions never error during the install. Plus the
+//! durability half: a checkpoint taken mid-run (`TrainState` level and
+//! service level, through a kill/park + recover cycle) resumes to a
+//! byte-identical final bank.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adapterbert::coordinator::{FlushPolicy, Server, ServerConfig};
+use adapterbert::data::grammar::World;
+use adapterbert::data::tasks::{self, Metric, TaskKind, TaskSpec};
+use adapterbert::eval::{predict_split, Predictions, TaskModel};
+use adapterbert::model::params::NamedTensors;
+use adapterbert::runtime::Runtime;
+use adapterbert::serve::{
+    self, Client, Gateway, GatewayConfig, TrainJobRequest,
+};
+use adapterbert::store::AdapterStore;
+use adapterbert::train::{
+    self, JobSpec, PretrainConfig, ServiceConfig, TrainCheckpoint, TrainConfig,
+    TrainService, TrainState,
+};
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(
+        Runtime::open(
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")),
+            "test",
+        )
+        .expect("open test preset (built-in presets synthesize their manifest)"),
+    )
+}
+
+fn world(rt: &Runtime) -> World {
+    World::new(rt.manifest.dims.vocab, 0)
+}
+
+fn pretrained_base(rt: &Arc<Runtime>) -> NamedTensors {
+    static BASE: std::sync::OnceLock<NamedTensors> = std::sync::OnceLock::new();
+    BASE.get_or_init(|| {
+        train::load_or_pretrain(
+            rt,
+            &world(rt),
+            &PretrainConfig { steps: 3000, log_every: 0, ..Default::default() },
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs/base_test.bank")),
+        )
+        .unwrap()
+    })
+    .clone()
+}
+
+fn cls_spec(name: &str, n_train: usize, seed: u64) -> TaskSpec {
+    TaskSpec {
+        name: name.to_string(),
+        kind: TaskKind::Cls { n_classes: 2, pair: false },
+        metric: Metric::Accuracy,
+        n_train,
+        n_val: 48,
+        n_test: 48,
+        purity: 0.85,
+        noise: 0.0,
+        seed,
+    }
+}
+
+fn train_cls(
+    rt: &Arc<Runtime>,
+    base: &NamedTensors,
+    name: &str,
+    seed: u64,
+) -> (TaskModel, tasks::TaskData, f64) {
+    let spec = cls_spec(name, 240, seed);
+    let data = tasks::generate(&world(rt), &spec, rt.manifest.dims.seq);
+    let cfg = TrainConfig::new("cls_train_adapter_m4", 1e-3, 4, 0);
+    let res = train::train_task(rt, &cfg, &data, base).unwrap();
+    (res.model, data, res.val_score)
+}
+
+fn class_preds(
+    rt: &Arc<Runtime>,
+    model: &TaskModel,
+    base: &NamedTensors,
+    split: &tasks::Split,
+) -> Vec<usize> {
+    match predict_split(rt, model, base, split, 2, None).unwrap() {
+        Predictions::Class(v) => v,
+        other => panic!("expected class predictions, got {other:?}"),
+    }
+}
+
+fn quick_server(
+    rt: &Arc<Runtime>,
+    store: &AdapterStore,
+    base: &NamedTensors,
+    classes: &BTreeMap<String, usize>,
+) -> Server {
+    Server::start(
+        rt.clone(),
+        store,
+        base,
+        classes,
+        ServerConfig {
+            flush: FlushPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_millis(2),
+            },
+            executors: 2,
+            queue_capacity: 256,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// `TrainState` can checkpoint mid-epoch and resume to the byte-identical
+/// final bank the uninterrupted run produces; resuming under a different
+/// config is refused.
+#[test]
+fn checkpoint_resume_reproduces_final_bank_byte_identically() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let spec = cls_spec("ckpt_task", 240, 31);
+    let data = tasks::generate(&world(&rt), &spec, rt.manifest.dims.seq);
+    let cfg = TrainConfig::new("cls_train_adapter_m4", 1e-3, 3, 1);
+    let reference = train::train_task(&rt, &cfg, &data, &base).unwrap();
+    let batch = rt.manifest.exe("cls_train_adapter_m4").unwrap().batch;
+    let steps_per_epoch = 240 / batch;
+
+    // run one full epoch plus a few steps of the next, then snapshot
+    let mut st = TrainState::new(&rt, &cfg, &data, &base).unwrap();
+    while !st.epoch_done() {
+        st.step().unwrap();
+    }
+    st.end_epoch().unwrap();
+    for _ in 0..5 {
+        assert!(!st.epoch_done());
+        st.step().unwrap();
+    }
+    let bytes = st.checkpoint().to_bytes();
+    drop(st); // the "crash"
+
+    let ck = TrainCheckpoint::from_bytes(&bytes).unwrap();
+    // wrong config must be refused, not silently diverge
+    let mut other = cfg.clone();
+    other.lr = 5e-4;
+    assert!(TrainState::resume(&rt, &other, &data, &base, &ck).is_err());
+
+    let mut st2 = TrainState::resume(&rt, &cfg, &data, &base, &ck).unwrap();
+    assert_eq!(st2.steps_taken(), steps_per_epoch + 5);
+    assert_eq!(st2.epochs_done(), 1);
+    while !st2.done() {
+        while !st2.epoch_done() {
+            st2.step().unwrap();
+        }
+        st2.end_epoch().unwrap();
+    }
+    let resumed = st2.finish().unwrap();
+    assert_eq!(resumed.val_score, reference.val_score);
+    assert_eq!(resumed.steps, reference.steps);
+    assert_eq!(
+        resumed.model.trained.to_bytes(),
+        reference.model.trained.to_bytes(),
+        "resumed run diverged from the uninterrupted run"
+    );
+    assert_eq!(resumed.history.len(), reference.history.len());
+    for (a, b) in resumed.history.iter().zip(&reference.history) {
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+    }
+}
+
+/// A train split smaller than the batch is a descriptive error, not a
+/// silent zero-step run returning an untrained model.
+#[test]
+fn too_small_dataset_errors_instead_of_silent_zero_step_training() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let batch = rt.manifest.exe("cls_train_adapter_m4").unwrap().batch;
+    let spec = cls_spec("tiny_task", batch - 1, 41);
+    let data = tasks::generate(&world(&rt), &spec, rt.manifest.dims.seq);
+    let cfg = TrainConfig::new("cls_train_adapter_m4", 1e-3, 3, 0);
+    let err = train::train_task(&rt, &cfg, &data, &base).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("steps_per_epoch") && msg.contains(&format!("batch {batch}")),
+        "unhelpful error: {msg}"
+    );
+    // exactly one batch of data is the smallest run that trains
+    let spec = cls_spec("tiny_ok", batch, 42);
+    let data = tasks::generate(&world(&rt), &spec, rt.manifest.dims.seq);
+    let res = train::train_task(&rt, &cfg, &data, &base).unwrap();
+    assert_eq!(res.steps, 3, "one step per epoch over 3 epochs");
+}
+
+/// The headline acceptance test: gateway serving two tasks takes
+/// `POST /train` for a third mid-traffic; the job trains on the shared
+/// runtime, hot-installs, and the new task's predictions (and stored
+/// bank bytes) match the offline `train_task` for the same seed.
+/// In-flight predictions for the existing tasks never error.
+#[test]
+fn gateway_train_job_end_to_end_with_live_traffic() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let (model_a, data_a, val_a) = train_cls(&rt, &base, "tja", 61);
+    let (model_b, data_b, val_b) = train_cls(&rt, &base, "tjb", 62);
+
+    let store = Arc::new(AdapterStore::in_memory());
+    store.register("tja", &model_a, val_a).unwrap();
+    store.register("tjb", &model_b, val_b).unwrap();
+    let mut classes = BTreeMap::new();
+    classes.insert("tja".to_string(), 2);
+    classes.insert("tjb".to_string(), 2);
+    let server = Arc::new(quick_server(&rt, &store, &base, &classes));
+
+    let store_t = store.clone();
+    let server_t = server.clone();
+    let install = move |task: &str, n_classes: usize, val: f64, model: &TaskModel| {
+        serve::install_trained(&store_t, &server_t, task, n_classes, val, model)
+            .map(|meta| meta.version)
+    };
+    let trainer = Arc::new(
+        TrainService::start(
+            rt.clone(),
+            Arc::new(base.clone()),
+            world(&rt),
+            ServiceConfig::default(),
+            Box::new(install),
+        )
+        .unwrap(),
+    );
+    let gw = Gateway::start_with_trainer(
+        rt.clone(),
+        store.clone(),
+        server,
+        Some(trainer),
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )
+    .unwrap();
+    let addr = gw.local_addr().to_string();
+
+    let exp_a = class_preds(&rt, &model_a, &base, &data_a.test);
+    let exp_b = class_preds(&rt, &model_b, &base, &data_b.test);
+    let rows = 16usize.min(data_a.test.n).min(data_b.test.n);
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let stop = &stop;
+        let addr = &addr;
+        // live traffic on the two existing tasks for the whole job
+        // lifetime — every response must be correct, none may error
+        for (task, data, exp) in
+            [("tja", &data_a, &exp_a), ("tjb", &data_b, &exp_b)]
+        {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let row = i % rows;
+                    let resp = client
+                        .predict_ids(task, data.test.row_tokens(row))
+                        .unwrap_or_else(|e| {
+                            panic!("{task} errored during train-and-serve: {e:#}")
+                        });
+                    assert_eq!(resp.pred_class, Some(exp[row]), "{task} row {row}");
+                    i += 1;
+                }
+                assert!(i > 0, "worker for {task} made no requests");
+            });
+        }
+
+        let mut client = Client::connect(addr).unwrap();
+        // before the job, the third task 404s
+        assert!(client.predict_text("hotjob", "zu kari").is_err());
+
+        let mut req = TrainJobRequest::new("hotjob");
+        req.m = Some(4);
+        req.epochs = Some(3);
+        req.seed = Some(0);
+        req.n_train = Some(240);
+        req.n_val = Some(48);
+        req.purity = Some(0.85);
+        req.noise = Some(0.0);
+        req.data_seed = Some(77);
+        let sub = client.submit_train(&req).unwrap();
+        assert_eq!(sub.task, "hotjob");
+        assert!(
+            matches!(sub.status.as_str(), "queued" | "running"),
+            "{}",
+            sub.status
+        );
+        let id = sub.job_id;
+        // the listing knows the job
+        assert!(client.train_jobs().unwrap().iter().any(|j| j.job_id == id));
+        // a bad id 404s, a malformed one 400s
+        assert!(client.train_status(id + 999).is_err());
+
+        // poll to completion while traffic flows
+        let deadline = Instant::now() + Duration::from_secs(300);
+        let fin = loop {
+            let s = client.train_status(id).unwrap();
+            assert_ne!(s.status, "failed", "job failed: {:?}", s.error);
+            if s.status == "completed" {
+                break s;
+            }
+            assert!(Instant::now() < deadline, "job never finished");
+            std::thread::sleep(Duration::from_millis(50));
+        };
+        assert_eq!(fin.version, Some(1), "store version assigned");
+        assert_eq!(fin.total_epochs, 3);
+        assert_eq!(fin.epoch, 3);
+        assert_eq!(fin.val_history.len(), 3, "eval each epoch");
+        assert!(fin.steps_per_sec > 0.0);
+        assert!(fin.wall_s > 0.0);
+
+        // keep prior-task traffic flowing a little longer post-install
+        std::thread::sleep(Duration::from_millis(100));
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    // offline mirror of the exact job the service resolved
+    let spec = cls_spec("hotjob", 240, 77);
+    let data = tasks::generate(&world(&rt), &spec, rt.manifest.dims.seq);
+    let cfg = TrainConfig::new("cls_train_adapter_m4", 1e-3, 3, 0);
+    let offline = train::train_task(&rt, &cfg, &data, &base).unwrap();
+    // the job's stored bank is byte-identical to the offline run's
+    let (meta, stored) = store.latest("hotjob").unwrap();
+    assert_eq!(meta.version, 1);
+    assert_eq!(
+        stored.trained.to_bytes(),
+        offline.model.trained.to_bytes(),
+        "online job diverged from offline train_task"
+    );
+
+    // and the served predictions match offline eval row by row
+    let exp = class_preds(&rt, &offline.model, &base, &data.test);
+    let mut client = Client::connect(&addr).unwrap();
+    for row in 0..16usize.min(data.test.n) {
+        let resp = client.predict_ids("hotjob", data.test.row_tokens(row)).unwrap();
+        assert_eq!(resp.pred_class, Some(exp[row]), "hot-trained task row {row}");
+    }
+    let names: Vec<String> =
+        client.tasks().unwrap().into_iter().map(|t| t.task).collect();
+    assert_eq!(names, vec!["hotjob", "tja", "tjb"]);
+    drop(client);
+    gw.shutdown().unwrap();
+}
+
+/// Service-level durability: shutdown parks a running job (checkpoint +
+/// queued), a fresh service recovers it from disk, resumes mid-run, and
+/// the final bank is byte-identical to an uninterrupted offline run.
+#[test]
+fn service_parks_on_shutdown_and_recovers_byte_identically() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let dir = std::env::temp_dir().join(format!("ab_jobs_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(AdapterStore::in_memory());
+
+    let spec = cls_spec("parked", 480, 91);
+    let train_cfg = TrainConfig::new("cls_train_adapter_m4", 1e-3, 6, 5);
+    let data = tasks::generate(&world(&rt), &spec, rt.manifest.dims.seq);
+    let reference = train::train_task(&rt, &train_cfg, &data, &base).unwrap();
+    let job = JobSpec { task: spec, train: train_cfg };
+
+    let svc_cfg = ServiceConfig {
+        workers: 1,
+        ckpt_dir: Some(dir.clone()),
+        checkpoint_every: 1,
+    };
+    fn install_into(store: Arc<AdapterStore>) -> Box<adapterbert::train::InstallFn> {
+        Box::new(move |task, _n_classes, val, model| {
+            Ok(store.register(task, model, val)?.version)
+        })
+    }
+
+    // leg 1: start the job, shut down mid-run → checkpoint + park
+    let svc = TrainService::start(
+        rt.clone(),
+        Arc::new(base.clone()),
+        world(&rt),
+        svc_cfg.clone(),
+        install_into(store.clone()),
+    )
+    .unwrap();
+    let id = svc.submit(job.clone()).unwrap();
+    assert_eq!(svc.active_jobs(), 1);
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let r = svc.status(id).unwrap();
+        if r.step >= 10 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job made no progress");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    svc.shutdown();
+    assert!(store.latest("parked").is_none(), "job must not have completed");
+    let desc = dir.join(format!("job_{id:06}.json"));
+    let ckpt = dir.join(format!("job_{id:06}.ckpt"));
+    assert!(desc.exists(), "descriptor survives shutdown");
+    assert!(ckpt.exists(), "checkpoint written on park");
+
+    // leg 2: a fresh service (fresh process, conceptually) recovers it
+    let svc2 = TrainService::start(
+        rt.clone(),
+        Arc::new(base.clone()),
+        world(&rt),
+        svc_cfg,
+        install_into(store.clone()),
+    )
+    .unwrap();
+    assert_eq!(svc2.recover().unwrap(), 1, "one job recovered from disk");
+    let deadline = Instant::now() + Duration::from_secs(300);
+    let rec = loop {
+        let r = svc2.status(id).unwrap();
+        assert_ne!(
+            r.state,
+            adapterbert::train::JobState::Failed,
+            "recovered job failed: {:?}",
+            r.error
+        );
+        if r.state == adapterbert::train::JobState::Completed {
+            break r;
+        }
+        assert!(Instant::now() < deadline, "recovered job never finished");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(rec.resumed, "job must resume from the checkpoint, not restart");
+    assert_eq!(rec.version, Some(1));
+    svc2.shutdown();
+
+    // kill + resume == uninterrupted, byte for byte
+    let (_, stored) = store.latest("parked").unwrap();
+    assert_eq!(
+        stored.trained.to_bytes(),
+        reference.model.trained.to_bytes(),
+        "kill/resume diverged from the uninterrupted run"
+    );
+    // terminal jobs clean up their durable state
+    assert!(!desc.exists() && !ckpt.exists(), "job files not cleaned up");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Gateways without a training service answer `/train` with 503 instead
+/// of panicking or 404-ing.
+#[test]
+fn train_routes_503_without_a_training_service() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let store = Arc::new(AdapterStore::in_memory());
+    let server = quick_server(&rt, &store, &base, &BTreeMap::new());
+    let gw = Gateway::start(
+        rt.clone(),
+        store.clone(),
+        server,
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )
+    .unwrap();
+    let mut client = Client::connect(&gw.local_addr().to_string()).unwrap();
+    let err = client.submit_train(&TrainJobRequest::new("x")).unwrap_err();
+    assert!(format!("{err:#}").contains("503"), "{err:#}");
+    assert!(client.train_jobs().is_err());
+    assert!(client.train_status(1).is_err());
+    drop(client);
+    gw.shutdown().unwrap();
+}
