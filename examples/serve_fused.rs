@@ -96,6 +96,7 @@ fn main() -> anyhow::Result<()> {
                 executors: 1,
                 queue_capacity: 1024,
                 mode,
+                ..Default::default()
             },
         )?;
         let (reply_tx, reply_rx) = mpsc::channel();

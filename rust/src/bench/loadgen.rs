@@ -15,15 +15,26 @@
 //! per-task batching collapses to 1–2-row batches and the fused engine's
 //! cross-task batches win; the recorded `mean_occupancy` is the
 //! comparison the CI smoke job pins.
+//!
+//! The **cache-pressure preset** (`zipf`) skews the task pick
+//! Zipf(s)-style instead of round-robin: a few hot tasks dominate while
+//! the long tail arrives cold — the access pattern a byte-budget paged
+//! bank cache (`serve --adapter-cache-mb`) is built for. During the run
+//! a sampler thread polls `GET /metrics` and tracks the peak
+//! `resident_bytes`, and the report windows the cache counters
+//! (hits/misses/evictions/cold loads) over exactly this run; it all
+//! serializes to `BENCH_cache.json` (schema v1, [`LoadReport::to_cache_json`]),
+//! which the CI cache-pressure job validates (hit rate, budget ceiling,
+//! zero errors).
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::serve::Client;
+use crate::serve::{CacheMetrics, Client};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -49,6 +60,11 @@ pub struct LoadgenConfig {
     /// (request `i` is not issued before `t0 + i/rate`). `None` = as
     /// fast as responses come back.
     pub rate: Option<f64>,
+    /// Cache-pressure preset: pick tasks Zipf(s)-distributed (rank 0 =
+    /// first task = hottest) instead of round-robin, so a byte-budget
+    /// bank cache sees hot residents plus a cold long tail. `None` =
+    /// round-robin.
+    pub zipf: Option<f64>,
     /// Words of random text per request.
     pub words_per_request: usize,
     /// RNG seed for the request text.
@@ -65,6 +81,7 @@ impl Default for LoadgenConfig {
             requests: 200,
             duration: None,
             rate: None,
+            zipf: None,
             words_per_request: 12,
             seed: 7,
         }
@@ -107,6 +124,43 @@ impl ServerWindow {
     }
 }
 
+/// Paged-bank-cache state over the run window, from the `cache` section
+/// of `GET /metrics`: counters are before/after deltas, residency is the
+/// final state plus the peak seen by the in-run sampler thread. Absent
+/// when the gateway predates the cache section.
+#[derive(Debug, Clone)]
+pub struct CacheWindow {
+    /// Byte budget; `None` = unbounded cache.
+    pub budget_bytes: Option<u64>,
+    /// Tasks in the coordinator directory at the end of the run.
+    pub registered: u64,
+    /// Banks resident at the end of the run.
+    pub resident: u64,
+    pub resident_bytes: u64,
+    /// Peak `resident_bytes` observed (sampler polls + final state) —
+    /// the number the CI job checks against the budget.
+    pub max_resident_bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub cold_loads: u64,
+    pub load_errors: u64,
+    /// Server-lifetime cold-load p95 (the reservoir isn't windowed).
+    pub cold_load_p95_ms: f64,
+}
+
+impl CacheWindow {
+    /// Fraction of lookups over the window served without a cold load.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
 /// The whole run.
 #[derive(Debug)]
 pub struct LoadReport {
@@ -122,6 +176,8 @@ pub struct LoadReport {
     pub batch_size_hist: BTreeMap<usize, u64>,
     /// Server-side occupancy/mode over the run window.
     pub server: Option<ServerWindow>,
+    /// Paged-bank-cache window (gateways with the `cache` metrics section).
+    pub cache: Option<CacheWindow>,
 }
 
 impl LoadReport {
@@ -211,6 +267,58 @@ impl LoadReport {
             ("per_task", per_task),
         ])
     }
+
+    /// The `BENCH_cache.json` document, schema v1: the cache-pressure
+    /// run's totals plus the windowed cache counters and the peak
+    /// residency the CI job pins against the byte budget. `cache` is
+    /// `null` when the gateway exposed no cache section.
+    pub fn to_cache_json(&self, cfg: &LoadgenConfig) -> Json {
+        let cache = match &self.cache {
+            Some(c) => Json::obj(vec![
+                (
+                    "budget_bytes",
+                    c.budget_bytes.map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
+                ),
+                ("registered", Json::num(c.registered as f64)),
+                ("resident", Json::num(c.resident as f64)),
+                ("resident_bytes", Json::num(c.resident_bytes as f64)),
+                ("max_resident_bytes", Json::num(c.max_resident_bytes as f64)),
+                ("hits", Json::num(c.hits as f64)),
+                ("misses", Json::num(c.misses as f64)),
+                ("hit_rate", Json::num(c.hit_rate())),
+                ("evictions", Json::num(c.evictions as f64)),
+                ("cold_loads", Json::num(c.cold_loads as f64)),
+                ("load_errors", Json::num(c.load_errors as f64)),
+                ("cold_load_p95_ms", Json::num(c.cold_load_p95_ms)),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("bench", Json::str("cache")),
+            ("schema_version", Json::num(1.0)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("concurrency", Json::num(cfg.concurrency as f64)),
+                    ("requests", Json::num(cfg.requests as f64)),
+                    ("zipf", cfg.zipf.map(Json::num).unwrap_or(Json::Null)),
+                    ("task_count", Json::num(self.tasks.len() as f64)),
+                    ("words_per_request", Json::num(cfg.words_per_request as f64)),
+                ]),
+            ),
+            (
+                "totals",
+                Json::obj(vec![
+                    ("requests", Json::num(self.requests as f64)),
+                    ("errors", Json::num(self.errors as f64)),
+                    ("wall_s", Json::num(self.wall_s)),
+                    ("throughput_rps", Json::num(self.throughput_rps())),
+                    ("latency_ms", latency_json(&self.all)),
+                ]),
+            ),
+            ("cache", cache),
+        ])
+    }
 }
 
 /// `{mean, p50, p95, p99, max}` in milliseconds (zeros when empty — JSON
@@ -234,6 +342,12 @@ pub(crate) fn latency_json(s: &Samples) -> Json {
         ("p99", Json::num(p99)),
         ("max", Json::num(max)),
     ])
+}
+
+/// Parse the `cache` section of a `GET /metrics` document (`None` when
+/// missing — gateway predates the paged cache).
+fn cache_counters(metrics: &Json) -> Option<CacheMetrics> {
+    CacheMetrics::from_json(metrics.get("cache")?).ok()
 }
 
 /// Parse the server-side counters this harness windows over from a
@@ -285,9 +399,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     if tasks.is_empty() {
         bail!("gateway serves no tasks and none were given");
     }
-    // snapshot the server counters so the report windows occupancy over
-    // exactly this run, not the gateway's whole lifetime
-    let before = probe.metrics().ok().as_ref().and_then(server_counters);
+    // snapshot the server counters so the report windows occupancy (and
+    // cache hits/misses/evictions) over exactly this run, not the
+    // gateway's whole lifetime
+    let before_doc = probe.metrics().ok();
+    let before = before_doc.as_ref().and_then(server_counters);
+    let cache_before = before_doc.as_ref().and_then(cache_counters);
     // close the discovery connection before the closed loop starts, so
     // the gateway's worker rotation only carries live load connections
     drop(probe);
@@ -296,9 +413,32 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
 
     let issued = AtomicU64::new(0);
     let deadline = cfg.duration.map(|d| Instant::now() + d);
+    // in-run residency sampler: the budget invariant is about *peak*
+    // memory, which before/after snapshots can't see
+    let stop_sampler = AtomicBool::new(false);
+    let max_resident = AtomicU64::new(0);
     let t0 = Instant::now();
     let mut worker_stats: Vec<Result<BTreeMap<String, TaskLoad>>> = Vec::new();
     std::thread::scope(|scope| {
+        let sampler = cache_before.is_some().then(|| {
+            let (stop, peak, addr) = (&stop_sampler, &max_resident, &cfg.addr);
+            scope.spawn(move || {
+                let Ok(mut c) = Client::connect(addr) else { return };
+                while !stop.load(Ordering::Relaxed) {
+                    match c.metrics() {
+                        Ok(m) => {
+                            if let Some(cm) = cache_counters(&m) {
+                                peak.fetch_max(cm.resident_bytes, Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            let _ = c.reconnect();
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            })
+        });
         let mut handles = Vec::new();
         for w in 0..cfg.concurrency.max(1) {
             let tasks = &tasks;
@@ -314,21 +454,41 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
                 Err(_) => Err(anyhow::anyhow!("loadgen worker panicked")),
             });
         }
+        stop_sampler.store(true, Ordering::Relaxed);
+        if let Some(s) = sampler {
+            let _ = s.join();
+        }
     });
 
     let wall_s = t0.elapsed().as_secs_f64();
-    let server = match (before, Client::connect(&cfg.addr)) {
-        (Some((mode, b0, f0, o0)), Ok(mut c)) => c
-            .metrics()
-            .ok()
-            .as_ref()
-            .and_then(server_counters)
-            .map(|(_, b1, f1, o1)| ServerWindow {
-                exec_mode: mode,
-                batches: (b1 - b0).max(0.0),
-                fused_batches: (f1 - f0).max(0.0),
-                occupancy_sum: (o1 - o0).max(0.0),
-            }),
+    let after_doc = Client::connect(&cfg.addr)
+        .ok()
+        .and_then(|mut c| c.metrics().ok());
+    let server = match (before, after_doc.as_ref().and_then(server_counters)) {
+        (Some((mode, b0, f0, o0)), Some((_, b1, f1, o1))) => Some(ServerWindow {
+            exec_mode: mode,
+            batches: (b1 - b0).max(0.0),
+            fused_batches: (f1 - f0).max(0.0),
+            occupancy_sum: (o1 - o0).max(0.0),
+        }),
+        _ => None,
+    };
+    let cache = match (cache_before, after_doc.as_ref().and_then(cache_counters)) {
+        (Some(b), Some(a)) => Some(CacheWindow {
+            budget_bytes: a.budget_bytes,
+            registered: a.registered as u64,
+            resident: a.resident as u64,
+            resident_bytes: a.resident_bytes,
+            max_resident_bytes: max_resident
+                .load(Ordering::Relaxed)
+                .max(a.resident_bytes),
+            hits: a.hits.saturating_sub(b.hits),
+            misses: a.misses.saturating_sub(b.misses),
+            evictions: a.evictions.saturating_sub(b.evictions),
+            cold_loads: a.cold_loads.saturating_sub(b.cold_loads),
+            load_errors: a.load_errors.saturating_sub(b.load_errors),
+            cold_load_p95_ms: a.cold_load_p95_ms,
+        }),
         _ => None,
     };
     let mut per_task: BTreeMap<String, TaskLoad> = BTreeMap::new();
@@ -364,6 +524,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         all,
         batch_size_hist,
         server,
+        cache,
     })
 }
 
@@ -400,7 +561,12 @@ fn worker_loop(
                 std::thread::sleep(slot - now);
             }
         }
-        let task = &tasks[(i as usize) % tasks.len()];
+        // cache-pressure preset: Zipf-skewed pick (rank 0 hottest);
+        // default is round-robin
+        let task = match cfg.zipf {
+            Some(s) => &tasks[rng.zipf(tasks.len(), s)],
+            None => &tasks[(i as usize) % tasks.len()],
+        };
         let words: Vec<&str> = (0..cfg.words_per_request.max(1))
             .map(|_| tok.word(4 + rng.below(word_ids) as i32))
             .collect();
@@ -470,6 +636,7 @@ mod tests {
                 fused_batches: 4.0,
                 occupancy_sum: 3.0,
             }),
+            cache: None,
         };
         let cfg = LoadgenConfig {
             addr: "x".into(),
@@ -508,11 +675,76 @@ mod tests {
             all: Samples::default(),
             batch_size_hist: BTreeMap::new(),
             server: None,
+            cache: None,
         };
         let cfg = LoadgenConfig { addr: "x".into(), ..Default::default() };
         let back = Json::parse(&report.to_json(&cfg).to_string()).unwrap();
         assert_eq!(back.at("server"), &Json::Null);
         assert_eq!(back.at("config").at("rate_rps"), &Json::Null);
+        // the cache document degrades the same way
+        let back = Json::parse(&report.to_cache_json(&cfg).to_string()).unwrap();
+        assert_eq!(back.at("cache"), &Json::Null);
+        assert_eq!(back.at("config").at("zipf"), &Json::Null);
+    }
+
+    #[test]
+    fn cache_report_json_schema() {
+        let mut all = Samples::default();
+        all.record(Duration::from_millis(2));
+        let report = LoadReport {
+            tasks: (0..64).map(|i| format!("syn_{i:03}")).collect(),
+            wall_s: 1.0,
+            requests: 400,
+            errors: 0,
+            per_task: BTreeMap::new(),
+            all,
+            batch_size_hist: BTreeMap::new(),
+            server: None,
+            cache: Some(CacheWindow {
+                budget_bytes: Some(1 << 20),
+                registered: 64,
+                resident: 8,
+                resident_bytes: 900_000,
+                max_resident_bytes: 1_000_000,
+                hits: 300,
+                misses: 100,
+                evictions: 92,
+                cold_loads: 100,
+                load_errors: 0,
+                cold_load_p95_ms: 7.5,
+            }),
+        };
+        let cfg = LoadgenConfig {
+            addr: "x".into(),
+            requests: 400,
+            zipf: Some(1.2),
+            ..Default::default()
+        };
+        let j = report.to_cache_json(&cfg);
+        let back = Json::parse(&j.to_string()).unwrap();
+        // pinned schema: the CI cache-pressure job reads these fields
+        assert_eq!(back.at("bench").as_str(), Some("cache"));
+        assert_eq!(back.at("schema_version").as_usize(), Some(1));
+        assert_eq!(back.at("config").at("zipf").as_f64(), Some(1.2));
+        assert_eq!(back.at("config").at("task_count").as_usize(), Some(64));
+        assert_eq!(back.at("totals").at("requests").as_usize(), Some(400));
+        assert_eq!(back.at("totals").at("errors").as_usize(), Some(0));
+        let c = back.at("cache");
+        assert_eq!(c.at("budget_bytes").as_usize(), Some(1 << 20));
+        assert_eq!(c.at("max_resident_bytes").as_usize(), Some(1_000_000));
+        assert_eq!(c.at("registered").as_usize(), Some(64));
+        assert_eq!(c.at("resident").as_usize(), Some(8));
+        assert_eq!(c.at("evictions").as_usize(), Some(92));
+        assert_eq!(c.at("hit_rate").as_f64(), Some(0.75));
+        assert!(c.at("cold_load_p95_ms").as_f64().is_some());
+        // unbounded cache → budget_bytes null
+        let mut unbounded = report;
+        if let Some(cw) = unbounded.cache.as_mut() {
+            cw.budget_bytes = None;
+        }
+        let back =
+            Json::parse(&unbounded.to_cache_json(&cfg).to_string()).unwrap();
+        assert_eq!(back.at("cache").at("budget_bytes"), &Json::Null);
     }
 
     #[test]

@@ -1,0 +1,364 @@
+//! Byte-budget paged cache with single-flight loading.
+//!
+//! The serving-cost story (PAPER.md §1, "A Comprehensive Analysis of
+//! Adapter Efficiency" in PAPERS.md) only holds if resident memory is
+//! bounded: ~3MB/task banks are hub economics precisely because not all
+//! of them sit in RAM at once. This module is the mechanism: a cache of
+//! built banks with
+//!
+//! * an optional **byte budget** — inserting past it evicts the
+//!   least-recently-used entries until the new entry fits. A single
+//!   entry larger than the whole budget is still admitted (the task must
+//!   stay servable); it is evicted as soon as anything else arrives;
+//! * **single-flight loads** — concurrent [`PagedCache::get_or_load`]
+//!   calls for one cold key run the loader exactly once; the others
+//!   block on a gate and re-check. A *failed* load releases the gate
+//!   without poisoning the key, so a waiter retries the load itself —
+//!   that is what makes "retry after the fault heals" work;
+//! * **atomic snapshots** — residency, byte totals and the
+//!   hit/miss/eviction/load-error counters live under one lock, so a
+//!   [`PagedCache::snapshot`] is a single consistent view (the
+//!   `/metrics` fix in PR 6 depends on this).
+//!
+//! The cache stores values by clone (use `Arc<…>` values); eviction only
+//! drops the cache's reference, so in-flight batches holding their own
+//! `Arc` pin the actual bytes until they finish.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::timer::Samples;
+
+/// Cold-load latency keeps a bounded reservoir (slot replacement like the
+/// coordinator's request-latency buffer).
+const COLD_LOAD_SAMPLE_CAP: usize = 4_096;
+
+struct Slot<V> {
+    value: V,
+    bytes: u64,
+    last_used: u64,
+}
+
+struct Inner<V> {
+    map: BTreeMap<String, Slot<V>>,
+    bytes: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    load_errors: u64,
+}
+
+/// One-shot gate: waiters block until the loader opens it.
+struct Gate {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Gate {
+        Gate { done: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    fn wait(&self) {
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.cv.wait(done).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        *self.done.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+/// A consistent point-in-time view of the cache (one lock acquisition).
+#[derive(Debug, Clone)]
+pub struct CacheSnapshot {
+    pub resident: usize,
+    pub resident_bytes: u64,
+    pub budget_bytes: Option<u64>,
+    pub resident_tasks: Vec<String>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub load_errors: u64,
+    /// Completed cold loads (miss that produced a resident entry).
+    pub cold_loads: u64,
+    pub cold_load_p50_ms: f64,
+    pub cold_load_p95_ms: f64,
+}
+
+impl CacheSnapshot {
+    /// Fraction of lookups answered from residency; 0 when idle.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// LRU cache keyed by task name with a byte budget and single-flight
+/// cold loads. Values are cloned out (use `Arc`).
+pub struct PagedCache<V: Clone> {
+    budget: Option<u64>,
+    inner: Mutex<Inner<V>>,
+    loading: Mutex<BTreeMap<String, Arc<Gate>>>,
+    cold_loads: Mutex<Samples>,
+}
+
+impl<V: Clone> PagedCache<V> {
+    /// `budget` is the resident-byte ceiling; `None` means unbounded
+    /// (the pre-PR-6 "always resident" behaviour).
+    pub fn new(budget: Option<u64>) -> PagedCache<V> {
+        PagedCache {
+            budget,
+            inner: Mutex::new(Inner {
+                map: BTreeMap::new(),
+                bytes: 0,
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                load_errors: 0,
+            }),
+            loading: Mutex::new(BTreeMap::new()),
+            cold_loads: Mutex::new(Samples::default()),
+        }
+    }
+
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// Resident value for `key`, loading it on a miss. The loader returns
+    /// the value plus its byte size for budget accounting. Exactly one
+    /// concurrent caller runs the loader per cold key; a failed load is
+    /// returned to its caller (and counted) while waiters retry.
+    pub fn get_or_load(
+        &self,
+        key: &str,
+        load: impl Fn() -> Result<(V, u64)>,
+    ) -> Result<V> {
+        loop {
+            if let Some(v) = self.touch(key) {
+                return Ok(v);
+            }
+            // miss: join an in-flight load or become the loader
+            let gate = {
+                let mut loading = self.loading.lock().unwrap();
+                match loading.get(key) {
+                    Some(g) => Some(g.clone()),
+                    None => {
+                        loading.insert(key.to_string(), Arc::new(Gate::new()));
+                        None
+                    }
+                }
+            };
+            if let Some(gate) = gate {
+                gate.wait();
+                continue; // re-check: hit on success, retry load on failure
+            }
+            self.inner.lock().unwrap().misses += 1;
+            let t0 = Instant::now();
+            let outcome = load();
+            let result = match outcome {
+                Ok((value, bytes)) => {
+                    self.insert(key, value.clone(), bytes);
+                    let dur = t0.elapsed();
+                    // lock order matches snapshot(): inner is released
+                    // before the reservoir lock is taken
+                    let miss_no =
+                        self.inner.lock().unwrap().misses as usize;
+                    let mut s = self.cold_loads.lock().unwrap();
+                    if s.durs.len() >= COLD_LOAD_SAMPLE_CAP {
+                        s.durs[miss_no % COLD_LOAD_SAMPLE_CAP] = dur;
+                    } else {
+                        s.record(dur);
+                    }
+                    Ok(value)
+                }
+                Err(e) => {
+                    self.inner.lock().unwrap().load_errors += 1;
+                    Err(e)
+                }
+            };
+            let gate = self.loading.lock().unwrap().remove(key);
+            if let Some(gate) = gate {
+                gate.open();
+            }
+            return result;
+        }
+    }
+
+    /// Hit path: clone the value and refresh recency.
+    fn touch(&self, key: &str) -> Option<V> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some(slot) => {
+                slot.last_used = tick;
+                let v = slot.value.clone();
+                inner.hits += 1;
+                Some(v)
+            }
+            None => None,
+        }
+    }
+
+    /// Install (or replace) an entry, evicting least-recently-used
+    /// entries until the budget holds again. The entry just inserted is
+    /// never evicted to make room for itself — a bank larger than the
+    /// whole budget still serves, alone.
+    pub fn insert(&self, key: &str, value: V, bytes: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.map.remove(key) {
+            inner.bytes -= old.bytes;
+        }
+        inner.bytes += bytes;
+        inner.map.insert(key.to_string(), Slot { value, bytes, last_used: tick });
+        if let Some(budget) = self.budget {
+            while inner.bytes > budget && inner.map.len() > 1 {
+                let victim = inner
+                    .map
+                    .iter()
+                    .filter(|(k, _)| k.as_str() != key)
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(k, _)| k.clone());
+                let Some(victim) = victim else { break };
+                let slot = inner.map.remove(&victim).unwrap();
+                inner.bytes -= slot.bytes;
+                inner.evictions += 1;
+            }
+        }
+    }
+
+    /// Residency probe — does **not** refresh recency.
+    pub fn contains(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().map.contains_key(key)
+    }
+
+    /// Drop an entry (no eviction counter — this is an explicit removal).
+    pub fn remove(&self, key: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(slot) = inner.map.remove(key) {
+            inner.bytes -= slot.bytes;
+        }
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn snapshot(&self) -> CacheSnapshot {
+        // fixed order: inner before the cold-load reservoir; no caller
+        // holds either across this call
+        let inner = self.inner.lock().unwrap();
+        let samples = self.cold_loads.lock().unwrap();
+        // percentile of an empty set is NaN, which util::json cannot
+        // render — report 0 until the first cold load
+        let (p50, p95) = if samples.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (samples.pctl_s(50.0) * 1e3, samples.pctl_s(95.0) * 1e3)
+        };
+        CacheSnapshot {
+            resident: inner.map.len(),
+            resident_bytes: inner.bytes,
+            budget_bytes: self.budget,
+            resident_tasks: inner.map.keys().cloned().collect(),
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            load_errors: inner.load_errors,
+            cold_loads: inner.misses - inner.load_errors,
+            cold_load_p50_ms: p50,
+            cold_load_p95_ms: p95,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn lru_eviction_respects_budget_and_recency() {
+        let c: PagedCache<u32> = PagedCache::new(Some(30));
+        c.insert("a", 1, 10);
+        c.insert("b", 2, 10);
+        c.insert("c", 3, 10);
+        assert_eq!(c.resident_bytes(), 30);
+        // touch `a` so `b` is the LRU victim
+        c.get_or_load("a", || unreachable!()).unwrap();
+        c.insert("d", 4, 10);
+        assert!(c.contains("a") && c.contains("c") && c.contains("d"));
+        assert!(!c.contains("b"));
+        let snap = c.snapshot();
+        assert_eq!(snap.evictions, 1);
+        assert_eq!(snap.resident_bytes, 30);
+    }
+
+    #[test]
+    fn oversized_entry_is_admitted_alone() {
+        let c: PagedCache<u32> = PagedCache::new(Some(10));
+        c.insert("big", 1, 100);
+        assert!(c.contains("big"), "oversized bank must still serve");
+        assert_eq!(c.get_or_load("big", || unreachable!()).unwrap(), 1);
+        // anything else displaces it
+        c.insert("small", 2, 5);
+        assert!(!c.contains("big"));
+        assert!(c.contains("small"));
+        assert_eq!(c.resident_bytes(), 5);
+    }
+
+    #[test]
+    fn failed_load_is_retried_by_next_caller() {
+        let c: PagedCache<u32> = PagedCache::new(Some(100));
+        let err = c.get_or_load("k", || anyhow::bail!("injected"));
+        assert!(err.is_err());
+        assert_eq!(c.snapshot().load_errors, 1);
+        // the key is not poisoned: a later call loads fine
+        assert_eq!(c.get_or_load("k", || Ok((7, 10))).unwrap(), 7);
+        assert!(c.contains("k"));
+    }
+
+    #[test]
+    fn single_flight_runs_loader_once() {
+        let c: Arc<PagedCache<u32>> = Arc::new(PagedCache::new(Some(1000)));
+        let loads = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let c = &c;
+                let loads = &loads;
+                scope.spawn(move || {
+                    let v = c
+                        .get_or_load("cold", || {
+                            loads.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(50),
+                            );
+                            Ok((42, 10))
+                        })
+                        .unwrap();
+                    assert_eq!(v, 42);
+                });
+            }
+        });
+        assert_eq!(loads.load(Ordering::SeqCst), 1, "loader ran more than once");
+        let snap = c.snapshot();
+        assert_eq!(snap.misses, 1);
+        assert_eq!(snap.hits, 7);
+    }
+}

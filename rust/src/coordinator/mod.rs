@@ -6,18 +6,24 @@
 //!   continual-learning invariant (old tasks' scores never move) checked
 //!   after every registration;
 //! * `router` — task-id routing with per-task queues and flush policy;
-//! * `server` — thread-based serving: executor pool, per-task bank cache,
-//!   adapter-bank swap per batch, latency/throughput metrics; in
+//! * `cache` — byte-budget paged bank cache: LRU eviction back to
+//!   store-only residency, single-flight cold loads, atomic snapshots;
+//! * `server` — thread-based serving: executor pool, paged per-task bank
+//!   cache, adapter-bank swap per batch, latency/throughput metrics; in
 //!   [`ExecMode::Fused`] it drives the cross-task planner (`crate::fuse`)
 //!   and the backend's fused engine instead — mixed batches, one shared
 //!   trunk forward;
 //! * `memory` — parameter accounting (the 1.3×/9× "total params" columns).
 
+pub mod cache;
 pub mod memory;
 pub mod router;
 pub mod server;
 pub mod stream;
 
+pub use cache::{CacheSnapshot, PagedCache};
 pub use router::{FlushPolicy, Router};
-pub use server::{ExecMode, Prediction, Server, ServerConfig, ServerMetrics};
+pub use server::{
+    ExecMode, Prediction, Server, ServerConfig, ServerMetrics, ServerSnapshot,
+};
 pub use stream::{StreamConfig, StreamReport, TaskStream};

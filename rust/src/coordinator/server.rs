@@ -16,13 +16,22 @@
 //! resident base, per-batch task switch = feeding different small input
 //! literals, no model reload.
 //!
-//! The bank cache is behind an `RwLock`, so tasks can be **hot-installed**
-//! while traffic flows: [`Server::prepare_task`] builds and validates the
-//! fwd banks off to the side (no lock held), [`Server::install_task`]
-//! swaps them in with a short write lock. In-flight batches for other
-//! tasks keep their own `Arc<TaskBanks>` and never notice. This is the
-//! executor-side half of the store's append-only guarantee: adding task
-//! N+1 touches no bytes serving tasks 1…N. [`Server::drain`] starts a
+//! The bank cache is a **paged** [`PagedCache`]: banks are resident only
+//! while hot, bounded by an optional byte budget
+//! ([`ServerConfig::cache_budget`]), and a cold task's banks are fetched
+//! back from the durable store on first request — a *fallible* seam
+//! ([`crate::store::BankSource`]), since the fetch re-reads and re-decodes
+//! the bank from disk. Eviction drops only the cache's `Arc`: in-flight
+//! batches (and fused segments — see `runtime::fused`) hold their own
+//! reference, so a forward pass can never race an eviction. The task
+//! **directory** (name → kind/classes/fusability) is separate from the
+//! cache and always complete, so routing and 404 checks never trigger a
+//! load. Tasks can still be **hot-installed** while traffic flows:
+//! [`Server::prepare_task`] builds and validates the fwd banks off to the
+//! side (no lock held), [`Server::install_task`] makes them visible —
+//! counting against the budget, evicting colder banks if needed. This is
+//! the executor-side half of the store's append-only guarantee: adding
+//! task N+1 touches no bytes serving tasks 1…N. [`Server::drain`] starts a
 //! graceful shutdown: new submits are refused, queued work is flushed and
 //! answered, then [`Server::shutdown`] joins every thread.
 //!
@@ -45,13 +54,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::cache::{CacheSnapshot, PagedCache};
 use super::router::{FlushPolicy, Router};
 use crate::eval::{fused_bank, fwd_param_banks, TaskModel};
 use crate::fuse::plan::{FusePlanner, FusedFlush, PlanSegment};
 use crate::model::params::NamedTensors;
 use crate::runtime::fused::{FusedBackend, FusedSegment, RowOutput};
 use crate::runtime::{Bank, FusedTaskBank, Runtime};
-use crate::store::AdapterStore;
+use crate::store::{AdapterStore, BankSource};
 use crate::util::tensor::Tensor;
 use crate::util::timer::Samples;
 
@@ -164,6 +174,11 @@ pub struct ServerConfig {
     pub queue_capacity: usize,
     /// Per-task or fused cross-task execution.
     pub mode: ExecMode,
+    /// Resident-bank byte budget (`serve --adapter-cache-mb`). `None`
+    /// keeps every bank resident forever (the pre-paging behaviour, with
+    /// eager startup builds); `Some(b)` starts lazy — banks load on first
+    /// request and evict LRU-first back to store-only residency.
+    pub cache_budget: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -173,6 +188,7 @@ impl Default for ServerConfig {
             executors: 2,
             queue_capacity: 1024,
             mode: ExecMode::PerTask,
+            cache_budget: None,
         }
     }
 }
@@ -213,6 +229,17 @@ impl ServerMetrics {
     }
 }
 
+/// Atomic all-in-one metrics view — see [`Server::metrics_snapshot`].
+#[derive(Debug, Clone)]
+pub struct ServerSnapshot {
+    /// Request/batch counters and latency samples.
+    pub server: ServerMetrics,
+    /// Bank-cache residency and hit/miss/eviction counters.
+    pub cache: CacheSnapshot,
+    /// Registered (directory) task count; `>= cache.resident`.
+    pub registered: usize,
+}
+
 struct TaskBanks {
     fwd_name: String,
     /// artifact kind (cls | reg | span) — decides output decoding
@@ -225,15 +252,101 @@ struct TaskBanks {
     fused: Option<Arc<FusedTaskBank>>,
 }
 
-/// The hot-swappable executor-side bank cache.
-type SharedBanks = Arc<RwLock<BTreeMap<String, Arc<TaskBanks>>>>;
+/// Directory entry: what routing needs to know about a *registered* task
+/// without loading its banks. Unlike cache residency, the directory is
+/// always complete — an evicted task still lists, still routes, still
+/// answers [`Server::task_info`]; only its parameters moved back to
+/// store-only residency.
+#[derive(Debug, Clone)]
+struct TaskDir {
+    kind: String,
+    n_classes: usize,
+    /// `adapter`/`lnonly` variants share the trunk; `topk` does not.
+    fusable: bool,
+}
+
+/// The executor-side fetch seam: directory + paged bank cache over the
+/// durable store. Executors resolve banks through [`BankProvider::resolve`]
+/// — a hit clones the resident `Arc`, a miss streams the bank back from
+/// the store (single-flight per task) and rebuilds the serving banks.
+struct BankProvider {
+    rt: Arc<Runtime>,
+    base: Arc<NamedTensors>,
+    source: Arc<dyn BankSource>,
+    cache: PagedCache<Arc<TaskBanks>>,
+    directory: RwLock<BTreeMap<String, TaskDir>>,
+    build_fused: bool,
+}
+
+impl BankProvider {
+    /// Resident banks for `task`, cold-loading from the store on a miss.
+    /// Fails when the task is unknown to the store (e.g. hot-installed
+    /// without a durable write, then evicted) or the store read fails.
+    fn resolve(&self, task: &str) -> Result<Arc<TaskBanks>> {
+        self.cache.get_or_load(task, || {
+            let (meta, model) =
+                self.source.fetch_latest(task)?.with_context(|| {
+                    format!(
+                        "task {task:?} has no bank in the durable store \
+                         (an evicted task can only reload from the store)"
+                    )
+                })?;
+            let n_classes = self
+                .directory
+                .read()
+                .unwrap()
+                .get(task)
+                .map(|d| d.n_classes)
+                .unwrap_or(2);
+            let banks = build_task_banks(
+                &self.rt,
+                &self.base,
+                n_classes,
+                &model,
+                self.build_fused,
+            )
+            .with_context(|| {
+                format!("rebuilding banks for task {task:?} v{}", meta.version)
+            })?;
+            let bytes = banks_bytes(&banks);
+            Ok((banks, bytes))
+        })
+    }
+
+    /// Routing probe from the directory — never loads banks. Unknown
+    /// tasks default to fusable; the executor reports them.
+    fn fusable(&self, task: &str) -> bool {
+        self.directory
+            .read()
+            .unwrap()
+            .get(task)
+            .map(|d| d.fusable)
+            .unwrap_or(true)
+    }
+}
+
+/// Resident footprint of built serving banks: parameter bank tensors
+/// (4 bytes/element) plus the gatherable fused bank, if built.
+fn banks_bytes(tb: &TaskBanks) -> u64 {
+    let mut bytes: u64 = 0;
+    for bank in &tb.params {
+        for t in bank {
+            bytes += t.len() as u64 * 4;
+        }
+    }
+    if let Some(f) = &tb.fused {
+        bytes += f.byte_len();
+    }
+    bytes
+}
 
 /// A task's serving banks, built and validated by [`Server::prepare_task`]
-/// and not yet visible to executors. Installing is a map insert under a
-/// short write lock — the expensive work (base merge, executable warm-up)
-/// already happened here.
+/// and not yet visible to executors. Installing is a cache insert — the
+/// expensive work (base merge, executable warm-up) already happened here.
 pub struct PreparedTask {
     banks: Arc<TaskBanks>,
+    bytes: u64,
+    dir: TaskDir,
 }
 
 /// Mode-selected batcher driven by the router thread: the classic
@@ -245,14 +358,15 @@ pub struct PreparedTask {
 /// cross-task batches would split their rows into 1–2-row padded per-task
 /// forwards, which is strictly worse than letting them batch among
 /// themselves under the normal flush policy. Fusability is looked up per
-/// push against the live bank cache, so a hot-registered task lands on
+/// push against the task **directory** (not cache residency — an evicted
+/// task must still route correctly), so a hot-registered task lands on
 /// the right side immediately.
 enum Batcher {
     PerTask(Router<Request>),
     Fused {
         planner: FusePlanner<Request>,
         side: Router<Request>,
-        banks: SharedBanks,
+        provider: Arc<BankProvider>,
     },
 }
 
@@ -260,15 +374,9 @@ impl Batcher {
     fn push(&mut self, task: &str, req: Request, now: Instant) -> Option<FusedFlush<Request>> {
         match self {
             Batcher::PerTask(r) => r.push(task, req, now).map(FusedFlush::from_single),
-            Batcher::Fused { planner, side, banks } => {
+            Batcher::Fused { planner, side, provider } => {
                 // unknown tasks go to the planner; the executor reports them
-                let fusable = banks
-                    .read()
-                    .unwrap()
-                    .get(task)
-                    .map(|tb| tb.fused.is_some())
-                    .unwrap_or(true);
-                if fusable {
+                if provider.fusable(task) {
                     planner.push(task, req, now)
                 } else {
                     side.push(task, req, now).map(FusedFlush::from_single)
@@ -324,9 +432,7 @@ pub struct Server {
     draining: Arc<AtomicBool>,
     router_handle: Option<std::thread::JoinHandle<()>>,
     executor_handles: Vec<std::thread::JoinHandle<()>>,
-    rt: Arc<Runtime>,
-    base: Arc<NamedTensors>,
-    banks: SharedBanks,
+    provider: Arc<BankProvider>,
     mode: ExecMode,
     /// Serializes registration flows (store append + install) across
     /// producers — see [`Server::registration_lock`].
@@ -341,7 +447,21 @@ impl Server {
     /// Start serving every task currently registered in `store`.
     pub fn start(
         rt: Arc<Runtime>,
-        store: &AdapterStore,
+        store: &Arc<AdapterStore>,
+        base: &NamedTensors,
+        task_classes: &BTreeMap<String, usize>,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        let source: Arc<dyn BankSource> = store.clone();
+        Server::start_with_source(rt, source, base, task_classes, cfg)
+    }
+
+    /// [`Server::start`] over any [`BankSource`] — the seam the
+    /// fault-injection tests use to wrap the store with injected read
+    /// failures without touching production code.
+    pub fn start_with_source(
+        rt: Arc<Runtime>,
+        source: Arc<dyn BankSource>,
         base: &NamedTensors,
         task_classes: &BTreeMap<String, usize>,
         cfg: ServerConfig,
@@ -358,18 +478,39 @@ impl Server {
             }
             m => m,
         };
-        // Resolve and cache per-task banks up front (server startup =
-        // adapter swap-in; this is the only expensive per-task cost).
         let base = Arc::new(base.clone());
-        let mut initial: BTreeMap<String, Arc<TaskBanks>> = BTreeMap::new();
-        for task in store.task_names() {
-            let (_, model) = store.latest(&task).context("store raced")?;
+        let provider = Arc::new(BankProvider {
+            rt: rt.clone(),
+            base,
+            source,
+            cache: PagedCache::new(cfg.cache_budget),
+            directory: RwLock::new(BTreeMap::new()),
+            build_fused: mode == ExecMode::Fused,
+        });
+        // The directory covers every store task up front (routing and 404
+        // checks never load banks). Bank residency depends on the budget:
+        // unbounded keeps the old behaviour — build everything eagerly,
+        // so startup still validates every bank; a budget starts lazy and
+        // banks page in on first request.
+        for task in provider.source.task_names() {
+            let Some(meta) = provider.source.latest_meta(&task) else {
+                continue;
+            };
             let n_classes = *task_classes.get(&task).unwrap_or(&2);
-            let banks =
-                build_task_banks(&rt, &base, n_classes, &model, mode == ExecMode::Fused)?;
-            initial.insert(task.clone(), banks);
+            provider.directory.write().unwrap().insert(
+                task.clone(),
+                TaskDir {
+                    kind: meta.kind.clone(),
+                    n_classes,
+                    fusable: variant_is_fusable(&meta.variant),
+                },
+            );
+            if cfg.cache_budget.is_none() {
+                provider
+                    .resolve(&task)
+                    .with_context(|| format!("loading banks for task {task:?}"))?;
+            }
         }
-        let banks: SharedBanks = Arc::new(RwLock::new(initial));
 
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_capacity);
         let (batch_tx, batch_rx) = mpsc::channel::<FusedFlush<Request>>();
@@ -381,7 +522,7 @@ impl Server {
         // router thread
         let stop_r = stop.clone();
         let flush = cfg.flush;
-        let banks_r = banks.clone();
+        let provider_r = provider.clone();
         let router_handle = std::thread::Builder::new()
             .name("ab-router".into())
             .spawn(move || {
@@ -390,7 +531,7 @@ impl Server {
                     ExecMode::Fused => Batcher::Fused {
                         planner: FusePlanner::new(flush),
                         side: Router::new(flush),
-                        banks: banks_r,
+                        provider: provider_r,
                     },
                 };
                 loop {
@@ -426,9 +567,7 @@ impl Server {
         let capacity = cfg.flush.max_batch;
         let mut executor_handles = Vec::new();
         for i in 0..cfg.executors.max(1) {
-            let rt = rt.clone();
-            let banks = banks.clone();
-            let base = base.clone();
+            let provider = provider.clone();
             let batch_rx = batch_rx.clone();
             let metrics = metrics.clone();
             let handle = std::thread::Builder::new()
@@ -441,7 +580,7 @@ impl Server {
                     let Ok(flush) = flush else { return };
                     let fused = mode == ExecMode::Fused;
                     if let Err(e) =
-                        run_flush(&rt, &banks, &base, capacity, fused, flush, &metrics)
+                        run_flush(&provider, capacity, fused, flush, &metrics)
                     {
                         eprintln!("executor error: {e:#}");
                     }
@@ -455,9 +594,7 @@ impl Server {
             draining: Arc::new(AtomicBool::new(false)),
             router_handle: Some(router_handle),
             executor_handles,
-            rt,
-            base,
-            banks,
+            provider,
             mode,
             reg_serial: Mutex::new(()),
             metrics,
@@ -489,21 +626,37 @@ impl Server {
     /// server exactly as it was.
     pub fn prepare_task(&self, n_classes: usize, model: &TaskModel) -> Result<PreparedTask> {
         let banks = build_task_banks(
-            &self.rt,
-            &self.base,
+            &self.provider.rt,
+            &self.provider.base,
             n_classes,
             model,
             self.mode == ExecMode::Fused,
         )?;
-        Ok(PreparedTask { banks })
+        let bytes = banks_bytes(&banks);
+        Ok(PreparedTask {
+            banks,
+            bytes,
+            dir: TaskDir {
+                kind: model.kind.clone(),
+                n_classes,
+                fusable: variant_is_fusable(&model.variant),
+            },
+        })
     }
 
-    /// Make a prepared task visible to the executors (insert or replace,
-    /// under a short write lock). Batches already in flight keep the bank
-    /// `Arc` they resolved — no request is ever served from a half-swapped
-    /// state.
+    /// Make a prepared task visible to the executors: the directory entry
+    /// is inserted (or replaced) and the banks go into the paged cache,
+    /// **counting against the byte budget** — hot-installing a finished
+    /// training job can evict colder banks. Batches already in flight
+    /// keep the bank `Arc` they resolved — no request is ever served from
+    /// a half-swapped state.
     pub fn install_task(&self, task: &str, prepared: PreparedTask) {
-        self.banks.write().unwrap().insert(task.to_string(), prepared.banks);
+        self.provider
+            .directory
+            .write()
+            .unwrap()
+            .insert(task.to_string(), prepared.dir);
+        self.provider.cache.insert(task, prepared.banks, prepared.bytes);
     }
 
     /// Prepare + install in one call (the store write, if any, is the
@@ -514,18 +667,54 @@ impl Server {
         Ok(())
     }
 
-    /// Names of the tasks currently servable, sorted.
+    /// Names of the registered tasks, sorted. Registration — a directory
+    /// entry — outlives residency: an evicted task still lists here.
     pub fn tasks(&self) -> Vec<String> {
-        self.banks.read().unwrap().keys().cloned().collect()
+        self.provider.directory.read().unwrap().keys().cloned().collect()
     }
 
-    /// (artifact kind, n_classes) for a servable task.
+    /// (artifact kind, n_classes) for a registered task — directory only,
+    /// never loads banks.
     pub fn task_info(&self, task: &str) -> Option<(String, usize)> {
-        self.banks
+        self.provider
+            .directory
             .read()
             .unwrap()
             .get(task)
-            .map(|b| (b.kind.clone(), b.n_classes))
+            .map(|d| (d.kind.clone(), d.n_classes))
+    }
+
+    /// Is the task's bank resident right now? (Does not refresh recency.)
+    pub fn is_resident(&self, task: &str) -> bool {
+        self.provider.cache.contains(task)
+    }
+
+    /// Load a registered task's banks into residency (no-op on a hit).
+    /// This is the gateway's pre-admission warm-up: cold-load failures
+    /// surface here as descriptive errors instead of dropped batches.
+    pub fn prefetch(&self, task: &str) -> Result<()> {
+        if self.provider.directory.read().unwrap().get(task).is_none() {
+            bail!("unknown task {task:?}");
+        }
+        self.provider.resolve(task).map(|_| ())
+    }
+
+    /// Point-in-time cache view (residency, byte totals, counters) from a
+    /// single lock acquisition.
+    pub fn cache_stats(&self) -> CacheSnapshot {
+        self.provider.cache.snapshot()
+    }
+
+    /// One consistent metrics view: request counters, cache residency and
+    /// the registered-task count, sampled in a fixed lock order with the
+    /// request counters held across the cache snapshot — `/metrics`
+    /// assembled from this can never pair a mid-registration cache state
+    /// with counters from a different moment.
+    pub fn metrics_snapshot(&self) -> ServerSnapshot {
+        let m = self.metrics.lock().unwrap();
+        let cache = self.provider.cache.snapshot();
+        let registered = self.provider.directory.read().unwrap().len();
+        ServerSnapshot { server: m.clone(), cache, registered }
     }
 
     /// Stop admitting new requests; queued and in-flight work still
@@ -628,20 +817,29 @@ fn record_latency(m: &mut ServerMetrics, latency: Duration) {
     }
 }
 
+/// `adapter`/`lnonly` banks share the trunk; `topk` rewrites trunk layers
+/// per task and keeps the per-task path even in fused mode.
+fn variant_is_fusable(variant: &str) -> bool {
+    matches!(variant, "adapter" | "lnonly")
+}
+
 /// Execute one flush: fusable segments share a single trunk forward;
 /// everything else (topk trunks, or per-task mode) runs the classic
-/// per-task executable per segment. Segments for unknown tasks are
-/// dropped (their reply channels close → the gateway answers 500) without
-/// taking the rest of the batch down.
+/// per-task executable per segment. Bank resolution goes through the
+/// paged cache — a cold task's bank streams back from the store here,
+/// single-flight. The resolved `Arc<TaskBanks>` **pins** the banks for
+/// the whole flush: an eviction in between only drops the cache's
+/// reference. Segments whose banks cannot be resolved (unknown task,
+/// store read failure) are dropped (their reply channels close → the
+/// gateway answers 5xx) without taking the rest of the batch down.
 fn run_flush(
-    rt: &Arc<Runtime>,
-    banks: &SharedBanks,
-    base: &Arc<NamedTensors>,
+    provider: &Arc<BankProvider>,
     capacity: usize,
     use_fused: bool,
     flush: FusedFlush<Request>,
     metrics: &Arc<Mutex<ServerMetrics>>,
 ) -> Result<()> {
+    let rt = &provider.rt;
     let FusedFlush { segments, mut items, .. } = flush;
     // split the row vector back into per-segment request vectors
     let mut per_seg: Vec<(PlanSegment, Vec<Request>)> = Vec::with_capacity(segments.len());
@@ -655,19 +853,18 @@ fn run_flush(
     let mut fused_groups: Vec<(Arc<TaskBanks>, Vec<Request>)> = Vec::new();
     let mut first_err: Option<anyhow::Error> = None;
     for (seg, reqs) in per_seg {
-        let tb = {
-            let map = banks.read().unwrap();
-            map.get(&seg.task).cloned()
-        };
-        let Some(tb) = tb else {
-            first_err.get_or_insert_with(|| {
-                anyhow::anyhow!(
-                    "no banks for task {:?} ({} rows dropped)",
-                    seg.task,
-                    reqs.len()
-                )
-            });
-            continue;
+        let tb = match provider.resolve(&seg.task) {
+            Ok(tb) => tb,
+            Err(e) => {
+                let n = reqs.len();
+                first_err.get_or_insert_with(|| {
+                    e.context(format!(
+                        "no banks for task {:?} ({n} rows dropped)",
+                        seg.task
+                    ))
+                });
+                continue;
+            }
         };
         if engine.is_some() && tb.fused.is_some() {
             fused_groups.push((tb, reqs));
@@ -677,8 +874,14 @@ fn run_flush(
     }
     if !fused_groups.is_empty() {
         let engine = engine.expect("fused groups are only collected with an engine");
-        if let Err(e) = run_fused_groups(rt, engine, base, capacity, fused_groups, metrics)
-        {
+        if let Err(e) = run_fused_groups(
+            rt,
+            engine,
+            &provider.base,
+            capacity,
+            fused_groups,
+            metrics,
+        ) {
             first_err.get_or_insert(e);
         }
     }

@@ -18,6 +18,13 @@
 //! `coordinator::Server` drives the planner when started with
 //! [`crate::coordinator::ExecMode::Fused`]; see ARCHITECTURE.md §Fused
 //! engine for the batch layout diagram.
+//!
+//! Interaction with the paged bank cache: a planned flush resolves each
+//! segment's `FusedTaskBank` from the coordinator's byte-budget cache
+//! *at execution time* and holds it via `Arc` for the duration of the
+//! fused forward. Eviction only drops the cache's reference, so a bank
+//! can be evicted mid-batch without invalidating in-flight segments —
+//! the memory is reclaimed when the last segment finishes.
 
 pub mod plan;
 

@@ -8,11 +8,12 @@
 //!                       [--m M] [--lr LR] [--epochs E] [--seed S]
 //! adapterbert stream    [--tasks a,b,c] [--store DIR]
 //! adapterbert serve     [--tasks a,b] [--max-batch B] [--executors E] [--fuse]
+//!                       [--adapter-cache-mb MB] [--synthetic N]
 //!                       [--port P [--duration S] [--workers W]
 //!                        [--train-workers T]] [--requests N]
 //! adapterbert loadgen   --addr HOST:PORT [--tasks a,b | --tasks N] [--rate R]
-//!                       [--concurrency C] [--requests N] [--duration S]
-//!                       [--out FILE]
+//!                       [--zipf S] [--concurrency C] [--requests N]
+//!                       [--duration S] [--out FILE]
 //! adapterbert baseline  --task NAME [--budget N]
 //! adapterbert bench     <table1|table2|fig3|fig3x|fig4|fig5|fig6|fig7|sizes|
 //!                        params|kernels|trainserve|all> [--full]
@@ -27,8 +28,14 @@
 //! starts the networked gateway (`serve::Gateway`, port 0 = ephemeral)
 //! with an online training service attached (`POST /train` trains new
 //! tasks next to live traffic and hot-installs them; `--train-workers 0`
-//! disables it). `loadgen` drives a running gateway and writes
-//! `BENCH_serve.json`.
+//! disables it). `--adapter-cache-mb MB` (or env `ADAPTERBERT_CACHE_MB`)
+//! bounds the resident adapter banks to a byte budget — colder tasks
+//! evict to store-only residency and page back in on demand; and
+//! `--synthetic N` registers N clones of the first tenant's bank
+//! (`syn_000`…) to fan the task count out for cache-pressure runs.
+//! `loadgen` drives a running gateway and writes `BENCH_serve.json`;
+//! with `--zipf S` it skews the task pick Zipf(S)-style and writes the
+//! cache-pressure document `BENCH_cache.json` instead.
 //!
 //! Python is never on this path: with PJRT linked the AOT artifacts are
 //! used, and otherwise `--backend auto` (the default) runs everything on
@@ -144,10 +151,17 @@ fn print_help() {
          \x20            shared-trunk forward (native backend); the\n\
          \x20            gateway also accepts POST /train — background\n\
          \x20            training jobs with resumable checkpoints that\n\
-         \x20            hot-install on completion (--train-workers)\n\
+         \x20            hot-install on completion (--train-workers);\n\
+         \x20            --adapter-cache-mb MB (env ADAPTERBERT_CACHE_MB)\n\
+         \x20            bounds resident adapter banks to a byte budget\n\
+         \x20            (evicted tasks reload from the store on demand);\n\
+         \x20            --synthetic N clones the first tenant N times\n\
+         \x20            (syn_000…) for cache-pressure runs\n\
          \x20 loadgen    closed-loop load harness against a running\n\
          \x20            gateway; writes BENCH_serve.json. --tasks N\n\
-         \x20            --rate R is the many-tasks/low-rate preset\n\
+         \x20            --rate R is the many-tasks/low-rate preset;\n\
+         \x20            --zipf S is the cache-pressure preset (skewed\n\
+         \x20            task pick, writes BENCH_cache.json)\n\
          \x20 baseline   no-BERT baseline search for one task\n\
          \x20 bench      regenerate paper tables/figures (see ARCHITECTURE.md);\n\
          \x20            `bench kernels` sweeps the native GEMM/attention\n\
@@ -299,6 +313,27 @@ fn cmd_stream(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the adapter-cache byte budget: `--adapter-cache-mb` wins,
+/// then env `ADAPTERBERT_CACHE_MB`; absent = unbounded.
+fn cache_budget_from(args: &Args) -> Result<Option<u64>> {
+    let (mb, origin) = match args.get("adapter-cache-mb") {
+        Some(v) => (Some(v.to_string()), "--adapter-cache-mb"),
+        None => (std::env::var("ADAPTERBERT_CACHE_MB").ok(), "ADAPTERBERT_CACHE_MB"),
+    };
+    match mb {
+        Some(v) => {
+            let m: f64 =
+                v.parse().map_err(|e| anyhow::anyhow!("{origin} {v:?}: {e}"))?;
+            anyhow::ensure!(
+                m > 0.0 && m.is_finite(),
+                "{origin} must be a positive number of MiB, got {v:?}"
+            );
+            Ok(Some((m * 1024.0 * 1024.0) as u64))
+        }
+        None => Ok(None),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use adapterbert::coordinator::server::Request;
     use adapterbert::coordinator::FlushPolicy;
@@ -337,6 +372,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         serve_tasks.push(name.to_string());
     }
 
+    // --synthetic N: clone the first tenant's bank into syn_000… to fan
+    // the task count out far beyond what fits a cache budget — the CI
+    // cache-pressure job serves 64 of these under a budget that holds
+    // only a handful of banks
+    let synthetic: usize = args.parse_num("synthetic", 0usize)?;
+    if synthetic > 0 {
+        let first = &serve_tasks[0];
+        let (_, model) = store
+            .fetch_latest(first)?
+            .with_context(|| format!("first tenant {first:?} missing from store"))?;
+        let n_classes = task_classes.get(first).copied().unwrap_or(2);
+        for i in 0..synthetic {
+            let name = format!("syn_{i:03}");
+            store.register(&name, &model, 0.5)?;
+            task_classes.insert(name.clone(), n_classes);
+            serve_tasks.push(name);
+        }
+        println!("registered {synthetic} synthetic clone(s) of {first}");
+    }
+
+    // --adapter-cache-mb MB (env ADAPTERBERT_CACHE_MB): byte budget for
+    // resident adapter banks; unset = everything stays resident
+    let cache_budget = cache_budget_from(args)?;
+    if let Some(b) = cache_budget {
+        println!("adapter cache budget: {:.2} MiB", b as f64 / (1024.0 * 1024.0));
+    }
+
     // --fuse: cross-task mixed batches, one shared-trunk forward (native
     // backend; PJRT falls back to per-task with a warning)
     let mode = if args.flags.contains_key("fuse") {
@@ -352,6 +414,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         executors: args.parse_num("executors", 1usize)?,
         queue_capacity: 1024,
         mode,
+        cache_budget,
     };
     let server = Server::start(rt.clone(), &store, &base, &task_classes, scfg)?;
     println!("execution mode: {}", server.mode().name());
@@ -527,6 +590,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    // --zipf S: cache-pressure preset — skewed task pick, cache-windowed
+    // report to BENCH_cache.json
+    let zipf = match args.get("zipf") {
+        Some(v) => {
+            let s: f64 = v.parse().map_err(|e| anyhow::anyhow!("--zipf {v:?}: {e}"))?;
+            anyhow::ensure!(s > 0.0, "--zipf must be positive");
+            Some(s)
+        }
+        None => None,
+    };
     let cfg = loadgen::LoadgenConfig {
         addr,
         tasks,
@@ -535,12 +608,21 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         requests: args.parse_num("requests", 200u64)?,
         duration,
         rate,
+        zipf,
         words_per_request: args.parse_num("words", 12usize)?,
         seed: args.parse_num("seed", 7u64)?,
     };
     let report = loadgen::run(&cfg)?;
-    let out = args.get_or("out", "BENCH_serve.json");
-    loadgen::write_report(Path::new(&out), &report.to_json(&cfg))?;
+    let out = args.get_or(
+        "out",
+        if zipf.is_some() { "BENCH_cache.json" } else { "BENCH_serve.json" },
+    );
+    let doc = if zipf.is_some() {
+        report.to_cache_json(&cfg)
+    } else {
+        report.to_json(&cfg)
+    };
+    loadgen::write_report(Path::new(&out), &doc)?;
     println!(
         "{} requests ({} errors) in {:.2}s → {:.1} req/s",
         report.requests,
@@ -548,6 +630,23 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         report.wall_s,
         report.throughput_rps()
     );
+    if let Some(c) = &report.cache {
+        println!(
+            "cache: hit rate {:.3} ({} hits / {} misses) | {} evictions | \
+             resident {}/{} | peak {} bytes{}",
+            c.hit_rate(),
+            c.hits,
+            c.misses,
+            c.evictions,
+            c.resident,
+            c.registered,
+            c.max_resident_bytes,
+            match c.budget_bytes {
+                Some(b) => format!(" (budget {b})"),
+                None => " (unbounded)".to_string(),
+            }
+        );
+    }
     for (task, t) in &report.per_task {
         let (p50, p99) = if t.latencies.is_empty() {
             (0.0, 0.0)

@@ -145,6 +145,28 @@ impl FusedTaskBank {
         ensure_shape("head/b", &self.head_b, &[n_out])?;
         Ok(())
     }
+
+    /// Resident size in bytes of the gatherable parameters (every tensor
+    /// is 4 bytes/element). Feeds the paged bank cache's byte budget.
+    pub fn byte_len(&self) -> u64 {
+        let t = |x: &Tensor| x.len() as u64 * 4;
+        let mut bytes = t(&self.embed_ln_g)
+            + t(&self.embed_ln_b)
+            + t(&self.head_w)
+            + t(&self.head_b);
+        for ln in &self.layer_ln {
+            bytes += t(&ln.ln1_g) + t(&ln.ln1_b) + t(&ln.ln2_g) + t(&ln.ln2_b);
+        }
+        if let Some(ad) = &self.adapters {
+            bytes += ad.gates.len() as u64 * 4;
+            for pair in &ad.layers {
+                for a in pair {
+                    bytes += t(&a.w_down) + t(&a.b_down) + t(&a.w_up) + t(&a.b_up);
+                }
+            }
+        }
+        bytes
+    }
 }
 
 fn ensure_shape(name: &str, t: &Tensor, want: &[usize]) -> Result<()> {
@@ -158,9 +180,14 @@ fn ensure_shape(name: &str, t: &Tensor, want: &[usize]) -> Result<()> {
 }
 
 /// A contiguous run of same-task rows inside a fused batch.
+///
+/// The `Arc` is the **pinning rule** for the paged bank cache: a segment
+/// holds its own reference for the duration of the mixed batch, so
+/// evicting the task mid-forward only drops the cache's map entry — the
+/// parameters stay alive until the last in-flight segment finishes.
 #[derive(Clone)]
 pub struct FusedSegment {
-    /// The task's gatherable parameters.
+    /// The task's gatherable parameters (pinned for the batch lifetime).
     pub bank: Arc<FusedTaskBank>,
     /// Number of batch rows in this segment.
     pub len: usize,

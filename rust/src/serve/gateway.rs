@@ -10,7 +10,14 @@
 //!   of stacking blocked HTTP workers;
 //! * **observability** — per-task latency histograms (log-spaced buckets,
 //!   constant memory) exposing p50/p95/p99 at `GET /metrics`, plus the
-//!   coordinator's batch/occupancy counters;
+//!   coordinator's batch/occupancy counters and the paged adapter-cache
+//!   residency section ([`CacheMetrics`]), all taken from one atomic
+//!   coordinator snapshot;
+//! * **cold loads** — a predict for a known-but-evicted task pages its
+//!   bank back in from the durable store *before* entering the router
+//!   (single-flight, so a herd on one cold task does one load); a failed
+//!   load answers `503` with the store error instead of crashing the
+//!   executor path;
 //! * **graceful drain** — [`Gateway::shutdown`] stops the accept loop,
 //!   lets in-flight requests finish and be answered, then stops the
 //!   training service (running jobs checkpoint and park) and drains and
@@ -32,8 +39,8 @@ use anyhow::{bail, Context, Result};
 
 use super::http::{Handler, HttpConfig, HttpRequest, HttpResponse, HttpServer};
 use super::protocol::{
-    PredictRequest, PredictResponse, RegisterRequest, TaskEntry, TrainJobRequest,
-    TrainJobStatus,
+    CacheMetrics, PredictRequest, PredictResponse, RegisterRequest, TaskEntry,
+    TrainJobRequest, TrainJobStatus,
 };
 use super::registry;
 use crate::coordinator::server::{Request, Server, ServerMetrics};
@@ -350,8 +357,10 @@ impl GatewayState {
             .into_iter()
             .filter_map(|task| {
                 let (kind, n_classes) = self.server.task_info(&task)?;
-                let entry = match self.store.latest(&task) {
-                    Some((meta, _)) => TaskEntry {
+                // metadata-only probe: listing tasks must not page evicted
+                // banks back into the cache
+                let entry = match self.store.latest_meta(&task) {
+                    Some(meta) => TaskEntry {
                         task,
                         version: meta.version,
                         variant: meta.variant,
@@ -386,7 +395,14 @@ impl GatewayState {
                 .collect(),
         );
         drop(per_task);
-        let coord = self.server.metrics.lock().unwrap().clone();
+        // one atomic coordinator snapshot: server counters, cache state and
+        // the directory size are read under a consistent lock order, so a
+        // hot registration racing this request can never yield a response
+        // where the cache section disagrees with itself (e.g. `resident`
+        // != `resident_tasks.len()`)
+        let snap = self.server.metrics_snapshot();
+        let coord = snap.server;
+        let cache = CacheMetrics::from_snapshot(&snap.cache, snap.registered);
         let j = Json::obj(vec![
             ("tasks", tasks),
             ("served", Json::num(self.stats.served.load(Ordering::Relaxed) as f64)),
@@ -414,6 +430,7 @@ impl GatewayState {
             ),
             ("draining", Json::Bool(self.server.is_draining())),
             ("exec_mode", Json::str(self.server.mode().name())),
+            ("cache", cache.to_json()),
             (
                 "coordinator",
                 Json::obj(vec![
@@ -457,6 +474,21 @@ impl GatewayState {
         if prev >= self.cfg.max_inflight {
             self.stats.admission_rejected.fetch_add(1, Ordering::Relaxed);
             return HttpResponse::error(503, "over capacity (admission window full)");
+        }
+        // cold-load seam: page an evicted task's bank back in from the
+        // durable store before the request enters the router. Single-flight
+        // inside the cache, so a herd on one cold task does one store read;
+        // requests for resident tasks never wait here. A failed load (store
+        // fault, torn bank) answers 503 for *this task only* — the caller
+        // can retry once the store heals.
+        if !self.server.is_resident(&preq.task) {
+            if let Err(e) = self.server.prefetch(&preq.task) {
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                return HttpResponse::error(
+                    503,
+                    &format!("cold load failed for task {:?}: {e:#}", preq.task),
+                );
+            }
         }
         let (tokens, segments, attn_mask) = match self.encode(&preq) {
             Ok(t) => t,

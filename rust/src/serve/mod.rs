@@ -10,7 +10,9 @@
 //! * `protocol` — JSON wire types (predict by text / ids, task listing,
 //!   health, hot registration) over `util::json`;
 //! * `gateway` — admission control on top of the router's backpressure,
-//!   per-task latency histograms with p50/p95/p99 at `GET /metrics`,
+//!   per-task latency histograms with p50/p95/p99 at `GET /metrics` (plus
+//!   the paged adapter-cache residency section), the cold-load seam that
+//!   pages evicted banks back in before a predict enters the router,
 //!   graceful drain on shutdown;
 //! * `registry` — `POST /tasks` hot registration (append the bank to the
 //!   `AdapterStore` and swap it into the executors **while traffic for
@@ -44,7 +46,7 @@ pub use client::Client;
 pub use gateway::{Gateway, GatewayConfig, GatewayReport, LatencyHist};
 pub use http::{HttpConfig, HttpServer};
 pub use protocol::{
-    Health, PredictRequest, PredictResponse, RegisterRequest, RegisterResponse,
-    TaskEntry, TrainJobRequest, TrainJobStatus,
+    CacheMetrics, Health, PredictRequest, PredictResponse, RegisterRequest,
+    RegisterResponse, TaskEntry, TrainJobRequest, TrainJobStatus,
 };
 pub use registry::{install_trained, job_spec_from_wire};

@@ -11,7 +11,7 @@
 //! | `POST /train`    | [`TrainJobRequest`]        | [`TrainJobStatus`]  |
 //! | `GET  /train`    | —                          | `{"jobs":[TrainJobStatus…]}` |
 //! | `GET  /train/<id>` | —                        | [`TrainJobStatus`]  |
-//! | `GET  /metrics`  | —                          | per-task latency histograms (raw JSON) |
+//! | `GET  /metrics`  | —                          | per-task latency histograms + [`CacheMetrics`] (raw JSON) |
 //!
 //! Trained banks travel as lowercase hex of `NamedTensors::to_bytes` —
 //! byte-exact, so a hot-registered bank reloads into the identical
@@ -20,6 +20,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::server::Response;
+use crate::coordinator::CacheSnapshot;
 use crate::eval::TaskModel;
 use crate::model::params::NamedTensors;
 use crate::store::BankMeta;
@@ -699,6 +700,116 @@ impl TrainJobStatus {
     }
 }
 
+/// `GET /metrics` → `"cache"` section: paged adapter-cache residency and
+/// cold-load statistics. `budget_bytes` is absent when the cache is
+/// unbounded (no `--adapter-cache-mb`).
+#[derive(Debug, Clone)]
+pub struct CacheMetrics {
+    /// banks currently resident in memory
+    pub resident: usize,
+    pub resident_bytes: u64,
+    /// byte budget; `None` → unbounded (everything stays resident)
+    pub budget_bytes: Option<u64>,
+    /// tasks known to the coordinator directory (resident or evicted)
+    pub registered: usize,
+    pub resident_tasks: Vec<String>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub load_errors: u64,
+    /// completed cold loads (`misses - load_errors`)
+    pub cold_loads: u64,
+    pub cold_load_p50_ms: f64,
+    pub cold_load_p95_ms: f64,
+}
+
+impl CacheMetrics {
+    /// Build from a coordinator cache snapshot plus the directory size.
+    pub fn from_snapshot(cache: &CacheSnapshot, registered: usize) -> CacheMetrics {
+        CacheMetrics {
+            resident: cache.resident,
+            resident_bytes: cache.resident_bytes,
+            budget_bytes: cache.budget_bytes,
+            registered,
+            resident_tasks: cache.resident_tasks.clone(),
+            hits: cache.hits,
+            misses: cache.misses,
+            evictions: cache.evictions,
+            load_errors: cache.load_errors,
+            cold_loads: cache.cold_loads,
+            cold_load_p50_ms: cache.cold_load_p50_ms,
+            cold_load_p95_ms: cache.cold_load_p95_ms,
+        }
+    }
+
+    /// Fraction of lookups served without a cold load (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("resident", Json::num(self.resident as f64)),
+            ("resident_bytes", Json::num(self.resident_bytes as f64)),
+        ];
+        if let Some(b) = self.budget_bytes {
+            pairs.push(("budget_bytes", Json::num(b as f64)));
+        }
+        pairs.extend([
+            ("registered", Json::num(self.registered as f64)),
+            (
+                "resident_tasks",
+                Json::arr(self.resident_tasks.iter().map(|t| Json::str(t))),
+            ),
+            ("hits", Json::num(self.hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("hit_rate", Json::num(self.hit_rate())),
+            ("evictions", Json::num(self.evictions as f64)),
+            ("load_errors", Json::num(self.load_errors as f64)),
+            ("cold_loads", Json::num(self.cold_loads as f64)),
+            ("cold_load_p50_ms", Json::num(self.cold_load_p50_ms)),
+            ("cold_load_p95_ms", Json::num(self.cold_load_p95_ms)),
+        ]);
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<CacheMetrics> {
+        let resident_tasks = match j.get("resident_tasks") {
+            Some(v) => {
+                let arr = v.as_arr().context("resident_tasks must be an array")?;
+                arr.iter()
+                    .map(|t| {
+                        t.as_str()
+                            .map(str::to_string)
+                            .context("resident_tasks must hold strings")
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+            None => Vec::new(),
+        };
+        Ok(CacheMetrics {
+            resident: get_usize(j, "resident")?,
+            resident_bytes: opt_u64(j, "resident_bytes")
+                .context("missing resident_bytes")?,
+            budget_bytes: opt_u64(j, "budget_bytes"),
+            registered: get_usize(j, "registered")?,
+            resident_tasks,
+            hits: opt_u64(j, "hits").context("missing hits")?,
+            misses: opt_u64(j, "misses").context("missing misses")?,
+            evictions: opt_u64(j, "evictions").context("missing evictions")?,
+            load_errors: opt_u64(j, "load_errors").context("missing load_errors")?,
+            cold_loads: opt_u64(j, "cold_loads").context("missing cold_loads")?,
+            cold_load_p50_ms: get_f64(j, "cold_load_p50_ms")?,
+            cold_load_p95_ms: get_f64(j, "cold_load_p95_ms")?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -864,6 +975,46 @@ mod tests {
         assert_eq!(back.val_history, vec![(0, 0.7), (1, 0.9)]);
         assert_eq!(back.version, Some(2));
         assert!(back.resumed);
+    }
+
+    #[test]
+    fn cache_metrics_roundtrip() {
+        let snap = CacheSnapshot {
+            resident: 3,
+            resident_bytes: 4096,
+            budget_bytes: Some(8192),
+            resident_tasks: vec!["a".into(), "b".into(), "c".into()],
+            hits: 30,
+            misses: 10,
+            evictions: 7,
+            load_errors: 2,
+            cold_loads: 8,
+            cold_load_p50_ms: 1.5,
+            cold_load_p95_ms: 4.0,
+        };
+        let wire = CacheMetrics::from_snapshot(&snap, 64);
+        assert!((wire.hit_rate() - 0.75).abs() < 1e-12);
+        let back =
+            CacheMetrics::from_json(&Json::parse(&wire.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back.resident, 3);
+        assert_eq!(back.resident_bytes, 4096);
+        assert_eq!(back.budget_bytes, Some(8192));
+        assert_eq!(back.registered, 64);
+        assert_eq!(back.resident_tasks, vec!["a", "b", "c"]);
+        assert_eq!(back.hits, 30);
+        assert_eq!(back.misses, 10);
+        assert_eq!(back.evictions, 7);
+        assert_eq!(back.load_errors, 2);
+        assert_eq!(back.cold_loads, 8);
+
+        // unbounded cache → budget_bytes absent from the wire
+        let mut unbounded = wire.clone();
+        unbounded.budget_bytes = None;
+        let text = unbounded.to_json().to_string();
+        assert!(!text.contains("budget_bytes"), "{text}");
+        let back = CacheMetrics::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.budget_bytes, None);
     }
 
     #[test]

@@ -25,6 +25,13 @@
 //!   root are internal (e.g. `_jobs`, the training service's checkpoint
 //!   area) and are not treated as tasks; task names may not collide with
 //!   them.
+//! * **Paged residency** — disk-backed stores keep only metadata (and the
+//!   bank's on-disk byte size) in RAM; model tensors are re-read from
+//!   disk on demand via [`AdapterStore::fetch_latest`]. Reload still
+//!   decodes every bank once (that is the torn-bank quarantine check),
+//!   then drops the tensors. In-memory stores have no disk to page to
+//!   and stay fully resident. The coordinator's paged bank cache sits on
+//!   top of this through the [`BankSource`] seam.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -50,10 +57,20 @@ pub struct BankMeta {
     pub trained_params_no_head: usize,
 }
 
+/// Where an entry's tensors live. Disk slots hold only the path; the
+/// bytes are streamed back in by [`AdapterStore::fetch_latest`].
+#[derive(Clone)]
+enum Slot {
+    Memory(Arc<TaskModel>),
+    Disk { bank_path: PathBuf },
+}
+
 #[derive(Clone)]
 struct Entry {
     meta: BankMeta,
-    model: Arc<TaskModel>,
+    /// Serialized bank size — the cheap probe backing cache budgeting.
+    bank_bytes: u64,
+    slot: Slot,
 }
 
 /// Thread-safe in-memory store with optional disk persistence.
@@ -104,25 +121,60 @@ impl AdapterStore {
             trained_params: model.trained_param_count(),
             trained_params_no_head: model.trained_param_count_no_head(),
         };
-        if let Some(root) = &self.root {
+        let encoded = model.trained.to_bytes();
+        let bank_bytes = encoded.len() as u64;
+        let slot = if let Some(root) = &self.root {
             let dir = root.join(task);
             std::fs::create_dir_all(&dir)?;
             let bank_path = dir.join(format!("v{version:03}.bank"));
-            write_atomic(&bank_path, &model.trained.to_bytes())?;
+            write_atomic(&bank_path, &encoded)?;
             let meta_path = dir.join(format!("v{version:03}.json"));
             write_atomic(&meta_path, meta_to_json(&meta).to_string().as_bytes())?;
-        }
-        versions.push(Entry { meta: meta.clone(), model: Arc::new(model.clone()) });
+            // written through — the tensors page back in on demand
+            Slot::Disk { bank_path }
+        } else {
+            Slot::Memory(Arc::new(model.clone()))
+        };
+        versions.push(Entry { meta: meta.clone(), bank_bytes, slot });
         Ok(meta)
     }
 
-    /// Latest version of a task's model.
+    /// Latest version of a task's model. Convenience wrapper over
+    /// [`AdapterStore::fetch_latest`] that logs and swallows read errors;
+    /// the coordinator's fetch seam uses the fallible form directly.
     pub fn latest(&self, task: &str) -> Option<(BankMeta, Arc<TaskModel>)> {
+        match self.fetch_latest(task) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("warning: store: latest bank for {task}: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// Latest version of a task's model, surfacing read/decode failures.
+    /// For disk-backed stores this streams the bank back from disk (the
+    /// entry was paged out after registration or reload).
+    pub fn fetch_latest(&self, task: &str)
+                        -> Result<Option<(BankMeta, Arc<TaskModel>)>> {
+        // clone the entry under the lock, do I/O outside it
+        let entry = {
+            let tasks = self.tasks.lock().unwrap();
+            tasks.get(task).and_then(|v| v.last()).cloned()
+        };
+        entry.map(resolve_entry).transpose()
+    }
+
+    /// Cheap probe: latest metadata only — never touches the bank file.
+    pub fn latest_meta(&self, task: &str) -> Option<BankMeta> {
         let tasks = self.tasks.lock().unwrap();
-        tasks
-            .get(task)
-            .and_then(|v| v.last())
-            .map(|e| (e.meta.clone(), e.model.clone()))
+        tasks.get(task).and_then(|v| v.last()).map(|e| e.meta.clone())
+    }
+
+    /// Cheap probe: serialized size in bytes of the latest bank.
+    pub fn latest_bank_bytes(&self, task: &str) -> Option<u64> {
+        let tasks = self.tasks.lock().unwrap();
+        tasks.get(task).and_then(|v| v.last()).map(|e| e.bank_bytes)
     }
 
     /// A specific registered version (1-based), if it exists. Lookup is
@@ -131,11 +183,22 @@ impl AdapterStore {
     /// on-disk sequence.
     pub fn version(&self, task: &str, version: usize)
                    -> Option<(BankMeta, Arc<TaskModel>)> {
-        let tasks = self.tasks.lock().unwrap();
-        tasks
-            .get(task)
-            .and_then(|v| v.iter().find(|e| e.meta.version == version))
-            .map(|e| (e.meta.clone(), e.model.clone()))
+        let entry = {
+            let tasks = self.tasks.lock().unwrap();
+            tasks
+                .get(task)
+                .and_then(|v| v.iter().find(|e| e.meta.version == version))
+                .cloned()
+        };
+        match entry.map(resolve_entry).transpose() {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!(
+                    "warning: store: bank {task} v{version}: {e:#}"
+                );
+                None
+            }
+        }
     }
 
     /// All registered task names, sorted.
@@ -235,24 +298,116 @@ impl AdapterStore {
 }
 
 /// Read one `v<NNN>.json` + `v<NNN>.bank` pair into an [`Entry`].
+///
+/// The bank is fully decoded here — that decode **is** the torn-bank
+/// quarantine check — and then dropped: reload leaves a disk slot, so a
+/// store with 10k tasks costs metadata, not tensors, until a task is
+/// actually fetched.
 fn load_version(meta_path: &Path) -> Result<Entry> {
     let meta = meta_from_json(
         &Json::parse(&std::fs::read_to_string(meta_path)?)
             .map_err(|e| anyhow::anyhow!("{meta_path:?}: {e}"))?,
     )?;
     let bank_path = meta_path.with_extension("bank");
-    let bytes = std::fs::read(&bank_path)
-        .with_context(|| format!("reading bank {bank_path:?}"))?;
-    let trained = NamedTensors::from_bytes(&bytes)
+    let bytes = read_bank_streamed(&bank_path)?;
+    NamedTensors::from_bytes(&bytes)
         .with_context(|| format!("decoding bank {bank_path:?}"))?;
-    let model = TaskModel {
-        variant: meta.variant.clone(),
-        m: meta.m,
-        k: meta.k,
-        kind: meta.kind.clone(),
-        trained,
-    };
-    Ok(Entry { meta, model: Arc::new(model) })
+    Ok(Entry { meta, bank_bytes: bytes.len() as u64, slot: Slot::Disk { bank_path } })
+}
+
+/// Materialize an entry's model: memory slots clone the `Arc`, disk slots
+/// stream the bank back in and decode it (same checks as reload).
+fn resolve_entry(entry: Entry) -> Result<(BankMeta, Arc<TaskModel>)> {
+    let Entry { meta, bank_bytes, slot } = entry;
+    match slot {
+        Slot::Memory(model) => Ok((meta, model)),
+        Slot::Disk { bank_path } => {
+            let bytes = read_bank_streamed(&bank_path)?;
+            if bytes.len() as u64 != bank_bytes {
+                bail!(
+                    "bank {bank_path:?} changed size on disk: got {} bytes, \
+                     registered {bank_bytes}",
+                    bytes.len()
+                );
+            }
+            let trained = NamedTensors::from_bytes(&bytes)
+                .with_context(|| format!("decoding bank {bank_path:?}"))?;
+            let model = TaskModel {
+                variant: meta.variant.clone(),
+                m: meta.m,
+                k: meta.k,
+                kind: meta.kind.clone(),
+                trained,
+            };
+            Ok((meta, Arc::new(model)))
+        }
+    }
+}
+
+/// Stream a bank file in fixed-size chunks. Retries `Interrupted` reads
+/// and reports short files explicitly (a torn read surfaces as a
+/// descriptive error, not a decode panic downstream).
+fn read_bank_streamed(path: &Path) -> Result<Vec<u8>> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening bank {path:?}"))?;
+    let expect = f
+        .metadata()
+        .with_context(|| format!("probing bank {path:?}"))?
+        .len() as usize;
+    let mut buf = Vec::with_capacity(expect);
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        match f.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading bank {path:?}"))
+            }
+        }
+    }
+    if buf.len() < expect {
+        bail!("short read on bank {path:?}: got {} of {expect} bytes", buf.len());
+    }
+    Ok(buf)
+}
+
+/// The coordinator's fetch seam: everything the serving layer needs from
+/// a bank store. [`AdapterStore`] is the production implementation; the
+/// fault-injection tests wrap one to inject slow/short/failing reads
+/// without touching production code.
+pub trait BankSource: Send + Sync {
+    /// Latest model for `task` — fallible, because disk slots re-read the
+    /// bank file on demand.
+    fn fetch_latest(&self, task: &str)
+                    -> Result<Option<(BankMeta, Arc<TaskModel>)>>;
+    /// Metadata-only probe (never touches the bank file).
+    fn latest_meta(&self, task: &str) -> Option<BankMeta>;
+    /// Serialized size of the latest bank, for budget estimates.
+    fn latest_bank_bytes(&self, task: &str) -> Option<u64>;
+    /// All registered task names, sorted.
+    fn task_names(&self) -> Vec<String>;
+}
+
+impl BankSource for AdapterStore {
+    fn fetch_latest(&self, task: &str)
+                    -> Result<Option<(BankMeta, Arc<TaskModel>)>> {
+        AdapterStore::fetch_latest(self, task)
+    }
+
+    fn latest_meta(&self, task: &str) -> Option<BankMeta> {
+        AdapterStore::latest_meta(self, task)
+    }
+
+    fn latest_bank_bytes(&self, task: &str) -> Option<u64> {
+        AdapterStore::latest_bank_bytes(self, task)
+    }
+
+    fn task_names(&self) -> Vec<String> {
+        AdapterStore::task_names(self)
+    }
 }
 
 /// Write `bytes` to `path` atomically: write a sibling `.tmp`, then
@@ -571,6 +726,55 @@ mod tests {
                 v += 1;
             }
         }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Disk-backed entries hold no tensors in RAM: the bank streams back
+    /// in on fetch, errors surface through the fallible path, and the
+    /// metadata probes never touch the file.
+    #[test]
+    fn disk_entries_page_out_and_stream_back() {
+        let dir =
+            std::env::temp_dir().join(format!("abstore_page_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = AdapterStore::at(&dir).unwrap();
+        s.register("t", &model(5.0), 0.5).unwrap();
+
+        // the cheap probes answer without the bank file present
+        let bank = dir.join("t").join("v001.bank");
+        let saved = std::fs::read(&bank).unwrap();
+        std::fs::remove_file(&bank).unwrap();
+        assert_eq!(s.latest_meta("t").unwrap().version, 1);
+        assert_eq!(s.latest_bank_bytes("t").unwrap(), saved.len() as u64);
+        // the fallible fetch reports the missing bank descriptively …
+        let err = s.fetch_latest("t").unwrap_err();
+        assert!(format!("{err:#}").contains("bank"), "{err:#}");
+        // … and the infallible wrapper degrades to None
+        assert!(s.latest("t").is_none());
+
+        // heal: restore the file, fetch streams it back byte-identically
+        std::fs::write(&bank, &saved).unwrap();
+        let (meta, m) = s.fetch_latest("t").unwrap().unwrap();
+        assert_eq!(meta.version, 1);
+        assert_eq!(m.trained.to_bytes(), saved);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A bank that changes size under the store (external truncation
+    /// after reload's quarantine pass) fails fetch with a size check,
+    /// not a decode panic.
+    #[test]
+    fn fetch_rejects_resized_bank() {
+        let dir = std::env::temp_dir()
+            .join(format!("abstore_resize_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = AdapterStore::at(&dir).unwrap();
+        s.register("t", &model(1.0), 0.5).unwrap();
+        let bank = dir.join("t").join("v001.bank");
+        let bytes = std::fs::read(&bank).unwrap();
+        std::fs::write(&bank, &bytes[..bytes.len() / 2]).unwrap();
+        let err = s.fetch_latest("t").unwrap_err();
+        assert!(format!("{err:#}").contains("changed size"), "{err:#}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

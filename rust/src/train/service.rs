@@ -33,7 +33,11 @@
 //! module stays independent of the serving stack: the gateway wires it
 //! to "store append + hot-install into the live coordinator" (see
 //! `serve::registry::install_trained`), making a finished job servable
-//! with zero restart.
+//! with zero restart. A hot install lands in the coordinator's paged
+//! bank cache like any other load, so it counts against the byte budget
+//! (`--adapter-cache-mb`) and may evict a colder task's bank; the store
+//! append precedes the install, so anything evicted — including the new
+//! bank itself, later — pages back in on demand.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};

@@ -1,0 +1,641 @@
+//! Fault injection on the store→coordinator fetch seam (PR 6).
+//!
+//! The paged bank cache turned "every bank is resident" into a fallible
+//! fetch: a predict for an evicted task streams its bank back in from
+//! the durable store, and that read can be slow, interrupted, or find
+//! the file gone. These tests wrap the store in a [`FaultStore`] (a
+//! test-only [`BankSource`]) and inject exactly those failures:
+//!
+//! * resident tasks keep serving — correctly and without blocking —
+//!   while another task's cold load is slow or failing;
+//! * a failing cold load answers `503` with a descriptive error, and a
+//!   retry after the fault heals succeeds;
+//! * a herd of concurrent requests for one cold task runs a single
+//!   store fetch (single-flight);
+//! * a bank file deleted mid-serving surfaces the store's own error and
+//!   heals when the file comes back (real disk store, no wrapper);
+//! * the same request trace through an unbounded cache and a budget
+//!   forcing evictions produces byte-identical predictions, in both
+//!   per-task and fused execution modes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use adapterbert::coordinator::server::{Prediction, Request};
+use adapterbert::coordinator::{
+    ExecMode, FlushPolicy, Server, ServerConfig,
+};
+use adapterbert::data::grammar::World;
+use adapterbert::data::tasks::{self, TaskKind, TaskSpec};
+use adapterbert::eval::{predict_split, Predictions, TaskModel};
+use adapterbert::model::params::NamedTensors;
+use adapterbert::runtime::Runtime;
+use adapterbert::serve::{Client, Gateway, GatewayConfig, PredictRequest};
+use adapterbert::store::{AdapterStore, BankMeta, BankSource};
+use adapterbert::train::{self, PretrainConfig, TrainConfig};
+use adapterbert::util::rng::Rng;
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(
+        Runtime::open(
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")),
+            "test",
+        )
+        .expect("open test preset (built-in presets synthesize their manifest)"),
+    )
+}
+
+fn world(rt: &Runtime) -> World {
+    World::new(rt.manifest.dims.vocab, 0)
+}
+
+fn pretrained_base(rt: &Arc<Runtime>) -> NamedTensors {
+    static BASE: OnceLock<NamedTensors> = OnceLock::new();
+    BASE.get_or_init(|| {
+        train::load_or_pretrain(
+            rt,
+            &world(rt),
+            &PretrainConfig { steps: 3000, log_every: 0, ..Default::default() },
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs/base_test.bank")),
+        )
+        .unwrap()
+    })
+    .clone()
+}
+
+fn cls_spec(name: &str, seed: u64) -> TaskSpec {
+    TaskSpec {
+        name: name.to_string(),
+        kind: TaskKind::Cls { n_classes: 2, pair: false },
+        metric: tasks::Metric::Accuracy,
+        n_train: 240,
+        n_val: 48,
+        n_test: 48,
+        purity: 0.85,
+        noise: 0.0,
+        seed,
+    }
+}
+
+/// Three distinct trained adapters shared by every test in this file
+/// (training dominates the suite's runtime; the faults don't care which
+/// model they interrupt).
+fn fixture(rt: &Arc<Runtime>) -> &'static Vec<(TaskModel, tasks::TaskData)> {
+    static FIX: OnceLock<Vec<(TaskModel, tasks::TaskData)>> = OnceLock::new();
+    FIX.get_or_init(|| {
+        let base = pretrained_base(rt);
+        (0..3u64)
+            .map(|i| {
+                let spec = cls_spec(&format!("fault{i}"), 61 + i);
+                let data = tasks::generate(&world(rt), &spec, rt.manifest.dims.seq);
+                let cfg = TrainConfig::new("cls_train_adapter_m4", 1e-3, 3, 0);
+                let model = train::train_task(rt, &cfg, &data, &base).unwrap().model;
+                (model, data)
+            })
+            .collect()
+    })
+}
+
+fn class_preds(
+    rt: &Arc<Runtime>,
+    model: &TaskModel,
+    base: &NamedTensors,
+    split: &tasks::Split,
+) -> Vec<usize> {
+    match predict_split(rt, model, base, split, 2, None).unwrap() {
+        Predictions::Class(v) => v,
+        other => panic!("expected class predictions, got {other:?}"),
+    }
+}
+
+/// One blocking prediction straight through the coordinator (no HTTP).
+fn serve_one(
+    server: &Server,
+    rt: &Arc<Runtime>,
+    task: &str,
+    split: &tasks::Split,
+    row: usize,
+) -> Prediction {
+    let seq = rt.manifest.dims.seq;
+    let tokens: Vec<i32> = split.row_tokens(row).to_vec();
+    let attn_mask: Vec<f32> =
+        tokens.iter().map(|&t| if t == 0 { 0.0 } else { 1.0 }).collect();
+    let (reply, rx) = mpsc::channel();
+    server
+        .submit_blocking(Request {
+            task: task.to_string(),
+            tokens,
+            segments: vec![0; seq],
+            attn_mask,
+            reply,
+            submitted: Instant::now(),
+        })
+        .unwrap();
+    rx.recv_timeout(Duration::from_secs(60)).unwrap().prediction
+}
+
+fn server_cfg(mode: ExecMode, cache_budget: Option<u64>) -> ServerConfig {
+    ServerConfig {
+        flush: FlushPolicy { max_batch: 4, max_delay: Duration::from_millis(2) },
+        executors: 2,
+        queue_capacity: 256,
+        mode,
+        cache_budget,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultStore: the injection seam
+// ---------------------------------------------------------------------------
+
+/// Per-task fault on the bank-fetch path. Metadata probes stay healthy —
+/// faults model the expensive read, not the directory.
+enum Fault {
+    /// Sleep before delegating (slow disk, remote store).
+    Slow(Duration),
+    /// Fail every fetch with this message until healed.
+    Fail(String),
+    /// Fail the next `n` fetches, then pass — the transient-I/O class
+    /// (`ErrorKind::Interrupted`, short reads that heal on retry).
+    FailTimes(usize, String),
+}
+
+/// Test-only [`BankSource`] wrapping a real [`AdapterStore`]: delegates
+/// everything, with injectable faults and a fetch counter on
+/// [`BankSource::fetch_latest`].
+struct FaultStore {
+    inner: Arc<AdapterStore>,
+    faults: Mutex<BTreeMap<String, Fault>>,
+    fetches: Mutex<BTreeMap<String, u64>>,
+}
+
+impl FaultStore {
+    fn new(inner: Arc<AdapterStore>) -> Arc<FaultStore> {
+        Arc::new(FaultStore {
+            inner,
+            faults: Mutex::new(BTreeMap::new()),
+            fetches: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    fn inject(&self, task: &str, fault: Fault) {
+        self.faults.lock().unwrap().insert(task.to_string(), fault);
+    }
+
+    fn heal(&self, task: &str) {
+        self.faults.lock().unwrap().remove(task);
+    }
+
+    fn fetch_count(&self, task: &str) -> u64 {
+        *self.fetches.lock().unwrap().get(task).unwrap_or(&0)
+    }
+}
+
+impl BankSource for FaultStore {
+    fn fetch_latest(
+        &self,
+        task: &str,
+    ) -> Result<Option<(BankMeta, Arc<TaskModel>)>> {
+        *self.fetches.lock().unwrap().entry(task.to_string()).or_default() += 1;
+        // decide under the lock, act (sleep/fail) outside it
+        enum Act {
+            Sleep(Duration),
+            Fail(String),
+            Pass,
+        }
+        let act = {
+            let mut faults = self.faults.lock().unwrap();
+            match faults.get_mut(task) {
+                Some(Fault::Slow(d)) => Act::Sleep(*d),
+                Some(Fault::Fail(msg)) => Act::Fail(msg.clone()),
+                Some(Fault::FailTimes(n, msg)) => {
+                    if *n > 0 {
+                        *n -= 1;
+                        Act::Fail(msg.clone())
+                    } else {
+                        faults.remove(task);
+                        Act::Pass
+                    }
+                }
+                None => Act::Pass,
+            }
+        };
+        match act {
+            Act::Sleep(d) => std::thread::sleep(d),
+            Act::Fail(msg) => {
+                anyhow::bail!("injected fault reading bank for {task:?}: {msg}")
+            }
+            Act::Pass => {}
+        }
+        self.inner.fetch_latest(task)
+    }
+
+    fn latest_meta(&self, task: &str) -> Option<BankMeta> {
+        self.inner.latest_meta(task)
+    }
+
+    fn latest_bank_bytes(&self, task: &str) -> Option<u64> {
+        self.inner.latest_bank_bytes(task)
+    }
+
+    fn task_names(&self) -> Vec<String> {
+        self.inner.task_names()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenarios
+// ---------------------------------------------------------------------------
+
+/// Resident tasks never block or 5xx while another task's cold load is
+/// failing or slow; the failing task answers a descriptive 503 and heals.
+#[test]
+fn resident_tasks_unaffected_while_cold_load_fails_and_heals() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let fix = fixture(&rt);
+
+    let store = Arc::new(AdapterStore::in_memory());
+    let mut classes = BTreeMap::new();
+    for (name, (model, _)) in ["fa", "fb", "fc"].iter().zip(fix) {
+        store.register(name, model, 0.9).unwrap();
+        classes.insert(name.to_string(), 2);
+    }
+    let exp: Vec<Vec<usize>> = fix
+        .iter()
+        .map(|(model, data)| class_preds(&rt, model, &base, &data.test))
+        .collect();
+
+    let faults = FaultStore::new(store.clone());
+    // a budget makes startup lazy: every task starts cold
+    let server = Server::start_with_source(
+        rt.clone(),
+        faults.clone(),
+        &base,
+        &classes,
+        server_cfg(ExecMode::PerTask, Some(1 << 30)),
+    )
+    .unwrap();
+    let gw = Gateway::start(
+        rt.clone(),
+        store.clone(),
+        server,
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )
+    .unwrap();
+    let addr = gw.local_addr().to_string();
+
+    // warm fa and fb into residency (their own cold loads, fault-free)
+    let mut client = Client::connect(&addr).unwrap();
+    for (name, fx, exp) in [("fa", &fix[0], &exp[0]), ("fb", &fix[1], &exp[1])] {
+        let resp = client.predict_ids(name, fx.1.test.row_tokens(0)).unwrap();
+        assert_eq!(resp.pred_class, Some(exp[0]), "{name} warm-up");
+    }
+
+    // phase 1: fc's bank read fails hard — exactly two attempts
+    faults.inject("fc", Fault::Fail("disk gone".into()));
+    for attempt in 0..2 {
+        let req = PredictRequest::ids("fc", fix[2].1.test.row_tokens(0).to_vec());
+        let (status, j) = client
+            .roundtrip("POST", "/predict_ids", Some(&req.to_json()))
+            .unwrap();
+        assert_eq!(status, 503, "attempt {attempt}: faulty cold load must 503");
+        let msg = j.get("error").and_then(|e| e.as_str().map(String::from));
+        let msg = msg.expect("503 carries an error message");
+        assert!(
+            msg.contains("cold load failed") && msg.contains("injected fault"),
+            "attempt {attempt}: error not descriptive: {msg}"
+        );
+    }
+    // resident tasks answer correctly straight through the fault
+    for (name, fx, exp) in [("fa", &fix[0], &exp[0]), ("fb", &fix[1], &exp[1])] {
+        let resp = client.predict_ids(name, fx.1.test.row_tokens(1)).unwrap();
+        assert_eq!(resp.pred_class, Some(exp[1]), "{name} during fault");
+    }
+
+    // phase 2: heal, make the reload slow instead; resident traffic must
+    // keep flowing while fc's cold load sleeps in the gateway worker
+    faults.heal("fc");
+    faults.inject("fc", Fault::Slow(Duration::from_millis(600)));
+    let done = AtomicBool::new(false);
+    let served_during_load = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let done = &done;
+        let served = &served_during_load;
+        let addr = &addr;
+        let exp = &exp;
+        scope.spawn(move || {
+            let mut slow_client = Client::connect(addr).unwrap();
+            let t0 = Instant::now();
+            let resp = slow_client
+                .predict_ids("fc", fix[2].1.test.row_tokens(0))
+                .unwrap();
+            assert!(
+                t0.elapsed() >= Duration::from_millis(600),
+                "fc's cold load should have slept"
+            );
+            assert_eq!(resp.pred_class, Some(exp[2][0]), "fc after heal");
+            done.store(true, Ordering::SeqCst);
+        });
+        // spin on the resident tasks until the slow load completes (the
+        // deadline only matters if the slow request dies — the scope join
+        // then reports its panic instead of hanging here)
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut i = 1usize;
+        while !done.load(Ordering::SeqCst) && Instant::now() < deadline {
+            let row = i % 8;
+            for (name, fx, exp) in
+                [("fa", &fix[0], &exp[0]), ("fb", &fix[1], &exp[1])]
+            {
+                let resp =
+                    client.predict_ids(name, fx.1.test.row_tokens(row)).unwrap();
+                assert_eq!(resp.pred_class, Some(exp[row]), "{name} row {row}");
+                if !done.load(Ordering::SeqCst) {
+                    served.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            i += 1;
+        }
+    });
+    assert!(
+        served_during_load.load(Ordering::SeqCst) >= 2,
+        "resident tasks were starved during a 600ms cold load"
+    );
+    faults.heal("fc");
+
+    // the cache counters tell the same story over /metrics
+    let metrics = client.metrics().unwrap();
+    let cache = metrics.at("cache");
+    assert_eq!(cache.at("load_errors").as_usize(), Some(2));
+    assert_eq!(cache.at("resident").as_usize(), Some(3), "all three resident now");
+    assert_eq!(
+        cache.at("misses").as_usize(),
+        Some(5),
+        "3 successful cold loads + 2 failed attempts"
+    );
+    assert_eq!(cache.at("cold_loads").as_usize(), Some(3));
+    assert_eq!(faults.fetch_count("fc"), 3, "2 failures + 1 success");
+
+    gw.shutdown().unwrap();
+}
+
+/// Transient faults (the interrupted-syscall / short-read class): each
+/// failed load releases the single-flight gate without poisoning the
+/// key, so plain retries succeed once the fault clears.
+#[test]
+fn transient_fetch_faults_heal_on_retry() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let fix = fixture(&rt);
+
+    let store = Arc::new(AdapterStore::in_memory());
+    store.register("ft", &fix[0].0, 0.9).unwrap();
+    let mut classes = BTreeMap::new();
+    classes.insert("ft".to_string(), 2);
+
+    let faults = FaultStore::new(store.clone());
+    faults.inject(
+        "ft",
+        Fault::FailTimes(2, "read interrupted: short read on bank".into()),
+    );
+    let server = Server::start_with_source(
+        rt.clone(),
+        faults.clone(),
+        &base,
+        &classes,
+        server_cfg(ExecMode::PerTask, Some(1 << 30)),
+    )
+    .unwrap();
+
+    for attempt in 0..2 {
+        let err = server.prefetch("ft").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("short read"),
+            "attempt {attempt}: {err:#}"
+        );
+        assert!(!server.is_resident("ft"));
+    }
+    server.prefetch("ft").unwrap();
+    assert!(server.is_resident("ft"));
+    let snap = server.cache_stats();
+    assert_eq!(snap.load_errors, 2);
+    assert_eq!(snap.misses, 3);
+    assert_eq!(snap.cold_loads, 1);
+
+    // and the reloaded bank actually serves
+    let pred = serve_one(&server, &rt, "ft", &fix[0].1.test, 0);
+    let exp = class_preds(&rt, &fix[0].0, &base, &fix[0].1.test);
+    assert_eq!(pred, Prediction::Class(exp[0]));
+
+    server.drain();
+    server.shutdown();
+}
+
+/// A herd of threads hitting one cold task runs the store fetch once:
+/// one loader, everyone else waits on the gate and hits.
+#[test]
+fn cold_herd_is_single_flight() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let fix = fixture(&rt);
+
+    let store = Arc::new(AdapterStore::in_memory());
+    store.register("herd", &fix[1].0, 0.9).unwrap();
+    let mut classes = BTreeMap::new();
+    classes.insert("herd".to_string(), 2);
+
+    let faults = FaultStore::new(store.clone());
+    // slow enough that all 8 threads pile up behind the first
+    faults.inject("herd", Fault::Slow(Duration::from_millis(200)));
+    let server = Server::start_with_source(
+        rt.clone(),
+        faults.clone(),
+        &base,
+        &classes,
+        server_cfg(ExecMode::PerTask, Some(1 << 30)),
+    )
+    .unwrap();
+    assert!(!server.is_resident("herd"));
+
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            let server = &server;
+            scope.spawn(move || server.prefetch("herd").unwrap());
+        }
+    });
+
+    assert_eq!(faults.fetch_count("herd"), 1, "herd ran more than one fetch");
+    let snap = server.cache_stats();
+    assert_eq!(snap.misses, 1);
+    assert_eq!(snap.hits, 7);
+    assert_eq!(snap.load_errors, 0);
+    assert!(server.is_resident("herd"));
+
+    server.drain();
+    server.shutdown();
+}
+
+/// Real disk store, no wrapper: delete the bank file under a cold task,
+/// get the store's own descriptive error over HTTP, put the file back,
+/// and watch the task heal.
+#[test]
+fn midload_bank_deletion_surfaces_and_heals() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let fix = fixture(&rt);
+
+    let dir = std::env::temp_dir()
+        .join(format!("abcache_del_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(AdapterStore::at(&dir).unwrap());
+    store.register("da", &fix[0].0, 0.9).unwrap();
+    store.register("db", &fix[1].0, 0.9).unwrap();
+    let mut classes = BTreeMap::new();
+    classes.insert("da".to_string(), 2);
+    classes.insert("db".to_string(), 2);
+    let exp_a = class_preds(&rt, &fix[0].0, &base, &fix[0].1.test);
+    let exp_b = class_preds(&rt, &fix[1].0, &base, &fix[1].1.test);
+
+    let server = Server::start_with_source(
+        rt.clone(),
+        store.clone(),
+        &base,
+        &classes,
+        server_cfg(ExecMode::PerTask, Some(1 << 30)),
+    )
+    .unwrap();
+    let gw = Gateway::start(
+        rt.clone(),
+        store.clone(),
+        server,
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )
+    .unwrap();
+    let mut client = Client::connect(&gw.local_addr().to_string()).unwrap();
+
+    // da pages in from disk and serves
+    let resp = client.predict_ids("da", fix[0].1.test.row_tokens(0)).unwrap();
+    assert_eq!(resp.pred_class, Some(exp_a[0]));
+
+    // db's bank file vanishes before its first request
+    let bank = dir.join("db").join("v001.bank");
+    let saved = std::fs::read(&bank).unwrap();
+    std::fs::remove_file(&bank).unwrap();
+    let req = PredictRequest::ids("db", fix[1].1.test.row_tokens(0).to_vec());
+    let (status, j) = client
+        .roundtrip("POST", "/predict_ids", Some(&req.to_json()))
+        .unwrap();
+    assert_eq!(status, 503);
+    let msg = j
+        .get("error")
+        .and_then(|e| e.as_str().map(String::from))
+        .expect("error message");
+    assert!(
+        msg.contains("cold load failed") && msg.contains("bank"),
+        "missing-bank error not descriptive: {msg}"
+    );
+    // da is untouched; db still lists (directory is metadata-only)
+    let resp = client.predict_ids("da", fix[0].1.test.row_tokens(1)).unwrap();
+    assert_eq!(resp.pred_class, Some(exp_a[1]));
+    let names: Vec<String> =
+        client.tasks().unwrap().into_iter().map(|t| t.task).collect();
+    assert_eq!(names, vec!["da".to_string(), "db".to_string()]);
+
+    // the file comes back (operator restores from backup) — db heals
+    std::fs::write(&bank, &saved).unwrap();
+    let resp = client.predict_ids("db", fix[1].1.test.row_tokens(0)).unwrap();
+    assert_eq!(resp.pred_class, Some(exp_b[0]), "db after restore");
+
+    gw.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The headline parity check: one request trace, two servers — unbounded
+/// cache vs. a budget sized to half the working set (constant eviction
+/// churn) — must produce identical predictions row for row, in both
+/// execution modes.
+#[test]
+fn eviction_parity_with_unbounded_cache() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let fix = fixture(&rt);
+
+    // six tenants over three distinct adapters: evicting "p4" and
+    // reloading it must bring back p4's bytes, not its twin's
+    let store = Arc::new(AdapterStore::in_memory());
+    let mut classes = BTreeMap::new();
+    let names: Vec<String> = (0..6).map(|i| format!("p{i}")).collect();
+    for (i, name) in names.iter().enumerate() {
+        store.register(name, &fix[i % 3].0, 0.9).unwrap();
+        classes.insert(name.clone(), 2);
+    }
+
+    // deterministic skewed trace (hot head, cold tail → real reloads)
+    let mut rng = Rng::new(9);
+    let trace: Vec<(usize, usize)> =
+        (0..96).map(|_| (rng.zipf(6, 1.1), rng.below(8))).collect();
+
+    let run_trace = |mode: ExecMode,
+                     budget: Option<u64>|
+     -> (Vec<Prediction>, adapterbert::coordinator::CacheSnapshot) {
+        let server = Server::start_with_source(
+            rt.clone(),
+            store.clone(),
+            &base,
+            &classes,
+            server_cfg(mode, budget),
+        )
+        .unwrap();
+        let mut preds = Vec::with_capacity(trace.len());
+        for (i, &(ti, row)) in trace.iter().enumerate() {
+            preds.push(serve_one(
+                &server,
+                &rt,
+                &names[ti],
+                &fix[ti % 3].1.test,
+                row,
+            ));
+            if let Some(b) = budget {
+                if i % 8 == 0 {
+                    let bytes = server.cache_stats().resident_bytes;
+                    assert!(
+                        bytes <= b,
+                        "request {i}: resident {bytes} bytes over budget {b}"
+                    );
+                }
+            }
+        }
+        let snap = server.cache_stats();
+        server.drain();
+        server.shutdown();
+        (preds, snap)
+    };
+
+    for mode in [ExecMode::PerTask, ExecMode::Fused] {
+        let (unbounded, full) = run_trace(mode, None);
+        // half the eagerly-built working set forces ~50% of the banks out
+        let budget = full.resident_bytes / 2;
+        assert!(budget > 0, "working set measured as empty");
+        let (bounded, snap) = run_trace(mode, Some(budget));
+
+        assert_eq!(
+            unbounded, bounded,
+            "mode {mode:?}: predictions diverged under eviction"
+        );
+        assert!(
+            snap.evictions > 0,
+            "mode {mode:?}: budget {budget} evicted nothing"
+        );
+        assert!(snap.resident_bytes <= budget, "mode {mode:?}: over budget");
+        assert!(
+            snap.misses > 6,
+            "mode {mode:?}: no reloads — eviction pressure never materialized"
+        );
+        assert_eq!(snap.load_errors, 0, "mode {mode:?}");
+    }
+}

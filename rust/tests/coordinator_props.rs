@@ -210,6 +210,208 @@ fn prop_fuse_planner_no_starvation_under_skew() {
     });
 }
 
+/// Model-check the paged bank cache against a reference LRU map: random
+/// interleavings of loads (succeeding and failing), direct installs and
+/// removals must keep the cache byte-for-byte in step with the model —
+/// same residents, same byte total, same eviction order, same counters —
+/// and never exceed the budget except for a single oversized entry.
+#[test]
+fn prop_paged_cache_matches_reference_lru() {
+    use adapterbert::coordinator::PagedCache;
+    use std::collections::BTreeMap;
+
+    // reference slot: (value, bytes, recency stamp)
+    type Model = BTreeMap<String, (u64, u64, u64)>;
+    fn model_insert(
+        model: &mut Model,
+        stamp: &mut u64,
+        evictions: &mut u64,
+        budget: u64,
+        key: &str,
+        val: u64,
+        bytes: u64,
+    ) {
+        *stamp += 1;
+        model.insert(key.to_string(), (val, bytes, *stamp));
+        loop {
+            let total: u64 = model.values().map(|s| s.1).sum();
+            if total <= budget || model.len() <= 1 {
+                break;
+            }
+            let victim = model
+                .iter()
+                .filter(|(k, _)| k.as_str() != key)
+                .min_by_key(|(_, s)| s.2)
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            model.remove(&victim);
+            *evictions += 1;
+        }
+    }
+
+    for_seeds(25, |rng| {
+        let budget = 50 + rng.below(400) as u64;
+        let cache: PagedCache<u64> = PagedCache::new(Some(budget));
+        let mut model: Model = BTreeMap::new();
+        let mut stamp = 0u64;
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let (mut evictions, mut load_errors) = (0u64, 0u64);
+        let n_keys = 2 + rng.below(8);
+        for step in 0..300 {
+            let key = format!("k{}", rng.below(n_keys));
+            let op = rng.f64();
+            if op < 0.5 {
+                // lookup, loading on a miss; sizes range past the budget
+                // so the oversized-single-entry exception gets exercised
+                let bytes = 1 + rng.below(budget as usize * 3 / 2) as u64;
+                let val = rng.next_u64();
+                let got = cache.get_or_load(&key, || Ok((val, bytes))).unwrap();
+                match model.get_mut(&key) {
+                    Some(slot) => {
+                        hits += 1;
+                        stamp += 1;
+                        slot.2 = stamp;
+                        assert_eq!(got, slot.0, "step {step}: hit wrong value");
+                    }
+                    None => {
+                        misses += 1;
+                        assert_eq!(got, val, "step {step}: loaded wrong value");
+                        model_insert(
+                            &mut model, &mut stamp, &mut evictions, budget,
+                            &key, val, bytes,
+                        );
+                        assert!(
+                            cache.contains(&key),
+                            "step {step}: just-loaded key not servable"
+                        );
+                    }
+                }
+            } else if op < 0.65 {
+                // lookup with a failing loader: hits never run it, cold
+                // keys surface the error and stay absent
+                let r = cache.get_or_load(&key, || anyhow::bail!("injected"));
+                match model.get_mut(&key) {
+                    Some(slot) => {
+                        hits += 1;
+                        stamp += 1;
+                        slot.2 = stamp;
+                        assert_eq!(r.unwrap(), slot.0, "step {step}");
+                    }
+                    None => {
+                        misses += 1;
+                        load_errors += 1;
+                        assert!(r.is_err(), "step {step}: fault swallowed");
+                    }
+                }
+            } else if op < 0.85 {
+                // direct install (the hot-registration path)
+                let bytes = 1 + rng.below(budget as usize * 3 / 2) as u64;
+                let val = rng.next_u64();
+                cache.insert(&key, val, bytes);
+                model_insert(
+                    &mut model, &mut stamp, &mut evictions, budget,
+                    &key, val, bytes,
+                );
+                assert!(
+                    cache.contains(&key),
+                    "step {step}: installed key not servable"
+                );
+            } else {
+                cache.remove(&key);
+                model.remove(&key);
+            }
+
+            let snap = cache.snapshot();
+            let model_tasks: Vec<String> = model.keys().cloned().collect();
+            assert_eq!(snap.resident_tasks, model_tasks, "step {step}");
+            assert_eq!(snap.resident, model.len(), "step {step}");
+            let model_bytes: u64 = model.values().map(|s| s.1).sum();
+            assert_eq!(snap.resident_bytes, model_bytes, "step {step}");
+            assert!(
+                snap.resident_bytes <= budget || snap.resident == 1,
+                "step {step}: over budget with {} residents",
+                snap.resident
+            );
+            assert_eq!(
+                (snap.hits, snap.misses, snap.evictions, snap.load_errors),
+                (hits, misses, evictions, load_errors),
+                "step {step}: counters diverged from the op log"
+            );
+            assert_eq!(snap.cold_loads, misses - load_errors, "step {step}");
+        }
+    });
+}
+
+/// 8 threads hammering one budgeted cache with succeeding and failing
+/// loads: the budget holds, and the counters reconcile exactly with what
+/// the threads observed (every completed lookup is one hit or one miss;
+/// every failure is one load error; every successful loader run is one
+/// cold load).
+#[test]
+fn prop_paged_cache_concurrent_counters_reconcile() {
+    use adapterbert::coordinator::PagedCache;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    for_seeds(5, |rng| {
+        let n_keys = 4 + rng.below(6);
+        let per: u64 = 64;
+        let budget = per * (1 + rng.below(n_keys)) as u64;
+        let cache: PagedCache<u64> = PagedCache::new(Some(budget));
+        let loads = AtomicU64::new(0);
+        let fails = AtomicU64::new(0);
+        let calls = AtomicU64::new(0);
+        let errs = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let cache = &cache;
+                let (loads, fails) = (&loads, &fails);
+                let (calls, errs) = (&calls, &errs);
+                let seed = rng.next_u64();
+                scope.spawn(move || {
+                    let mut rng = Rng::new(seed.wrapping_add(t));
+                    for _ in 0..200 {
+                        let ki = rng.below(n_keys);
+                        let key = format!("k{ki}");
+                        let fail = rng.f64() < 0.1;
+                        calls.fetch_add(1, Ordering::SeqCst);
+                        let r = cache.get_or_load(&key, || {
+                            if fail {
+                                fails.fetch_add(1, Ordering::SeqCst);
+                                anyhow::bail!("injected");
+                            }
+                            loads.fetch_add(1, Ordering::SeqCst);
+                            Ok((ki as u64, per))
+                        });
+                        match r {
+                            Ok(v) => assert_eq!(v, ki as u64, "wrong value"),
+                            Err(_) => {
+                                errs.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let snap = cache.snapshot();
+        assert!(snap.resident_bytes <= budget, "budget violated");
+        assert_eq!(snap.resident_bytes, snap.resident as u64 * per);
+        assert_eq!(
+            snap.hits + snap.misses,
+            calls.load(Ordering::SeqCst),
+            "a lookup completed without exactly one hit or miss"
+        );
+        assert_eq!(snap.load_errors, errs.load(Ordering::SeqCst));
+        assert_eq!(snap.load_errors, fails.load(Ordering::SeqCst));
+        assert_eq!(snap.cold_loads, loads.load(Ordering::SeqCst));
+        assert_eq!(
+            snap.misses,
+            loads.load(Ordering::SeqCst) + fails.load(Ordering::SeqCst)
+        );
+        // entries only enter via a loader run and only leave via eviction
+        assert!(snap.evictions + snap.resident as u64 <= loads.load(Ordering::SeqCst));
+    });
+}
+
 #[test]
 fn prop_named_tensors_bank_roundtrip() {
     use adapterbert::runtime::manifest::LeafSpec;

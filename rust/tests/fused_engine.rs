@@ -458,6 +458,7 @@ fn fused_server_occupancy_beats_per_task_on_same_trace() {
                 executors: 1,
                 queue_capacity: 256,
                 mode,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -555,6 +556,7 @@ fn fused_hot_registration_is_gatherable_immediately() {
                 executors: 1,
                 queue_capacity: 256,
                 mode: ExecMode::Fused,
+                ..Default::default()
             },
         )
         .unwrap(),

@@ -99,7 +99,7 @@ fn class_preds(
 
 fn quick_server(
     rt: &Arc<Runtime>,
-    store: &AdapterStore,
+    store: &Arc<AdapterStore>,
     base: &NamedTensors,
     classes: &BTreeMap<String, usize>,
 ) -> Server {
@@ -280,6 +280,89 @@ fn gateway_hot_registration_mid_traffic() {
         final_report.server.requests,
         final_report.server.latencies.len() as u64
     );
+}
+
+/// PR 6 regression: `/metrics` is assembled from one atomic coordinator
+/// snapshot (`Server::metrics_snapshot`), never from piecemeal lock
+/// acquisitions. Hammer it from two connections while tasks hot-register,
+/// and the cache section must be internally consistent on every poll:
+/// the resident count matches the resident task list, residency never
+/// exceeds the registered directory, and the cold-load counter always
+/// reconciles with misses and load errors.
+#[test]
+fn metrics_stay_consistent_under_hot_registration() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let (model, _data, val) = train_cls(&rt, &base, "gwm0", 24);
+    let store = Arc::new(AdapterStore::in_memory());
+    store.register("gwm0", &model, val).unwrap();
+    let mut classes = BTreeMap::new();
+    classes.insert("gwm0".to_string(), 2);
+    let server = quick_server(&rt, &store, &base, &classes);
+    let gw = Gateway::start(
+        rt.clone(),
+        store.clone(),
+        server,
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )
+    .unwrap();
+    let addr = gw.local_addr().to_string();
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let stop = &stop;
+        let addr = &addr;
+        for _ in 0..2 {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let mut polls = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let m = client.metrics().unwrap();
+                    let cache = m.at("cache");
+                    let resident = cache.at("resident").as_usize().unwrap();
+                    let tasks = cache.at("resident_tasks").as_arr().unwrap();
+                    assert_eq!(
+                        resident,
+                        tasks.len(),
+                        "resident count vs resident task list (poll {polls})"
+                    );
+                    let registered = cache.at("registered").as_usize().unwrap();
+                    assert!(
+                        resident <= registered,
+                        "poll {polls}: resident {resident} > registered {registered}"
+                    );
+                    let misses = cache.at("misses").as_usize().unwrap();
+                    let errors = cache.at("load_errors").as_usize().unwrap();
+                    assert_eq!(
+                        cache.at("cold_loads").as_usize().unwrap(),
+                        misses - errors,
+                        "poll {polls}: cold_loads out of step"
+                    );
+                    polls += 1;
+                }
+                assert!(polls > 0, "metrics poller never ran");
+            });
+        }
+        // hot-register eight more tasks while /metrics is being polled
+        // (same trained bank under new names — the churn is the point)
+        let mut client = Client::connect(addr).unwrap();
+        for i in 1..9 {
+            let name = format!("gwm{i}");
+            let reg = RegisterRequest::from_model(&name, 2, 0.9, &model);
+            let resp = client.register_task(&reg).unwrap();
+            assert_eq!(resp.task, name);
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    // all nine registered and (unbounded budget) resident
+    let mut client = Client::connect(&addr).unwrap();
+    let m = client.metrics().unwrap();
+    assert_eq!(m.at("cache").at("registered").as_usize(), Some(9));
+    assert_eq!(m.at("cache").at("resident").as_usize(), Some(9));
+    drop(client);
+    gw.shutdown().unwrap();
 }
 
 /// The gateway serves all three head kinds: wire a regression and a span

@@ -100,7 +100,7 @@ fn class_preds(
 
 fn quick_server(
     rt: &Arc<Runtime>,
-    store: &AdapterStore,
+    store: &Arc<AdapterStore>,
     base: &NamedTensors,
     classes: &BTreeMap<String, usize>,
 ) -> Server {
