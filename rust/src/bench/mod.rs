@@ -10,6 +10,7 @@
 pub mod figures;
 pub mod kernels;
 pub mod loadgen;
+pub mod profile;
 pub mod tables;
 pub mod trainserve;
 

@@ -1,0 +1,459 @@
+//! Tracing-overhead harness → `BENCH_trace.json`.
+//!
+//! The claim under test: the trace recorder is cheap enough to leave on
+//! in production. The harness stands up a complete gateway (two
+//! pre-trained tenants), then drives the identical closed-loop predict
+//! load in alternating rounds — tracing **off**, tracing **on** — and
+//! compares the best (min) p95 of each mode; alternation plus min-of-N
+//! keeps scheduler noise from masquerading as tracing overhead. After
+//! the timed rounds it pulls `GET /trace` over the same socket and
+//! checks the exported spans themselves: what fraction carry a complete
+//! admission→queue→plan→execute→respond chain, what fraction's stage
+//! durations sum to the end-to-end latency within 10%, and the
+//! per-stage p50/p95 breakdown. The report is schema-pinned (v1); CI's
+//! tracing smoke job validates it and gates on chain completeness and
+//! recorded overhead.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use super::loadgen::{self, LoadgenConfig, LoadReport};
+use crate::coordinator::{FlushPolicy, Server, ServerConfig};
+use crate::data::grammar::World;
+use crate::data::tasks::{self, Metric, TaskKind, TaskSpec};
+use crate::obs::trace;
+use crate::serve::{Client, Gateway, GatewayConfig};
+use crate::store::AdapterStore;
+use crate::train::{self, PretrainConfig, TrainConfig};
+use crate::util::json::Json;
+
+/// Harness knobs.
+#[derive(Debug, Clone)]
+pub struct ProfileConfig {
+    pub preset: String,
+    /// Predict requests per round (each mode runs `rounds` of these).
+    pub requests: u64,
+    /// Closed-loop client threads.
+    pub concurrency: usize,
+    /// Alternating off/on round pairs; per-mode p50/p95 are min-of-rounds.
+    pub rounds: usize,
+    /// Adapter size for the tenants.
+    pub m: usize,
+    /// MLM pre-training steps when no cached base exists.
+    pub pretrain_steps: usize,
+}
+
+impl Default for ProfileConfig {
+    fn default() -> Self {
+        ProfileConfig {
+            preset: "test".to_string(),
+            requests: 200,
+            concurrency: 2,
+            rounds: 3,
+            m: 8,
+            pretrain_steps: 120,
+        }
+    }
+}
+
+/// One mode's serving numbers across its rounds.
+#[derive(Debug, Clone)]
+pub struct ModeStats {
+    /// Total requests across the mode's rounds.
+    pub requests: u64,
+    pub errors: u64,
+    /// Best (min) per-round percentile — the mode's noise floor.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+impl ModeStats {
+    fn from_rounds(rounds: &[LoadReport]) -> ModeStats {
+        let min_pctl = |p: f64| {
+            rounds
+                .iter()
+                .map(|r| r.all.pctl_s(p) * 1e3)
+                .fold(f64::INFINITY, f64::min)
+        };
+        ModeStats {
+            requests: rounds.iter().map(|r| r.requests).sum(),
+            errors: rounds.iter().map(|r| r.errors).sum(),
+            p50_ms: min_pctl(50.0),
+            p95_ms: min_pctl(95.0),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+        ])
+    }
+}
+
+/// Chain-quality and stage-latency numbers from the exported spans.
+#[derive(Debug, Clone)]
+pub struct SpanAnalysis {
+    /// Request-kind, status-200 spans the analysis covers.
+    pub sampled: usize,
+    /// Fraction with all six boundaries stamped, in order.
+    pub complete_chain_frac: f64,
+    /// Fraction whose stage durations sum to within 10% of `total_us`.
+    pub stage_sum_within_10pct_frac: f64,
+    /// Stage → (p50_ms, p95_ms, count), in lifecycle order.
+    pub stages: Vec<(String, f64, f64, usize)>,
+}
+
+/// Percentile of an unsorted sample set (nearest-rank).
+fn pctl(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+    xs[rank.min(xs.len() - 1)]
+}
+
+/// Analyze the `spans` array of a `GET /trace` body. Pure, so the span
+/// acceptance predicates are unit-testable without a gateway.
+pub fn analyze_spans(spans: &[Json]) -> SpanAnalysis {
+    let mut sampled = 0usize;
+    let mut complete = 0usize;
+    let mut sum_ok = 0usize;
+    let mut per_stage: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for sp in spans {
+        if sp.at("kind").as_str() != Some("request")
+            || sp.at("status").as_usize() != Some(200)
+        {
+            continue;
+        }
+        sampled += 1;
+        let is_complete = sp.at("complete").as_f64() == Some(1.0);
+        if is_complete {
+            complete += 1;
+        }
+        let total = sp.at("total_us").as_f64().unwrap_or(0.0);
+        if let Some(stages) = sp.at("stages_us").as_obj() {
+            let sum: f64 = stages.values().filter_map(Json::as_f64).sum();
+            if is_complete && total > 0.0 && (sum - total).abs() <= 0.1 * total {
+                sum_ok += 1;
+            }
+            for name in trace::STAGES {
+                if let Some(us) = stages.get(name).and_then(|j| j.as_f64()) {
+                    per_stage.entry(name).or_default().push(us / 1e3);
+                }
+            }
+        }
+    }
+    let frac = |n: usize| if sampled == 0 { 0.0 } else { n as f64 / sampled as f64 };
+    let stages = trace::STAGES
+        .iter()
+        .map(|&name| {
+            let mut xs = per_stage.remove(name).unwrap_or_default();
+            let (p50, p95) = (pctl(&mut xs, 50.0), pctl(&mut xs, 95.0));
+            (name.to_string(), p50, p95, xs.len())
+        })
+        .collect();
+    SpanAnalysis {
+        sampled,
+        complete_chain_frac: frac(complete),
+        stage_sum_within_10pct_frac: frac(sum_ok),
+        stages,
+    }
+}
+
+/// The whole run: per-mode latencies plus the span-quality analysis.
+#[derive(Debug)]
+pub struct ProfileReport {
+    pub baseline: ModeStats,
+    pub tracing: ModeStats,
+    pub analysis: SpanAnalysis,
+}
+
+impl ProfileReport {
+    /// Tracing-on p95 over tracing-off p95, as a percentage delta.
+    pub fn overhead_p95_pct(&self) -> f64 {
+        if self.baseline.p95_ms <= 0.0 {
+            return 0.0;
+        }
+        (self.tracing.p95_ms - self.baseline.p95_ms) / self.baseline.p95_ms * 100.0
+    }
+
+    /// The `BENCH_trace.json` document (schema v1).
+    pub fn to_json(&self, cfg: &ProfileConfig) -> Json {
+        let stages = Json::obj(
+            self.analysis
+                .stages
+                .iter()
+                .map(|(name, p50, p95, count)| {
+                    (
+                        name.as_str(),
+                        Json::obj(vec![
+                            ("p50_ms", Json::num(*p50)),
+                            ("p95_ms", Json::num(*p95)),
+                            ("count", Json::num(*count as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("bench", Json::str("trace")),
+            ("schema_version", Json::num(1.0)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("preset", Json::str(&cfg.preset)),
+                    ("requests", Json::num(cfg.requests as f64)),
+                    ("concurrency", Json::num(cfg.concurrency as f64)),
+                    ("rounds", Json::num(cfg.rounds as f64)),
+                ]),
+            ),
+            ("baseline", self.baseline.to_json()),
+            ("tracing", self.tracing.to_json()),
+            ("overhead_p95_pct", Json::num(self.overhead_p95_pct())),
+            ("spans_sampled", Json::num(self.analysis.sampled as f64)),
+            (
+                "complete_chain_frac",
+                Json::num(self.analysis.complete_chain_frac),
+            ),
+            (
+                "stage_sum_within_10pct_frac",
+                Json::num(self.analysis.stage_sum_within_10pct_frac),
+            ),
+            ("stages", stages),
+        ])
+    }
+}
+
+fn tenant_spec(name: &str, seed: u64) -> TaskSpec {
+    TaskSpec {
+        name: name.to_string(),
+        kind: TaskKind::Cls { n_classes: 2, pair: false },
+        metric: Metric::Accuracy,
+        n_train: 240,
+        n_val: 48,
+        n_test: 48,
+        purity: 0.85,
+        noise: 0.0,
+        seed,
+    }
+}
+
+/// Stand up the gateway and run the alternating off/on rounds.
+pub fn run(cfg: &ProfileConfig) -> Result<ProfileReport> {
+    let rt = Arc::new(crate::runtime::Runtime::open(
+        Path::new("artifacts"),
+        &cfg.preset,
+    )?);
+    let world = World::new(rt.manifest.dims.vocab, 0);
+    let base = train::load_or_pretrain(
+        &rt,
+        &world,
+        &PretrainConfig { steps: cfg.pretrain_steps, ..Default::default() },
+        Path::new(&format!("runs/base_{}.bank", cfg.preset)),
+    )?;
+
+    let store = Arc::new(AdapterStore::in_memory());
+    let mut classes = BTreeMap::new();
+    let exe = format!("cls_train_adapter_m{}", cfg.m);
+    for (name, seed) in [("pra", 21u64), ("prb", 22u64)] {
+        let data = tasks::generate(&world, &tenant_spec(name, seed), rt.manifest.dims.seq);
+        let res = train::train_task(
+            &rt,
+            &TrainConfig::new(&exe, 1e-3, 3, 0),
+            &data,
+            &base,
+        )?;
+        store.register(name, &res.model, res.val_score)?;
+        classes.insert(name.to_string(), 2usize);
+        println!("  tenant {name}: val {:.3}", res.val_score);
+    }
+
+    let server = Arc::new(Server::start(
+        rt.clone(),
+        &store,
+        &base,
+        &classes,
+        ServerConfig {
+            flush: FlushPolicy {
+                max_batch: rt.manifest.batch,
+                max_delay: Duration::from_millis(2),
+            },
+            executors: 2,
+            ..Default::default()
+        },
+    )?);
+    let gw = Gateway::start_with_trainer(
+        rt,
+        store,
+        server,
+        None,
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )?;
+    let addr = gw.local_addr().to_string();
+
+    let recorder = trace::global();
+    recorder.set_enabled(false);
+    recorder.clear();
+
+    let load_cfg = |seed: u64| LoadgenConfig {
+        addr: addr.clone(),
+        tasks: vec!["pra".into(), "prb".into()],
+        concurrency: cfg.concurrency,
+        requests: cfg.requests,
+        seed,
+        ..Default::default()
+    };
+
+    // untimed warmup: first-connection and cold-path costs stay out of
+    // both modes' numbers
+    let warm = loadgen::run(&LoadgenConfig { requests: 40, ..load_cfg(3) })?;
+    ensure!(warm.errors == 0, "{} warmup request(s) failed", warm.errors);
+
+    let mut off_rounds = Vec::new();
+    let mut on_rounds = Vec::new();
+    for round in 0..cfg.rounds.max(1) {
+        recorder.set_enabled(false);
+        println!("  round {round}: tracing off, {} requests …", cfg.requests);
+        let off = loadgen::run(&load_cfg(10 + round as u64))?;
+        ensure!(off.errors == 0, "{} tracing-off request(s) failed", off.errors);
+        off_rounds.push(off);
+
+        recorder.set_enabled(true);
+        println!("  round {round}: tracing on,  {} requests …", cfg.requests);
+        let on = loadgen::run(&load_cfg(50 + round as u64))?;
+        ensure!(on.errors == 0, "{} tracing-on request(s) failed", on.errors);
+        on_rounds.push(on);
+    }
+
+    // the span chains, exported over the same socket the load used
+    let mut client = Client::connect(&addr)?;
+    let trace_body = client.trace().context("GET /trace")?;
+    ensure!(
+        trace_body.at("enabled").as_bool() == Some(true),
+        "recorder reports disabled after tracing-on rounds"
+    );
+    let spans = trace_body
+        .at("spans")
+        .as_arr()
+        .context("trace body has no spans array")?;
+    let analysis = analyze_spans(spans);
+    ensure!(analysis.sampled > 0, "tracing-on rounds left no spans in the ring");
+    drop(client);
+    gw.shutdown()?;
+
+    Ok(ProfileReport {
+        baseline: ModeStats::from_rounds(&off_rounds),
+        tracing: ModeStats::from_rounds(&on_rounds),
+        analysis,
+    })
+}
+
+/// Atomically persist the report (same contract as the other benches).
+pub fn write_report(path: &Path, report: &Json) -> Result<()> {
+    loadgen::write_report(path, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(status: f64, stages: Vec<(&str, f64)>, total: f64, complete: f64) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("request")),
+            ("rid", Json::str("req-t")),
+            ("task", Json::str("pra")),
+            ("status", Json::num(status)),
+            ("total_us", Json::num(total)),
+            ("complete", Json::num(complete)),
+            ("stages_us", Json::obj(stages.into_iter().map(|(k, v)| (k, Json::num(v))).collect())),
+        ])
+    }
+
+    #[test]
+    fn analysis_counts_chains_and_stage_sums() {
+        let good = span(
+            200.0,
+            vec![
+                ("admission", 100.0),
+                ("queue", 200.0),
+                ("plan", 50.0),
+                ("execute", 600.0),
+                ("respond", 50.0),
+            ],
+            1000.0,
+            1.0,
+        );
+        // sums to half the reported total → outside the 10% band
+        let torn = span(200.0, vec![("admission", 500.0)], 1000.0, 0.0);
+        let err = span(404.0, vec![], 10.0, 0.0);
+        let a = analyze_spans(&[good, torn, err]);
+        assert_eq!(a.sampled, 2); // the 404 is excluded
+        assert!((a.complete_chain_frac - 0.5).abs() < 1e-9);
+        assert!((a.stage_sum_within_10pct_frac - 0.5).abs() < 1e-9);
+        let exec = a.stages.iter().find(|(n, ..)| n == "execute").unwrap();
+        assert!((exec.1 - 0.6).abs() < 1e-9); // µs → ms
+    }
+
+    /// Pins the BENCH_trace.json v1 schema CI validates against.
+    #[test]
+    fn report_json_schema() {
+        let mk = |p95: f64| ModeStats {
+            requests: 600,
+            errors: 0,
+            p50_ms: p95 / 2.0,
+            p95_ms: p95,
+        };
+        let report = ProfileReport {
+            baseline: mk(10.0),
+            tracing: mk(10.3),
+            analysis: SpanAnalysis {
+                sampled: 600,
+                complete_chain_frac: 1.0,
+                stage_sum_within_10pct_frac: 1.0,
+                stages: trace::STAGES
+                    .iter()
+                    .map(|s| (s.to_string(), 1.0, 2.0, 600))
+                    .collect(),
+            },
+        };
+        let cfg = ProfileConfig::default();
+        let back = Json::parse(&report.to_json(&cfg).to_string()).unwrap();
+        assert_eq!(back.at("bench").as_str(), Some("trace"));
+        assert_eq!(back.at("schema_version").as_usize(), Some(1));
+        assert_eq!(back.at("config").at("rounds").as_usize(), Some(3));
+        for mode in ["baseline", "tracing"] {
+            let m = back.at(mode);
+            assert_eq!(m.at("requests").as_usize(), Some(600), "{mode}");
+            assert_eq!(m.at("errors").as_usize(), Some(0), "{mode}");
+            assert!(m.at("p50_ms").as_f64().unwrap() > 0.0, "{mode}");
+            assert!(m.at("p95_ms").as_f64().unwrap() > 0.0, "{mode}");
+        }
+        let overhead = back.at("overhead_p95_pct").as_f64().unwrap();
+        assert!((overhead - 3.0).abs() < 1e-9, "{overhead}");
+        assert_eq!(back.at("complete_chain_frac").as_f64(), Some(1.0));
+        assert_eq!(back.at("stage_sum_within_10pct_frac").as_f64(), Some(1.0));
+        assert_eq!(back.at("spans_sampled").as_usize(), Some(600));
+        for name in trace::STAGES {
+            let st = back.at("stages").at(name);
+            assert!(st.at("p50_ms").as_f64().is_some(), "{name}");
+            assert!(st.at("p95_ms").as_f64().is_some(), "{name}");
+            assert_eq!(st.at("count").as_usize(), Some(600), "{name}");
+        }
+    }
+
+    #[test]
+    fn pctl_nearest_rank() {
+        let mut xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(pctl(&mut xs, 50.0), 3.0);
+        assert_eq!(pctl(&mut xs, 95.0), 5.0);
+        assert_eq!(pctl(&mut [], 50.0), 0.0);
+    }
+}

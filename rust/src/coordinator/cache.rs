@@ -239,6 +239,12 @@ impl<V: Clone> PagedCache<V> {
                 let slot = inner.map.remove(&victim).unwrap();
                 inner.bytes -= slot.bytes;
                 inner.evictions += 1;
+                crate::log_debug!(
+                    "cache",
+                    "evicted {victim} ({} bytes) for {key}; resident_bytes={}",
+                    slot.bytes,
+                    inner.bytes
+                );
             }
         }
     }

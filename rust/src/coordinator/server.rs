@@ -59,6 +59,8 @@ use super::router::{FlushPolicy, Router};
 use crate::eval::{fused_bank, fwd_param_banks, TaskModel};
 use crate::fuse::plan::{FusePlanner, FusedFlush, PlanSegment};
 use crate::model::params::NamedTensors;
+use crate::obs::prof;
+use crate::obs::trace::{Stage, TraceHandle};
 use crate::runtime::fused::{FusedBackend, FusedSegment, RowOutput};
 use crate::runtime::{Bank, FusedTaskBank, Runtime};
 use crate::store::{AdapterStore, BankSource};
@@ -79,6 +81,10 @@ pub struct Request {
     pub reply: mpsc::Sender<Response>,
     /// Submission time (latency accounting).
     pub submitted: Instant,
+    /// Tracing handle: the router stamps the queue→flush boundary and
+    /// the executor the plan/execute boundaries on it. The no-op handle
+    /// ([`TraceHandle::none`]) costs one null check per mark.
+    pub trace: TraceHandle,
 }
 
 /// What a task's head produced for one request — one variant per artifact
@@ -469,9 +475,9 @@ impl Server {
         // fused mode needs a fused engine; PJRT keeps the per-task path
         let mode = match cfg.mode {
             ExecMode::Fused if rt.fused().is_none() => {
-                eprintln!(
-                    "warning: {} backend has no fused engine; \
-                     falling back to per-task batching",
+                crate::log_warn!(
+                    "coordinator",
+                    "backend={} has no fused engine; falling back to per-task batching",
                     rt.backend_name()
                 );
                 ExecMode::PerTask
@@ -544,21 +550,21 @@ impl Server {
                         Ok(req) => {
                             let task = req.task.clone();
                             if let Some(b) = batcher.push(&task, req, Instant::now()) {
-                                let _ = batch_tx.send(b);
+                                send_flushed(&batch_tx, b);
                             }
                         }
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
                     for b in batcher.poll(Instant::now()) {
-                        let _ = batch_tx.send(b);
+                        send_flushed(&batch_tx, b);
                     }
                     if stop_r.load(Ordering::Relaxed) {
                         break;
                     }
                 }
                 for b in batcher.drain(Instant::now()) {
-                    let _ = batch_tx.send(b);
+                    send_flushed(&batch_tx, b);
                 }
                 // dropping batch_tx stops the executors
             })?;
@@ -582,7 +588,7 @@ impl Server {
                     if let Err(e) =
                         run_flush(&provider, capacity, fused, flush, &metrics)
                     {
-                        eprintln!("executor error: {e:#}");
+                        crate::log_error!("coordinator", "executor error err={e:#}");
                     }
                 })?;
             executor_handles.push(handle);
@@ -823,6 +829,15 @@ fn variant_is_fusable(variant: &str) -> bool {
     matches!(variant, "adapter" | "lnonly")
 }
 
+/// Hand a planned batch to the executor channel, stamping every item's
+/// queue→flush trace boundary on the way out of the router.
+fn send_flushed(tx: &mpsc::Sender<FusedFlush<Request>>, b: FusedFlush<Request>) {
+    for item in &b.items {
+        item.trace.mark(Stage::Flushed);
+    }
+    let _ = tx.send(b);
+}
+
 /// Execute one flush: fusable segments share a single trunk forward;
 /// everything else (topk trunks, or per-task mode) runs the classic
 /// per-task executable per segment. Bank resolution goes through the
@@ -899,6 +914,10 @@ fn run_per_task(
     items: Vec<Request>,
     metrics: &Arc<Mutex<ServerMetrics>>,
 ) -> Result<()> {
+    prof::start_batch();
+    for req in &items {
+        req.trace.mark(Stage::ExecStart);
+    }
     let exe = rt.load(&tb.fwd_name)?;
     let b = exe.spec.batch;
     let seq = rt.manifest.dims.seq;
@@ -957,6 +976,7 @@ fn run_per_task(
         }
         other => bail!("unservable artifact kind {other:?}"),
     };
+    let stage_table = prof::take_batch();
     let now = Instant::now();
     let mut m = metrics.lock().unwrap();
     m.batches += 1;
@@ -965,6 +985,9 @@ fn run_per_task(
         let latency = now.duration_since(req.submitted);
         record_latency(&mut m, latency);
         m.requests += 1;
+        req.trace.set_batch_rows(n);
+        req.trace.add_meta_all(&stage_table);
+        req.trace.mark(Stage::Replied);
         let _ = req.reply.send(Response {
             task: req.task,
             prediction: pred,
@@ -986,6 +1009,12 @@ fn run_fused_groups(
     metrics: &Arc<Mutex<ServerMetrics>>,
 ) -> Result<()> {
     let seq = rt.manifest.dims.seq;
+    prof::start_batch();
+    for (_, reqs) in &groups {
+        for req in reqs {
+            req.trace.mark(Stage::ExecStart);
+        }
+    }
     let rows: usize = groups.iter().map(|(_, r)| r.len()).sum();
     let mut tokens = Vec::with_capacity(rows * seq);
     let mut type_ids = Vec::with_capacity(rows * seq);
@@ -1006,6 +1035,7 @@ fn run_fused_groups(
         "fused forward returned {} rows for a {rows}-row batch",
         outs.len()
     );
+    let stage_table = prof::take_batch();
     let now = Instant::now();
     let mut m = metrics.lock().unwrap();
     m.batches += 1;
@@ -1027,6 +1057,9 @@ fn run_fused_groups(
             let latency = now.duration_since(req.submitted);
             record_latency(&mut m, latency);
             m.requests += 1;
+            req.trace.set_batch_rows(rows);
+            req.trace.add_meta_all(&stage_table);
+            req.trace.mark(Stage::Replied);
             let _ = req.reply.send(Response {
                 task: req.task,
                 prediction: pred,

@@ -199,7 +199,8 @@ impl TaskStream {
             let rep = self.arrive(spec)?;
             for (old, was, now) in &rep.memory_checks {
                 if (was - now).abs() > 1e-12 {
-                    eprintln!(
+                    crate::log_warn!(
+                        "stream",
                         "FORGETTING: task {old} score moved {was} -> {now}"
                     );
                     forgetting = true;

@@ -160,11 +160,15 @@ impl<T> FusePlanner<T> {
         if items.is_empty() {
             return None;
         }
-        Some(FusedFlush {
-            segments,
-            items,
-            oldest_wait: now.saturating_duration_since(oldest),
-        })
+        let oldest_wait = now.saturating_duration_since(oldest);
+        crate::log_debug!(
+            "fuse",
+            "assembled mixed batch rows={} tasks={} oldest_wait_ms={:.1}",
+            items.len(),
+            segments.len(),
+            oldest_wait.as_secs_f64() * 1e3
+        );
+        Some(FusedFlush { segments, items, oldest_wait })
     }
 }
 

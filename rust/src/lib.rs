@@ -20,6 +20,9 @@
 //!   * `baseline`  — the no-BERT baseline searcher (Table 2, col. 1)
 //!   * `eval`      — task metrics and GLUE-style aggregation
 //!   * `report`    — table/figure emitters (stdout + CSV)
+//!   * `obs`       — observability: leveled structured logging, request
+//!     tracing (ring-buffer spans, Chrome trace export), Prometheus
+//!     metric exposition, feature-gated kernel profiling
 //!   * `util`      — dependency-free substrates (json/rng/stats/tensor)
 
 pub mod baseline;
@@ -29,6 +32,7 @@ pub mod data;
 pub mod eval;
 pub mod fuse;
 pub mod model;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;

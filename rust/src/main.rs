@@ -11,16 +11,20 @@
 //!                       [--adapter-cache-mb MB] [--synthetic N]
 //!                       [--port P [--duration S] [--workers W]
 //!                        [--train-workers T]] [--requests N]
+//!                       [--trace] [--slow-ms N]
 //! adapterbert loadgen   --addr HOST:PORT [--tasks a,b | --tasks N] [--rate R]
 //!                       [--zipf S] [--concurrency C] [--requests N]
 //!                       [--duration S] [--out FILE]
 //! adapterbert baseline  --task NAME [--budget N]
 //! adapterbert bench     <table1|table2|fig3|fig3x|fig4|fig5|fig6|fig7|sizes|
-//!                        params|kernels|trainserve|all> [--full]
+//!                        params|kernels|trainserve|profile|all> [--full]
 //!                       (`kernels` also takes --threads 1,2,4 --out FILE and
 //!                        writes BENCH_kernels.json; `trainserve` takes
 //!                        --jobs K --requests N --out FILE and writes
-//!                        BENCH_trainserve.json; neither is part of `all`)
+//!                        BENCH_trainserve.json; `profile` measures tracing
+//!                        overhead + span quality and writes BENCH_trace.json;
+//!                        none of the three is part of `all`)
+//! adapterbert trace-dump [--addr HOST:PORT | --in FILE] [--out trace.json]
 //! adapterbert list-tasks
 //! ```
 //!
@@ -36,6 +40,15 @@
 //! `loadgen` drives a running gateway and writes `BENCH_serve.json`;
 //! with `--zipf S` it skews the task pick Zipf(S)-style and writes the
 //! cache-pressure document `BENCH_cache.json` instead.
+//!
+//! Observability: every CLI run logs structured `key=value` lines to
+//! stderr, leveled by `ADAPTERBERT_LOG=error|warn|info|debug` (default
+//! warn). `serve --port` additionally records per-request spans when
+//! `--trace` (or env `ADAPTERBERT_TRACE=1`) is set — exported live at
+//! `GET /trace`, converted to a Chrome/Perfetto trace by `trace-dump`,
+//! with `--slow-ms N` warn-logging any request slower than N ms by id.
+//! `GET /metrics?format=prometheus` serves the same counters as
+//! Prometheus text exposition.
 //!
 //! Python is never on this path: with PJRT linked the AOT artifacts are
 //! used, and otherwise `--backend auto` (the default) runs everything on
@@ -114,6 +127,9 @@ fn main() -> Result<()> {
     }
     let cmd = argv[0].clone();
     let args = Args::parse(&argv[1..]);
+    // structured logging to stderr: ADAPTERBERT_LOG=error|warn|info|debug
+    // (CLI default: warn)
+    adapterbert::obs::log::init_cli();
     if let Some(b) = args.get("backend") {
         // validate early, then hand the choice to every Runtime::open in
         // this process (train/eval/serve/bench all route through it)
@@ -128,6 +144,7 @@ fn main() -> Result<()> {
         "loadgen" => cmd_loadgen(&args),
         "baseline" => cmd_baseline(&args),
         "bench" => cmd_bench(&args),
+        "trace-dump" => cmd_trace_dump(&args),
         "list-tasks" => cmd_list_tasks(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -168,12 +185,24 @@ fn print_help() {
          \x20            kernels and writes BENCH_kernels.json;\n\
          \x20            `bench trainserve` measures serving latency with\n\
          \x20            0 vs K co-located training jobs and writes\n\
-         \x20            BENCH_trainserve.json\n\
+         \x20            BENCH_trainserve.json; `bench profile` measures\n\
+         \x20            request-tracing overhead and span-chain quality\n\
+         \x20            and writes BENCH_trace.json\n\
+         \x20 trace-dump convert recorded request spans (--addr HOST:PORT\n\
+         \x20            for a live gateway's GET /trace, or --in FILE)\n\
+         \x20            into Chrome trace-event JSON for Perfetto\n\
          \x20 list-tasks show the synthetic task suites\n\
          \n\
          common flags: --preset default|test  --full (bench)\n\
          \x20              --backend auto|pjrt|native (default auto: PJRT\n\
-         \x20              when a plugin is linked, else pure-Rust kernels)"
+         \x20              when a plugin is linked, else pure-Rust kernels)\n\
+         \n\
+         observability: ADAPTERBERT_LOG=error|warn|info|debug leveled\n\
+         \x20              key=value logs on stderr (default warn);\n\
+         \x20              serve --trace / ADAPTERBERT_TRACE=1 records\n\
+         \x20              request spans (GET /trace), --slow-ms N warns\n\
+         \x20              on slow requests; GET /metrics?format=prometheus\n\
+         \x20              for Prometheus text exposition"
     );
 }
 
@@ -337,6 +366,7 @@ fn cache_budget_from(args: &Args) -> Result<Option<u64>> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use adapterbert::coordinator::server::Request;
     use adapterbert::coordinator::FlushPolicy;
+    use adapterbert::obs::trace::TraceHandle;
     use std::sync::mpsc;
     use std::time::{Duration, Instant};
 
@@ -434,6 +464,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             },
             max_inflight: args.parse_num("max-inflight", 256usize)?,
             reply_timeout: Duration::from_secs(30),
+            // --slow-ms: end-to-end latency beyond which a predict logs a
+            // warn line carrying its request id
+            slow: Duration::from_millis(args.parse_num("slow-ms", 1000u64)?),
+            // --trace (or env ADAPTERBERT_TRACE): record request spans
+            // into the process trace ring, exported at GET /trace
+            trace: args.flags.contains_key("trace"),
         };
         let server = Arc::new(server);
         // --train-workers N: background training jobs next to serving
@@ -477,8 +513,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Gateway::start_with_trainer(rt.clone(), store.clone(), server, trainer, gcfg)?;
         println!("gateway listening on http://{}", gw.local_addr());
         println!(
-            "routes: GET /health /tasks /metrics /train[/<id>] | \
-             POST /predict /predict_ids /tasks /train"
+            "routes: GET /health /tasks /metrics[?format=prometheus] /trace \
+             /train[/<id>] | POST /predict /predict_ids /tasks /train"
         );
         let duration: f64 = args.parse_num("duration", 0.0f64)?;
         if duration > 0.0 {
@@ -526,6 +562,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             attn_mask: mask,
             reply: reply_tx.clone(),
             submitted: Instant::now(),
+            trace: TraceHandle::none(),
         })?;
     }
     drop(reply_tx);
@@ -790,6 +827,76 @@ fn bench_trainserve(args: &Args, preset: &str) -> Result<()> {
     Ok(())
 }
 
+/// `bench profile`: tracing-off vs tracing-on serving latency plus span
+/// chain quality, over a real socket. Self-contained (does its own
+/// pretrain + tenant setup), so it runs before (and without) `Ctx::open`.
+fn bench_profile(args: &Args, preset: &str) -> Result<()> {
+    use adapterbert::bench::profile;
+    let cfg = profile::ProfileConfig {
+        preset: preset.to_string(),
+        requests: args.parse_num("requests", 200u64)?,
+        concurrency: args.parse_num("concurrency", 2usize)?,
+        rounds: args.parse_num("rounds", 3usize)?,
+        m: args.parse_num("m", 8usize)?,
+        pretrain_steps: args
+            .parse_num("pretrain-steps", if preset == "test" { 120 } else { 800 })?,
+    };
+    println!("\n########## bench profile (rounds={}) ##########", cfg.rounds);
+    let t0 = std::time::Instant::now();
+    let report = profile::run(&cfg)?;
+    println!(
+        "  tracing off p95 {:.2}ms | on p95 {:.2}ms | overhead {:+.2}%",
+        report.baseline.p95_ms,
+        report.tracing.p95_ms,
+        report.overhead_p95_pct()
+    );
+    println!(
+        "  spans {}: complete chains {:.1}% | stage sums within 10% {:.1}%",
+        report.analysis.sampled,
+        report.analysis.complete_chain_frac * 100.0,
+        report.analysis.stage_sum_within_10pct_frac * 100.0
+    );
+    let out = args.get_or("out", "BENCH_trace.json");
+    profile::write_report(Path::new(&out), &report.to_json(&cfg))?;
+    println!("wrote {out}");
+    println!("[bench profile] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// `trace-dump`: convert `GET /trace` spans — fetched from a live
+/// gateway (`--addr`) or read from a saved JSON file (`--in`) — into
+/// Chrome trace-event JSON loadable in Perfetto / `chrome://tracing`.
+fn cmd_trace_dump(args: &Args) -> Result<()> {
+    use adapterbert::obs::trace::chrome_trace;
+    use adapterbert::serve::Client;
+    use adapterbert::util::json::Json;
+    let body = match (args.get("addr"), args.get("in")) {
+        (Some(addr), None) => {
+            let mut client = Client::connect(addr)?;
+            client.trace()?
+        }
+        (None, Some(path)) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+            Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+        }
+        _ => bail!("trace-dump needs exactly one of --addr HOST:PORT or --in FILE"),
+    };
+    // accept the GET /trace body shape or a bare span array
+    let spans = match body.at("spans").as_arr() {
+        Some(s) => s,
+        None => body.as_arr().context("no spans array in input")?,
+    };
+    let doc = chrome_trace(spans);
+    let out = args.get_or("out", "trace.json");
+    std::fs::write(&out, format!("{doc}\n")).with_context(|| format!("writing {out:?}"))?;
+    println!(
+        "wrote {out} ({} spans) — load in Perfetto (ui.perfetto.dev) or \
+         chrome://tracing",
+        spans.len()
+    );
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     // every positional is a bench name; no names means the full set
     let mut wanted: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
@@ -805,6 +912,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if wanted.contains(&"trainserve") {
         bench_trainserve(args, &preset)?;
         wanted.retain(|w| *w != "trainserve");
+        if wanted.is_empty() {
+            return Ok(());
+        }
+    }
+    if wanted.contains(&"profile") {
+        bench_profile(args, &preset)?;
+        wanted.retain(|w| *w != "profile");
         if wanted.is_empty() {
             return Ok(());
         }

@@ -1,0 +1,197 @@
+//! Leveled structured logger: `key=value` lines on stderr.
+//!
+//! One process-wide level, read lazily from `ADAPTERBERT_LOG`
+//! (`error|warn|info|debug`). When the variable is unset the default is
+//! [`Level::Error`], which keeps `cargo test` output clean; CLI entry
+//! points call [`init_cli`] to raise the unset-default to [`Level::Warn`]
+//! so operators still see warnings without any configuration.
+//!
+//! Use through the crate-root macros, which skip formatting entirely when
+//! the level is disabled (one relaxed atomic load on the fast path):
+//!
+//! ```
+//! adapterbert::log_warn!("store", "task={} quarantined path={:?}", "rte_s", "b.bin");
+//! ```
+//!
+//! Line format (stderr):
+//!
+//! ```text
+//! ts=1754650000.123 level=warn target=store task=rte_s quarantined path="b.bin"
+//! ```
+//!
+//! The message body is free-form but by convention `key=value` pairs;
+//! request-scoped lines include `rid=<request id>` (see `obs::trace`).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity, most severe first. Ordering is by verbosity: a level is
+/// emitted when `level <= max_level()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a level name (case-insensitive). `off`/`none` map to a level
+    /// below `error` by returning `None` — callers treat that as "leave
+    /// the default".
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// 0 = uninitialized (first `enabled()` call reads the env).
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+fn init(default: Level) -> u8 {
+    let l = std::env::var("ADAPTERBERT_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(default) as u8;
+    // Racing initializers agree on the env value; only the default can
+    // differ, and `init_cli` runs before any worker threads exist.
+    LEVEL.store(l, Ordering::Relaxed);
+    l
+}
+
+/// Initialize for a CLI run: `ADAPTERBERT_LOG` wins if set, otherwise
+/// default to `warn` (library default is `error`). Call once from `main`.
+pub fn init_cli() {
+    init(Level::Warn);
+}
+
+/// Override the level programmatically (tests, `bench profile`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// The current maximum emitted level.
+pub fn max_level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => match init(Level::Error) {
+            2 => Level::Warn,
+            3 => Level::Info,
+            4 => Level::Debug,
+            _ => Level::Error,
+        },
+        2 => Level::Warn,
+        3 => Level::Info,
+        4 => Level::Debug,
+        _ => Level::Error,
+    }
+}
+
+/// Would a record at `l` be emitted? One relaxed load after first use.
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    let cur = if cur == 0 { init(Level::Error) } else { cur };
+    (l as u8) <= cur
+}
+
+/// Emit one line. Callers go through the macros, which pre-check
+/// [`enabled`] so arguments are never formatted for disabled levels.
+pub fn write(l: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let ts = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    eprintln!(
+        "ts={}.{:03} level={} target={} {}",
+        ts.as_secs(),
+        ts.subsec_millis(),
+        l.as_str(),
+        target,
+        args
+    );
+}
+
+/// `log_error!(target, fmt, args…)` — always-on operational errors.
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Error, $target, core::format_args!($($arg)*));
+        }
+    };
+}
+
+/// `log_warn!(target, fmt, args…)` — recoverable anomalies (quarantined
+/// banks, backend fallbacks, slow requests).
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Warn, $target, core::format_args!($($arg)*));
+        }
+    };
+}
+
+/// `log_info!(target, fmt, args…)` — lifecycle events (job started,
+/// task installed, server draining).
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Info, $target, core::format_args!($($arg)*));
+        }
+    };
+}
+
+/// `log_debug!(target, fmt, args…)` — per-request / per-eviction detail.
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::write(
+                $crate::obs::log::Level::Debug, $target, core::format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Debug);
+    }
+
+    #[test]
+    fn set_level_gates() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Error);
+        assert!(!enabled(Level::Warn));
+    }
+}

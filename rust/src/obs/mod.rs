@@ -1,0 +1,37 @@
+//! Observability: structured logging, request tracing, metric exposition,
+//! and kernel profiling for the serving stack.
+//!
+//! Four pieces, each usable on its own:
+//!
+//! * [`log`] — a leveled key=value logger (`ADAPTERBERT_LOG={error,warn,
+//!   info,debug}`) behind the crate-root `log_error!`/`log_warn!`/
+//!   `log_info!`/`log_debug!` macros. Replaces the ad-hoc `eprintln!`s
+//!   that used to be scattered through coordinator/serve/train/store;
+//!   silent by default under `cargo test` (level defaults to `error`).
+//! * [`trace`] — a bounded ring-buffer recorder of per-request spans.
+//!   Every traced predict carries a request id and five stage timestamps
+//!   (admission → queue → plan → execute → respond) that tile the
+//!   request's lifetime, so stage durations sum to the end-to-end latency
+//!   by construction. Cold bank loads and training jobs record event
+//!   spans in the same ring. Near-zero cost when disabled: the per-request
+//!   handle is an `Option` that no-ops every mark.
+//! * [`prom`] — Prometheus text-exposition rendering
+//!   (`GET /metrics?format=prometheus`) of the same counters and
+//!   histograms the JSON endpoint reports.
+//! * [`prof`] — kernel-stage profiling hooks (`--features profile`),
+//!   attributing executor wall time to gemm / attention / ln / adapter /
+//!   head and surfacing the per-batch breakdown in span metadata. With
+//!   the feature off every hook is a unit struct and compiles to nothing.
+//!
+//! Exporters: `GET /trace` (recent spans as JSON), `adapterbert
+//! trace-dump` (Chrome trace-event JSON, loadable in Perfetto), and
+//! `bench profile` (`BENCH_trace.json`: stage-latency breakdown plus
+//! measured tracing overhead). See ARCHITECTURE.md §Observability.
+
+pub mod log;
+pub mod prof;
+pub mod prom;
+pub mod trace;
+
+pub use log::Level;
+pub use trace::{Recorder, Span, SpanKind, Stage, TraceHandle};

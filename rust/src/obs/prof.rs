@@ -1,0 +1,169 @@
+//! Kernel-stage profiling hooks (`--features profile`).
+//!
+//! When the `profile` feature is **off** (the default), every item here
+//! is a unit struct or an empty `#[inline]` function — call sites in the
+//! kernels compile to nothing, so the hot path pays zero cost.
+//!
+//! When **on**, executor threads accumulate per-stage wall time in a
+//! thread-local table:
+//!
+//! * leaf kernels open a [`scope`] tagged `"gemm"` / `"attention"` /
+//!   `"ln"`; the elapsed time lands in that stage's bucket;
+//! * semantic regions in the graph (adapter bottlenecks, head decode)
+//!   open a [`ctx`] instead: the *whole region* is timed under the
+//!   region's label and leaf scopes inside it become no-ops, so a GEMM
+//!   inside an adapter counts as `adapter`, not twice.
+//!
+//! Kernels measure on the calling thread: the worker pool's
+//! `parallel_for` blocks the caller until the range drains, so
+//! caller-side timing captures the full wall time of the parallel
+//! region without instrumenting pool workers.
+//!
+//! The executor wraps each batch in [`start_batch`]/[`take_batch`] and
+//! attaches the table to the batch's trace spans as `<stage>_s` metadata
+//! (see `coordinator::server`), which `GET /trace` and `bench profile`
+//! surface.
+
+#[cfg(feature = "profile")]
+mod imp {
+    use std::cell::RefCell;
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    thread_local! {
+        static STATE: RefCell<State> = RefCell::new(State::default());
+    }
+
+    #[derive(Default)]
+    struct State {
+        ctx_depth: usize,
+        totals: BTreeMap<&'static str, f64>,
+    }
+
+    /// Times a leaf kernel; no-op while a [`ctx`] region is open.
+    pub struct Scope {
+        label: &'static str,
+        start: Option<Instant>,
+    }
+
+    #[inline]
+    pub fn scope(label: &'static str) -> Scope {
+        let active = STATE.with(|s| s.borrow().ctx_depth == 0);
+        Scope { label, start: active.then(Instant::now) }
+    }
+
+    impl Drop for Scope {
+        fn drop(&mut self) {
+            if let Some(t0) = self.start {
+                let dt = t0.elapsed().as_secs_f64();
+                STATE.with(|s| {
+                    *s.borrow_mut().totals.entry(self.label).or_insert(0.0) += dt;
+                });
+            }
+        }
+    }
+
+    /// Times a semantic region and suppresses leaf scopes inside it.
+    /// Nested regions: the outermost wins (inner `ctx` only bumps the
+    /// suppression depth).
+    pub struct Ctx {
+        label: &'static str,
+        start: Option<Instant>,
+    }
+
+    #[inline]
+    pub fn ctx(label: &'static str) -> Ctx {
+        let outermost = STATE.with(|s| {
+            let mut s = s.borrow_mut();
+            s.ctx_depth += 1;
+            s.ctx_depth == 1
+        });
+        Ctx { label, start: outermost.then(Instant::now) }
+    }
+
+    impl Drop for Ctx {
+        fn drop(&mut self) {
+            STATE.with(|s| {
+                let mut s = s.borrow_mut();
+                s.ctx_depth -= 1;
+                if let Some(t0) = self.start {
+                    *s.totals.entry(self.label).or_insert(0.0) += t0.elapsed().as_secs_f64();
+                }
+            });
+        }
+    }
+
+    /// Reset this thread's stage table (executor, once per batch).
+    pub fn start_batch() {
+        STATE.with(|s| s.borrow_mut().totals.clear());
+    }
+
+    /// Drain this thread's stage table as `(<stage>_s, seconds)` pairs.
+    pub fn take_batch() -> Vec<(String, f64)> {
+        STATE.with(|s| {
+            s.borrow_mut()
+                .totals
+                .split_off("")
+                .into_iter()
+                .map(|(k, v)| (format!("{k}_s"), v))
+                .collect()
+        })
+    }
+
+    pub const ENABLED: bool = true;
+}
+
+#[cfg(not(feature = "profile"))]
+mod imp {
+    /// Unit guard; constructing and dropping it is a no-op.
+    pub struct Scope;
+
+    #[inline(always)]
+    pub fn scope(_label: &'static str) -> Scope {
+        Scope
+    }
+
+    /// Unit guard; constructing and dropping it is a no-op.
+    pub struct Ctx;
+
+    #[inline(always)]
+    pub fn ctx(_label: &'static str) -> Ctx {
+        Ctx
+    }
+
+    #[inline(always)]
+    pub fn start_batch() {}
+
+    #[inline(always)]
+    pub fn take_batch() -> Vec<(String, f64)> {
+        Vec::new()
+    }
+
+    pub const ENABLED: bool = false;
+}
+
+pub use imp::{ctx, scope, start_batch, take_batch, Ctx, Scope, ENABLED};
+
+#[cfg(all(test, feature = "profile"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_suppresses_leaf_scopes() {
+        start_batch();
+        {
+            let _c = ctx("adapter");
+            let _s = scope("gemm"); // suppressed
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        {
+            let _s = scope("gemm");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let t = take_batch();
+        let keys: Vec<&str> = t.iter().map(|(k, _)| k.as_str()).collect();
+        assert!(keys.contains(&"adapter_s"));
+        assert!(keys.contains(&"gemm_s"));
+        assert_eq!(keys.len(), 2);
+    }
+}

@@ -1,0 +1,172 @@
+//! Prometheus text-exposition rendering (`GET /metrics?format=prometheus`).
+//!
+//! A tiny writer for the [text format]: `# HELP` / `# TYPE` headers,
+//! label escaping, histogram `_bucket`/`_sum`/`_count` triads with a
+//! `+Inf` bucket. The gateway renders from the same atomic metrics
+//! snapshot the JSON endpoint uses, so the two formats never disagree.
+//!
+//! [text format]: https://prometheus.io/docs/instrumenting/exposition_formats/
+
+/// Accumulates one exposition document.
+#[derive(Default)]
+pub struct Prom {
+    out: String,
+    typed: std::collections::BTreeSet<String>,
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn fmt_value(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn fmt_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+impl Prom {
+    pub fn new() -> Prom {
+        Prom::default()
+    }
+
+    fn header(&mut self, name: &str, kind: &str, help: &str) {
+        if self.typed.insert(name.to_string()) {
+            self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        }
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(&format!("{name}{} {}\n", fmt_labels(labels), fmt_value(value)));
+    }
+
+    /// A monotonically increasing counter.
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.header(name, "counter", help);
+        self.sample(name, labels, value);
+    }
+
+    /// A point-in-time gauge.
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.header(name, "gauge", help);
+        self.sample(name, labels, value);
+    }
+
+    /// A histogram from *cumulative* `(upper_bound_seconds, count)`
+    /// buckets. Appends the implicit `+Inf` bucket (= `count`), `_sum`,
+    /// and `_count` series.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        cumulative: &[(f64, u64)],
+        sum: f64,
+        count: u64,
+    ) {
+        self.header(name, "histogram", help);
+        let bucket = format!("{name}_bucket");
+        for &(le, c) in cumulative {
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            let le_s = fmt_value(le);
+            ls.push(("le", &le_s));
+            self.sample(&bucket, &ls, c as f64);
+        }
+        let mut ls: Vec<(&str, &str)> = labels.to_vec();
+        ls.push(("le", "+Inf"));
+        self.sample(&bucket, &ls, count as f64);
+        self.sample(&format!("{name}_sum"), labels, sum);
+        self.sample(&format!("{name}_count"), labels, count as f64);
+    }
+
+    /// The finished document (`text/plain; version=0.0.4` body).
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Minimal line-format check used by tests and CI: every non-comment,
+/// non-blank line must be `name{labels} value` with a parseable value
+/// and balanced braces. Returns the first offending line on failure.
+pub fn check_exposition(body: &str) -> Result<(), String> {
+    for line in body.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = match line.rsplit_once(' ') {
+            Some(p) => p,
+            None => return Err(format!("no value separator: {line:?}")),
+        };
+        let name_part = match series.split_once('{') {
+            Some((n, rest)) => {
+                if !rest.ends_with('}') {
+                    return Err(format!("unbalanced labels: {line:?}"));
+                }
+                n
+            }
+            None => series,
+        };
+        if name_part.is_empty()
+            || !name_part
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            || name_part.chars().next().unwrap().is_ascii_digit()
+        {
+            return Err(format!("bad metric name: {line:?}"));
+        }
+        if value != "+Inf" && value != "-Inf" && value != "NaN" && value.parse::<f64>().is_err() {
+            return Err(format!("bad value: {line:?}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_passes_line_check() {
+        let mut p = Prom::new();
+        p.counter("adapterbert_served_total", "Requests answered 200.", &[], 42.0);
+        p.gauge(
+            "adapterbert_cache_resident_bytes",
+            "Bytes resident.",
+            &[("pool", "adapters")],
+            1.5e6,
+        );
+        p.histogram(
+            "adapterbert_request_seconds",
+            "End-to-end latency.",
+            &[("task", "rte\"s")],
+            &[(0.001, 3), (0.01, 7)],
+            0.05,
+            9,
+        );
+        let body = p.finish();
+        check_exposition(&body).unwrap();
+        assert!(body.contains("# TYPE adapterbert_request_seconds histogram"));
+        assert!(body.contains("le=\"+Inf\"} 9"));
+        assert!(body.contains("adapterbert_request_seconds_sum{task=\"rte\\\"s\"} 0.05"));
+    }
+
+    #[test]
+    fn line_check_rejects_garbage() {
+        assert!(check_exposition("not a metric line at all\n").is_err());
+        assert!(check_exposition("9bad_name 1\n").is_err());
+        assert!(check_exposition("name{unbalanced 1\n").is_err());
+        assert!(check_exposition("ok_name 1\n").is_ok());
+    }
+}

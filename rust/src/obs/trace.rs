@@ -1,0 +1,532 @@
+//! Request tracing: per-request spans in a bounded ring buffer.
+//!
+//! ## Span model
+//!
+//! A traced request owns a [`SpanCell`]: a request id plus six monotonic
+//! microsecond timestamps `t0…t5` that *tile* the request's lifetime, so
+//! the five stage durations sum to the end-to-end latency exactly:
+//!
+//! ```text
+//! t0 gateway entry ──admission──► t1 router submit ──queue──► t2 flush
+//!    (parse, 404, cold load,         (bounded router            (batch
+//!     encode)                         queue wait)                leaves
+//!                                                               router)
+//! t2 ──plan──► t3 executor start ──execute──► t4 reply ──respond──► t5
+//!    (executor channel wait,          (forward pass,    (gateway picks
+//!     bank resolve, fuse plan)         head decode)      up the reply,
+//!                                                        encodes JSON)
+//! ```
+//!
+//! Timestamps are `AtomicU64` microseconds since a process-wide epoch, so
+//! the router thread, executor threads, and the gateway worker can each
+//! stamp their own stage without locks. The per-request handle
+//! ([`TraceHandle`]) is an `Option<Arc<SpanCell>>`: when tracing is
+//! disabled every mark is a no-op on a `None`, which is the entire
+//! disabled-path cost.
+//!
+//! Cold bank loads and training jobs record two-timestamp event spans
+//! ([`SpanKind::ColdLoad`], [`SpanKind::TrainJob`]) in the same ring.
+//!
+//! ## Ring recorder
+//!
+//! [`Recorder`] keeps the last `capacity` *finished* spans: a slot vector
+//! with one tiny `Mutex` per slot and a global atomic cursor. A writer
+//! claims a slot with `fetch_add` and holds only that slot's lock, only
+//! for a pointer move — writers never contend with each other except on
+//! cursor wrap collisions, and never block request threads on a global
+//! lock ("lock-free-ish"). Snapshots lock slots one at a time and clone
+//! finished spans whose timestamps are no longer being written, so reads
+//! are torn-free. Memory is bounded by `capacity` spans regardless of
+//! traffic.
+//!
+//! The process-wide recorder ([`global`]) sizes its ring from
+//! `ADAPTERBERT_TRACE_SPANS` (default 2048) and starts disabled; the
+//! serve CLI enables it with `--trace` / `ADAPTERBERT_TRACE=1`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Stage names in lifecycle order; stage `i` spans `[t_i, t_{i+1}]`.
+pub const STAGES: [&str; 5] = ["admission", "queue", "plan", "execute", "respond"];
+
+/// Default ring capacity (spans) when `ADAPTERBERT_TRACE_SPANS` is unset.
+pub const DEFAULT_CAPACITY: usize = 2048;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch; never 0 (0 = unset mark).
+pub fn now_us() -> u64 {
+    (epoch().elapsed().as_micros() as u64).max(1)
+}
+
+/// What a span describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// A predict request (full five-stage chain).
+    Request,
+    /// A cold adapter-bank load (start/end only).
+    ColdLoad,
+    /// A background training job (start/end only).
+    TrainJob,
+}
+
+impl SpanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::ColdLoad => "cold_load",
+            SpanKind::TrainJob => "train_job",
+        }
+    }
+}
+
+/// A stage *boundary* a request crosses after creation (`t0` is stamped
+/// by [`SpanCell::new`]); marking boundary `i` closes stage `i-1`.
+#[derive(Clone, Copy, Debug)]
+#[repr(usize)]
+pub enum Stage {
+    /// `t1`: accepted into the router (admission done).
+    Submitted = 1,
+    /// `t2`: the router flushed this item into a batch (queue done).
+    Flushed = 2,
+    /// `t3`: an executor started running the batch (plan done).
+    ExecStart = 3,
+    /// `t4`: the executor sent the reply (execute done).
+    Replied = 4,
+    /// `t5`: the gateway finished building the response (respond done).
+    Responded = 5,
+}
+
+/// Shared mutable span: identity set at creation, timestamps stamped by
+/// whichever thread crosses each boundary.
+pub struct SpanCell {
+    kind: SpanKind,
+    rid: String,
+    task: Mutex<String>,
+    /// `t0…t5` in µs since [`epoch`]; 0 = not yet marked.
+    t: [AtomicU64; 6],
+    /// HTTP status for requests; 0 = unset.
+    status: AtomicU64,
+    /// Rows in the executor batch that carried this request; 0 = unset.
+    batch_rows: AtomicU64,
+    /// Free-form numeric metadata (kernel-stage seconds, bytes, …).
+    meta: Mutex<Vec<(String, f64)>>,
+}
+
+impl SpanCell {
+    /// Create with `t0 = now`.
+    pub fn new(kind: SpanKind, rid: impl Into<String>) -> SpanCell {
+        let cell = SpanCell {
+            kind,
+            rid: rid.into(),
+            task: Mutex::new(String::new()),
+            t: Default::default(),
+            status: AtomicU64::new(0),
+            batch_rows: AtomicU64::new(0),
+            meta: Mutex::new(Vec::new()),
+        };
+        cell.t[0].store(now_us(), Ordering::Release);
+        cell
+    }
+
+    fn mark(&self, boundary: usize) {
+        self.t[boundary].store(now_us(), Ordering::Release);
+    }
+
+    /// A copy of the current timestamps/fields, safe to inspect.
+    pub fn snapshot(&self) -> Span {
+        let mut t = [0u64; 6];
+        for (i, a) in self.t.iter().enumerate() {
+            t[i] = a.load(Ordering::Acquire);
+        }
+        Span {
+            kind: self.kind,
+            rid: self.rid.clone(),
+            task: self.task.lock().unwrap().clone(),
+            t,
+            status: self.status.load(Ordering::Relaxed) as u16,
+            batch_rows: self.batch_rows.load(Ordering::Relaxed) as usize,
+            meta: self.meta.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// Per-request tracing handle threaded through the serving path. `None`
+/// inside means tracing was off when the request arrived: every method
+/// is then a branch on a null pointer — the entire disabled-path cost.
+#[derive(Clone, Default)]
+pub struct TraceHandle(Option<Arc<SpanCell>>);
+
+impl TraceHandle {
+    /// The no-op handle (tracing disabled).
+    pub fn none() -> TraceHandle {
+        TraceHandle(None)
+    }
+
+    pub fn active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// The request id, if tracing.
+    pub fn rid(&self) -> Option<&str> {
+        self.0.as_deref().map(|c| c.rid.as_str())
+    }
+
+    /// Stamp a stage boundary with the current time.
+    #[inline]
+    pub fn mark(&self, s: Stage) {
+        if let Some(c) = &self.0 {
+            c.mark(s as usize);
+        }
+    }
+
+    pub fn set_task(&self, task: &str) {
+        if let Some(c) = &self.0 {
+            *c.task.lock().unwrap() = task.to_string();
+        }
+    }
+
+    pub fn set_status(&self, status: u16) {
+        if let Some(c) = &self.0 {
+            c.status.store(status as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn set_batch_rows(&self, rows: usize) {
+        if let Some(c) = &self.0 {
+            c.batch_rows.store(rows as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Attach a numeric metadata entry (e.g. `gemm_s` from `obs::prof`).
+    pub fn add_meta(&self, key: &str, value: f64) {
+        if let Some(c) = &self.0 {
+            c.meta.lock().unwrap().push((key.to_string(), value));
+        }
+    }
+
+    /// Attach several metadata entries under one lock acquisition.
+    pub fn add_meta_all(&self, entries: &[(String, f64)]) {
+        if let Some(c) = &self.0 {
+            if !entries.is_empty() {
+                c.meta.lock().unwrap().extend_from_slice(entries);
+            }
+        }
+    }
+}
+
+/// An immutable finished (or in-flight, for [`SpanCell::snapshot`]) span.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub rid: String,
+    pub task: String,
+    /// `t0…t5` µs since the process epoch; 0 = stage never reached.
+    pub t: [u64; 6],
+    pub status: u16,
+    pub batch_rows: usize,
+    pub meta: Vec<(String, f64)>,
+}
+
+impl Span {
+    /// Start of the span (µs since epoch).
+    pub fn start_us(&self) -> u64 {
+        self.t[0]
+    }
+
+    /// End: the last stamped boundary.
+    pub fn end_us(&self) -> u64 {
+        self.t.iter().rev().find(|&&v| v != 0).copied().unwrap_or(0)
+    }
+
+    /// Duration of stage `i` (µs), if both its boundaries were stamped.
+    pub fn stage_us(&self, i: usize) -> Option<u64> {
+        let (a, b) = (self.t[i], self.t[i + 1]);
+        if a == 0 || b == 0 {
+            None
+        } else {
+            Some(b.saturating_sub(a))
+        }
+    }
+
+    /// All six boundaries stamped, in non-decreasing order — the
+    /// "complete chain" acceptance predicate for request spans.
+    pub fn complete_chain(&self) -> bool {
+        self.t.iter().all(|&v| v != 0) && self.t.windows(2).all(|w| w[0] <= w[1])
+    }
+
+    pub fn total_us(&self) -> u64 {
+        self.end_us().saturating_sub(self.start_us())
+    }
+
+    /// JSON for `GET /trace`.
+    pub fn to_json(&self) -> Json {
+        let mut stages: Vec<(&str, Json)> = Vec::new();
+        for (i, name) in STAGES.iter().enumerate() {
+            if let Some(us) = self.stage_us(i) {
+                stages.push((name, Json::num(us as f64)));
+            }
+        }
+        let mut fields = vec![
+            ("kind", Json::str(self.kind.as_str())),
+            ("rid", Json::str(&self.rid)),
+            ("task", Json::str(&self.task)),
+            ("status", Json::num(self.status as f64)),
+            ("batch_rows", Json::num(self.batch_rows as f64)),
+            ("start_us", Json::num(self.start_us() as f64)),
+            ("total_us", Json::num(self.total_us() as f64)),
+            ("complete", Json::num(if self.complete_chain() { 1.0 } else { 0.0 })),
+            ("stages_us", Json::obj(stages)),
+        ];
+        if !self.meta.is_empty() {
+            fields.push((
+                "meta",
+                Json::obj(self.meta.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect()),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Bounded ring of finished spans. See the module docs for the locking
+/// story; the short version is: one atomic cursor, one per-slot mutex,
+/// nothing global on the write path.
+pub struct Recorder {
+    slots: Vec<Mutex<Option<Arc<SpanCell>>>>,
+    cursor: AtomicUsize,
+    enabled: AtomicBool,
+    recorded: AtomicU64,
+    rid_seq: AtomicU64,
+}
+
+impl Recorder {
+    pub fn new(capacity: usize) -> Recorder {
+        let capacity = capacity.max(1);
+        Recorder {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            cursor: AtomicUsize::new(0),
+            enabled: AtomicBool::new(false),
+            recorded: AtomicU64::new(0),
+            rid_seq: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total spans ever recorded (≥ spans retained).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// A process-unique request id: `req-<pid hex>-<seq hex>`.
+    pub fn gen_rid(&self) -> String {
+        let n = self.rid_seq.fetch_add(1, Ordering::Relaxed);
+        format!("req-{:x}-{:x}", std::process::id(), n)
+    }
+
+    /// Start a span if tracing is enabled; otherwise the no-op handle.
+    /// `t0` is stamped here.
+    pub fn begin(&self, kind: SpanKind, rid: impl Into<String>) -> TraceHandle {
+        if !self.enabled() {
+            return TraceHandle::none();
+        }
+        TraceHandle(Some(Arc::new(SpanCell::new(kind, rid))))
+    }
+
+    /// Push a finished span into the ring. Claims a slot with one
+    /// `fetch_add` and swaps the `Arc` in under that slot's lock only.
+    pub fn record(&self, h: &TraceHandle) {
+        let Some(cell) = &h.0 else { return };
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) % self.slots.len();
+        *self.slots[i].lock().unwrap() = Some(Arc::clone(cell));
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy out the retained spans, oldest-ish first (slot order by claim
+    /// sequence; exact order across concurrent writers is best-effort).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let len = self.slots.len();
+        let cur = self.cursor.load(Ordering::Relaxed);
+        let mut out = Vec::new();
+        for k in 0..len {
+            let i = (cur + k) % len;
+            if let Some(cell) = self.slots[i].lock().unwrap().as_ref() {
+                out.push(cell.snapshot());
+            }
+        }
+        out
+    }
+
+    /// Drop all retained spans (tests, between bench phases).
+    pub fn clear(&self) {
+        for s in &self.slots {
+            *s.lock().unwrap() = None;
+        }
+    }
+}
+
+/// The process-wide recorder. Capacity from `ADAPTERBERT_TRACE_SPANS`
+/// (default [`DEFAULT_CAPACITY`]); starts disabled unless
+/// `ADAPTERBERT_TRACE` is set to something truthy.
+pub fn global() -> &'static Recorder {
+    static GLOBAL: OnceLock<Recorder> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let cap = std::env::var("ADAPTERBERT_TRACE_SPANS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CAPACITY);
+        let r = Recorder::new(cap);
+        if let Ok(v) = std::env::var("ADAPTERBERT_TRACE") {
+            let v = v.trim().to_ascii_lowercase();
+            r.set_enabled(!v.is_empty() && v != "0" && v != "false" && v != "off");
+        }
+        r
+    })
+}
+
+/// Convert exported span JSON (the `spans` array from `GET /trace`) into
+/// Chrome trace-event JSON (`{"traceEvents": […]}`), loadable in
+/// Perfetto / `chrome://tracing`. Each span becomes one complete-event
+/// (`ph:"X"`) per stage plus an enclosing event, all on a `tid` derived
+/// from the span's position so concurrent requests stack as rows.
+pub fn chrome_trace(spans: &[Json]) -> Json {
+    let mut events = Vec::new();
+    for (idx, sp) in spans.iter().enumerate() {
+        let kind = sp.at("kind").as_str().unwrap_or("span").to_string();
+        let rid = sp.at("rid").as_str().unwrap_or("").to_string();
+        let task = sp.at("task").as_str().unwrap_or("").to_string();
+        let start = sp.at("start_us").as_f64().unwrap_or(0.0);
+        let total = sp.at("total_us").as_f64().unwrap_or(0.0);
+        let tid = (idx % 32) + 1;
+        let args = Json::obj(vec![("rid", Json::str(&rid)), ("task", Json::str(&task))]);
+        events.push(Json::obj(vec![
+            ("name", Json::str(&format!("{kind}:{task}"))),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(start)),
+            ("dur", Json::num(total)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(tid as f64)),
+            ("args", args.clone()),
+        ]));
+        let mut cur = start;
+        if let Some(stages) = sp.at("stages_us").as_obj() {
+            // BTreeMap iterates alphabetically; we need lifecycle order.
+            for name in STAGES {
+                if let Some(d) = stages.get(name).and_then(|j| j.as_f64()) {
+                    events.push(Json::obj(vec![
+                        ("name", Json::str(name)),
+                        ("ph", Json::str("X")),
+                        ("ts", Json::num(cur)),
+                        ("dur", Json::num(d)),
+                        ("pid", Json::num(2.0)),
+                        ("tid", Json::num(tid as f64)),
+                        ("args", args.clone()),
+                    ]));
+                    cur += d;
+                }
+            }
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_hands_out_noop_handles() {
+        let r = Recorder::new(8);
+        let h = r.begin(SpanKind::Request, "req-x");
+        assert!(!h.active());
+        h.mark(Stage::Submitted); // no-op, must not panic
+        r.record(&h);
+        assert_eq!(r.snapshot().len(), 0);
+    }
+
+    #[test]
+    fn stages_tile_the_lifetime() {
+        let r = Recorder::new(8);
+        r.set_enabled(true);
+        let h = r.begin(SpanKind::Request, "req-1");
+        h.set_task("rte_s");
+        for s in [
+            Stage::Submitted,
+            Stage::Flushed,
+            Stage::ExecStart,
+            Stage::Replied,
+            Stage::Responded,
+        ] {
+            h.mark(s);
+        }
+        h.set_status(200);
+        r.record(&h);
+        let spans = r.snapshot();
+        assert_eq!(spans.len(), 1);
+        let sp = &spans[0];
+        assert!(sp.complete_chain());
+        let sum: u64 = (0..5).map(|i| sp.stage_us(i).unwrap()).sum();
+        assert_eq!(sum, sp.total_us());
+        let j = sp.to_json();
+        assert_eq!(j.at("task").as_str(), Some("rte_s"));
+        assert_eq!(j.at("complete").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn ring_keeps_only_capacity() {
+        let r = Recorder::new(4);
+        r.set_enabled(true);
+        for i in 0..37 {
+            let h = r.begin(SpanKind::Request, format!("req-{i}"));
+            h.mark(Stage::Responded);
+            r.record(&h);
+        }
+        assert_eq!(r.snapshot().len(), 4);
+        assert_eq!(r.recorded(), 37);
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let r = Recorder::new(4);
+        r.set_enabled(true);
+        let h = r.begin(SpanKind::Request, "req-ct");
+        for s in [
+            Stage::Submitted,
+            Stage::Flushed,
+            Stage::ExecStart,
+            Stage::Replied,
+            Stage::Responded,
+        ] {
+            h.mark(s);
+        }
+        r.record(&h);
+        let spans: Vec<Json> = r.snapshot().iter().map(|s| s.to_json()).collect();
+        let ct = chrome_trace(&spans);
+        let events = ct.at("traceEvents").as_arr().unwrap();
+        // one enclosing event + five stage events
+        assert_eq!(events.len(), 6);
+        for e in events {
+            assert!(e.at("ts").as_f64().is_some());
+            assert!(e.at("dur").as_f64().is_some());
+        }
+    }
+}

@@ -51,6 +51,7 @@ use anyhow::{bail, Context, Result};
 use super::kernels as k;
 use super::pool::{self, SendPtr};
 use super::workspace::Workspace;
+use crate::obs::prof;
 use crate::runtime::fused::{self, FusedSegment, FusedTaskBank, RowOutput};
 use crate::runtime::manifest::{ExeSpec, LeafSpec, ModelDims};
 use crate::util::tensor::{Data, DType, Tensor};
@@ -487,6 +488,7 @@ fn adapter_apply_raw(
     if gate == 0.0 {
         return;
     }
+    let _p = prof::ctx("adapter");
     let r = x_sub.len() / d;
     let mut h = ws.take(r * m);
     k::matmul_into(x_sub, w_down, &mut h, r, d, m);
@@ -1302,6 +1304,7 @@ fn run_fwd(
     };
     let hidden_buf = encode_infer(g, &p, &bin, with_adapters, m, gates, ws)?;
     let hidden = &hidden_buf;
+    let _head = prof::ctx("head");
     let result = match spec.kind.as_str() {
         "cls" => {
             let cls = gather_cls_rows(g, hidden);
@@ -1561,6 +1564,7 @@ pub(crate) fn run_fused(
         ws.give(x2);
 
         // heads: gathered per segment, decoded per row by the segment's kind
+        let _head = prof::ctx("head");
         let mut out = Vec::with_capacity(b);
         let mut row0 = 0usize;
         for sg in segments {

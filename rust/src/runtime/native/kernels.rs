@@ -35,6 +35,7 @@
 use std::cell::RefCell;
 
 use super::pool::{self, Pool, SendPtr};
+use crate::obs::prof;
 
 /// `sqrt(2/π)` for the tanh-form GELU.
 pub const SQRT_2_OVER_PI: f32 = 0.797_884_6;
@@ -258,16 +259,19 @@ pub fn matmul_nt_into_on(
 
 /// `out[n,m] = a[n,k] @ b[k,m]` into a caller buffer (global pool).
 pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
+    let _p = prof::scope("gemm");
     matmul_into_on(pool::global(), a, b, out, n, k, m);
 }
 
 /// `out[k,m] = a[n,k]ᵀ @ b[n,m]` (gradient of weights: `xᵀ·dy`).
 pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
+    let _p = prof::scope("gemm");
     matmul_tn_into_on(pool::global(), a, b, out, n, k, m);
 }
 
 /// `out[n,m] = a[n,k] @ b[m,k]ᵀ` (gradient of inputs: `dy·Wᵀ`).
 pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
+    let _p = prof::scope("gemm");
     matmul_nt_into_on(pool::global(), a, b, out, n, k, m);
 }
 
@@ -483,6 +487,7 @@ pub fn ln_bwd(
 /// LayerNorm forward without a tape into a caller buffer (serving path).
 /// Same math as [`ln_fwd`].
 pub fn ln_apply_into(x: &[f32], gamma: &[f32], beta: &[f32], d: usize, eps: f32, out: &mut [f32]) {
+    let _p = prof::scope("ln");
     debug_assert_eq!(out.len(), x.len());
     let rows = x.len() / d;
     for r in 0..rows {
@@ -517,6 +522,7 @@ pub fn add_ln_into(
     eps: f32,
     out: &mut [f32],
 ) {
+    let _p = prof::scope("ln");
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(out.len(), a.len());
     let rows = a.len() / d;
@@ -616,6 +622,7 @@ pub fn attention_fwd(
     h: usize,
     dh: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    let _p = prof::scope("attention");
     let alpha = 1.0 / (dh as f32).sqrt();
     let mut probs = vec![0.0f32; b * h * s * s];
     let mut ctx = vec![0.0f32; b * s * d];
@@ -686,6 +693,7 @@ pub fn attention_ctx_into(
     dh: usize,
     ctx: &mut [f32],
 ) {
+    let _p = prof::scope("attention");
     debug_assert_eq!(ctx.len(), b * s * d);
     let alpha = 1.0 / (dh as f32).sqrt();
     let ctx_p = SendPtr(ctx.as_mut_ptr());

@@ -195,7 +195,11 @@ pub fn configured_threads() -> usize {
 /// use with [`configured_threads`] ways.
 pub fn global() -> &'static Pool {
     static GLOBAL: OnceLock<Pool> = OnceLock::new();
-    GLOBAL.get_or_init(|| Pool::new(configured_threads()))
+    GLOBAL.get_or_init(|| {
+        let n = configured_threads();
+        crate::log_debug!("pool", "native worker pool started threads={n}");
+        Pool::new(n)
+    })
 }
 
 /// A `*mut f32` that can cross thread boundaries; used by kernels whose

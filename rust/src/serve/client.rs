@@ -98,6 +98,22 @@ impl Client {
         self.expect_ok("GET", "/metrics", None)
     }
 
+    /// `GET /metrics?format=prometheus` — the text exposition body.
+    pub fn metrics_prometheus(&mut self) -> Result<String> {
+        http::write_request(&mut self.writer, "GET", "/metrics?format=prometheus", None)
+            .context("writing request")?;
+        let resp = http::read_client_response(&mut self.reader)?;
+        if resp.status != 200 {
+            bail!("GET /metrics?format=prometheus: HTTP {}", resp.status);
+        }
+        String::from_utf8(resp.body).context("exposition body not utf-8")
+    }
+
+    /// `GET /trace` — recent request/cold-load/train-job spans.
+    pub fn trace(&mut self) -> Result<Json> {
+        self.expect_ok("GET", "/trace", None)
+    }
+
     /// `POST /predict` with an arbitrary request.
     pub fn predict(&mut self, req: &PredictRequest) -> Result<PredictResponse> {
         let j = self.expect_ok("POST", "/predict", Some(&req.to_json()))?;

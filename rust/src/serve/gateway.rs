@@ -45,6 +45,8 @@ use super::protocol::{
 use super::registry;
 use crate::coordinator::server::{Request, Server, ServerMetrics};
 use crate::data::grammar::PAD;
+use crate::obs::prom::Prom;
+use crate::obs::trace::{self, SpanKind, Stage};
 use crate::runtime::Runtime;
 use crate::store::AdapterStore;
 use crate::tokenizer::Tokenizer;
@@ -137,6 +139,28 @@ impl LatencyHist {
             ("max_ms", Json::num(self.max_s * 1e3)),
         ])
     }
+
+    /// Total of recorded values (seconds) — Prometheus `_sum`.
+    pub fn sum_s(&self) -> f64 {
+        self.sum_s
+    }
+
+    /// Cumulative `(upper_bound_s, count ≤ bound)` pairs for the
+    /// Prometheus `_bucket` series. Only buckets that gained samples are
+    /// emitted (cumulative counts stay exact; a subset of `le` bounds is
+    /// valid exposition), keeping the document proportional to the
+    /// latency spread rather than [`HIST_BUCKETS`].
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                acc += c;
+                out.push((HIST_MIN_S * HIST_RATIO.powi(i as i32 + 1), acc));
+            }
+        }
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -153,6 +177,12 @@ pub struct GatewayConfig {
     pub max_inflight: usize,
     /// How long a predict waits for its coordinator reply before `504`.
     pub reply_timeout: Duration,
+    /// Predicts slower than this end-to-end log a `warn` line carrying
+    /// the request id (CLI `--slow-ms`).
+    pub slow: Duration,
+    /// Record request / cold-load spans into the process trace ring
+    /// (`obs::trace`), exported at `GET /trace`.
+    pub trace: bool,
 }
 
 impl Default for GatewayConfig {
@@ -162,6 +192,8 @@ impl Default for GatewayConfig {
             http: HttpConfig::default(),
             max_inflight: 256,
             reply_timeout: Duration::from_secs(30),
+            slow: Duration::from_secs(1),
+            trace: false,
         }
     }
 }
@@ -235,6 +267,9 @@ impl Gateway {
         trainer: Option<Arc<TrainService>>,
         cfg: GatewayConfig,
     ) -> Result<Gateway> {
+        if cfg.trace {
+            trace::global().set_enabled(true);
+        }
         let tok = Tokenizer::new(rt.manifest.dims.vocab);
         let state = Arc::new(GatewayState {
             server,
@@ -319,20 +354,42 @@ impl Drop for InflightGuard<'_> {
 
 impl Handler for GatewayState {
     fn handle(&self, req: &HttpRequest) -> HttpResponse {
-        match (req.method.as_str(), req.path.as_str()) {
+        // Request id: honor `X-Request-Id`, mint one otherwise. Every
+        // response — including 404/503 error shapes — echoes it back, so
+        // a client log line and a gateway log line always correlate.
+        let rid = match req.header("x-request-id") {
+            Some(v) if !v.trim().is_empty() => v.trim().to_string(),
+            _ => trace::global().gen_rid(),
+        };
+        let (path, query) = match req.path.split_once('?') {
+            Some((p, q)) => (p, Some(q)),
+            None => (req.path.as_str(), None),
+        };
+        let resp = match (req.method.as_str(), path) {
             ("GET", "/health") => self.health(),
             ("GET", "/tasks") => self.task_list(),
-            ("GET", "/metrics") => self.metrics(),
-            ("POST", "/predict") | ("POST", "/predict_ids") => self.predict(req),
+            ("GET", "/metrics") => {
+                let prom = query
+                    .map(|q| q.split('&').any(|kv| kv == "format=prometheus"))
+                    .unwrap_or(false);
+                if prom {
+                    self.metrics_prometheus()
+                } else {
+                    self.metrics()
+                }
+            }
+            ("GET", "/trace") => self.trace_spans(),
+            ("POST", "/predict") | ("POST", "/predict_ids") => self.predict(req, &rid),
             ("POST", "/tasks") => self.register(req),
             ("POST", "/train") => self.train_submit(req),
             ("GET", "/train") => self.train_list(),
-            ("GET", path) if path.starts_with("/train/") => {
-                self.train_status(&path["/train/".len()..])
+            ("GET", p) if p.starts_with("/train/") => {
+                self.train_status(&p["/train/".len()..])
             }
             ("GET" | "POST", _) => HttpResponse::error(404, "no such route"),
             _ => HttpResponse::error(405, "method not allowed"),
-        }
+        };
+        resp.with_header("x-request-id", &rid)
     }
 }
 
@@ -453,11 +510,207 @@ impl GatewayState {
         HttpResponse::json(200, &j)
     }
 
-    fn predict(&self, req: &HttpRequest) -> HttpResponse {
+    /// `GET /metrics?format=prometheus`: the same counters/histograms as
+    /// the JSON endpoint, rendered as Prometheus text exposition from the
+    /// same atomic snapshot.
+    fn metrics_prometheus(&self) -> HttpResponse {
+        let mut p = Prom::new();
+        let s = &self.stats;
+        p.counter(
+            "adapterbert_requests_served_total",
+            "Predicts answered 200.",
+            &[],
+            s.served.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "adapterbert_admission_rejected_total",
+            "Predicts answered 503 by the admission window.",
+            &[],
+            s.admission_rejected.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "adapterbert_backpressure_rejected_total",
+            "Predicts answered 503 by router backpressure.",
+            &[],
+            s.backpressure_rejected.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "adapterbert_timeouts_total",
+            "Predicts answered 504.",
+            &[],
+            s.timeouts.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "adapterbert_errors_total",
+            "Predicts answered 500/503 by faults (cold-load failures, drops).",
+            &[],
+            s.errors.load(Ordering::Relaxed) as f64,
+        );
+        p.gauge(
+            "adapterbert_inflight_requests",
+            "Predicts inside the admission window right now.",
+            &[],
+            self.inflight.load(Ordering::SeqCst) as f64,
+        );
+        p.gauge(
+            "adapterbert_draining",
+            "1 while the server refuses new work during shutdown.",
+            &[],
+            if self.server.is_draining() { 1.0 } else { 0.0 },
+        );
+        {
+            let per_task = s.per_task.lock().unwrap();
+            for (task, hist) in per_task.iter() {
+                p.histogram(
+                    "adapterbert_request_duration_seconds",
+                    "End-to-end predict latency by task.",
+                    &[("task", task)],
+                    &hist.cumulative(),
+                    hist.sum_s(),
+                    hist.count(),
+                );
+            }
+        }
+        let snap = self.server.metrics_snapshot();
+        let coord = snap.server;
+        p.counter(
+            "adapterbert_coordinator_requests_total",
+            "Requests executed by the coordinator.",
+            &[],
+            coord.requests as f64,
+        );
+        p.counter(
+            "adapterbert_coordinator_batches_total",
+            "Batches flushed to executors.",
+            &[],
+            coord.batches as f64,
+        );
+        p.counter(
+            "adapterbert_coordinator_fused_batches_total",
+            "Mixed multi-task batches executed by the fused engine.",
+            &[],
+            coord.fused_batches as f64,
+        );
+        p.gauge(
+            "adapterbert_coordinator_mean_occupancy",
+            "Mean rows per executed batch.",
+            &[],
+            coord.mean_occupancy(),
+        );
+        p.counter(
+            "adapterbert_router_rejected_total",
+            "Submits refused by the bounded router queue.",
+            &[],
+            self.server.rejected.load(Ordering::Relaxed) as f64,
+        );
+        let cache = &snap.cache;
+        p.gauge(
+            "adapterbert_cache_resident_banks",
+            "Adapter banks resident in memory.",
+            &[],
+            cache.resident as f64,
+        );
+        p.gauge(
+            "adapterbert_cache_resident_bytes",
+            "Bytes of adapter banks resident in memory.",
+            &[],
+            cache.resident_bytes as f64,
+        );
+        if let Some(b) = cache.budget_bytes {
+            p.gauge(
+                "adapterbert_cache_budget_bytes",
+                "Byte budget for resident adapter banks.",
+                &[],
+                b as f64,
+            );
+        }
+        p.gauge(
+            "adapterbert_cache_registered_tasks",
+            "Tasks in the coordinator directory (resident or evicted).",
+            &[],
+            snap.registered as f64,
+        );
+        p.counter("adapterbert_cache_hits_total", "Residency hits.", &[], cache.hits as f64);
+        p.counter("adapterbert_cache_misses_total", "Residency misses.", &[], cache.misses as f64);
+        p.counter(
+            "adapterbert_cache_evictions_total",
+            "Banks evicted by the byte budget.",
+            &[],
+            cache.evictions as f64,
+        );
+        p.counter(
+            "adapterbert_cache_cold_loads_total",
+            "Cold loads that produced a resident bank.",
+            &[],
+            cache.cold_loads as f64,
+        );
+        p.counter(
+            "adapterbert_cache_load_errors_total",
+            "Cold loads that failed at the store.",
+            &[],
+            cache.load_errors as f64,
+        );
+        let rec = trace::global();
+        p.gauge(
+            "adapterbert_trace_enabled",
+            "1 while request tracing records spans.",
+            &[],
+            if rec.enabled() { 1.0 } else { 0.0 },
+        );
+        p.counter(
+            "adapterbert_trace_spans_total",
+            "Spans recorded into the trace ring since start.",
+            &[],
+            rec.recorded() as f64,
+        );
+        HttpResponse::text(200, "text/plain; version=0.0.4", p.finish())
+    }
+
+    /// `GET /trace`: the trace ring's retained spans as JSON (newest
+    /// window; see `obs::trace` for the span schema).
+    fn trace_spans(&self) -> HttpResponse {
+        let rec = trace::global();
+        let spans: Vec<Json> = rec.snapshot().iter().map(|s| s.to_json()).collect();
+        HttpResponse::json(
+            200,
+            &Json::obj(vec![
+                ("enabled", Json::Bool(rec.enabled())),
+                ("capacity", Json::num(rec.capacity() as f64)),
+                ("recorded", Json::num(rec.recorded() as f64)),
+                ("spans", Json::arr(spans)),
+            ]),
+        )
+    }
+
+    /// The traced predict wrapper: opens the request span (`t0`), runs
+    /// the serving path, closes the span (`t5`) and records it, and logs
+    /// requests slower than the configured threshold with their id.
+    fn predict(&self, req: &HttpRequest, rid: &str) -> HttpResponse {
+        let recorder = trace::global();
+        let span = recorder.begin(SpanKind::Request, rid);
+        let t0 = Instant::now();
+        let resp = self.predict_traced(req, &span);
+        span.set_status(resp.status);
+        span.mark(Stage::Responded);
+        recorder.record(&span);
+        let elapsed = t0.elapsed();
+        if elapsed >= self.cfg.slow {
+            crate::log_warn!(
+                "gateway",
+                "slow request rid={rid} status={} elapsed_ms={:.1}",
+                resp.status,
+                elapsed.as_secs_f64() * 1e3
+            );
+        }
+        resp
+    }
+
+    fn predict_traced(&self, req: &HttpRequest, span: &trace::TraceHandle) -> HttpResponse {
         let preq = match req.json_body().and_then(|j| PredictRequest::from_json(&j)) {
             Ok(p) => p,
             Err(e) => return HttpResponse::error(400, &format!("{e:#}")),
         };
+        span.set_task(&preq.task);
         if self.server.task_info(&preq.task).is_none() {
             return HttpResponse::error(
                 404,
@@ -482,7 +735,14 @@ impl GatewayState {
         // fault, torn bank) answers 503 for *this task only* — the caller
         // can retry once the store heals.
         if !self.server.is_resident(&preq.task) {
-            if let Err(e) = self.server.prefetch(&preq.task) {
+            let recorder = trace::global();
+            let cold = recorder.begin(SpanKind::ColdLoad, span.rid().unwrap_or(""));
+            cold.set_task(&preq.task);
+            let loaded = self.server.prefetch(&preq.task);
+            cold.set_status(if loaded.is_ok() { 200 } else { 503 });
+            cold.mark(Stage::Responded);
+            recorder.record(&cold);
+            if let Err(e) = loaded {
                 self.stats.errors.fetch_add(1, Ordering::Relaxed);
                 return HttpResponse::error(
                     503,
@@ -502,7 +762,11 @@ impl GatewayState {
             attn_mask,
             reply,
             submitted: Instant::now(),
+            trace: span.clone(),
         };
+        // admission ends where the router queue begins; marked before the
+        // hand-off so a fast router can never stamp `queue` first
+        span.mark(Stage::Submitted);
         if self.server.submit(creq).is_err() {
             self.stats.backpressure_rejected.fetch_add(1, Ordering::Relaxed);
             return HttpResponse::error(503, "router queue full, retry");

@@ -66,21 +66,40 @@ impl HttpRequest {
     }
 }
 
-/// One response to serialize. Always `application/json` in this protocol.
+/// One response to serialize. `application/json` unless a `content-type`
+/// entry in `headers` overrides it (the Prometheus endpoint does).
 #[derive(Debug)]
 pub struct HttpResponse {
     pub status: u16,
     pub body: Vec<u8>,
+    /// Extra headers written verbatim (e.g. `x-request-id`); a
+    /// `content-type` entry replaces the JSON default.
+    pub headers: Vec<(String, String)>,
 }
 
 impl HttpResponse {
     pub fn json(status: u16, j: &Json) -> HttpResponse {
-        HttpResponse { status, body: j.to_string().into_bytes() }
+        HttpResponse { status, body: j.to_string().into_bytes(), headers: Vec::new() }
+    }
+
+    /// A non-JSON body (Prometheus text exposition).
+    pub fn text(status: u16, content_type: &str, body: String) -> HttpResponse {
+        HttpResponse {
+            status,
+            body: body.into_bytes(),
+            headers: vec![("content-type".to_string(), content_type.to_string())],
+        }
     }
 
     /// `{"error": msg}` with the given status.
     pub fn error(status: u16, msg: &str) -> HttpResponse {
         Self::json(status, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+
+    /// Append a header (builder style).
+    pub fn with_header(mut self, name: &str, value: &str) -> HttpResponse {
+        self.headers.push((name.to_ascii_lowercase(), value.to_string()));
+        self
     }
 }
 
@@ -225,7 +244,17 @@ pub fn write_response(
     keep_alive: bool,
 ) -> io::Result<()> {
     write!(w, "HTTP/1.1 {} {}\r\n", resp.status, status_text(resp.status))?;
-    write!(w, "content-type: application/json\r\n")?;
+    let custom_ct = resp
+        .headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-type"))
+        .map(|(_, v)| v.as_str());
+    write!(w, "content-type: {}\r\n", custom_ct.unwrap_or("application/json"))?;
+    for (k, v) in &resp.headers {
+        if !k.eq_ignore_ascii_case("content-type") {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+    }
     write!(w, "content-length: {}\r\n", resp.body.len())?;
     let conn = if keep_alive { "keep-alive" } else { "close" };
     write!(w, "connection: {conn}\r\n\r\n")?;
@@ -253,11 +282,21 @@ pub fn write_request(
     w.flush()
 }
 
-/// A client-side view of one response: status + body.
+/// A client-side view of one response: status + headers + body.
 #[derive(Debug)]
 pub struct ClientResponse {
     pub status: u16,
+    /// Response headers, names lowercased.
+    pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// Header value by (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
 }
 
 /// Read one response (client side).
@@ -273,6 +312,7 @@ pub fn read_client_response(r: &mut impl BufRead) -> Result<ClientResponse> {
         .parse()
         .context("bad status code")?;
     let mut content_length = 0usize;
+    let mut headers = Vec::new();
     loop {
         let line = match read_line(r, MAX_HEAD_BYTES)? {
             LineOutcome::Line(l) => l,
@@ -283,9 +323,12 @@ pub fn read_client_response(r: &mut impl BufRead) -> Result<ClientResponse> {
         }
         let text = String::from_utf8(line).context("header not utf-8")?;
         if let Some((name, value)) = text.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
-                content_length = value.trim().parse().context("bad content-length")?;
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                content_length = value.parse().context("bad content-length")?;
             }
+            headers.push((name, value));
         }
     }
     if content_length > MAX_BODY_BYTES {
@@ -293,7 +336,7 @@ pub fn read_client_response(r: &mut impl BufRead) -> Result<ClientResponse> {
     }
     let mut body = vec![0u8; content_length];
     r.read_exact(&mut body).context("reading response body")?;
-    Ok(ClientResponse { status, body })
+    Ok(ClientResponse { status, headers, body })
 }
 
 // ---------------------------------------------------------------------------
@@ -395,7 +438,7 @@ impl HttpServer {
                                 Err(e) => {
                                     // connection-level failures are the
                                     // client's problem — log and move on
-                                    eprintln!("http connection error: {e:#}");
+                                    crate::log_warn!("http", "connection error err={e:#}");
                                 }
                             }
                         }
@@ -625,6 +668,24 @@ mod tests {
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/tasks");
         assert_eq!(req.body, br#"{"a":1}"#);
+    }
+
+    #[test]
+    fn custom_headers_roundtrip() {
+        let resp = HttpResponse::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
+            .with_header("X-Request-Id", "req-1-2");
+        let mut wire = Vec::new();
+        write_response(&mut wire, &resp, true).unwrap();
+        let parsed = read_client_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(parsed.header("x-request-id"), Some("req-1-2"));
+        assert_eq!(parsed.header("X-REQUEST-ID"), Some("req-1-2"));
+
+        let prom = HttpResponse::text(200, "text/plain; version=0.0.4", "up 1\n".into());
+        let mut wire = Vec::new();
+        write_response(&mut wire, &prom, false).unwrap();
+        let s = String::from_utf8(wire).unwrap();
+        assert!(s.contains("content-type: text/plain; version=0.0.4"));
+        assert!(!s.contains("application/json"));
     }
 
     #[test]

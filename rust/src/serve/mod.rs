@@ -13,7 +13,12 @@
 //!   per-task latency histograms with p50/p95/p99 at `GET /metrics` (plus
 //!   the paged adapter-cache residency section), the cold-load seam that
 //!   pages evicted banks back in before a predict enters the router,
-//!   graceful drain on shutdown;
+//!   graceful drain on shutdown. Observability rides here too: every
+//!   response echoes an `X-Request-Id` (honored or minted), predicts
+//!   open per-stage spans in the `obs::trace` ring (`GET /trace`, on
+//!   with `GatewayConfig::trace` / `ADAPTERBERT_TRACE=1`), slow requests
+//!   warn-log by id, and `GET /metrics?format=prometheus` renders the
+//!   same snapshot as Prometheus text exposition (`obs::prom`);
 //! * `registry` — `POST /tasks` hot registration (append the bank to the
 //!   `AdapterStore` and swap it into the executors **while traffic for
 //!   other tasks keeps flowing**) and the `POST /train` wire→job

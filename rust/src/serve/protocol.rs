@@ -12,6 +12,12 @@
 //! | `GET  /train`    | —                          | `{"jobs":[TrainJobStatus…]}` |
 //! | `GET  /train/<id>` | —                        | [`TrainJobStatus`]  |
 //! | `GET  /metrics`  | —                          | per-task latency histograms + [`CacheMetrics`] (raw JSON) |
+//! | `GET  /metrics?format=prometheus` | —         | Prometheus text exposition (`obs::prom`) |
+//! | `GET  /trace`    | —                          | recent spans from the `obs::trace` ring |
+//!
+//! Every response carries an `x-request-id` header: the caller's
+//! `X-Request-Id` if supplied, a gateway-minted id otherwise — 404/503
+//! error shapes included.
 //!
 //! Trained banks travel as lowercase hex of `NamedTensors::to_bytes` —
 //! byte-exact, so a hot-registered bank reloads into the identical

@@ -146,7 +146,7 @@ impl AdapterStore {
         match self.fetch_latest(task) {
             Ok(v) => v,
             Err(e) => {
-                eprintln!("warning: store: latest bank for {task}: {e:#}");
+                crate::log_warn!("store", "latest bank for {task}: {e:#}");
                 None
             }
         }
@@ -193,9 +193,7 @@ impl AdapterStore {
         match entry.map(resolve_entry).transpose() {
             Ok(v) => v,
             Err(e) => {
-                eprintln!(
-                    "warning: store: bank {task} v{version}: {e:#}"
-                );
+                crate::log_warn!("store", "bank {task} v{version}: {e:#}");
                 None
             }
         }
@@ -264,8 +262,9 @@ impl AdapterStore {
                 match load_version(&p) {
                     Ok(entry) => versions.push((entry.meta.version, entry)),
                     Err(e) => {
-                        eprintln!(
-                            "warning: store {task}: quarantining {p:?}: {e:#}"
+                        crate::log_warn!(
+                            "store",
+                            "{task}: quarantining {p:?}: {e:#}"
                         );
                     }
                 }
@@ -284,10 +283,11 @@ impl AdapterStore {
                 .enumerate()
                 .all(|(i, (v, _))| *v == i + 1);
             if !dense && !versions.is_empty() {
-                eprintln!(
-                    "warning: store {task}: non-dense versions on disk \
-                     ({:?}) — quarantined or externally removed banks leave \
-                     holes; surviving versions keep their numbers",
+                crate::log_warn!(
+                    "store",
+                    "{task}: non-dense versions on disk ({:?}) — \
+                     quarantined or externally removed banks leave holes; \
+                     surviving versions keep their numbers",
                     versions.iter().map(|(v, _)| *v).collect::<Vec<_>>()
                 );
             }

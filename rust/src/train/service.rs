@@ -53,6 +53,7 @@ use crate::data::grammar::World;
 use crate::data::tasks::{generate, Metric, TaskKind, TaskSpec};
 use crate::eval::TaskModel;
 use crate::model::params::NamedTensors;
+use crate::obs::trace::{self, SpanKind, Stage};
 use crate::runtime::Runtime;
 use crate::store::{validate_task_name, write_atomic};
 use crate::util::json::Json;
@@ -312,7 +313,9 @@ impl TrainService {
                 .and_then(|j| job_spec_from_descriptor(&j))
             {
                 Ok(spec) => found.push((id, spec)),
-                Err(e) => eprintln!("warning: skipping job descriptor {p:?}: {e:#}"),
+                Err(e) => {
+                    crate::log_warn!("train", "skipping job descriptor {p:?}: {e:#}")
+                }
             }
         }
         found.sort_by_key(|(id, _)| *id);
@@ -394,9 +397,20 @@ fn worker_loop(inner: &Arc<Inner>) {
                 st = guard;
             }
         };
-        if let Err(e) = run_job(inner, id) {
+        let span = trace::global().begin(SpanKind::TrainJob, format!("job-{id}"));
+        {
+            let st = inner.state.lock().unwrap();
+            if let Some(rec) = st.jobs.get(&id) {
+                span.set_task(&rec.task);
+            }
+        }
+        let outcome = run_job(inner, id);
+        span.set_status(if outcome.is_ok() { 200 } else { 500 });
+        span.mark(Stage::Responded);
+        trace::global().record(&span);
+        if let Err(e) = outcome {
             let msg = format!("{e:#}");
-            eprintln!("training job {id} failed: {msg}");
+            crate::log_error!("train", "job {id} failed: {msg}");
             let mut st = inner.state.lock().unwrap();
             if let Some(rec) = st.jobs.get_mut(&id) {
                 rec.state = JobState::Failed;
@@ -557,8 +571,9 @@ fn load_checkpoint(inner: &Inner, id: u64) -> Option<TrainCheckpoint> {
     match TrainCheckpoint::from_bytes(&bytes) {
         Ok(ck) => Some(ck),
         Err(e) => {
-            eprintln!(
-                "warning: job {id}: unreadable checkpoint {path:?} ({e:#}); \
+            crate::log_warn!(
+                "train",
+                "job {id}: unreadable checkpoint {path:?} ({e:#}); \
                  restarting from scratch"
             );
             None

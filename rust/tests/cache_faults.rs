@@ -34,6 +34,7 @@ use adapterbert::data::grammar::World;
 use adapterbert::data::tasks::{self, TaskKind, TaskSpec};
 use adapterbert::eval::{predict_split, Predictions, TaskModel};
 use adapterbert::model::params::NamedTensors;
+use adapterbert::obs::trace::TraceHandle;
 use adapterbert::runtime::Runtime;
 use adapterbert::serve::{Client, Gateway, GatewayConfig, PredictRequest};
 use adapterbert::store::{AdapterStore, BankMeta, BankSource};
@@ -134,6 +135,7 @@ fn serve_one(
             attn_mask,
             reply,
             submitted: Instant::now(),
+            trace: TraceHandle::none(),
         })
         .unwrap();
     rx.recv_timeout(Duration::from_secs(60)).unwrap().prediction

@@ -33,6 +33,7 @@ use adapterbert::eval::{
     fused_bank, fwd_param_banks, predict_split, Predictions, TaskModel,
 };
 use adapterbert::model::params::NamedTensors;
+use adapterbert::obs::trace::TraceHandle;
 use adapterbert::runtime::{
     Bank, Executable, FusedSegment, FusedTaskBank, RowOutput, Runtime,
 };
@@ -478,6 +479,7 @@ fn fused_server_occupancy_beats_per_task_on_same_trace() {
                         attn_mask: mask,
                         reply,
                         submitted: Instant::now(),
+                        trace: TraceHandle::none(),
                     })
                     .unwrap();
                 pending.push((ti, row, rx));
@@ -588,6 +590,7 @@ fn fused_hot_registration_is_gatherable_immediately() {
                             attn_mask: mask.clone(),
                             reply: reply.clone(),
                             submitted: Instant::now(),
+                            trace: TraceHandle::none(),
                         })
                         .unwrap();
                     sent += 1;
@@ -620,6 +623,7 @@ fn fused_hot_registration_is_gatherable_immediately() {
                 attn_mask: mask,
                 reply,
                 submitted: Instant::now(),
+                trace: TraceHandle::none(),
             })
             .unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();

@@ -24,6 +24,7 @@ use adapterbert::data::grammar::World;
 use adapterbert::data::tasks::{self, TaskKind, TaskSpec};
 use adapterbert::eval::{predict_split, Predictions, TaskModel};
 use adapterbert::model::params::NamedTensors;
+use adapterbert::obs::trace::TraceHandle;
 use adapterbert::runtime::Runtime;
 use adapterbert::serve::{Client, Gateway, GatewayConfig, RegisterRequest};
 use adapterbert::store::AdapterStore;
@@ -515,6 +516,7 @@ fn stream_hot_installs_into_live_server() {
                 .collect(),
             reply,
             submitted: Instant::now(),
+            trace: TraceHandle::none(),
         })
         .unwrap();
     let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
@@ -531,9 +533,122 @@ fn stream_hot_installs_into_live_server() {
             attn_mask: vec![1.0; seq],
             reply: reply2,
             submitted: Instant::now(),
+            trace: TraceHandle::none(),
         })
         .is_err());
     let server = Arc::try_unwrap(server).ok().expect("no other refs");
     let metrics = server.shutdown();
     assert_eq!(metrics.requests, 1);
+}
+
+/// PR 7 observability: request ids are honored/minted and echoed on every
+/// response (including error shapes), traced requests land in the span
+/// ring with complete stage chains at `GET /trace`, and the Prometheus
+/// text exposition at `GET /metrics?format=prometheus` passes the
+/// line-format check.
+#[test]
+fn gateway_observability_surfaces() {
+    use std::io::Write as _;
+
+    use adapterbert::obs::prom;
+    use adapterbert::serve::http::read_client_response;
+
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let (model, data, val) = train_cls(&rt, &base, "gwobs", 25);
+    let store = Arc::new(AdapterStore::in_memory());
+    store.register("gwobs", &model, val).unwrap();
+    let mut classes = BTreeMap::new();
+    classes.insert("gwobs".to_string(), 2);
+    let server = quick_server(&rt, &store, &base, &classes);
+    let gw = Gateway::start(
+        rt.clone(),
+        store.clone(),
+        server,
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            trace: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = gw.local_addr().to_string();
+
+    // raw socket so the request headers are under test control
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    // a client-supplied X-Request-Id echoes back verbatim — on errors too
+    for (path, want) in [("/health", 200u16), ("/no_such_route", 404)] {
+        write!(
+            writer,
+            "GET {path} HTTP/1.1\r\nhost: t\r\nx-request-id: rid-echo-7\r\n\
+             content-length: 0\r\nconnection: keep-alive\r\n\r\n"
+        )
+        .unwrap();
+        writer.flush().unwrap();
+        let resp = read_client_response(&mut reader).unwrap();
+        assert_eq!(resp.status, want, "{path}");
+        assert_eq!(resp.header("x-request-id"), Some("rid-echo-7"), "{path}");
+    }
+    // without the header the gateway mints a non-empty id
+    write!(
+        writer,
+        "GET /health HTTP/1.1\r\nhost: t\r\ncontent-length: 0\r\n\
+         connection: keep-alive\r\n\r\n"
+    )
+    .unwrap();
+    writer.flush().unwrap();
+    let resp = read_client_response(&mut reader).unwrap();
+    let minted = resp.header("x-request-id").expect("gateway mints an id");
+    assert!(!minted.trim().is_empty(), "minted id must be non-empty");
+    drop(reader);
+    drop(writer);
+
+    // traced traffic → spans with complete stage chains at GET /trace
+    let mut client = Client::connect(&addr).unwrap();
+    let rows = 8usize.min(data.test.n);
+    for row in 0..rows {
+        client.predict_ids("gwobs", data.test.row_tokens(row)).unwrap();
+    }
+    let t = client.trace().unwrap();
+    assert_eq!(t.at("enabled").as_bool(), Some(true));
+    let spans = t.at("spans").as_arr().unwrap();
+    // the ring is process-global, so other tests' spans may interleave —
+    // judge only this test's task
+    let mine: Vec<&Json> = spans
+        .iter()
+        .filter(|s| {
+            s.at("task").as_str() == Some("gwobs")
+                && s.at("kind").as_str() == Some("request")
+                && s.at("status").as_usize() == Some(200)
+        })
+        .collect();
+    assert!(mine.len() >= rows, "{} spans for {rows} requests", mine.len());
+    for sp in &mine {
+        assert_eq!(sp.at("complete").as_f64(), Some(1.0), "complete chain");
+        assert!(!sp.at("rid").as_str().unwrap_or("").is_empty(), "span rid");
+        let total = sp.at("total_us").as_f64().unwrap();
+        let stages = sp.at("stages_us").as_obj().unwrap();
+        assert_eq!(stages.len(), 5, "all five stages present");
+        let sum: f64 = stages.values().map(|v| v.as_f64().unwrap()).sum();
+        assert_eq!(sum, total, "stage durations tile the span end-to-end");
+    }
+
+    // Prometheus text exposition parses and carries the core families
+    let body = client.metrics_prometheus().unwrap();
+    if let Err(e) = prom::check_exposition(&body) {
+        panic!("exposition rejected: {e}");
+    }
+    for needle in [
+        "# TYPE adapterbert_requests_served_total counter",
+        "adapterbert_request_duration_seconds_bucket",
+        "adapterbert_trace_spans_total",
+    ] {
+        assert!(body.contains(needle), "missing {needle:?} in exposition");
+    }
+
+    drop(client);
+    gw.shutdown().unwrap();
 }
