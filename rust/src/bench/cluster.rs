@@ -1,0 +1,542 @@
+//! `bench cluster`: scaling + failover for the router tier →
+//! `BENCH_cluster.json`.
+//!
+//! Everything runs in-process on ephemeral ports: one shared runtime
+//! and one shared in-memory `AdapterStore` back N independent
+//! `Gateway` replicas (each with its own coordinator and adapter
+//! cache) behind one `cluster::Router`. Two phases:
+//!
+//! * **scaling** — the identical closed-loop predict load is driven at
+//!   the router over 1 replica, then over N; the report records
+//!   throughput and p50/p95 per replica count plus the aggregate
+//!   speedup (CI pins a floor on it). Tasks shard across replicas via
+//!   the hash ring, so N coordinators batch independently;
+//! * **failover** — with N replicas under continuous traffic, the
+//!   replica owning the first task is shut down mid-run. Per-request
+//!   outcomes are timestamped; convergence is the time from the kill to
+//!   the *last* failed request (the router needs `fail_after` bad
+//!   signals to eject the corpse; until then some requests eat the
+//!   drain/refused window), and the post-convergence tail must be
+//!   error-free — that quiet tail is what CI asserts, together with
+//!   convergence finishing well inside the observation window.
+//!
+//! The report is schema-pinned (v1) like the other bench documents.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::loadgen::{self, LoadgenConfig};
+use crate::cluster::{HashRing, HealthPolicy, Router, RouterConfig, DEFAULT_VNODES};
+use crate::coordinator::{FlushPolicy, Server, ServerConfig};
+use crate::data::grammar::World;
+use crate::data::tasks::{self, Metric, TaskKind, TaskSpec};
+use crate::model::params::NamedTensors;
+use crate::runtime::Runtime;
+use crate::serve::{Client, ClientConfig, Gateway, GatewayConfig};
+use crate::store::AdapterStore;
+use crate::train::{self, PretrainConfig, TrainConfig};
+use crate::util::json::Json;
+
+/// Harness knobs.
+#[derive(Debug, Clone)]
+pub struct ClusterBenchConfig {
+    pub preset: String,
+    /// Replica count for the scaled phase (the baseline is always 1).
+    pub replicas: usize,
+    /// Tenant tasks trained into the shared store (≥ replicas keeps
+    /// every replica owning at least one shard in expectation).
+    pub tenants: usize,
+    /// Predict requests per scaling phase.
+    pub requests: u64,
+    /// Closed-loop client threads.
+    pub concurrency: usize,
+    /// Adapter size for the tenants.
+    pub m: usize,
+    /// MLM pre-training steps when no cached base exists.
+    pub pretrain_steps: usize,
+    /// Failover phase: traffic before the kill…
+    pub failover_warmup: Duration,
+    /// …and observation window after it.
+    pub failover_window: Duration,
+}
+
+impl Default for ClusterBenchConfig {
+    fn default() -> Self {
+        ClusterBenchConfig {
+            preset: "test".to_string(),
+            replicas: 2,
+            tenants: 4,
+            requests: 240,
+            concurrency: 4,
+            m: 8,
+            pretrain_steps: 120,
+            failover_warmup: Duration::from_millis(1500),
+            failover_window: Duration::from_secs(6),
+        }
+    }
+}
+
+/// One scaling row: the same load at a given replica count.
+#[derive(Debug, Clone)]
+pub struct ScalingRow {
+    pub replicas: usize,
+    pub requests: u64,
+    pub errors: u64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+impl ScalingRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("replicas", Json::num(self.replicas as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+        ])
+    }
+}
+
+/// The kill-one-mid-traffic phase.
+#[derive(Debug, Clone)]
+pub struct FailoverReport {
+    /// Address of the replica that was shut down.
+    pub killed: String,
+    /// Requests/errors over the whole phase (warmup + window).
+    pub requests: u64,
+    pub errors: u64,
+    /// Kill → last failed request. 0 when no request ever failed.
+    pub convergence_ms: f64,
+    pub errors_during_convergence: u64,
+    /// The tail after convergence: must be busy and error-free.
+    pub post_requests: u64,
+    pub post_errors: u64,
+    /// Router-side transition counters over the phase.
+    pub ejections: u64,
+    pub reroutes: u64,
+}
+
+impl FailoverReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("killed", Json::str(&self.killed)),
+            ("requests", Json::num(self.requests as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("convergence_ms", Json::num(self.convergence_ms)),
+            (
+                "errors_during_convergence",
+                Json::num(self.errors_during_convergence as f64),
+            ),
+            ("post_requests", Json::num(self.post_requests as f64)),
+            ("post_errors", Json::num(self.post_errors as f64)),
+            ("ejections", Json::num(self.ejections as f64)),
+            ("reroutes", Json::num(self.reroutes as f64)),
+        ])
+    }
+}
+
+/// The whole run.
+#[derive(Debug)]
+pub struct ClusterReport {
+    pub scaling: Vec<ScalingRow>,
+    /// Last row's throughput over the first row's.
+    pub speedup: f64,
+    pub failover: FailoverReport,
+}
+
+impl ClusterReport {
+    /// The `BENCH_cluster.json` document (schema v1).
+    pub fn to_json(&self, cfg: &ClusterBenchConfig) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("cluster")),
+            ("schema_version", Json::num(1.0)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("preset", Json::str(&cfg.preset)),
+                    ("replicas", Json::num(cfg.replicas as f64)),
+                    ("tenants", Json::num(cfg.tenants as f64)),
+                    ("requests", Json::num(cfg.requests as f64)),
+                    ("concurrency", Json::num(cfg.concurrency as f64)),
+                    ("m", Json::num(cfg.m as f64)),
+                    (
+                        "failover_window_s",
+                        Json::num(cfg.failover_window.as_secs_f64()),
+                    ),
+                ]),
+            ),
+            ("scaling", Json::arr(self.scaling.iter().map(ScalingRow::to_json))),
+            ("speedup", Json::num(self.speedup)),
+            ("failover", self.failover.to_json()),
+        ])
+    }
+}
+
+/// Shared fixture: runtime, base, tenants in one in-memory store.
+struct Fixture {
+    rt: Arc<Runtime>,
+    base: NamedTensors,
+    store: Arc<AdapterStore>,
+    tenants: Vec<String>,
+    classes: BTreeMap<String, usize>,
+}
+
+fn tenant_spec(name: &str, seed: u64) -> TaskSpec {
+    TaskSpec {
+        name: name.to_string(),
+        kind: TaskKind::Cls { n_classes: 2, pair: false },
+        metric: Metric::Accuracy,
+        n_train: 240,
+        n_val: 48,
+        n_test: 48,
+        purity: 0.85,
+        noise: 0.0,
+        seed,
+    }
+}
+
+fn setup(cfg: &ClusterBenchConfig) -> Result<Fixture> {
+    let rt = Arc::new(Runtime::open(Path::new("artifacts"), &cfg.preset)?);
+    let world = World::new(rt.manifest.dims.vocab, 0);
+    let base = train::load_or_pretrain(
+        &rt,
+        &world,
+        &PretrainConfig { steps: cfg.pretrain_steps, ..Default::default() },
+        Path::new(&format!("runs/base_{}.bank", cfg.preset)),
+    )?;
+    let store = Arc::new(AdapterStore::in_memory());
+    let exe = format!("cls_train_adapter_m{}", cfg.m);
+    let mut tenants = Vec::new();
+    let mut classes = BTreeMap::new();
+    for k in 0..cfg.tenants.max(1) {
+        let name = format!("shard{k:02}");
+        let data =
+            tasks::generate(&world, &tenant_spec(&name, 300 + k as u64), rt.manifest.dims.seq);
+        let res = train::train_task(&rt, &TrainConfig::new(&exe, 1e-3, 3, 0), &data, &base)?;
+        store.register_with_classes(&name, &res.model, 2, res.val_score)?;
+        classes.insert(name.clone(), 2usize);
+        tenants.push(name.clone());
+        println!("  tenant {name}: val {:.3}", res.val_score);
+    }
+    Ok(Fixture { rt, base, store, tenants, classes })
+}
+
+/// One gateway replica over the shared store, on an ephemeral port.
+fn start_replica(fx: &Fixture) -> Result<Gateway> {
+    let server = Server::start(
+        fx.rt.clone(),
+        &fx.store,
+        &fx.base,
+        &fx.classes,
+        ServerConfig {
+            flush: FlushPolicy {
+                max_batch: fx.rt.manifest.batch,
+                max_delay: Duration::from_millis(2),
+            },
+            executors: 2,
+            ..Default::default()
+        },
+    )?;
+    Gateway::start(
+        fx.rt.clone(),
+        fx.store.clone(),
+        server,
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )
+}
+
+/// Bench-speed health policy: eject a corpse within a few hundred ms so
+/// the failover window stays short.
+fn router_config() -> RouterConfig {
+    RouterConfig {
+        health: HealthPolicy {
+            interval: Duration::from_millis(100),
+            timeout: Duration::from_millis(500),
+            fail_after: 2,
+            pass_after: 2,
+        },
+        upstream: ClientConfig {
+            connect_timeout: Duration::from_millis(500),
+            read_timeout: Some(Duration::from_secs(30)),
+            retries: 0,
+            backoff: Duration::from_millis(10),
+        },
+        ..Default::default()
+    }
+}
+
+/// Poll the router's `/health` until `healthy` reaches `want`.
+fn wait_healthy(addr: &str, want: usize, timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Ok(mut c) = Client::connect(addr) {
+            if let Ok((status, j)) = c.roundtrip("GET", "/health", None) {
+                if status == 200
+                    && j.get("healthy").and_then(Json::as_usize) == Some(want)
+                {
+                    return Ok(());
+                }
+            }
+        }
+        if Instant::now() > deadline {
+            bail!("router at {addr} never reported {want} healthy replica(s)");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// One scaling measurement: n replicas behind a fresh router.
+fn scaling_phase(fx: &Fixture, cfg: &ClusterBenchConfig, n: usize) -> Result<ScalingRow> {
+    let gateways: Vec<Gateway> =
+        (0..n).map(|_| start_replica(fx)).collect::<Result<_>>()?;
+    let addrs: Vec<String> = gateways.iter().map(|g| g.local_addr().to_string()).collect();
+    let router = Router::start(addrs, router_config())?;
+    let addr = router.local_addr().to_string();
+    wait_healthy(&addr, n, Duration::from_secs(10))?;
+
+    let report = loadgen::run(&LoadgenConfig {
+        addr,
+        tasks: fx.tenants.clone(),
+        concurrency: cfg.concurrency,
+        requests: cfg.requests,
+        seed: 40 + n as u64,
+        ..Default::default()
+    })?;
+    router.shutdown();
+    for g in gateways {
+        g.shutdown()?;
+    }
+    Ok(ScalingRow {
+        replicas: n,
+        requests: report.requests,
+        errors: report.errors,
+        throughput_rps: report.throughput_rps(),
+        p50_ms: if report.all.is_empty() { 0.0 } else { report.all.pctl_s(50.0) * 1e3 },
+        p95_ms: if report.all.is_empty() { 0.0 } else { report.all.pctl_s(95.0) * 1e3 },
+    })
+}
+
+/// Kill the replica owning the first tenant mid-traffic and watch the
+/// router converge.
+fn failover_phase(fx: &Fixture, cfg: &ClusterBenchConfig) -> Result<FailoverReport> {
+    let n = cfg.replicas.max(2);
+    let mut gateways: Vec<Gateway> =
+        (0..n).map(|_| start_replica(fx)).collect::<Result<_>>()?;
+    let addrs: Vec<String> = gateways.iter().map(|g| g.local_addr().to_string()).collect();
+    let router = Router::start(addrs.clone(), router_config())?;
+    let raddr = router.local_addr().to_string();
+    wait_healthy(&raddr, n, Duration::from_secs(10))?;
+
+    // kill the replica that actually owns traffic for the first tenant,
+    // so the phase provably exercises re-routing
+    let ring = HashRing::new(&addrs, DEFAULT_VNODES);
+    let victim = ring.route(&fx.tenants[0]).expect("non-empty ring");
+    let killed = addrs[victim].clone();
+
+    let stop = AtomicBool::new(false);
+    let t0 = Instant::now();
+    let mut kill_at_s = 0.0f64;
+    // (seconds since t0, ok) per request, across all workers
+    let mut events: Vec<(f64, bool)> = Vec::new();
+    let mut worker_err: Option<anyhow::Error> = None;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..cfg.concurrency.max(2) {
+            let (stop, raddr, tenants) = (&stop, &raddr, &fx.tenants);
+            handles.push(scope.spawn(move || {
+                let mut out: Vec<(f64, bool)> = Vec::new();
+                let Ok(mut client) = Client::connect(raddr) else { return out };
+                let mut i = w;
+                while !stop.load(Ordering::Relaxed) {
+                    let task = &tenants[i % tenants.len()];
+                    i += 1;
+                    let at = t0.elapsed().as_secs_f64();
+                    match client.predict_text(task, "moresa zu kari letu") {
+                        Ok(_) => out.push((at, true)),
+                        Err(_) => {
+                            out.push((at, false));
+                            // the router connection itself should stay
+                            // up; redial defensively anyway
+                            let _ = client.reconnect();
+                        }
+                    }
+                }
+                out
+            }));
+        }
+
+        std::thread::sleep(cfg.failover_warmup);
+        kill_at_s = t0.elapsed().as_secs_f64();
+        let dead = gateways.swap_remove(victim);
+        if let Err(e) = dead.shutdown() {
+            worker_err = Some(e.context("shutting down the victim replica"));
+        }
+        std::thread::sleep(cfg.failover_window);
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            if let Ok(v) = h.join() {
+                events.extend(v);
+            }
+        }
+    });
+    if let Some(e) = worker_err {
+        return Err(e);
+    }
+    let rrep = router.shutdown();
+    for g in gateways {
+        g.shutdown()?;
+    }
+
+    let requests = events.len() as u64;
+    let errors = events.iter().filter(|(_, ok)| !ok).count() as u64;
+    // convergence: the last error after the kill bounds the re-route
+    // window; everything after it is the quiet tail CI asserts on
+    let mut last_err = kill_at_s;
+    for &(at, ok) in &events {
+        if !ok && at >= kill_at_s && at > last_err {
+            last_err = at;
+        }
+    }
+    let errors_during_convergence = events
+        .iter()
+        .filter(|&&(at, ok)| !ok && at >= kill_at_s)
+        .count() as u64;
+    let post_requests =
+        events.iter().filter(|&&(at, _)| at > last_err).count() as u64;
+    let post_errors = events
+        .iter()
+        .filter(|&&(at, ok)| !ok && at > last_err)
+        .count() as u64;
+    ensure!(
+        post_requests > 0,
+        "no traffic after convergence — widen failover_window (converged {:.0}ms \
+         into a {:.0}ms window)",
+        (last_err - kill_at_s) * 1e3,
+        cfg.failover_window.as_secs_f64() * 1e3
+    );
+    Ok(FailoverReport {
+        killed,
+        requests,
+        errors,
+        convergence_ms: (last_err - kill_at_s) * 1e3,
+        errors_during_convergence,
+        post_requests,
+        post_errors,
+        ejections: rrep.ejections,
+        reroutes: rrep.reroutes,
+    })
+}
+
+/// Run both phases.
+pub fn run(cfg: &ClusterBenchConfig) -> Result<ClusterReport> {
+    ensure!(cfg.replicas >= 1, "need at least one replica");
+    let fx = setup(cfg).context("cluster bench fixture")?;
+
+    let mut scaling = Vec::new();
+    let mut counts = vec![1usize];
+    if cfg.replicas > 1 {
+        counts.push(cfg.replicas);
+    }
+    for n in counts {
+        println!("  scaling: {} replica(s), {} requests …", n, cfg.requests);
+        let row = scaling_phase(&fx, cfg, n)?;
+        println!(
+            "    {:.1} rps, p50 {:.2} ms, p95 {:.2} ms, {} errors",
+            row.throughput_rps, row.p50_ms, row.p95_ms, row.errors
+        );
+        scaling.push(row);
+    }
+    let speedup = match (scaling.first(), scaling.last()) {
+        (Some(a), Some(b)) if a.throughput_rps > 0.0 => {
+            b.throughput_rps / a.throughput_rps
+        }
+        _ => 0.0,
+    };
+
+    println!("  failover: kill owner of {:?} mid-traffic …", fx.tenants[0]);
+    let failover = failover_phase(&fx, cfg)?;
+    println!(
+        "    converged in {:.0} ms ({} errors during, {} requests / {} errors after)",
+        failover.convergence_ms,
+        failover.errors_during_convergence,
+        failover.post_requests,
+        failover.post_errors
+    );
+
+    Ok(ClusterReport { scaling, speedup, failover })
+}
+
+/// Atomically persist the report (same contract as the other benches).
+pub fn write_report(path: &Path, report: &Json) -> Result<()> {
+    loadgen::write_report(path, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pins the BENCH_cluster.json v1 schema CI validates against.
+    #[test]
+    fn report_json_schema() {
+        let report = ClusterReport {
+            scaling: vec![
+                ScalingRow {
+                    replicas: 1,
+                    requests: 240,
+                    errors: 0,
+                    throughput_rps: 100.0,
+                    p50_ms: 8.0,
+                    p95_ms: 14.0,
+                },
+                ScalingRow {
+                    replicas: 2,
+                    requests: 240,
+                    errors: 0,
+                    throughput_rps: 185.0,
+                    p50_ms: 7.0,
+                    p95_ms: 13.0,
+                },
+            ],
+            speedup: 1.85,
+            failover: FailoverReport {
+                killed: "127.0.0.1:7701".into(),
+                requests: 900,
+                errors: 3,
+                convergence_ms: 240.0,
+                errors_during_convergence: 3,
+                post_requests: 600,
+                post_errors: 0,
+                ejections: 1,
+                reroutes: 5,
+            },
+        };
+        let cfg = ClusterBenchConfig::default();
+        let back = Json::parse(&report.to_json(&cfg).to_string()).unwrap();
+        assert_eq!(back.at("bench").as_str(), Some("cluster"));
+        assert_eq!(back.at("schema_version").as_usize(), Some(1));
+        assert_eq!(back.at("config").at("replicas").as_usize(), Some(2));
+        let rows = back.at("scaling").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        for (row, want) in rows.iter().zip([1usize, 2]) {
+            assert_eq!(row.at("replicas").as_usize(), Some(want));
+            assert!(row.at("throughput_rps").as_f64().unwrap() > 0.0);
+            assert!(row.at("p95_ms").as_f64().unwrap() > 0.0);
+            assert_eq!(row.at("errors").as_usize(), Some(0));
+        }
+        assert!(back.at("speedup").as_f64().unwrap() > 1.7);
+        let f = back.at("failover");
+        assert_eq!(f.at("killed").as_str(), Some("127.0.0.1:7701"));
+        assert_eq!(f.at("post_errors").as_usize(), Some(0));
+        assert!(f.at("post_requests").as_usize().unwrap() > 0);
+        assert!(f.at("convergence_ms").as_f64().is_some());
+        assert_eq!(f.at("ejections").as_usize(), Some(1));
+    }
+}

@@ -1,0 +1,264 @@
+//! Replica liveness: probe loop, ejection/readmission state machine.
+//!
+//! Each replica is `Healthy` or `Ejected`, with hysteresis on both
+//! edges: `fail_after` consecutive bad signals eject it (the ring
+//! spills its shard to the successor), `pass_after` consecutive good
+//! probes readmit it (the shard snaps back — the store has everything
+//! it needs to cold-load any bank it missed). A *signal* is either an
+//! active probe (`GET /health` must return 200 **and** be ready:
+//! status `ok`, not draining, store reachable) or a passive one — a
+//! forward that dies on the wire counts as a failed probe, so a crash
+//! is detected at traffic speed, not probe-interval speed.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::serve::{Client, ClientConfig};
+
+/// Probe cadence and hysteresis thresholds.
+#[derive(Debug, Clone)]
+pub struct HealthPolicy {
+    /// Time between probe rounds (every replica is probed each round).
+    pub interval: Duration,
+    /// Connect + read budget for one probe.
+    pub timeout: Duration,
+    /// Consecutive bad signals before ejection.
+    pub fail_after: u32,
+    /// Consecutive good probes before readmission.
+    pub pass_after: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            interval: Duration::from_millis(500),
+            timeout: Duration::from_millis(1000),
+            fail_after: 2,
+            pass_after: 2,
+        }
+    }
+}
+
+/// Shared liveness state: read on every routed request, written by the
+/// monitor thread and by forward-error reports. Lock-free — a request
+/// never waits on the prober.
+pub struct ClusterView {
+    nodes: Vec<String>,
+    alive: Vec<AtomicBool>,
+    consec_fail: Vec<AtomicU32>,
+    consec_pass: Vec<AtomicU32>,
+    pub ejections: AtomicU64,
+    pub readmissions: AtomicU64,
+    fail_after: u32,
+    pass_after: u32,
+}
+
+impl ClusterView {
+    pub fn new(nodes: Vec<String>, policy: &HealthPolicy) -> ClusterView {
+        let n = nodes.len();
+        ClusterView {
+            nodes,
+            // optimistic start: replicas are routable until proven dead,
+            // so a router can come up before its replicas finish booting
+            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            consec_fail: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            consec_pass: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            ejections: AtomicU64::new(0),
+            readmissions: AtomicU64::new(0),
+            fail_after: policy.fail_after.max(1),
+            pass_after: policy.pass_after.max(1),
+        }
+    }
+
+    pub fn nodes(&self) -> &[String] {
+        &self.nodes
+    }
+
+    pub fn is_alive(&self, i: usize) -> bool {
+        self.alive[i].load(Ordering::Relaxed)
+    }
+
+    pub fn alive_mask(&self) -> Vec<bool> {
+        self.alive.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.alive
+            .iter()
+            .filter(|a| a.load(Ordering::Relaxed))
+            .count()
+    }
+
+    /// A good probe: reset the fail streak; if ejected, advance toward
+    /// readmission.
+    pub fn record_pass(&self, i: usize) {
+        self.consec_fail[i].store(0, Ordering::Relaxed);
+        if self.alive[i].load(Ordering::Relaxed) {
+            return;
+        }
+        let passes = self.consec_pass[i].fetch_add(1, Ordering::Relaxed) + 1;
+        if passes >= self.pass_after {
+            self.consec_pass[i].store(0, Ordering::Relaxed);
+            if !self.alive[i].swap(true, Ordering::Relaxed) {
+                self.readmissions.fetch_add(1, Ordering::Relaxed);
+                crate::log_info!(
+                    "cluster",
+                    "readmitting replica {} after {} passing probe(s)",
+                    self.nodes[i],
+                    passes
+                );
+            }
+        }
+    }
+
+    /// A bad signal (failed probe, not-ready health, or forward error):
+    /// reset the pass streak; if healthy, advance toward ejection.
+    pub fn record_fail(&self, i: usize) {
+        self.consec_pass[i].store(0, Ordering::Relaxed);
+        if !self.alive[i].load(Ordering::Relaxed) {
+            return;
+        }
+        let fails = self.consec_fail[i].fetch_add(1, Ordering::Relaxed) + 1;
+        if fails >= self.fail_after {
+            self.consec_fail[i].store(0, Ordering::Relaxed);
+            if self.alive[i].swap(false, Ordering::Relaxed) {
+                self.ejections.fetch_add(1, Ordering::Relaxed);
+                crate::log_info!(
+                    "cluster",
+                    "ejecting replica {} after {} bad signal(s)",
+                    self.nodes[i],
+                    fails
+                );
+            }
+        }
+    }
+}
+
+/// One probe: fresh connection (a pooled one could be wedged — that is
+/// exactly what we're checking for), short timeouts, no retries. Ready
+/// means the replica can actually take failover traffic, not merely
+/// that its socket answers.
+fn probe(addr: &str, policy: &HealthPolicy) -> bool {
+    let cfg = ClientConfig {
+        connect_timeout: policy.timeout,
+        read_timeout: Some(policy.timeout),
+        retries: 0,
+        backoff: Duration::from_millis(1),
+    };
+    match Client::connect_with(addr, cfg) {
+        Ok(mut c) => match c.health() {
+            Ok(h) => h.ready(),
+            Err(_) => false,
+        },
+        Err(_) => false,
+    }
+}
+
+/// The probe loop, on its own thread for the router's lifetime.
+pub struct HealthMonitor {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HealthMonitor {
+    pub fn start(view: Arc<ClusterView>, policy: HealthPolicy) -> Result<HealthMonitor> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("cluster-health".to_string())
+            .spawn(move || {
+                while !stop_t.load(Ordering::Relaxed) {
+                    for i in 0..view.nodes().len() {
+                        if stop_t.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        if probe(&view.nodes()[i], &policy) {
+                            view.record_pass(i);
+                        } else {
+                            view.record_fail(i);
+                        }
+                    }
+                    // sleep in short slices so stop() doesn't wait out a
+                    // long interval
+                    let t0 = Instant::now();
+                    while t0.elapsed() < policy.interval
+                        && !stop_t.load(Ordering::Relaxed)
+                    {
+                        std::thread::sleep(Duration::from_millis(20).min(policy.interval));
+                    }
+                }
+            })
+            .context("spawning cluster health monitor")?;
+        Ok(HealthMonitor { stop, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(n: usize, fail_after: u32, pass_after: u32) -> ClusterView {
+        let nodes = (0..n).map(|i| format!("n{i}")).collect();
+        ClusterView::new(
+            nodes,
+            &HealthPolicy { fail_after, pass_after, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn ejection_needs_consecutive_failures() {
+        let v = view(2, 3, 2);
+        v.record_fail(0);
+        v.record_fail(0);
+        assert!(v.is_alive(0), "two of three failures is not enough");
+        v.record_pass(0); // streak broken
+        v.record_fail(0);
+        v.record_fail(0);
+        assert!(v.is_alive(0));
+        v.record_fail(0);
+        assert!(!v.is_alive(0), "third consecutive failure ejects");
+        assert_eq!(v.ejections.load(Ordering::Relaxed), 1);
+        assert!(v.is_alive(1), "other replica untouched");
+        assert_eq!(v.healthy_count(), 1);
+    }
+
+    #[test]
+    fn readmission_needs_consecutive_passes() {
+        let v = view(1, 1, 2);
+        v.record_fail(0);
+        assert!(!v.is_alive(0));
+        v.record_pass(0);
+        assert!(!v.is_alive(0), "one pass is not enough");
+        v.record_fail(0); // breaks the pass streak, already ejected
+        v.record_pass(0);
+        v.record_pass(0);
+        assert!(v.is_alive(0), "two consecutive passes readmit");
+        assert_eq!(v.readmissions.load(Ordering::Relaxed), 1);
+        // a stable replica doesn't re-count readmissions
+        v.record_pass(0);
+        assert_eq!(v.readmissions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn flapping_never_double_counts_transitions() {
+        let v = view(1, 1, 1);
+        for _ in 0..5 {
+            v.record_fail(0);
+            v.record_pass(0);
+        }
+        assert_eq!(v.ejections.load(Ordering::Relaxed), 5);
+        assert_eq!(v.readmissions.load(Ordering::Relaxed), 5);
+        assert!(v.is_alive(0));
+    }
+}

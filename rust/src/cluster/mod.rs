@@ -1,0 +1,51 @@
+//! L5 cluster tier — sharded multi-replica serving.
+//!
+//! One gateway replica scales until its coordinator saturates; past
+//! that, the paper's many-tasks cloud scenario wants *sharding*: each
+//! task owned by one replica (so its adapter banks are resident in
+//! exactly one cache), with the shared append-only `AdapterStore` as
+//! the only cross-replica state. This module is the tier that makes a
+//! fleet of `serve` processes look like one endpoint:
+//!
+//! * `ring` — consistent hashing with virtual nodes: task → replica
+//!   with near-uniform balance and ~1/N key churn on membership change;
+//! * `health` — readiness probing against `GET /health`'s PR 8 fields
+//!   (`draining`, `store_ok`, residency) with hysteresis: `fail_after`
+//!   bad signals eject, `pass_after` good probes readmit. Forward
+//!   errors count as bad signals, so crashes eject at traffic speed;
+//! * `router` — the HTTP front-end: body-sniffs the `task` field,
+//!   forwards bytes verbatim to the first alive replica in ring
+//!   preference order over pooled keep-alive connections, propagates
+//!   `X-Request-Id` (router `Forward` span + replica `Request` span
+//!   share one rid), fans in `GET /tasks`/`/train`, and exposes its own
+//!   `/metrics` (JSON + Prometheus `adapterbert_router_*`).
+//!
+//! ```text
+//!   clients ──► Router (hash ring · health view · conn pools)
+//!                  │ /predict{task=t}     forwarded, rid attached
+//!                  ▼
+//!          Gateway replica owning t ──► coordinator ──► executors
+//!                  │ cold load / admit-from-store on failover
+//!                  ▼
+//!            shared AdapterStore (single source of truth)
+//! ```
+//!
+//! Failover needs no replica-to-replica transfer: a hot registration
+//! landed in the store once, so when the owner dies the ring successor
+//! admits the task from store metadata
+//! ([`Server::admit_from_store`](crate::coordinator::server::Server::admit_from_store))
+//! and pages its banks in through the normal `BankSource` seam —
+//! predictions are byte-identical to the dead owner's because both
+//! replicas merge the same immutable bank with the same frozen base.
+//! `bench cluster` measures the tier end to end: aggregate throughput
+//! at 1 vs N replicas, then a kill-one-mid-traffic failover phase
+//! (convergence time + post-convergence error rate) →
+//! `BENCH_cluster.json`.
+
+pub mod health;
+pub mod ring;
+pub mod router;
+
+pub use health::{ClusterView, HealthMonitor, HealthPolicy};
+pub use ring::{HashRing, DEFAULT_VNODES};
+pub use router::{Router, RouterConfig, RouterReport};

@@ -1,0 +1,164 @@
+//! Consistent-hash ring with virtual nodes.
+//!
+//! The router's placement function: task name → owning replica. Each
+//! replica contributes `vnodes` points to a 64-bit hash circle (FNV-1a
+//! over `"{addr}#{v}"`), and a key routes to the node owning the first
+//! point at or clockwise-after the key's own hash. Virtual nodes keep
+//! per-replica load within a small factor of uniform; consistent
+//! hashing keeps churn minimal — adding or removing one of N replicas
+//! remaps only ~1/N of the keyspace, so a membership change doesn't
+//! stampede every replica's adapter cache at once.
+//!
+//! The ring is immutable after construction: membership is fixed at
+//! router start, and *liveness* is layered on top by walking the
+//! [`preference`](HashRing::preference) list (distinct owners in
+//! successor order) and skipping ejected replicas. That way a failed
+//! replica's shard spills to its ring successor — the same node that
+//! would own those keys if the replica were removed outright — and
+//! routing snaps back with zero churn when it is readmitted.
+
+/// Virtual nodes per replica when the caller doesn't say.
+pub const DEFAULT_VNODES: usize = 64;
+
+/// FNV-1a with a splitmix64 avalanche finalizer. Plain FNV-1a leaves
+/// the high bits poorly mixed for short, near-identical strings — and
+/// vnode keys (`"10.0.0.2:7700#17"`) are exactly that shape, skewing
+/// per-replica load far past 2× uniform. The finalizer restores the
+/// balance guarantee; placement is still a pure function of the string,
+/// so it is identical across router restarts.
+pub fn hash_key(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d049bb133111eb);
+    h ^= h >> 31;
+    h
+}
+
+/// The ring: `points` is sorted by position; each point names the index
+/// of its owner in `nodes`.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    nodes: Vec<String>,
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    pub fn new(nodes: &[String], vnodes: usize) -> HashRing {
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(nodes.len() * vnodes);
+        for (i, node) in nodes.iter().enumerate() {
+            for v in 0..vnodes {
+                points.push((hash_key(&format!("{node}#{v}")), i));
+            }
+        }
+        points.sort_unstable();
+        HashRing { nodes: nodes.to_vec(), points }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, i: usize) -> &str {
+        &self.nodes[i]
+    }
+
+    pub fn nodes(&self) -> &[String] {
+        &self.nodes
+    }
+
+    /// The owning node index for `key` (`None` on an empty ring).
+    pub fn route(&self, key: &str) -> Option<usize> {
+        self.preference_iter(key).next()
+    }
+
+    /// Every node exactly once, in clockwise-successor order from the
+    /// key's position: `[owner, first failover target, second, …]`. The
+    /// router forwards to the first *alive* entry, so a dead owner's
+    /// keys land on the node that would inherit them if the owner were
+    /// removed from the ring — no other key moves.
+    pub fn preference(&self, key: &str) -> Vec<usize> {
+        self.preference_iter(key).collect()
+    }
+
+    fn preference_iter(&self, key: &str) -> impl Iterator<Item = usize> + '_ {
+        let start = if self.points.is_empty() {
+            0
+        } else {
+            let h = hash_key(key);
+            self.points.partition_point(|&(p, _)| p < h) % self.points.len()
+        };
+        let mut seen = vec![false; self.nodes.len()];
+        let n = self.points.len();
+        (0..n).filter_map(move |k| {
+            let (_, i) = self.points[(start + k) % n];
+            if seen[i] {
+                None
+            } else {
+                seen[i] = true;
+                Some(i)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 7700 + i)).collect()
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let ring = HashRing::new(&addrs(3), DEFAULT_VNODES);
+        for k in 0..200 {
+            let key = format!("task_{k}");
+            let a = ring.route(&key).unwrap();
+            let b = ring.route(&key).unwrap();
+            assert_eq!(a, b, "{key}");
+            assert!(a < 3);
+        }
+    }
+
+    #[test]
+    fn preference_lists_every_node_once_starting_with_owner() {
+        let ring = HashRing::new(&addrs(4), DEFAULT_VNODES);
+        for k in 0..50 {
+            let key = format!("task_{k}");
+            let pref = ring.preference(&key);
+            assert_eq!(pref.len(), 4, "{key}");
+            let mut sorted = pref.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "{key}: {pref:?}");
+            assert_eq!(pref[0], ring.route(&key).unwrap(), "{key}");
+        }
+    }
+
+    #[test]
+    fn empty_ring_routes_nowhere() {
+        let ring = HashRing::new(&[], DEFAULT_VNODES);
+        assert!(ring.is_empty());
+        assert_eq!(ring.route("anything"), None);
+        assert!(ring.preference("anything").is_empty());
+    }
+
+    #[test]
+    fn single_node_owns_everything() {
+        let ring = HashRing::new(&addrs(1), DEFAULT_VNODES);
+        for k in 0..20 {
+            assert_eq!(ring.route(&format!("t{k}")), Some(0));
+        }
+    }
+}

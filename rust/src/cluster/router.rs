@@ -1,0 +1,588 @@
+//! The routing front-end: consistent-hash placement + health-checked
+//! forwarding over the existing HTTP/1.1 wire protocol.
+//!
+//! A [`Router`] owns no model runtime at all — it is a thin tier in
+//! front of N gateway replicas that all share one `AdapterStore`. Task
+//! routes (`POST /predict`, `/predict_ids`, `/tasks`, `/train`) extract
+//! the `task` field from the request body, hash it onto the
+//! [`HashRing`](super::ring::HashRing), and forward the request bytes
+//! verbatim to the first *alive* replica on the key's preference list,
+//! propagating the inbound `X-Request-Id` so the replica's `Request`
+//! span and the router's `Forward` span correlate in the trace ring.
+//!
+//! Failover is the composition of three independent pieces:
+//! * the ring's preference order says *where* a dead owner's shard
+//!   spills (its clockwise successor — no other key moves);
+//! * the [`ClusterView`](super::health::ClusterView) says *when*
+//!   (`fail_after` bad signals eject; forward errors count, so crashes
+//!   are detected at traffic speed);
+//! * the shared store says *how* the new owner serves: hot-registered
+//!   banks were appended to the store once, so the successor admits the
+//!   task from store metadata and cold-loads its banks through the
+//!   normal `BankSource` seam. No replica-to-replica state transfer.
+//!
+//! Fan-in routes: `GET /tasks` and `GET /train` union the replicas'
+//! answers; `GET /health` reflects one healthy replica's identity
+//! document annotated with per-replica liveness; `GET /metrics` is the
+//! router's own counters (JSON or Prometheus `adapterbert_router_*`).
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use super::health::{ClusterView, HealthMonitor, HealthPolicy};
+use super::ring::{HashRing, DEFAULT_VNODES};
+use crate::obs::prom::Prom;
+use crate::obs::trace::{self, SpanKind, Stage};
+use crate::serve::http::{
+    ClientResponse, Handler, HttpConfig, HttpRequest, HttpResponse, HttpServer,
+};
+use crate::serve::{Client, ClientConfig, LatencyHist};
+use crate::util::json::Json;
+
+/// Router knobs.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Bind address (`host:port`, port 0 = ephemeral).
+    pub addr: String,
+    pub http: HttpConfig,
+    /// Virtual nodes per replica on the hash ring.
+    pub vnodes: usize,
+    pub health: HealthPolicy,
+    /// Dial/read behavior for upstream forwards.
+    pub upstream: ClientConfig,
+    /// Idle keep-alive connections retained per replica.
+    pub pool_per_replica: usize,
+    /// Record `Forward` spans in the global trace ring.
+    pub trace: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            addr: "127.0.0.1:0".to_string(),
+            http: HttpConfig::default(),
+            vnodes: DEFAULT_VNODES,
+            health: HealthPolicy::default(),
+            upstream: ClientConfig {
+                connect_timeout: std::time::Duration::from_secs(2),
+                read_timeout: Some(std::time::Duration::from_secs(30)),
+                // the preference walk is the retry mechanism; per-dial
+                // retries would just slow ejection down
+                retries: 0,
+                backoff: std::time::Duration::from_millis(10),
+            },
+            pool_per_replica: 8,
+            trace: false,
+        }
+    }
+}
+
+/// Router-tier counters (the replicas keep their own).
+struct RouterStats {
+    /// Successful forwards, per replica.
+    forwards: Vec<AtomicU64>,
+    /// Forward attempts that died on the wire (feeds passive ejection).
+    forward_errors: AtomicU64,
+    /// Requests that landed on a non-primary replica (failover working).
+    reroutes: AtomicU64,
+    /// Requests refused because no replica was alive.
+    no_replica: AtomicU64,
+    /// Task routes with no parsable `task` field (400s).
+    bad_requests: AtomicU64,
+    /// Wall time of successful forwards, upstream-inclusive.
+    latency: Mutex<LatencyHist>,
+}
+
+/// Shared handler state behind the router's HTTP server.
+pub struct RouterState {
+    ring: HashRing,
+    view: Arc<ClusterView>,
+    pools: Vec<Mutex<Vec<Client>>>,
+    cfg: RouterConfig,
+    stats: RouterStats,
+}
+
+impl Handler for RouterState {
+    fn handle(&self, req: &HttpRequest) -> HttpResponse {
+        // honor the inbound id, mint otherwise — and pass it upstream on
+        // every forward, so one rid names the request across both tiers
+        let rid = match req.header("x-request-id") {
+            Some(v) if !v.trim().is_empty() => v.trim().to_string(),
+            _ => trace::global().gen_rid(),
+        };
+        let (path, query) = match req.path.split_once('?') {
+            Some((p, q)) => (p, Some(q)),
+            None => (req.path.as_str(), None),
+        };
+        let resp = match (req.method.as_str(), path) {
+            ("GET", "/health") => self.health(&rid),
+            ("GET", "/tasks") => self.fan_in(&rid, "/tasks", "tasks", "task"),
+            ("GET", "/train") => self.fan_in(&rid, "/train", "jobs", "job_id"),
+            ("GET", "/metrics") => {
+                let prom = query
+                    .map(|q| q.split('&').any(|kv| kv == "format=prometheus"))
+                    .unwrap_or(false);
+                if prom {
+                    self.metrics_prometheus()
+                } else {
+                    self.metrics()
+                }
+            }
+            ("GET", "/trace") => self.trace_spans(),
+            ("GET", p) if p.starts_with("/train/") => self.train_status(p, &rid),
+            ("POST", "/predict" | "/predict_ids" | "/tasks" | "/train") => {
+                self.forward_by_task(req, path, &rid)
+            }
+            ("GET" | "POST", _) => HttpResponse::error(404, "no such route"),
+            _ => HttpResponse::error(405, "method not allowed"),
+        };
+        resp.with_header("x-request-id", &rid)
+    }
+}
+
+impl RouterState {
+    /// A task route: hash the body's `task` onto the ring, forward to
+    /// the first alive replica in preference order, walking onward when
+    /// a forward dies on the wire. The replica's status and body pass
+    /// through untouched — the router adds no opinion of its own to a
+    /// 4xx/5xx the owner chose to send.
+    fn forward_by_task(&self, req: &HttpRequest, path: &str, rid: &str) -> HttpResponse {
+        let task = req
+            .json_body()
+            .ok()
+            .and_then(|j| j.get("task").and_then(Json::as_str).map(str::to_string));
+        let Some(task) = task else {
+            self.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+            return HttpResponse::error(
+                400,
+                "body must be a JSON object with a \"task\" field",
+            );
+        };
+        let mut attempted = 0usize;
+        for i in self.ring.preference(&task) {
+            if !self.view.is_alive(i) {
+                continue;
+            }
+            if attempted > 0 {
+                self.stats.reroutes.fetch_add(1, Ordering::Relaxed);
+            }
+            attempted += 1;
+            match self.forward(i, &req.method, path, Some(&req.body), &task, rid) {
+                Ok(resp) => return passthrough(resp),
+                Err(e) => {
+                    crate::log_warn!(
+                        "cluster",
+                        "forward failed rid={rid} task={task} replica={} err={e:#}",
+                        self.ring.node(i)
+                    );
+                }
+            }
+        }
+        if attempted == 0 {
+            self.stats.no_replica.fetch_add(1, Ordering::Relaxed);
+            HttpResponse::error(503, &format!("no healthy replica for task {task:?}"))
+        } else {
+            HttpResponse::error(
+                502,
+                &format!("all {attempted} live replica(s) failed for task {task:?}"),
+            )
+        }
+    }
+
+    /// One upstream hop, wrapped in a `Forward` span sharing the rid
+    /// with the replica-side `Request` span.
+    fn forward(
+        &self,
+        i: usize,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+        task: &str,
+        rid: &str,
+    ) -> Result<ClientResponse> {
+        let recorder = trace::global();
+        let span = recorder.begin(SpanKind::Forward, rid);
+        span.set_task(task);
+        let t0 = Instant::now();
+        let result = self.roundtrip_pooled(i, method, path, body, rid);
+        match &result {
+            Ok(resp) => {
+                span.set_status(resp.status);
+                self.stats.forwards[i].fetch_add(1, Ordering::Relaxed);
+                self.stats.latency.lock().unwrap().record(t0.elapsed());
+            }
+            Err(_) => {
+                span.set_status(502);
+                self.stats.forward_errors.fetch_add(1, Ordering::Relaxed);
+                // a wire death is a liveness signal, not just a lost
+                // request — crashes eject at traffic speed
+                self.view.record_fail(i);
+            }
+        }
+        span.mark(Stage::Responded);
+        recorder.record(&span);
+        result
+    }
+
+    /// Checkout-or-dial a connection to replica `i`, round-trip the raw
+    /// bytes with the rid attached, return the connection to the pool on
+    /// success. A stale keep-alive (replica restarted, idle timeout)
+    /// gets one fresh dial before the attempt counts as failed.
+    fn roundtrip_pooled(
+        &self,
+        i: usize,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+        rid: &str,
+    ) -> Result<ClientResponse> {
+        let pooled = self.pools[i].lock().unwrap().pop();
+        let mut client = match pooled {
+            Some(c) => c,
+            None => Client::connect_with(self.ring.node(i), self.cfg.upstream.clone())?,
+        };
+        let extra = [("x-request-id", rid)];
+        let resp = match client.roundtrip_raw(method, path, body, &extra) {
+            Ok(r) => r,
+            Err(_) => {
+                client.reconnect()?;
+                client.roundtrip_raw(method, path, body, &extra)?
+            }
+        };
+        let mut pool = self.pools[i].lock().unwrap();
+        if pool.len() < self.cfg.pool_per_replica {
+            pool.push(client);
+        }
+        Ok(resp)
+    }
+
+    /// `GET /health`: one healthy replica's identity document (clients
+    /// bootstrap tokenizers from `vocab`/`seq`, so those fields must
+    /// survive the extra tier) annotated with the router's per-replica
+    /// liveness. 503 when the whole fleet is dark.
+    fn health(&self, rid: &str) -> HttpResponse {
+        let mask = self.view.alive_mask();
+        let mut base: Option<Json> = None;
+        for (i, alive) in mask.iter().enumerate() {
+            if !alive {
+                continue;
+            }
+            if let Ok(resp) = self.roundtrip_pooled(i, "GET", "/health", None, rid) {
+                if resp.status == 200 {
+                    if let Some(j) = parse_body(&resp.body) {
+                        base = Some(j);
+                        break;
+                    }
+                }
+            }
+        }
+        match base {
+            Some(Json::Obj(mut doc)) => {
+                doc.insert("role".to_string(), Json::str("router"));
+                doc.insert("replicas".to_string(), self.replica_json(&mask));
+                doc.insert(
+                    "healthy".to_string(),
+                    Json::num(mask.iter().filter(|a| **a).count() as f64),
+                );
+                HttpResponse::json(200, &Json::Obj(doc))
+            }
+            _ => HttpResponse::error(503, "no healthy replicas"),
+        }
+    }
+
+    fn replica_json(&self, mask: &[bool]) -> Json {
+        Json::arr(self.view.nodes().iter().enumerate().map(|(i, addr)| {
+            Json::obj(vec![
+                ("addr", Json::str(addr)),
+                ("alive", Json::Bool(mask[i])),
+                (
+                    "forwards",
+                    Json::num(self.stats.forwards[i].load(Ordering::Relaxed) as f64),
+                ),
+            ])
+        }))
+    }
+
+    /// `GET /tasks` / `GET /train`: ask every live replica, union the
+    /// named array, dedup by `key` (first answer wins — entries for the
+    /// same task are equal anyway, since all replicas serve one store).
+    fn fan_in(&self, rid: &str, path: &str, array: &str, key: &str) -> HttpResponse {
+        let mut merged: BTreeMap<String, Json> = BTreeMap::new();
+        let mut reached = false;
+        for (i, alive) in self.view.alive_mask().iter().enumerate() {
+            if !alive {
+                continue;
+            }
+            let Ok(resp) = self.roundtrip_pooled(i, "GET", path, None, rid) else {
+                continue;
+            };
+            if resp.status != 200 {
+                continue;
+            }
+            let Some(j) = parse_body(&resp.body) else { continue };
+            reached = true;
+            if let Some(arr) = j.get(array).and_then(Json::as_arr) {
+                for entry in arr {
+                    let id = match entry.get(key) {
+                        Some(Json::Str(s)) => s.clone(),
+                        Some(Json::Num(n)) => format!("{n}"),
+                        _ => continue,
+                    };
+                    merged.entry(id).or_insert_with(|| entry.clone());
+                }
+            }
+        }
+        if !reached {
+            return HttpResponse::error(503, "no healthy replicas");
+        }
+        HttpResponse::json(
+            200,
+            &Json::obj(vec![(
+                array,
+                Json::arr(merged.into_values().collect::<Vec<_>>()),
+            )]),
+        )
+    }
+
+    /// `GET /train/<id>`: job ids are replica-local, so ask each live
+    /// replica in turn and pass through the first non-404 answer.
+    fn train_status(&self, path: &str, rid: &str) -> HttpResponse {
+        let mut reached = false;
+        for (i, alive) in self.view.alive_mask().iter().enumerate() {
+            if !alive {
+                continue;
+            }
+            let Ok(resp) = self.roundtrip_pooled(i, "GET", path, None, rid) else {
+                continue;
+            };
+            reached = true;
+            if resp.status != 404 {
+                return passthrough(resp);
+            }
+        }
+        if reached {
+            HttpResponse::error(404, "no replica knows this job")
+        } else {
+            HttpResponse::error(503, "no healthy replicas")
+        }
+    }
+
+    /// `GET /metrics`: the router tier's own counters.
+    fn metrics(&self) -> HttpResponse {
+        let mask = self.view.alive_mask();
+        let s = &self.stats;
+        let total: u64 = s.forwards.iter().map(|f| f.load(Ordering::Relaxed)).sum();
+        let j = Json::obj(vec![
+            ("role", Json::str("router")),
+            ("replicas", self.replica_json(&mask)),
+            (
+                "healthy",
+                Json::num(mask.iter().filter(|a| **a).count() as f64),
+            ),
+            ("forwards", Json::num(total as f64)),
+            (
+                "forward_errors",
+                Json::num(s.forward_errors.load(Ordering::Relaxed) as f64),
+            ),
+            ("reroutes", Json::num(s.reroutes.load(Ordering::Relaxed) as f64)),
+            (
+                "no_replica",
+                Json::num(s.no_replica.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "bad_requests",
+                Json::num(s.bad_requests.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "ejections",
+                Json::num(self.view.ejections.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "readmissions",
+                Json::num(self.view.readmissions.load(Ordering::Relaxed) as f64),
+            ),
+            ("forward_latency", s.latency.lock().unwrap().to_json()),
+        ]);
+        HttpResponse::json(200, &j)
+    }
+
+    /// `GET /metrics?format=prometheus`: the same counters as text
+    /// exposition, in the `adapterbert_router_*` namespace so a scrape
+    /// config can keep router and replica series apart.
+    fn metrics_prometheus(&self) -> HttpResponse {
+        let mut p = Prom::new();
+        let s = &self.stats;
+        let mask = self.view.alive_mask();
+        for (i, addr) in self.view.nodes().iter().enumerate() {
+            p.counter(
+                "adapterbert_router_forwards_total",
+                "Successful upstream forwards.",
+                &[("replica", addr)],
+                s.forwards[i].load(Ordering::Relaxed) as f64,
+            );
+            p.gauge(
+                "adapterbert_router_replica_alive",
+                "1 when the replica is routable, 0 when ejected.",
+                &[("replica", addr)],
+                if mask[i] { 1.0 } else { 0.0 },
+            );
+        }
+        p.counter(
+            "adapterbert_router_forward_errors_total",
+            "Forward attempts that died on the wire.",
+            &[],
+            s.forward_errors.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "adapterbert_router_reroutes_total",
+            "Requests served by a non-primary replica.",
+            &[],
+            s.reroutes.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "adapterbert_router_no_replica_total",
+            "Requests refused with no replica alive.",
+            &[],
+            s.no_replica.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "adapterbert_router_ejections_total",
+            "Healthy→ejected transitions.",
+            &[],
+            self.view.ejections.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "adapterbert_router_readmissions_total",
+            "Ejected→healthy transitions.",
+            &[],
+            self.view.readmissions.load(Ordering::Relaxed) as f64,
+        );
+        {
+            let hist = s.latency.lock().unwrap();
+            p.histogram(
+                "adapterbert_router_forward_duration_seconds",
+                "Wall time of successful forwards, upstream-inclusive.",
+                &[],
+                &hist.cumulative(),
+                hist.sum_s(),
+                hist.count(),
+            );
+        }
+        HttpResponse::text(200, "text/plain; version=0.0.4", p.finish())
+    }
+
+    /// `GET /trace`: the global ring — on a router process that is
+    /// `Forward` spans, one per upstream hop.
+    fn trace_spans(&self) -> HttpResponse {
+        let rec = trace::global();
+        let spans: Vec<Json> = rec.snapshot().iter().map(|s| s.to_json()).collect();
+        HttpResponse::json(
+            200,
+            &Json::obj(vec![
+                ("enabled", Json::Bool(rec.enabled())),
+                ("capacity", Json::num(rec.capacity() as f64)),
+                ("recorded", Json::num(rec.recorded() as f64)),
+                ("spans", Json::arr(spans)),
+            ]),
+        )
+    }
+}
+
+/// Re-emit an upstream response downstream byte-exact (status + body;
+/// the rid header is re-attached by `handle`).
+fn passthrough(resp: ClientResponse) -> HttpResponse {
+    let mut out = HttpResponse { status: resp.status, headers: Vec::new(), body: Vec::new() };
+    if let Some(ct) = resp.header("content-type") {
+        out.headers.push(("content-type".to_string(), ct.to_string()));
+    }
+    out.body = resp.body;
+    out
+}
+
+fn parse_body(body: &[u8]) -> Option<Json> {
+    Json::parse(std::str::from_utf8(body).ok()?).ok()
+}
+
+/// What a router did over its lifetime, returned by [`Router::shutdown`].
+#[derive(Debug, Clone)]
+pub struct RouterReport {
+    pub forwards: u64,
+    pub forward_errors: u64,
+    pub reroutes: u64,
+    pub no_replica: u64,
+    pub ejections: u64,
+    pub readmissions: u64,
+}
+
+/// The running tier: HTTP front-end + health monitor over a fixed
+/// replica set.
+pub struct Router {
+    state: Arc<RouterState>,
+    http: HttpServer,
+    monitor: Option<HealthMonitor>,
+}
+
+impl Router {
+    pub fn start(replicas: Vec<String>, cfg: RouterConfig) -> Result<Router> {
+        ensure!(!replicas.is_empty(), "router needs at least one replica address");
+        if cfg.trace {
+            trace::global().set_enabled(true);
+        }
+        let ring = HashRing::new(&replicas, cfg.vnodes);
+        let view = Arc::new(ClusterView::new(replicas.clone(), &cfg.health));
+        let state = Arc::new(RouterState {
+            ring,
+            view: view.clone(),
+            pools: replicas.iter().map(|_| Mutex::new(Vec::new())).collect(),
+            stats: RouterStats {
+                forwards: replicas.iter().map(|_| AtomicU64::new(0)).collect(),
+                forward_errors: AtomicU64::new(0),
+                reroutes: AtomicU64::new(0),
+                no_replica: AtomicU64::new(0),
+                bad_requests: AtomicU64::new(0),
+                latency: Mutex::new(LatencyHist::default()),
+            },
+            cfg: cfg.clone(),
+        });
+        let monitor = HealthMonitor::start(view, cfg.health.clone())?;
+        let http = HttpServer::start(&cfg.addr, cfg.http.clone(), state.clone())
+            .context("starting router http server")?;
+        Ok(Router { state, http, monitor: Some(monitor) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.http.local_addr()
+    }
+
+    /// Replicas currently routable (probe-side view).
+    pub fn healthy_replicas(&self) -> usize {
+        self.state.view.healthy_count()
+    }
+
+    /// The owning replica's address for a task, liveness-blind — what
+    /// the ring says, not what failover is currently doing.
+    pub fn owner_of(&self, task: &str) -> Option<&str> {
+        self.state.ring.route(task).map(|i| self.state.ring.node(i))
+    }
+
+    pub fn shutdown(mut self) -> RouterReport {
+        if let Some(m) = self.monitor.take() {
+            m.stop();
+        }
+        self.http.stop();
+        let s = &self.state.stats;
+        RouterReport {
+            forwards: s.forwards.iter().map(|f| f.load(Ordering::Relaxed)).sum(),
+            forward_errors: s.forward_errors.load(Ordering::Relaxed),
+            reroutes: s.reroutes.load(Ordering::Relaxed),
+            no_replica: s.no_replica.load(Ordering::Relaxed),
+            ejections: self.state.view.ejections.load(Ordering::Relaxed),
+            readmissions: self.state.view.readmissions.load(Ordering::Relaxed),
+        }
+    }
+}

@@ -502,7 +502,10 @@ impl Server {
             let Some(meta) = provider.source.latest_meta(&task) else {
                 continue;
             };
-            let n_classes = *task_classes.get(&task).unwrap_or(&2);
+            // caller-provided class counts win; otherwise trust the
+            // store's persisted metadata (failover replicas have no
+            // out-of-band class map for tasks registered elsewhere)
+            let n_classes = task_classes.get(&task).copied().unwrap_or(meta.n_classes);
             provider.directory.write().unwrap().insert(
                 task.clone(),
                 TaskDir {
@@ -688,6 +691,37 @@ impl Server {
             .unwrap()
             .get(task)
             .map(|d| (d.kind.clone(), d.n_classes))
+    }
+
+    /// Admit a task this server has never seen **from the durable store**:
+    /// on a directory miss, look the task up in the bank source and, if it
+    /// exists there, insert a directory entry from its stored metadata
+    /// (kind, class count, variant). Returns `Ok(true)` when the task is
+    /// routable afterwards (already known, or admitted now), `Ok(false)`
+    /// when the store has never heard of it either.
+    ///
+    /// This is the cluster failover path: when a replica dies and the ring
+    /// reassigns its shard, the new owner may receive traffic for tasks
+    /// that were hot-registered through the *old* owner. The shared store
+    /// is the source of truth — admission here puts the task in the
+    /// directory so the normal cold-load seam ([`Server::prefetch`])
+    /// pages its banks in.
+    pub fn admit_from_store(&self, task: &str) -> Result<bool> {
+        if self.provider.directory.read().unwrap().contains_key(task) {
+            return Ok(true);
+        }
+        let Some(meta) = self.provider.source.latest_meta(task) else {
+            return Ok(false);
+        };
+        self.provider.directory.write().unwrap().insert(
+            task.to_string(),
+            TaskDir {
+                kind: meta.kind.clone(),
+                n_classes: meta.n_classes,
+                fusable: variant_is_fusable(&meta.variant),
+            },
+        );
+        Ok(true)
     }
 
     /// Is the task's bank resident right now? (Does not refresh recency.)

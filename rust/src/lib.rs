@@ -16,6 +16,8 @@
 //!     cross-task flush planning for one-shared-trunk mixed batches
 //!   * `serve`     — the networked gateway over the coordinator: HTTP
 //!     front end, wire protocol, hot task registration, blocking client
+//!   * `cluster`   — sharded multi-replica serving: consistent-hash
+//!     router tier with health-checked failover over N gateways
 //!   * `store`     — versioned adapter banks + checkpoints
 //!   * `baseline`  — the no-BERT baseline searcher (Table 2, col. 1)
 //!   * `eval`      — task metrics and GLUE-style aggregation
@@ -27,6 +29,7 @@
 
 pub mod baseline;
 pub mod bench;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod eval;

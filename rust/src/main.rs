@@ -12,23 +12,33 @@
 //!                       [--port P [--duration S] [--workers W]
 //!                        [--train-workers T]] [--requests N]
 //!                       [--trace] [--slow-ms N]
+//! adapterbert serve     --router (--replicas H:P,… | --spawn-replicas N
+//!                       [--replica-base-port P]) [--port P] [--vnodes V]
+//!                       [--health-interval-ms MS] [--duration S] [--trace]
 //! adapterbert loadgen   --addr HOST:PORT [--tasks a,b | --tasks N] [--rate R]
 //!                       [--zipf S] [--concurrency C] [--requests N]
 //!                       [--duration S] [--out FILE]
 //! adapterbert baseline  --task NAME [--budget N]
 //! adapterbert bench     <table1|table2|fig3|fig3x|fig4|fig5|fig6|fig7|sizes|
-//!                        params|kernels|trainserve|profile|all> [--full]
+//!                        params|kernels|trainserve|profile|cluster|all> [--full]
 //!                       (`kernels` also takes --threads 1,2,4 --out FILE and
 //!                        writes BENCH_kernels.json; `trainserve` takes
 //!                        --jobs K --requests N --out FILE and writes
 //!                        BENCH_trainserve.json; `profile` measures tracing
 //!                        overhead + span quality and writes BENCH_trace.json;
-//!                        none of the three is part of `all`)
+//!                        `cluster` takes --replicas N --requests N --out FILE,
+//!                        measures 1-vs-N scaling + failover behind the router
+//!                        tier and writes BENCH_cluster.json;
+//!                        none of the four is part of `all`)
 //! adapterbert trace-dump [--addr HOST:PORT | --in FILE] [--out trace.json]
 //! adapterbert list-tasks
 //! ```
 //!
-//! `serve` without `--port` runs the in-process demo; with `--port` it
+//! `serve --router` starts the cluster tier instead: a consistent-hash
+//! router (`cluster::Router`) over a fixed replica set, either external
+//! (`--replicas`) or spawned locally as child `serve --port` processes
+//! (`--spawn-replicas N`). Otherwise `serve` without `--port` runs the
+//! in-process demo; with `--port` it
 //! starts the networked gateway (`serve::Gateway`, port 0 = ephemeral)
 //! with an online training service attached (`POST /train` trains new
 //! tasks next to live traffic and hot-installs them; `--train-workers 0`
@@ -173,7 +183,13 @@ fn print_help() {
          \x20            bounds resident adapter banks to a byte budget\n\
          \x20            (evicted tasks reload from the store on demand);\n\
          \x20            --synthetic N clones the first tenant N times\n\
-         \x20            (syn_000…) for cache-pressure runs\n\
+         \x20            (syn_000…) for cache-pressure runs;\n\
+         \x20            --router turns serve into the cluster front-end:\n\
+         \x20            consistent-hash routing of task → replica with\n\
+         \x20            health-checked failover (--replicas H:P,… for an\n\
+         \x20            external fleet, or --spawn-replicas N to launch\n\
+         \x20            local child gateways; --vnodes V,\n\
+         \x20            --health-interval-ms MS)\n\
          \x20 loadgen    closed-loop load harness against a running\n\
          \x20            gateway; writes BENCH_serve.json. --tasks N\n\
          \x20            --rate R is the many-tasks/low-rate preset;\n\
@@ -187,7 +203,10 @@ fn print_help() {
          \x20            0 vs K co-located training jobs and writes\n\
          \x20            BENCH_trainserve.json; `bench profile` measures\n\
          \x20            request-tracing overhead and span-chain quality\n\
-         \x20            and writes BENCH_trace.json\n\
+         \x20            and writes BENCH_trace.json; `bench cluster`\n\
+         \x20            measures 1-vs-N replica scaling plus kill-one\n\
+         \x20            failover behind the router tier and writes\n\
+         \x20            BENCH_cluster.json (--replicas N --requests N)\n\
          \x20 trace-dump convert recorded request spans (--addr HOST:PORT\n\
          \x20            for a live gateway's GET /trace, or --in FILE)\n\
          \x20            into Chrome trace-event JSON for Perfetto\n\
@@ -369,6 +388,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use adapterbert::obs::trace::TraceHandle;
     use std::sync::mpsc;
     use std::time::{Duration, Instant};
+
+    // --router: the cluster front-end tier. No model runtime at all —
+    // it only hashes tasks onto replicas and forwards bytes.
+    if args.flags.contains_key("router") {
+        return cmd_serve_router(args);
+    }
 
     let (rt, world) = open_runtime(args)?;
     let base = load_base(&rt, &world, args)?;
@@ -582,6 +607,107 @@ fn cmd_serve(args: &Args) -> Result<()> {
         metrics.latencies.summary(1.0),
         metrics.mean_occupancy()
     );
+    Ok(())
+}
+
+/// `serve --router`: the consistent-hash router tier over a fixed
+/// replica set. Replicas come from `--replicas host:port,…` and/or
+/// `--spawn-replicas N`, which launches N local `serve --port` gateway
+/// processes (sharing `--store`/`--tasks`/`--preset` flags) and fronts
+/// them — the one-command local cluster. Spawned replicas take a while
+/// to come up (tenant training); the health monitor simply treats them
+/// as ejected until their `/health` goes ready.
+fn cmd_serve_router(args: &Args) -> Result<()> {
+    use adapterbert::cluster::{HealthPolicy, Router, RouterConfig};
+    use adapterbert::serve::HttpConfig;
+    use std::time::Duration;
+
+    let mut replicas: Vec<String> = args
+        .get("replicas")
+        .map(|s| {
+            s.split(',')
+                .map(str::trim)
+                .filter(|a| !a.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
+
+    let spawn: usize = args.parse_num("spawn-replicas", 0usize)?;
+    let mut children = Vec::new();
+    if spawn > 0 {
+        let base_port: u16 = args.parse_num("replica-base-port", 7711u16)?;
+        let exe = std::env::current_exe().context("resolving current executable")?;
+        for k in 0..spawn {
+            let port = base_port + k as u16;
+            let mut cmd = std::process::Command::new(&exe);
+            cmd.arg("serve").arg("--port").arg(port.to_string());
+            // replica-relevant flags pass through; --store especially,
+            // since a shared store is what makes failover work
+            for flag in
+                ["preset", "tasks", "store", "m", "epochs", "adapter-cache-mb",
+                 "backend", "pretrain-steps", "executors"]
+            {
+                if let Some(v) = args.get(flag) {
+                    cmd.arg(format!("--{flag}")).arg(v);
+                }
+            }
+            let child = cmd
+                .spawn()
+                .with_context(|| format!("spawning replica on port {port}"))?;
+            println!("spawned replica pid {} on 127.0.0.1:{port}", child.id());
+            children.push(child);
+            replicas.push(format!("127.0.0.1:{port}"));
+        }
+    }
+    if replicas.is_empty() {
+        bail!("--router needs --replicas host:port,… and/or --spawn-replicas N");
+    }
+
+    let port: u16 = args.parse_num("port", 0u16)?;
+    let rcfg = RouterConfig {
+        addr: format!("127.0.0.1:{port}"),
+        http: HttpConfig {
+            workers: args.parse_num("workers", 4usize)?,
+            ..Default::default()
+        },
+        vnodes: args.parse_num("vnodes", adapterbert::cluster::DEFAULT_VNODES)?,
+        health: HealthPolicy {
+            interval: Duration::from_millis(args.parse_num("health-interval-ms", 500u64)?),
+            ..Default::default()
+        },
+        trace: args.flags.contains_key("trace"),
+        ..Default::default()
+    };
+    let router = Router::start(replicas.clone(), rcfg)?;
+    println!(
+        "cluster router on http://{} over {} replica(s): {}",
+        router.local_addr(),
+        replicas.len(),
+        replicas.join(", ")
+    );
+    let duration: f64 = args.parse_num("duration", 0.0f64)?;
+    if duration > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(duration));
+        let report = router.shutdown();
+        println!(
+            "router: {} forwards | {} wire errors | {} reroutes | \
+             {} ejections | {} readmissions",
+            report.forwards,
+            report.forward_errors,
+            report.reroutes,
+            report.ejections,
+            report.readmissions
+        );
+        for mut c in children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    } else {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
     Ok(())
 }
 
@@ -863,6 +989,54 @@ fn bench_profile(args: &Args, preset: &str) -> Result<()> {
     Ok(())
 }
 
+/// `bench cluster`: aggregate throughput at 1 vs N replicas behind the
+/// router, then a kill-one-mid-traffic failover phase. Self-contained
+/// (does its own pretrain + tenant setup), so it runs before (and
+/// without) `Ctx::open`.
+fn bench_cluster(args: &Args, preset: &str) -> Result<()> {
+    use adapterbert::bench::cluster;
+    use std::time::Duration;
+    let cfg = cluster::ClusterBenchConfig {
+        preset: preset.to_string(),
+        replicas: args.parse_num("replicas", 2usize)?,
+        tenants: args.parse_num("tenants", 4usize)?,
+        requests: args.parse_num("requests", 240u64)?,
+        concurrency: args.parse_num("concurrency", 4usize)?,
+        m: args.parse_num("m", 8usize)?,
+        pretrain_steps: args
+            .parse_num("pretrain-steps", if preset == "test" { 120 } else { 800 })?,
+        failover_window: Duration::from_secs_f64(
+            args.parse_num("failover-window", 6.0f64)?,
+        ),
+        ..Default::default()
+    };
+    println!(
+        "\n########## bench cluster (replicas={}) ##########",
+        cfg.replicas
+    );
+    let t0 = std::time::Instant::now();
+    let report = cluster::run(&cfg)?;
+    for row in &report.scaling {
+        println!(
+            "  {} replica(s): {:4} req  {:6.1} req/s  p50 {:7.2}ms  p95 {:7.2}ms",
+            row.replicas, row.requests, row.throughput_rps, row.p50_ms, row.p95_ms
+        );
+    }
+    println!("  speedup: {:.2}x", report.speedup);
+    println!(
+        "  failover: killed {} | converged {:.0}ms | post {} req / {} err",
+        report.failover.killed,
+        report.failover.convergence_ms,
+        report.failover.post_requests,
+        report.failover.post_errors
+    );
+    let out = args.get_or("out", "BENCH_cluster.json");
+    cluster::write_report(Path::new(&out), &report.to_json(&cfg))?;
+    println!("wrote {out}");
+    println!("[bench cluster] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
 /// `trace-dump`: convert `GET /trace` spans — fetched from a live
 /// gateway (`--addr`) or read from a saved JSON file (`--in`) — into
 /// Chrome trace-event JSON loadable in Perfetto / `chrome://tracing`.
@@ -919,6 +1093,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if wanted.contains(&"profile") {
         bench_profile(args, &preset)?;
         wanted.retain(|w| *w != "profile");
+        if wanted.is_empty() {
+            return Ok(());
+        }
+    }
+    if wanted.contains(&"cluster") {
+        bench_cluster(args, &preset)?;
+        wanted.retain(|w| *w != "cluster");
         if wanted.is_empty() {
             return Ok(());
         }

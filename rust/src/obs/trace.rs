@@ -74,6 +74,10 @@ pub enum SpanKind {
     ColdLoad,
     /// A background training job (start/end only).
     TrainJob,
+    /// A cluster-router hop: one upstream forward to a replica
+    /// (start/end only; the replica's own `Request` span shares the
+    /// same rid, so the two tiers correlate).
+    Forward,
 }
 
 impl SpanKind {
@@ -82,6 +86,7 @@ impl SpanKind {
             SpanKind::Request => "request",
             SpanKind::ColdLoad => "cold_load",
             SpanKind::TrainJob => "train_job",
+            SpanKind::Forward => "forward",
         }
     }
 }

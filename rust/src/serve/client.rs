@@ -1,9 +1,17 @@
 //! Blocking Rust client for the gateway protocol — one keep-alive
-//! connection per client, suitable for one thread of a load generator or
-//! a remote trainer pushing banks via hot registration.
+//! connection per client, suitable for one thread of a load generator, a
+//! remote trainer pushing banks via hot registration, or the cluster
+//! router's pooled forwarding connections.
+//!
+//! Dialing is bounded: [`ClientConfig`] caps connect and read time, and
+//! transient connect failures (refused, reset, timed out — a replica
+//! restarting) retry with jittered exponential backoff instead of either
+//! blocking forever (the old behavior on a dead peer) or failing on the
+//! first refused SYN.
 
 use std::io::BufReader;
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -14,21 +22,101 @@ use super::protocol::{
 };
 use crate::util::json::Json;
 
+/// Dialing/read policy for a [`Client`].
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Per-attempt connect cap — a dead peer costs this, not forever.
+    pub connect_timeout: Duration,
+    /// Socket read cap — a hung peer surfaces as an error, not a block.
+    /// `None` = wait indefinitely (in-process benches with slow cold
+    /// loads under contention may want this).
+    pub read_timeout: Option<Duration>,
+    /// Extra connect attempts after the first fails transiently.
+    pub retries: usize,
+    /// Backoff before retry `k` is `backoff · 2^k` plus up to 50% jitter.
+    pub backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Some(Duration::from_secs(60)),
+            retries: 2,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
 /// A blocking HTTP client pinned to one gateway address.
 pub struct Client {
     addr: String,
+    cfg: ClientConfig,
     reader: BufReader<TcpStream>,
     writer: TcpStream,
 }
 
+/// Deterministic per-(addr, attempt) jitter in `[0, 1)` — desynchronizes
+/// a fleet of clients redialing the same restarted replica without
+/// needing a shared RNG.
+fn jitter(addr: &str, attempt: usize) -> f64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in addr.bytes().chain([attempt as u8]) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+fn dial(addr: &str, cfg: &ClientConfig) -> Result<TcpStream> {
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..=cfg.retries {
+        if attempt > 0 {
+            let base = cfg.backoff.as_secs_f64() * (1 << (attempt - 1)) as f64;
+            let wait = base * (1.0 + 0.5 * jitter(addr, attempt));
+            std::thread::sleep(Duration::from_secs_f64(wait));
+        }
+        // resolve each attempt (addresses can change between retries)
+        let resolved = match addr.to_socket_addrs() {
+            Ok(it) => it.collect::<Vec<_>>(),
+            Err(e) => {
+                last = Some(anyhow::Error::new(e).context(format!("resolving {addr}")));
+                continue;
+            }
+        };
+        if resolved.is_empty() {
+            bail!("{addr} resolves to no addresses");
+        }
+        for sa in resolved {
+            match TcpStream::connect_timeout(&sa, cfg.connect_timeout) {
+                Ok(stream) => return Ok(stream),
+                Err(e) => last = Some(anyhow::Error::new(e)),
+            }
+        }
+    }
+    Err(last
+        .unwrap_or_else(|| anyhow::anyhow!("no connect attempt was made"))
+        .context(format!(
+            "connecting to gateway at {addr} ({} attempt(s))",
+            cfg.retries + 1
+        )))
+}
+
 impl Client {
-    /// Connect to `addr` (`host:port`).
+    /// Connect to `addr` (`host:port`) with the default policy.
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting to gateway at {addr}"))?;
+        Client::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect with an explicit dialing/read policy.
+    pub fn connect_with(addr: &str, cfg: ClientConfig) -> Result<Client> {
+        let stream = dial(addr, &cfg)?;
         let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(cfg.read_timeout)
+            .context("set_read_timeout")?;
         let reader = BufReader::new(stream.try_clone().context("clone stream")?);
-        Ok(Client { addr: addr.to_string(), reader, writer: stream })
+        Ok(Client { addr: addr.to_string(), cfg, reader, writer: stream })
     }
 
     /// The gateway address this client talks to.
@@ -36,9 +124,10 @@ impl Client {
         &self.addr
     }
 
-    /// Drop the current connection and dial again (after an io error).
+    /// Drop the current connection and dial again (after an io error),
+    /// keeping the configured policy.
     pub fn reconnect(&mut self) -> Result<()> {
-        let fresh = Client::connect(&self.addr)?;
+        let fresh = Client::connect_with(&self.addr, self.cfg.clone())?;
         *self = fresh;
         Ok(())
     }
@@ -62,6 +151,28 @@ impl Client {
             Json::parse(&text).map_err(|e| anyhow::anyhow!("bad response json: {e}"))?
         };
         Ok((resp.status, j))
+    }
+
+    /// One raw exchange: bytes in, bytes out, extra headers written
+    /// verbatim. The router's forwarding path uses this so upstream
+    /// bodies pass through byte-exact (no JSON re-serialization) with
+    /// the inbound `X-Request-Id` attached.
+    pub fn roundtrip_raw(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+        extra_headers: &[(&str, &str)],
+    ) -> Result<http::ClientResponse> {
+        http::write_request_with_headers(
+            &mut self.writer,
+            method,
+            path,
+            body,
+            extra_headers,
+        )
+        .context("writing request")?;
+        http::read_client_response(&mut self.reader)
     }
 
     fn expect_ok(&mut self, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
@@ -170,5 +281,51 @@ impl Client {
             .iter()
             .map(TrainJobStatus::from_json)
             .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        for attempt in 1..5 {
+            let a = jitter("127.0.0.1:9", attempt);
+            assert_eq!(a, jitter("127.0.0.1:9", attempt));
+            assert!((0.0..1.0).contains(&a), "{a}");
+        }
+        // different addresses desynchronize
+        assert_ne!(jitter("127.0.0.1:9", 1), jitter("127.0.0.1:10", 1));
+    }
+
+    #[test]
+    fn dead_peer_fails_bounded_not_forever() {
+        // port 1 is essentially never listening; connect must fail after
+        // retries + backoff, well under a second with this config
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_millis(200),
+            retries: 2,
+            backoff: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        assert!(Client::connect_with("127.0.0.1:1", cfg).is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "dialing a dead peer must be bounded, took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn unresolvable_address_errors() {
+        let cfg = ClientConfig {
+            retries: 0,
+            backoff: Duration::from_millis(1),
+            ..Default::default()
+        };
+        assert!(Client::connect_with("definitely-not-a-host-xyz:80", cfg).is_err());
     }
 }

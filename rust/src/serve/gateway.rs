@@ -394,15 +394,30 @@ impl Handler for GatewayState {
 }
 
 impl GatewayState {
+    /// `GET /health`: a real readiness probe, not just liveness. Besides
+    /// the model identity fields, it reports resident task count (cache
+    /// residency vs directory size), store reachability (a replica whose
+    /// store mount vanished must stop taking failover traffic — it could
+    /// serve residents but not cold-load), and train-queue depth. The
+    /// cluster health monitor ejects replicas whose
+    /// [`Health::ready`](super::protocol::Health::ready) turns false.
     fn health(&self) -> HttpResponse {
+        let snap = self.server.metrics_snapshot();
         let h = super::protocol::Health {
             status: "ok".to_string(),
             backend: self.rt.backend_name().to_string(),
             preset: self.rt.manifest.preset.clone(),
             vocab: self.rt.manifest.dims.vocab,
             seq: self.rt.manifest.dims.seq,
-            tasks: self.server.tasks().len(),
+            tasks: snap.registered,
             draining: self.server.is_draining(),
+            resident: snap.cache.resident,
+            store_ok: self.store.probe(),
+            train_queue: self
+                .trainer
+                .as_ref()
+                .map(|t| t.active_jobs())
+                .unwrap_or(0),
         };
         HttpResponse::json(200, &h.to_json())
     }
@@ -712,10 +727,26 @@ impl GatewayState {
         };
         span.set_task(&preq.task);
         if self.server.task_info(&preq.task).is_none() {
-            return HttpResponse::error(
-                404,
-                &format!("unknown task {:?} (see GET /tasks)", preq.task),
-            );
+            // failover discovery: a task hot-registered through another
+            // replica of the same store is admitted from its persisted
+            // metadata instead of 404ing — the cold-load seam below then
+            // pages its banks in like any evicted task
+            match self.server.admit_from_store(&preq.task) {
+                Ok(true) => {}
+                Ok(false) => {
+                    return HttpResponse::error(
+                        404,
+                        &format!("unknown task {:?} (see GET /tasks)", preq.task),
+                    );
+                }
+                Err(e) => {
+                    self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    return HttpResponse::error(
+                        503,
+                        &format!("store lookup failed for task {:?}: {e:#}", preq.task),
+                    );
+                }
+            }
         }
         if self.server.is_draining() {
             return HttpResponse::error(503, "server draining");

@@ -112,6 +112,7 @@ pub fn status_text(code: u16) -> &'static str {
         405 => "Method Not Allowed",
         413 => "Payload Too Large",
         500 => "Internal Server Error",
+        502 => "Bad Gateway",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Unknown",
@@ -269,12 +270,27 @@ pub fn write_request(
     path: &str,
     body: Option<&[u8]>,
 ) -> io::Result<()> {
+    write_request_with_headers(w, method, path, body, &[])
+}
+
+/// Serialize a request with extra headers — the router's forwarding path
+/// uses this to carry the inbound `X-Request-Id` onto the upstream hop.
+pub fn write_request_with_headers(
+    w: &mut impl Write,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+    extra: &[(&str, &str)],
+) -> io::Result<()> {
     write!(w, "{method} {path} HTTP/1.1\r\n")?;
     write!(w, "host: adapterbert\r\n")?;
     if body.is_some() {
         write!(w, "content-type: application/json\r\n")?;
     }
     write!(w, "content-length: {}\r\n", body.map_or(0, <[u8]>::len))?;
+    for (name, value) in extra {
+        write!(w, "{}: {value}\r\n", name.to_ascii_lowercase())?;
+    }
     write!(w, "connection: keep-alive\r\n\r\n")?;
     if let Some(b) = body {
         w.write_all(b)?;
@@ -303,7 +319,8 @@ impl ClientResponse {
 pub fn read_client_response(r: &mut impl BufRead) -> Result<ClientResponse> {
     let status_line = match read_line(r, MAX_HEAD_BYTES)? {
         LineOutcome::Line(l) => String::from_utf8(l).context("status line not utf-8")?,
-        _ => bail!("connection closed before response"),
+        LineOutcome::Idle => bail!("read timed out waiting for response"),
+        LineOutcome::Eof => bail!("connection closed before response"),
     };
     let status: u16 = status_line
         .split_whitespace()
@@ -668,6 +685,26 @@ mod tests {
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/tasks");
         assert_eq!(req.body, br#"{"a":1}"#);
+    }
+
+    #[test]
+    fn request_with_extra_headers_roundtrip() {
+        let mut wire = Vec::new();
+        write_request_with_headers(
+            &mut wire,
+            "POST",
+            "/predict",
+            Some(br#"{"task":"t"}"#),
+            &[("X-Request-Id", "req-7-9")],
+        )
+        .unwrap();
+        let ReadOutcome::Request(req) =
+            read_request(&mut Cursor::new(wire)).unwrap()
+        else {
+            panic!("expected request");
+        };
+        assert_eq!(req.header("x-request-id"), Some("req-7-9"));
+        assert_eq!(req.body, br#"{"task":"t"}"#);
     }
 
     #[test]

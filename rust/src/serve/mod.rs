@@ -47,7 +47,7 @@ pub mod http;
 pub mod protocol;
 pub mod registry;
 
-pub use client::Client;
+pub use client::{Client, ClientConfig};
 pub use gateway::{Gateway, GatewayConfig, GatewayReport, LatencyHist};
 pub use http::{HttpConfig, HttpServer};
 pub use protocol::{

@@ -133,7 +133,10 @@ fn opt_i32_vec(j: &Json, key: &str) -> Result<Option<Vec<i32>>> {
 // wire types
 // ---------------------------------------------------------------------------
 
-/// `GET /health` response.
+/// `GET /health` response — liveness plus the readiness fields the
+/// cluster router's health checker reads. The readiness trio
+/// (`resident`/`store_ok`/`train_queue`) is optional on the wire so
+/// older gateways still parse: absent fields degrade to "ready".
 #[derive(Debug, Clone)]
 pub struct Health {
     pub status: String,
@@ -145,9 +148,22 @@ pub struct Health {
     pub seq: usize,
     pub tasks: usize,
     pub draining: bool,
+    /// tasks with banks resident in memory right now (≤ `tasks` under a
+    /// byte-budget cache)
+    pub resident: usize,
+    /// the adapter store answered a cheap probe — a replica that cannot
+    /// reach the source of truth cannot cold-load and is not ready
+    pub store_ok: bool,
+    /// background training jobs queued or running
+    pub train_queue: usize,
 }
 
 impl Health {
+    /// Ready to take routed traffic: live, not draining, store reachable.
+    pub fn ready(&self) -> bool {
+        self.status == "ok" && !self.draining && self.store_ok
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("status", Json::str(&self.status)),
@@ -157,18 +173,27 @@ impl Health {
             ("seq", Json::num(self.seq as f64)),
             ("tasks", Json::num(self.tasks as f64)),
             ("draining", Json::Bool(self.draining)),
+            ("resident", Json::num(self.resident as f64)),
+            ("store_ok", Json::Bool(self.store_ok)),
+            ("train_queue", Json::num(self.train_queue as f64)),
         ])
     }
 
     pub fn from_json(j: &Json) -> Result<Health> {
+        let tasks = get_usize(j, "tasks")?;
         Ok(Health {
             status: get_str(j, "status")?,
             backend: get_str(j, "backend")?,
             preset: get_str(j, "preset")?,
             vocab: get_usize(j, "vocab")?,
             seq: get_usize(j, "seq")?,
-            tasks: get_usize(j, "tasks")?,
+            tasks,
             draining: j.get("draining").and_then(Json::as_bool).unwrap_or(false),
+            // readiness fields are newer than the wire format: a gateway
+            // that omits them counts as fully resident and reachable
+            resident: opt_usize(j, "resident").unwrap_or(tasks),
+            store_ok: opt_bool(j, "store_ok").unwrap_or(true),
+            train_queue: opt_usize(j, "train_queue").unwrap_or(0),
         })
     }
 }
@@ -1033,6 +1058,9 @@ mod tests {
             seq: 16,
             tasks: 2,
             draining: false,
+            resident: 1,
+            store_ok: true,
+            train_queue: 3,
         };
         let back =
             Health::from_json(&Json::parse(&h.to_json().to_string()).unwrap()).unwrap();
@@ -1040,5 +1068,32 @@ mod tests {
         assert_eq!(back.seq, 16);
         assert_eq!(back.tasks, 2);
         assert!(!back.draining);
+        assert_eq!(back.resident, 1);
+        assert!(back.store_ok);
+        assert_eq!(back.train_queue, 3);
+        assert!(back.ready());
+    }
+
+    #[test]
+    fn health_readiness_fields_are_wire_optional() {
+        // an older gateway's document (no readiness trio) still parses
+        // and degrades to "ready"
+        let old = Json::parse(
+            r#"{"status":"ok","backend":"native","preset":"test",
+                "vocab":256,"seq":16,"tasks":4}"#,
+        )
+        .unwrap();
+        let h = Health::from_json(&old).unwrap();
+        assert_eq!(h.resident, 4, "defaults to fully resident");
+        assert!(h.store_ok);
+        assert_eq!(h.train_queue, 0);
+        assert!(h.ready());
+        // draining or a dead store makes a live replica not-ready
+        let mut d = h.clone();
+        d.draining = true;
+        assert!(!d.ready());
+        let mut s = h;
+        s.store_ok = false;
+        assert!(!s.ready());
     }
 }

@@ -51,7 +51,7 @@ pub fn install_trained(
         .prepare_task(n_classes, model)
         .with_context(|| format!("bank for task {task:?} is not servable"))?;
     let meta = store
-        .register(task, model, val_score)
+        .register_with_classes(task, model, n_classes, val_score)
         .with_context(|| format!("storing bank for task {task:?}"))?;
     server.install_task(task, prepared);
     Ok(meta)

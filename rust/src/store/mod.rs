@@ -52,6 +52,10 @@ pub struct BankMeta {
     pub m: Option<usize>,
     pub k: Option<usize>,
     pub kind: String,
+    /// Head class count (`cls` kinds; 2 for the binary default). Stored
+    /// so a replica that never saw the task registered can still admit
+    /// it from the store alone — the cluster failover path.
+    pub n_classes: usize,
     pub val_score: f64,
     pub trained_params: usize,
     pub trained_params_no_head: usize,
@@ -96,13 +100,39 @@ impl AdapterStore {
         Ok(store)
     }
 
+    /// Cheap reachability probe: in-memory stores are always reachable;
+    /// a disk-backed store must have a listable root. The gateway's
+    /// `/health` readiness section calls this per request, so it stays
+    /// one `read_dir` open — no bank reads, no lock.
+    pub fn probe(&self) -> bool {
+        match &self.root {
+            None => true,
+            Some(root) => std::fs::read_dir(root).is_ok(),
+        }
+    }
+
+    /// Register a new version for `task` with the binary-classification
+    /// default head shape. See [`AdapterStore::register_with_classes`]
+    /// for the full form — callers that know the real class count (the
+    /// serving registration seam) must use it, or a cluster replica
+    /// admitting the task from the store would rebuild the wrong head.
+    pub fn register(&self, task: &str, model: &TaskModel, val_score: f64)
+                    -> Result<BankMeta> {
+        self.register_with_classes(task, model, 2, val_score)
+    }
+
     /// Register a new version for `task`; returns the assigned version.
     ///
     /// Disk writes are atomic (tmp file + rename) with the `v<NNN>.json`
     /// sidecar renamed last as the commit record: a crash at any point
     /// leaves either the complete pair or nothing reload will serve.
-    pub fn register(&self, task: &str, model: &TaskModel, val_score: f64)
-                    -> Result<BankMeta> {
+    pub fn register_with_classes(
+        &self,
+        task: &str,
+        model: &TaskModel,
+        n_classes: usize,
+        val_score: f64,
+    ) -> Result<BankMeta> {
         validate_task_name(task)?;
         let mut tasks = self.tasks.lock().unwrap();
         let versions = tasks.entry(task.to_string()).or_default();
@@ -117,6 +147,7 @@ impl AdapterStore {
             m: model.m,
             k: model.k,
             kind: model.kind.clone(),
+            n_classes,
             val_score,
             trained_params: model.trained_param_count(),
             trained_params_no_head: model.trained_param_count_no_head(),
@@ -458,6 +489,7 @@ fn meta_to_json(m: &BankMeta) -> Json {
         ("version", Json::num(m.version as f64)),
         ("variant", Json::str(&m.variant)),
         ("kind", Json::str(&m.kind)),
+        ("n_classes", Json::num(m.n_classes as f64)),
         ("val_score", Json::num(m.val_score)),
         ("trained_params", Json::num(m.trained_params as f64)),
         ("trained_params_no_head", Json::num(m.trained_params_no_head as f64)),
@@ -479,6 +511,9 @@ fn meta_from_json(j: &Json) -> Result<BankMeta> {
         m: j.get("m").and_then(|v| v.as_usize()),
         k: j.get("k").and_then(|v| v.as_usize()),
         kind: j.at("kind").as_str().context("kind")?.to_string(),
+        // sidecars written before the cluster tier lack this field; the
+        // binary default matches what those deployments served
+        n_classes: j.get("n_classes").and_then(Json::as_usize).unwrap_or(2),
         val_score: j.at("val_score").as_f64().context("val_score")?,
         trained_params: j.at("trained_params").as_usize().context("tp")?,
         trained_params_no_head: j
@@ -547,6 +582,50 @@ mod tests {
         assert_eq!(meta.val_score, 0.95);
         assert_eq!(m.trained.get("adapters/x").unwrap().as_f32(), &[4.5; 3]);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn n_classes_persists_and_old_sidecars_default_binary() {
+        let dir = std::env::temp_dir()
+            .join(format!("abstore_ncls_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let s = AdapterStore::at(&dir).unwrap();
+            let meta = s.register_with_classes("t", &model(1.0), 5, 0.9).unwrap();
+            assert_eq!(meta.n_classes, 5);
+        }
+        // the class count survives the disk roundtrip …
+        let s2 = AdapterStore::at(&dir).unwrap();
+        assert_eq!(s2.latest_meta("t").unwrap().n_classes, 5);
+        // … and a pre-cluster sidecar (no n_classes field) still parses,
+        // defaulting to the binary head those deployments served
+        let sidecar = dir.join("t").join("v001.json");
+        let stripped: Json = Json::Obj(
+            Json::parse(&std::fs::read_to_string(&sidecar).unwrap())
+                .unwrap()
+                .as_obj()
+                .unwrap()
+                .iter()
+                .filter(|(k, _)| k.as_str() != "n_classes")
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        );
+        std::fs::write(&sidecar, stripped.to_string()).unwrap();
+        let s3 = AdapterStore::at(&dir).unwrap();
+        assert_eq!(s3.latest_meta("t").unwrap().n_classes, 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn probe_reports_store_reachability() {
+        assert!(AdapterStore::in_memory().probe());
+        let dir = std::env::temp_dir()
+            .join(format!("abstore_probe_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = AdapterStore::at(&dir).unwrap();
+        assert!(s.probe());
+        std::fs::remove_dir_all(&dir).unwrap();
+        assert!(!s.probe(), "a vanished root is unreachable");
     }
 
     #[test]

@@ -1,0 +1,486 @@
+//! Cluster-tier integration tests (test preset, native backend, real
+//! sockets).
+//!
+//! The acceptance path for the router tier: ring placement properties
+//! (near-uniform balance, ~1/N churn on membership change), then a live
+//! two-replica cluster behind one router — predictions through the
+//! router match offline eval, a task hot-registered *through* the
+//! router lands on its ring owner and in the shared store, and when
+//! that owner is killed mid-traffic the survivor admits the task from
+//! the store and serves byte-identical predictions. One request id
+//! names a request in both tiers (`Forward` span on the router,
+//! `Request` span on the replica).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adapterbert::cluster::{
+    HashRing, HealthPolicy, Router, RouterConfig, DEFAULT_VNODES,
+};
+use adapterbert::coordinator::{FlushPolicy, Server, ServerConfig};
+use adapterbert::data::grammar::World;
+use adapterbert::data::tasks::{self, TaskKind, TaskSpec};
+use adapterbert::eval::{predict_split, Predictions, TaskModel};
+use adapterbert::model::params::NamedTensors;
+use adapterbert::runtime::Runtime;
+use adapterbert::serve::{Client, Gateway, GatewayConfig, RegisterRequest};
+use adapterbert::store::AdapterStore;
+use adapterbert::train::{self, PretrainConfig, TrainConfig};
+use adapterbert::util::json::Json;
+
+// ---------------------------------------------------------------- ring
+
+fn fleet(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("10.0.0.{i}:7700")).collect()
+}
+
+/// Virtual nodes keep per-replica load within a small factor of uniform.
+#[test]
+fn ring_balance_stays_within_twice_uniform() {
+    let nodes = fleet(4);
+    let ring = HashRing::new(&nodes, DEFAULT_VNODES);
+    let keys = 20_000usize;
+    let mut counts = vec![0usize; nodes.len()];
+    for k in 0..keys {
+        counts[ring.route(&format!("task_{k}")).unwrap()] += 1;
+    }
+    let uniform = keys as f64 / nodes.len() as f64;
+    for (i, &c) in counts.iter().enumerate() {
+        assert!(
+            (c as f64) > uniform / 2.0 && (c as f64) < uniform * 2.0,
+            "node {i} owns {c} of {keys} keys (uniform {uniform})"
+        );
+    }
+}
+
+/// Consistent hashing's defining property: growing the fleet from N to
+/// N+1 moves only the keys the new node takes over (~1/(N+1) of the
+/// keyspace); no key moves *between* pre-existing nodes. Removal is the
+/// mirror image, so one direction covers both.
+#[test]
+fn membership_change_moves_about_one_nth_of_keys() {
+    let nodes = fleet(5);
+    let before = HashRing::new(&nodes[..4], DEFAULT_VNODES);
+    let after = HashRing::new(&nodes, DEFAULT_VNODES);
+    let keys = 20_000usize;
+    let mut moved = 0usize;
+    for k in 0..keys {
+        let key = format!("task_{k}");
+        let a = before.node(before.route(&key).unwrap());
+        let b = after.node(after.route(&key).unwrap());
+        if a != b {
+            moved += 1;
+            assert_eq!(
+                b, nodes[4],
+                "{key} moved between pre-existing nodes, not to the joiner"
+            );
+        }
+    }
+    let frac = moved as f64 / keys as f64;
+    assert!(
+        frac > 0.08 && frac < 0.40,
+        "joining 1 of 5 should move ~20% of keys, moved {:.1}%",
+        frac * 100.0
+    );
+}
+
+/// Failover uses the preference list, so the dead owner's shard must
+/// spill to exactly the node that would own it if the owner were
+/// removed from the ring outright.
+#[test]
+fn preference_successor_matches_ring_without_owner() {
+    let nodes = fleet(4);
+    let ring = HashRing::new(&nodes, DEFAULT_VNODES);
+    for k in 0..200 {
+        let key = format!("task_{k}");
+        let pref = ring.preference(&key);
+        let owner = &nodes[pref[0]];
+        let successor = &nodes[pref[1]];
+        let without: Vec<String> =
+            nodes.iter().filter(|n| *n != owner).cloned().collect();
+        let shrunk = HashRing::new(&without, DEFAULT_VNODES);
+        assert_eq!(
+            shrunk.node(shrunk.route(&key).unwrap()),
+            successor,
+            "{key}: failover target disagrees with owner-removed ring"
+        );
+    }
+}
+
+// ------------------------------------------------------- live cluster
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(
+        Runtime::open(
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")),
+            "test",
+        )
+        .expect("open test preset (built-in presets synthesize their manifest)"),
+    )
+}
+
+fn world(rt: &Runtime) -> World {
+    World::new(rt.manifest.dims.vocab, 0)
+}
+
+fn pretrained_base(rt: &Arc<Runtime>) -> NamedTensors {
+    static BASE: std::sync::OnceLock<NamedTensors> = std::sync::OnceLock::new();
+    BASE.get_or_init(|| {
+        train::load_or_pretrain(
+            rt,
+            &world(rt),
+            &PretrainConfig { steps: 3000, log_every: 0, ..Default::default() },
+            Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs/base_test.bank")),
+        )
+        .unwrap()
+    })
+    .clone()
+}
+
+fn cls_spec(name: &str, seed: u64) -> TaskSpec {
+    TaskSpec {
+        name: name.to_string(),
+        kind: TaskKind::Cls { n_classes: 2, pair: false },
+        metric: tasks::Metric::Accuracy,
+        n_train: 240,
+        n_val: 48,
+        n_test: 48,
+        purity: 0.85,
+        noise: 0.0,
+        seed,
+    }
+}
+
+fn train_cls(
+    rt: &Arc<Runtime>,
+    base: &NamedTensors,
+    name: &str,
+    seed: u64,
+) -> (TaskModel, tasks::TaskData, f64) {
+    let spec = cls_spec(name, seed);
+    let data = tasks::generate(&world(rt), &spec, rt.manifest.dims.seq);
+    let cfg = TrainConfig::new("cls_train_adapter_m4", 1e-3, 5, 0);
+    let res = train::train_task(rt, &cfg, &data, base).unwrap();
+    (res.model, data, res.val_score)
+}
+
+fn class_preds(
+    rt: &Arc<Runtime>,
+    model: &TaskModel,
+    base: &NamedTensors,
+    split: &tasks::Split,
+) -> Vec<usize> {
+    match predict_split(rt, model, base, split, 2, None).unwrap() {
+        Predictions::Class(v) => v,
+        other => panic!("expected class predictions, got {other:?}"),
+    }
+}
+
+fn start_replica(
+    rt: &Arc<Runtime>,
+    store: &Arc<AdapterStore>,
+    base: &NamedTensors,
+    classes: &BTreeMap<String, usize>,
+) -> Gateway {
+    let server = Server::start(
+        rt.clone(),
+        store,
+        base,
+        classes,
+        ServerConfig {
+            flush: FlushPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_millis(2),
+            },
+            executors: 2,
+            queue_capacity: 256,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    Gateway::start(
+        rt.clone(),
+        store.clone(),
+        server,
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )
+    .unwrap()
+}
+
+/// Predict through the router, retrying while failover converges: a
+/// request can race the ejection of a just-killed replica, so transient
+/// errors are expected for a bounded window, never past the deadline.
+fn predict_converged(
+    client: &mut Client,
+    task: &str,
+    tokens: &[i32],
+    deadline: Instant,
+) -> usize {
+    loop {
+        match client.predict_ids(task, tokens) {
+            Ok(resp) => {
+                return resp.pred_class.expect("cls response carries a class")
+            }
+            Err(e) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "failover never converged for {task}: {e:#}"
+                );
+                let _ = client.reconnect();
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// The headline test: two replicas behind one router. Routed predictions
+/// match offline eval; hot registration through the router lands on the
+/// ring owner and in the shared store; killing that owner mid-traffic
+/// ejects it and the survivor serves the task byte-identically from the
+/// store; one rid names a request in both tiers.
+#[test]
+fn router_shards_hot_registers_and_fails_over() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let (model_a, data_a, val_a) = train_cls(&rt, &base, "cta", 61);
+    let (model_b, data_b, val_b) = train_cls(&rt, &base, "ctb", 62);
+    let (model_c, data_c, _val_c) = train_cls(&rt, &base, "ctc", 63);
+    let exp_a = class_preds(&rt, &model_a, &base, &data_a.test);
+    let exp_b = class_preds(&rt, &model_b, &base, &data_b.test);
+    let exp_c = class_preds(&rt, &model_c, &base, &data_c.test);
+
+    // one shared store — the single source of truth across the fleet
+    let store = Arc::new(AdapterStore::in_memory());
+    store.register_with_classes("cta", &model_a, 2, val_a).unwrap();
+    store.register_with_classes("ctb", &model_b, 2, val_b).unwrap();
+    let mut classes = BTreeMap::new();
+    classes.insert("cta".to_string(), 2);
+    classes.insert("ctb".to_string(), 2);
+
+    let mut gws: Vec<Gateway> = (0..2)
+        .map(|_| start_replica(&rt, &store, &base, &classes))
+        .collect();
+    let addrs: Vec<String> =
+        gws.iter().map(|g| g.local_addr().to_string()).collect();
+
+    let router = Router::start(
+        addrs.clone(),
+        RouterConfig {
+            health: HealthPolicy {
+                interval: Duration::from_millis(50),
+                timeout: Duration::from_millis(250),
+                fail_after: 1,
+                pass_after: 2,
+            },
+            trace: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let raddr = router.local_addr().to_string();
+
+    let mut client = Client::connect(&raddr).unwrap();
+
+    // the identity document survives the extra tier (clients bootstrap
+    // tokenizers from vocab/seq), annotated with fleet liveness
+    let health = client.health().unwrap();
+    assert_eq!(health.status, "ok");
+    assert_eq!(health.seq, rt.manifest.dims.seq);
+    let (status, hj) = client.roundtrip("GET", "/health", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(hj.at("role").as_str(), Some("router"));
+    assert_eq!(hj.at("healthy").as_usize(), Some(2));
+    assert_eq!(hj.at("replicas").as_arr().unwrap().len(), 2);
+
+    // routed predictions match offline eval, row by row
+    for (task, data, exp) in
+        [("cta", &data_a, &exp_a), ("ctb", &data_b, &exp_b)]
+    {
+        for row in 0..8usize.min(data.test.n) {
+            let resp =
+                client.predict_ids(task, data.test.row_tokens(row)).unwrap();
+            assert_eq!(resp.kind, "cls", "{task} row {row}");
+            assert_eq!(
+                resp.pred_class,
+                Some(exp[row]),
+                "{task} row {row}: routed prediction diverged from offline"
+            );
+        }
+    }
+
+    // one rid names the request in both tiers: raw socket so the header
+    // is under test control, then both span kinds must carry it
+    {
+        use std::io::Write as _;
+
+        use adapterbert::serve::http::read_client_response;
+
+        let toks: Vec<String> = data_a
+            .test
+            .row_tokens(0)
+            .iter()
+            .map(|t| t.to_string())
+            .collect();
+        let body =
+            format!("{{\"task\":\"cta\",\"tokens\":[{}]}}", toks.join(","));
+        let stream = std::net::TcpStream::connect(&raddr).unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        write!(
+            writer,
+            "POST /predict_ids HTTP/1.1\r\nhost: t\r\n\
+             x-request-id: rid-cluster-42\r\ncontent-type: application/json\r\n\
+             content-length: {}\r\nconnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        writer.flush().unwrap();
+        let resp = read_client_response(&mut reader).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("x-request-id"), Some("rid-cluster-42"));
+
+        let t = client.trace().unwrap();
+        let spans = t.at("spans").as_arr().unwrap();
+        let tier = |kind: &str| {
+            spans.iter().any(|s| {
+                s.at("kind").as_str() == Some(kind)
+                    && s.at("rid").as_str() == Some("rid-cluster-42")
+            })
+        };
+        assert!(tier("forward"), "router Forward span carries the rid");
+        assert!(tier("request"), "replica Request span carries the same rid");
+    }
+
+    // hot-register the third task THROUGH the router: the body's task
+    // field routes it to the ring owner; the bank lands in the shared
+    // store exactly once
+    let reg = RegisterRequest::from_model("ctc", 2, 0.9, &model_c);
+    let reg_resp = client.register_task(&reg).unwrap();
+    assert_eq!(reg_resp.task, "ctc");
+    assert!(store.latest_meta("ctc").is_some(), "registration hit the store");
+
+    // fan-in GET /tasks unions the replicas (only the owner knows ctc)
+    let names: Vec<String> =
+        client.tasks().unwrap().iter().map(|t| t.task.clone()).collect();
+    assert_eq!(names, vec!["cta", "ctb", "ctc"]);
+
+    for row in 0..8usize.min(data_c.test.n) {
+        let resp = client.predict_ids("ctc", data_c.test.row_tokens(row)).unwrap();
+        assert_eq!(resp.pred_class, Some(exp_c[row]), "hot task row {row}");
+    }
+
+    // kill the ring owner of ctc — the replica that just served it
+    let owner = router.owner_of("ctc").expect("non-empty ring").to_string();
+    let victim = addrs.iter().position(|a| *a == owner).unwrap();
+    let dead = gws.swap_remove(victim);
+    dead.shutdown().unwrap();
+
+    // failover: the router walks past the dead owner, the survivor
+    // admits ctc from the shared store and cold-loads its bank — the
+    // predictions must be byte-identical to the dead owner's
+    let deadline = Instant::now() + Duration::from_secs(30);
+    for row in 0..8usize.min(data_c.test.n) {
+        let got =
+            predict_converged(&mut client, "ctc", data_c.test.row_tokens(row), deadline);
+        assert_eq!(got, exp_c[row], "failover row {row} diverged");
+    }
+    // the pre-registered tasks ride out the failover too
+    for (task, data, exp) in
+        [("cta", &data_a, &exp_a), ("ctb", &data_b, &exp_b)]
+    {
+        for row in 0..4usize.min(data.test.n) {
+            let got = predict_converged(
+                &mut client,
+                task,
+                data.test.row_tokens(row),
+                deadline,
+            );
+            assert_eq!(got, exp[row], "{task} row {row} after failover");
+        }
+    }
+
+    // the router's own view: one replica ejected, counters exposed in
+    // JSON and in the adapterbert_router_* Prometheus namespace
+    let (status, m) = client.roundtrip("GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(m.at("role").as_str(), Some("router"));
+    assert_eq!(m.at("healthy").as_usize(), Some(1));
+    assert!(m.at("forwards").as_usize().unwrap() > 0);
+    assert_eq!(m.at("ejections").as_usize(), Some(1));
+    assert!(m.at("forward_latency").at("count").as_usize().unwrap() > 0);
+
+    let body = client.metrics_prometheus().unwrap();
+    if let Err(e) = adapterbert::obs::prom::check_exposition(&body) {
+        panic!("router exposition rejected: {e}");
+    }
+    for needle in [
+        "# TYPE adapterbert_router_forwards_total counter",
+        "adapterbert_router_replica_alive",
+        "adapterbert_router_forward_duration_seconds_bucket",
+    ] {
+        assert!(body.contains(needle), "missing {needle:?} in exposition");
+    }
+
+    drop(client);
+    let report = router.shutdown();
+    assert!(report.forwards > 0);
+    assert_eq!(report.ejections, 1, "exactly one healthy→ejected transition");
+    for gw in gws {
+        gw.shutdown().unwrap();
+    }
+}
+
+/// A router over a fleet that is entirely dark refuses task routes with
+/// 503 (`no_replica` counted) instead of hanging or 502-ing.
+#[test]
+fn router_with_dead_fleet_returns_503() {
+    // a bound-then-dropped listener yields a port with nothing behind it
+    let port = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let router = Router::start(
+        vec![format!("127.0.0.1:{port}")],
+        RouterConfig {
+            health: HealthPolicy {
+                interval: Duration::from_millis(20),
+                timeout: Duration::from_millis(100),
+                fail_after: 1,
+                pass_after: 2,
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let raddr = router.local_addr().to_string();
+
+    // wait for the probe loop to eject the phantom replica
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.healthy_replicas() > 0 {
+        assert!(Instant::now() < deadline, "phantom replica never ejected");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let mut client = Client::connect(&raddr).unwrap();
+    let body = Json::obj(vec![
+        ("task", Json::str("anything")),
+        ("text", Json::str("ka ti")),
+    ]);
+    let (status, j) = client.roundtrip("POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 503);
+    assert!(
+        j.at("error").as_str().unwrap_or("").contains("no healthy replica"),
+        "got {j}"
+    );
+    // a missing task field is the caller's fault, not the fleet's
+    let bad = Json::obj(vec![("text", Json::str("ka"))]);
+    let (status, _) = client.roundtrip("POST", "/predict", Some(&bad)).unwrap();
+    assert_eq!(status, 400);
+
+    drop(client);
+    let report = router.shutdown();
+    assert_eq!(report.no_replica, 1);
+    assert_eq!(report.forwards, 0);
+}

@@ -11,7 +11,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -539,6 +539,96 @@ fn stream_hot_installs_into_live_server() {
     let server = Arc::try_unwrap(server).ok().expect("no other refs");
     let metrics = server.shutdown();
     assert_eq!(metrics.requests, 1);
+}
+
+/// PR 8 drain semantics through the wire: flipping `Server::drain` under
+/// concurrent traffic never hangs or corrupts a response — every request
+/// either completes with the correct prediction (accepted before the
+/// flip, or in flight across it) or is refused with the draining 503;
+/// late arrivals are refused, and `/health` reports `draining`.
+#[test]
+fn gateway_drain_completes_inflight_and_refuses_late_arrivals() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let (model, data, val) = train_cls(&rt, &base, "gwdrain", 26);
+    let store = Arc::new(AdapterStore::in_memory());
+    store.register("gwdrain", &model, val).unwrap();
+    let mut classes = BTreeMap::new();
+    classes.insert("gwdrain".to_string(), 2);
+    let server = quick_server(&rt, &store, &base, &classes);
+    let gw = Gateway::start(
+        rt.clone(),
+        store.clone(),
+        server,
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+    )
+    .unwrap();
+    let addr = gw.local_addr().to_string();
+    let exp = class_preds(&rt, &model, &base, &data.test);
+    let rows = 16usize.min(data.test.n);
+
+    let stop = AtomicBool::new(false);
+    let answered = AtomicUsize::new(0);
+    let refused = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let (stop, answered, refused) = (&stop, &answered, &refused);
+        let (addr, data, exp) = (&addr, &data, &exp);
+        for _ in 0..2 {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let row = i % rows;
+                    i += 1;
+                    match client.predict_ids("gwdrain", data.test.row_tokens(row))
+                    {
+                        Ok(resp) => {
+                            // anything answered must be answered correctly
+                            assert_eq!(
+                                resp.pred_class,
+                                Some(exp[row]),
+                                "row {row} corrupted around drain"
+                            );
+                            answered.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            // the only legitimate refusal is the drain 503,
+                            // on a connection that stays usable
+                            assert!(
+                                format!("{e:#}").contains("server draining"),
+                                "unexpected error around drain: {e:#}"
+                            );
+                            refused.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+        // let traffic flow, flip the switch with requests in flight, then
+        // keep the workers hammering the draining gateway for a while
+        std::thread::sleep(Duration::from_millis(150));
+        gw.server().drain();
+        std::thread::sleep(Duration::from_millis(150));
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert!(answered.load(Ordering::Relaxed) > 0, "no request ever answered");
+    assert!(refused.load(Ordering::Relaxed) > 0, "drain refused nothing");
+
+    // late arrivals on a fresh connection are refused too…
+    let mut client = Client::connect(&addr).unwrap();
+    let err = client
+        .predict_ids("gwdrain", data.test.row_tokens(0))
+        .expect_err("draining gateway must refuse new work");
+    assert!(format!("{err:#}").contains("server draining"), "{err:#}");
+    // …and the health document says so (the cluster prober keys off this)
+    let health = client.health().unwrap();
+    assert!(health.draining, "health must advertise draining");
+    assert_eq!(health.status, "ok");
+    drop(client);
+
+    // drain-then-shutdown answers everything it accepted
+    let report = gw.shutdown().unwrap();
+    assert_eq!(report.server.requests, report.server.latencies.len() as u64);
 }
 
 /// PR 7 observability: request ids are honored/minted and echoed on every
