@@ -1,0 +1,1078 @@
+//! `bench chaos`: deterministic fault schedule against an in-process
+//! cluster → `BENCH_chaos.json`.
+//!
+//! Everything runs in-process on ephemeral ports: one shared runtime and
+//! one shared in-memory `AdapterStore` (behind a fault-injectable
+//! [`BankSource`] wrapper) back two `Gateway` replicas behind one
+//! `cluster::Router`. The schedule is fixed and seeded — which faults
+//! fire, in what order, against which tenant — so two runs exercise the
+//! same code paths even though wall-clock timings differ:
+//!
+//! * **baseline** — well-behaved closed-loop traffic; its p99 anchors
+//!   the flood-phase SLO;
+//! * **slow_replica** — a byte-pump TCP proxy in front of replica 0
+//!   delays every response chunk past the router's upstream read
+//!   timeout: the replica is alive (accepts, eventually answers) but
+//!   useless. The router's circuit breaker must trip from passive
+//!   forward failures and traffic must converge on the healthy replica;
+//! * **stalled_store** — the shared store stalls every bank fetch for a
+//!   cold tenant far past that tenant's deadline budget: its requests
+//!   must die by deadline (never a post-deadline `200`), and resident
+//!   tenants must keep serving;
+//! * **flood** — one tenant floods with short budgets while the rest
+//!   run normally: the brownout controller sheds the hog, expired rows
+//!   never reach the engine (counter-verified), and the well-behaved
+//!   p99 stays within `p99_ratio_limit ×` baseline;
+//! * **kill_owner** — the replica owning the flooded tenant is shut
+//!   down mid-traffic; the tail after the kill must stay busy.
+//!
+//! The report is schema-pinned (v1) and carries an `slo` block CI gates
+//! on: zero post-deadline `200`s across every phase, bounded shed rate,
+//! and the flood-phase p99 ratio.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::loadgen;
+use crate::cluster::{
+    HashRing, HealthPolicy, Router, RouterConfig, RouterReport, DEFAULT_VNODES,
+};
+use crate::coordinator::{FlushPolicy, Server, ServerConfig};
+use crate::data::grammar::World;
+use crate::data::tasks::{self, Metric, TaskKind, TaskSpec};
+use crate::eval::TaskModel;
+use crate::model::params::NamedTensors;
+use crate::runtime::Runtime;
+use crate::serve::{
+    Client, ClientConfig, Gateway, GatewayConfig, GatewayReport, HttpConfig,
+    PredictRequest,
+};
+use crate::store::{AdapterStore, BankMeta, BankSource};
+use crate::train::{self, PretrainConfig, TrainConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A `200` counts as *late* only when it lands this far past the
+/// client's own deadline — absorbs scheduler jitter between the last
+/// socket read and the clock check.
+const LATE_SLACK: Duration = Duration::from_millis(50);
+
+/// Flood-phase p99 may be at most this multiple of the baseline p99.
+const P99_RATIO_LIMIT: f64 = 3.0;
+
+/// Harness knobs.
+#[derive(Debug, Clone)]
+pub struct ChaosBenchConfig {
+    pub preset: String,
+    /// Well-behaved tenant tasks trained into the shared store (one
+    /// extra cold tenant is always trained on top for the stalled-store
+    /// phase).
+    pub tenants: usize,
+    /// Adapter size for the tenants.
+    pub m: usize,
+    /// MLM pre-training steps when no cached base exists.
+    pub pretrain_steps: usize,
+    /// Closed-loop well-behaved client threads per phase.
+    pub concurrency: usize,
+    /// Budget minted by well-behaved clients.
+    pub deadline: Duration,
+    /// Budget minted by the flooding tenant (and the cold tenant).
+    pub flood_deadline: Duration,
+    /// Flooding client threads during the flood phase.
+    pub flood_workers: usize,
+    /// Traffic window per phase.
+    pub phase_duration: Duration,
+    /// Injected per-chunk response delay for the slow replica.
+    pub slow_delay: Duration,
+    /// Injected stall per bank fetch for the cold tenant.
+    pub stall: Duration,
+    /// Schedule seed (task/text choices in the drivers).
+    pub seed: u64,
+}
+
+impl Default for ChaosBenchConfig {
+    fn default() -> Self {
+        ChaosBenchConfig {
+            preset: "test".to_string(),
+            tenants: 4,
+            m: 8,
+            pretrain_steps: 120,
+            concurrency: 4,
+            deadline: Duration::from_millis(2000),
+            flood_deadline: Duration::from_millis(400),
+            flood_workers: 12,
+            phase_duration: Duration::from_millis(2500),
+            slow_delay: Duration::from_millis(600),
+            stall: Duration::from_millis(900),
+            seed: 7,
+        }
+    }
+}
+
+/// Client-observed outcome counts for one phase (or one worker class
+/// within a phase).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseStats {
+    pub name: String,
+    pub requests: u64,
+    /// `200`s.
+    pub ok: u64,
+    /// `200`s that landed after the client's own deadline (+slack) —
+    /// the headline SLO is that this stays zero everywhere.
+    pub late_ok: u64,
+    /// `503`s (brownout shed, admission window, draining, no replica).
+    pub shed: u64,
+    /// `504`s (deadline exceeded / reply timeout).
+    pub deadline_504: u64,
+    /// Transport errors (client-side read timeouts, resets).
+    pub errors: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl PhaseStats {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("requests", Json::num(self.requests as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("late_ok", Json::num(self.late_ok as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("deadline_504", Json::num(self.deadline_504 as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+        ])
+    }
+}
+
+/// Router-side counters summed over every phase's router.
+#[derive(Debug, Clone, Default)]
+pub struct RouterTotals {
+    pub breaker_trips: u64,
+    pub breaker_fast_fails: u64,
+    pub deadline_rejected: u64,
+    pub reroutes: u64,
+    pub ejections: u64,
+}
+
+impl RouterTotals {
+    fn absorb(&mut self, r: &RouterReport) {
+        self.breaker_trips += r.breaker_trips;
+        self.breaker_fast_fails += r.breaker_fast_fails;
+        self.deadline_rejected += r.deadline_rejected;
+        self.reroutes += r.reroutes;
+        self.ejections += r.ejections;
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("breaker_trips", Json::num(self.breaker_trips as f64)),
+            ("breaker_fast_fails", Json::num(self.breaker_fast_fails as f64)),
+            ("deadline_rejected", Json::num(self.deadline_rejected as f64)),
+            ("reroutes", Json::num(self.reroutes as f64)),
+            ("ejections", Json::num(self.ejections as f64)),
+        ])
+    }
+}
+
+/// Coordinator-side deadline counters summed over every replica that
+/// served a phase — the "engine never executed an expired row" evidence.
+#[derive(Debug, Clone, Default)]
+pub struct CoordinatorTotals {
+    /// Rows the engine executed.
+    pub requests: u64,
+    /// Expired rows purged from the batch queues.
+    pub expired_queue: u64,
+    /// Expired rows dropped at the pre-execution partition.
+    pub expired_exec: u64,
+    /// Executed rows whose reply was suppressed past the deadline.
+    pub late_replies: u64,
+}
+
+impl CoordinatorTotals {
+    fn absorb(&mut self, g: &GatewayReport) {
+        self.requests += g.server.requests;
+        self.expired_queue += g.server.expired_queue;
+        self.expired_exec += g.server.expired_exec;
+        self.late_replies += g.server.late_replies;
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("expired_queue", Json::num(self.expired_queue as f64)),
+            ("expired_exec", Json::num(self.expired_exec as f64)),
+            ("late_replies", Json::num(self.late_replies as f64)),
+        ])
+    }
+}
+
+/// The whole run.
+#[derive(Debug)]
+pub struct ChaosReport {
+    /// One row per schedule phase, in schedule order.
+    pub phases: Vec<PhaseStats>,
+    /// Well-behaved tenants' p99 during the flood, and its ratio to the
+    /// baseline p99.
+    pub flood_well_p99_ms: f64,
+    pub p99_ratio: f64,
+    pub router: RouterTotals,
+    pub coordinator: CoordinatorTotals,
+}
+
+impl ChaosReport {
+    fn late_ok_total(&self) -> u64 {
+        self.phases.iter().map(|p| p.late_ok).sum()
+    }
+
+    fn shed_rate(&self) -> f64 {
+        let (shed, reqs): (u64, u64) = self
+            .phases
+            .iter()
+            .fold((0, 0), |(s, r), p| (s + p.shed, r + p.requests));
+        if reqs == 0 {
+            0.0
+        } else {
+            shed as f64 / reqs as f64
+        }
+    }
+
+    /// The `BENCH_chaos.json` document (schema v1). The `slo` block is
+    /// what CI gates on.
+    pub fn to_json(&self, cfg: &ChaosBenchConfig) -> Json {
+        let zero_late = self.late_ok_total() == 0;
+        let p99_ok = self.p99_ratio <= P99_RATIO_LIMIT;
+        let shed_rate = self.shed_rate();
+        // "bounded": shedding may be heavy under deliberate overload but
+        // must never drown the run — some traffic always gets through
+        let shed_bounded = shed_rate < 0.95;
+        Json::obj(vec![
+            ("bench", Json::str("chaos")),
+            ("schema_version", Json::num(1.0)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("preset", Json::str(&cfg.preset)),
+                    ("tenants", Json::num(cfg.tenants as f64)),
+                    ("m", Json::num(cfg.m as f64)),
+                    ("concurrency", Json::num(cfg.concurrency as f64)),
+                    ("flood_workers", Json::num(cfg.flood_workers as f64)),
+                    ("deadline_ms", Json::num(cfg.deadline.as_secs_f64() * 1e3)),
+                    (
+                        "flood_deadline_ms",
+                        Json::num(cfg.flood_deadline.as_secs_f64() * 1e3),
+                    ),
+                    (
+                        "phase_duration_ms",
+                        Json::num(cfg.phase_duration.as_secs_f64() * 1e3),
+                    ),
+                    ("seed", Json::num(cfg.seed as f64)),
+                ]),
+            ),
+            ("phases", Json::arr(self.phases.iter().map(PhaseStats::to_json))),
+            (
+                "flood",
+                Json::obj(vec![
+                    ("well_p99_ms", Json::num(self.flood_well_p99_ms)),
+                    ("p99_ratio", Json::num(self.p99_ratio)),
+                ]),
+            ),
+            ("router", self.router.to_json()),
+            ("coordinator", self.coordinator.to_json()),
+            (
+                "slo",
+                Json::obj(vec![
+                    ("late_ok_total", Json::num(self.late_ok_total() as f64)),
+                    ("zero_late", Json::Bool(zero_late)),
+                    ("p99_ratio", Json::num(self.p99_ratio)),
+                    ("p99_ratio_limit", Json::num(P99_RATIO_LIMIT)),
+                    ("p99_ok", Json::Bool(p99_ok)),
+                    ("shed_rate", Json::num(shed_rate)),
+                    ("shed_bounded", Json::Bool(shed_bounded)),
+                    ("pass", Json::Bool(zero_late && p99_ok && shed_bounded)),
+                ]),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fault seams
+// ---------------------------------------------------------------------------
+
+/// [`BankSource`] wrapper over the shared store with an injectable
+/// per-task fetch stall — the "remote store hung" fault. Metadata probes
+/// stay healthy (the fault models the expensive read, not the
+/// directory), matching the production failure mode of a slow blob
+/// store behind a fast index.
+struct ChaosStore {
+    inner: Arc<AdapterStore>,
+    stalls: Mutex<BTreeMap<String, Duration>>,
+}
+
+impl ChaosStore {
+    fn new(inner: Arc<AdapterStore>) -> Arc<ChaosStore> {
+        Arc::new(ChaosStore { inner, stalls: Mutex::new(BTreeMap::new()) })
+    }
+
+    fn stall(&self, task: &str, d: Duration) {
+        self.stalls.lock().unwrap().insert(task.to_string(), d);
+    }
+
+    fn heal(&self, task: &str) {
+        self.stalls.lock().unwrap().remove(task);
+    }
+}
+
+impl BankSource for ChaosStore {
+    fn fetch_latest(&self, task: &str) -> Result<Option<(BankMeta, Arc<TaskModel>)>> {
+        let stall = self.stalls.lock().unwrap().get(task).copied();
+        if let Some(d) = stall {
+            thread::sleep(d);
+        }
+        self.inner.fetch_latest(task)
+    }
+
+    fn latest_meta(&self, task: &str) -> Option<BankMeta> {
+        self.inner.latest_meta(task)
+    }
+
+    fn latest_bank_bytes(&self, task: &str) -> Option<u64> {
+        self.inner.latest_bank_bytes(task)
+    }
+
+    fn task_names(&self) -> Vec<String> {
+        self.inner.task_names()
+    }
+}
+
+/// A byte-pump TCP proxy that delays every upstream→client chunk by a
+/// settable amount: the "slow but alive" replica. The request direction
+/// passes verbatim, so the replica really does the work — it just
+/// answers too late for the router's upstream read timeout.
+struct SlowProxy {
+    addr: String,
+    delay_ms: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+fn pump(mut from: TcpStream, mut to: TcpStream, delay_ms: Option<Arc<AtomicU64>>) {
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        if let Some(d) = &delay_ms {
+            let ms = d.load(Ordering::Relaxed);
+            if ms > 0 {
+                thread::sleep(Duration::from_millis(ms));
+            }
+        }
+        if to.write_all(&buf[..n]).is_err() {
+            break;
+        }
+    }
+    let _ = to.shutdown(Shutdown::Write);
+    let _ = from.shutdown(Shutdown::Read);
+}
+
+impl SlowProxy {
+    fn start(upstream: String) -> Result<SlowProxy> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("binding slow proxy")?;
+        let addr = listener.local_addr()?.to_string();
+        let delay_ms = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (d, s) = (delay_ms.clone(), stop.clone());
+        let accept = thread::spawn(move || {
+            for conn in listener.incoming() {
+                if s.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(client) = conn else { continue };
+                let Ok(server) = TcpStream::connect(&upstream) else { continue };
+                let (Ok(c2), Ok(s2)) = (client.try_clone(), server.try_clone())
+                else {
+                    continue;
+                };
+                // request direction verbatim; response direction delayed.
+                // Pump threads die with their sockets when either side
+                // closes, so only the accept loop needs explicit stop.
+                thread::spawn(move || pump(c2, s2, None));
+                let d2 = d.clone();
+                thread::spawn(move || pump(server, client, Some(d2)));
+            }
+        });
+        Ok(SlowProxy { addr, delay_ms, stop, accept: Some(accept) })
+    }
+
+    fn set_delay(&self, d: Duration) {
+        self.delay_ms.store(d.as_millis() as u64, Ordering::Relaxed);
+    }
+
+    fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // wake the accept loop so it observes the flag
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fixture + replicas
+// ---------------------------------------------------------------------------
+
+/// Shared fixture: runtime, base, tenants in one in-memory store.
+struct Fixture {
+    rt: Arc<Runtime>,
+    base: NamedTensors,
+    store: Arc<AdapterStore>,
+    /// Well-behaved tenants, registered with every replica at startup.
+    tenants: Vec<String>,
+    /// Registered in the store only — every replica's first predict for
+    /// it goes through `admit_from_store` + a cold fetch, which the
+    /// stalled-store phase hangs.
+    cold_tenant: String,
+    classes: BTreeMap<String, usize>,
+}
+
+fn tenant_spec(name: &str, seed: u64) -> TaskSpec {
+    TaskSpec {
+        name: name.to_string(),
+        kind: TaskKind::Cls { n_classes: 2, pair: false },
+        metric: Metric::Accuracy,
+        n_train: 240,
+        n_val: 48,
+        n_test: 48,
+        purity: 0.85,
+        noise: 0.0,
+        seed,
+    }
+}
+
+fn setup(cfg: &ChaosBenchConfig) -> Result<Fixture> {
+    let rt = Arc::new(Runtime::open(Path::new("artifacts"), &cfg.preset)?);
+    let world = World::new(rt.manifest.dims.vocab, 0);
+    let base = train::load_or_pretrain(
+        &rt,
+        &world,
+        &PretrainConfig { steps: cfg.pretrain_steps, ..Default::default() },
+        Path::new(&format!("runs/base_{}.bank", cfg.preset)),
+    )?;
+    let store = Arc::new(AdapterStore::in_memory());
+    let exe = format!("cls_train_adapter_m{}", cfg.m);
+    let mut tenants = Vec::new();
+    let mut classes = BTreeMap::new();
+    let cold_tenant = "coldstore".to_string();
+    let mut names: Vec<String> =
+        (0..cfg.tenants.max(2)).map(|k| format!("chaos{k:02}")).collect();
+    names.push(cold_tenant.clone());
+    for (k, name) in names.iter().enumerate() {
+        let data =
+            tasks::generate(&world, &tenant_spec(name, 700 + k as u64), rt.manifest.dims.seq);
+        let res = train::train_task(&rt, &TrainConfig::new(&exe, 1e-3, 3, 0), &data, &base)?;
+        store.register_with_classes(name, &res.model, 2, res.val_score)?;
+        if *name != cold_tenant {
+            classes.insert(name.clone(), 2usize);
+            tenants.push(name.clone());
+        }
+        println!("  tenant {name}: val {:.3}", res.val_score);
+    }
+    Ok(Fixture { rt, base, store, tenants, cold_tenant, classes })
+}
+
+/// One gateway replica over the (fault-injectable) source. A single
+/// executor serializes the trunk so the flood phase builds a real
+/// queue, the brownout knobs are bench-tight so sustained overload
+/// flips the controller within the phase window, and the HTTP pool is
+/// widened so threads wedged in a stalled cold fetch can't starve the
+/// well-behaved tenants on the same replica.
+fn start_replica(fx: &Fixture, source: &Arc<ChaosStore>) -> Result<Gateway> {
+    let server = Server::start_with_source(
+        fx.rt.clone(),
+        source.clone(),
+        &fx.base,
+        &fx.classes,
+        ServerConfig {
+            flush: FlushPolicy {
+                max_batch: fx.rt.manifest.batch,
+                max_delay: Duration::from_millis(2),
+            },
+            executors: 1,
+            // lazy residency (generous budget, no eviction pressure):
+            // with `None` startup eagerly resolves every store task and
+            // the stalled-store phase would have no cold fetch to stall
+            cache_budget: Some(64 * 1024 * 1024),
+            ..Default::default()
+        },
+    )?;
+    Gateway::start(
+        fx.rt.clone(),
+        fx.store.clone(),
+        server,
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            // a predict holds its HTTP worker while awaiting the reply,
+            // so the pool size caps outstanding coordinator rows — wide
+            // enough that the flood can actually build a queue (and
+            // wedged stall threads can't starve resident tenants)
+            http: HttpConfig { workers: 16, ..Default::default() },
+            brownout_target: Duration::from_millis(5),
+            brownout_window: Duration::from_millis(100),
+            ..Default::default()
+        },
+    )
+}
+
+/// Bench-speed router: fast health ejection, no dial retries (the
+/// preference walk is the retry mechanism). `upstream_read` is
+/// per-phase: the slow-replica phase pins it *below* the injected
+/// delay so a slow-but-alive replica surfaces as forward errors the
+/// breaker can count, instead of slow successes nothing acts on.
+fn router_config(upstream_read: Duration) -> RouterConfig {
+    RouterConfig {
+        health: HealthPolicy {
+            interval: Duration::from_millis(100),
+            timeout: Duration::from_millis(500),
+            fail_after: 2,
+            pass_after: 2,
+        },
+        upstream: ClientConfig {
+            connect_timeout: Duration::from_millis(500),
+            read_timeout: Some(upstream_read),
+            retries: 0,
+            backoff: Duration::from_millis(10),
+            deadline: None,
+        },
+        ..Default::default()
+    }
+}
+
+/// Poll the router's `/health` until `healthy` reaches `want`.
+fn wait_healthy(addr: &str, want: usize, timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Ok(mut c) = Client::connect(addr) {
+            if let Ok((status, j)) = c.roundtrip("GET", "/health", None) {
+                if status == 200 && j.get("healthy").and_then(Json::as_usize) == Some(want)
+                {
+                    return Ok(());
+                }
+            }
+        }
+        if Instant::now() > deadline {
+            bail!("router at {addr} never reported {want} healthy replica(s)");
+        }
+        thread::sleep(Duration::from_millis(50));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// traffic driver
+// ---------------------------------------------------------------------------
+
+/// One closed-loop worker's brief: which tasks to hit, with what budget.
+#[derive(Clone)]
+struct WorkerSpec {
+    tasks: Vec<String>,
+    deadline: Duration,
+}
+
+/// Raw per-worker outcome; callers merge by worker class.
+#[derive(Default)]
+struct DriveOutcome {
+    requests: u64,
+    ok: u64,
+    late_ok: u64,
+    shed: u64,
+    deadline_504: u64,
+    errors: u64,
+    /// Latency (seconds) of each `200`.
+    lat: Vec<f64>,
+}
+
+fn merge(name: &str, outs: &[DriveOutcome]) -> PhaseStats {
+    let mut lat: Vec<f64> = outs.iter().flat_map(|o| o.lat.iter().copied()).collect();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    PhaseStats {
+        name: name.to_string(),
+        requests: outs.iter().map(|o| o.requests).sum(),
+        ok: outs.iter().map(|o| o.ok).sum(),
+        late_ok: outs.iter().map(|o| o.late_ok).sum(),
+        shed: outs.iter().map(|o| o.shed).sum(),
+        deadline_504: outs.iter().map(|o| o.deadline_504).sum(),
+        errors: outs.iter().map(|o| o.errors).sum(),
+        p50_ms: pctl_ms(&lat, 0.50),
+        p99_ms: pctl_ms(&lat, 0.99),
+    }
+}
+
+fn pctl_ms(sorted_s: &[f64], q: f64) -> f64 {
+    if sorted_s.is_empty() {
+        return 0.0;
+    }
+    let i = ((q * sorted_s.len() as f64).ceil() as usize).clamp(1, sorted_s.len());
+    sorted_s[i - 1] * 1e3
+}
+
+const PHRASES: [&str; 4] = [
+    "moresa zu kari letu",
+    "kari letu moresa zu",
+    "zu zu letu moresa kari",
+    "letu kari moresa zu vanto",
+];
+
+/// Closed-loop drive: one thread per spec, each hammering its task list
+/// until `stop` flips (the caller owns phase timing and mid-phase
+/// events like kills). Returns one outcome per spec, in order.
+fn drive(
+    addr: &str,
+    specs: &[WorkerSpec],
+    stop: &AtomicBool,
+    seed: u64,
+) -> Vec<DriveOutcome> {
+    thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (w, spec) in specs.iter().enumerate() {
+            handles.push(scope.spawn(move || {
+                let mut out = DriveOutcome::default();
+                let mut rng = Rng::new(seed ^ (w as u64).wrapping_mul(0x9E37));
+                let ccfg = ClientConfig {
+                    connect_timeout: Duration::from_secs(1),
+                    read_timeout: Some(Duration::from_secs(10)),
+                    retries: 0,
+                    backoff: Duration::from_millis(10),
+                    deadline: Some(spec.deadline),
+                };
+                let Ok(mut client) = Client::connect_with(addr, ccfg) else {
+                    return out;
+                };
+                while !stop.load(Ordering::Relaxed) {
+                    let task = &spec.tasks[rng.below(spec.tasks.len())];
+                    let text = PHRASES[rng.below(PHRASES.len())];
+                    let body = PredictRequest::text(task, text).to_json();
+                    let t0 = Instant::now();
+                    out.requests += 1;
+                    match client.roundtrip("POST", "/predict", Some(&body)) {
+                        Ok((200, _)) => {
+                            let el = t0.elapsed();
+                            out.ok += 1;
+                            out.lat.push(el.as_secs_f64());
+                            if el > spec.deadline + LATE_SLACK {
+                                out.late_ok += 1;
+                            }
+                        }
+                        Ok((503, _)) => {
+                            out.shed += 1;
+                            // minimal client politeness: without this a
+                            // shed answer (which costs the server ~no
+                            // work) turns the flood into a tight loop
+                            // that measures the driver, not the server
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        Ok((504, _)) => out.deadline_504 += 1,
+                        Ok(_) => out.errors += 1,
+                        Err(_) => {
+                            // client-side deadline/read timeout or reset:
+                            // the connection state is unknown, redial
+                            out.errors += 1;
+                            let _ = client.reconnect();
+                        }
+                    }
+                }
+                out
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap_or_default()).collect()
+    })
+}
+
+/// Run `specs` against a fresh 2-replica cluster for `dur`, with
+/// `mid_phase` called once the traffic is flowing (fault injection /
+/// kills happen there, against the live replica set).
+#[allow(clippy::type_complexity)]
+fn phase(
+    fx: &Fixture,
+    source: &Arc<ChaosStore>,
+    specs: &[WorkerSpec],
+    dur: Duration,
+    seed: u64,
+    upstream_read: Duration,
+    proxy_first: bool,
+    mid_phase: &mut dyn FnMut(&mut Vec<Gateway>, &[String], Option<&SlowProxy>, &str),
+) -> Result<(Vec<DriveOutcome>, RouterReport, Vec<GatewayReport>)> {
+    let mut gateways: Vec<Gateway> =
+        (0..2).map(|_| start_replica(fx, source)).collect::<Result<_>>()?;
+    let real_addrs: Vec<String> =
+        gateways.iter().map(|g| g.local_addr().to_string()).collect();
+    // the slow-replica phase fronts replica 0 with the byte-pump proxy;
+    // the router only ever sees the proxy address
+    let proxy = if proxy_first {
+        Some(SlowProxy::start(real_addrs[0].clone())?)
+    } else {
+        None
+    };
+    let mut router_addrs = real_addrs.clone();
+    if let Some(p) = &proxy {
+        router_addrs[0] = p.addr.clone();
+    }
+    let router = Router::start(router_addrs.clone(), router_config(upstream_read))?;
+    let raddr = router.local_addr().to_string();
+    wait_healthy(&raddr, 2, Duration::from_secs(10))?;
+
+    let stop = AtomicBool::new(false);
+    let outs = thread::scope(|scope| {
+        let driver = scope.spawn(|| drive(&raddr, specs, &stop, seed));
+        // let traffic flow before injecting the fault, so every phase
+        // has a healthy head the SLOs can lean on
+        thread::sleep(dur.mul_f64(0.25));
+        mid_phase(&mut gateways, &router_addrs, proxy.as_ref(), &raddr);
+        thread::sleep(dur.mul_f64(0.75));
+        stop.store(true, Ordering::Relaxed);
+        driver.join().unwrap_or_default()
+    });
+    let rrep = router.shutdown();
+    if let Some(p) = proxy {
+        p.shutdown();
+    }
+    let mut greps = Vec::new();
+    for g in gateways {
+        greps.push(g.shutdown()?);
+    }
+    Ok((outs, rrep, greps))
+}
+
+// ---------------------------------------------------------------------------
+// the schedule
+// ---------------------------------------------------------------------------
+
+/// Run the full fault schedule.
+pub fn run(cfg: &ChaosBenchConfig) -> Result<ChaosReport> {
+    ensure!(cfg.tenants >= 2, "need at least two well-behaved tenants");
+    let fx = setup(cfg).context("chaos bench fixture")?;
+    let source = ChaosStore::new(fx.store.clone());
+
+    let well = |deadline: Duration| WorkerSpec { tasks: fx.tenants.clone(), deadline };
+    // generous upstream reads everywhere except the slow-replica phase:
+    // there the read cap sits below the injected delay so slowness
+    // surfaces as breaker-countable forward errors
+    let upstream_read = Duration::from_secs(3);
+    let mut phases: Vec<PhaseStats> = Vec::new();
+    let mut router = RouterTotals::default();
+    let mut coord = CoordinatorTotals::default();
+
+    // ---- baseline --------------------------------------------------------
+    println!("  phase baseline: {} workers …", cfg.concurrency);
+    let specs: Vec<WorkerSpec> =
+        (0..cfg.concurrency).map(|_| well(cfg.deadline)).collect();
+    let (outs, rrep, greps) = phase(
+        &fx,
+        &source,
+        &specs,
+        cfg.phase_duration,
+        cfg.seed,
+        upstream_read,
+        false,
+        &mut |_, _, _, _| {},
+    )?;
+    let baseline = merge("baseline", &outs);
+    ensure!(baseline.ok > 0, "baseline phase produced no 200s");
+    // floor tiny baselines so the flood ratio is not hostage to a few
+    // milliseconds of noise on an unloaded box
+    let baseline_p99_ms = baseline.p99_ms.max(10.0);
+    router.absorb(&rrep);
+    greps.iter().for_each(|g| coord.absorb(g));
+    println!("    {} ok, p99 {:.1}ms", baseline.ok, baseline.p99_ms);
+    phases.push(baseline);
+
+    // ---- slow replica ----------------------------------------------------
+    println!("  phase slow_replica: +{:?} per response chunk …", cfg.slow_delay);
+    let specs: Vec<WorkerSpec> =
+        (0..cfg.concurrency).map(|_| well(cfg.deadline)).collect();
+    let slow = cfg.slow_delay;
+    // read cap below the injected delay: every forward through the
+    // proxy times out and feeds the breaker; the healthy replica
+    // answers well inside it
+    let slow_read = cfg.slow_delay.mul_f64(0.5).max(Duration::from_millis(100));
+    let (outs, rrep, greps) = phase(
+        &fx,
+        &source,
+        &specs,
+        cfg.phase_duration.mul_f64(1.5),
+        cfg.seed + 1,
+        slow_read,
+        true,
+        &mut |_, addrs, proxy, raddr| {
+            if let Some(p) = proxy {
+                p.set_delay(slow);
+            }
+            // Ring placement of the tenant names over two ephemeral-port
+            // addresses is luck; make the breaker test deterministic: find
+            // a key the ring provably routes to the proxied replica
+            // (index 0) and fire a concurrent burst at it. All forwards
+            // start before the first failure records, so the breaker sees
+            // enough consecutive failures to trip even though the health
+            // view ejects the replica after two. The bodies name an
+            // unregistered task — the healthy successor answers each with
+            // a cheap 4xx that never touches the phase's client stats.
+            let ring = HashRing::new(addrs, DEFAULT_VNODES);
+            let key = (0..u64::MAX)
+                .map(|k| format!("breakerprobe{k}"))
+                .find(|k| ring.route(k) == Some(0))
+                .expect("some key routes to the proxied replica");
+            thread::scope(|s| {
+                for _ in 0..4 {
+                    let key = &key;
+                    s.spawn(move || {
+                        let ccfg = ClientConfig {
+                            connect_timeout: Duration::from_secs(1),
+                            read_timeout: Some(Duration::from_secs(5)),
+                            retries: 0,
+                            backoff: Duration::from_millis(10),
+                            deadline: None,
+                        };
+                        if let Ok(mut c) = Client::connect_with(raddr, ccfg) {
+                            let body = PredictRequest::text(key, "trip").to_json();
+                            let _ = c.roundtrip("POST", "/predict", Some(&body));
+                        }
+                    });
+                }
+            });
+        },
+    )?;
+    let row = merge("slow_replica", &outs);
+    ensure!(row.ok > 0, "no 200s while one replica was slow");
+    router.absorb(&rrep);
+    greps.iter().for_each(|g| coord.absorb(g));
+    println!("    {} ok / {} shed / {} err", row.ok, row.shed, row.errors);
+    phases.push(row);
+
+    // ---- stalled store ---------------------------------------------------
+    println!(
+        "  phase stalled_store: {:?} stall on cold tenant {:?} …",
+        cfg.stall, fx.cold_tenant
+    );
+    source.stall(&fx.cold_tenant, cfg.stall);
+    let mut specs: Vec<WorkerSpec> =
+        (0..cfg.concurrency).map(|_| well(cfg.deadline)).collect();
+    // one cold-tenant worker: each of its attempts wedges a gateway
+    // thread for the stall duration, and the widened HTTP pool has to
+    // absorb that without starving the resident tenants
+    specs.push(WorkerSpec {
+        tasks: vec![fx.cold_tenant.clone()],
+        deadline: cfg.flood_deadline,
+    });
+    let (outs, rrep, greps) = phase(
+        &fx,
+        &source,
+        &specs,
+        cfg.phase_duration,
+        cfg.seed + 2,
+        upstream_read,
+        false,
+        &mut |_, _, _, _| {},
+    )?;
+    source.heal(&fx.cold_tenant);
+    let row = merge("stalled_store", &outs);
+    let well_row = merge("stalled_store_well", &outs[..cfg.concurrency]);
+    ensure!(well_row.ok > 0, "resident tenants starved during the store stall");
+    router.absorb(&rrep);
+    greps.iter().for_each(|g| coord.absorb(g));
+    println!(
+        "    {} ok / {} late / {} 504 (well-behaved ok {})",
+        row.ok, row.late_ok, row.deadline_504, well_row.ok
+    );
+    phases.push(row);
+
+    // ---- flood -----------------------------------------------------------
+    println!(
+        "  phase flood: {} workers on {:?} at {:?} budget …",
+        cfg.flood_workers, fx.tenants[0], cfg.flood_deadline
+    );
+    let mut specs: Vec<WorkerSpec> = (0..cfg.flood_workers)
+        .map(|_| WorkerSpec {
+            tasks: vec![fx.tenants[0].clone()],
+            deadline: cfg.flood_deadline,
+        })
+        .collect();
+    let others: Vec<String> = fx.tenants[1..].to_vec();
+    for _ in 0..cfg.concurrency {
+        specs.push(WorkerSpec { tasks: others.clone(), deadline: cfg.deadline });
+    }
+    let (outs, rrep, greps) = phase(
+        &fx,
+        &source,
+        &specs,
+        cfg.phase_duration.mul_f64(1.5),
+        cfg.seed + 3,
+        upstream_read,
+        false,
+        &mut |_, _, _, _| {},
+    )?;
+    let row = merge("flood", &outs);
+    let well_row = merge("flood_well", &outs[cfg.flood_workers..]);
+    ensure!(well_row.ok > 0, "well-behaved tenants starved during the flood");
+    let flood_well_p99_ms = well_row.p99_ms;
+    let p99_ratio = flood_well_p99_ms / baseline_p99_ms;
+    router.absorb(&rrep);
+    greps.iter().for_each(|g| coord.absorb(g));
+    println!(
+        "    flood: {} req / {} shed / {} 504 | well-behaved p99 {:.1}ms ({:.2}x baseline)",
+        row.requests, row.shed, row.deadline_504, flood_well_p99_ms, p99_ratio
+    );
+    phases.push(row);
+
+    // ---- kill owner ------------------------------------------------------
+    println!("  phase kill_owner: shut down the owner of {:?} mid-traffic …", fx.tenants[0]);
+    let specs: Vec<WorkerSpec> =
+        (0..cfg.concurrency.max(2)).map(|_| well(cfg.deadline)).collect();
+    let target = fx.tenants[0].clone();
+    let (outs, rrep, greps) = phase(
+        &fx,
+        &source,
+        &specs,
+        cfg.phase_duration.mul_f64(1.5),
+        cfg.seed + 4,
+        upstream_read,
+        false,
+        &mut |gateways, addrs, _, _| {
+            let ring = HashRing::new(addrs, DEFAULT_VNODES);
+            let victim = ring.route(&target).expect("non-empty ring");
+            let dead = gateways.swap_remove(victim);
+            let _ = dead.shutdown();
+        },
+    )?;
+    let row = merge("kill_owner", &outs);
+    ensure!(row.ok > 0, "no 200s survived the owner kill");
+    router.absorb(&rrep);
+    greps.iter().for_each(|g| coord.absorb(g));
+    println!("    {} ok / {} shed / {} err", row.ok, row.shed, row.errors);
+    phases.push(row);
+
+    Ok(ChaosReport { phases, flood_well_p99_ms, p99_ratio, router, coordinator: coord })
+}
+
+/// Atomically persist the report (same contract as the other benches).
+pub fn write_report(path: &Path, report: &Json) -> Result<()> {
+    loadgen::write_report(path, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> ChaosReport {
+        let p = |name: &str, ok: u64, late: u64, shed: u64| PhaseStats {
+            name: name.to_string(),
+            requests: ok + shed + 10,
+            ok,
+            late_ok: late,
+            shed,
+            deadline_504: 4,
+            errors: 1,
+            p50_ms: 6.0,
+            p99_ms: 18.0,
+        };
+        ChaosReport {
+            phases: vec![
+                p("baseline", 200, 0, 0),
+                p("slow_replica", 150, 0, 3),
+                p("stalled_store", 140, 0, 0),
+                p("flood", 300, 0, 120),
+                p("kill_owner", 160, 0, 5),
+            ],
+            flood_well_p99_ms: 21.0,
+            p99_ratio: 21.0 / 18.0,
+            router: RouterTotals {
+                breaker_trips: 2,
+                breaker_fast_fails: 9,
+                deadline_rejected: 3,
+                reroutes: 11,
+                ejections: 1,
+            },
+            coordinator: CoordinatorTotals {
+                requests: 900,
+                expired_queue: 12,
+                expired_exec: 5,
+                late_replies: 2,
+            },
+        }
+    }
+
+    /// Pins the BENCH_chaos.json v1 schema CI validates against.
+    #[test]
+    fn report_json_schema() {
+        let report = sample_report();
+        let cfg = ChaosBenchConfig::default();
+        let back = Json::parse(&report.to_json(&cfg).to_string()).unwrap();
+        assert_eq!(back.at("bench").as_str(), Some("chaos"));
+        assert_eq!(back.at("schema_version").as_usize(), Some(1));
+        assert_eq!(back.at("config").at("tenants").as_usize(), Some(4));
+        let rows = back.at("phases").as_arr().unwrap();
+        assert_eq!(rows.len(), 5);
+        let names: Vec<&str> =
+            rows.iter().filter_map(|r| r.at("name").as_str()).collect();
+        assert_eq!(
+            names,
+            ["baseline", "slow_replica", "stalled_store", "flood", "kill_owner"]
+        );
+        for row in rows {
+            assert!(row.at("ok").as_usize().unwrap() > 0);
+            assert_eq!(row.at("late_ok").as_usize(), Some(0));
+            assert!(row.at("p99_ms").as_f64().is_some());
+        }
+        assert!(back.at("router").at("breaker_trips").as_usize().unwrap() > 0);
+        assert!(back.at("coordinator").at("expired_queue").as_usize().is_some());
+        let slo = back.at("slo");
+        assert_eq!(slo.at("late_ok_total").as_usize(), Some(0));
+        assert_eq!(slo.at("zero_late").as_bool(), Some(true));
+        assert_eq!(slo.at("p99_ok").as_bool(), Some(true));
+        assert_eq!(slo.at("shed_bounded").as_bool(), Some(true));
+        assert_eq!(slo.at("pass").as_bool(), Some(true));
+        assert!(slo.at("p99_ratio_limit").as_f64().unwrap() >= 3.0 - 1e-9);
+    }
+
+    /// A late 200 anywhere, or a flood p99 blowout, fails the gate.
+    #[test]
+    fn slo_gate_trips_on_late_replies_and_p99() {
+        let cfg = ChaosBenchConfig::default();
+        let mut late = sample_report();
+        late.phases[3].late_ok = 1;
+        let j = late.to_json(&cfg);
+        assert_eq!(j.at("slo").at("zero_late").as_bool(), Some(false));
+        assert_eq!(j.at("slo").at("pass").as_bool(), Some(false));
+
+        let mut slow = sample_report();
+        slow.p99_ratio = 4.2;
+        let j = slow.to_json(&cfg);
+        assert_eq!(j.at("slo").at("p99_ok").as_bool(), Some(false));
+        assert_eq!(j.at("slo").at("pass").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn percentiles_from_sorted_seconds() {
+        let lat = [0.001, 0.002, 0.003, 0.010];
+        assert_eq!(pctl_ms(&lat, 0.50), 2.0);
+        assert_eq!(pctl_ms(&lat, 0.99), 10.0);
+        assert_eq!(pctl_ms(&[], 0.99), 0.0);
+    }
+
+    #[test]
+    fn shed_rate_is_bounded_by_construction() {
+        let r = sample_report();
+        assert!(r.shed_rate() > 0.0 && r.shed_rate() < 0.95);
+    }
+}

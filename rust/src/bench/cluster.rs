@@ -268,6 +268,7 @@ fn router_config() -> RouterConfig {
             read_timeout: Some(Duration::from_secs(30)),
             retries: 0,
             backoff: Duration::from_millis(10),
+            deadline: None,
         },
         ..Default::default()
     }

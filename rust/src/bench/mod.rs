@@ -7,6 +7,7 @@
 //! roughly what factor, where the crossovers fall. EXPERIMENTS.md records
 //! quick-mode results against the paper's numbers.
 
+pub mod chaos;
 pub mod cluster;
 pub mod figures;
 pub mod kernels;

@@ -1,0 +1,192 @@
+//! Per-replica circuit breakers for the router's forward path.
+//!
+//! The health monitor catches *dead* replicas (probe fails → eject),
+//! but a slow-but-alive replica passes every `/health` probe while each
+//! forward to it eats the full upstream read timeout. The breaker
+//! closes that gap from passive signals: `open_after` consecutive
+//! forward failures open the circuit, and while it is open the router
+//! skips the replica instantly and walks the preference list to its
+//! successor — fast-fail inside the caller's remaining budget instead
+//! of a wire timeout per request. After `cooldown`, exactly one trial
+//! request is let through (half-open); its outcome closes or re-opens
+//! the circuit.
+//!
+//! ```text
+//!   Closed ── open_after consecutive failures ──► Open
+//!     ▲                                            │ cooldown elapses
+//!     │ trial succeeds                             ▼
+//!     └─────────────────────────────────────── HalfOpen
+//!                    trial fails ── back to Open (fresh cooldown)
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Breaker tuning.
+#[derive(Debug, Clone)]
+pub struct BreakerPolicy {
+    /// Consecutive forward failures that open the circuit.
+    pub open_after: usize,
+    /// How long an open circuit rejects before letting one trial through.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        BreakerPolicy { open_after: 3, cooldown: Duration::from_secs(2) }
+    }
+}
+
+enum CircuitState {
+    Closed { fails: usize },
+    Open { since: Instant },
+    /// One trial is in flight; everyone else is still rejected.
+    HalfOpen,
+}
+
+/// One replica set's worth of breakers.
+pub struct Breaker {
+    policy: BreakerPolicy,
+    circuits: Vec<Mutex<CircuitState>>,
+    /// Forwards skipped because a circuit was open.
+    fast_fails: AtomicU64,
+    /// Closed → Open transitions.
+    trips: AtomicU64,
+}
+
+impl Breaker {
+    pub fn new(n: usize, policy: BreakerPolicy) -> Breaker {
+        Breaker {
+            policy,
+            circuits: (0..n)
+                .map(|_| Mutex::new(CircuitState::Closed { fails: 0 }))
+                .collect(),
+            fast_fails: AtomicU64::new(0),
+            trips: AtomicU64::new(0),
+        }
+    }
+
+    /// May a forward go to replica `i` right now? An open circuit past
+    /// its cooldown admits exactly one caller as the half-open trial.
+    pub fn allow(&self, i: usize) -> bool {
+        let mut c = self.circuits[i].lock().unwrap();
+        match *c {
+            CircuitState::Closed { .. } => true,
+            CircuitState::Open { since } => {
+                if since.elapsed() >= self.policy.cooldown {
+                    *c = CircuitState::HalfOpen;
+                    true
+                } else {
+                    self.fast_fails.fetch_add(1, Ordering::Relaxed);
+                    false
+                }
+            }
+            CircuitState::HalfOpen => {
+                self.fast_fails.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// A forward to replica `i` completed cleanly.
+    pub fn record_success(&self, i: usize) {
+        let mut c = self.circuits[i].lock().unwrap();
+        *c = CircuitState::Closed { fails: 0 };
+    }
+
+    /// A forward to replica `i` failed (wire error or upstream timeout).
+    pub fn record_failure(&self, i: usize) {
+        let mut c = self.circuits[i].lock().unwrap();
+        match *c {
+            CircuitState::Closed { fails } => {
+                let fails = fails + 1;
+                if fails >= self.policy.open_after {
+                    *c = CircuitState::Open { since: Instant::now() };
+                    self.trips.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    *c = CircuitState::Closed { fails };
+                }
+            }
+            // the half-open trial failed: back to a fresh cooldown
+            CircuitState::HalfOpen => {
+                *c = CircuitState::Open { since: Instant::now() };
+                self.trips.fetch_add(1, Ordering::Relaxed);
+            }
+            CircuitState::Open { .. } => {}
+        }
+    }
+
+    /// Is replica `i`'s circuit currently open (rejecting)?
+    pub fn is_open(&self, i: usize) -> bool {
+        matches!(
+            *self.circuits[i].lock().unwrap(),
+            CircuitState::Open { .. } | CircuitState::HalfOpen
+        )
+    }
+
+    /// Forwards skipped on an open circuit since start.
+    pub fn fast_fails(&self) -> u64 {
+        self.fast_fails.load(Ordering::Relaxed)
+    }
+
+    /// Closed/half-open → Open transitions since start.
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_policy() -> BreakerPolicy {
+        BreakerPolicy { open_after: 2, cooldown: Duration::from_millis(30) }
+    }
+
+    #[test]
+    fn opens_after_consecutive_failures_only() {
+        let b = Breaker::new(2, fast_policy());
+        b.record_failure(0);
+        assert!(b.allow(0), "one failure must not trip");
+        b.record_success(0); // success resets the streak
+        b.record_failure(0);
+        assert!(b.allow(0));
+        b.record_failure(0);
+        assert!(!b.allow(0), "two consecutive failures trip the circuit");
+        assert!(b.is_open(0));
+        assert_eq!(b.trips(), 1);
+        // the other replica's circuit is independent
+        assert!(b.allow(1));
+    }
+
+    #[test]
+    fn cooldown_admits_one_trial_then_outcome_decides() {
+        let b = Breaker::new(1, fast_policy());
+        b.record_failure(0);
+        b.record_failure(0);
+        assert!(!b.allow(0));
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(b.allow(0), "cooldown elapsed: one trial goes through");
+        assert!(!b.allow(0), "only one trial while half-open");
+        b.record_failure(0);
+        assert!(!b.allow(0), "failed trial re-opens with a fresh cooldown");
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(b.allow(0));
+        b.record_success(0);
+        assert!(b.allow(0), "successful trial closes the circuit");
+        assert!(b.allow(0), "closed circuit admits everyone");
+        assert!(!b.is_open(0));
+    }
+
+    #[test]
+    fn fast_fails_count_rejected_forwards() {
+        let b = Breaker::new(1, fast_policy());
+        b.record_failure(0);
+        b.record_failure(0);
+        for _ in 0..5 {
+            let _ = b.allow(0);
+        }
+        assert_eq!(b.fast_fails(), 5);
+    }
+}

@@ -148,6 +148,8 @@ fn probe(addr: &str, policy: &HealthPolicy) -> bool {
         read_timeout: Some(policy.timeout),
         retries: 0,
         backoff: Duration::from_millis(1),
+        // probes are their own timeout regime; no deadline header
+        deadline: None,
     };
     match Client::connect_with(addr, cfg) {
         Ok(mut c) => match c.health() {

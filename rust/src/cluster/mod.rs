@@ -42,10 +42,12 @@
 //! (convergence time + post-convergence error rate) →
 //! `BENCH_cluster.json`.
 
+pub mod breaker;
 pub mod health;
 pub mod ring;
 pub mod router;
 
+pub use breaker::{Breaker, BreakerPolicy};
 pub use health::{ClusterView, HealthMonitor, HealthPolicy};
 pub use ring::{HashRing, DEFAULT_VNODES};
 pub use router::{Router, RouterConfig, RouterReport};

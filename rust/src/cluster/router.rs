@@ -41,8 +41,10 @@ use crate::obs::trace::{self, SpanKind, Stage};
 use crate::serve::http::{
     ClientResponse, Handler, HttpConfig, HttpRequest, HttpResponse, HttpServer,
 };
-use crate::serve::{Client, ClientConfig, LatencyHist};
+use crate::serve::{Client, ClientConfig, Deadline, LatencyHist, DEADLINE_HEADER};
 use crate::util::json::Json;
+
+use super::breaker::{Breaker, BreakerPolicy};
 
 /// Router knobs.
 #[derive(Debug, Clone)]
@@ -57,6 +59,10 @@ pub struct RouterConfig {
     pub upstream: ClientConfig,
     /// Idle keep-alive connections retained per replica.
     pub pool_per_replica: usize,
+    /// Per-replica circuit breaker: consecutive forward failures open
+    /// the circuit so later requests fast-fail to the ring successor
+    /// instead of eating the upstream read timeout each.
+    pub breaker: BreakerPolicy,
     /// Record `Forward` spans in the global trace ring.
     pub trace: bool,
 }
@@ -75,8 +81,12 @@ impl Default for RouterConfig {
                 // retries would just slow ejection down
                 retries: 0,
                 backoff: std::time::Duration::from_millis(10),
+                // forwards carry the *inbound* request's budget, re-minted
+                // per forward — a per-connection deadline would be wrong
+                deadline: None,
             },
             pool_per_replica: 8,
+            breaker: BreakerPolicy::default(),
             trace: false,
         }
     }
@@ -94,6 +104,8 @@ struct RouterStats {
     no_replica: AtomicU64,
     /// Task routes with no parsable `task` field (400s).
     bad_requests: AtomicU64,
+    /// Requests refused (504) because their budget expired at this tier.
+    deadline_rejected: AtomicU64,
     /// Wall time of successful forwards, upstream-inclusive.
     latency: Mutex<LatencyHist>,
 }
@@ -103,6 +115,7 @@ pub struct RouterState {
     ring: HashRing,
     view: Arc<ClusterView>,
     pools: Vec<Mutex<Vec<Client>>>,
+    breaker: Breaker,
     cfg: RouterConfig,
     stats: RouterStats,
 }
@@ -163,16 +176,42 @@ impl RouterState {
                 "body must be a JSON object with a \"task\" field",
             );
         };
+        // re-anchor the inbound budget to this tier's clock; the walk
+        // below spends it, and each forward re-mints what is left
+        let deadline = req.header(DEADLINE_HEADER).and_then(Deadline::from_header);
         let mut attempted = 0usize;
         for i in self.ring.preference(&task) {
             if !self.view.is_alive(i) {
+                continue;
+            }
+            if let Some(d) = &deadline {
+                if d.expired() {
+                    self.stats.deadline_rejected.fetch_add(1, Ordering::Relaxed);
+                    return HttpResponse::error(
+                        504,
+                        &format!("deadline exceeded for task {task:?} at router"),
+                    );
+                }
+            }
+            // open circuit: fast-fail to the successor inside the
+            // caller's budget instead of a wire timeout
+            if !self.breaker.allow(i) {
                 continue;
             }
             if attempted > 0 {
                 self.stats.reroutes.fetch_add(1, Ordering::Relaxed);
             }
             attempted += 1;
-            match self.forward(i, &req.method, path, Some(&req.body), &task, rid) {
+            let fwd = self.forward(
+                i,
+                &req.method,
+                path,
+                Some(&req.body),
+                &task,
+                rid,
+                deadline.as_ref(),
+            );
+            match fwd {
                 Ok(resp) => return passthrough(resp),
                 Err(e) => {
                     crate::log_warn!(
@@ -186,6 +225,7 @@ impl RouterState {
         if attempted == 0 {
             self.stats.no_replica.fetch_add(1, Ordering::Relaxed);
             HttpResponse::error(503, &format!("no healthy replica for task {task:?}"))
+                .with_header("retry-after", "1")
         } else {
             HttpResponse::error(
                 502,
@@ -195,7 +235,9 @@ impl RouterState {
     }
 
     /// One upstream hop, wrapped in a `Forward` span sharing the rid
-    /// with the replica-side `Request` span.
+    /// with the replica-side `Request` span. The outcome feeds both the
+    /// health view and the circuit breaker as passive signals.
+    #[allow(clippy::too_many_arguments)]
     fn forward(
         &self,
         i: usize,
@@ -204,17 +246,19 @@ impl RouterState {
         body: Option<&[u8]>,
         task: &str,
         rid: &str,
+        deadline: Option<&Deadline>,
     ) -> Result<ClientResponse> {
         let recorder = trace::global();
         let span = recorder.begin(SpanKind::Forward, rid);
         span.set_task(task);
         let t0 = Instant::now();
-        let result = self.roundtrip_pooled(i, method, path, body, rid);
+        let result = self.roundtrip_pooled_deadline(i, method, path, body, rid, deadline);
         match &result {
             Ok(resp) => {
                 span.set_status(resp.status);
                 self.stats.forwards[i].fetch_add(1, Ordering::Relaxed);
                 self.stats.latency.lock().unwrap().record(t0.elapsed());
+                self.breaker.record_success(i);
             }
             Err(_) => {
                 span.set_status(502);
@@ -222,6 +266,7 @@ impl RouterState {
                 // a wire death is a liveness signal, not just a lost
                 // request — crashes eject at traffic speed
                 self.view.record_fail(i);
+                self.breaker.record_failure(i);
             }
         }
         span.mark(Stage::Responded);
@@ -229,10 +274,6 @@ impl RouterState {
         result
     }
 
-    /// Checkout-or-dial a connection to replica `i`, round-trip the raw
-    /// bytes with the rid attached, return the connection to the pool on
-    /// success. A stale keep-alive (replica restarted, idle timeout)
-    /// gets one fresh dial before the attempt counts as failed.
     fn roundtrip_pooled(
         &self,
         i: usize,
@@ -241,16 +282,41 @@ impl RouterState {
         body: Option<&[u8]>,
         rid: &str,
     ) -> Result<ClientResponse> {
+        self.roundtrip_pooled_deadline(i, method, path, body, rid, None)
+    }
+
+    /// Checkout-or-dial a connection to replica `i`, round-trip the raw
+    /// bytes with the rid (and the re-minted remaining budget, when the
+    /// request carries one) attached, return the connection to the pool
+    /// on success. A stale keep-alive (replica restarted, idle timeout)
+    /// gets one fresh dial before the attempt counts as failed. With a
+    /// deadline, the socket read wait defaults to the remaining budget
+    /// rather than the full configured upstream read timeout.
+    fn roundtrip_pooled_deadline(
+        &self,
+        i: usize,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+        rid: &str,
+        deadline: Option<&Deadline>,
+    ) -> Result<ClientResponse> {
         let pooled = self.pools[i].lock().unwrap().pop();
         let mut client = match pooled {
             Some(c) => c,
             None => Client::connect_with(self.ring.node(i), self.cfg.upstream.clone())?,
         };
-        let extra = [("x-request-id", rid)];
+        client.clamp_read_to(deadline)?;
+        let budget = deadline.map(|d| d.header_value());
+        let mut extra: Vec<(&str, &str)> = vec![("x-request-id", rid)];
+        if let Some(v) = budget.as_deref() {
+            extra.push((DEADLINE_HEADER, v));
+        }
         let resp = match client.roundtrip_raw(method, path, body, &extra) {
             Ok(r) => r,
             Err(_) => {
                 client.reconnect()?;
+                client.clamp_read_to(deadline)?;
                 client.roundtrip_raw(method, path, body, &extra)?
             }
         };
@@ -399,6 +465,15 @@ impl RouterState {
                 Json::num(s.bad_requests.load(Ordering::Relaxed) as f64),
             ),
             (
+                "deadline_rejected",
+                Json::num(s.deadline_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "breaker_fast_fails",
+                Json::num(self.breaker.fast_fails() as f64),
+            ),
+            ("breaker_trips", Json::num(self.breaker.trips() as f64)),
+            (
                 "ejections",
                 Json::num(self.view.ejections.load(Ordering::Relaxed) as f64),
             ),
@@ -431,7 +506,31 @@ impl RouterState {
                 &[("replica", addr)],
                 if mask[i] { 1.0 } else { 0.0 },
             );
+            p.gauge(
+                "adapterbert_router_breaker_open",
+                "1 while the replica's circuit breaker is rejecting forwards.",
+                &[("replica", addr)],
+                if self.breaker.is_open(i) { 1.0 } else { 0.0 },
+            );
         }
+        p.counter(
+            "adapterbert_router_deadline_rejected_total",
+            "Requests shed 504 with their budget already expired at the router.",
+            &[],
+            s.deadline_rejected.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "adapterbert_router_breaker_fast_fails_total",
+            "Forwards skipped because a replica's circuit was open.",
+            &[],
+            self.breaker.fast_fails() as f64,
+        );
+        p.counter(
+            "adapterbert_router_breaker_trips_total",
+            "Circuit transitions into the open state.",
+            &[],
+            self.breaker.trips() as f64,
+        );
         p.counter(
             "adapterbert_router_forward_errors_total",
             "Forward attempts that died on the wire.",
@@ -515,6 +614,9 @@ pub struct RouterReport {
     pub forward_errors: u64,
     pub reroutes: u64,
     pub no_replica: u64,
+    pub deadline_rejected: u64,
+    pub breaker_fast_fails: u64,
+    pub breaker_trips: u64,
     pub ejections: u64,
     pub readmissions: u64,
 }
@@ -539,12 +641,14 @@ impl Router {
             ring,
             view: view.clone(),
             pools: replicas.iter().map(|_| Mutex::new(Vec::new())).collect(),
+            breaker: Breaker::new(replicas.len(), cfg.breaker.clone()),
             stats: RouterStats {
                 forwards: replicas.iter().map(|_| AtomicU64::new(0)).collect(),
                 forward_errors: AtomicU64::new(0),
                 reroutes: AtomicU64::new(0),
                 no_replica: AtomicU64::new(0),
                 bad_requests: AtomicU64::new(0),
+                deadline_rejected: AtomicU64::new(0),
                 latency: Mutex::new(LatencyHist::default()),
             },
             cfg: cfg.clone(),
@@ -581,6 +685,9 @@ impl Router {
             forward_errors: s.forward_errors.load(Ordering::Relaxed),
             reroutes: s.reroutes.load(Ordering::Relaxed),
             no_replica: s.no_replica.load(Ordering::Relaxed),
+            deadline_rejected: s.deadline_rejected.load(Ordering::Relaxed),
+            breaker_fast_fails: self.state.breaker.fast_fails(),
+            breaker_trips: self.state.breaker.trips(),
             ejections: self.state.view.ejections.load(Ordering::Relaxed),
             readmissions: self.state.view.readmissions.load(Ordering::Relaxed),
         }

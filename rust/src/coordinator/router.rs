@@ -128,6 +128,34 @@ impl<T> Router<T> {
             .collect()
     }
 
+    /// Arrival time of the oldest queued item across every task — the
+    /// router thread publishes its age as the queue-wait signal the
+    /// gateway's brownout controller watches.
+    pub fn oldest_arrival(&self) -> Option<Instant> {
+        self.queues.values().filter_map(|q| q.front()).map(|f| f.arrived).min()
+    }
+
+    /// Remove every queued item matching `pred` (deadline-expired rows),
+    /// preserving FIFO order among survivors. Returns the removed items
+    /// so the caller can count or dispose of them; `pending` stays
+    /// consistent.
+    pub fn purge_expired(&mut self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut removed = Vec::new();
+        for q in self.queues.values_mut() {
+            let mut kept = VecDeque::with_capacity(q.len());
+            for entry in q.drain(..) {
+                if pred(&entry.item) {
+                    removed.push(entry.item);
+                } else {
+                    kept.push_back(entry);
+                }
+            }
+            *q = kept;
+        }
+        self.pending -= removed.len();
+        removed
+    }
+
     /// Pop up to `n` items from the front of `task`'s queue (FIFO order
     /// preserved). This is how a cross-task planner assembles mixed
     /// batches without bypassing the per-task queues.
@@ -250,6 +278,38 @@ mod tests {
         assert_eq!(ages.len(), 1);
         assert_eq!(ages[0].0, "b");
         assert_eq!(ages[0].1, t0 + Duration::from_millis(5));
+    }
+
+    #[test]
+    fn purge_expired_keeps_fifo_and_pending_consistent() {
+        let mut r = Router::new(policy(100, 1000));
+        let t0 = Instant::now();
+        for i in 0..6 {
+            r.push("a", i, t0);
+        }
+        r.push("b", 10, t0);
+        let removed = r.purge_expired(|v| *v % 2 == 0);
+        assert_eq!(removed.len(), 4); // 0, 2, 4 from a; 10 from b
+        assert_eq!(r.pending(), 3);
+        assert_eq!(r.take("a", 10), vec![1, 3, 5], "survivors stay FIFO");
+        assert_eq!(r.take("b", 10), Vec::<i32>::new());
+        assert_eq!(r.pending(), 0);
+        // purging everything leaves a router that still accepts pushes
+        r.push("a", 7, t0);
+        assert_eq!(r.purge_expired(|_| true).len(), 1);
+        assert_eq!(r.pending(), 0);
+    }
+
+    #[test]
+    fn oldest_arrival_is_min_across_tasks() {
+        let mut r: Router<i32> = Router::new(policy(100, 1000));
+        let t0 = Instant::now();
+        assert!(r.oldest_arrival().is_none());
+        r.push("b", 2, t0 + Duration::from_millis(5));
+        r.push("a", 1, t0);
+        assert_eq!(r.oldest_arrival(), Some(t0));
+        r.take("a", 1);
+        assert_eq!(r.oldest_arrival(), Some(t0 + Duration::from_millis(5)));
     }
 
     /// Property: random arrivals across tasks — nothing lost, nothing

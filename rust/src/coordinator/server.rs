@@ -63,6 +63,7 @@ use crate::obs::prof;
 use crate::obs::trace::{Stage, TraceHandle};
 use crate::runtime::fused::{FusedBackend, FusedSegment, RowOutput};
 use crate::runtime::{Bank, FusedTaskBank, Runtime};
+use crate::serve::deadline::Deadline;
 use crate::store::{AdapterStore, BankSource};
 use crate::util::tensor::Tensor;
 use crate::util::timer::Samples;
@@ -81,6 +82,12 @@ pub struct Request {
     pub reply: mpsc::Sender<Response>,
     /// Submission time (latency accounting).
     pub submitted: Instant,
+    /// Remaining-budget deadline propagated from the caller. Expired
+    /// rows are purged from the batch queues, dropped pre-execution,
+    /// and their replies suppressed — the engine never spends a trunk
+    /// forward on a request whose caller already gave up. `None` keeps
+    /// the pre-deadline behavior.
+    pub deadline: Option<Deadline>,
     /// Tracing handle: the router stamps the queue→flush boundary and
     /// the executor the plan/execute boundaries on it. The no-op handle
     /// ([`TraceHandle::none`]) costs one null check per mark.
@@ -222,6 +229,16 @@ pub struct ServerMetrics {
     /// artifact batch shape on the per-task path, the flush policy's
     /// `max_batch` on the fused path — what the hardware actually ran).
     pub occupancy_sum: f64,
+    /// Rows purged from the batch queues with their deadline already
+    /// expired (they never rode a batch).
+    pub expired_queue: u64,
+    /// Rows dropped between flush and execution with their deadline
+    /// expired (they rode a flush but never a trunk forward).
+    pub expired_exec: u64,
+    /// Rows that finished executing after their deadline: the reply is
+    /// suppressed (the caller has already been answered 504), counted
+    /// here so `requests` always equals delivered + late.
+    pub late_replies: u64,
 }
 
 impl ServerMetrics {
@@ -429,6 +446,36 @@ impl Batcher {
             }
         }
     }
+
+    /// Arrival time of the oldest queued row across every queue — its
+    /// age is the sojourn signal the gateway's brownout watches.
+    fn oldest_arrival(&self) -> Option<Instant> {
+        match self {
+            Batcher::PerTask(r) => r.oldest_arrival(),
+            Batcher::Fused { planner, side, .. } => {
+                match (planner.oldest_arrival(), side.oldest_arrival()) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, None) => a,
+                    (None, b) => b,
+                }
+            }
+        }
+    }
+
+    /// Drop queued rows whose deadline already expired, before they ride
+    /// a batch. The returned rows are simply dropped by the caller —
+    /// their reply senders close, and the gateway has already answered
+    /// 504 (its reply wait is clamped to the same deadline).
+    fn purge_expired(&mut self) -> usize {
+        let pred =
+            |r: &Request| r.deadline.map(|d| d.expired()).unwrap_or(false);
+        match self {
+            Batcher::PerTask(r) => r.purge_expired(pred).len(),
+            Batcher::Fused { planner, side, .. } => {
+                planner.purge_expired(pred).len() + side.purge_expired(pred).len()
+            }
+        }
+    }
 }
 
 /// A running server; drop-safe shutdown via `shutdown()`.
@@ -447,6 +494,10 @@ pub struct Server {
     pub metrics: Arc<Mutex<ServerMetrics>>,
     /// Requests rejected by backpressure (`submit` on a full queue).
     pub rejected: Arc<AtomicU64>,
+    /// Age of the oldest queued row in microseconds (0 when the queues
+    /// are empty), refreshed every router-loop iteration. This is the
+    /// sojourn signal the gateway's CoDel-style brownout watches.
+    queue_wait_us: Arc<AtomicU64>,
 }
 
 impl Server {
@@ -532,6 +583,9 @@ impl Server {
         let stop_r = stop.clone();
         let flush = cfg.flush;
         let provider_r = provider.clone();
+        let metrics_r = metrics.clone();
+        let queue_wait_us = Arc::new(AtomicU64::new(0));
+        let queue_wait_r = queue_wait_us.clone();
         let router_handle = std::thread::Builder::new()
             .name("ab-router".into())
             .spawn(move || {
@@ -559,13 +613,26 @@ impl Server {
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
+                    // shed dead rows before they ride a batch (their
+                    // callers were answered 504 when the budget ran out)
+                    let purged = batcher.purge_expired();
+                    if purged > 0 {
+                        metrics_r.lock().unwrap().expired_queue += purged as u64;
+                    }
                     for b in batcher.poll(Instant::now()) {
                         send_flushed(&batch_tx, b);
                     }
+                    let now = Instant::now();
+                    let wait_us = batcher
+                        .oldest_arrival()
+                        .map(|a| now.saturating_duration_since(a).as_micros() as u64)
+                        .unwrap_or(0);
+                    queue_wait_r.store(wait_us, Ordering::Relaxed);
                     if stop_r.load(Ordering::Relaxed) {
                         break;
                     }
                 }
+                queue_wait_r.store(0, Ordering::Relaxed);
                 for b in batcher.drain(Instant::now()) {
                     send_flushed(&batch_tx, b);
                 }
@@ -608,7 +675,14 @@ impl Server {
             reg_serial: Mutex::new(()),
             metrics,
             rejected,
+            queue_wait_us,
         })
+    }
+
+    /// Age of the oldest row queued in the batcher right now — the
+    /// sojourn signal behind adaptive shedding. Zero when idle.
+    pub fn queue_wait(&self) -> Duration {
+        Duration::from_micros(self.queue_wait_us.load(Ordering::Relaxed))
     }
 
     /// Take the registration serialization lock. Every producer that
@@ -902,6 +976,22 @@ fn run_flush(
     let mut fused_groups: Vec<(Arc<TaskBanks>, Vec<Request>)> = Vec::new();
     let mut first_err: Option<anyhow::Error> = None;
     for (seg, reqs) in per_seg {
+        // last line of deadline defense: a row whose budget expired
+        // between flush and pickup is dropped *before* bank resolution,
+        // so a dead request can neither ride a trunk forward nor force
+        // a cold load
+        let reqs: Vec<Request> = {
+            let (dead, live): (Vec<Request>, Vec<Request>) = reqs
+                .into_iter()
+                .partition(|r| r.deadline.map(|d| d.expired()).unwrap_or(false));
+            if !dead.is_empty() {
+                metrics.lock().unwrap().expired_exec += dead.len() as u64;
+            }
+            live
+        };
+        if reqs.is_empty() {
+            continue;
+        }
         let tb = match provider.resolve(&seg.task) {
             Ok(tb) => tb,
             Err(e) => {
@@ -1022,6 +1112,12 @@ fn run_per_task(
         req.trace.set_batch_rows(n);
         req.trace.add_meta_all(&stage_table);
         req.trace.mark(Stage::Replied);
+        // the budget ran out mid-forward: the caller was already
+        // answered 504, so suppress (and count) the late reply
+        if req.deadline.map(|d| d.expired()).unwrap_or(false) {
+            m.late_replies += 1;
+            continue;
+        }
         let _ = req.reply.send(Response {
             task: req.task,
             prediction: pred,
@@ -1094,6 +1190,12 @@ fn run_fused_groups(
             req.trace.set_batch_rows(rows);
             req.trace.add_meta_all(&stage_table);
             req.trace.mark(Stage::Replied);
+            // see `run_per_task`: a reply past its deadline is
+            // suppressed, never delivered
+            if req.deadline.map(|d| d.expired()).unwrap_or(false) {
+                m.late_replies += 1;
+                continue;
+            }
             let _ = req.reply.send(Response {
                 task: req.task,
                 prediction: pred,

@@ -126,6 +126,17 @@ impl<T> FusePlanner<T> {
         self.router.next_deadline(now)
     }
 
+    /// Arrival time of the oldest queued row (queue-wait signal).
+    pub fn oldest_arrival(&self) -> Option<Instant> {
+        self.router.oldest_arrival()
+    }
+
+    /// Remove queued rows matching `pred` (deadline-expired) before they
+    /// ride a mixed batch; survivors keep their order.
+    pub fn purge_expired(&mut self, pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        self.router.purge_expired(pred)
+    }
+
     fn deadline_due(&self, now: Instant) -> bool {
         self.router
             .oldest_arrivals()
@@ -201,6 +212,26 @@ mod tests {
         assert_eq!(f.rows(), 4);
         assert_eq!(f.tasks(), 3);
         assert_eq!(p.pending(), 0);
+    }
+
+    #[test]
+    fn purged_rows_never_ride_a_batch() {
+        let mut p = FusePlanner::new(policy(4, 5));
+        let t0 = Instant::now();
+        p.push("a", 1, t0);
+        p.push("b", 2, t0);
+        p.push("a", 3, t0);
+        assert_eq!(p.oldest_arrival(), Some(t0));
+        let removed = p.purge_expired(|v| *v != 3);
+        assert_eq!(removed.len(), 2);
+        assert_eq!(p.pending(), 1);
+        let rows: Vec<i32> = p
+            .drain(t0 + Duration::from_secs(1))
+            .into_iter()
+            .flat_map(|b| b.items)
+            .collect();
+        assert_eq!(rows, vec![3]);
+        assert!(p.oldest_arrival().is_none());
     }
 
     #[test]

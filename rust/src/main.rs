@@ -20,7 +20,8 @@
 //!                       [--duration S] [--out FILE]
 //! adapterbert baseline  --task NAME [--budget N]
 //! adapterbert bench     <table1|table2|fig3|fig3x|fig4|fig5|fig6|fig7|sizes|
-//!                        params|kernels|trainserve|profile|cluster|all> [--full]
+//!                        params|kernels|trainserve|profile|cluster|chaos|all>
+//!                       [--full]
 //!                       (`kernels` also takes --threads 1,2,4 --out FILE and
 //!                        writes BENCH_kernels.json; `trainserve` takes
 //!                        --jobs K --requests N --out FILE and writes
@@ -28,8 +29,11 @@
 //!                        overhead + span quality and writes BENCH_trace.json;
 //!                        `cluster` takes --replicas N --requests N --out FILE,
 //!                        measures 1-vs-N scaling + failover behind the router
-//!                        tier and writes BENCH_cluster.json;
-//!                        none of the four is part of `all`)
+//!                        tier and writes BENCH_cluster.json; `chaos` runs the
+//!                        deterministic fault schedule — slow replica, stalled
+//!                        store, flooding tenant, killed owner — and writes
+//!                        BENCH_chaos.json, failing if its SLO gate does;
+//!                        none of the five is part of `all`)
 //! adapterbert trace-dump [--addr HOST:PORT | --in FILE] [--out trace.json]
 //! adapterbert list-tasks
 //! ```
@@ -68,7 +72,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use adapterbert::bench::{figures, tables, Ctx};
 use adapterbert::coordinator::{Server, ServerConfig, StreamConfig, TaskStream};
@@ -495,6 +499,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // --trace (or env ADAPTERBERT_TRACE): record request spans
             // into the process trace ring, exported at GET /trace
             trace: args.flags.contains_key("trace"),
+            // --brownout-target-ms / --brownout-window-ms: adaptive
+            // shedding trigger (queue wait over target, sustained)
+            brownout_target: Duration::from_millis(
+                args.parse_num("brownout-target-ms", 250u64)?,
+            ),
+            brownout_window: Duration::from_millis(
+                args.parse_num("brownout-window-ms", 500u64)?,
+            ),
         };
         let server = Arc::new(server);
         // --train-workers N: background training jobs next to serving
@@ -587,6 +599,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             attn_mask: mask,
             reply: reply_tx.clone(),
             submitted: Instant::now(),
+            deadline: None,
             trace: TraceHandle::none(),
         })?;
     }
@@ -665,6 +678,33 @@ fn cmd_serve_router(args: &Args) -> Result<()> {
     }
 
     let port: u16 = args.parse_num("port", 0u16)?;
+    // --upstream-timeout-ms / --upstream-connect-ms (env
+    // ADAPTERBERT_UPSTREAM_TIMEOUT_MS / ADAPTERBERT_UPSTREAM_CONNECT_MS,
+    // flag wins): caps on forwarded reads and dials. A request carrying
+    // X-Deadline-Ms still clamps its forward's read wait below the cap
+    // whenever the remaining budget is smaller.
+    let ms_knob = |flag: &str, env: &str| -> Result<Option<u64>> {
+        if let Some(v) = args.get(flag) {
+            return v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{flag} {v:?}: {e}"));
+        }
+        match std::env::var(env) {
+            Ok(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("{env}={v:?}: {e}")),
+            Err(_) => Ok(None),
+        }
+    };
+    let mut upstream = RouterConfig::default().upstream;
+    if let Some(ms) = ms_knob("upstream-timeout-ms", "ADAPTERBERT_UPSTREAM_TIMEOUT_MS")? {
+        upstream.read_timeout = Some(Duration::from_millis(ms));
+    }
+    if let Some(ms) = ms_knob("upstream-connect-ms", "ADAPTERBERT_UPSTREAM_CONNECT_MS")? {
+        upstream.connect_timeout = Duration::from_millis(ms);
+    }
     let rcfg = RouterConfig {
         addr: format!("127.0.0.1:{port}"),
         http: HttpConfig {
@@ -676,6 +716,7 @@ fn cmd_serve_router(args: &Args) -> Result<()> {
             interval: Duration::from_millis(args.parse_num("health-interval-ms", 500u64)?),
             ..Default::default()
         },
+        upstream,
         trace: args.flags.contains_key("trace"),
         ..Default::default()
     };
@@ -1037,6 +1078,68 @@ fn bench_cluster(args: &Args, preset: &str) -> Result<()> {
     Ok(())
 }
 
+/// `bench chaos`: the deterministic cluster fault schedule — slow
+/// replica, stalled store fetch, flooding tenant, killed owner —
+/// gating the deadline/brownout SLOs (zero post-deadline `200`s,
+/// bounded shed rate, well-behaved p99 during the flood).
+/// Self-contained like `bench cluster`.
+fn bench_chaos(args: &Args, preset: &str) -> Result<()> {
+    use adapterbert::bench::chaos;
+    use std::time::Duration;
+    let cfg = chaos::ChaosBenchConfig {
+        preset: preset.to_string(),
+        tenants: args.parse_num("tenants", 4usize)?,
+        m: args.parse_num("m", 8usize)?,
+        pretrain_steps: args
+            .parse_num("pretrain-steps", if preset == "test" { 120 } else { 800 })?,
+        concurrency: args.parse_num("concurrency", 4usize)?,
+        deadline: Duration::from_millis(args.parse_num("deadline-ms", 2000u64)?),
+        flood_deadline: Duration::from_millis(
+            args.parse_num("flood-deadline-ms", 400u64)?,
+        ),
+        flood_workers: args.parse_num("flood-workers", 12usize)?,
+        phase_duration: Duration::from_millis(
+            args.parse_num("phase-ms", 2500u64)?,
+        ),
+        slow_delay: Duration::from_millis(args.parse_num("slow-delay-ms", 600u64)?),
+        stall: Duration::from_millis(args.parse_num("stall-ms", 900u64)?),
+        seed: args.parse_num("seed", 7u64)?,
+    };
+    println!("\n########## bench chaos (seed={}) ##########", cfg.seed);
+    let t0 = std::time::Instant::now();
+    let report = chaos::run(&cfg)?;
+    for p in &report.phases {
+        println!(
+            "  {:14} {:5} req  {:4} ok  {:3} late  {:4} shed  {:4} 504  \
+             {:3} err  p99 {:7.2}ms",
+            p.name, p.requests, p.ok, p.late_ok, p.shed, p.deadline_504, p.errors,
+            p.p99_ms
+        );
+    }
+    println!(
+        "  flood well-behaved p99 {:.2}ms ({:.2}x baseline) | breaker trips {} | \
+         expired queue/exec {}/{} | late replies {}",
+        report.flood_well_p99_ms,
+        report.p99_ratio,
+        report.router.breaker_trips,
+        report.coordinator.expired_queue,
+        report.coordinator.expired_exec,
+        report.coordinator.late_replies
+    );
+    let doc = report.to_json(&cfg);
+    let pass = doc.at("slo").at("pass").as_bool() == Some(true);
+    let out = args.get_or("out", "BENCH_chaos.json");
+    chaos::write_report(Path::new(&out), &doc)?;
+    println!("wrote {out}");
+    println!(
+        "[bench chaos] slo {} in {:.1}s",
+        if pass { "PASS" } else { "FAIL" },
+        t0.elapsed().as_secs_f64()
+    );
+    ensure!(pass, "chaos SLO gate failed (see {out})");
+    Ok(())
+}
+
 /// `trace-dump`: convert `GET /trace` spans — fetched from a live
 /// gateway (`--addr`) or read from a saved JSON file (`--in`) — into
 /// Chrome trace-event JSON loadable in Perfetto / `chrome://tracing`.
@@ -1100,6 +1203,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if wanted.contains(&"cluster") {
         bench_cluster(args, &preset)?;
         wanted.retain(|w| *w != "cluster");
+        if wanted.is_empty() {
+            return Ok(());
+        }
+    }
+    if wanted.contains(&"chaos") {
+        bench_chaos(args, &preset)?;
+        wanted.retain(|w| *w != "chaos");
         if wanted.is_empty() {
             return Ok(());
         }

@@ -15,6 +15,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use super::deadline::{Deadline, DEADLINE_HEADER};
 use super::http;
 use super::protocol::{
     Health, PredictRequest, PredictResponse, RegisterRequest, RegisterResponse,
@@ -35,6 +36,12 @@ pub struct ClientConfig {
     pub retries: usize,
     /// Backoff before retry `k` is `backoff · 2^k` plus up to 50% jitter.
     pub backoff: Duration,
+    /// Overall per-call budget. When set, each call mints an
+    /// `X-Deadline-Ms` header carrying the remaining milliseconds, and
+    /// every dial attempt, backoff sleep, and socket read is clamped to
+    /// what is left — so a call with `retries` redials can never take
+    /// `retries ×` the caller's budget. `None` disables propagation.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ClientConfig {
@@ -44,6 +51,7 @@ impl Default for ClientConfig {
             read_timeout: Some(Duration::from_secs(60)),
             retries: 2,
             backoff: Duration::from_millis(50),
+            deadline: Some(Duration::from_secs(30)),
         }
     }
 }
@@ -68,13 +76,30 @@ fn jitter(addr: &str, attempt: usize) -> f64 {
     (h >> 11) as f64 / (1u64 << 53) as f64
 }
 
-fn dial(addr: &str, cfg: &ClientConfig) -> Result<TcpStream> {
+fn dial(addr: &str, cfg: &ClientConfig, deadline: Option<Deadline>) -> Result<TcpStream> {
     let mut last: Option<anyhow::Error> = None;
     for attempt in 0..=cfg.retries {
         if attempt > 0 {
             let base = cfg.backoff.as_secs_f64() * (1 << (attempt - 1)) as f64;
-            let wait = base * (1.0 + 0.5 * jitter(addr, attempt));
-            std::thread::sleep(Duration::from_secs_f64(wait));
+            let mut wait =
+                Duration::from_secs_f64(base * (1.0 + 0.5 * jitter(addr, attempt)));
+            if let Some(d) = deadline {
+                wait = wait.min(d.remaining());
+            }
+            std::thread::sleep(wait);
+        }
+        // every attempt is clamped to the remaining overall budget —
+        // `retries` redials can never multiply the caller's deadline
+        let mut connect_cap = cfg.connect_timeout;
+        if let Some(d) = deadline {
+            let rem = d.remaining();
+            if rem == Duration::ZERO {
+                last = Some(anyhow::anyhow!(
+                    "deadline exceeded after {attempt} attempt(s)"
+                ));
+                break;
+            }
+            connect_cap = connect_cap.min(rem);
         }
         // resolve each attempt (addresses can change between retries)
         let resolved = match addr.to_socket_addrs() {
@@ -88,7 +113,7 @@ fn dial(addr: &str, cfg: &ClientConfig) -> Result<TcpStream> {
             bail!("{addr} resolves to no addresses");
         }
         for sa in resolved {
-            match TcpStream::connect_timeout(&sa, cfg.connect_timeout) {
+            match TcpStream::connect_timeout(&sa, connect_cap) {
                 Ok(stream) => return Ok(stream),
                 Err(e) => last = Some(anyhow::Error::new(e)),
             }
@@ -102,6 +127,17 @@ fn dial(addr: &str, cfg: &ClientConfig) -> Result<TcpStream> {
         )))
 }
 
+/// Parse a `Retry-After` response header as decimal seconds. (The
+/// HTTP-date form is not produced by this stack and is ignored.)
+fn parse_retry_after(resp: &http::ClientResponse) -> Option<Duration> {
+    resp.header("retry-after")?
+        .trim()
+        .parse::<f64>()
+        .ok()
+        .filter(|s| s.is_finite() && *s >= 0.0)
+        .map(Duration::from_secs_f64)
+}
+
 impl Client {
     /// Connect to `addr` (`host:port`) with the default policy.
     pub fn connect(addr: &str) -> Result<Client> {
@@ -110,7 +146,7 @@ impl Client {
 
     /// Connect with an explicit dialing/read policy.
     pub fn connect_with(addr: &str, cfg: ClientConfig) -> Result<Client> {
-        let stream = dial(addr, &cfg)?;
+        let stream = dial(addr, &cfg, cfg.deadline.map(Deadline::after))?;
         let _ = stream.set_nodelay(true);
         stream
             .set_read_timeout(cfg.read_timeout)
@@ -124,6 +160,36 @@ impl Client {
         &self.addr
     }
 
+    /// Override the per-call deadline budget for subsequent calls
+    /// (`None` stops minting `X-Deadline-Ms`).
+    pub fn set_deadline(&mut self, budget: Option<Duration>) {
+        self.cfg.deadline = budget;
+    }
+
+    /// Clamp the next exchange's socket read wait to a deadline's
+    /// remaining budget (on top of the configured read timeout). A
+    /// forwarding tier that manages deadlines per request rather than
+    /// per connection calls this before each raw roundtrip.
+    pub fn clamp_read_to(&mut self, deadline: Option<&Deadline>) -> Result<()> {
+        self.arm_read_timeout(deadline)
+    }
+
+    /// Clamp this exchange's socket read wait to the remaining budget,
+    /// so a hop near its deadline gives up exactly when the caller
+    /// would, not after the full configured read timeout.
+    fn arm_read_timeout(&mut self, deadline: Option<&Deadline>) -> Result<()> {
+        let cap = match (self.cfg.read_timeout, deadline) {
+            (Some(rt), Some(d)) => Some(rt.min(d.remaining())),
+            (None, Some(d)) => Some(d.remaining()),
+            (Some(rt), None) => Some(rt),
+            (None, None) => None,
+        };
+        // a zero timeout means "block forever" to the OS — floor at 1ms
+        let cap = cap.map(|t| t.max(Duration::from_millis(1)));
+        // reader shares the writer's fd (try_clone), so one call arms both
+        self.writer.set_read_timeout(cap).context("set_read_timeout")
+    }
+
     /// Drop the current connection and dial again (after an io error),
     /// keeping the configured policy.
     pub fn reconnect(&mut self) -> Result<()> {
@@ -133,15 +199,31 @@ impl Client {
     }
 
     /// One request/response exchange; returns (status, parsed JSON body).
+    /// When the config carries a deadline budget, the remaining
+    /// milliseconds ride along as `X-Deadline-Ms` and the read wait is
+    /// clamped to them.
     pub fn roundtrip(
         &mut self,
         method: &str,
         path: &str,
         body: Option<&Json>,
     ) -> Result<(u16, Json)> {
+        let deadline = self.cfg.deadline.map(Deadline::after);
+        self.arm_read_timeout(deadline.as_ref())?;
         let bytes = body.map(|j| j.to_string().into_bytes());
-        http::write_request(&mut self.writer, method, path, bytes.as_deref())
-            .context("writing request")?;
+        let hv = deadline.as_ref().map(Deadline::header_value);
+        let extra: Vec<(&str, &str)> = match hv.as_deref() {
+            Some(v) => vec![(DEADLINE_HEADER, v)],
+            None => Vec::new(),
+        };
+        http::write_request_with_headers(
+            &mut self.writer,
+            method,
+            path,
+            bytes.as_deref(),
+            &extra,
+        )
+        .context("writing request")?;
         let resp = http::read_client_response(&mut self.reader)?;
         let text =
             String::from_utf8(resp.body).context("response body not utf-8")?;
@@ -154,9 +236,11 @@ impl Client {
     }
 
     /// One raw exchange: bytes in, bytes out, extra headers written
-    /// verbatim. The router's forwarding path uses this so upstream
-    /// bodies pass through byte-exact (no JSON re-serialization) with
-    /// the inbound `X-Request-Id` attached.
+    /// verbatim — nothing (not even `X-Deadline-Ms`) is minted here, so
+    /// a forwarding tier fully controls what rides the wire. The
+    /// router's forwarding path uses this so upstream bodies pass
+    /// through byte-exact (no JSON re-serialization) with the inbound
+    /// `X-Request-Id` and recomputed deadline budget attached.
     pub fn roundtrip_raw(
         &mut self,
         method: &str,
@@ -229,6 +313,69 @@ impl Client {
     pub fn predict(&mut self, req: &PredictRequest) -> Result<PredictResponse> {
         let j = self.expect_ok("POST", "/predict", Some(&req.to_json()))?;
         PredictResponse::from_json(&j)
+    }
+
+    /// `POST /predict` with bounded retry on load shed. A `503` is
+    /// retried up to `cfg.retries` times, waiting the server's
+    /// `Retry-After` hint (decimal seconds) when present instead of the
+    /// fixed exponential backoff — shed clients come back exactly when
+    /// the gateway asked them to. Every wait and every attempt's read
+    /// is clamped to the one overall deadline budget.
+    pub fn predict_with_retry(&mut self, req: &PredictRequest) -> Result<PredictResponse> {
+        let deadline = self.cfg.deadline.map(Deadline::after);
+        let body = req.to_json().to_string().into_bytes();
+        let mut attempt = 0usize;
+        loop {
+            if let Some(d) = &deadline {
+                if d.expired() {
+                    bail!(
+                        "POST /predict: client deadline exceeded after {} attempt(s)",
+                        attempt
+                    );
+                }
+            }
+            self.arm_read_timeout(deadline.as_ref())?;
+            let hv = deadline.as_ref().map(Deadline::header_value);
+            let mut extra: Vec<(&str, &str)> = Vec::new();
+            if let Some(v) = hv.as_deref() {
+                extra.push((DEADLINE_HEADER, v));
+            }
+            let resp = self.roundtrip_raw("POST", "/predict", Some(&body), &extra)?;
+            if resp.status == 503 && attempt < self.cfg.retries {
+                let mut wait = parse_retry_after(&resp).unwrap_or_else(|| {
+                    let base = self.cfg.backoff.as_secs_f64() * (1 << attempt) as f64;
+                    Duration::from_secs_f64(
+                        base * (1.0 + 0.5 * jitter(&self.addr, attempt + 1)),
+                    )
+                });
+                if let Some(d) = &deadline {
+                    wait = wait.min(d.remaining());
+                }
+                std::thread::sleep(wait);
+                attempt += 1;
+                continue;
+            }
+            let text =
+                String::from_utf8(resp.body).context("response body not utf-8")?;
+            let j = if text.trim().is_empty() {
+                Json::Null
+            } else {
+                Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("bad response json: {e}"))?
+            };
+            if resp.status != 200 {
+                let msg = j
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("(no error message)");
+                bail!(
+                    "POST /predict: HTTP {} after {} attempt(s): {msg}",
+                    resp.status,
+                    attempt + 1
+                );
+            }
+            return PredictResponse::from_json(&j);
+        }
     }
 
     /// Predict on a single sentence.
@@ -317,6 +464,49 @@ mod tests {
             "dialing a dead peer must be bounded, took {:?}",
             t0.elapsed()
         );
+    }
+
+    #[test]
+    fn dial_attempts_are_clamped_to_the_overall_deadline() {
+        // unclamped, these backoffs alone would sleep 400+800+1600+3200ms;
+        // the 300ms budget must cut the whole dial off well under that
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            retries: 4,
+            backoff: Duration::from_millis(400),
+            deadline: Some(Duration::from_millis(300)),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        assert!(Client::connect_with("127.0.0.1:1", cfg).is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "retries must fit one deadline budget, took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn retry_after_parses_decimal_seconds() {
+        let resp = |headers: Vec<(&str, &str)>| http::ClientResponse {
+            status: 503,
+            headers: headers
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            body: Vec::new(),
+        };
+        assert_eq!(
+            parse_retry_after(&resp(vec![("retry-after", "0.25")])),
+            Some(Duration::from_millis(250))
+        );
+        assert_eq!(
+            parse_retry_after(&resp(vec![("retry-after", "2")])),
+            Some(Duration::from_secs(2))
+        );
+        assert_eq!(parse_retry_after(&resp(vec![("retry-after", "-1")])), None);
+        assert_eq!(parse_retry_after(&resp(vec![("retry-after", "soon")])), None);
+        assert_eq!(parse_retry_after(&resp(vec![])), None);
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! Request deadline budgets, propagated hop-to-hop as remaining time.
+//!
+//! A deadline crosses process boundaries as the `X-Deadline-Ms` header
+//! carrying the *remaining* budget in milliseconds — never an absolute
+//! timestamp, so no cross-host clock agreement is needed. Each tier
+//! parses the header into an [`Deadline`] anchored to its own clock,
+//! spends local time (queueing, forwarding), and re-mints the header
+//! with whatever budget is left when it forwards downstream. A request
+//! whose budget hits zero is shed with `504 deadline exceeded` wherever
+//! it is first noticed: at gateway admission, at batcher flush time, or
+//! pre-execution in the worker — the engine never spends a trunk
+//! forward on a request whose caller already gave up.
+
+use std::time::{Duration, Instant};
+
+/// Wire header carrying the remaining budget in integer milliseconds.
+/// (Lower-case: our HTTP layer normalises header names on read.)
+pub const DEADLINE_HEADER: &str = "x-deadline-ms";
+
+/// A request deadline: an expiry instant on the local clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Deadline {
+    expires: Instant,
+}
+
+impl Deadline {
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        Deadline { expires: Instant::now() + budget }
+    }
+
+    /// A deadline `ms` milliseconds from now.
+    pub fn after_ms(ms: u64) -> Deadline {
+        Deadline::after(Duration::from_millis(ms))
+    }
+
+    /// Parse an `X-Deadline-Ms` header value (remaining milliseconds)
+    /// into a local deadline. Malformed values are ignored — a request
+    /// with a garbage budget is treated as having no deadline rather
+    /// than shed, so a buggy client degrades to pre-deadline behavior.
+    pub fn from_header(value: &str) -> Option<Deadline> {
+        value.trim().parse::<u64>().ok().map(Deadline::after_ms)
+    }
+
+    /// Remaining budget (zero once expired; never negative).
+    pub fn remaining(&self) -> Duration {
+        self.expires.saturating_duration_since(Instant::now())
+    }
+
+    /// Remaining budget in whole milliseconds.
+    pub fn remaining_ms(&self) -> u64 {
+        self.remaining().as_millis() as u64
+    }
+
+    /// True once the budget is exhausted.
+    pub fn expired(&self) -> bool {
+        self.remaining() == Duration::ZERO
+    }
+
+    /// Header value re-minting the *current* remaining budget for the
+    /// next hop (floor of remaining ms — rounding down means budgets
+    /// only shrink across hops, never grow).
+    pub fn header_value(&self) -> String {
+        self.remaining_ms().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_budget_is_not_expired() {
+        let d = Deadline::after_ms(10_000);
+        assert!(!d.expired());
+        let ms = d.remaining_ms();
+        assert!(ms > 9_000 && ms <= 10_000, "remaining {ms}ms");
+    }
+
+    #[test]
+    fn zero_budget_is_immediately_expired() {
+        let d = Deadline::after_ms(0);
+        assert!(d.expired());
+        assert_eq!(d.remaining(), Duration::ZERO);
+        assert_eq!(d.remaining_ms(), 0);
+    }
+
+    #[test]
+    fn header_roundtrip_shrinks_monotonically() {
+        let d = Deadline::after_ms(5_000);
+        let v = d.header_value();
+        let d2 = Deadline::from_header(&v).expect("numeric header parses");
+        // the re-anchored deadline can only be tighter than the original
+        assert!(d2.remaining_ms() <= d.remaining_ms() + 1);
+        assert!(d2.remaining_ms() > 4_000);
+    }
+
+    #[test]
+    fn malformed_header_is_ignored() {
+        assert!(Deadline::from_header("").is_none());
+        assert!(Deadline::from_header("abc").is_none());
+        assert!(Deadline::from_header("-5").is_none());
+        assert!(Deadline::from_header("1.5").is_none());
+        assert!(Deadline::from_header(" 250 ").is_some());
+    }
+
+    #[test]
+    fn expired_deadline_reports_zero_budget() {
+        let d = Deadline { expires: Instant::now() - Duration::from_millis(50) };
+        assert!(d.expired());
+        assert_eq!(d.header_value(), "0");
+    }
+}

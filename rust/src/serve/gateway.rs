@@ -8,6 +8,20 @@
 //! * **admission control** — a bounded in-flight window *in front of* the
 //!   router's bounded queue: overload answers `503` immediately instead
 //!   of stacking blocked HTTP workers;
+//! * **deadline enforcement** — the `X-Deadline-Ms` remaining-budget
+//!   header (see [`super::deadline`]) is parsed at admission; an already
+//!   expired request is shed with a distinct `504` before it can trigger
+//!   store lookups or cold loads, the reply wait is clamped to the
+//!   remaining budget, and a reply that lands after expiry still answers
+//!   `504` — structurally, no `200` ever crosses the wire after the
+//!   caller's deadline;
+//! * **adaptive shedding (brownout)** — a CoDel-style controller watches
+//!   the coordinator's oldest queued wait; once it stays above
+//!   `brownout_target` for `brownout_window`, the gateway sheds incoming
+//!   predicts with `503` + `Retry-After`, picking victims by per-task
+//!   fairness (a flooding tenant's share is shed first) and by remaining
+//!   budget (requests that could not survive the current queue wait are
+//!   shed rather than queued to die);
 //! * **observability** — per-task latency histograms (log-spaced buckets,
 //!   constant memory) exposing p50/p95/p99 at `GET /metrics`, plus the
 //!   coordinator's batch/occupancy counters and the paged adapter-cache
@@ -31,12 +45,13 @@
 
 use std::collections::BTreeMap;
 use std::net::SocketAddr;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::deadline::{Deadline, DEADLINE_HEADER};
 use super::http::{Handler, HttpConfig, HttpRequest, HttpResponse, HttpServer};
 use super::protocol::{
     CacheMetrics, PredictRequest, PredictResponse, RegisterRequest, TaskEntry,
@@ -183,6 +198,12 @@ pub struct GatewayConfig {
     /// Record request / cold-load spans into the process trace ring
     /// (`obs::trace`), exported at `GET /trace`.
     pub trace: bool,
+    /// Brownout trigger: oldest queued coordinator wait above this …
+    pub brownout_target: Duration,
+    /// … for this long turns adaptive shedding on (and dropping below
+    /// the target turns it back off immediately — CoDel-style hysteresis
+    /// only on the way in).
+    pub brownout_window: Duration,
 }
 
 impl Default for GatewayConfig {
@@ -194,6 +215,8 @@ impl Default for GatewayConfig {
             reply_timeout: Duration::from_secs(30),
             slow: Duration::from_secs(1),
             trace: false,
+            brownout_target: Duration::from_millis(250),
+            brownout_window: Duration::from_millis(500),
         }
     }
 }
@@ -206,6 +229,114 @@ struct GatewayStats {
     backpressure_rejected: AtomicU64,
     timeouts: AtomicU64,
     errors: AtomicU64,
+    /// Predicts answered `504` because their propagated budget expired
+    /// (at admission, or while waiting for the coordinator reply).
+    deadline_rejected: AtomicU64,
+    /// Predicts answered `503` by the brownout controller.
+    shed: AtomicU64,
+    /// Remaining budget observed at admission (deadline-carrying
+    /// requests only) — the fleet-wide "how much time do callers give
+    /// us" histogram.
+    budget: Mutex<LatencyHist>,
+}
+
+/// Exponentially-decayed per-task arrival counts: the fairness signal
+/// for brownout victim selection. A task's *share* of recent arrivals —
+/// not its absolute rate — marks it as flooding, so the threshold needs
+/// no tuning as overall load scales.
+struct ShareState {
+    counts: BTreeMap<String, f64>,
+    last_decay: Instant,
+}
+
+/// CoDel-style brownout controller. `update` runs the sustained-overload
+/// state machine on every arrival; `is_hog` answers whether a task holds
+/// an outsized share of recent arrivals and should be shed first while
+/// the brownout is active.
+struct Brownout {
+    target: Duration,
+    window: Duration,
+    above_since: Mutex<Option<Instant>>,
+    active: AtomicBool,
+    shares: Mutex<ShareState>,
+}
+
+/// Arrival-count half-life for the fairness window.
+const SHARE_HALF_LIFE: Duration = Duration::from_secs(1);
+/// Below this many decayed arrivals the share signal is noise.
+const SHARE_MIN_TOTAL: f64 = 8.0;
+
+impl Brownout {
+    fn new(target: Duration, window: Duration) -> Brownout {
+        Brownout {
+            target,
+            window,
+            above_since: Mutex::new(None),
+            active: AtomicBool::new(false),
+            shares: Mutex::new(ShareState {
+                counts: BTreeMap::new(),
+                last_decay: Instant::now(),
+            }),
+        }
+    }
+
+    /// Feed the current queue-wait sample; returns whether shedding is
+    /// active. Sustained waits above target arm it after `window`;
+    /// a single sample back under target disarms it.
+    fn update(&self, wait: Duration) -> bool {
+        let mut above = self.above_since.lock().unwrap();
+        if wait > self.target {
+            let since = *above.get_or_insert_with(Instant::now);
+            if since.elapsed() >= self.window {
+                if !self.active.swap(true, Ordering::Relaxed) {
+                    crate::log_warn!(
+                        "gateway",
+                        "brownout ON: queue wait {:.0}ms over target {:.0}ms for {:.0}ms",
+                        wait.as_secs_f64() * 1e3,
+                        self.target.as_secs_f64() * 1e3,
+                        self.window.as_secs_f64() * 1e3
+                    );
+                }
+            }
+        } else {
+            *above = None;
+            if self.active.swap(false, Ordering::Relaxed) {
+                crate::log_info!("gateway", "brownout OFF: queue wait back under target");
+            }
+        }
+        self.active.load(Ordering::Relaxed)
+    }
+
+    fn is_active(&self) -> bool {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// Record one arrival for `task` (decaying everyone first).
+    fn note_arrival(&self, task: &str) {
+        let mut s = self.shares.lock().unwrap();
+        let dt = s.last_decay.elapsed();
+        if dt >= Duration::from_millis(50) {
+            let k = 0.5f64.powf(dt.as_secs_f64() / SHARE_HALF_LIFE.as_secs_f64());
+            s.counts.values_mut().for_each(|c| *c *= k);
+            s.counts.retain(|_, c| *c > 1e-3);
+            s.last_decay = Instant::now();
+        }
+        *s.counts.entry(task.to_string()).or_insert(0.0) += 1.0;
+    }
+
+    /// True when `task` holds an outsized share of recent arrivals:
+    /// more than half of all traffic, or — with many tenants — more
+    /// than twice its fair share.
+    fn is_hog(&self, task: &str) -> bool {
+        let s = self.shares.lock().unwrap();
+        let total: f64 = s.counts.values().sum();
+        if total < SHARE_MIN_TOTAL {
+            return false;
+        }
+        let mine = s.counts.get(task).copied().unwrap_or(0.0);
+        let ntasks = s.counts.len().max(1) as f64;
+        mine / total > (2.0 / ntasks).min(0.5)
+    }
 }
 
 /// Shared state behind the HTTP worker pool.
@@ -217,6 +348,7 @@ pub struct GatewayState {
     cfg: GatewayConfig,
     inflight: AtomicUsize,
     stats: GatewayStats,
+    brownout: Brownout,
     /// background training jobs (`POST /train`); absent on gateways
     /// started without one
     trainer: Option<Arc<TrainService>>,
@@ -235,6 +367,10 @@ pub struct GatewayReport {
     pub backpressure_rejected: u64,
     /// Predicts answered `504`.
     pub timeouts: u64,
+    /// Predicts answered `504` because their propagated budget expired.
+    pub deadline_rejected: u64,
+    /// Predicts answered `503` by the brownout controller.
+    pub shed: u64,
 }
 
 /// A running gateway: HTTP front end + coordinator + hot registry.
@@ -285,7 +421,11 @@ impl Gateway {
                 backpressure_rejected: AtomicU64::new(0),
                 timeouts: AtomicU64::new(0),
                 errors: AtomicU64::new(0),
+                deadline_rejected: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+                budget: Mutex::new(LatencyHist::default()),
             },
+            brownout: Brownout::new(cfg.brownout_target, cfg.brownout_window),
             trainer,
         });
         let handler: Arc<dyn Handler> = state.clone();
@@ -339,8 +479,17 @@ impl Gateway {
                 .backpressure_rejected
                 .load(Ordering::Relaxed),
             timeouts: state.stats.timeouts.load(Ordering::Relaxed),
+            deadline_rejected: state.stats.deadline_rejected.load(Ordering::Relaxed),
+            shed: state.stats.shed.load(Ordering::Relaxed),
         })
     }
+}
+
+/// Attach a `Retry-After` (decimal seconds) to a load-shed `503` so a
+/// well-behaved client backs off instead of hammering a browned-out or
+/// draining gateway.
+fn retry_after(resp: HttpResponse, d: Duration) -> HttpResponse {
+    resp.with_header("retry-after", &format!("{:.3}", d.as_secs_f64()))
 }
 
 /// RAII decrement for the admission window.
@@ -497,6 +646,20 @@ impl GatewayState {
                 Json::num(self.stats.errors.load(Ordering::Relaxed) as f64),
             ),
             (
+                "deadline_rejected",
+                Json::num(self.stats.deadline_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            ("shed", Json::num(self.stats.shed.load(Ordering::Relaxed) as f64)),
+            ("brownout_active", Json::Bool(self.brownout.is_active())),
+            (
+                "queue_wait_ms",
+                Json::num(self.server.queue_wait().as_secs_f64() * 1e3),
+            ),
+            (
+                "remaining_budget",
+                self.stats.budget.lock().unwrap().to_json(),
+            ),
+            (
                 "inflight",
                 Json::num(self.inflight.load(Ordering::SeqCst) as f64),
             ),
@@ -519,6 +682,9 @@ impl GatewayState {
                             self.server.rejected.load(Ordering::Relaxed) as f64
                         ),
                     ),
+                    ("expired_queue", Json::num(coord.expired_queue as f64)),
+                    ("expired_exec", Json::num(coord.expired_exec as f64)),
+                    ("late_replies", Json::num(coord.late_replies as f64)),
                 ]),
             ),
         ]);
@@ -561,6 +727,43 @@ impl GatewayState {
             &[],
             s.errors.load(Ordering::Relaxed) as f64,
         );
+        p.counter(
+            "adapterbert_deadline_rejected_total",
+            "Predicts answered 504 because their propagated budget expired.",
+            &[],
+            s.deadline_rejected.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "adapterbert_shed_total",
+            "Predicts answered 503 by the brownout controller.",
+            &[],
+            s.shed.load(Ordering::Relaxed) as f64,
+        );
+        p.gauge(
+            "adapterbert_brownout_active",
+            "1 while adaptive load shedding is on.",
+            &[],
+            if self.brownout.is_active() { 1.0 } else { 0.0 },
+        );
+        p.gauge(
+            "adapterbert_queue_wait_seconds",
+            "Oldest queued coordinator wait (the brownout signal).",
+            &[],
+            self.server.queue_wait().as_secs_f64(),
+        );
+        {
+            let budget = s.budget.lock().unwrap();
+            if budget.count() > 0 {
+                p.histogram(
+                    "adapterbert_remaining_budget_seconds",
+                    "Remaining deadline budget observed at admission.",
+                    &[],
+                    &budget.cumulative(),
+                    budget.sum_s(),
+                    budget.count(),
+                );
+            }
+        }
         p.gauge(
             "adapterbert_inflight_requests",
             "Predicts inside the admission window right now.",
@@ -617,6 +820,24 @@ impl GatewayState {
             "Submits refused by the bounded router queue.",
             &[],
             self.server.rejected.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "adapterbert_coordinator_expired_total",
+            "Rows dropped expired before execution (by stage).",
+            &[("stage", "queue")],
+            coord.expired_queue as f64,
+        );
+        p.counter(
+            "adapterbert_coordinator_expired_total",
+            "Rows dropped expired before execution (by stage).",
+            &[("stage", "exec")],
+            coord.expired_exec as f64,
+        );
+        p.counter(
+            "adapterbert_coordinator_late_replies_total",
+            "Executed rows whose reply was suppressed past the deadline.",
+            &[],
+            coord.late_replies as f64,
         );
         let cache = &snap.cache;
         p.gauge(
@@ -721,11 +942,26 @@ impl GatewayState {
     }
 
     fn predict_traced(&self, req: &HttpRequest, span: &trace::TraceHandle) -> HttpResponse {
+        let deadline = req.header(DEADLINE_HEADER).and_then(Deadline::from_header);
         let preq = match req.json_body().and_then(|j| PredictRequest::from_json(&j)) {
             Ok(p) => p,
             Err(e) => return HttpResponse::error(400, &format!("{e:#}")),
         };
         span.set_task(&preq.task);
+        // deadline admission: a request whose propagated budget is
+        // already spent is shed before it can trigger a store lookup or
+        // a cold load — the caller stopped waiting, so every cycle from
+        // here on would be wasted
+        if let Some(d) = &deadline {
+            if d.expired() {
+                self.stats.deadline_rejected.fetch_add(1, Ordering::Relaxed);
+                return HttpResponse::error(
+                    504,
+                    &format!("deadline exceeded at admission for task {:?}", preq.task),
+                );
+            }
+            self.stats.budget.lock().unwrap().record(d.remaining());
+        }
         if self.server.task_info(&preq.task).is_none() {
             // failover discovery: a task hot-registered through another
             // replica of the same store is admitted from its persisted
@@ -749,7 +985,35 @@ impl GatewayState {
             }
         }
         if self.server.is_draining() {
-            return HttpResponse::error(503, "server draining");
+            return retry_after(
+                HttpResponse::error(503, "server draining"),
+                Duration::from_secs(1),
+            );
+        }
+        // brownout: when the coordinator's oldest queued wait has stayed
+        // over target for the configured window, shed (a) tasks holding
+        // an outsized share of recent arrivals — the flooding tenant
+        // pays first — and (b) requests whose remaining budget could not
+        // survive the current queue wait anyway (queueing them only
+        // manufactures future 504s)
+        self.brownout.note_arrival(&preq.task);
+        let wait = self.server.queue_wait();
+        if self.brownout.update(wait) {
+            let doomed =
+                deadline.as_ref().map(|d| d.remaining() <= wait).unwrap_or(false);
+            if doomed || self.brownout.is_hog(&preq.task) {
+                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                return retry_after(
+                    HttpResponse::error(
+                        503,
+                        &format!(
+                            "brownout: shedding load (queue wait {:.0}ms)",
+                            wait.as_secs_f64() * 1e3
+                        ),
+                    ),
+                    self.cfg.brownout_window,
+                );
+            }
         }
         // admission control: bound the number of predicts parked on reply
         // channels before they even reach the router's bounded queue
@@ -757,7 +1021,10 @@ impl GatewayState {
         let _guard = InflightGuard(&self.inflight);
         if prev >= self.cfg.max_inflight {
             self.stats.admission_rejected.fetch_add(1, Ordering::Relaxed);
-            return HttpResponse::error(503, "over capacity (admission window full)");
+            return retry_after(
+                HttpResponse::error(503, "over capacity (admission window full)"),
+                self.cfg.brownout_window,
+            );
         }
         // cold-load seam: page an evicted task's bank back in from the
         // durable store before the request enters the router. Single-flight
@@ -793,6 +1060,7 @@ impl GatewayState {
             attn_mask,
             reply,
             submitted: Instant::now(),
+            deadline,
             trace: span.clone(),
         };
         // admission ends where the router queue begins; marked before the
@@ -800,9 +1068,28 @@ impl GatewayState {
         span.mark(Stage::Submitted);
         if self.server.submit(creq).is_err() {
             self.stats.backpressure_rejected.fetch_add(1, Ordering::Relaxed);
-            return HttpResponse::error(503, "router queue full, retry");
+            return retry_after(
+                HttpResponse::error(503, "router queue full, retry"),
+                self.cfg.brownout_window,
+            );
         }
-        match rx.recv_timeout(self.cfg.reply_timeout) {
+        // the reply wait is clamped to the remaining budget: once the
+        // caller's deadline passes there is no one left to answer, so
+        // blocking longer only holds the admission window open. The
+        // coordinator purges / suppresses the expired row on its side
+        // (so Disconnected below still means a genuine drop, not this).
+        let wait = match &deadline {
+            Some(d) => self.cfg.reply_timeout.min(d.remaining()),
+            None => self.cfg.reply_timeout,
+        };
+        match rx.recv_timeout(wait) {
+            // a reply can still race past expiry between the executor's
+            // send and this recv; the re-check keeps the contract exact:
+            // no 200 after the propagated deadline, ever
+            Ok(_) if deadline.map(|d| d.expired()).unwrap_or(false) => {
+                self.stats.deadline_rejected.fetch_add(1, Ordering::Relaxed);
+                HttpResponse::error(504, "deadline exceeded awaiting reply")
+            }
             Ok(resp) => {
                 let mut per_task = self.stats.per_task.lock().unwrap();
                 per_task.entry(resp.task.clone()).or_default().record(resp.latency);
@@ -810,9 +1097,23 @@ impl GatewayState {
                 self.stats.served.fetch_add(1, Ordering::Relaxed);
                 HttpResponse::json(200, &PredictResponse::from_response(&resp).to_json())
             }
+            Err(mpsc::RecvTimeoutError::Timeout)
+                if deadline.map(|d| d.expired()).unwrap_or(false) =>
+            {
+                self.stats.deadline_rejected.fetch_add(1, Ordering::Relaxed);
+                HttpResponse::error(504, "deadline exceeded awaiting reply")
+            }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
                 HttpResponse::error(504, "prediction timed out")
+            }
+            // an expired row purged from the batcher drops its reply
+            // sender — that is the deadline being enforced, not a fault
+            Err(mpsc::RecvTimeoutError::Disconnected)
+                if deadline.map(|d| d.expired()).unwrap_or(false) =>
+            {
+                self.stats.deadline_rejected.fetch_add(1, Ordering::Relaxed);
+                HttpResponse::error(504, "deadline exceeded awaiting reply")
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 self.stats.errors.fetch_add(1, Ordering::Relaxed);
@@ -995,5 +1296,46 @@ mod tests {
         h.record(Duration::from_secs(10_000)); // beyond last bucket
         assert_eq!(h.count(), 2);
         assert!(h.quantile_s(1.0) <= h.max_s);
+    }
+
+    #[test]
+    fn brownout_arms_on_sustained_wait_and_disarms_on_one_good_sample() {
+        // zero window: the first over-target sample arms it
+        let b = Brownout::new(Duration::from_millis(10), Duration::ZERO);
+        assert!(!b.is_active());
+        assert!(b.update(Duration::from_millis(50)));
+        assert!(b.is_active());
+        // hysteresis only on the way in: one under-target sample disarms
+        assert!(!b.update(Duration::from_millis(1)));
+        assert!(!b.is_active());
+    }
+
+    #[test]
+    fn brownout_window_gates_arming() {
+        let b = Brownout::new(Duration::from_millis(10), Duration::from_secs(60));
+        // over target, but not for the window yet
+        assert!(!b.update(Duration::from_millis(50)));
+        assert!(!b.is_active());
+    }
+
+    #[test]
+    fn hog_detection_needs_volume_then_majority_share() {
+        let b = Brownout::new(Duration::from_millis(10), Duration::ZERO);
+        // below the volume floor nothing is a hog
+        for _ in 0..4 {
+            b.note_arrival("a");
+        }
+        assert!(!b.is_hog("a"));
+        // with two tasks the threshold is a majority share, not the
+        // unreachable 2x-fair-share (= 100%)
+        for _ in 0..20 {
+            b.note_arrival("a");
+        }
+        for _ in 0..4 {
+            b.note_arrival("b");
+        }
+        assert!(b.is_hog("a"), "24/28 arrivals is a hog share");
+        assert!(!b.is_hog("b"));
+        assert!(!b.is_hog("never-seen"));
     }
 }

@@ -42,12 +42,14 @@
 //! ```
 
 pub mod client;
+pub mod deadline;
 pub mod gateway;
 pub mod http;
 pub mod protocol;
 pub mod registry;
 
 pub use client::{Client, ClientConfig};
+pub use deadline::{Deadline, DEADLINE_HEADER};
 pub use gateway::{Gateway, GatewayConfig, GatewayReport, LatencyHist};
 pub use http::{HttpConfig, HttpServer};
 pub use protocol::{

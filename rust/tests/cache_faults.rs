@@ -135,6 +135,7 @@ fn serve_one(
             attn_mask,
             reply,
             submitted: Instant::now(),
+            deadline: None,
             trace: TraceHandle::none(),
         })
         .unwrap();

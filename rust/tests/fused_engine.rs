@@ -479,6 +479,7 @@ fn fused_server_occupancy_beats_per_task_on_same_trace() {
                         attn_mask: mask,
                         reply,
                         submitted: Instant::now(),
+                        deadline: None,
                         trace: TraceHandle::none(),
                     })
                     .unwrap();
@@ -590,6 +591,7 @@ fn fused_hot_registration_is_gatherable_immediately() {
                             attn_mask: mask.clone(),
                             reply: reply.clone(),
                             submitted: Instant::now(),
+                            deadline: None,
                             trace: TraceHandle::none(),
                         })
                         .unwrap();
@@ -623,6 +625,7 @@ fn fused_hot_registration_is_gatherable_immediately() {
                 attn_mask: mask,
                 reply,
                 submitted: Instant::now(),
+                deadline: None,
                 trace: TraceHandle::none(),
             })
             .unwrap();

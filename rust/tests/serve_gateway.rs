@@ -26,7 +26,10 @@ use adapterbert::eval::{predict_split, Predictions, TaskModel};
 use adapterbert::model::params::NamedTensors;
 use adapterbert::obs::trace::TraceHandle;
 use adapterbert::runtime::Runtime;
-use adapterbert::serve::{Client, Gateway, GatewayConfig, RegisterRequest};
+use adapterbert::serve::{
+    Client, ClientConfig, Gateway, GatewayConfig, HttpConfig, PredictRequest,
+    RegisterRequest,
+};
 use adapterbert::store::AdapterStore;
 use adapterbert::train::{self, PretrainConfig, TrainConfig};
 use adapterbert::util::json::Json;
@@ -516,6 +519,7 @@ fn stream_hot_installs_into_live_server() {
                 .collect(),
             reply,
             submitted: Instant::now(),
+            deadline: None,
             trace: TraceHandle::none(),
         })
         .unwrap();
@@ -533,6 +537,7 @@ fn stream_hot_installs_into_live_server() {
             attn_mask: vec![1.0; seq],
             reply: reply2,
             submitted: Instant::now(),
+            deadline: None,
             trace: TraceHandle::none(),
         })
         .is_err());
@@ -741,4 +746,295 @@ fn gateway_observability_surfaces() {
 
     drop(client);
     gw.shutdown().unwrap();
+}
+
+/// The overload acceptance path: a flooding tenant with tiny budgets
+/// against a single-executor coordinator, a fair tenant riding along.
+/// Asserts the three deadline/brownout invariants end-to-end: no `200`
+/// ever lands after its request's budget, the hog is shed with the
+/// distinct brownout `503` (plus `Retry-After`) while the fair tenant
+/// keeps serving, and the client-observed status counts reconcile
+/// exactly with `/metrics` — including the coordinator's evidence that
+/// expired rows never reached the engine.
+#[test]
+fn deadline_flood_sheds_hog_and_never_answers_after_the_budget() {
+    let rt = runtime();
+    let base = pretrained_base(&rt);
+    let (model_h, data_h, val_h) = train_cls(&rt, &base, "gwhog", 26);
+    let (model_f, data_f, val_f) = train_cls(&rt, &base, "gwfair", 27);
+    let store = Arc::new(AdapterStore::in_memory());
+    store.register("gwhog", &model_h, val_h).unwrap();
+    store.register("gwfair", &model_f, val_f).unwrap();
+    let mut classes = BTreeMap::new();
+    classes.insert("gwhog".to_string(), 2);
+    classes.insert("gwfair".to_string(), 2);
+    // one executor so the flood builds a real queue
+    let server = Server::start(
+        rt.clone(),
+        &store,
+        &base,
+        &classes,
+        ServerConfig {
+            flush: FlushPolicy { max_batch: 4, max_delay: Duration::from_millis(2) },
+            executors: 1,
+            queue_capacity: 256,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let gw = Gateway::start(
+        rt.clone(),
+        store.clone(),
+        server,
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            // a predict holds its HTTP worker while awaiting the reply,
+            // so the pool caps outstanding rows — widen it or the flood
+            // can never queue deeper than the default 4
+            http: HttpConfig { workers: 16, ..Default::default() },
+            brownout_target: Duration::from_millis(2),
+            brownout_window: Duration::from_millis(25),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = gw.local_addr().to_string();
+
+    // deterministic admission shed: a spent budget is refused with the
+    // distinct 504 body before any engine work (roundtrip_raw mints
+    // nothing, so the header is fully under test control)
+    let mut probe = Client::connect(&addr).unwrap();
+    let raw = PredictRequest::ids("gwhog", data_h.test.row_tokens(0).to_vec())
+        .to_json()
+        .to_string()
+        .into_bytes();
+    let resp = probe
+        .roundtrip_raw("POST", "/predict", Some(&raw), &[("x-deadline-ms", "0")])
+        .unwrap();
+    assert_eq!(resp.status, 504, "spent budget must be refused at admission");
+    let text = String::from_utf8(resp.body).unwrap();
+    assert!(text.contains("deadline exceeded at admission"), "{text}");
+
+    const FLOOD: usize = 12;
+    const FAIR: usize = 2;
+    const BUDGET_MS: u64 = 150;
+
+    #[derive(Default)]
+    struct Outcome {
+        ok: u64,
+        late_ok: u64,
+        e503: u64,
+        e504: u64,
+        errs: u64,
+        brownout_seen: bool,
+        retry_after_seen: bool,
+    }
+
+    // deterministic queue-expiry burst: 16 concurrent clients with 4ms
+    // budgets. Each request is admitted (its budget is not yet spent)
+    // but the burst serializes behind the single executor, so rows
+    // beyond the first batches expire *in the queue* — exercising the
+    // purge/pre-exec drop paths, not the admission check. The brownout
+    // window (25ms) keeps the controller from shedding the burst head.
+    let burst: (u64, u64, u64) = std::thread::scope(|s| {
+        let hs: Vec<_> = (0..16)
+            .map(|w| {
+                let addr = &addr;
+                let data = &data_h;
+                s.spawn(move || {
+                    let cfg = ClientConfig { deadline: None, ..Default::default() };
+                    let mut c = Client::connect_with(addr, cfg).unwrap();
+                    let (mut ok, mut e503, mut e504) = (0u64, 0u64, 0u64);
+                    for i in 0..2usize {
+                        let row = (w * 2 + i) % data.test.n;
+                        let body = PredictRequest::ids(
+                            "gwhog",
+                            data.test.row_tokens(row).to_vec(),
+                        )
+                        .to_json()
+                        .to_string()
+                        .into_bytes();
+                        match c
+                            .roundtrip_raw(
+                                "POST",
+                                "/predict",
+                                Some(&body),
+                                &[("x-deadline-ms", "4")],
+                            )
+                            .map(|r| r.status)
+                        {
+                            Ok(200) => ok += 1,
+                            Ok(503) => e503 += 1,
+                            Ok(504) => e504 += 1,
+                            other => panic!("burst request: {other:?}"),
+                        }
+                    }
+                    (ok, e503, e504)
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).fold(
+            (0, 0, 0),
+            |(a, b, c), (x, y, z)| (a + x, b + y, c + z),
+        )
+    });
+    assert!(
+        burst.2 > 0,
+        "a serialized burst of 4ms budgets must see deadline 504s \
+         (ok={} 503={})",
+        burst.0,
+        burst.1
+    );
+
+    let stop = AtomicBool::new(false);
+    let outs: Vec<Outcome> = std::thread::scope(|s| {
+        let mut hs = Vec::new();
+        for w in 0..FLOOD + FAIR {
+            let addr = &addr;
+            let stop = &stop;
+            let hog = w < FLOOD;
+            let (task, data) =
+                if hog { ("gwhog", &data_h) } else { ("gwfair", &data_f) };
+            hs.push(s.spawn(move || {
+                let mut out = Outcome::default();
+                let budget = if hog { BUDGET_MS } else { 2000 };
+                let cfg = ClientConfig {
+                    read_timeout: Some(Duration::from_secs(10)),
+                    deadline: None, // the header is minted by hand below
+                    ..Default::default()
+                };
+                let Ok(mut c) = Client::connect_with(addr, cfg) else {
+                    return out;
+                };
+                let hdr = budget.to_string();
+                let mut row = w;
+                while !stop.load(Ordering::Relaxed) {
+                    row = (row + 1) % data.test.n;
+                    let body =
+                        PredictRequest::ids(task, data.test.row_tokens(row).to_vec())
+                            .to_json()
+                            .to_string()
+                            .into_bytes();
+                    let t0 = Instant::now();
+                    let resp = c.roundtrip_raw(
+                        "POST",
+                        "/predict",
+                        Some(&body),
+                        &[("x-deadline-ms", &hdr)],
+                    );
+                    match resp {
+                        Ok(resp) => match resp.status {
+                            200 => {
+                                out.ok += 1;
+                                if t0.elapsed()
+                                    > Duration::from_millis(budget + 50)
+                                {
+                                    out.late_ok += 1;
+                                }
+                            }
+                            503 => {
+                                out.e503 += 1;
+                                if resp.header("retry-after").is_some() {
+                                    out.retry_after_seen = true;
+                                }
+                                if String::from_utf8_lossy(&resp.body)
+                                    .contains("brownout")
+                                {
+                                    out.brownout_seen = true;
+                                }
+                                std::thread::sleep(Duration::from_millis(2));
+                            }
+                            504 => out.e504 += 1,
+                            _ => out.errs += 1,
+                        },
+                        Err(_) => {
+                            out.errs += 1;
+                            let _ = c.reconnect();
+                        }
+                    }
+                }
+                out
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(1500));
+        stop.store(true, Ordering::Relaxed);
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let sum = |os: &[Outcome]| {
+        os.iter().fold(Outcome::default(), |mut a, o| {
+            a.ok += o.ok;
+            a.late_ok += o.late_ok;
+            a.e503 += o.e503;
+            a.e504 += o.e504;
+            a.errs += o.errs;
+            a.brownout_seen |= o.brownout_seen;
+            a.retry_after_seen |= o.retry_after_seen;
+            a
+        })
+    };
+    let hog = sum(&outs[..FLOOD]);
+    let fair = sum(&outs[FLOOD..]);
+    assert_eq!(hog.errs + fair.errs, 0, "no transport errors expected");
+
+    // the headline invariant: nobody, hog or fair, ever got a 200 after
+    // its own budget
+    assert_eq!(hog.late_ok, 0, "hog saw a 200 after its deadline");
+    assert_eq!(fair.late_ok, 0, "fair tenant saw a 200 after its deadline");
+
+    // fairness: the fair tenant keeps serving through the flood and is
+    // never shed (its share is small and its budget generous)
+    assert!(fair.ok > 0, "fair tenant starved during the flood");
+    assert_eq!(fair.e503, 0, "fair tenant was shed: {}", fair.e503);
+
+    // the hog is shed with the distinct brownout body and a Retry-After
+    assert!(hog.e503 > 0, "flood was never shed (ok={} 504={})", hog.ok, hog.e504);
+    assert!(hog.brownout_seen, "no shed answer carried the brownout body");
+    assert!(hog.retry_after_seen, "no shed answer carried retry-after");
+
+    // client-observed counts reconcile exactly with /metrics (the probe
+    // is one more deadline_rejected 504)
+    let mut mc = Client::connect(&addr).unwrap();
+    let (status, m) = mc.roundtrip("GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let num = |j: &Json, k: &str| j.at(k).as_f64().unwrap_or(-1.0) as u64;
+    assert_eq!(
+        num(&m, "served"),
+        hog.ok + fair.ok + burst.0,
+        "served != client 200s"
+    );
+    assert_eq!(
+        num(&m, "shed")
+            + num(&m, "admission_rejected")
+            + num(&m, "backpressure_rejected"),
+        hog.e503 + fair.e503 + burst.1,
+        "503 counters disagree with clients"
+    );
+    // +1: the spent-budget admission probe up top
+    assert_eq!(
+        num(&m, "deadline_rejected") + num(&m, "timeouts"),
+        hog.e504 + fair.e504 + burst.2 + 1,
+        "504 counters disagree with clients"
+    );
+    assert!(
+        m.at("remaining_budget").at("count").as_usize().unwrap() > 0,
+        "admitted requests must record their budget"
+    );
+
+    // the engine's own evidence: expired rows were purged before
+    // execution, and executed rows tile into delivered + late
+    drop(probe);
+    drop(mc);
+    let report = gw.shutdown().unwrap();
+    assert!(
+        report.server.expired_queue + report.server.expired_exec > 0,
+        "the 4ms burst must leave expired rows for the purge paths"
+    );
+    assert!(
+        report.server.requests >= report.served + report.server.late_replies,
+        "executed rows ({}) < delivered ({}) + late ({})",
+        report.server.requests,
+        report.served,
+        report.server.late_replies
+    );
 }
