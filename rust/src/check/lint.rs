@@ -1,0 +1,719 @@
+//! `adapterbert lint` — token-level static checks for repo invariants.
+//!
+//! A deliberately small, dependency-free pass over `rust/src`: each file
+//! is split line-by-line into *code* and *comment* halves by a scanner
+//! that understands nested block comments, (raw) string literals, and
+//! char-vs-lifetime quotes, and five rules run over the halves:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `unsafe-no-safety` | every `unsafe` carries a `// SAFETY:` comment on the same line or within the 4 lines above |
+//! | `unwrap-request-path` | no `.unwrap()` / `.expect(` in request-path modules (`serve/`, `coordinator/`, `cluster/`, `fuse/`); lock-poisoning unwraps (chained to `.lock()`/`.read()`/`.write()`/`.wait(`) are exempt |
+//! | `print-outside-log` | no `println!`-family macros outside `main.rs`, `obs/log.rs`, `bench/`, `report/`, and this file |
+//! | `timing-in-kernel` | no `Instant::now` / `SystemTime::now` / `thread::sleep` in the deterministic kernel paths under `runtime/native/` |
+//! | `relaxed-no-justify` | every `Ordering::Relaxed` in the audited concurrency modules carries a `// relaxed:` justification within 3 lines |
+//!
+//! `#[cfg(test)] mod` bodies are skipped for the unwrap and print rules
+//! (tests may be loud and may unwrap); `unsafe` must be documented even
+//! in tests. Findings can be waived in `rust/lint-allow.txt` — one
+//! `rule path-substring [snippet-substring]` per line — and the report
+//! serializes to JSON for CI.
+//!
+//! The `relaxed-no-justify` rule is scoped to [`RELAXED_AUDITED`]: the
+//! modules whose atomics have been audited (PR 10). Add a module to the
+//! list when it joins the `check::sync` facade.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Modules whose `Ordering::Relaxed` uses must carry a `// relaxed:`
+/// justification comment. Grows as modules are audited.
+pub const RELAXED_AUDITED: &[&str] = &[
+    "coordinator/cache.rs",
+    "obs/trace.rs",
+    "runtime/native/pool.rs",
+    "cluster/breaker.rs",
+    "cluster/health.rs",
+];
+
+/// Request-path module prefixes for the unwrap/expect ban.
+const REQUEST_PATH: &[&str] = &["serve/", "coordinator/", "cluster/", "fuse/"];
+
+/// Files allowed to print to stdout/stderr directly.
+const PRINT_ALLOWED: &[&str] = &["main.rs", "obs/log.rs", "check/lint.rs"];
+const PRINT_ALLOWED_DIRS: &[&str] = &["bench/", "report/"];
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub snippet: String,
+}
+
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    /// Findings waived by the allowlist (count only).
+    pub allowed: usize,
+}
+
+impl LintReport {
+    pub fn to_json(&self, root: &str) -> Json {
+        let mut counts: std::collections::BTreeMap<&str, usize> = Default::default();
+        for f in &self.findings {
+            *counts.entry(f.rule).or_insert(0) += 1;
+        }
+        Json::obj(vec![
+            ("schema_version", Json::num(1)),
+            ("tool", Json::str("adapterbert-lint")),
+            ("root", Json::str(root)),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            (
+                "findings",
+                Json::arr(self.findings.iter().map(|f| {
+                    Json::obj(vec![
+                        ("rule", Json::str(f.rule)),
+                        ("file", Json::str(&f.file)),
+                        ("line", Json::num(f.line as f64)),
+                        ("snippet", Json::str(&f.snippet)),
+                    ])
+                })),
+            ),
+            ("allowed", Json::num(self.allowed as f64)),
+            (
+                "counts",
+                Json::obj(
+                    counts
+                        .iter()
+                        .map(|(k, v)| (*k, Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Line scanner: split source into code / comment halves
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Scanner {
+    /// Nesting depth of `/* */` (Rust block comments nest).
+    block_depth: usize,
+    /// Inside a normal `"…"` string continuing from a previous line.
+    in_str: bool,
+    /// Inside a raw string; the value is the `#` count of its delimiter.
+    in_raw: Option<usize>,
+}
+
+impl Scanner {
+    /// Split one line into (code, comment). Literal contents are dropped
+    /// from the code half; comment text (without the `//`/`/*` markers'
+    /// interior structure) lands in the comment half.
+    fn split(&mut self, line: &str) -> (String, String) {
+        let b = line.as_bytes();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < b.len() {
+            if self.block_depth > 0 {
+                if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    self.block_depth -= 1;
+                    i += 2;
+                } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    self.block_depth += 1;
+                    i += 2;
+                } else {
+                    comment.push(b[i] as char);
+                    i += 1;
+                }
+                continue;
+            }
+            if self.in_str {
+                if b[i] == b'\\' {
+                    i += 2;
+                } else if b[i] == b'"' {
+                    self.in_str = false;
+                    code.push('"');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            if let Some(h) = self.in_raw {
+                if b[i] == b'"' && i + h < b.len() && b[i + 1..].iter().take(h).all(|&c| c == b'#')
+                {
+                    self.in_raw = None;
+                    code.push('"');
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            match b[i] {
+                b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                    comment.push_str(&line[i + 2..]);
+                    break;
+                }
+                b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                    self.block_depth = 1;
+                    i += 2;
+                }
+                b'"' => {
+                    self.in_str = true;
+                    code.push('"');
+                    i += 1;
+                }
+                b'r' | b'b' if !prev_is_ident(b, i) => {
+                    // raw-string opener `(b?)r#*"` or byte string `b"`/`b'`
+                    let mut j = i;
+                    if b[j] == b'b' && j + 1 < b.len() && b[j + 1] == b'r' {
+                        j += 1;
+                    }
+                    if b[j] == b'r' || b[i] == b'b' {
+                        let mut k = j + 1;
+                        let mut hashes = 0usize;
+                        while b.get(k) == Some(&b'#') && b[j] == b'r' {
+                            hashes += 1;
+                            k += 1;
+                        }
+                        if b.get(k) == Some(&b'"') && (b[j] == b'r' || hashes == 0) {
+                            if b[j] == b'r' {
+                                self.in_raw = Some(hashes);
+                            } else {
+                                self.in_str = true;
+                            }
+                            code.push('"');
+                            i = k + 1;
+                            continue;
+                        }
+                        if b[i] == b'b' && b.get(i + 1) == Some(&b'\'') {
+                            i = skip_char_literal(b, i + 1);
+                            continue;
+                        }
+                    }
+                    code.push(b[i] as char);
+                    i += 1;
+                }
+                b'\'' => {
+                    let j = skip_char_literal(b, i);
+                    if j == i + 1 {
+                        // lifetime: keep the tick so code stays parseable-ish
+                        code.push('\'');
+                    }
+                    i = j.max(i + 1);
+                }
+                c => {
+                    code.push(c as char);
+                    i += 1;
+                }
+            }
+        }
+        (code, comment)
+    }
+}
+
+fn prev_is_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_')
+}
+
+/// At `b[i] == '\''`: return the index just past a char literal, or
+/// `i + 1` when this tick starts a lifetime.
+fn skip_char_literal(b: &[u8], i: usize) -> usize {
+    if b.get(i + 1) == Some(&b'\\') {
+        // escaped char: find the closing tick
+        let mut j = i + 2;
+        if j < b.len() {
+            j += 1; // the escaped character itself
+        }
+        while j < b.len() && b[j] != b'\'' {
+            j += 1;
+        }
+        return (j + 1).min(b.len());
+    }
+    // `'x'` — exactly one (possibly multi-byte) char then a tick; ASCII
+    // fast path covers real code, multibyte falls back to lifetime-skip
+    if i + 2 < b.len() && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+        return i + 3;
+    }
+    i + 1
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+fn find_token(code: &str, token: &str) -> bool {
+    let b = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(token) {
+        let at = start + pos;
+        let before_ok = at == 0 || !(b[at - 1].is_ascii_alphanumeric() || b[at - 1] == b'_');
+        let end = at + token.len();
+        let after_ok =
+            end >= b.len() || !(b[end].is_ascii_alphanumeric() || b[end] == b'_');
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+fn in_request_path(rel: &str) -> bool {
+    REQUEST_PATH.iter().any(|p| rel.starts_with(p))
+}
+
+fn print_allowed(rel: &str) -> bool {
+    PRINT_ALLOWED.contains(&rel) || PRINT_ALLOWED_DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+fn has_print_macro(code: &str) -> bool {
+    // longest-first so `print!` does not fire inside `eprintln!`
+    let mut masked = code.to_string();
+    for name in ["eprintln!", "println!", "eprint!", "print!"] {
+        let b = masked.clone();
+        let bytes = b.as_bytes();
+        let mut start = 0usize;
+        while let Some(pos) = b[start..].find(name) {
+            let at = start + pos;
+            let before_ok =
+                at == 0 || !(bytes[at - 1].is_ascii_alphanumeric() || bytes[at - 1] == b'_');
+            if before_ok {
+                return true;
+            }
+            // identifier prefix (e.g. `reprint!` — mask and move on)
+            masked.replace_range(at..at + name.len(), &" ".repeat(name.len()));
+            start = at + name.len();
+        }
+    }
+    false
+}
+
+/// Lock-poisoning unwrap idiom: `.unwrap()` chained (possibly across a
+/// formatted multi-line call) onto `.lock()` / `.read()` / `.write()` /
+/// `.wait(`.
+fn is_poison_unwrap(code: &str, prev_code: &[String]) -> bool {
+    let hit = |s: &str| {
+        s.contains(".lock(") || s.contains(".read(") || s.contains(".write(") || s.contains(".wait(")
+    };
+    if hit(code) {
+        return true;
+    }
+    prev_code.iter().rev().take(2).any(|l| hit(l))
+}
+
+/// Scan one file's source. `rel` is the path relative to the lint root,
+/// with forward slashes.
+pub fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut scanner = Scanner::default();
+    let mut comments: Vec<String> = Vec::new();
+    let mut codes: Vec<String> = Vec::new();
+    let mut depth: i64 = 0;
+    let mut test_region_floor: Option<i64> = None;
+    let mut pending_cfg_test = false;
+
+    let relaxed_audited = RELAXED_AUDITED.contains(&rel);
+    let request_path = in_request_path(rel);
+    let printing_ok = print_allowed(rel);
+    let kernel_path = rel.starts_with("runtime/native/");
+
+    for (idx, raw_line) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let (code, comment) = scanner.split(raw_line);
+        let trimmed = code.trim();
+
+        // -- cfg(test) region tracking --------------------------------
+        if test_region_floor.is_none() {
+            if trimmed.contains("#[cfg(test)]") || trimmed.contains("#[cfg(all(test") {
+                if find_token(trimmed, "mod") {
+                    test_region_floor = Some(depth);
+                } else {
+                    pending_cfg_test = true;
+                }
+            } else if pending_cfg_test && !trimmed.is_empty() {
+                if find_token(trimmed, "mod") {
+                    test_region_floor = Some(depth);
+                    pending_cfg_test = false;
+                } else if !trimmed.starts_with("#[") {
+                    pending_cfg_test = false;
+                }
+            }
+        }
+        let in_test = test_region_floor.is_some();
+
+        let snippet = || {
+            let t = raw_line.trim();
+            if t.len() > 120 {
+                let mut cut = 120;
+                while cut > 0 && !t.is_char_boundary(cut) {
+                    cut -= 1;
+                }
+                format!("{}…", &t[..cut])
+            } else {
+                t.to_string()
+            }
+        };
+
+        // -- rule: unsafe-no-safety (applies everywhere) --------------
+        if find_token(&code, "unsafe") {
+            // `SAFETY:` block comments and rustdoc `# Safety` sections
+            // both count
+            let has = |c: &str| c.to_ascii_lowercase().contains("safety");
+            let documented =
+                has(&comment) || comments.iter().rev().take(4).any(|c| has(c));
+            if !documented {
+                findings.push(Finding {
+                    rule: "unsafe-no-safety",
+                    file: rel.to_string(),
+                    line: lineno,
+                    snippet: snippet(),
+                });
+            }
+        }
+
+        // -- rule: unwrap-request-path --------------------------------
+        if request_path && !in_test && (code.contains(".unwrap()") || code.contains(".expect(")) {
+            if !is_poison_unwrap(&code, &codes) {
+                findings.push(Finding {
+                    rule: "unwrap-request-path",
+                    file: rel.to_string(),
+                    line: lineno,
+                    snippet: snippet(),
+                });
+            }
+        }
+
+        // -- rule: print-outside-log ----------------------------------
+        if !printing_ok && !in_test && has_print_macro(&code) {
+            findings.push(Finding {
+                rule: "print-outside-log",
+                file: rel.to_string(),
+                line: lineno,
+                snippet: snippet(),
+            });
+        }
+
+        // -- rule: timing-in-kernel -----------------------------------
+        if kernel_path
+            && !in_test
+            && (code.contains("Instant::now")
+                || code.contains("SystemTime::now")
+                || code.contains("thread::sleep"))
+        {
+            findings.push(Finding {
+                rule: "timing-in-kernel",
+                file: rel.to_string(),
+                line: lineno,
+                snippet: snippet(),
+            });
+        }
+
+        // -- rule: relaxed-no-justify ---------------------------------
+        if relaxed_audited && !in_test && code.contains("Ordering::Relaxed") {
+            let justified = comment.contains("relaxed:")
+                || comments.iter().rev().take(3).any(|c| c.contains("relaxed:"));
+            if !justified {
+                findings.push(Finding {
+                    rule: "relaxed-no-justify",
+                    file: rel.to_string(),
+                    line: lineno,
+                    snippet: snippet(),
+                });
+            }
+        }
+
+        // -- bookkeeping ----------------------------------------------
+        for ch in code.bytes() {
+            match ch {
+                b'{' => depth += 1,
+                b'}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if let Some(floor) = test_region_floor {
+            if depth <= floor {
+                test_region_floor = None;
+            }
+        }
+        comments.push(comment);
+        if !trimmed.is_empty() {
+            codes.push(code);
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Allowlist + driver
+// ---------------------------------------------------------------------------
+
+struct AllowEntry {
+    rule: String,
+    path_sub: String,
+    snippet_sub: Option<String>,
+}
+
+fn parse_allowlist(text: &str) -> Vec<AllowEntry> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(rule), Some(path_sub)) = (parts.next(), parts.next()) else {
+            continue;
+        };
+        let rest: Vec<&str> = parts.collect();
+        out.push(AllowEntry {
+            rule: rule.to_string(),
+            path_sub: path_sub.to_string(),
+            snippet_sub: if rest.is_empty() { None } else { Some(rest.join(" ")) },
+        });
+    }
+    out
+}
+
+fn allowed(entry: &[AllowEntry], f: &Finding) -> bool {
+    entry.iter().any(|e| {
+        e.rule == f.rule
+            && f.file.contains(&e.path_sub)
+            && e.snippet_sub
+                .as_ref()
+                .map(|s| f.snippet.contains(s.as_str()))
+                .unwrap_or(true)
+    })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let rd = fs::read_dir(dir).with_context(|| format!("read_dir {}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for e in rd {
+        entries.push(e.with_context(|| format!("read_dir entry in {}", dir.display()))?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Run the lint over `root` (typically `rust/src`), waiving findings
+/// listed in `allow_path` if it exists.
+pub fn run(root: &Path, allow_path: &Path) -> Result<LintReport> {
+    let allow = match fs::read_to_string(allow_path) {
+        Ok(text) => parse_allowlist(&text),
+        Err(_) => Vec::new(),
+    };
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    let mut report = LintReport::default();
+    for path in &files {
+        let src =
+            fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        report.files_scanned += 1;
+        for f in scan_source(&rel, &src) {
+            if allowed(&allow, &f) {
+                report.allowed += 1;
+            } else {
+                report.findings.push(f);
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(rel: &str, src: &str) -> Vec<&'static str> {
+        scan_source(rel, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        assert_eq!(rules("runtime/x.rs", "unsafe { foo() }"), vec!["unsafe-no-safety"]);
+        assert_eq!(rules("runtime/x.rs", "// SAFETY: disjoint\nunsafe { foo() }"), Vec::<&str>::new());
+        assert_eq!(
+            rules("runtime/x.rs", "let x = 1; // SAFETY: fine\nlet y = 2;\nunsafe { foo() }"),
+            Vec::<&str>::new()
+        );
+        // `unsafe` in a string or comment is not a finding
+        assert_eq!(rules("runtime/x.rs", "let s = \"unsafe\";"), Vec::<&str>::new());
+        assert_eq!(rules("runtime/x.rs", "// unsafe is scary"), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn safety_comment_window_is_four_lines() {
+        let src = "// SAFETY: too far\nlet a = 1;\nlet b = 2;\nlet c = 3;\nlet d = 4;\nunsafe { foo() }";
+        assert_eq!(rules("runtime/x.rs", src), vec!["unsafe-no-safety"]);
+    }
+
+    #[test]
+    fn unwrap_banned_in_request_path_only() {
+        assert_eq!(rules("serve/x.rs", "let v = maybe.unwrap();"), vec!["unwrap-request-path"]);
+        assert_eq!(rules("serve/x.rs", "let v = maybe.expect(\"msg\");"), vec!["unwrap-request-path"]);
+        assert_eq!(rules("train/x.rs", "let v = maybe.unwrap();"), Vec::<&str>::new());
+        // unwrap_or is not unwrap
+        assert_eq!(rules("serve/x.rs", "let v = maybe.unwrap_or(0);"), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn poison_unwrap_carveout() {
+        assert_eq!(rules("serve/x.rs", "let g = m.lock().unwrap();"), Vec::<&str>::new());
+        assert_eq!(rules("serve/x.rs", "let g = m.read().unwrap();"), Vec::<&str>::new());
+        // multi-line chain: `.unwrap()` within 2 lines of the `.lock(`
+        let src = "let g = m\n    .lock()\n    .unwrap();";
+        assert_eq!(rules("serve/x.rs", src), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn unwrap_allowed_in_test_mod() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn f() { y.unwrap(); }";
+        assert_eq!(rules("serve/x.rs", src), vec!["unwrap-request-path"]);
+    }
+
+    #[test]
+    fn prints_flagged_outside_allowed_files() {
+        assert_eq!(rules("serve/x.rs", "println!(\"hi\");"), vec!["print-outside-log"]);
+        assert_eq!(rules("serve/x.rs", "eprintln!(\"hi\");"), vec!["print-outside-log"]);
+        assert_eq!(rules("main.rs", "println!(\"hi\");"), Vec::<&str>::new());
+        assert_eq!(rules("obs/log.rs", "eprintln!(\"hi\");"), Vec::<&str>::new());
+        assert_eq!(rules("bench/x.rs", "println!(\"hi\");"), Vec::<&str>::new());
+        assert_eq!(rules("report/mod.rs", "println!(\"hi\");"), Vec::<&str>::new());
+        // inside a string: fine
+        assert_eq!(rules("serve/x.rs", "let s = \"println!\";"), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn timing_banned_in_kernel_paths() {
+        assert_eq!(
+            rules("runtime/native/kernels.rs", "let t = Instant::now();"),
+            vec!["timing-in-kernel"]
+        );
+        assert_eq!(
+            rules("runtime/native/pool.rs", "thread::sleep(d);"),
+            vec!["timing-in-kernel"]
+        );
+        assert_eq!(rules("obs/trace.rs", "let t = Instant::now();"), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn relaxed_needs_justification_in_audited_files() {
+        assert_eq!(
+            rules("obs/trace.rs", "x.load(Ordering::Relaxed);"),
+            vec!["relaxed-no-justify"]
+        );
+        assert_eq!(
+            rules("obs/trace.rs", "// relaxed: plain counter\nx.load(Ordering::Relaxed);"),
+            Vec::<&str>::new()
+        );
+        assert_eq!(
+            rules("obs/trace.rs", "x.load(Ordering::Relaxed); // relaxed: counter"),
+            Vec::<&str>::new()
+        );
+        // unaudited file: no requirement
+        assert_eq!(rules("serve/x.rs", "x.load(Ordering::Relaxed);"), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn scanner_handles_block_comments_and_raw_strings() {
+        let src = "/* unsafe\n   println! */ let ok = 1;\nlet r = r#\"println!(\"x\")\"#;";
+        assert_eq!(rules("serve/x.rs", src), Vec::<&str>::new());
+        // nested block comments
+        let src2 = "/* outer /* inner */ still comment: x.unwrap() */ let y = 2;";
+        assert_eq!(rules("serve/x.rs", src2), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn char_literals_do_not_confuse_the_scanner() {
+        // a '"' char literal must not open a string
+        let src = "let q = '\"';\nlet v = x.unwrap();";
+        assert_eq!(rules("serve/x.rs", src), vec!["unwrap-request-path"]);
+        // lifetimes pass through
+        assert_eq!(rules("serve/x.rs", "fn f<'a>(x: &'a str) {}"), Vec::<&str>::new());
+    }
+
+    #[test]
+    fn allowlist_waives_matching_findings() {
+        let entries = parse_allowlist(
+            "# comment\nunwrap-request-path serve/x.rs\nprint-outside-log cluster/ debug dump\n",
+        );
+        let f1 = Finding {
+            rule: "unwrap-request-path",
+            file: "serve/x.rs".into(),
+            line: 1,
+            snippet: "x.unwrap()".into(),
+        };
+        let f2 = Finding {
+            rule: "print-outside-log",
+            file: "cluster/y.rs".into(),
+            line: 2,
+            snippet: "println!(\"debug dump\");".into(),
+        };
+        let f3 = Finding {
+            rule: "print-outside-log",
+            file: "cluster/y.rs".into(),
+            line: 3,
+            snippet: "println!(\"other\");".into(),
+        };
+        assert!(allowed(&entries, &f1));
+        assert!(allowed(&entries, &f2));
+        assert!(!allowed(&entries, &f3));
+    }
+
+    #[test]
+    fn report_serializes_to_json() {
+        let mut r = LintReport::default();
+        r.files_scanned = 2;
+        r.findings.push(Finding {
+            rule: "unsafe-no-safety",
+            file: "a.rs".into(),
+            line: 7,
+            snippet: "unsafe { x }".into(),
+        });
+        let j = r.to_json("rust/src");
+        let parsed = crate::util::json::Json::parse(&j.to_string()).expect("valid json");
+        assert_eq!(parsed.at("schema_version").as_usize(), Some(1));
+        assert_eq!(
+            parsed.at("findings").as_arr().map(|a| a.len()),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn repo_is_lint_clean() {
+        // cargo test runs with CWD = package root
+        let root = Path::new("rust/src");
+        if !root.is_dir() {
+            return; // running from an unexpected CWD; CI runs the CLI too
+        }
+        let report = run(root, Path::new("rust/lint-allow.txt")).expect("lint run");
+        assert!(report.files_scanned > 30, "suspiciously few files scanned");
+        let msgs: Vec<String> = report
+            .findings
+            .iter()
+            .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.snippet))
+            .collect();
+        assert!(msgs.is_empty(), "lint findings:\n{}", msgs.join("\n"));
+    }
+}

@@ -1,0 +1,26 @@
+//! Concurrency correctness tooling.
+//!
+//! Three pieces, one goal — make the hand-rolled concurrent structures
+//! *checkable* instead of merely stress-tested:
+//!
+//! - [`sync`] — the facade concurrency-critical modules import their
+//!   primitives from. Plain `std::sync` re-exports in normal builds;
+//!   scheduler-instrumented shims under `--features modelcheck`.
+//! - [`sched`] — the deterministic cooperative scheduler + interleaving
+//!   explorer behind the shims (DFS then seeded-random, deadlock
+//!   detection, seed/path replay tokens).
+//! - [`order`] — the global lock-ordering table, asserted at acquisition
+//!   sites in debug builds.
+//! - [`lint`] — the `adapterbert lint` static pass enforcing repo
+//!   invariants (SAFETY comments, no request-path unwraps, no stray
+//!   prints, no timing in kernels, justified relaxed orderings).
+
+pub mod lint;
+pub mod order;
+pub mod sched;
+pub mod sync;
+
+/// Controlled-thread spawn/join (model-aware under `modelcheck`).
+pub mod thread {
+    pub use super::sched::{spawn, spawn_named, yield_now, JoinHandle};
+}

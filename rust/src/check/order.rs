@@ -1,0 +1,142 @@
+//! Global lock-ordering table.
+//!
+//! Every lock that can be held while acquiring another lock gets a rank
+//! here; acquisition sites declare themselves with [`Held::enter`] just
+//! before taking the lock. In debug builds (and therefore under the
+//! model checker, in every test profile, and in CI) entering a level
+//! whose rank is not strictly greater than the deepest level already
+//! held panics with both names — turning a potential ABBA deadlock into
+//! a deterministic failure at the first wrong-order acquisition. Release
+//! builds compile the whole thing to nothing.
+//!
+//! ## The table
+//!
+//! Ranks ascend in the only nesting order the code is allowed to use
+//! (outermost first). This mirrors the real nesting in
+//! `serve::registry::install_trained` → `store::register_with_classes`
+//! → `coordinator::server::install_task` → `PagedCache::insert`, and
+//! `PagedCache::snapshot` (cache inner → cold-load samples):
+//!
+//! | rank | level | lock |
+//! |------|-------|------|
+//! | 10 | [`REGISTRATION`] | `BankProvider::reg_serial` (task install serialization) |
+//! | 20 | [`STORE`] | `store::Store::tasks` map |
+//! | 30 | [`DIRECTORY`] | `BankProvider::directory` task-dir RwLock |
+//! | 40 | [`BANK_CACHE`] | `PagedCache::inner` (slots + LRU state) |
+//! | 45 | [`CACHE_LOADING`] | `PagedCache::loading` single-flight gate map |
+//! | 50 | [`CACHE_SAMPLES`] | `PagedCache::cold_loads` reservoir |
+//!
+//! Leaf locks that never wrap another acquisition (trace ring slots,
+//! pool state, breaker circuits) are deliberately absent: they cannot
+//! participate in an ordering cycle.
+
+/// One row of the ordering table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Level {
+    pub rank: u16,
+    pub name: &'static str,
+}
+
+/// Task registration serialization (`BankProvider::reg_serial`).
+pub const REGISTRATION: Level = Level { rank: 10, name: "registration" };
+/// Adapter store task map (`store::Store::tasks`).
+pub const STORE: Level = Level { rank: 20, name: "store.tasks" };
+/// Serving directory (`BankProvider::directory`).
+pub const DIRECTORY: Level = Level { rank: 30, name: "provider.directory" };
+/// Paged bank cache state (`PagedCache::inner`).
+pub const BANK_CACHE: Level = Level { rank: 40, name: "cache.inner" };
+/// Single-flight gate map (`PagedCache::loading`).
+pub const CACHE_LOADING: Level = Level { rank: 45, name: "cache.loading" };
+/// Cold-load latency reservoir (`PagedCache::cold_loads`).
+pub const CACHE_SAMPLES: Level = Level { rank: 50, name: "cache.cold_loads" };
+
+#[cfg(debug_assertions)]
+thread_local! {
+    static HELD: std::cell::RefCell<Vec<Level>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// RAII witness that the current thread is acquiring a ranked lock.
+/// Construct it immediately *before* the lock call and bind it before
+/// the guard (`let _ord = Held::enter(order::BANK_CACHE); let g =
+/// inner.lock()…`) so it drops *after* the guard on scope exit.
+pub struct Held {
+    #[cfg(debug_assertions)]
+    active: bool,
+}
+
+impl Held {
+    #[cfg(debug_assertions)]
+    pub fn enter(level: Level) -> Held {
+        HELD.with(|h| {
+            let mut stack = h.borrow_mut();
+            if let Some(top) = stack.last() {
+                assert!(
+                    top.rank < level.rank,
+                    "lock-order violation: acquiring '{}' (rank {}) while holding '{}' (rank {})",
+                    level.name,
+                    level.rank,
+                    top.name,
+                    top.rank
+                );
+            }
+            stack.push(level);
+        });
+        Held { active: true }
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline(always)]
+    pub fn enter(_level: Level) -> Held {
+        Held {}
+    }
+}
+
+#[cfg(debug_assertions)]
+impl Drop for Held {
+    fn drop(&mut self) {
+        if self.active {
+            HELD.with(|h| {
+                h.borrow_mut().pop();
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascending_acquisition_is_allowed() {
+        let _a = Held::enter(REGISTRATION);
+        let _b = Held::enter(STORE);
+        let _c = Held::enter(BANK_CACHE);
+        let _d = Held::enter(CACHE_SAMPLES);
+    }
+
+    #[test]
+    fn stack_unwinds_on_drop() {
+        {
+            let _a = Held::enter(BANK_CACHE);
+        }
+        // BANK_CACHE released: taking a lower rank now is fine
+        let _b = Held::enter(REGISTRATION);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "lock-order violation")]
+    fn descending_acquisition_panics_in_debug() {
+        let _a = Held::enter(BANK_CACHE);
+        let _b = Held::enter(STORE);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "lock-order violation")]
+    fn equal_rank_reacquisition_panics_in_debug() {
+        let _a = Held::enter(BANK_CACHE);
+        let _b = Held::enter(BANK_CACHE);
+    }
+}

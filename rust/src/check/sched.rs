@@ -1,0 +1,988 @@
+//! Deterministic cooperative scheduler for model-checking the hand-rolled
+//! sync primitives.
+//!
+//! ## Execution model
+//!
+//! A model-check *execution* runs a test body plus every thread it spawns
+//! through [`spawn`] under a token-passing scheduler: exactly one
+//! registered thread runs at a time, and control changes hands only at
+//! *yield points* — every operation on a [`crate::check::sync::shim`]
+//! primitive (mutex lock/unlock, condvar wait/notify, every atomic op)
+//! plus explicit [`yield_now`] calls. At each yield point with more than
+//! one runnable thread the scheduler consults its [`Schedule`] to pick who
+//! runs next; the sequence of picks *is* the interleaving, so
+//!
+//! * replaying the same schedule replays the same interleaving exactly,
+//! * enumerating schedules enumerates interleavings.
+//!
+//! The [`Explorer`] does the enumeration: bounded-exhaustive DFS over the
+//! choice tree for small op counts, falling back to seeded-random search
+//! when the tree outgrows the budget. Any failure (assertion panic in the
+//! body, deadlock, lock-order violation) aborts exploration with a panic
+//! whose message carries a replay token (`path:…` for DFS schedules,
+//! `seed:…` for random ones); re-running with
+//! `ADAPTERBERT_MC_REPLAY=<token>` or [`Opts::replay`] reproduces it.
+//!
+//! ## Blocking and deadlock
+//!
+//! A thread that model-blocks (mutex held by someone else, condvar wait,
+//! join on a live thread) is parked and removed from the runnable set.
+//! When the runnable set goes empty while parked threads remain, the
+//! scheduler reports a deadlock with the full waits-for table — this is
+//! also how *lost wakeups* surface: a waiter nobody will ever notify is a
+//! deadlock of one.
+//!
+//! ## What is and is not explored
+//!
+//! Interleavings are explored at shim-operation granularity under
+//! sequentially-consistent semantics (like `loom`'s coarse mode): plain
+//! (non-shim) memory operations between two yield points execute
+//! atomically with respect to other threads, and weak-memory reorderings
+//! are not modeled. That is the right level for the invariants checked
+//! here (single-flight, ring torn-freedom, handoff, state machines),
+//! which are all about operation interleavings, not fence placement.
+//!
+//! ## Degraded (stress) mode
+//!
+//! Without the `modelcheck` feature the production modules compile
+//! against the raw `std::sync` types, so their internals present no yield
+//! points and cannot be scheduled cooperatively. [`Explorer::explore`]
+//! then degrades to seeded stress iterations: the body still runs, its
+//! threads really race, and its invariant assertions still hold — it is
+//! just a probabilistic scheduler instead of a controlled one. Suites
+//! assert schedule counts only under the feature.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Thread id inside one execution; the body's thread is always 0.
+pub type Tid = usize;
+
+/// Default per-execution yield-point budget; a schedule that exceeds it
+/// is truncated (counted, not failed) so spin loops cannot hang DFS.
+pub const DEFAULT_MAX_STEPS: u64 = 20_000;
+
+// ---------------------------------------------------------------------------
+// Schedules
+// ---------------------------------------------------------------------------
+
+/// One replayable interleaving: either a seed for the xorshift chooser or
+/// an explicit DFS choice path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Seeded-random choices (`seed:<hex>` token).
+    Random(u64),
+    /// Explicit branch choices at each multi-option yield point
+    /// (`path:<c0>.<c1>…` token); choices past the end default to 0.
+    Path(Vec<u32>),
+}
+
+impl Schedule {
+    /// Wire form for panic messages and `ADAPTERBERT_MC_REPLAY`.
+    pub fn token(&self) -> String {
+        match self {
+            Schedule::Random(seed) => format!("seed:{seed:x}"),
+            Schedule::Path(p) => {
+                let parts: Vec<String> = p.iter().map(|c| c.to_string()).collect();
+                format!("path:{}", parts.join("."))
+            }
+        }
+    }
+
+    /// Parse a [`Schedule::token`] back; `None` on malformed input.
+    pub fn parse(tok: &str) -> Option<Schedule> {
+        if let Some(hex) = tok.strip_prefix("seed:") {
+            return u64::from_str_radix(hex.trim(), 16).ok().map(Schedule::Random);
+        }
+        if let Some(path) = tok.strip_prefix("path:") {
+            let path = path.trim();
+            if path.is_empty() {
+                return Some(Schedule::Path(Vec::new()));
+            }
+            let mut out = Vec::new();
+            for part in path.split('.') {
+                out.push(part.parse::<u32>().ok()?);
+            }
+            return Some(Schedule::Path(out));
+        }
+        None
+    }
+}
+
+fn xorshift(state: &mut u64) -> u64 {
+    // xorshift64*: tiny, deterministic, plenty for schedule choice
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler core
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum TState {
+    /// May be granted the token.
+    Runnable,
+    /// Parked until the lock frees (waits-for edge: thread → lock).
+    Lock(usize),
+    /// Parked on a condvar until notified.
+    Cond(usize),
+    /// Parked until the target thread finishes.
+    Join(Tid),
+    Finished,
+}
+
+struct Core {
+    states: Vec<TState>,
+    granted: Vec<bool>,
+    /// Exclusive lock id → owning thread.
+    lock_owner: BTreeMap<usize, Tid>,
+    /// Shared (read) holders per rwlock id.
+    read_holders: BTreeMap<usize, Vec<Tid>>,
+    /// Condvar id → (waiting thread, mutex id to reacquire on wake).
+    cv_waiters: BTreeMap<usize, Vec<(Tid, usize)>>,
+    /// Human-readable names for ids, for deadlock reports.
+    names: BTreeMap<usize, String>,
+    schedule: Schedule,
+    rng: u64,
+    /// `(chosen, n_options)` at every multi-option yield point.
+    trace: Vec<(u32, u32)>,
+    steps: u64,
+    max_steps: u64,
+    truncated: bool,
+    /// Once set, every shim op falls through to plain `std` behavior and
+    /// every parked thread is released, so the execution drains freely.
+    abort: bool,
+    failure: Option<String>,
+}
+
+impl Core {
+    fn choose(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        if n == 1 {
+            return 0;
+        }
+        let c = match &self.schedule {
+            Schedule::Random(_) => (xorshift(&mut self.rng) % n as u64) as u32,
+            Schedule::Path(p) => {
+                let i = self.trace.len();
+                let c = p.get(i).copied().unwrap_or(0);
+                c.min(n as u32 - 1)
+            }
+        };
+        self.trace.push((c, n as u32));
+        c as usize
+    }
+
+    fn runnable(&self) -> Vec<Tid> {
+        (0..self.states.len())
+            .filter(|&t| self.states[t] == TState::Runnable)
+            .collect()
+    }
+
+    fn all_finished(&self) -> bool {
+        self.states.iter().all(|s| *s == TState::Finished)
+    }
+
+    fn name_of(&self, id: usize) -> String {
+        self.names
+            .get(&id)
+            .cloned()
+            .unwrap_or_else(|| format!("{id:#x}"))
+    }
+
+    /// Describe every parked thread — the waits-for table of a deadlock.
+    fn waits_for_report(&self) -> String {
+        let mut lines = Vec::new();
+        for (t, s) in self.states.iter().enumerate() {
+            match s {
+                TState::Lock(l) => {
+                    let holder = match self.lock_owner.get(l) {
+                        Some(o) => format!("held by thread {o}"),
+                        None => match self.read_holders.get(l) {
+                            Some(rs) if !rs.is_empty() => {
+                                format!("read-held by threads {rs:?}")
+                            }
+                            _ => "free".to_string(),
+                        },
+                    };
+                    lines.push(format!(
+                        "  thread {t} waits for lock {} ({holder})",
+                        self.name_of(*l)
+                    ));
+                }
+                TState::Cond(c) => lines.push(format!(
+                    "  thread {t} waits on condvar {} (never notified)",
+                    self.name_of(*c)
+                )),
+                TState::Join(j) => {
+                    lines.push(format!("  thread {t} joins thread {j}"))
+                }
+                _ => {}
+            }
+        }
+        lines.join("\n")
+    }
+
+    /// Pick the next thread to grant the token to. Returns `false` when
+    /// nobody is runnable (deadlock or normal completion).
+    fn grant_next(&mut self) -> bool {
+        if self.abort {
+            return false;
+        }
+        self.steps += 1;
+        if self.steps > self.max_steps {
+            self.truncated = true;
+            self.abort = true;
+            return false;
+        }
+        let runnable = self.runnable();
+        if runnable.is_empty() {
+            if !self.all_finished() {
+                let parked = self
+                    .states
+                    .iter()
+                    .any(|s| matches!(s, TState::Lock(_) | TState::Cond(_) | TState::Join(_)));
+                if parked && self.failure.is_none() {
+                    self.failure = Some(format!(
+                        "deadlock: no runnable thread\n{}",
+                        self.waits_for_report()
+                    ));
+                }
+                self.abort = true;
+            }
+            return false;
+        }
+        let k = self.choose(runnable.len());
+        self.granted[runnable[k]] = true;
+        true
+    }
+}
+
+/// One execution's scheduler. Shared (via `Arc`) by every thread the
+/// execution spawns; the scheduler itself synchronizes with raw `std`
+/// primitives — it is the thing *under* the model, not in it.
+pub struct Sched {
+    core: Mutex<Core>,
+    cv: Condvar,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Sched>, Tid)>> = const { RefCell::new(None) };
+}
+
+/// The scheduler + tid the current thread is registered with, if any.
+pub fn current() -> Option<(Arc<Sched>, Tid)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Is the current thread inside a live (non-aborted) controlled
+/// execution? Shim primitives use this to decide controlled vs
+/// pass-through behavior on every operation.
+pub fn controlled() -> Option<(Arc<Sched>, Tid)> {
+    let (s, t) = current()?;
+    if s.aborted() {
+        None
+    } else {
+        Some((s, t))
+    }
+}
+
+impl Sched {
+    fn new(schedule: Schedule, max_steps: u64) -> Sched {
+        let rng = match schedule {
+            Schedule::Random(seed) => seed | 1,
+            Schedule::Path(_) => 1,
+        };
+        Sched {
+            core: Mutex::new(Core {
+                states: vec![TState::Runnable],
+                granted: vec![true],
+                lock_owner: BTreeMap::new(),
+                read_holders: BTreeMap::new(),
+                cv_waiters: BTreeMap::new(),
+                names: BTreeMap::new(),
+                schedule,
+                rng,
+                trace: Vec::new(),
+                steps: 0,
+                max_steps,
+                truncated: false,
+                abort: false,
+                failure: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock_core(&self) -> std::sync::MutexGuard<'_, Core> {
+        match self.core.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    pub fn aborted(&self) -> bool {
+        self.lock_core().abort
+    }
+
+    /// Register a human-readable name for a lock/condvar id (deadlock
+    /// reports only).
+    pub fn name_resource(&self, id: usize, name: &str) {
+        self.lock_core().names.insert(id, name.to_string());
+    }
+
+    /// Record a failure and release every thread into pass-through mode.
+    pub fn fail(&self, msg: String) {
+        let mut core = self.lock_core();
+        if core.failure.is_none() {
+            core.failure = Some(msg);
+        }
+        core.abort = true;
+        drop(core);
+        self.cv.notify_all();
+    }
+
+    /// Park until granted the token (or the execution aborts).
+    fn wait_granted(&self, tid: Tid) {
+        let mut core = self.lock_core();
+        while !core.granted[tid] && !core.abort {
+            core = match self.cv.wait(core) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    /// A plain yield point: hand the token to whoever the schedule picks
+    /// (possibly back to the caller).
+    pub fn yield_point(&self, tid: Tid) {
+        let mut core = self.lock_core();
+        if core.abort {
+            return;
+        }
+        core.granted[tid] = false;
+        core.grant_next();
+        drop(core);
+        self.cv.notify_all();
+        self.wait_granted(tid);
+    }
+
+    /// Register a child thread (spawner keeps the token).
+    fn register_child(&self) -> Tid {
+        let mut core = self.lock_core();
+        core.states.push(TState::Runnable);
+        core.granted.push(false);
+        core.states.len() - 1
+    }
+
+    /// Mark the current thread finished and pass the token on.
+    fn finish(&self, tid: Tid) {
+        let mut core = self.lock_core();
+        core.states[tid] = TState::Finished;
+        core.granted[tid] = false;
+        // wake joiners
+        for t in 0..core.states.len() {
+            if core.states[t] == TState::Join(tid) {
+                core.states[t] = TState::Runnable;
+            }
+        }
+        core.grant_next();
+        drop(core);
+        self.cv.notify_all();
+    }
+
+    /// Model-join: park until `target` finishes.
+    fn join_wait(&self, tid: Tid, target: Tid) {
+        let mut core = self.lock_core();
+        if core.abort || core.states[target] == TState::Finished {
+            return;
+        }
+        core.states[tid] = TState::Join(target);
+        core.granted[tid] = false;
+        core.grant_next();
+        drop(core);
+        self.cv.notify_all();
+        self.wait_granted(tid);
+    }
+
+    /// Handle an observed abort inside a blocking op. A *failure* abort
+    /// (deadlock, body panic) unwinds the thread immediately — falling
+    /// through to real blocking could reproduce the detected deadlock on
+    /// the OS primitives and hang the harness. A truncation abort (step
+    /// budget, no failure) returns normally so threads drain in
+    /// pass-through mode.
+    fn on_abort(&self, failed: bool) {
+        if failed {
+            panic!("model-check execution aborted after failure");
+        }
+    }
+
+    /// Model-acquire an exclusive lock. Returns `false` when the
+    /// execution aborted mid-acquire and the caller must fall through to
+    /// the real primitive.
+    pub fn acquire(&self, tid: Tid, lock: usize) -> bool {
+        loop {
+            self.yield_point(tid);
+            let mut core = self.lock_core();
+            if core.abort {
+                let failed = core.failure.is_some();
+                drop(core);
+                self.on_abort(failed);
+                return false;
+            }
+            let read_held = core
+                .read_holders
+                .get(&lock)
+                .map(|v| !v.is_empty())
+                .unwrap_or(false);
+            if !core.lock_owner.contains_key(&lock) && !read_held {
+                core.lock_owner.insert(lock, tid);
+                return true;
+            }
+            if core.lock_owner.get(&lock) == Some(&tid) {
+                // re-entrant model-acquire would self-deadlock; report it
+                // rather than hang the exploration
+                drop(core);
+                self.fail(format!(
+                    "thread {tid} re-acquired lock it already holds (self-deadlock)"
+                ));
+                return false;
+            }
+            core.states[tid] = TState::Lock(lock);
+            core.granted[tid] = false;
+            core.grant_next();
+            drop(core);
+            self.cv.notify_all();
+            self.wait_granted(tid);
+        }
+    }
+
+    /// Model-release an exclusive lock; lock waiters become runnable and
+    /// re-compete under the schedule's choices.
+    pub fn release(&self, tid: Tid, lock: usize) {
+        let mut core = self.lock_core();
+        if core.lock_owner.get(&lock) == Some(&tid) {
+            core.lock_owner.remove(&lock);
+        }
+        for t in 0..core.states.len() {
+            if core.states[t] == TState::Lock(lock) {
+                core.states[t] = TState::Runnable;
+            }
+        }
+        drop(core);
+        self.cv.notify_all();
+        if !self.aborted() {
+            self.yield_point(tid);
+        }
+    }
+
+    /// Model-acquire a read (shared) side of an rwlock.
+    pub fn acquire_shared(&self, tid: Tid, lock: usize) -> bool {
+        loop {
+            self.yield_point(tid);
+            let mut core = self.lock_core();
+            if core.abort {
+                let failed = core.failure.is_some();
+                drop(core);
+                self.on_abort(failed);
+                return false;
+            }
+            if !core.lock_owner.contains_key(&lock) {
+                core.read_holders.entry(lock).or_default().push(tid);
+                return true;
+            }
+            core.states[tid] = TState::Lock(lock);
+            core.granted[tid] = false;
+            core.grant_next();
+            drop(core);
+            self.cv.notify_all();
+            self.wait_granted(tid);
+        }
+    }
+
+    /// Release a read hold; writer waiters become runnable.
+    pub fn release_shared(&self, tid: Tid, lock: usize) {
+        let mut core = self.lock_core();
+        if let Some(rs) = core.read_holders.get_mut(&lock) {
+            if let Some(pos) = rs.iter().position(|&t| t == tid) {
+                rs.swap_remove(pos);
+            }
+        }
+        for t in 0..core.states.len() {
+            if core.states[t] == TState::Lock(lock) {
+                core.states[t] = TState::Runnable;
+            }
+        }
+        drop(core);
+        self.cv.notify_all();
+        if !self.aborted() {
+            self.yield_point(tid);
+        }
+    }
+
+    /// Model condvar wait: atomically release `lock` and park on `cv`;
+    /// after a notify, re-acquire `lock` before returning. Returns
+    /// `false` on abort (the caller re-locks for real and treats the
+    /// return as a spurious wakeup).
+    pub fn cv_wait(&self, tid: Tid, cv_id: usize, lock: usize) -> bool {
+        {
+            let mut core = self.lock_core();
+            if core.abort {
+                return false;
+            }
+            if core.lock_owner.get(&lock) == Some(&tid) {
+                core.lock_owner.remove(&lock);
+            }
+            for t in 0..core.states.len() {
+                if core.states[t] == TState::Lock(lock) {
+                    core.states[t] = TState::Runnable;
+                }
+            }
+            core.cv_waiters.entry(cv_id).or_default().push((tid, lock));
+            core.states[tid] = TState::Cond(cv_id);
+            core.granted[tid] = false;
+            core.grant_next();
+            drop(core);
+            self.cv.notify_all();
+        }
+        self.wait_granted(tid);
+        {
+            let core = self.lock_core();
+            if core.abort {
+                let failed = core.failure.is_some();
+                drop(core);
+                self.on_abort(failed);
+                return false;
+            }
+        }
+        // notified: compete for the mutex again
+        self.acquire(tid, lock)
+    }
+
+    /// Model notify: wake one waiter (schedule-chosen) or all of them.
+    pub fn cv_notify(&self, tid: Tid, cv_id: usize, all: bool) {
+        let mut core = self.lock_core();
+        if core.abort {
+            return;
+        }
+        if let Some(waiters) = core.cv_waiters.get_mut(&cv_id) {
+            if !waiters.is_empty() {
+                if all {
+                    let woken: Vec<(Tid, usize)> = waiters.drain(..).collect();
+                    for (t, _) in woken {
+                        core.states[t] = TState::Runnable;
+                    }
+                } else {
+                    let n = waiters.len();
+                    let k = core.choose(n);
+                    let (t, _) = core
+                        .cv_waiters
+                        .get_mut(&cv_id)
+                        .map(|w| w.swap_remove(k))
+                        .unwrap_or((tid, 0));
+                    core.states[t] = TState::Runnable;
+                }
+            }
+        }
+        drop(core);
+        self.cv.notify_all();
+        if !self.aborted() {
+            self.yield_point(tid);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Controlled thread spawn/join
+// ---------------------------------------------------------------------------
+
+/// Join handle for [`spawn`]: a real `std` handle plus, in controlled
+/// mode, the model tid so `join` parks in the model first.
+pub struct JoinHandle<T> {
+    inner: std::thread::JoinHandle<T>,
+    model: Option<(Arc<Sched>, Tid)>,
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        if let Some((sched, child)) = &self.model {
+            if let Some((cur_sched, tid)) = controlled() {
+                if Arc::ptr_eq(sched, &cur_sched) {
+                    cur_sched.join_wait(tid, *child);
+                }
+            }
+        }
+        self.inner.join()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.inner.is_finished()
+    }
+}
+
+/// Spawn a thread that participates in the current controlled execution
+/// (if any); outside an execution this is a plain `std::thread::spawn`.
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match spawn_named("mc-worker", f) {
+        Ok(h) => h,
+        Err(e) => panic!("model-check spawn failed: {e}"),
+    }
+}
+
+/// [`spawn`] with a thread name (the `thread::Builder` path the worker
+/// pool uses).
+pub fn spawn_named<F, T>(name: &str, f: F) -> std::io::Result<JoinHandle<T>>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let builder = std::thread::Builder::new().name(name.to_string());
+    match controlled() {
+        None => {
+            let inner = builder.spawn(f)?;
+            Ok(JoinHandle { inner, model: None })
+        }
+        Some((sched, _parent)) => {
+            let child = sched.register_child();
+            let sched_t = Arc::clone(&sched);
+            let inner = builder.spawn(move || {
+                CURRENT.with(|c| {
+                    *c.borrow_mut() = Some((Arc::clone(&sched_t), child));
+                });
+                sched_t.wait_granted(child);
+                let r = catch_unwind(AssertUnwindSafe(f));
+                if let Err(payload) = &r {
+                    sched_t.fail(format!(
+                        "thread {child} panicked: {}",
+                        panic_message(payload)
+                    ));
+                }
+                sched_t.finish(child);
+                CURRENT.with(|c| c.borrow_mut().take());
+                match r {
+                    Ok(v) => v,
+                    Err(payload) => resume_unwind(payload),
+                }
+            })?;
+            Ok(JoinHandle { inner, model: Some((sched, child)) })
+        }
+    }
+}
+
+/// Scheduler-aware yield: a choice point in controlled mode, a plain
+/// `std::thread::yield_now` otherwise.
+pub fn yield_now() {
+    match controlled() {
+        Some((sched, tid)) => sched.yield_point(tid),
+        None => std::thread::yield_now(),
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Explorer
+// ---------------------------------------------------------------------------
+
+/// Exploration options. `Default` gives 1 024 schedules, DFS-first, seed
+/// `0xADA97`, step budget [`DEFAULT_MAX_STEPS`].
+#[derive(Clone, Debug)]
+pub struct Opts {
+    /// Total schedule budget (DFS + random combined).
+    pub schedules: usize,
+    /// Try bounded-exhaustive DFS before seeded-random search.
+    pub exhaustive: bool,
+    /// Base seed for the random phase (schedule `i` uses `seed + i`).
+    pub seed: u64,
+    /// Yield-point budget per execution; exceeding it truncates.
+    pub max_steps: u64,
+    /// Iteration cap in degraded stress mode (no controlled scheduler).
+    pub stress_iters: usize,
+    /// Run exactly this schedule instead of exploring.
+    pub replay: Option<Schedule>,
+    /// Force controlled mode even without the `modelcheck` feature. Only
+    /// valid for bodies whose *every* shared access goes through the shim
+    /// types explicitly (the scheduler self-tests).
+    pub force_controlled: bool,
+}
+
+impl Default for Opts {
+    fn default() -> Opts {
+        Opts {
+            schedules: 1024,
+            exhaustive: true,
+            seed: 0xADA97,
+            max_steps: DEFAULT_MAX_STEPS,
+            stress_iters: 200,
+            replay: None,
+            force_controlled: false,
+        }
+    }
+}
+
+impl Opts {
+    /// Replay one schedule from its failure token.
+    pub fn replay(tok: &str) -> Opts {
+        Opts {
+            replay: Schedule::parse(tok),
+            ..Opts::default()
+        }
+    }
+}
+
+/// What an exploration did. Failures do not appear here: the explorer
+/// panics on the first one, with the replay token in the message.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Executions actually run.
+    pub explored: usize,
+    /// Executions cut short by the step budget.
+    pub truncated: usize,
+    /// DFS proved the space exhausted within the budget.
+    pub exhausted: bool,
+    /// Ran under the controlled scheduler (vs stress mode).
+    pub controlled: bool,
+}
+
+struct ExecOutcome {
+    trace: Vec<(u32, u32)>,
+    truncated: bool,
+    failure: Option<String>,
+}
+
+/// Run `body` once under `schedule`, fully controlled.
+fn run_one(schedule: Schedule, max_steps: u64, body: &(dyn Fn() + Sync)) -> ExecOutcome {
+    let sched = Arc::new(Sched::new(schedule, max_steps));
+    CURRENT.with(|c| {
+        *c.borrow_mut() = Some((Arc::clone(&sched), 0));
+    });
+    let r = catch_unwind(AssertUnwindSafe(body));
+    if let Err(payload) = &r {
+        sched.fail(format!("body panicked: {}", panic_message(payload)));
+    }
+    // drain: children the body leaked keep scheduling until done; a child
+    // parked forever is a deadlock and fails the schedule
+    loop {
+        let mut core = sched.lock_core();
+        core.states[0] = TState::Finished;
+        core.granted[0] = false;
+        let others_done = core
+            .states
+            .iter()
+            .enumerate()
+            .all(|(t, s)| t == 0 || *s == TState::Finished);
+        if others_done || core.abort {
+            break;
+        }
+        core.grant_next();
+        let done = core.abort
+            || core
+                .states
+                .iter()
+                .enumerate()
+                .all(|(t, s)| t == 0 || *s == TState::Finished);
+        drop(core);
+        sched.cv.notify_all();
+        if done {
+            break;
+        }
+        // children are running; wait for the state to move
+        std::thread::yield_now();
+    }
+    // release anything still parked so OS threads can exit
+    {
+        let mut core = sched.lock_core();
+        core.abort = true;
+        drop(core);
+        sched.cv.notify_all();
+    }
+    CURRENT.with(|c| c.borrow_mut().take());
+    let core = sched.lock_core();
+    ExecOutcome {
+        trace: core.trace.clone(),
+        truncated: core.truncated,
+        failure: core.failure.clone(),
+    }
+}
+
+/// Next DFS path after a run whose trace was `trace`: deepest choice with
+/// an untried sibling, bumped; `None` when the tree is exhausted.
+fn next_path(trace: &[(u32, u32)]) -> Option<Vec<u32>> {
+    for i in (0..trace.len()).rev() {
+        let (chosen, n) = trace[i];
+        if chosen + 1 < n {
+            let mut p: Vec<u32> = trace[..i].iter().map(|&(c, _)| c).collect();
+            p.push(chosen + 1);
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Explore interleavings of `body` and panic (with a replay token) on the
+/// first failing schedule. See the module docs for the exploration
+/// strategy; returns what was covered.
+pub fn explore(opts: Opts, body: impl Fn() + Sync) -> Report {
+    let controlled_mode =
+        opts.force_controlled || cfg!(feature = "modelcheck");
+    // env replay wins over everything (the printed reproduction recipe)
+    let replay = std::env::var("ADAPTERBERT_MC_REPLAY")
+        .ok()
+        .and_then(|s| Schedule::parse(&s))
+        .or_else(|| opts.replay.clone());
+
+    if !controlled_mode {
+        let iters = opts.schedules.min(opts.stress_iters).max(1);
+        for _ in 0..iters {
+            body();
+        }
+        return Report {
+            explored: iters,
+            truncated: 0,
+            exhausted: false,
+            controlled: false,
+        };
+    }
+
+    if let Some(schedule) = replay {
+        let out = run_one(schedule.clone(), opts.max_steps, &body);
+        if let Some(msg) = out.failure {
+            panic!(
+                "model check failed (replay {}): {msg}",
+                schedule.token()
+            );
+        }
+        return Report {
+            explored: 1,
+            truncated: if out.truncated { 1 } else { 0 },
+            exhausted: false,
+            controlled: true,
+        };
+    }
+
+    let mut explored = 0usize;
+    let mut truncated = 0usize;
+    let mut exhausted = false;
+
+    if opts.exhaustive {
+        let mut path: Vec<u32> = Vec::new();
+        loop {
+            if explored >= opts.schedules {
+                break;
+            }
+            let schedule = Schedule::Path(path.clone());
+            let out = run_one(schedule.clone(), opts.max_steps, &body);
+            explored += 1;
+            if out.truncated {
+                truncated += 1;
+            }
+            if let Some(msg) = out.failure {
+                panic!(
+                    "model check failed under schedule {tok}: {msg}\n\
+                     replay with ADAPTERBERT_MC_REPLAY={tok}",
+                    tok = schedule.token()
+                );
+            }
+            match next_path(&out.trace) {
+                Some(p) => path = p,
+                None => {
+                    exhausted = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    if !exhausted {
+        while explored < opts.schedules {
+            let seed = opts.seed.wrapping_add(explored as u64);
+            let schedule = Schedule::Random(seed);
+            let out = run_one(schedule.clone(), opts.max_steps, &body);
+            explored += 1;
+            if out.truncated {
+                truncated += 1;
+            }
+            if let Some(msg) = out.failure {
+                panic!(
+                    "model check failed under schedule {tok}: {msg}\n\
+                     replay with ADAPTERBERT_MC_REPLAY={tok}",
+                    tok = schedule.token()
+                );
+            }
+        }
+    }
+
+    Report {
+        explored,
+        truncated,
+        exhausted,
+        controlled: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_tokens_round_trip() {
+        for s in [
+            Schedule::Random(0xdeadbeef),
+            Schedule::Path(vec![]),
+            Schedule::Path(vec![0, 2, 1, 0]),
+        ] {
+            assert_eq!(Schedule::parse(&s.token()), Some(s));
+        }
+        assert_eq!(Schedule::parse("garbage"), None);
+        assert_eq!(Schedule::parse("path:1.x"), None);
+    }
+
+    #[test]
+    fn next_path_walks_the_tree() {
+        // trace: two binary choice points, both took 0
+        assert_eq!(next_path(&[(0, 2), (0, 2)]), Some(vec![0, 1]));
+        assert_eq!(next_path(&[(0, 2), (1, 2)]), Some(vec![1]));
+        assert_eq!(next_path(&[(1, 2), (1, 2)]), None);
+        assert_eq!(next_path(&[]), None);
+    }
+
+    #[test]
+    fn controlled_execution_runs_spawned_threads_to_completion() {
+        let report = explore(
+            Opts {
+                schedules: 16,
+                force_controlled: true,
+                ..Opts::default()
+            },
+            || {
+                let h = spawn(|| 21usize * 2);
+                let v = match h.join() {
+                    Ok(v) => v,
+                    Err(_) => panic!("child failed"),
+                };
+                assert_eq!(v, 42);
+            },
+        );
+        assert!(report.controlled);
+        assert!(report.explored >= 1);
+    }
+}

@@ -1,0 +1,537 @@
+//! Sync facade: the one import path for synchronization primitives in
+//! modules that opt into model checking.
+//!
+//! In a normal build every name here is a literal re-export of the
+//! `std::sync` type — zero wrappers, zero overhead, identical codegen.
+//! With `--features modelcheck` the same names resolve to the [`shim`]
+//! types below, which route every operation through the cooperative
+//! scheduler in [`crate::check::sched`] so the model-check suites can
+//! enumerate interleavings and replay failures.
+//!
+//! The shim module itself is compiled unconditionally (only the `pub
+//! use` lines are cfg-gated) so a plain `cargo build` type-checks both
+//! halves of the facade.
+//!
+//! Usage in a ported module:
+//!
+//! ```ignore
+//! use crate::check::sync::{Mutex, Condvar};
+//! use crate::check::sync::atomic::{AtomicU64, Ordering};
+//! ```
+
+#[cfg(not(feature = "modelcheck"))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+#[cfg(feature = "modelcheck")]
+pub use shim::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+// Never modeled: Arc is immutable-after-construction bookkeeping and
+// OnceLock init races are not the invariants under test here.
+pub use std::sync::{Arc, LockResult, OnceLock, PoisonError};
+
+/// Atomics facade. `Ordering` is always the std enum; the types swap.
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    #[cfg(not(feature = "modelcheck"))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+
+    #[cfg(feature = "modelcheck")]
+    pub use super::shim::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+}
+
+/// Scheduler-aware yield: a schedule choice point inside a controlled
+/// execution, `std::thread::yield_now` otherwise (the only cost in a
+/// normal build is one thread-local read).
+pub fn yield_now() {
+    crate::check::sched::yield_now();
+}
+
+/// Model-checkable stand-ins for the `std::sync` types. Each wraps the
+/// real std primitive and, when the current thread belongs to a live
+/// controlled execution, performs the *model* operation first (acquire /
+/// park / choice point) before touching the std object — which is then
+/// uncontended by construction. Threads outside an execution, or inside
+/// one that has aborted, fall straight through to std, so mixed and
+/// post-failure states stay memory-safe.
+pub mod shim {
+    use crate::check::sched::{self, Sched, Tid};
+    use std::sync::Arc;
+
+    fn addr<T: ?Sized>(p: &T) -> usize {
+        p as *const T as *const u8 as usize
+    }
+
+    // -- Mutex --------------------------------------------------------
+
+    pub struct Mutex<T: ?Sized> {
+        raw: std::sync::Mutex<T>,
+    }
+
+    pub struct MutexGuard<'a, T: ?Sized> {
+        // `inner` is only None transiently inside Condvar::wait
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+        lock: &'a Mutex<T>,
+        model: Option<(Arc<Sched>, Tid)>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Mutex<T> {
+            Mutex { raw: std::sync::Mutex::new(t) }
+        }
+
+        pub fn into_inner(self) -> std::sync::LockResult<T> {
+            self.raw.into_inner()
+        }
+    }
+
+    impl<T: ?Sized> Mutex<T> {
+        fn id(&self) -> usize {
+            addr(&self.raw)
+        }
+
+        pub fn lock(&self) -> std::sync::LockResult<MutexGuard<'_, T>> {
+            let model = match sched::controlled() {
+                Some((s, tid)) if s.acquire(tid, self.id()) => Some((s, tid)),
+                _ => None,
+            };
+            match self.raw.lock() {
+                Ok(g) => Ok(MutexGuard { inner: Some(g), lock: self, model }),
+                Err(p) => {
+                    let g = p.into_inner();
+                    Err(std::sync::PoisonError::new(MutexGuard {
+                        inner: Some(g),
+                        lock: self,
+                        model,
+                    }))
+                }
+            }
+        }
+
+        pub fn get_mut(&mut self) -> std::sync::LockResult<&mut T> {
+            self.raw.get_mut()
+        }
+    }
+
+    impl<T: Default> Default for Mutex<T> {
+        fn default() -> Mutex<T> {
+            Mutex::new(T::default())
+        }
+    }
+
+    impl<T: ?Sized + std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            self.raw.fmt(f)
+        }
+    }
+
+    impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            match &self.inner {
+                Some(g) => g,
+                None => unreachable!("guard dereferenced during condvar handoff"),
+            }
+        }
+    }
+
+    impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            match &mut self.inner {
+                Some(g) => g,
+                None => unreachable!("guard dereferenced during condvar handoff"),
+            }
+        }
+    }
+
+    impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // free the real lock before the model lock so the next model
+            // winner finds the std mutex uncontended
+            self.inner.take();
+            if let Some((s, tid)) = self.model.take() {
+                s.release(tid, self.lock.id());
+            }
+        }
+    }
+
+    // -- Condvar ------------------------------------------------------
+
+    pub struct Condvar {
+        raw: std::sync::Condvar,
+    }
+
+    impl Default for Condvar {
+        fn default() -> Condvar {
+            Condvar::new()
+        }
+    }
+
+    impl Condvar {
+        pub const fn new() -> Condvar {
+            Condvar { raw: std::sync::Condvar::new() }
+        }
+
+        fn id(&self) -> usize {
+            addr(&self.raw)
+        }
+
+        pub fn wait<'a, T: ?Sized>(
+            &self,
+            mut guard: MutexGuard<'a, T>,
+        ) -> std::sync::LockResult<MutexGuard<'a, T>> {
+            match guard.model.take() {
+                Some((s, tid)) => {
+                    let lock = guard.lock;
+                    // release the std side, then park in the model; the
+                    // model re-acquires the lock before waking us
+                    guard.inner.take();
+                    drop(guard);
+                    let ok = s.cv_wait(tid, self.id(), lock.id());
+                    // on abort (`!ok`) the model lock is NOT held: behave
+                    // like a spurious wakeup in pass-through mode — every
+                    // call site loops on its condition
+                    let model = if ok { Some((s, tid)) } else { None };
+                    match lock.raw.lock() {
+                        Ok(g) => Ok(MutexGuard { inner: Some(g), lock, model }),
+                        Err(p) => Err(std::sync::PoisonError::new(MutexGuard {
+                            inner: Some(p.into_inner()),
+                            lock,
+                            model,
+                        })),
+                    }
+                }
+                None => {
+                    let lock = guard.lock;
+                    let inner = match guard.inner.take() {
+                        Some(g) => g,
+                        None => unreachable!("guard emptied outside condvar handoff"),
+                    };
+                    drop(guard);
+                    match self.raw.wait(inner) {
+                        Ok(g) => Ok(MutexGuard { inner: Some(g), lock, model: None }),
+                        Err(p) => Err(std::sync::PoisonError::new(MutexGuard {
+                            inner: Some(p.into_inner()),
+                            lock,
+                            model: None,
+                        })),
+                    }
+                }
+            }
+        }
+
+        pub fn notify_one(&self) {
+            if let Some((s, tid)) = sched::controlled() {
+                s.cv_notify(tid, self.id(), false);
+            }
+            // also wake any pass-through waiter (post-abort drain)
+            self.raw.notify_one();
+        }
+
+        pub fn notify_all(&self) {
+            if let Some((s, tid)) = sched::controlled() {
+                s.cv_notify(tid, self.id(), true);
+            }
+            self.raw.notify_all();
+        }
+    }
+
+    // -- RwLock -------------------------------------------------------
+
+    pub struct RwLock<T: ?Sized> {
+        raw: std::sync::RwLock<T>,
+    }
+
+    pub struct RwLockReadGuard<'a, T: ?Sized> {
+        inner: std::sync::RwLockReadGuard<'a, T>,
+        lock_id: usize,
+        model: Option<(Arc<Sched>, Tid)>,
+    }
+
+    pub struct RwLockWriteGuard<'a, T: ?Sized> {
+        inner: std::sync::RwLockWriteGuard<'a, T>,
+        lock_id: usize,
+        model: Option<(Arc<Sched>, Tid)>,
+    }
+
+    impl<T> RwLock<T> {
+        pub const fn new(t: T) -> RwLock<T> {
+            RwLock { raw: std::sync::RwLock::new(t) }
+        }
+    }
+
+    impl<T: ?Sized> RwLock<T> {
+        fn id(&self) -> usize {
+            addr(&self.raw)
+        }
+
+        pub fn read(&self) -> std::sync::LockResult<RwLockReadGuard<'_, T>> {
+            let model = match sched::controlled() {
+                Some((s, tid)) if s.acquire_shared(tid, self.id()) => Some((s, tid)),
+                _ => None,
+            };
+            let lock_id = self.id();
+            match self.raw.read() {
+                Ok(g) => Ok(RwLockReadGuard { inner: g, lock_id, model }),
+                Err(p) => Err(std::sync::PoisonError::new(RwLockReadGuard {
+                    inner: p.into_inner(),
+                    lock_id,
+                    model,
+                })),
+            }
+        }
+
+        pub fn write(&self) -> std::sync::LockResult<RwLockWriteGuard<'_, T>> {
+            let model = match sched::controlled() {
+                Some((s, tid)) if s.acquire(tid, self.id()) => Some((s, tid)),
+                _ => None,
+            };
+            let lock_id = self.id();
+            match self.raw.write() {
+                Ok(g) => Ok(RwLockWriteGuard { inner: g, lock_id, model }),
+                Err(p) => Err(std::sync::PoisonError::new(RwLockWriteGuard {
+                    inner: p.into_inner(),
+                    lock_id,
+                    model,
+                })),
+            }
+        }
+
+        pub fn get_mut(&mut self) -> std::sync::LockResult<&mut T> {
+            self.raw.get_mut()
+        }
+    }
+
+    impl<T: Default> Default for RwLock<T> {
+        fn default() -> RwLock<T> {
+            RwLock::new(T::default())
+        }
+    }
+
+    impl<T: ?Sized> std::ops::Deref for RwLockReadGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.inner
+        }
+    }
+
+    impl<T: ?Sized> Drop for RwLockReadGuard<'_, T> {
+        fn drop(&mut self) {
+            if let Some((s, tid)) = self.model.take() {
+                s.release_shared(tid, self.lock_id);
+            }
+        }
+    }
+
+    impl<T: ?Sized> std::ops::Deref for RwLockWriteGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.inner
+        }
+    }
+
+    impl<T: ?Sized> std::ops::DerefMut for RwLockWriteGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.inner
+        }
+    }
+
+    impl<T: ?Sized> Drop for RwLockWriteGuard<'_, T> {
+        fn drop(&mut self) {
+            if let Some((s, tid)) = self.model.take() {
+                s.release(tid, self.lock_id);
+            }
+        }
+    }
+
+    // -- Atomics ------------------------------------------------------
+    //
+    // Every operation is a yield point (choice of who runs next) and
+    // then the real std op, so values and orderings behave exactly as in
+    // production while the *interleaving* of operations is scheduled.
+
+    fn atomic_yield() {
+        if let Some((s, tid)) = sched::controlled() {
+            s.yield_point(tid);
+        }
+    }
+
+    macro_rules! shim_atomic {
+        ($name:ident, $std:ty, $val:ty) => {
+            pub struct $name {
+                raw: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $val) -> $name {
+                    $name { raw: <$std>::new(v) }
+                }
+
+                pub fn load(&self, order: std::sync::atomic::Ordering) -> $val {
+                    atomic_yield();
+                    self.raw.load(order)
+                }
+
+                pub fn store(&self, v: $val, order: std::sync::atomic::Ordering) {
+                    atomic_yield();
+                    self.raw.store(v, order)
+                }
+
+                pub fn swap(&self, v: $val, order: std::sync::atomic::Ordering) -> $val {
+                    atomic_yield();
+                    self.raw.swap(v, order)
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    current: $val,
+                    new: $val,
+                    success: std::sync::atomic::Ordering,
+                    failure: std::sync::atomic::Ordering,
+                ) -> Result<$val, $val> {
+                    atomic_yield();
+                    self.raw.compare_exchange(current, new, success, failure)
+                }
+            }
+
+            impl Default for $name {
+                fn default() -> $name {
+                    $name::new(Default::default())
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    self.raw.fmt(f)
+                }
+            }
+        };
+    }
+
+    macro_rules! shim_atomic_arith {
+        ($name:ident, $val:ty) => {
+            impl $name {
+                pub fn fetch_add(&self, v: $val, order: std::sync::atomic::Ordering) -> $val {
+                    atomic_yield();
+                    self.raw.fetch_add(v, order)
+                }
+
+                pub fn fetch_sub(&self, v: $val, order: std::sync::atomic::Ordering) -> $val {
+                    atomic_yield();
+                    self.raw.fetch_sub(v, order)
+                }
+            }
+        };
+    }
+
+    shim_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+    shim_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+    shim_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    shim_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    shim_atomic_arith!(AtomicU32, u32);
+    shim_atomic_arith!(AtomicU64, u64);
+    shim_atomic_arith!(AtomicUsize, usize);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::shim;
+    use crate::check::sched::{explore, spawn, Opts};
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    #[test]
+    fn shim_mutex_passthrough_outside_execution() {
+        let m = shim::Mutex::new(5i32);
+        {
+            let mut g = match m.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            *g += 1;
+        }
+        let g = match m.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        assert_eq!(*g, 6);
+    }
+
+    #[test]
+    fn shim_atomics_passthrough_outside_execution() {
+        let a = shim::AtomicU64::new(1);
+        a.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(a.swap(9, Ordering::SeqCst), 3);
+        assert_eq!(a.load(Ordering::Acquire), 9);
+        let b = shim::AtomicBool::default();
+        assert!(!b.swap(true, Ordering::AcqRel));
+    }
+
+    #[test]
+    fn controlled_mutex_counter_is_race_free() {
+        // mutex-protected increments must always total N; this exercises
+        // model acquire/release under many interleavings
+        explore(
+            Opts { schedules: 64, force_controlled: true, ..Opts::default() },
+            || {
+                let m = Arc::new(shim::Mutex::new(0u32));
+                let hs: Vec<_> = (0..3)
+                    .map(|_| {
+                        let m = Arc::clone(&m);
+                        spawn(move || {
+                            let mut g = match m.lock() {
+                                Ok(g) => g,
+                                Err(p) => p.into_inner(),
+                            };
+                            *g += 1;
+                        })
+                    })
+                    .collect();
+                for h in hs {
+                    let _ = h.join();
+                }
+                let g = match m.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                assert_eq!(*g, 3);
+            },
+        );
+    }
+
+    #[test]
+    fn controlled_condvar_handoff_completes() {
+        // one producer flips a flag under the gate pattern used by
+        // PagedCache: waiter loops on the condition, producer notifies
+        explore(
+            Opts { schedules: 128, force_controlled: true, ..Opts::default() },
+            || {
+                let gate = Arc::new((shim::Mutex::new(false), shim::Condvar::new()));
+                let g2 = Arc::clone(&gate);
+                let waiter = spawn(move || {
+                    let (m, cv) = &*g2;
+                    let mut done = match m.lock() {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    while !*done {
+                        done = match cv.wait(done) {
+                            Ok(g) => g,
+                            Err(p) => p.into_inner(),
+                        };
+                    }
+                });
+                {
+                    let (m, cv) = &*gate;
+                    let mut done = match m.lock() {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    *done = true;
+                    cv.notify_all();
+                }
+                let _ = waiter.join();
+            },
+        );
+    }
+}

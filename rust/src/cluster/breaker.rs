@@ -19,9 +19,10 @@
 //!                    trial fails ── back to Open (fresh cooldown)
 //! ```
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+use crate::check::sync::atomic::{AtomicU64, Ordering};
+use crate::check::sync::Mutex;
 
 /// Breaker tuning.
 #[derive(Debug, Clone)]
@@ -78,11 +79,13 @@ impl Breaker {
                     *c = CircuitState::HalfOpen;
                     true
                 } else {
+                    // relaxed: monotonic metrics counter
                     self.fast_fails.fetch_add(1, Ordering::Relaxed);
                     false
                 }
             }
             CircuitState::HalfOpen => {
+                // relaxed: monotonic metrics counter
                 self.fast_fails.fetch_add(1, Ordering::Relaxed);
                 false
             }
@@ -103,6 +106,8 @@ impl Breaker {
                 let fails = fails + 1;
                 if fails >= self.policy.open_after {
                     *c = CircuitState::Open { since: Instant::now() };
+                    // relaxed: monotonic metrics counter; the state
+                    // transition itself is ordered by the circuit mutex
                     self.trips.fetch_add(1, Ordering::Relaxed);
                 } else {
                     *c = CircuitState::Closed { fails };
@@ -111,6 +116,7 @@ impl Breaker {
             // the half-open trial failed: back to a fresh cooldown
             CircuitState::HalfOpen => {
                 *c = CircuitState::Open { since: Instant::now() };
+                // relaxed: monotonic metrics counter
                 self.trips.fetch_add(1, Ordering::Relaxed);
             }
             CircuitState::Open { .. } => {}
@@ -127,11 +133,13 @@ impl Breaker {
 
     /// Forwards skipped on an open circuit since start.
     pub fn fast_fails(&self) -> u64 {
+        // relaxed: metrics read
         self.fast_fails.load(Ordering::Relaxed)
     }
 
     /// Closed/half-open → Open transitions since start.
     pub fn trips(&self) -> u64 {
+        // relaxed: metrics read
         self.trips.load(Ordering::Relaxed)
     }
 }

@@ -10,12 +10,13 @@
 //! forward that dies on the wire counts as a failed probe, so a crash
 //! is detected at traffic speed, not probe-interval speed.
 
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
+
+use crate::check::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use crate::check::sync::Arc;
 
 use crate::serve::{Client, ClientConfig};
 
@@ -79,31 +80,46 @@ impl ClusterView {
     }
 
     pub fn is_alive(&self, i: usize) -> bool {
-        self.alive[i].load(Ordering::Relaxed)
+        // Acquire: pairs with the AcqRel transition swaps so a router
+        // that observes a flip also observes the streak resets and
+        // transition counts that preceded it
+        self.alive[i].load(Ordering::Acquire)
     }
 
     pub fn alive_mask(&self) -> Vec<bool> {
-        self.alive.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+        // Acquire: see is_alive
+        self.alive.iter().map(|a| a.load(Ordering::Acquire)).collect()
     }
 
     pub fn healthy_count(&self) -> usize {
         self.alive
             .iter()
-            .filter(|a| a.load(Ordering::Relaxed))
+            // Acquire: see is_alive
+            .filter(|a| a.load(Ordering::Acquire))
             .count()
     }
 
     /// A good probe: reset the fail streak; if ejected, advance toward
     /// readmission.
     pub fn record_pass(&self, i: usize) {
+        // relaxed: streak counters are only read back by this same
+        // signal path (monitor thread + forward-error reporters); the
+        // alive flip below is the publication point
         self.consec_fail[i].store(0, Ordering::Relaxed);
-        if self.alive[i].load(Ordering::Relaxed) {
+        if self.alive[i].load(Ordering::Acquire) {
             return;
         }
+        // relaxed: see above — streak bookkeeping, not publication
         let passes = self.consec_pass[i].fetch_add(1, Ordering::Relaxed) + 1;
         if passes >= self.pass_after {
+            // relaxed: reset before the AcqRel swap publishes it
             self.consec_pass[i].store(0, Ordering::Relaxed);
-            if !self.alive[i].swap(true, Ordering::Relaxed) {
+            // AcqRel: the transition point — Release publishes the streak
+            // resets above to Acquire readers of `alive`, and the swap's
+            // old value makes each flip count exactly once under racing
+            // reporters
+            if !self.alive[i].swap(true, Ordering::AcqRel) {
+                // relaxed: monotonic metrics counter
                 self.readmissions.fetch_add(1, Ordering::Relaxed);
                 crate::log_info!(
                     "cluster",
@@ -118,14 +134,19 @@ impl ClusterView {
     /// A bad signal (failed probe, not-ready health, or forward error):
     /// reset the pass streak; if healthy, advance toward ejection.
     pub fn record_fail(&self, i: usize) {
+        // relaxed: streak bookkeeping, see record_pass
         self.consec_pass[i].store(0, Ordering::Relaxed);
-        if !self.alive[i].load(Ordering::Relaxed) {
+        if !self.alive[i].load(Ordering::Acquire) {
             return;
         }
+        // relaxed: streak bookkeeping, see record_pass
         let fails = self.consec_fail[i].fetch_add(1, Ordering::Relaxed) + 1;
         if fails >= self.fail_after {
+            // relaxed: reset before the AcqRel swap publishes it
             self.consec_fail[i].store(0, Ordering::Relaxed);
-            if self.alive[i].swap(false, Ordering::Relaxed) {
+            // AcqRel: transition point, counted once; see record_pass
+            if self.alive[i].swap(false, Ordering::AcqRel) {
+                // relaxed: monotonic metrics counter
                 self.ejections.fetch_add(1, Ordering::Relaxed);
                 crate::log_info!(
                     "cluster",
@@ -173,8 +194,11 @@ impl HealthMonitor {
         let handle = std::thread::Builder::new()
             .name("cluster-health".to_string())
             .spawn(move || {
+                // relaxed: stop flag carries no data; the join in stop()
+                // is the synchronization point
                 while !stop_t.load(Ordering::Relaxed) {
                     for i in 0..view.nodes().len() {
+                        // relaxed: see loop condition
                         if stop_t.load(Ordering::Relaxed) {
                             return;
                         }
@@ -187,6 +211,7 @@ impl HealthMonitor {
                     // sleep in short slices so stop() doesn't wait out a
                     // long interval
                     let t0 = Instant::now();
+                    // relaxed: see loop condition
                     while t0.elapsed() < policy.interval
                         && !stop_t.load(Ordering::Relaxed)
                     {
@@ -199,6 +224,7 @@ impl HealthMonitor {
     }
 
     pub fn stop(mut self) {
+        // relaxed: flag only; the join below synchronizes
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
             let _ = h.join();

@@ -25,11 +25,12 @@
 //! `Arc` pin the actual bytes until they finish.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::check::order;
+use crate::check::sync::{Arc, Condvar, Mutex};
 use crate::util::timer::Samples;
 
 /// Cold-load latency keeps a bounded reservoir (slot replacement like the
@@ -153,6 +154,7 @@ impl<V: Clone> PagedCache<V> {
             }
             // miss: join an in-flight load or become the loader
             let gate = {
+                let _ord = order::Held::enter(order::CACHE_LOADING);
                 let mut loading = self.loading.lock().unwrap();
                 match loading.get(key) {
                     Some(g) => Some(g.clone()),
@@ -166,7 +168,10 @@ impl<V: Clone> PagedCache<V> {
                 gate.wait();
                 continue; // re-check: hit on success, retry load on failure
             }
-            self.inner.lock().unwrap().misses += 1;
+            {
+                let _ord = order::Held::enter(order::BANK_CACHE);
+                self.inner.lock().unwrap().misses += 1;
+            }
             let t0 = Instant::now();
             let outcome = load();
             let result = match outcome {
@@ -175,8 +180,11 @@ impl<V: Clone> PagedCache<V> {
                     let dur = t0.elapsed();
                     // lock order matches snapshot(): inner is released
                     // before the reservoir lock is taken
-                    let miss_no =
-                        self.inner.lock().unwrap().misses as usize;
+                    let miss_no = {
+                        let _ord = order::Held::enter(order::BANK_CACHE);
+                        self.inner.lock().unwrap().misses as usize
+                    };
+                    let _ord = order::Held::enter(order::CACHE_SAMPLES);
                     let mut s = self.cold_loads.lock().unwrap();
                     if s.durs.len() >= COLD_LOAD_SAMPLE_CAP {
                         s.durs[miss_no % COLD_LOAD_SAMPLE_CAP] = dur;
@@ -186,11 +194,15 @@ impl<V: Clone> PagedCache<V> {
                     Ok(value)
                 }
                 Err(e) => {
+                    let _ord = order::Held::enter(order::BANK_CACHE);
                     self.inner.lock().unwrap().load_errors += 1;
                     Err(e)
                 }
             };
-            let gate = self.loading.lock().unwrap().remove(key);
+            let gate = {
+                let _ord = order::Held::enter(order::CACHE_LOADING);
+                self.loading.lock().unwrap().remove(key)
+            };
             if let Some(gate) = gate {
                 gate.open();
             }
@@ -200,6 +212,7 @@ impl<V: Clone> PagedCache<V> {
 
     /// Hit path: clone the value and refresh recency.
     fn touch(&self, key: &str) -> Option<V> {
+        let _ord = order::Held::enter(order::BANK_CACHE);
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
@@ -219,6 +232,7 @@ impl<V: Clone> PagedCache<V> {
     /// never evicted to make room for itself — a bank larger than the
     /// whole budget still serves, alone.
     pub fn insert(&self, key: &str, value: V, bytes: u64) {
+        let _ord = order::Held::enter(order::BANK_CACHE);
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
@@ -236,7 +250,7 @@ impl<V: Clone> PagedCache<V> {
                     .min_by_key(|(_, s)| s.last_used)
                     .map(|(k, _)| k.clone());
                 let Some(victim) = victim else { break };
-                let slot = inner.map.remove(&victim).unwrap();
+                let Some(slot) = inner.map.remove(&victim) else { break };
                 inner.bytes -= slot.bytes;
                 inner.evictions += 1;
                 crate::log_debug!(
@@ -251,11 +265,13 @@ impl<V: Clone> PagedCache<V> {
 
     /// Residency probe — does **not** refresh recency.
     pub fn contains(&self, key: &str) -> bool {
+        let _ord = order::Held::enter(order::BANK_CACHE);
         self.inner.lock().unwrap().map.contains_key(key)
     }
 
     /// Drop an entry (no eviction counter — this is an explicit removal).
     pub fn remove(&self, key: &str) {
+        let _ord = order::Held::enter(order::BANK_CACHE);
         let mut inner = self.inner.lock().unwrap();
         if let Some(slot) = inner.map.remove(key) {
             inner.bytes -= slot.bytes;
@@ -263,13 +279,16 @@ impl<V: Clone> PagedCache<V> {
     }
 
     pub fn resident_bytes(&self) -> u64 {
+        let _ord = order::Held::enter(order::BANK_CACHE);
         self.inner.lock().unwrap().bytes
     }
 
     pub fn snapshot(&self) -> CacheSnapshot {
         // fixed order: inner before the cold-load reservoir; no caller
         // holds either across this call
+        let _ord_inner = order::Held::enter(order::BANK_CACHE);
         let inner = self.inner.lock().unwrap();
+        let _ord_samples = order::Held::enter(order::CACHE_SAMPLES);
         let samples = self.cold_loads.lock().unwrap();
         // percentile of an empty set is NaN, which util::json cannot
         // render — report 0 until the first cold load

@@ -75,16 +75,18 @@ pub fn audit_against_manifest(man: &Manifest) -> Vec<(String, usize, usize)> {
         if exe.kind != "cls" {
             continue;
         }
-        let method = match exe.variant.as_str() {
-            "adapter" => Method::Adapter { m: exe.m.unwrap() },
-            "topk" => Method::TopK { k: exe.k.unwrap() },
-            "lnonly" => Method::LayerNormOnly,
+        let method = match (exe.variant.as_str(), exe.m, exe.k) {
+            ("adapter", Some(m), _) => Method::Adapter { m },
+            ("topk", _, Some(k)) => Method::TopK { k },
+            ("lnonly", _, _) => Method::LayerNormOnly,
             _ => continue,
         };
         let formula = trained_params_per_task(&man.dims, method);
         // actual trained group minus the head leaves
         let actual: usize = {
-            let r = exe.input_group_range("trained").unwrap();
+            let Some(r) = exe.input_group_range("trained") else {
+                continue;
+            };
             exe.inputs[r]
                 .iter()
                 .filter(|l| !l.name.starts_with("trained/head"))

@@ -175,7 +175,9 @@ impl<T> Router<T> {
             return None;
         }
         let n = q.len().min(self.policy.max_batch);
-        let oldest_wait = now.duration_since(q.front().unwrap().arrived);
+        let oldest_wait = q
+            .front()
+            .map_or(Duration::ZERO, |x| now.duration_since(x.arrived));
         let items: Vec<T> = q.drain(..n).map(|x| x.item).collect();
         self.pending -= items.len();
         Some(FlushedBatch { task: task.to_string(), items, oldest_wait })

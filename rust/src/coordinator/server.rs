@@ -734,11 +734,14 @@ impl Server {
     /// keep the bank `Arc` they resolved — no request is ever served from
     /// a half-swapped state.
     pub fn install_task(&self, task: &str, prepared: PreparedTask) {
-        self.provider
-            .directory
-            .write()
-            .unwrap()
-            .insert(task.to_string(), prepared.dir);
+        {
+            let _ord = crate::check::order::Held::enter(crate::check::order::DIRECTORY);
+            self.provider
+                .directory
+                .write()
+                .unwrap()
+                .insert(task.to_string(), prepared.dir);
+        }
         self.provider.cache.insert(task, prepared.banks, prepared.bytes);
     }
 
@@ -1011,8 +1014,10 @@ fn run_flush(
             first_err.get_or_insert(e);
         }
     }
-    if !fused_groups.is_empty() {
-        let engine = engine.expect("fused groups are only collected with an engine");
+    // groups are only collected when an engine is present (see the
+    // `engine.is_some()` guard above), so a None here is unreachable and
+    // the groups would simply be skipped
+    if let (false, Some(engine)) = (fused_groups.is_empty(), engine) {
         if let Err(e) = run_fused_groups(
             rt,
             engine,
@@ -1174,7 +1179,12 @@ fn run_fused_groups(
     let mut it = outs.into_iter();
     for (tb, reqs) in groups {
         for req in reqs {
-            let pred = match it.next().expect("row count checked above") {
+            // row count was ensured against `rows` right after the
+            // forward, so exhaustion here cannot happen
+            let Some(row) = it.next() else {
+                anyhow::bail!("fused forward produced fewer rows than requests");
+            };
+            let pred = match row {
                 RowOutput::Class(logits) => {
                     let n = tb.n_classes.min(logits.len()).max(1);
                     Prediction::Class(argmax(&logits[..n]))
@@ -1208,11 +1218,17 @@ fn run_fused_groups(
 }
 
 fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .unwrap()
-        .0
+    // manual scan: total order without NaN-comparison panics (a NaN
+    // logit loses every `>` test and can never become the winner)
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best
 }
 
 #[cfg(test)]

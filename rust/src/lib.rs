@@ -29,6 +29,7 @@
 
 pub mod baseline;
 pub mod bench;
+pub mod check;
 pub mod cluster;
 pub mod coordinator;
 pub mod data;

@@ -35,6 +35,7 @@
 //!                        BENCH_chaos.json, failing if its SLO gate does;
 //!                        none of the five is part of `all`)
 //! adapterbert trace-dump [--addr HOST:PORT | --in FILE] [--out trace.json]
+//! adapterbert lint      [--deny] [--json FILE] [--root DIR] [--allow FILE]
 //! adapterbert list-tasks
 //! ```
 //!
@@ -159,6 +160,7 @@ fn main() -> Result<()> {
         "baseline" => cmd_baseline(&args),
         "bench" => cmd_bench(&args),
         "trace-dump" => cmd_trace_dump(&args),
+        "lint" => cmd_lint(&args),
         "list-tasks" => cmd_list_tasks(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -214,6 +216,13 @@ fn print_help() {
          \x20 trace-dump convert recorded request spans (--addr HOST:PORT\n\
          \x20            for a live gateway's GET /trace, or --in FILE)\n\
          \x20            into Chrome trace-event JSON for Perfetto\n\
+         \x20 lint       repo-invariant static checks over rust/src\n\
+         \x20            (SAFETY comments on unsafe, no unwrap in request\n\
+         \x20            paths, no stray prints, no timing in kernels,\n\
+         \x20            justified relaxed orderings); --deny exits\n\
+         \x20            non-zero on findings, --json FILE writes the\n\
+         \x20            machine-readable report, --root DIR / --allow\n\
+         \x20            FILE override the scan root and waiver list\n\
          \x20 list-tasks show the synthetic task suites\n\
          \n\
          common flags: --preset default|test  --full (bench)\n\
@@ -1250,6 +1259,31 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
     }
     println!("\nall requested benches done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = args.get_or("root", "rust/src");
+    let allow = args.get_or("allow", "rust/lint-allow.txt");
+    let report =
+        adapterbert::check::lint::run(Path::new(&root), Path::new(&allow))?;
+    if let Some(out) = args.get("json") {
+        let doc = report.to_json(&root);
+        std::fs::write(out, format!("{doc}\n"))
+            .with_context(|| format!("writing {out:?}"))?;
+    }
+    for f in &report.findings {
+        println!("{}/{}:{}: [{}] {}", root, f.file, f.line, f.rule, f.snippet);
+    }
+    println!(
+        "lint: {} files scanned, {} finding(s), {} waived",
+        report.files_scanned,
+        report.findings.len(),
+        report.allowed
+    );
+    if args.get("deny").is_some() && !report.findings.is_empty() {
+        bail!("lint --deny: {} finding(s)", report.findings.len());
+    }
     Ok(())
 }
 

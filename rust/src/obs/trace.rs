@@ -43,8 +43,8 @@
 //! `ADAPTERBERT_TRACE_SPANS` (default 2048) and starts disabled; the
 //! serve CLI enables it with `--trace` / `ADAPTERBERT_TRACE=1`.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use crate::check::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::check::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::util::json::Json;
@@ -155,7 +155,11 @@ impl SpanCell {
             rid: self.rid.clone(),
             task: self.task.lock().unwrap().clone(),
             t,
+            // relaxed: independent scalars set once by the owning stage;
+            // ring publication (the slot mutex in Recorder::record)
+            // orders the final values before any snapshot sees the span
             status: self.status.load(Ordering::Relaxed) as u16,
+            // relaxed: same as status
             batch_rows: self.batch_rows.load(Ordering::Relaxed) as usize,
             meta: self.meta.lock().unwrap().clone(),
         }
@@ -199,12 +203,15 @@ impl TraceHandle {
 
     pub fn set_status(&self, status: u16) {
         if let Some(c) = &self.0 {
+            // relaxed: single-writer scalar; ordering vs. readers comes
+            // from the recorder slot mutex at publication
             c.status.store(status as u64, Ordering::Relaxed);
         }
     }
 
     pub fn set_batch_rows(&self, rows: usize) {
         if let Some(c) = &self.0 {
+            // relaxed: single-writer scalar, see set_status
             c.batch_rows.store(rows as u64, Ordering::Relaxed);
         }
     }
@@ -328,19 +335,25 @@ impl Recorder {
 
     /// Total spans ever recorded (≥ spans retained).
     pub fn recorded(&self) -> u64 {
+        // relaxed: monotonic counter read for display only
         self.recorded.load(Ordering::Relaxed)
     }
 
     pub fn set_enabled(&self, on: bool) {
+        // relaxed: independent on/off flag; a request observing a stale
+        // value merely traces (or skips) one span around the toggle
         self.enabled.store(on, Ordering::Relaxed);
     }
 
     pub fn enabled(&self) -> bool {
+        // relaxed: see set_enabled
         self.enabled.load(Ordering::Relaxed)
     }
 
     /// A process-unique request id: `req-<pid hex>-<seq hex>`.
     pub fn gen_rid(&self) -> String {
+        // relaxed: RMW uniqueness is guaranteed at any ordering; nothing
+        // is published through this counter
         let n = self.rid_seq.fetch_add(1, Ordering::Relaxed);
         format!("req-{:x}-{:x}", std::process::id(), n)
     }
@@ -358,8 +371,11 @@ impl Recorder {
     /// `fetch_add` and swaps the `Arc` in under that slot's lock only.
     pub fn record(&self, h: &TraceHandle) {
         let Some(cell) = &h.0 else { return };
+        // relaxed: the RMW claims a unique slot at any ordering; the Arc
+        // hand-off itself is ordered by the slot mutex below
         let i = self.cursor.fetch_add(1, Ordering::Relaxed) % self.slots.len();
         *self.slots[i].lock().unwrap() = Some(Arc::clone(cell));
+        // relaxed: monotonic counter, display only
         self.recorded.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -367,6 +383,8 @@ impl Recorder {
     /// sequence; exact order across concurrent writers is best-effort).
     pub fn snapshot(&self) -> Vec<Span> {
         let len = self.slots.len();
+        // relaxed: only picks the rotation start; every slot is then read
+        // under its own mutex, which orders the contents
         let cur = self.cursor.load(Ordering::Relaxed);
         let mut out = Vec::new();
         for k in 0..len {

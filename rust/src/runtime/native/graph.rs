@@ -800,6 +800,7 @@ fn encode_bwd(
                             for j in 0..dh {
                                 dqrow[j] += ds * krow[j];
                             }
+                            // SAFETY: disjoint per (bi, hi), as for dqrow.
                             let dkrow =
                                 unsafe { head_slice(dk_p, bi * s + ti, d, hi, dh) };
                             for j in 0..dh {

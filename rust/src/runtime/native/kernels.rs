@@ -653,6 +653,8 @@ pub fn attention_fwd(
         softmax_rows(probs, s);
         for si in 0..s {
             let prow = &probs[si * s..(si + 1) * s];
+            // SAFETY: each (bi, hi) task owns this dh-wide column slice
+            // of the context buffer; no other task touches it.
             let crow = unsafe {
                 std::slice::from_raw_parts_mut(
                     ctx_p.get().add((bi * s + si) * d + hi * dh),

@@ -17,9 +17,11 @@
 //! parallelism) and constructed lazily on first use.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::thread::{self, JoinHandle};
+use std::thread;
+
+use crate::check::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::check::sync::{self, Arc, Condvar, Mutex, OnceLock};
+use crate::check::thread::{spawn_named, JoinHandle};
 
 /// One `parallel_for` invocation: the erased closure plus its own claim /
 /// completion counters. Counters live *inside* the job so a worker that
@@ -46,6 +48,8 @@ impl Job {
     /// Claim and run indices until the range is drained.
     fn work(&self) {
         loop {
+            // relaxed: the RMW hands out each index exactly once at any
+            // ordering; the claim publishes nothing
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.tasks {
                 return;
@@ -53,6 +57,9 @@ impl Job {
             // SAFETY: claim succeeded, so the caller is still waiting.
             let f = unsafe { &*self.f };
             if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                // relaxed: sequenced before the Release `done` bump
+                // below, which the caller's Acquire `done` loop pairs
+                // with — the flag cannot be missed
                 self.panicked.store(true, Ordering::Relaxed);
             }
             self.done.fetch_add(1, Ordering::Release);
@@ -91,9 +98,7 @@ impl Pool {
         let workers = (1..threads)
             .map(|i| {
                 let shared = Arc::clone(&shared);
-                thread::Builder::new()
-                    .name(format!("kernel-worker-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                spawn_named(&format!("kernel-worker-{i}"), move || worker_loop(&shared))
                     .expect("spawn kernel worker")
             })
             .collect();
@@ -137,8 +142,10 @@ impl Pool {
         }
         job.work();
         while job.done.load(Ordering::Acquire) < tasks {
-            thread::yield_now();
+            sync::yield_now();
         }
+        // relaxed: the Acquire loop above synchronizes with each task's
+        // Release `done` bump, which the panicked store precedes
         if job.panicked.load(Ordering::Relaxed) {
             panic!("kernel pool: a parallel task panicked");
         }

@@ -34,6 +34,7 @@ struct SendSync<T>(T);
 // internally where required. The wrapped values are only used through
 // &self methods.
 unsafe impl<T> Send for SendSync<T> {}
+// SAFETY: same contract as Send above.
 unsafe impl<T> Sync for SendSync<T> {}
 
 /// The XLA/PJRT execution backend.

@@ -27,6 +27,7 @@ use anyhow::{bail, Context, Result};
 use super::protocol::{RegisterRequest, RegisterResponse, TrainJobRequest};
 use crate::coordinator::server::Server;
 use crate::data::tasks::{self, Metric, TaskKind, TaskSpec};
+use crate::check::order;
 use crate::eval::TaskModel;
 use crate::runtime::Manifest;
 use crate::store::{AdapterStore, BankMeta};
@@ -44,6 +45,7 @@ pub fn install_trained(
     val_score: f64,
     model: &TaskModel,
 ) -> Result<BankMeta> {
+    let _ord = order::Held::enter(order::REGISTRATION);
     let _serial = server.registration_lock();
     // validate + build first: a bad bank must not leave a store version
     // behind that can never serve

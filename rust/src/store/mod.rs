@@ -134,6 +134,7 @@ impl AdapterStore {
         val_score: f64,
     ) -> Result<BankMeta> {
         validate_task_name(task)?;
+        let _ord = crate::check::order::Held::enter(crate::check::order::STORE);
         let mut tasks = self.tasks.lock().unwrap();
         let versions = tasks.entry(task.to_string()).or_default();
         // after quarantine the survivors may be sparse — append past the

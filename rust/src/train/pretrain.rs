@@ -106,7 +106,10 @@ pub fn pretrain(
         }
         final_loss = loss;
         if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
-            println!("  pretrain step {step:5}  lr {lr:.2e}  mlm loss {loss:.4}");
+            crate::log_info!(
+                "pretrain",
+                "step {step:5}  lr {lr:.2e}  mlm loss {loss:.4}"
+            );
             curve.push((step, loss));
         } else if step % 10 == 0 {
             curve.push((step, loss));
@@ -148,14 +151,20 @@ pub fn load_or_pretrain(
 ) -> Result<NamedTensors> {
     if path.exists() {
         let base = load_base(path)?;
-        println!("loaded pre-trained base from {path:?} ({} tensors)", base.len());
+        crate::log_info!(
+            "pretrain",
+            "loaded pre-trained base from {path:?} ({} tensors)",
+            base.len()
+        );
         return Ok(base);
     }
-    println!("pre-training base ({} steps)…", cfg.steps);
+    crate::log_info!("pretrain", "pre-training base ({} steps)…", cfg.steps);
     let res = pretrain(rt, world, cfg)?;
-    println!(
+    crate::log_info!(
+        "pretrain",
         "pre-training done: mlm loss {:.3} → {:.3}",
-        res.initial_loss, res.final_loss
+        res.initial_loss,
+        res.final_loss
     );
     save_base(&res.base, path)?;
     Ok(res.base)
